@@ -1,0 +1,61 @@
+//! Estimator playground: sweep (r, c) on the toy problem and print the
+//! closed-form MSE surface next to Monte-Carlo measurements — a compact
+//! way to *see* Theorem 2, Remark 1 and the bias–variance trade-off.
+//!
+//! Run: `cargo run --release --example estimator_playground`
+
+use lowrank_sge::estimator::mse::{one_shot_mse, EstimatorSpec, MseCurveConfig};
+use lowrank_sge::estimator::theory;
+use lowrank_sge::estimator::toy::ToyProblem;
+use lowrank_sge::estimator::Family;
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::rng::Rng;
+
+fn main() {
+    let problem = ToyProblem::paper_default(3);
+    let w = problem.eval_point(4);
+    let mut rng = Rng::new(5);
+    let sxi = problem.sigma_xi_empirical(&w, &mut rng, 800, Family::Ipa, 1e-2);
+    let sth = problem.sigma_theta(&w);
+    let (txi, tth) = (sxi.trace(), sth.trace());
+    println!("tr Σ_ξ = {txi:.3e}, tr Σ_Θ = {tth:.3e}, full-rank MSE_F = tr Σ_ξ");
+
+    println!("\n-- Theorem 2 / Remark 1 surface (Stiefel law, closed form) --");
+    println!("{:<6} {:<6} {:>14} {:>14}", "r", "c", "MSE(closed)", "MSE(measured)");
+    for &r in &[2usize, 4, 8, 16] {
+        for &c in &[0.1, r as f64 / problem.n as f64, 0.5, 1.0] {
+            let closed = theory::mse_isotropic_exact(problem.n, r, c, txi, tth);
+            let cfg = MseCurveConfig {
+                family: Family::Ipa,
+                spec: EstimatorSpec::LowRank(ProjectorKind::Stiefel),
+                c,
+                r,
+                sample_sizes: vec![1],
+                reps: 1,
+                seed: 17,
+                zo_sigma: 1e-2,
+                warmup: 100,
+            };
+            let measured = one_shot_mse(&problem, &w, &cfg, 400);
+            println!("{:<6} {:<6.3} {:>14.4e} {:>14.4e}", r, c, closed, measured);
+        }
+    }
+
+    println!("\n-- the Gaussian penalty (Remark 1): MSE_G / MSE_Stiefel --");
+    for &r in &[2usize, 4, 8, 16] {
+        let g = theory::mse_gaussian_exact(problem.n, r, 1.0, txi, tth);
+        let s = theory::mse_isotropic_exact(problem.n, r, 1.0, txi, tth);
+        println!("r = {r:<3}: ratio {:.3} (→ 1 as r → n)", g / s);
+    }
+
+    println!("\n-- optimal c* minimizing the closed-form MSE --");
+    for &r in &[2usize, 4, 8, 16] {
+        let k0 = problem.n as f64 / r as f64;
+        let c_star = tth / (k0 * (txi + tth));
+        let at_cstar = theory::mse_isotropic_exact(problem.n, r, c_star, txi, tth);
+        let at_one = theory::mse_isotropic_exact(problem.n, r, 1.0, txi, tth);
+        println!(
+            "r = {r:<3}: c* = {c_star:.4}, MSE(c*) = {at_cstar:.4e} vs MSE(1) = {at_one:.4e}"
+        );
+    }
+}

@@ -1,0 +1,45 @@
+//! RSS regression probe for the PJRT execute path.
+//!
+//! The `xla` crate's literal-based `execute` leaks every input device
+//! buffer (its C wrapper `release()`s them and never frees — ~5 MB/step
+//! at our artifact sizes, which OOMs a long run). Our runtime therefore
+//! routes through `execute_b` with Rust-owned `PjRtBuffer`s; this probe
+//! executes an artifact 60 times and prints RSS so the flat profile can
+//! be re-verified after any runtime change (EXPERIMENTS.md §Perf).
+//!
+//! Run: `cargo run --release --example leak_probe`
+
+use lowrank_sge::runtime::Runtime;
+
+fn rss_mb() -> u64 {
+    std::fs::read_to_string("/proc/self/statm")
+        .ok()
+        .and_then(|s| s.split_whitespace().nth(1).map(|x| x.parse::<u64>().unwrap_or(0)))
+        .unwrap_or(0)
+        * 4096
+        / 1024
+        / 1024
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let mut rt = Runtime::new(dir)?;
+    let art = rt.load("clf_ipa_grad")?;
+    let inputs = rt.golden_inputs(&art).unwrap_or_default();
+    let start = rss_mb();
+    println!("start RSS {start} MB");
+    let mut last = start;
+    for i in 0..60 {
+        let _ = art.execute(&inputs)?;
+        if i % 10 == 9 {
+            last = rss_mb();
+            println!("iter {i}: RSS {last} MB");
+        }
+    }
+    let grown = last.saturating_sub(start);
+    println!(
+        "growth over 60 executes: {grown} MB — {}",
+        if grown < 60 { "OK (no per-step leak)" } else { "LEAK suspected" }
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! End-to-end pretraining driver — the repository's E2E validation run
+//! (recorded in EXPERIMENTS.md §E2E).
+//!
+//! Trains the LLaMA-proxy LM with Stiefel LowRank-IPA (Algorithm 1) on
+//! the synthetic Zipf–Markov corpus through the full three-layer stack
+//! (rust coordinator → PJRT → AOT-compiled JAX graph → Pallas-validated
+//! kernels), with 2 simulated DDP workers, and logs the loss curve.
+//!
+//! Run: `cargo run --release --example pretrain_llama -- [steps] [scale]`
+
+use lowrank_sge::coordinator::{PretrainConfig, PretrainTrainer};
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let scale = args.get(2).cloned().unwrap_or_else(|| "s".to_string());
+
+    let dir = std::path::Path::new("artifacts");
+    let mut rt = Runtime::new(dir)?;
+    let cfg = PretrainConfig {
+        scale: scale.clone(),
+        sampler: ProjectorKind::Stiefel,
+        c: 1.0,
+        k_interval: 25,
+        steps,
+        lr: 2e-3,
+        warmup: (steps / 20).max(2),
+        clip: 1.0,
+        weight_decay: 0.05,
+        seed: 2026,
+        workers: 2,
+        eval_every: (steps / 8).max(1),
+        eval_batches: 2,
+    };
+    println!(
+        "pretraining llama-{scale} for {steps} steps (Stiefel LowRank-IPA, K = {}, 2 DDP workers)",
+        cfg.k_interval
+    );
+    let mut trainer = PretrainTrainer::new(&mut rt, dir, cfg)?;
+    let res = trainer.run()?;
+
+    println!("\nstep   loss     lr        step-time");
+    for r in res.log.records.iter().step_by((steps as usize / 20).max(1)) {
+        println!("{:<6} {:<8.4} {:<9.2e} {:.3}s", r.step, r.loss, r.lr, r.step_time_s);
+    }
+    println!("\neval series (held-out loss):");
+    for (s, v) in &res.log.evals {
+        println!("  step {s:<6} eval loss {v:.4}");
+    }
+    println!(
+        "\nfinal: train {:.4} (tail {:.4}), eval {:?}, mean step {:.3}s",
+        res.log.final_train_loss().unwrap(),
+        res.log.tail_mean_loss(10).unwrap(),
+        res.final_eval_loss,
+        res.log.mean_step_time(3).unwrap()
+    );
+    println!(
+        "memory story: B subspace {} elements vs {} full parameters ({}×)",
+        res.b_elements,
+        res.params_elements,
+        res.params_elements / res.b_elements.max(1)
+    );
+
+    let out = std::path::Path::new("results/e2e_pretrain.csv");
+    res.log.write_csv(out)?;
+    res.log.write_eval_csv(std::path::Path::new("results/e2e_pretrain_eval.csv"))?;
+    println!("wrote {} (+ _eval)", out.display());
+    trainer.save_checkpoint(std::path::Path::new("results/e2e_checkpoint"))?;
+    println!("checkpoint saved to results/e2e_checkpoint/");
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Quickstart: the paper's estimator in six steps.
+//!
+//! 1. build the toy problem (19) with its closed-form gradient;
+//! 2. draw a Haar–Stiefel projector V (Algorithm 2);
+//! 3. form the LowRank-IPA estimate ĝ·VVᵀ and check weak unbiasedness;
+//! 4. compare the measured one-shot MSE of Gaussian vs Stiefel vs the
+//!    instance-dependent optimum (Theorems 2–3 live);
+//! 5. print the closed-form predictions next to the measurements;
+//! 6. (if `make artifacts` has run) execute one real PJRT train step.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use lowrank_sge::estimator::mse::{one_shot_mse, EstimatorSpec, MseCurveConfig};
+use lowrank_sge::estimator::theory;
+use lowrank_sge::estimator::toy::{project_lift, ToyProblem};
+use lowrank_sge::estimator::Family;
+use lowrank_sge::linalg::Mat;
+use lowrank_sge::projection::{ProjectionSampler, ProjectorKind, StiefelSampler};
+use lowrank_sge::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+
+    // 1. the §6.1 toy problem at paper scale (m = n = 100, o = 30)
+    let problem = ToyProblem::paper_default(1);
+    let w = problem.eval_point(2);
+    let g = problem.true_gradient(&w);
+    println!("toy problem: ‖∇f(W)‖_F = {:.4}", g.fro_norm());
+
+    // 2. a Haar–Stiefel projector (Algorithm 2): VᵀV = (cn/r)·I exactly
+    let (r, c) = (4usize, 1.0);
+    let mut sampler = StiefelSampler::new(problem.n, r, c);
+    let v = sampler.sample(&mut rng);
+    println!("Stiefel V: {}×{}, α = √(cn/r) = {:.3}", v.rows, v.cols, sampler.alpha());
+
+    // 3. weak unbiasedness: average many projected IPA estimates → c·g
+    let mut mean = Mat::zeros(problem.m, problem.n);
+    let n_mc = 3000;
+    for _ in 0..n_mc {
+        let a = problem.sample_a(&mut rng);
+        let ghat = problem.ipa_estimate(&w, &a);
+        let v = sampler.sample(&mut rng);
+        mean.axpy_inplace(1.0 / n_mc as f64, &project_lift(&ghat, &v));
+    }
+    let rel = mean.sub(&g.scaled(c)).fro_norm() / g.fro_norm();
+    println!("E[ĝ·P] vs c·g: relative error {:.3} (Theorem 1)", rel);
+
+    // 4–5. one-shot MSE: measured vs closed form for each projector law
+    let mut rng2 = Rng::new(11);
+    let sxi = problem.sigma_xi_empirical(&w, &mut rng2, 1000, Family::Ipa, 1e-2);
+    let sth = problem.sigma_theta(&w);
+    println!("\n{:<12} {:>12} {:>12}", "projector", "measured", "closed-form");
+    let cases = [
+        (ProjectorKind::Gaussian, theory::mse_gaussian_exact(problem.n, r, c, sxi.trace(), sth.trace())),
+        (ProjectorKind::Stiefel, theory::mse_isotropic_exact(problem.n, r, c, sxi.trace(), sth.trace())),
+        (ProjectorKind::Coordinate, theory::mse_isotropic_exact(problem.n, r, c, sxi.trace(), sth.trace())),
+    ];
+    for (kind, predicted) in cases {
+        let cfg = MseCurveConfig {
+            family: Family::Ipa,
+            spec: EstimatorSpec::LowRank(kind),
+            c,
+            r,
+            sample_sizes: vec![1],
+            reps: 1,
+            seed: 99,
+            zo_sigma: 1e-2,
+            warmup: 200,
+        };
+        let measured = one_shot_mse(&problem, &w, &cfg, 600);
+        println!("{:<12} {:>12.4e} {:>12.4e}", kind.name(), measured, predicted);
+    }
+
+    // the instance-dependent optimum (Theorem 3)
+    let cfg = MseCurveConfig {
+        family: Family::Ipa,
+        spec: EstimatorSpec::LowRank(ProjectorKind::Dependent),
+        c,
+        r,
+        sample_sizes: vec![1],
+        reps: 1,
+        seed: 99,
+        zo_sigma: 1e-2,
+        warmup: 400,
+    };
+    let measured = one_shot_mse(&problem, &w, &cfg, 600);
+    let mut rng3 = Rng::new(13);
+    let sigma = problem.sigma_total(&w, &mut rng3, 1000, Family::Ipa, 1e-2);
+    let spec = lowrank_sge::linalg::sym_eig(&sigma).values;
+    let predicted = theory::mse_dependent_min(&spec, r, c, sth.trace());
+    println!("{:<12} {:>12.4e} {:>12.4e}   ← Theorem 3 optimum", "dependent", measured, predicted);
+
+    // 6. one real PJRT step, if the artifacts exist
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("INDEX.txt").exists() {
+        use lowrank_sge::coordinator::{PretrainConfig, PretrainTrainer};
+        use lowrank_sge::runtime::Runtime;
+        let mut rt = Runtime::new(dir)?;
+        let mut cfg = PretrainConfig::quick("s", ProjectorKind::Stiefel);
+        cfg.steps = 3;
+        cfg.k_interval = 3;
+        cfg.eval_every = 0;
+        let mut trainer = PretrainTrainer::new(&mut rt, dir, cfg)?;
+        let res = trainer.run()?;
+        println!(
+            "\nPJRT llama-s: 3 LowRank-IPA steps, loss {:.4} → {:.4}",
+            res.log.records[0].loss,
+            res.log.records[2].loss
+        );
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` to see the PJRT step)");
+    }
+    Ok(())
+}

@@ -1,0 +1,266 @@
+"""AOT pipeline: lower every L2 entry point to HLO text + manifest +
+golden vectors. Runs once at build time (`make artifacts`); the Rust
+runtime is self-contained afterwards.
+
+Interchange format is HLO **text** — jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which the image's xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+For every artifact we emit:
+  artifacts/<name>.hlo.txt       the computation
+  artifacts/<name>.manifest.txt  `key = value` lines: inputs/outputs in
+                                 exact parameter order (name dtype shape)
+  artifacts/golden/<name>/       raw little-endian binaries of one
+                                 example input/output set (small
+                                 artifacts only) for the Rust
+                                 integration test.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_entries(tree, prefix):
+    """Flatten a pytree into (name, leaf) pairs in jax's flatten order."""
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in leaves_with_path:
+        name = prefix + jax.tree_util.keystr(path)
+        out.append((name.replace("'", ""), leaf))
+    return out
+
+
+def _dtype_tag(x):
+    return {"float32": "f32", "int32": "i32"}[str(x.dtype)]
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.index = []
+        os.makedirs(out_dir, exist_ok=True)
+        os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    def emit(self, name, fn, example_args, arg_names, meta=None, golden=True):
+        """Lower fn(*example_args), write hlo + manifest (+ golden)."""
+        print(f"[aot] lowering {name} ...", flush=True)
+        jitted = jax.jit(fn)
+        lowered = jitted.lower(*example_args)
+        hlo = to_hlo_text(lowered)
+        with open(os.path.join(self.out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(hlo)
+
+        # manifest: inputs in flatten order
+        entries = []
+        for arg, aname in zip(example_args, arg_names):
+            entries.extend(_leaf_entries(arg, aname))
+        outputs = jitted(*example_args)
+        out_entries = _leaf_entries(outputs, "out")
+
+        lines = [f"artifact = {name}"]
+        for k, v in (meta or {}).items():
+            lines.append(f"{k} = {v}")
+        lines.append(f"num_inputs = {len(entries)}")
+        lines.append(f"num_outputs = {len(out_entries)}")
+        for i, (nm, leaf) in enumerate(entries):
+            shape = "x".join(str(d) for d in leaf.shape) or "scalar"
+            lines.append(f"input {i} {nm} {_dtype_tag(leaf)} {shape}")
+        for i, (nm, leaf) in enumerate(out_entries):
+            shape = "x".join(str(d) for d in np.asarray(leaf).shape) or "scalar"
+            lines.append(f"output {i} {nm} {_dtype_tag(np.asarray(leaf))} {shape}")
+        with open(os.path.join(self.out_dir, f"{name}.manifest.txt"), "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+        if golden:
+            gdir = os.path.join(self.out_dir, "golden", name)
+            os.makedirs(gdir, exist_ok=True)
+            for i, (_, leaf) in enumerate(entries):
+                np.asarray(leaf).astype(np.asarray(leaf).dtype).tofile(
+                    os.path.join(gdir, f"in_{i:03d}.bin"))
+            for i, (_, leaf) in enumerate(out_entries):
+                np.asarray(leaf).tofile(os.path.join(gdir, f"out_{i:03d}.bin"))
+        self.index.append(name)
+        print(f"[aot]   {name}: {len(entries)} inputs, {len(out_entries)} outputs,"
+              f" {len(hlo)//1024} KiB hlo", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# example-input builders (deterministic seeds so goldens are reproducible)
+# ---------------------------------------------------------------------------
+
+
+def lm_example(cfg, batch):
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    bs = M.zero_bs(cfg)
+    vs = M.identity_vs(cfg, jax.random.PRNGKey(1))
+    tokens = (jnp.arange(batch * (cfg.seq_len + 1), dtype=jnp.int32)
+              .reshape(batch, cfg.seq_len + 1) * 40499 % cfg.vocab)
+    return params, bs, vs, tokens
+
+
+def clf_example(cfg, batch):
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(cfg, key)
+    bs = M.zero_bs(cfg)
+    vs = M.identity_vs(cfg, jax.random.PRNGKey(3))
+    tokens = (jnp.arange(batch * cfg.seq_len, dtype=jnp.int32)
+              .reshape(batch, cfg.seq_len) * 40503 % cfg.vocab)
+    labels = (jnp.arange(batch, dtype=jnp.int32) * 7) % cfg.num_classes
+    return params, bs, vs, tokens, labels
+
+
+def zo_zs(cfg, key):
+    zs = {}
+    for i, (name, (m, n)) in enumerate(cfg.matrix_shapes()):
+        zs[name] = jax.random.normal(jax.random.fold_in(key, i), (m, cfg.rank),
+                                     jnp.float32)
+    return zs
+
+
+def zo_zs_full(cfg, key):
+    zs = {}
+    for i, (name, (m, n)) in enumerate(cfg.matrix_shapes()):
+        zs[name] = jax.random.normal(jax.random.fold_in(key, i), (m, n),
+                                     jnp.float32)
+    return zs
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+LM_TRAIN_BATCH = 8
+LM_EVAL_BATCH = 8
+CLF_TRAIN_BATCH = 16
+CLF_EVAL_BATCH = 64
+
+
+def dump_init(out_dir, tag, params):
+    """Write initial parameters as raw binaries, in the same flatten
+    order the artifacts' `params` argument uses. The Rust trainers load
+    these as Θ₀ so both languages agree on initialization exactly."""
+    d = os.path.join(out_dir, "init", tag)
+    os.makedirs(d, exist_ok=True)
+    entries = _leaf_entries(params, "params")
+    lines = []
+    for i, (nm, leaf) in enumerate(entries):
+        np.asarray(leaf).tofile(os.path.join(d, f"p_{i:03d}.bin"))
+        shape = "x".join(str(s) for s in leaf.shape) or "scalar"
+        lines.append(f"param {i} {nm} {_dtype_tag(leaf)} {shape}")
+    with open(os.path.join(d, "params.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def build_all(out_dir):
+    w = ArtifactWriter(out_dir)
+
+    # ---- LM artifacts (pretraining, IPA family) per scale --------------
+    for scale, cfg in M.LM_SCALES.items():
+        params, bs, vs, tokens = lm_example(cfg, LM_TRAIN_BATCH)
+        dump_init(out_dir, scale, params)
+        meta = dict(model=cfg.name, scale=scale, d_model=cfg.d_model,
+                    n_layers=cfg.n_layers, d_ff=cfg.d_ff, vocab=cfg.vocab,
+                    seq_len=cfg.seq_len, rank=cfg.rank,
+                    batch=LM_TRAIN_BATCH, params=M.param_count(cfg))
+        w.emit(f"lm_grad_{scale}",
+               functools.partial(M.lm_grad_step, cfg),
+               (params, bs, vs, tokens),
+               ("params", "bs", "vs", "tokens"),
+               meta=meta, golden=(scale == "s"))
+        ev_tokens = tokens[:LM_EVAL_BATCH]
+        w.emit(f"lm_eval_{scale}",
+               functools.partial(M.lm_eval_loss, cfg),
+               (params, ev_tokens),
+               ("params", "tokens"),
+               meta=meta, golden=(scale == "s"))
+
+    # Pallas-kernel variant at the small scale: proves the L1 kernels
+    # lower into the same artifact pipeline and match the oracle path.
+    cfg_p = dataclasses_replace(M.LM_SCALES["s"], use_pallas=True)
+    params, bs, vs, tokens = lm_example(cfg_p, LM_TRAIN_BATCH)
+    w.emit("lm_grad_s_pallas",
+           functools.partial(M.lm_grad_step, cfg_p),
+           (params, bs, vs, tokens),
+           ("params", "bs", "vs", "tokens"),
+           meta=dict(model="llama-s+pallas", rank=cfg_p.rank), golden=True)
+
+    # ---- Classifier artifacts (fine-tuning) ----------------------------
+    cfg = M.CLF_CONFIG
+    params, bs, vs, tokens, labels = clf_example(cfg, CLF_TRAIN_BATCH)
+    dump_init(out_dir, "clf", params)
+    meta = dict(model=cfg.name, d_model=cfg.d_model, n_layers=cfg.n_layers,
+                d_ff=cfg.d_ff, vocab=cfg.vocab, seq_len=cfg.seq_len,
+                rank=cfg.rank, num_classes=cfg.num_classes,
+                batch=CLF_TRAIN_BATCH, params=M.param_count(cfg))
+
+    w.emit("clf_ipa_grad",
+           functools.partial(M.clf_ipa_full_grad, cfg),
+           (params, tokens, labels),
+           ("params", "tokens", "labels"), meta=meta)
+
+    w.emit("clf_ipa_lowrank_grad",
+           functools.partial(M.clf_ipa_lowrank_grad, cfg),
+           (params, bs, vs, tokens, labels),
+           ("params", "bs", "vs", "tokens", "labels"), meta=meta)
+
+    zs = zo_zs(cfg, jax.random.PRNGKey(4))
+    z_head = jax.random.normal(jax.random.PRNGKey(5),
+                               (cfg.num_classes, cfg.d_model), jnp.float32)
+    sigma = jnp.float32(1e-3)
+    w.emit("clf_zo_lowrank",
+           functools.partial(M.clf_zo_lowrank, cfg),
+           (params, zs, vs, z_head, sigma, tokens, labels),
+           ("params", "zs", "vs", "z_head", "sigma", "tokens", "labels"),
+           meta=meta)
+
+    zs_full = zo_zs_full(cfg, jax.random.PRNGKey(6))
+    w.emit("clf_zo_full",
+           functools.partial(M.clf_zo_full, cfg),
+           (params, zs_full, z_head, sigma, tokens, labels),
+           ("params", "zs_full", "z_head", "sigma", "tokens", "labels"),
+           meta=meta)
+
+    ev_tokens = (jnp.arange(CLF_EVAL_BATCH * cfg.seq_len, dtype=jnp.int32)
+                 .reshape(CLF_EVAL_BATCH, cfg.seq_len) * 40503 % cfg.vocab)
+    ev_labels = (jnp.arange(CLF_EVAL_BATCH, dtype=jnp.int32) * 3) % cfg.num_classes
+    w.emit("clf_eval",
+           functools.partial(M.clf_eval, cfg),
+           (params, ev_tokens, ev_labels),
+           ("params", "tokens", "labels"), meta=meta)
+
+    with open(os.path.join(out_dir, "INDEX.txt"), "w") as f:
+        f.write("\n".join(w.index) + "\n")
+    print(f"[aot] wrote {len(w.index)} artifacts to {out_dir}")
+
+
+def dataclasses_replace(cfg, **kw):
+    import dataclasses
+    return dataclasses.replace(cfg, **kw)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    build_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

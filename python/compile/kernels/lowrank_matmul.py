@@ -1,0 +1,310 @@
+"""L1 Pallas kernels for the low-rank estimator's compute hot-spots.
+
+Hardware adaptation (DESIGN.md §2): the paper's CUDA-implied hot path is
+re-thought for the TPU memory hierarchy. Each kernel tiles its *output*
+into (TILE_B × TILE_M) VMEM blocks; the contracted dimension rides along
+inside the block (full-K panels) so the MXU sees resident operands and
+no partial-sum traffic returns to HBM. The rank-r factors (V, B) are tiny
+(n·r, m·r) and are broadcast to every grid cell — exactly the paper's
+memory story: the low-rank path adds O(r·(m+n)) to a kernel that already
+streams O(m·n).
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers the same kernel
+logic to portable HLO (see /opt/xla-example/README.md). Real-TPU
+efficiency is estimated analytically in DESIGN.md §6.
+
+Every public function pads ragged shapes up to the tile grid and slices
+the result back, so callers may use arbitrary shapes; the pure-jnp
+oracles in ``ref.py`` define the numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-tile edges. 128 matches both the MXU systolic edge and the lane
+# count; 8 is the f32 sublane count. Tiles are clamped to the (padded)
+# problem size so tiny test shapes stay legal.
+TILE_B = 128
+TILE_M = 128
+
+_INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls.
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _grid_sizes(batch, m):
+    tb = min(TILE_B, batch) if batch % TILE_B else TILE_B
+    tb = TILE_B if batch % TILE_B == 0 else batch  # pad path handles rest
+    return tb
+
+
+# ---------------------------------------------------------------------------
+# fused low-rank linear: y = x·Wᵀ + (x·V)·Bᵀ
+# ---------------------------------------------------------------------------
+
+
+def _lowrank_linear_kernel(x_ref, w_ref, b_ref, v_ref, o_ref):
+    # x_ref: (TB, n) — a batch tile with the full contracted dim resident.
+    # w_ref: (TM, n) — an output-feature tile of W.
+    # v_ref: (n, r), b_ref: (TM, r) — the rank-r factors.
+    x = x_ref[...]
+    base = jax.lax.dot_general(
+        x, w_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    xv = jax.lax.dot_general(
+        x, v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    low = jax.lax.dot_general(
+        xv, b_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = (base + low).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lowrank_linear(x, w, b_aux, v):
+    """Fused y = x·Wᵀ + (x·V)·Bᵀ. Shapes: x (B, n), w (m, n), b_aux (m, r),
+    v (n, r) → (B, m). Arbitrary shapes accepted (padded to the tile grid).
+    """
+    batch, n = x.shape
+    m, n2 = w.shape
+    assert n == n2, f"x/w contraction mismatch: {n} vs {n2}"
+    assert b_aux.shape[0] == m and v.shape[0] == n and b_aux.shape[1] == v.shape[1]
+
+    xp = _pad_to(x, 0, TILE_B)
+    wp = _pad_to(w, 0, TILE_M)
+    bp = _pad_to(b_aux, 0, TILE_M)
+    bp_, mp_ = xp.shape[0], wp.shape[0]
+    grid = (bp_ // TILE_B, mp_ // TILE_M)
+
+    out = pl.pallas_call(
+        _lowrank_linear_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_M, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((TILE_M, v.shape[1]), lambda i, j: (j, 0)),
+            pl.BlockSpec((n, v.shape[1]), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, TILE_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp_, mp_), x.dtype),
+        interpret=_INTERPRET,
+    )(xp, wp, bp, v)
+    return out[:batch, :m]
+
+
+# ---------------------------------------------------------------------------
+# backward w.r.t. B: dB = dyᵀ·(x·V)
+# ---------------------------------------------------------------------------
+
+
+def _grad_b_kernel(dy_ref, x_ref, v_ref, o_ref):
+    # dy_ref: (batch, TM); x_ref: (batch, n); v_ref: (n, r) → o (TM, r)
+    xv = jax.lax.dot_general(
+        x_ref[...], v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = jax.lax.dot_general(
+        dy_ref[...], xv, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@jax.jit
+def lowrank_linear_grad_b(dy, x, v):
+    """dB = dyᵀ·(x·V). Shapes: dy (B, m), x (B, n), v (n, r) → (m, r)."""
+    batch, m = dy.shape
+    _, n = x.shape
+    r = v.shape[1]
+    dyp = _pad_to(dy, 1, TILE_M)
+    mp_ = dyp.shape[1]
+    grid = (mp_ // TILE_M,)
+    out = pl.pallas_call(
+        _grad_b_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, TILE_M), lambda j: (0, j)),
+            pl.BlockSpec((batch, n), lambda j: (0, 0)),
+            pl.BlockSpec((n, r), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, r), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp_, r), dy.dtype),
+        interpret=_INTERPRET,
+    )(dyp, x, v)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# backward w.r.t. x: dx = dy·W + (dy·B)·Vᵀ
+# ---------------------------------------------------------------------------
+
+
+def _grad_x_kernel(dy_ref, w_ref, b_ref, v_ref, o_ref):
+    # dy_ref: (TB, m); w_ref: (m, TN); b_ref: (m, r); v_ref: (TN, r)
+    dy = dy_ref[...]
+    base = jax.lax.dot_general(
+        dy, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    dyb = jax.lax.dot_general(
+        dy, b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    low = jax.lax.dot_general(
+        dyb, v_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = (base + low).astype(o_ref.dtype)
+
+
+@jax.jit
+def lowrank_linear_grad_x(dy, w, b_aux, v):
+    """dx = dy·W + (dy·B)·Vᵀ. Shapes: dy (B, m), w (m, n), b_aux (m, r),
+    v (n, r) → (B, n)."""
+    batch, m = dy.shape
+    _, n = w.shape
+    r = v.shape[1]
+    dyp = _pad_to(dy, 0, TILE_B)
+    wp = _pad_to(w, 1, TILE_M)
+    vp = _pad_to(v, 0, TILE_M)
+    bp_, np_ = dyp.shape[0], wp.shape[1]
+    grid = (bp_ // TILE_B, np_ // TILE_M)
+    out = pl.pallas_call(
+        _grad_x_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((m, TILE_M), lambda i, j: (0, j)),
+            pl.BlockSpec((m, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((TILE_M, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, TILE_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp_, np_), dy.dtype),
+        interpret=_INTERPRET,
+    )(dyp, wp, b_aux, vp)
+    return out[:batch, :n]
+
+
+# ---------------------------------------------------------------------------
+# lift: Θ + B·Vᵀ
+# ---------------------------------------------------------------------------
+
+
+def _lift_kernel(t_ref, b_ref, v_ref, o_ref):
+    low = jax.lax.dot_general(
+        b_ref[...], v_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = (t_ref[...] + low).astype(o_ref.dtype)
+
+
+@jax.jit
+def lift_add(theta, b_aux, v):
+    """Θ + B·Vᵀ (Algorithm 1 line 8). Shapes: theta (m, n), b_aux (m, r),
+    v (n, r) → (m, n)."""
+    m, n = theta.shape
+    r = v.shape[1]
+    tp = _pad_to(_pad_to(theta, 0, TILE_B), 1, TILE_M)
+    bp = _pad_to(b_aux, 0, TILE_B)
+    vp = _pad_to(v, 0, TILE_M)
+    mp_, np_ = tp.shape
+    grid = (mp_ // TILE_B, np_ // TILE_M)
+    out = pl.pallas_call(
+        _lift_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, TILE_M), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_B, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_M, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, TILE_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp_, np_), theta.dtype),
+        interpret=_INTERPRET,
+    )(tp, bp, vp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# gradient projection: (G·V)·Vᵀ
+# ---------------------------------------------------------------------------
+
+
+def _project_kernel(g_ref, v_ref, vt_ref, o_ref):
+    gv = jax.lax.dot_general(
+        g_ref[...], v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = jax.lax.dot_general(
+        gv, vt_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+@jax.jit
+def project_gradient(g, v):
+    """(G·V)·Vᵀ — the LowRank-IPA projection ĝ·P without forming P.
+    Shapes: g (m, n), v (n, r) → (m, n)."""
+    m, n = g.shape
+    r = v.shape[1]
+    gp = _pad_to(g, 0, TILE_B)
+    vp = _pad_to(v, 0, TILE_M)  # pad rows for the second (n-tiled) use
+    mp_ = gp.shape[0]
+    np_ = vp.shape[0]
+    gp = _pad_to(gp, 1, TILE_M)
+    grid = (mp_ // TILE_B, np_ // TILE_M)
+    out = pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((TILE_M, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, TILE_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp_, np_), g.dtype),
+        interpret=_INTERPRET,
+    )(gp[:, :n], v, vp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP wrapper: the L2 model's low-rank linear layer
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def lowrank_linear_layer(x, w, b_aux, v):
+    """Differentiable fused low-rank linear. Gradients flow to x and
+    b_aux only (W is the frozen base weight, V is the sampled projector —
+    both are non-trainable within an inner step, per Algorithm 1)."""
+    return lowrank_linear(x, w, b_aux, v)
+
+
+def _layer_fwd(x, w, b_aux, v):
+    y = lowrank_linear(x, w, b_aux, v)
+    return y, (x, w, b_aux, v)
+
+
+def _layer_bwd(res, dy):
+    x, w, b_aux, v = res
+    dx = lowrank_linear_grad_x(dy, w, b_aux, v)
+    db = lowrank_linear_grad_b(dy, x, v)
+    # W and V receive zero cotangents: they are frozen inputs.
+    return dx, jnp.zeros_like(w), db, jnp.zeros_like(v)
+
+
+lowrank_linear_layer.defvjp(_layer_fwd, _layer_bwd)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness contract).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis
+and asserts allclose between kernel and oracle. The oracles are also the
+fallback path the L2 model uses for shapes that don't tile cleanly.
+"""
+
+import jax.numpy as jnp  # noqa: F401  (kept for dtype helpers in callers)
+
+
+def lowrank_linear_ref(x, w, b_aux, v):
+    """y = x·Wᵀ + (x·V)·Bᵀ — the fused low-rank linear layer.
+
+    The reparameterized weight is W_eff = W + B·Vᵀ (paper §4.1); the fused
+    form never materializes W_eff:
+
+        x·W_effᵀ = x·Wᵀ + x·(B Vᵀ)ᵀ = x·Wᵀ + (x·V)·Bᵀ.
+
+    Shapes: x (batch, n), w (m, n), b_aux (m, r), v (n, r) → (batch, m).
+    """
+    return x @ w.T + (x @ v) @ b_aux.T
+
+
+def lowrank_linear_grad_b_ref(dy, x, v):
+    """∂loss/∂B = dyᵀ·(x·V) — the Algorithm 1 inner-step gradient.
+
+    Shapes: dy (batch, m), x (batch, n), v (n, r) → (m, r).
+    """
+    return dy.T @ (x @ v)
+
+
+def lowrank_linear_grad_x_ref(dy, w, b_aux, v):
+    """∂loss/∂x = dy·W + (dy·B)·Vᵀ.
+
+    Shapes: dy (batch, m), w (m, n), b_aux (m, r), v (n, r) → (batch, n).
+    """
+    return dy @ w + (dy @ b_aux) @ v.T
+
+
+def lift_add_ref(theta, b_aux, v):
+    """Θ + B·Vᵀ — the outer-iteration lift (Algorithm 1 line 8).
+
+    Shapes: theta (m, n), b_aux (m, r), v (n, r) → (m, n).
+    """
+    return theta + b_aux @ v.T
+
+
+def project_gradient_ref(g, v):
+    """(G·V)·Vᵀ — project a full gradient onto span(V) and lift back
+    (the LowRank-IPA estimator ĝ·P of Theorem 1's proof).
+
+    Shapes: g (m, n), v (n, r) → (m, n).
+    """
+    return (g @ v) @ v.T

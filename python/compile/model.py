@@ -1,0 +1,356 @@
+"""L2: JAX model graphs for the paper's two training regimes.
+
+* ``lm_*`` — a LLaMA-style decoder-only causal LM (RMSNorm, rotary
+  attention, SwiGLU) whose attention/MLP weight matrices carry the
+  paper's low-rank reparameterization W_eff = W + B·Vᵀ. The IPA train
+  step differentiates **w.r.t. the auxiliary B only** for those matrices
+  (Algorithm 1, eq. 8); embeddings and norms train full-rank (the GaLore
+  convention the paper's pretraining experiments follow).
+* ``clf_*`` — an encoder classifier (mean-pool head) for the RoBERTa
+  fine-tuning experiments; the LR family trains it with the antithetic
+  two-point ZO estimator of Example 3(ii), evaluated entirely inside the
+  graph: loss(Θ + σZVᵀ) and loss(Θ − σZVᵀ) share one lowering, so the
+  run-time never builds a backward graph (the paper's Vanilla-LR memory
+  advantage).
+
+Every matrix multiply on the reparameterized path routes through the L1
+Pallas kernels when ``config.use_pallas`` is set; otherwise through the
+identical pure-jnp oracle (``kernels.ref``). AOT lowering (aot.py) emits
+both variants at the small scale so the Rust runtime can certify that the
+kernel path and the oracle path agree end to end.
+
+Model scales are CPU-proxy versions of the paper's LLaMA-20M/60M/100M
+(DESIGN.md §2): same architecture family, shrunk dims.
+"""
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.lowrank_matmul import lowrank_linear_layer
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    rank: int
+    causal: bool = True
+    num_classes: int = 0  # 0 ⇒ LM (tied head); >0 ⇒ classifier
+    use_pallas: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def matrix_shapes(self) -> List[Tuple[str, Tuple[int, int]]]:
+        """The reparameterized (m, n) weight matrices, in layer order.
+        Convention: forward is y = x·Wᵀ, so W is (out, in)."""
+        d, f = self.d_model, self.d_ff
+        shapes = []
+        for l in range(self.n_layers):
+            for nm, shp in [
+                ("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)), ("wo", (d, d)),
+                ("w1", (f, d)), ("w3", (f, d)), ("w2", (d, f)),
+            ]:
+                shapes.append((f"layer{l}.{nm}", shp))
+        return shapes
+
+
+# CPU-proxy scales for the paper's LLaMA-20M/60M/100M (DESIGN.md §2).
+LM_SCALES: Dict[str, ModelConfig] = {
+    "s": ModelConfig("llama-s", vocab=4096, d_model=128, n_layers=3, n_heads=4,
+                     d_ff=384, seq_len=64, rank=8),
+    "m": ModelConfig("llama-m", vocab=4096, d_model=192, n_layers=4, n_heads=4,
+                     d_ff=576, seq_len=64, rank=8),
+    "l": ModelConfig("llama-l", vocab=4096, d_model=256, n_layers=6, n_heads=4,
+                     d_ff=768, seq_len=64, rank=8),
+}
+
+# RoBERTa-large proxy for the fine-tuning experiments (Table 1–3, Fig 6).
+CLF_CONFIG = ModelConfig("clf", vocab=4096, d_model=128, n_layers=3, n_heads=4,
+                         d_ff=384, seq_len=32, rank=4, causal=False,
+                         num_classes=8)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    n = cfg.vocab * cfg.d_model  # embedding (tied head for LM)
+    for _, (m, k) in cfg.matrix_shapes():
+        n += m * k
+    n += cfg.n_layers * 2 * cfg.d_model + cfg.d_model  # norms
+    if cfg.num_classes:
+        n += cfg.num_classes * cfg.d_model
+    return n
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    """Initialize. Layout (dict, insertion-ordered — the AOT manifest
+    records the exact flatten order):
+      embed (vocab, d), matrices {name: (m, n)}, norms, [head]."""
+    keys = jax.random.split(key, 4 + len(cfg.matrix_shapes()))
+    params: Dict[str, Any] = {}
+    params["embed"] = jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                        jnp.float32) * 0.02
+    for i, (name, (m, n)) in enumerate(cfg.matrix_shapes()):
+        params[name] = jax.random.normal(keys[1 + i], (m, n), jnp.float32) \
+            * (2.0 / (m + n)) ** 0.5
+    for l in range(cfg.n_layers):
+        params[f"layer{l}.norm_attn"] = jnp.ones((cfg.d_model,), jnp.float32)
+        params[f"layer{l}.norm_mlp"] = jnp.ones((cfg.d_model,), jnp.float32)
+    params["norm_final"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.num_classes:
+        params["head"] = jax.random.normal(keys[-1],
+                                           (cfg.num_classes, cfg.d_model),
+                                           jnp.float32) * 0.02
+    return params
+
+
+def zero_bs(cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """B = 0 for every reparameterized matrix (inner-loop reset)."""
+    return {name: jnp.zeros((m, cfg.rank), jnp.float32)
+            for name, (m, n) in cfg.matrix_shapes()}
+
+
+def identity_vs(cfg: ModelConfig, key) -> Dict[str, jnp.ndarray]:
+    """Gaussian V draws (for python-side testing; at run time Rust
+    samples V with the paper's optimal laws)."""
+    vs = {}
+    for i, (name, (m, n)) in enumerate(cfg.matrix_shapes()):
+        k = jax.random.fold_in(key, i)
+        vs[name] = jax.random.normal(k, (n, cfg.rank), jnp.float32) \
+            / jnp.sqrt(cfg.rank * 1.0)
+    return vs
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def _rotary(x, seq_len, head_dim):
+    """Rotary position embedding over the last axis (pairs)."""
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq_len, dtype=jnp.float32)
+    angles = jnp.einsum("s,h->sh", t, freqs)  # (seq, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast over (batch, heads, seq, half)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _lowrank_matmul(cfg: ModelConfig, x2d, w, b, v):
+    """y = x·W_effᵀ routed through the Pallas kernel or the jnp oracle."""
+    if cfg.use_pallas:
+        return lowrank_linear_layer(x2d, w, b, v)
+    return ref.lowrank_linear_ref(x2d, w, b, v)
+
+
+def _attention(cfg, h, params, bs, vs, layer):
+    """Multi-head attention; every projection is low-rank-reparameterized."""
+    bsz, seq, d = h.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    x2d = h.reshape(bsz * seq, d)
+
+    def proj(nm):
+        name = f"layer{layer}.{nm}"
+        return _lowrank_matmul(cfg, x2d, params[name], bs[name], vs[name])
+
+    q = proj("wq").reshape(bsz, seq, nh, hd).transpose(0, 2, 1, 3)
+    k = proj("wk").reshape(bsz, seq, nh, hd).transpose(0, 2, 1, 3)
+    v_ = proj("wv").reshape(bsz, seq, nh, hd).transpose(0, 2, 1, 3)
+    if cfg.causal:
+        q = _rotary(q, seq, hd)
+        k = _rotary(k, seq, hd)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    if cfg.causal:
+        mask = jnp.tril(jnp.ones((seq, seq), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v_)
+    out2d = out.transpose(0, 2, 1, 3).reshape(bsz * seq, d)
+    name = f"layer{layer}.wo"
+    y = _lowrank_matmul(cfg, out2d, params[name], bs[name], vs[name])
+    return y.reshape(bsz, seq, d)
+
+
+def _mlp(cfg, h, params, bs, vs, layer):
+    bsz, seq, d = h.shape
+    x2d = h.reshape(bsz * seq, d)
+
+    def mm(nm, inp):
+        name = f"layer{layer}.{nm}"
+        return _lowrank_matmul(cfg, inp, params[name], bs[name], vs[name])
+
+    gate = jax.nn.silu(mm("w1", x2d))
+    up = mm("w3", x2d)
+    y = mm("w2", gate * up)
+    return y.reshape(bsz, seq, d)
+
+
+def _backbone(cfg: ModelConfig, params, bs, vs, tokens):
+    """Token ids (batch, seq) → hidden states (batch, seq, d)."""
+    h = params["embed"][tokens]
+    for l in range(cfg.n_layers):
+        h = h + _attention(cfg, _rmsnorm(h, params[f"layer{l}.norm_attn"]),
+                           params, bs, vs, l)
+        h = h + _mlp(cfg, _rmsnorm(h, params[f"layer{l}.norm_mlp"]),
+                     params, bs, vs, l)
+    return _rmsnorm(h, params["norm_final"])
+
+
+# ---------------------------------------------------------------------------
+# LM: causal-language-model loss and the IPA train step
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params, bs, vs, tokens):
+    """Mean next-token cross-entropy. tokens: (batch, seq_len+1) int32."""
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    h = _backbone(cfg, params, bs, vs, inputs)
+    logits = h @ params["embed"].T  # tied head
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_grad_step(cfg: ModelConfig, params, bs, vs, tokens):
+    """(loss, dB for every matrix, d_embed, d_norms) — the LowRank-IPA
+    estimator of eq. (8): ∂/∂B with W, V frozen; embeddings and norms get
+    full-rank IPA gradients."""
+    full_names = ["embed"] + [f"layer{l}.norm_attn" for l in range(cfg.n_layers)] \
+        + [f"layer{l}.norm_mlp" for l in range(cfg.n_layers)] + ["norm_final"]
+
+    def loss_fn(trainable):
+        p = dict(params)
+        for nm in full_names:
+            p[nm] = trainable["full"][nm]
+        return lm_loss(cfg, p, trainable["bs"], vs, tokens)
+
+    trainable = {"full": {nm: params[nm] for nm in full_names}, "bs": bs}
+    loss, grads = jax.value_and_grad(loss_fn)(trainable)
+    return loss, grads["bs"], grads["full"]
+
+
+def lm_eval_loss(cfg: ModelConfig, params, tokens):
+    """Eval loss at the lifted point (B already folded into params)."""
+    bs = zero_bs(cfg)
+    vs = {name: jnp.zeros((n, cfg.rank), jnp.float32)
+          for name, (m, n) in cfg.matrix_shapes()}
+    return lm_loss(cfg, params, bs, vs, tokens)
+
+
+# ---------------------------------------------------------------------------
+# Classifier: IPA + two-point ZO (LR family)
+# ---------------------------------------------------------------------------
+
+
+def clf_logits(cfg: ModelConfig, params, bs, vs, tokens):
+    h = _backbone(cfg, params, bs, vs, tokens)
+    pooled = jnp.mean(h, axis=1)  # (batch, d)
+    return pooled @ params["head"].T
+
+
+def clf_loss(cfg: ModelConfig, params, bs, vs, tokens, labels):
+    logits = clf_logits(cfg, params, bs, vs, tokens)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def clf_ipa_full_grad(cfg: ModelConfig, params, tokens, labels):
+    """Vanilla IPA (full backprop): loss + full gradients for all
+    reparameterizable matrices and the head."""
+    names = [nm for nm, _ in cfg.matrix_shapes()] + ["head"]
+    bs, vs = zero_bs(cfg), {name: jnp.zeros((n, cfg.rank), jnp.float32)
+                            for name, (m, n) in cfg.matrix_shapes()}
+
+    def loss_fn(sub):
+        p = dict(params)
+        p.update(sub)
+        return clf_loss(cfg, p, bs, vs, tokens, labels)
+
+    sub = {nm: params[nm] for nm in names}
+    loss, grads = jax.value_and_grad(loss_fn)(sub)
+    return loss, grads
+
+
+def clf_ipa_lowrank_grad(cfg: ModelConfig, params, bs, vs, tokens, labels):
+    """LowRank-IPA: loss + (dB per matrix, d_head)."""
+
+    def loss_fn(trainable):
+        p = dict(params)
+        p["head"] = trainable["head"]
+        return clf_loss(cfg, p, trainable["bs"], vs, tokens, labels)
+
+    trainable = {"bs": bs, "head": params["head"]}
+    loss, grads = jax.value_and_grad(loss_fn)(trainable)
+    return loss, grads["bs"], grads["head"]
+
+
+def clf_zo_lowrank(cfg: ModelConfig, params, zs, vs, z_head, sigma, tokens, labels):
+    """LowRank-LR (Example 3(ii)): evaluate the two antithetic points
+    W_eff = Θ ± σ·Z·Vᵀ *inside the graph* (B = ±σZ) and return both
+    losses; Rust forms the estimator (F⁺ − F⁻)/(2σ)·ZVᵀ. The head is
+    perturbed full-rank (it is tiny). No backward graph exists here."""
+
+    def at(sign):
+        bs = {nm: sign * sigma * z for nm, z in zs.items()}
+        p = dict(params)
+        p["head"] = params["head"] + sign * sigma * z_head
+        return clf_loss(cfg, p, bs, vs, tokens, labels)
+
+    return at(1.0), at(-1.0)
+
+
+def clf_zo_full(cfg: ModelConfig, params, zs_full, z_head, sigma, tokens, labels):
+    """Vanilla LR: full-rank antithetic perturbation Θ ± σZ on every
+    matrix and the head (MeZO-style)."""
+    vs = {name: jnp.zeros((n, cfg.rank), jnp.float32)
+          for name, (m, n) in cfg.matrix_shapes()}
+    bs0 = zero_bs(cfg)
+
+    def at(sign):
+        p = dict(params)
+        for nm, z in zs_full.items():
+            p[nm] = params[nm] + sign * sigma * z
+        p["head"] = params["head"] + sign * sigma * z_head
+        return clf_loss(cfg, p, bs0, vs, tokens, labels)
+
+    return at(1.0), at(-1.0)
+
+
+def clf_eval(cfg: ModelConfig, params, tokens, labels):
+    """(summed loss, correct count) at the lifted point."""
+    bs = zero_bs(cfg)
+    vs = {name: jnp.zeros((n, cfg.rank), jnp.float32)
+          for name, (m, n) in cfg.matrix_shapes()}
+    logits = clf_logits(cfg, params, bs, vs, tokens)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss_sum = jnp.sum(logz - gold)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))
+    return loss_sum, correct

@@ -1,0 +1,155 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (ragged and tile-aligned) and dtypes; the
+kernel/oracle agreement here is THE correctness signal for everything the
+Rust runtime later executes through the *_pallas artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lowrank_matmul as K
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=80)
+RANKS = st.integers(min_value=1, max_value=8)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _mk(rng, *shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def _tols(dtype):
+    # bf16: the kernel accumulates in f32 (MXU convention) while the
+    # oracle accumulates in bf16, so per-element deviations of a few ulp
+    # of bf16 (≈ 1/128 relative) are expected over 64-term dot products.
+    return dict(rtol=6e-2, atol=0.25) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, n=DIMS, m=DIMS, r=RANKS, seed=SEEDS)
+def test_lowrank_linear_matches_ref(b, n, m, r, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _mk(rng, b, n), _mk(rng, m, n)
+    ba, v = _mk(rng, m, r), _mk(rng, n, r)
+    np.testing.assert_allclose(
+        K.lowrank_linear(x, w, ba, v),
+        ref.lowrank_linear_ref(x, w, ba, v), rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, n=DIMS, m=DIMS, r=RANKS, seed=SEEDS)
+def test_grad_b_matches_ref(b, n, m, r, seed):
+    rng = np.random.default_rng(seed)
+    dy, x, v = _mk(rng, b, m), _mk(rng, b, n), _mk(rng, n, r)
+    np.testing.assert_allclose(
+        K.lowrank_linear_grad_b(dy, x, v),
+        ref.lowrank_linear_grad_b_ref(dy, x, v), rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=DIMS, n=DIMS, m=DIMS, r=RANKS, seed=SEEDS)
+def test_grad_x_matches_ref(b, n, m, r, seed):
+    rng = np.random.default_rng(seed)
+    dy, w = _mk(rng, b, m), _mk(rng, m, n)
+    ba, v = _mk(rng, m, r), _mk(rng, n, r)
+    np.testing.assert_allclose(
+        K.lowrank_linear_grad_x(dy, w, ba, v),
+        ref.lowrank_linear_grad_x_ref(dy, w, ba, v), rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=DIMS, m=DIMS, r=RANKS, seed=SEEDS)
+def test_lift_add_matches_ref(n, m, r, seed):
+    rng = np.random.default_rng(seed)
+    t, ba, v = _mk(rng, m, n), _mk(rng, m, r), _mk(rng, n, r)
+    np.testing.assert_allclose(
+        K.lift_add(t, ba, v), ref.lift_add_ref(t, ba, v), rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=DIMS, m=DIMS, r=RANKS, seed=SEEDS)
+def test_project_gradient_matches_ref(n, m, r, seed):
+    rng = np.random.default_rng(seed)
+    g, v = _mk(rng, m, n), _mk(rng, n, r)
+    np.testing.assert_allclose(
+        K.project_gradient(g, v), ref.project_gradient_ref(g, v),
+        rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("shape", [(128, 256, 128, 8), (256, 128, 384, 4)])
+def test_tile_aligned_shapes_exact_path(shape):
+    """Tile-aligned shapes take the no-padding fast path."""
+    b, n, m, r = shape
+    rng = np.random.default_rng(7)
+    x, w = _mk(rng, b, n), _mk(rng, m, n)
+    ba, v = _mk(rng, m, r), _mk(rng, n, r)
+    np.testing.assert_allclose(
+        K.lowrank_linear(x, w, ba, v),
+        ref.lowrank_linear_ref(x, w, ba, v), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtype_support(dtype):
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(32, 64)), dtype)
+    w = jnp.asarray(rng.normal(size=(48, 64)), dtype)
+    ba = jnp.asarray(rng.normal(size=(48, 4)), dtype)
+    v = jnp.asarray(rng.normal(size=(64, 4)), dtype)
+    got = K.lowrank_linear(x, w, ba, v)
+    want = ref.lowrank_linear_ref(x, w, ba, v)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tols(dtype))
+
+
+def test_custom_vjp_routes_gradients_to_x_and_b_only():
+    rng = np.random.default_rng(13)
+    x = _mk(rng, 16, 24)
+    w = _mk(rng, 20, 24)
+    ba = _mk(rng, 20, 3)
+    v = _mk(rng, 24, 3)
+
+    def loss_k(x, w, ba, v):
+        return jnp.sum(jnp.tanh(K.lowrank_linear_layer(x, w, ba, v)))
+
+    def loss_r(x, w, ba, v):
+        return jnp.sum(jnp.tanh(ref.lowrank_linear_ref(x, w, ba, v)))
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2, 3))(x, w, ba, v)
+    gr = jax.grad(loss_r, argnums=(0, 2))(x, w, ba, v)
+    np.testing.assert_allclose(gk[0], gr[0], rtol=2e-3, atol=2e-3)  # dx
+    np.testing.assert_allclose(gk[2], gr[1], rtol=2e-3, atol=2e-3)  # dB
+    assert float(jnp.abs(gk[1]).max()) == 0.0  # W frozen
+    assert float(jnp.abs(gk[3]).max()) == 0.0  # V frozen
+
+
+def test_fused_never_materializes_weff_same_as_unfused():
+    """Algebraic identity x(W + BVᵀ)ᵀ = xWᵀ + (xV)Bᵀ holds in f32."""
+    rng = np.random.default_rng(17)
+    x, w = _mk(rng, 40, 56), _mk(rng, 32, 56)
+    ba, v = _mk(rng, 32, 4), _mk(rng, 56, 4)
+    unfused = x @ (w + ba @ v.T).T
+    fused = K.lowrank_linear(x, w, ba, v)
+    np.testing.assert_allclose(fused, unfused, rtol=5e-3, atol=5e-3)
+
+
+def test_grad_b_is_what_algorithm1_needs():
+    """dB from the kernel equals the eq. (8) gradient computed by jax
+    autodiff on the unfused parameterization."""
+    rng = np.random.default_rng(19)
+    x, w = _mk(rng, 24, 32), _mk(rng, 28, 32)
+    ba, v = _mk(rng, 28, 2), _mk(rng, 32, 2)
+
+    def f(b):
+        return 0.5 * jnp.sum((x @ (w + b @ v.T).T) ** 2)
+
+    g_auto = jax.grad(f)(ba)
+    y = ref.lowrank_linear_ref(x, w, ba, v)
+    g_kernel = K.lowrank_linear_grad_b(y, x, v)  # dy = y for ½‖y‖²
+    np.testing.assert_allclose(g_kernel, g_auto, rtol=5e-3, atol=5e-3)

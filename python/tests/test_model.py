@@ -1,0 +1,191 @@
+"""L2 correctness: model shapes, gradient semantics, estimator identities."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+TINY = M.ModelConfig("tiny", vocab=64, d_model=32, n_layers=2, n_heads=2,
+                     d_ff=48, seq_len=16, rank=4)
+TINY_CLF = dataclasses.replace(TINY, causal=False, num_classes=4, name="tinyclf")
+
+
+def _setup(cfg, seed=0):
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    bs = M.zero_bs(cfg)
+    vs = M.identity_vs(cfg, jax.random.PRNGKey(seed + 1))
+    return params, bs, vs
+
+
+def _tokens(cfg, batch, extra=0, seed=3):
+    n = batch * (cfg.seq_len + extra)
+    return (jnp.arange(n, dtype=jnp.int32).reshape(batch, -1) * 31 + seed) % cfg.vocab
+
+
+def test_param_count_matches_init():
+    params = M.init_params(TINY, jax.random.PRNGKey(0))
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == M.param_count(TINY)
+
+
+def test_lm_loss_is_finite_and_near_log_vocab_at_init():
+    params, bs, vs = _setup(TINY)
+    tokens = _tokens(TINY, 4, extra=1)
+    loss = float(M.lm_loss(TINY, params, bs, vs, tokens))
+    assert np.isfinite(loss)
+    # random init ⇒ loss ≈ ln(vocab)
+    assert abs(loss - np.log(TINY.vocab)) < 1.0
+
+
+def test_lm_grad_step_shapes():
+    params, bs, vs = _setup(TINY)
+    tokens = _tokens(TINY, 4, extra=1)
+    loss, dbs, dfull = M.lm_grad_step(TINY, params, bs, vs, tokens)
+    assert np.isfinite(float(loss))
+    for name, (m, n) in TINY.matrix_shapes():
+        assert dbs[name].shape == (m, TINY.rank)
+    assert dfull["embed"].shape == params["embed"].shape
+    assert dfull["norm_final"].shape == params["norm_final"].shape
+
+
+def test_db_equals_projected_full_gradient():
+    """Theorem 1's proof identity: ∇_B F(Θ + BVᵀ)|_{B=0} = ∇_Θ F(Θ)·V.
+    Check on one matrix by comparing dB against dW·V from full autodiff."""
+    cfg = TINY
+    params, bs, vs = _setup(cfg)
+    tokens = _tokens(cfg, 2, extra=1)
+    name = "layer0.wq"
+
+    _, dbs, _ = M.lm_grad_step(cfg, params, bs, vs, tokens)
+
+    def loss_wrt_w(w):
+        p = dict(params)
+        p[name] = w
+        return M.lm_loss(cfg, p, bs, vs, tokens)
+
+    dw = jax.grad(loss_wrt_w)(params[name])
+    np.testing.assert_allclose(dbs[name], dw @ vs[name], rtol=1e-4, atol=1e-5)
+
+
+def test_sgd_on_b_reduces_lm_loss():
+    """A few Algorithm-1 inner steps in the sampled subspace must reduce
+    the loss on a fixed batch."""
+    cfg = TINY
+    params, bs, vs = _setup(cfg)
+    tokens = _tokens(cfg, 4, extra=1)
+    l0, dbs, dfull = M.lm_grad_step(cfg, params, bs, vs, tokens)
+    lr = 0.5
+    for _ in range(5):
+        loss, dbs, dfull = M.lm_grad_step(cfg, params, bs, vs, tokens)
+        bs = {k: bs[k] - lr * dbs[k] for k in bs}
+    l1, _, _ = M.lm_grad_step(cfg, params, bs, vs, tokens)
+    assert float(l1) < float(l0), f"{float(l1)} !< {float(l0)}"
+
+
+def test_lift_equivalence():
+    """Θ_{t+1} = Θ_t + B Vᵀ gives the same loss as keeping (B, V)."""
+    cfg = TINY
+    params, bs, vs = _setup(cfg)
+    tokens = _tokens(cfg, 2, extra=1)
+    # random non-zero B
+    bs = {k: jax.random.normal(jax.random.PRNGKey(9), b.shape, jnp.float32) * 0.01
+          for k, b in bs.items()}
+    loss_b = M.lm_loss(cfg, params, bs, vs, tokens)
+    lifted = dict(params)
+    for name, _ in cfg.matrix_shapes():
+        lifted[name] = params[name] + bs[name] @ vs[name].T
+    loss_lift = M.lm_eval_loss(cfg, lifted, tokens)
+    np.testing.assert_allclose(float(loss_b), float(loss_lift), rtol=1e-5)
+
+
+def test_pallas_and_jnp_paths_agree_on_lm_loss():
+    cfg_j = TINY
+    cfg_p = dataclasses.replace(TINY, use_pallas=True)
+    params, bs, vs = _setup(cfg_j)
+    bs = {k: jax.random.normal(jax.random.PRNGKey(4), b.shape, jnp.float32) * 0.02
+          for k, b in bs.items()}
+    tokens = _tokens(cfg_j, 2, extra=1)
+    lj = float(M.lm_loss(cfg_j, params, bs, vs, tokens))
+    lp = float(M.lm_loss(cfg_p, params, bs, vs, tokens))
+    np.testing.assert_allclose(lj, lp, rtol=1e-4)
+
+
+def test_pallas_and_jnp_paths_agree_on_gradients():
+    cfg_j = TINY
+    cfg_p = dataclasses.replace(TINY, use_pallas=True)
+    params, bs, vs = _setup(cfg_j)
+    tokens = _tokens(cfg_j, 2, extra=1)
+    _, dbs_j, dfull_j = M.lm_grad_step(cfg_j, params, bs, vs, tokens)
+    _, dbs_p, dfull_p = M.lm_grad_step(cfg_p, params, bs, vs, tokens)
+    for k in dbs_j:
+        np.testing.assert_allclose(dbs_j[k], dbs_p[k], rtol=5e-3, atol=1e-5)
+    np.testing.assert_allclose(dfull_j["embed"], dfull_p["embed"],
+                               rtol=5e-3, atol=1e-5)
+
+
+def test_causal_mask_blocks_future_tokens():
+    """Perturbing a future input token must not change earlier logits."""
+    cfg = TINY
+    params, bs, vs = _setup(cfg)
+    tokens = _tokens(cfg, 1, extra=1)
+
+    h1 = M._backbone(cfg, params, bs, vs, tokens[:, :-1])
+    tok2 = tokens.at[0, -2].set((tokens[0, -2] + 7) % cfg.vocab)
+    h2 = M._backbone(cfg, params, bs, vs, tok2[:, :-1])
+    # positions strictly before the perturbed one are unchanged
+    np.testing.assert_allclose(h1[0, : cfg.seq_len - 2], h2[0, : cfg.seq_len - 2],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_clf_zo_antithetic_symmetry():
+    """σ → 0 ⇒ both ZO losses converge to the unperturbed loss; the
+    difference divided by 2σ converges to the directional derivative."""
+    cfg = TINY_CLF
+    params, bs, vs = _setup(cfg)
+    tokens = _tokens(cfg, 4)
+    labels = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    zs = {nm: jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(5), i),
+                                (m, cfg.rank), jnp.float32)
+          for i, (nm, (m, n)) in enumerate(cfg.matrix_shapes())}
+    zh = jnp.zeros_like(params["head"])
+    base = float(M.clf_loss(cfg, params, bs, vs, tokens, labels))
+    lp, lm_ = M.clf_zo_lowrank(cfg, params, zs, vs, zh, 1e-4, tokens, labels)
+    assert abs(float(lp) - base) < 1e-2
+    assert abs(float(lm_) - base) < 1e-2
+
+    # directional derivative via autodiff on B
+    def loss_b(bvals):
+        return M.clf_loss(cfg, params, bvals, vs, tokens, labels)
+
+    g = jax.grad(loss_b)(bs)
+    dd = sum(float(jnp.vdot(g[k], zs[k])) for k in zs)
+    fd = (float(lp) - float(lm_)) / (2 * 1e-4)
+    np.testing.assert_allclose(fd, dd, rtol=2e-2, atol=1e-4)
+
+
+def test_clf_eval_counts_correct():
+    cfg = TINY_CLF
+    params, _, _ = _setup(cfg)
+    tokens = _tokens(cfg, 8)
+    labels = jnp.zeros((8,), jnp.int32)
+    loss_sum, correct = M.clf_eval(cfg, params, tokens, labels)
+    assert 0 <= int(correct) <= 8
+    assert float(loss_sum) > 0
+
+
+def test_clf_ipa_full_vs_lowrank_grad_consistency():
+    """LowRank-IPA dB must equal (full IPA dW)·V at B = 0."""
+    cfg = TINY_CLF
+    params, bs, vs = _setup(cfg)
+    tokens = _tokens(cfg, 4)
+    labels = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    _, full_grads = M.clf_ipa_full_grad(cfg, params, tokens, labels)
+    _, dbs, dhead = M.clf_ipa_lowrank_grad(cfg, params, bs, vs, tokens, labels)
+    for name, _ in cfg.matrix_shapes():
+        np.testing.assert_allclose(dbs[name], full_grads[name] @ vs[name],
+                                   rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(dhead, full_grads["head"], rtol=1e-5, atol=1e-7)

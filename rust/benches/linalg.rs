@@ -1,0 +1,65 @@
+//! Dense-linalg hot paths: GEMM (the toy-experiment inner loop), QR
+//! (Stiefel draws), Jacobi eigensolver (Algorithm 4 setup), f32 lift.
+
+use lowrank_sge::bench_util::{bench, log_csv, report};
+use lowrank_sge::linalg::{matmul, matmul_tn, sym_eig, thin_qr, Mat};
+use lowrank_sge::model::lift_into;
+use lowrank_sge::rng::Rng;
+
+fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.normal())
+}
+
+fn main() {
+    println!("-- f64 GEMM (toy-experiment inner loop) --");
+    for &n in &[64usize, 128, 256] {
+        let a = rand_mat(n, n, 1);
+        let b = rand_mat(n, n, 2);
+        let stats = bench(2, 10, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        let name = format!("gemm_{n}x{n}x{n}");
+        report(&name, &stats);
+        let flops = 2.0 * (n as f64).powi(3);
+        println!("{:>60}", format!("≈ {:.2} GFLOP/s", flops / stats.median_s / 1e9));
+        log_csv("linalg.csv", &name, &stats);
+    }
+
+    println!("-- thin QR (one Haar–Stiefel draw at paper dims) --");
+    for &(n, r) in &[(128usize, 8usize), (1024, 128), (4096, 128)] {
+        let g = rand_mat(n, r, 3);
+        let stats = bench(2, 10, || {
+            std::hint::black_box(thin_qr(&g));
+        });
+        let name = format!("thin_qr_{n}x{r}");
+        report(&name, &stats);
+        log_csv("linalg.csv", &name, &stats);
+    }
+
+    println!("-- symmetric Jacobi eigensolver (Σ decomposition) --");
+    for &n in &[32usize, 64, 128] {
+        let g = rand_mat(n, n, 4);
+        let s = matmul_tn(&g, &g);
+        let stats = bench(1, 5, || {
+            std::hint::black_box(sym_eig(&s));
+        });
+        let name = format!("sym_eig_{n}");
+        report(&name, &stats);
+        log_csv("linalg.csv", &name, &stats);
+    }
+
+    println!("-- f32 lift Θ += B·Vᵀ (once per K steps) --");
+    for &(m, n, r) in &[(128usize, 128usize, 8usize), (384, 128, 8), (1024, 1024, 128)] {
+        let b: Vec<f32> = (0..m * r).map(|i| i as f32 * 1e-3).collect();
+        let v: Vec<f32> = (0..n * r).map(|i| i as f32 * 1e-3).collect();
+        let mut theta = vec![0.0f32; m * n];
+        let stats = bench(2, 10, || {
+            lift_into(&mut theta, &b, &v, m, n, r);
+            std::hint::black_box(&theta);
+        });
+        let name = format!("lift_{m}x{n}_r{r}");
+        report(&name, &stats);
+        log_csv("linalg.csv", &name, &stats);
+    }
+}

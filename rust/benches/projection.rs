@@ -1,0 +1,57 @@
+//! Projection-sampler cost at the dimensions the trainers actually use
+//! (the per-outer-iteration cost the lazy update amortizes by 1/K).
+
+use lowrank_sge::bench_util::{bench, log_csv, report};
+use lowrank_sge::linalg::Mat;
+use lowrank_sge::projection::{build_sampler, ProjectorKind};
+use lowrank_sge::rng::Rng;
+
+fn main() {
+    println!("-- projection sampler cost (one V draw) --");
+    let cases = [
+        (128usize, 8usize),  // llama-s attn
+        (384, 8),            // llama-s mlp
+        (1024, 128),         // paper's RoBERTa-scale (d=1024, r=128)
+        (4096, 128),         // paper's MLP width
+    ];
+    for kind in [
+        ProjectorKind::Gaussian,
+        ProjectorKind::Stiefel,
+        ProjectorKind::Coordinate,
+    ] {
+        for &(n, r) in &cases {
+            let mut sampler = build_sampler(kind, n, r, 1.0, None);
+            let mut rng = Rng::new(1);
+            let stats = bench(2, 12, || {
+                std::hint::black_box(sampler.sample(&mut rng));
+            });
+            let name = format!("{}_n{}_r{}", kind.name(), n, r);
+            report(&name, &stats);
+            log_csv("projection.csv", &name, &stats);
+        }
+    }
+
+    // dependent sampler: split construction (eig + water-filling, once
+    // per Σ refresh) from per-draw cost
+    println!("-- dependent sampler (Algorithm 4) --");
+    for &n in &[64usize, 128, 256] {
+        let r = 8;
+        let mut rng = Rng::new(2);
+        let g = Mat::from_fn(n, n, |_, _| rng.normal());
+        let sigma = lowrank_sge::linalg::matmul_tn(&g, &g);
+        let stats = bench(1, 5, || {
+            std::hint::black_box(build_sampler(ProjectorKind::Dependent, n, r, 1.0, Some(&sigma)));
+        });
+        let name = format!("dependent_build_n{n}_r{r}");
+        report(&name, &stats);
+        log_csv("projection.csv", &name, &stats);
+
+        let mut sampler = build_sampler(ProjectorKind::Dependent, n, r, 1.0, Some(&sigma));
+        let stats = bench(2, 12, || {
+            std::hint::black_box(sampler.sample(&mut rng));
+        });
+        let name = format!("dependent_draw_n{n}_r{r}");
+        report(&name, &stats);
+        log_csv("projection.csv", &name, &stats);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fixed-size unequal-probability design cost (Algorithm 4 step 3):
+//! systematic vs Sampford vs conditional-Poisson, plus the water-filling
+//! solver.
+
+use lowrank_sge::bench_util::{bench, log_csv, report};
+use lowrank_sge::rng::Rng;
+use lowrank_sge::sampling::{
+    conditional_poisson_calibrate, optimal_inclusion, sample_conditional_poisson,
+    sample_sampford, sample_systematic, DEFAULT_SIGMA_FLOOR,
+};
+
+fn skewed_sigma(n: usize) -> Vec<f64> {
+    (0..n).map(|i| 1.5f64.powi(-(i as i32))).collect()
+}
+
+fn main() {
+    println!("-- √σ water-filling (Theorem 3, eq. 17) --");
+    for &(n, r) in &[(128usize, 8usize), (1024, 128), (4096, 128)] {
+        let sigma = skewed_sigma(n);
+        let stats = bench(2, 20, || {
+            std::hint::black_box(optimal_inclusion(&sigma, r, DEFAULT_SIGMA_FLOOR));
+        });
+        let name = format!("waterfill_n{n}_r{r}");
+        report(&name, &stats);
+        log_csv("sampling.csv", &name, &stats);
+    }
+
+    println!("-- fixed-size π-ps designs (one draw) --");
+    for &(n, r) in &[(128usize, 8usize), (1024, 64usize)] {
+        let sigma = skewed_sigma(n);
+        let pi = optimal_inclusion(&sigma, r, DEFAULT_SIGMA_FLOOR).pi;
+        let mut rng = Rng::new(1);
+
+        let stats = bench(2, 20, || {
+            std::hint::black_box(sample_systematic(&pi, r, &mut rng));
+        });
+        let name = format!("systematic_n{n}_r{r}");
+        report(&name, &stats);
+        log_csv("sampling.csv", &name, &stats);
+
+        let stats = bench(2, 10, || {
+            std::hint::black_box(sample_sampford(&pi, r, &mut rng));
+        });
+        let name = format!("sampford_n{n}_r{r}");
+        report(&name, &stats);
+        log_csv("sampling.csv", &name, &stats);
+
+        let design = conditional_poisson_calibrate(&pi, r);
+        let stats = bench(2, 10, || {
+            std::hint::black_box(sample_conditional_poisson(&design, &mut rng));
+        });
+        let name = format!("cps_draw_n{n}_r{r}");
+        report(&name, &stats);
+        log_csv("sampling.csv", &name, &stats);
+
+        let stats = bench(1, 3, || {
+            std::hint::black_box(conditional_poisson_calibrate(&pi, r));
+        });
+        let name = format!("cps_calibrate_n{n}_r{r}");
+        report(&name, &stats);
+        log_csv("sampling.csv", &name, &stats);
+    }
+}

@@ -1,0 +1,36 @@
+//! Closed-form theory evaluation cost (these run inside training-time
+//! diagnostics, so they must be trivially cheap) plus a correctness
+//! spot-print of the §5 formulas at paper dimensions.
+
+use lowrank_sge::bench_util::{bench, log_csv, report};
+use lowrank_sge::estimator::theory;
+
+fn main() {
+    println!("-- closed forms at (n, r) = (1024, 128) --");
+    let (n, r) = (1024usize, 128usize);
+    let (txi, tth) = (3.7, 1.2);
+    println!("  MSE_F          = {:.4}", theory::mse_full_rank(txi));
+    println!("  MSE_iso (c=1)  = {:.4}", theory::mse_isotropic_exact(n, r, 1.0, txi, tth));
+    println!("  MSE_G   (c=1)  = {:.4}", theory::mse_gaussian_exact(n, r, 1.0, txi, tth));
+    println!("  Thm2 floor     = {:.1}", theory::thm2_floor(n, r, 1.0));
+    println!("  eq14 bound     = {:.4}", theory::mse_upper_bound_eq14(n, r, 1.0, txi, tth));
+
+    let spectrum: Vec<f64> = (0..n).map(|i| 2.0f64.powi(-((i / 64) as i32))).collect();
+    let stats = bench(3, 30, || {
+        std::hint::black_box(theory::phi_min(&spectrum, r, 1.0));
+    });
+    report("phi_min_n1024_r128", &stats);
+    log_csv("theory.csv", "phi_min_n1024_r128", &stats);
+
+    let stats = bench(3, 100, || {
+        std::hint::black_box(theory::mse_gaussian_exact(n, r, 1.0, txi, tth));
+    });
+    report("mse_gaussian_exact", &stats);
+    log_csv("theory.csv", "mse_gaussian_exact", &stats);
+
+    let stats = bench(3, 30, || {
+        std::hint::black_box(theory::mse_dependent_min(&spectrum, r, 1.0, tth));
+    });
+    report("mse_dependent_min_n1024", &stats);
+    log_csv("theory.csv", "mse_dependent_min_n1024", &stats);
+}

@@ -1,0 +1,92 @@
+//! End-to-end per-step latency through the PJRT artifacts — the
+//! Table 3 measurement at proxy scale, plus the pretraining step cost
+//! per scale. Skips gracefully when artifacts are missing.
+
+use lowrank_sge::bench_util::{bench, log_csv, report};
+use lowrank_sge::coordinator::{FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig, PretrainTrainer};
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::runtime::Runtime;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    if !dir.join("INDEX.txt").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first; skipping");
+        return Ok(());
+    }
+    let mut rt = Runtime::new(&dir)?;
+
+    println!("-- Table 3 shape: fine-tune per-step wall clock (proxy) --");
+    for method in [
+        FinetuneMethod::VanillaIpa,
+        FinetuneMethod::LowRankIpa(ProjectorKind::Stiefel),
+        FinetuneMethod::VanillaLr,
+        FinetuneMethod::LowRankLr(ProjectorKind::Stiefel),
+    ] {
+        let mut cfg = FinetuneConfig::quick("sst2", method);
+        cfg.steps = 12;
+        cfg.k_interval = 6;
+        let mut trainer = FinetuneTrainer::new(&mut rt, &dir, cfg)?;
+        let res = trainer.run()?;
+        let mean = res.log.mean_step_time(2).unwrap_or(f64::NAN);
+        println!("{:<28} {:.4} s/step", method.name(), mean);
+        log_csv(
+            "train_step.csv",
+            &format!("finetune_{}", method.name()),
+            &lowrank_sge::bench_util::BenchStats {
+                iters: res.log.records.len() - 2,
+                mean_s: mean,
+                median_s: mean,
+                min_s: mean,
+                max_s: mean,
+            },
+        );
+    }
+
+    println!("-- pretrain step cost per scale (Stiefel LowRank-IPA) --");
+    for scale in ["s", "m", "l"] {
+        let mut cfg = PretrainConfig::quick(scale, ProjectorKind::Stiefel);
+        cfg.steps = 8;
+        cfg.k_interval = 4;
+        cfg.eval_every = 0;
+        let mut trainer = PretrainTrainer::new(&mut rt, &dir, cfg)?;
+        let res = trainer.run()?;
+        let mean = res.log.mean_step_time(2).unwrap_or(f64::NAN);
+        println!("llama-{scale:<24} {:.4} s/step", mean);
+        log_csv(
+            "train_step.csv",
+            &format!("pretrain_{scale}"),
+            &lowrank_sge::bench_util::BenchStats {
+                iters: res.log.records.len() - 2,
+                mean_s: mean,
+                median_s: mean,
+                min_s: mean,
+                max_s: mean,
+            },
+        );
+    }
+
+    println!("-- raw artifact execute latency (lm_grad_s) --");
+    let art = rt.load("lm_grad_s")?;
+    let inputs = rt.golden_inputs(&art)?;
+    let stats = bench(2, 10, || {
+        std::hint::black_box(art.execute(&inputs).unwrap());
+    });
+    report("execute_lm_grad_s", &stats);
+    log_csv("train_step.csv", "execute_lm_grad_s", &stats);
+
+    let art_p = rt.load("lm_grad_s_pallas")?;
+    let stats_p = bench(2, 10, || {
+        std::hint::black_box(art_p.execute(&inputs).unwrap());
+    });
+    report("execute_lm_grad_s_pallas", &stats_p);
+    log_csv("train_step.csv", "execute_lm_grad_s_pallas", &stats_p);
+    println!(
+        "pallas/jnp latency ratio: {:.2}×",
+        stats_p.median_s / stats.median_s
+    );
+    Ok(())
+}

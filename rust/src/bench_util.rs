@@ -1,0 +1,120 @@
+//! Minimal benchmarking harness (criterion is unavailable offline —
+//! DESIGN.md §3). Each `rust/benches/*.rs` target is a `harness = false`
+//! binary built on these helpers: warmup, N timed iterations, robust
+//! stats, one `name ... median ± spread` line per case, and a CSV dump
+//! compatible with the experiment results.
+
+use std::time::Instant;
+
+/// Timing statistics over the measured iterations (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    /// Throughput helper: items per second at the median.
+    pub fn per_second(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    BenchStats {
+        iters,
+        mean_s: mean,
+        median_s: times[iters / 2],
+        min_s: times[0],
+        max_s: times[iters - 1],
+    }
+}
+
+/// Human-readable time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Print one standard report line.
+pub fn report(name: &str, stats: &BenchStats) {
+    println!(
+        "{name:<44} median {:<12} mean {:<12} min {:<12} ({} iters)",
+        fmt_time(stats.median_s),
+        fmt_time(stats.mean_s),
+        fmt_time(stats.min_s),
+        stats.iters
+    );
+}
+
+/// Append `name,median_s,mean_s,min_s,max_s,iters` to a CSV under
+/// results/bench/ (header written on create).
+pub fn log_csv(file: &str, name: &str, stats: &BenchStats) {
+    use std::io::Write;
+    let dir = std::path::Path::new("results/bench");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(file);
+    let fresh = !path.exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        if fresh {
+            let _ = writeln!(f, "name,median_s,mean_s,min_s,max_s,iters");
+        }
+        let _ = writeln!(
+            f,
+            "{name},{},{},{},{},{}",
+            stats.median_s, stats.mean_s, stats.min_s, stats.max_s, stats.iters
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench(1, 9, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+        assert!(s.mean_s > 0.0);
+        assert_eq!(s.iters, 9);
+    }
+
+    #[test]
+    fn formatting_picks_sane_units() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-5).ends_with("µs"));
+        assert!(fmt_time(2.5e-2).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with("s"));
+    }
+
+    #[test]
+    fn per_second_inverse_of_median() {
+        let s = BenchStats { iters: 1, mean_s: 0.5, median_s: 0.5, min_s: 0.5, max_s: 0.5 };
+        assert!((s.per_second(10.0) - 20.0).abs() < 1e-12);
+    }
+}

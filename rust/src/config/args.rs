@@ -1,0 +1,111 @@
+//! Minimal CLI argument helper: `--key value` and `--flag` pairs after
+//! the subcommand, with typed accessors mirroring [`super::ConfigFile`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct ArgMap {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl ArgMap {
+    /// Parse `--key value` / `--flag` tokens. A token starting with
+    /// `--` followed by another `--token` (or nothing) is a flag.
+    pub fn parse(tokens: &[String]) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            let Some(key) = t.strip_prefix("--") else {
+                bail!("unexpected positional argument {t:?}");
+            };
+            if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                values.insert(key.to_string(), tokens[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(ArgMap { values, flags })
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.values.get(key).map(|s| s.as_str()).unwrap_or(default)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.values
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.values
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.values
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.values
+            .get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_and_flags() {
+        let a = ArgMap::parse(&toks("--steps 100 --quick --lr 2e-3")).unwrap();
+        assert_eq!(a.u64_or("steps", 0), 100);
+        assert!(a.has_flag("quick"));
+        assert!((a.f64_or("lr", 0.0) - 2e-3).abs() < 1e-12);
+        assert_eq!(a.str_or("sampler", "stiefel"), "stiefel");
+    }
+
+    #[test]
+    fn trailing_flag_ok() {
+        let a = ArgMap::parse(&toks("--verbose")).unwrap();
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(ArgMap::parse(&toks("oops --x 1")).is_err());
+    }
+
+    #[test]
+    fn defaults_on_bad_parse() {
+        let a = ArgMap::parse(&toks("--steps abc")).unwrap();
+        assert_eq!(a.u64_or("steps", 9), 9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration system: a dependency-free TOML-subset parser for
+//! experiment files plus a small CLI argument helper.
+//!
+//! The framework reads `key = value` config files with `[section]`
+//! headers (strings, integers, floats, booleans) — enough to express
+//! every experiment in `configs/` — and merges `--key value` CLI
+//! overrides on top.
+
+mod args;
+mod parser;
+
+pub use args::ArgMap;
+pub use parser::{ConfigFile, Value};

@@ -1,0 +1,194 @@
+//! TOML-subset config parser.
+//!
+//! Supported grammar (one statement per line):
+//!   [section]
+//!   key = "string" | 123 | 4.5 | true | false | bare-word
+//!   # comment
+//!
+//! Keys are addressed as "section.key" (keys before any section header
+//! live at the root as "key").
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str) -> Value {
+        let raw = raw.trim();
+        if (raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2)
+            || (raw.starts_with('\'') && raw.ends_with('\'') && raw.len() >= 2)
+        {
+            return Value::Str(raw[1..raw.len() - 1].to_string());
+        }
+        if raw == "true" {
+            return Value::Bool(true);
+        }
+        if raw == "false" {
+            return Value::Bool(false);
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Value::Int(i);
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Value::Float(f);
+        }
+        Value::Str(raw.to_string())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config file.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigFile {
+    values: BTreeMap<String, Value>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    bail!("line {}: malformed section header {raw:?}", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if values.insert(key.clone(), Value::parse(v)).is_some() {
+                bail!("line {}: duplicate key {key}", lineno + 1);
+            }
+        }
+        Ok(ConfigFile { values })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "pretrain-fig7"
+seed = 42
+
+[train]
+steps = 100
+lr = 2e-3
+sampler = stiefel
+clip = 1.0
+use_ddp = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("name"), Some(&Value::Str("pretrain-fig7".into())));
+        assert_eq!(c.get("seed"), Some(&Value::Int(42)));
+        assert_eq!(c.get("train.steps"), Some(&Value::Int(100)));
+        assert_eq!(c.get("train.lr"), Some(&Value::Float(2e-3)));
+        // bare words parse as strings
+        assert_eq!(c.str_or("train.sampler", "?"), "stiefel");
+        assert_eq!(c.bool_or("train.use_ddp", false), true);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let c = ConfigFile::parse("a = 1").unwrap();
+        assert_eq!(c.i64_or("missing", 7), 7);
+        assert_eq!(c.f64_or("a", 0.0), 1.0); // int coerces to float
+        assert_eq!(c.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(ConfigFile::parse("a = 1\na = 2").is_err());
+        assert!(ConfigFile::parse("just words").is_err());
+        assert!(ConfigFile::parse("[unclosed").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let c = ConfigFile::parse("# only a comment\n\nx = 3 # trailing\n").unwrap();
+        assert_eq!(c.i64_or("x", 0), 3);
+    }
+}

@@ -1,0 +1,504 @@
+//! Fine-tuning trainer — the six-method matrix of Table 1 / Figure 6 /
+//! Table 3 on the classifier artifacts.
+//!
+//! | method                | artifact               | estimator |
+//! |-----------------------|------------------------|-----------|
+//! | Zero-shot             | clf_eval               | none      |
+//! | Vanilla LR            | clf_zo_full            | full-rank antithetic ZO (Example 2), SGD |
+//! | {Gaussian,Stiefel,Coordinate} LowRank-LR | clf_zo_lowrank | rank-r antithetic ZO (Example 3(ii)), subspace Adam + lazy update |
+//! | Vanilla IPA           | clf_ipa_grad           | full BP, Adam |
+//! | LowRank-IPA           | clf_ipa_lowrank_grad   | eq. (8) dB, subspace Adam + lazy update |
+//!
+//! The LR family never executes a backward graph: the artifacts
+//! evaluate both antithetic losses forward-only and Rust forms
+//! ĝ = (F⁺−F⁻)/(2σ)·Z·Vᵀ (the paper's memory story, Table 2).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::metrics::{MetricsLog, StepRecord};
+use super::subspace::SubspaceSet;
+use crate::data::ClassifyTask;
+use crate::model::ParamStore;
+use crate::optim::{Adam, AdamConfig, LazyAction, LazyUpdateController};
+use crate::projection::ProjectorKind;
+use crate::rng::Rng;
+use crate::runtime::{HostTensor, LoadedArtifact, Runtime};
+
+/// The Table-1 method rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinetuneMethod {
+    ZeroShot,
+    VanillaLr,
+    LowRankLr(ProjectorKind),
+    VanillaIpa,
+    LowRankIpa(ProjectorKind),
+}
+
+impl FinetuneMethod {
+    pub fn name(&self) -> String {
+        match self {
+            FinetuneMethod::ZeroShot => "zero-shot".into(),
+            FinetuneMethod::VanillaLr => "vanilla-lr".into(),
+            FinetuneMethod::LowRankLr(k) => format!("{}-lowrank-lr", k.name()),
+            FinetuneMethod::VanillaIpa => "vanilla-ipa".into(),
+            FinetuneMethod::LowRankIpa(k) => format!("{}-lowrank-ipa", k.name()),
+        }
+    }
+
+    /// The Table 1 row order.
+    pub fn table1_rows() -> Vec<FinetuneMethod> {
+        vec![
+            FinetuneMethod::ZeroShot,
+            FinetuneMethod::VanillaLr,
+            FinetuneMethod::LowRankLr(ProjectorKind::Gaussian),
+            FinetuneMethod::LowRankLr(ProjectorKind::Stiefel),
+            FinetuneMethod::LowRankLr(ProjectorKind::Coordinate),
+            FinetuneMethod::VanillaIpa,
+        ]
+    }
+}
+
+/// Fine-tuning configuration (paper §6.2.1: batch 64, lr 1e-6, lazy
+/// interval 50, rank 4 — batch and lr rescaled for the proxy model).
+#[derive(Clone, Debug)]
+pub struct FinetuneConfig {
+    pub task: String,
+    pub method: FinetuneMethod,
+    pub steps: u64,
+    /// Lazy update interval K (paper: 50).
+    pub k_interval: u64,
+    /// LR for the IPA (backprop) family.
+    pub ipa_lr: f32,
+    /// LR for the ZO/LR family.
+    pub zo_lr: f32,
+    /// ZO perturbation scale σ.
+    pub sigma: f32,
+    /// Weak-unbiasedness scale c.
+    pub c: f64,
+    pub seed: u64,
+    /// Eval set size (examples).
+    pub eval_examples: usize,
+}
+
+impl FinetuneConfig {
+    pub fn quick(task: &str, method: FinetuneMethod) -> Self {
+        FinetuneConfig {
+            task: task.to_string(),
+            method,
+            steps: 300,
+            k_interval: 50,
+            ipa_lr: 5e-4,
+            zo_lr: 2e-3,
+            sigma: 1e-2,
+            c: 1.0,
+            seed: 2026,
+            eval_examples: 256,
+        }
+    }
+}
+
+/// Result: accuracy + loss series + timing.
+pub struct FinetuneResult {
+    pub method: FinetuneMethod,
+    pub task: String,
+    pub accuracy: f64,
+    pub log: MetricsLog,
+}
+
+enum Src {
+    Param(usize),
+    B(usize),
+    V(usize),
+    /// Fresh per-step Z for slot i (ZO low-rank).
+    Z(usize),
+    /// Fresh per-step full-rank Z for full-slot i (ZO full).
+    ZFull(usize),
+    ZHead,
+    Sigma,
+    Tokens,
+    Labels,
+}
+
+/// Full-rank ZO slot (Vanilla LR).
+struct ZoFullSlot {
+    param_pos: usize,
+    m: usize,
+    n: usize,
+}
+
+pub struct FinetuneTrainer {
+    cfg: FinetuneConfig,
+    grad_art: Option<Arc<LoadedArtifact>>,
+    eval_art: Arc<LoadedArtifact>,
+    store: ParamStore,
+    subspace: Option<SubspaceSet>,
+    zo_full_slots: Vec<ZoFullSlot>,
+    /// IPA-family full slots: (name, param_pos, output_idx, adam).
+    ipa_full: Vec<(String, usize, usize, Adam)>,
+    head_pos: usize,
+    head_adam: Adam,
+    input_map: Vec<Src>,
+    rng: Rng,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    eval_batch: usize,
+}
+
+impl FinetuneTrainer {
+    pub fn new(rt: &mut Runtime, artifacts_dir: &Path, cfg: FinetuneConfig) -> Result<Self> {
+        let eval_art = rt.load("clf_eval")?;
+        let artifact_name = match cfg.method {
+            FinetuneMethod::ZeroShot => None,
+            FinetuneMethod::VanillaLr => Some("clf_zo_full"),
+            FinetuneMethod::LowRankLr(_) => Some("clf_zo_lowrank"),
+            FinetuneMethod::VanillaIpa => Some("clf_ipa_grad"),
+            FinetuneMethod::LowRankIpa(_) => Some("clf_ipa_lowrank_grad"),
+        };
+        let grad_art = artifact_name.map(|n| rt.load(n)).transpose()?;
+        let manifest_for_store = grad_art.as_ref().map(|a| &a.manifest).unwrap_or(&eval_art.manifest);
+        let store = ParamStore::load_init(artifacts_dir, "clf", manifest_for_store)?;
+        let adam_cfg = AdamConfig::default();
+
+        let kind = match cfg.method {
+            FinetuneMethod::LowRankLr(k) | FinetuneMethod::LowRankIpa(k) => Some(k),
+            _ => None,
+        };
+        let subspace = match (cfg.method, &grad_art) {
+            (FinetuneMethod::LowRankIpa(_), Some(a)) => Some(SubspaceSet::from_manifest(
+                &a.manifest,
+                &store,
+                kind.unwrap(),
+                cfg.c,
+                adam_cfg,
+            )?),
+            (FinetuneMethod::LowRankLr(_), Some(a)) => Some(SubspaceSet::from_zo_manifest(
+                &a.manifest,
+                &store,
+                kind.unwrap(),
+                cfg.c,
+                adam_cfg,
+            )?),
+            _ => None,
+        };
+
+        let head_pos = store.position("[head]").context("no head param")?;
+        let head_len = store.tensors()[head_pos].num_elements();
+
+        // Vanilla-LR full-rank Z slots / Vanilla-IPA gradient slots.
+        let mut zo_full_slots = Vec::new();
+        let mut ipa_full = Vec::new();
+        if let Some(art) = &grad_art {
+            for spec in &art.manifest.inputs {
+                if let Some(name) =
+                    spec.name.strip_prefix("zs_full[").and_then(|s| s.strip_suffix(']'))
+                {
+                    let pos = store.position(&format!("[{name}]")).context("zs_full param")?;
+                    zo_full_slots.push(ZoFullSlot {
+                        param_pos: pos,
+                        m: spec.shape[0],
+                        n: spec.shape[1],
+                    });
+                }
+            }
+            if cfg.method == FinetuneMethod::VanillaIpa {
+                for (oi, out) in art.manifest.outputs.iter().enumerate() {
+                    if let Some(name) =
+                        out.name.strip_prefix("out[1][").and_then(|s| s.strip_suffix(']'))
+                    {
+                        let pos = store
+                            .position(&format!("[{name}]"))
+                            .with_context(|| format!("ipa grad target {name}"))?;
+                        let len = store.tensors()[pos].num_elements();
+                        ipa_full.push((name.to_string(), pos, oi, Adam::new(len, adam_cfg)));
+                    }
+                }
+            }
+        }
+
+        // input routing for the grad artifact
+        let mut input_map = Vec::new();
+        if let Some(art) = &grad_art {
+            let mut param_cursor = 0usize;
+            for spec in &art.manifest.inputs {
+                let src = if spec.name.starts_with("params") {
+                    let s = Src::Param(param_cursor);
+                    param_cursor += 1;
+                    s
+                } else if spec.name.starts_with("bs[") {
+                    let sub = subspace.as_ref().unwrap();
+                    Src::B(sub.slots.iter().position(|s| s.b_input == spec.index).unwrap())
+                } else if spec.name.starts_with("zs_full[") {
+                    let idx = zo_full_slots
+                        .iter()
+                        .position(|z| {
+                            store.name(z.param_pos).ends_with(&spec.name[7..])
+                        })
+                        .context("zs_full mapping")?;
+                    Src::ZFull(idx)
+                } else if spec.name.starts_with("zs[") {
+                    let sub = subspace.as_ref().unwrap();
+                    Src::Z(sub.slots.iter().position(|s| s.b_input == spec.index).unwrap())
+                } else if spec.name.starts_with("vs[") {
+                    let sub = subspace.as_ref().unwrap();
+                    Src::V(sub.slots.iter().position(|s| s.v_input == spec.index).unwrap())
+                } else if spec.name == "z_head" {
+                    Src::ZHead
+                } else if spec.name == "sigma" {
+                    Src::Sigma
+                } else if spec.name == "tokens" {
+                    Src::Tokens
+                } else if spec.name == "labels" {
+                    Src::Labels
+                } else {
+                    bail!("unexpected input {}", spec.name);
+                };
+                input_map.push(src);
+            }
+        }
+
+        let meta_src = grad_art.as_ref().map(|a| &a.manifest).unwrap_or(&eval_art.manifest);
+        let batch = meta_src.meta_usize("batch").unwrap_or(16);
+        let seq = meta_src.meta_usize("seq_len")?;
+        let vocab = meta_src.meta_usize("vocab")?;
+        let eval_batch = eval_art.manifest.inputs.last().unwrap().shape[0];
+
+        Ok(FinetuneTrainer {
+            rng: Rng::new(cfg.seed),
+            cfg,
+            grad_art,
+            eval_art,
+            store,
+            subspace,
+            zo_full_slots,
+            ipa_full,
+            head_pos,
+            head_adam: Adam::new(head_len, adam_cfg),
+            input_map,
+            batch,
+            seq,
+            vocab,
+            eval_batch,
+        })
+    }
+
+    /// Accuracy on the task's deterministic eval set.
+    pub fn evaluate(&mut self, task: &ClassifyTask) -> Result<f64> {
+        let examples = task.eval_set(self.cfg.eval_examples);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for chunk in examples.chunks(self.eval_batch) {
+            if chunk.len() < self.eval_batch {
+                break; // artifact batch is static; drop the ragged tail
+            }
+            let mut tokens = Vec::with_capacity(self.eval_batch * self.seq);
+            let mut labels = Vec::with_capacity(self.eval_batch);
+            for ex in chunk {
+                tokens.extend(&ex.tokens);
+                labels.push(ex.label);
+            }
+            let mut inputs: Vec<HostTensor> = self.store.tensors().to_vec();
+            inputs.push(HostTensor::i32(vec![self.eval_batch, self.seq], tokens));
+            inputs.push(HostTensor::i32(vec![self.eval_batch], labels));
+            let out = self.eval_art.execute(&inputs)?;
+            correct += out[1].as_i32()?[0] as usize;
+            total += self.eval_batch;
+        }
+        if total == 0 {
+            bail!("eval set smaller than one artifact batch");
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    fn fresh_normals(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Run fine-tuning; returns accuracy and the loss series.
+    pub fn run(&mut self) -> Result<FinetuneResult> {
+        let cfg = self.cfg.clone();
+        let task = ClassifyTask::by_name(&cfg.task, self.vocab, self.seq, cfg.seed ^ 0x7A5C)
+            .with_context(|| format!("unknown task {}", cfg.task))?;
+        let mut log = MetricsLog::default();
+
+        if cfg.method == FinetuneMethod::ZeroShot {
+            let acc = self.evaluate(&task)?;
+            return Ok(FinetuneResult { method: cfg.method, task: cfg.task, accuracy: acc, log });
+        }
+
+        let controller = LazyUpdateController::new(cfg.k_interval);
+        let mut rng = self.rng.fork(1);
+
+        for step in 0..cfg.steps {
+            let t0 = Instant::now();
+            // lazy update: resample V for the low-rank methods
+            if let Some(sub) = &mut self.subspace {
+                if controller.action(step) == LazyAction::ResampleSubspace {
+                    if step > 0 && matches!(cfg.method, FinetuneMethod::LowRankIpa(_)) {
+                        sub.lift(&mut self.store)?;
+                    }
+                    // ZO keeps Θ always-lifted, so only V/B/Adam reset
+                    if matches!(cfg.method, FinetuneMethod::LowRankLr(_)) {
+                        for slot in &mut sub.slots {
+                            slot.b.iter_mut().for_each(|x| *x = 0.0);
+                        }
+                    }
+                    sub.resample(&mut rng);
+                }
+            }
+
+            let (tokens, labels) = task.train_batch(self.batch, &mut rng);
+
+            // per-step fresh randomness for the ZO paths
+            let z_head_len = self.store.tensors()[self.head_pos].num_elements();
+            let z_head: Vec<f32> = match cfg.method {
+                FinetuneMethod::VanillaLr | FinetuneMethod::LowRankLr(_) => {
+                    Self::fresh_normals(&mut rng, z_head_len)
+                }
+                _ => vec![0.0; z_head_len],
+            };
+            let zs: Vec<Vec<f32>> = match cfg.method {
+                FinetuneMethod::LowRankLr(_) => self
+                    .subspace
+                    .as_ref()
+                    .unwrap()
+                    .slots
+                    .iter()
+                    .map(|s| Self::fresh_normals(&mut rng, s.m * s.r))
+                    .collect(),
+                FinetuneMethod::VanillaLr => self
+                    .zo_full_slots
+                    .iter()
+                    .map(|s| Self::fresh_normals(&mut rng, s.m * s.n))
+                    .collect(),
+                _ => Vec::new(),
+            };
+
+            // assemble inputs
+            let art = self.grad_art.as_ref().unwrap().clone();
+            let inputs: Vec<HostTensor> = self
+                .input_map
+                .iter()
+                .map(|src| match src {
+                    Src::Param(i) => self.store.tensors()[*i].clone(),
+                    Src::B(s) | Src::V(s) | Src::Z(s) => {
+                        let sub = self.subspace.as_ref().unwrap();
+                        let slot = &sub.slots[*s];
+                        match src {
+                            Src::B(_) => HostTensor::f32(vec![slot.m, slot.r], slot.b.clone()),
+                            Src::V(_) => HostTensor::f32(vec![slot.n, slot.r], slot.v.clone()),
+                            Src::Z(_) => HostTensor::f32(vec![slot.m, slot.r], zs[*s].clone()),
+                            _ => unreachable!(),
+                        }
+                    }
+                    Src::ZFull(i) => {
+                        let z = &self.zo_full_slots[*i];
+                        HostTensor::f32(vec![z.m, z.n], zs[*i].clone())
+                    }
+                    Src::ZHead => {
+                        let shape = self.store.shape(self.head_pos).to_vec();
+                        HostTensor::f32(shape, z_head.clone())
+                    }
+                    Src::Sigma => HostTensor::scalar_f32(cfg.sigma),
+                    Src::Tokens => HostTensor::i32(vec![self.batch, self.seq], tokens.clone()),
+                    Src::Labels => HostTensor::i32(vec![self.batch], labels.clone()),
+                })
+                .collect();
+
+            let out = art.execute(&inputs)?;
+
+            // apply the method's update
+            let (loss, grad_norm) = match cfg.method {
+                FinetuneMethod::VanillaIpa => {
+                    let loss = out[0].scalar()?;
+                    let mut norm_sq = 0f64;
+                    for (_, pos, oi, adam) in &mut self.ipa_full {
+                        let g = out[*oi].as_f32()?;
+                        norm_sq += g.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+                        adam.step(self.store.f32_mut(*pos)?, g, cfg.ipa_lr);
+                    }
+                    (loss, norm_sq.sqrt() as f32)
+                }
+                FinetuneMethod::LowRankIpa(_) => {
+                    let loss = out[0].scalar()?;
+                    let sub = self.subspace.as_mut().unwrap();
+                    let mut norm_sq = 0f64;
+                    for slot in &mut sub.slots {
+                        let g = out[slot.db_output].as_f32()?;
+                        norm_sq += g.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+                        slot.adam.step(&mut slot.b, g, cfg.ipa_lr);
+                    }
+                    // head gradient is out[2]
+                    let head_out = art
+                        .manifest
+                        .outputs
+                        .iter()
+                        .position(|o| o.name == "out[2]")
+                        .context("no head grad output")?;
+                    let g = out[head_out].as_f32()?.to_vec();
+                    self.head_adam.step(self.store.f32_mut(self.head_pos)?, &g, cfg.ipa_lr);
+                    (loss, norm_sq.sqrt() as f32)
+                }
+                FinetuneMethod::LowRankLr(_) => {
+                    let (fp, fm) = (out[0].scalar()?, out[1].scalar()?);
+                    let scale = (fp - fm) / (2.0 * cfg.sigma);
+                    let sub = self.subspace.as_mut().unwrap();
+                    for (slot, z) in sub.slots.iter_mut().zip(&zs) {
+                        // ĝ_B = scale·Z ; Adam step on B, then push the
+                        // *delta* into Θ so Θ stays the lifted point.
+                        let g: Vec<f32> = z.iter().map(|x| scale * x).collect();
+                        let old_b = slot.b.clone();
+                        slot.adam.step(&mut slot.b, &g, cfg.zo_lr);
+                        let delta: Vec<f32> =
+                            slot.b.iter().zip(&old_b).map(|(n, o)| n - o).collect();
+                        let theta = self.store.f32_mut(slot.param_pos)?;
+                        crate::model::lift_into(theta, &delta, &slot.v, slot.m, slot.n, slot.r);
+                    }
+                    let gh: Vec<f32> = z_head.iter().map(|x| scale * x).collect();
+                    self.head_adam.step(self.store.f32_mut(self.head_pos)?, &gh, cfg.zo_lr);
+                    ((fp + fm) * 0.5, scale.abs())
+                }
+                FinetuneMethod::VanillaLr => {
+                    let (fp, fm) = (out[0].scalar()?, out[1].scalar()?);
+                    let scale = (fp - fm) / (2.0 * cfg.sigma);
+                    // MeZO-style SGD: Θ ← Θ − lr·scale·Z
+                    for (slot, z) in self.zo_full_slots.iter().zip(&zs) {
+                        let theta = self.store.f32_mut(slot.param_pos)?;
+                        for (t, zi) in theta.iter_mut().zip(z) {
+                            *t -= cfg.zo_lr * scale * zi;
+                        }
+                    }
+                    let head = self.store.f32_mut(self.head_pos)?;
+                    for (t, zi) in head.iter_mut().zip(&z_head) {
+                        *t -= cfg.zo_lr * scale * zi;
+                    }
+                    ((fp + fm) * 0.5, scale.abs())
+                }
+                FinetuneMethod::ZeroShot => unreachable!(),
+            };
+
+            log.push(StepRecord {
+                step,
+                loss,
+                lr: match cfg.method {
+                    FinetuneMethod::VanillaIpa | FinetuneMethod::LowRankIpa(_) => cfg.ipa_lr,
+                    _ => cfg.zo_lr,
+                },
+                grad_norm,
+                step_time_s: t0.elapsed().as_secs_f64(),
+            });
+        }
+
+        // final lift for the IPA low-rank path
+        if let (FinetuneMethod::LowRankIpa(_), Some(sub)) = (cfg.method, &mut self.subspace) {
+            sub.lift(&mut self.store)?;
+        }
+        self.store.assert_finite()?;
+        let acc = self.evaluate(&task)?;
+        Ok(FinetuneResult { method: cfg.method, task: cfg.task, accuracy: acc, log })
+    }
+}

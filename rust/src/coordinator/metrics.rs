@@ -1,0 +1,132 @@
+//! Step records + CSV emission. The figure harnesses (`exp/`) turn
+//! these logs into the paper's loss-curve series.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// One training-step record.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub lr: f32,
+    pub grad_norm: f32,
+    /// Wall-clock seconds for this step (artifact execution + L3 work).
+    pub step_time_s: f64,
+}
+
+/// Accumulated log with aggregate helpers.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub records: Vec<StepRecord>,
+    /// (step, eval metric) pairs — eval loss for LM, accuracy for CLF.
+    pub evals: Vec<(u64, f32)>,
+}
+
+impl MetricsLog {
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn push_eval(&mut self, step: u64, value: f32) {
+        self.evals.push((step, value));
+    }
+
+    pub fn final_train_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    /// Mean loss over the last `n` steps (smoother than the last point).
+    pub fn tail_mean_loss(&self, n: usize) -> Option<f32> {
+        if self.records.is_empty() {
+            return None;
+        }
+        let k = n.min(self.records.len());
+        let s: f32 = self.records[self.records.len() - k..].iter().map(|r| r.loss).sum();
+        Some(s / k as f32)
+    }
+
+    /// Mean step time, excluding the first `warmup` steps (compile and
+    /// cache effects).
+    pub fn mean_step_time(&self, warmup: usize) -> Option<f64> {
+        if self.records.len() <= warmup {
+            return None;
+        }
+        let xs = &self.records[warmup..];
+        Some(xs.iter().map(|r| r.step_time_s).sum::<f64>() / xs.len() as f64)
+    }
+
+    /// Write `step,loss,lr,grad_norm,step_time_s` CSV.
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,lr,grad_norm,step_time_s")?;
+        for r in &self.records {
+            writeln!(f, "{},{},{},{},{}", r.step, r.loss, r.lr, r.grad_norm, r.step_time_s)?;
+        }
+        Ok(())
+    }
+
+    /// Write `step,value` CSV of the eval series.
+    pub fn write_eval_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,value")?;
+        for (s, v) in &self.evals {
+            writeln!(f, "{s},{v}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: u64, loss: f32, t: f64) -> StepRecord {
+        StepRecord { step, loss, lr: 1e-3, grad_norm: 1.0, step_time_s: t }
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut log = MetricsLog::default();
+        for i in 0..10 {
+            log.push(rec(i, 10.0 - i as f32, if i == 0 { 5.0 } else { 0.1 }));
+        }
+        assert_eq!(log.final_train_loss(), Some(1.0));
+        assert!((log.tail_mean_loss(2).unwrap() - 1.5).abs() < 1e-6);
+        // warmup exclusion drops the 5.0 outlier
+        assert!((log.mean_step_time(1).unwrap() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut log = MetricsLog::default();
+        log.push(rec(0, 3.0, 0.5));
+        log.push_eval(0, 0.25);
+        let dir = std::env::temp_dir().join("lowrank_sge_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("train.csv");
+        let p2 = dir.join("eval.csv");
+        log.write_csv(&p1).unwrap();
+        log.write_eval_csv(&p2).unwrap();
+        let train = std::fs::read_to_string(&p1).unwrap();
+        assert!(train.starts_with("step,loss"));
+        assert_eq!(train.lines().count(), 2);
+        let eval = std::fs::read_to_string(&p2).unwrap();
+        assert!(eval.contains("0,0.25"));
+    }
+
+    #[test]
+    fn empty_log_returns_none() {
+        let log = MetricsLog::default();
+        assert!(log.final_train_loss().is_none());
+        assert!(log.mean_step_time(0).is_none());
+    }
+}

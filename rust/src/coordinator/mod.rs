@@ -1,0 +1,27 @@
+//! L3 coordinator: the trainers that drive the PJRT artifacts with the
+//! paper's Algorithm 1 (low-rank gradient descent with lazy update).
+//!
+//! * [`subspace`] — [`SubspaceSet`]: per-matrix (B, V, Adam) state, the
+//!   resample/lift machinery shared by all trainers.
+//! * [`pretrain`] — LowRank-IPA pretraining of the LLaMA-proxy LMs
+//!   (paper §6.2.2, Figures 7–9).
+//! * [`finetune`] — the six-method fine-tuning matrix of Table 1 /
+//!   Figure 6 (Vanilla LR / Gaussian / Stiefel / Coordinate LowRank-LR /
+//!   Vanilla IPA / LowRank-IPA) on the classifier artifacts.
+//! * [`ddp`] — the data-parallel worker simulation: N producer threads
+//!   feed sharded batches through a bounded channel (backpressure), the
+//!   leader executes and all-reduces gradients (DESIGN.md §2).
+//! * [`metrics`] — step records and CSV emission for the figure
+//!   harnesses.
+
+mod ddp;
+mod finetune;
+mod metrics;
+mod pretrain;
+mod subspace;
+
+pub use ddp::BatchProducer;
+pub use finetune::{FinetuneConfig, FinetuneMethod, FinetuneResult, FinetuneTrainer};
+pub use metrics::{MetricsLog, StepRecord};
+pub use pretrain::{PretrainConfig, PretrainResult, PretrainTrainer};
+pub use subspace::{FullSlot, MatrixSlot, SubspaceSet};

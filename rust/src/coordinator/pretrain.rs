@@ -1,0 +1,332 @@
+//! LowRank-IPA pretraining (paper §6.2.2, Figures 7–9).
+//!
+//! The trainer realizes Algorithm 1 over the `lm_grad_<scale>` artifact:
+//! every K steps it lifts Θ ← Θ + B·Vᵀ and resamples V from the
+//! configured projector law (Stiefel vs Gaussian is the Figures 7–9
+//! contrast); each inner step executes the artifact once per DDP worker
+//! shard, all-reduces the gradients, clips, and takes a subspace-Adam
+//! step on every B (plus full-rank Adam on embeddings/norms).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::ddp::{allreduce_mean, BatchProducer};
+use super::metrics::{MetricsLog, StepRecord};
+use super::subspace::{FullSlot, SubspaceSet};
+use crate::data::ZipfMarkovCorpus;
+use crate::model::ParamStore;
+use crate::optim::{clip_global_norm, Adam, AdamConfig, CosineSchedule, LazyAction, LazyUpdateController, LrSchedule};
+use crate::projection::ProjectorKind;
+use crate::rng::Rng;
+use crate::runtime::{HostTensor, LoadedArtifact, Runtime};
+
+/// Pretraining configuration (paper §6.2.2, scaled to the proxy).
+#[derive(Clone, Debug)]
+pub struct PretrainConfig {
+    /// Artifact scale: "s" | "m" | "l".
+    pub scale: String,
+    pub sampler: ProjectorKind,
+    /// Weak-unbiasedness scale c (1.0 = strong).
+    pub c: f64,
+    /// Lazy-update interval K (paper: 200; proxy default 25).
+    pub k_interval: u64,
+    pub steps: u64,
+    pub lr: f32,
+    pub warmup: u64,
+    /// Global-norm clip (paper: 1.0).
+    pub clip: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// DDP worker count (shards per step; global batch = workers × 8).
+    pub workers: usize,
+    /// Evaluate every this many steps (0 = never). Eval runs on a
+    /// lifted copy, so it is exact at any step.
+    pub eval_every: u64,
+    pub eval_batches: usize,
+}
+
+impl PretrainConfig {
+    pub fn quick(scale: &str, sampler: ProjectorKind) -> Self {
+        PretrainConfig {
+            scale: scale.to_string(),
+            sampler,
+            c: 1.0,
+            k_interval: 25,
+            steps: 100,
+            lr: 2e-3,
+            warmup: 10,
+            clip: 1.0,
+            weight_decay: 0.05,
+            seed: 2026,
+            workers: 1,
+            eval_every: 25,
+            eval_batches: 2,
+        }
+    }
+}
+
+/// Where each artifact input comes from.
+enum Src {
+    Param(usize),
+    B(usize),
+    V(usize),
+    Tokens,
+}
+
+/// Result summary.
+pub struct PretrainResult {
+    pub log: MetricsLog,
+    pub final_eval_loss: Option<f32>,
+    pub params_elements: usize,
+    pub b_elements: usize,
+}
+
+pub struct PretrainTrainer {
+    cfg: PretrainConfig,
+    grad_art: Arc<LoadedArtifact>,
+    eval_art: Arc<LoadedArtifact>,
+    store: ParamStore,
+    subspace: SubspaceSet,
+    full_slots: Vec<FullSlot>,
+    input_map: Vec<Src>,
+    rng: Rng,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+}
+
+impl PretrainTrainer {
+    pub fn new(rt: &mut Runtime, artifacts_dir: &Path, cfg: PretrainConfig) -> Result<Self> {
+        let grad_art = rt.load(&format!("lm_grad_{}", cfg.scale))?;
+        let eval_art = rt.load(&format!("lm_eval_{}", cfg.scale))?;
+        let store = ParamStore::load_init(artifacts_dir, &cfg.scale, &grad_art.manifest)?;
+        let adam_cfg = AdamConfig { weight_decay: cfg.weight_decay, ..AdamConfig::paper_pretrain() };
+        let subspace =
+            SubspaceSet::from_manifest(&grad_art.manifest, &store, cfg.sampler, cfg.c, adam_cfg)?;
+
+        // full-rank trainables: outputs out[2][<name>]
+        let mut full_slots = Vec::new();
+        for (oi, out) in grad_art.manifest.outputs.iter().enumerate() {
+            if let Some(name) = out.name.strip_prefix("out[2][").and_then(|s| s.strip_suffix(']')) {
+                let param_pos = store
+                    .position(&format!("[{name}]"))
+                    .with_context(|| format!("full trainable {name} not in store"))?;
+                let len = store.tensors()[param_pos].num_elements();
+                full_slots.push(FullSlot {
+                    name: name.to_string(),
+                    param_pos,
+                    dout: oi,
+                    adam: Adam::new(len, adam_cfg),
+                });
+            }
+        }
+        if full_slots.is_empty() {
+            bail!("no out[2][...] outputs in {}", grad_art.manifest.name);
+        }
+
+        // input routing
+        let mut input_map = Vec::with_capacity(grad_art.manifest.inputs.len());
+        let mut param_cursor = 0usize;
+        for spec in &grad_art.manifest.inputs {
+            if spec.name.starts_with("params") {
+                input_map.push(Src::Param(param_cursor));
+                param_cursor += 1;
+            } else if spec.name.starts_with("bs[") {
+                let slot = subspace
+                    .slots
+                    .iter()
+                    .position(|s| s.b_input == spec.index)
+                    .context("unmapped bs input")?;
+                input_map.push(Src::B(slot));
+            } else if spec.name.starts_with("vs[") {
+                let slot = subspace
+                    .slots
+                    .iter()
+                    .position(|s| s.v_input == spec.index)
+                    .context("unmapped vs input")?;
+                input_map.push(Src::V(slot));
+            } else if spec.name == "tokens" {
+                input_map.push(Src::Tokens);
+            } else {
+                bail!("unexpected input {} in {}", spec.name, grad_art.manifest.name);
+            }
+        }
+
+        let batch = grad_art.manifest.meta_usize("batch")?;
+        let seq_len = grad_art.manifest.meta_usize("seq_len")?;
+        let vocab = grad_art.manifest.meta_usize("vocab")?;
+        let rng = Rng::new(cfg.seed);
+        Ok(PretrainTrainer {
+            cfg,
+            grad_art,
+            eval_art,
+            store,
+            subspace,
+            full_slots,
+            input_map,
+            rng,
+            batch,
+            seq_len,
+            vocab,
+        })
+    }
+
+    fn build_inputs(&self, tokens: &[i32]) -> Vec<HostTensor> {
+        self.input_map
+            .iter()
+            .map(|src| match src {
+                Src::Param(i) => self.store.tensors()[*i].clone(),
+                Src::B(s) => {
+                    let slot = &self.subspace.slots[*s];
+                    HostTensor::f32(vec![slot.m, slot.r], slot.b.clone())
+                }
+                Src::V(s) => {
+                    let slot = &self.subspace.slots[*s];
+                    HostTensor::f32(vec![slot.n, slot.r], slot.v.clone())
+                }
+                Src::Tokens => {
+                    HostTensor::i32(vec![self.batch, self.seq_len + 1], tokens.to_vec())
+                }
+            })
+            .collect()
+    }
+
+    /// Eval loss on held-out batches, at the lifted point (copy; the
+    /// live B/V state is untouched).
+    pub fn eval_loss(&mut self, eval_sets: &[Vec<i32>]) -> Result<f32> {
+        // lifted copy of the parameters
+        let mut lifted: Vec<HostTensor> = self.store.tensors().to_vec();
+        for slot in &self.subspace.slots {
+            let theta = lifted[slot.param_pos].as_f32_mut()?;
+            crate::model::lift_into(theta, &slot.b, &slot.v, slot.m, slot.n, slot.r);
+        }
+        let mut total = 0.0f32;
+        for tokens in eval_sets {
+            let mut inputs = lifted.clone();
+            inputs.push(HostTensor::i32(vec![self.batch, self.seq_len + 1], tokens.clone()));
+            let out = self.eval_art.execute(&inputs)?;
+            total += out[0].scalar()?;
+        }
+        Ok(total / eval_sets.len() as f32)
+    }
+
+    /// Run the full training loop.
+    pub fn run(&mut self) -> Result<PretrainResult> {
+        let cfg = self.cfg.clone();
+        let controller = LazyUpdateController::new(cfg.k_interval);
+        let schedule = CosineSchedule::new(cfg.lr, cfg.warmup, cfg.steps.max(cfg.warmup + 1));
+        let corpus = ZipfMarkovCorpus::new(self.vocab, cfg.seed ^ 0xC0FFEE);
+        let producer = BatchProducer::spawn_lm(
+            corpus.clone(),
+            self.batch,
+            self.seq_len,
+            cfg.workers,
+            2 * cfg.workers,
+            &mut self.rng,
+        );
+        let eval_sets = crate::data::LmBatcher::new(
+            corpus,
+            self.batch,
+            self.seq_len,
+            self.rng.fork(0xE),
+        )
+        .eval_batches(cfg.eval_batches, cfg.seed);
+
+        let mut log = MetricsLog::default();
+        for step in 0..cfg.steps {
+            let t0 = Instant::now();
+            if controller.action(step) == LazyAction::ResampleSubspace {
+                if step > 0 {
+                    self.subspace.lift(&mut self.store)?;
+                }
+                self.subspace.resample(&mut self.rng);
+            }
+            let lr = schedule.lr(step);
+
+            // one shard per worker; all-reduce gradients
+            let shards = producer.next_step_shards();
+            let n_b = self.subspace.slots.len();
+            let n_f = self.full_slots.len();
+            let mut db_acc: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_b];
+            let mut df_acc: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_f];
+            let mut loss_acc = 0.0f32;
+            for shard in &shards {
+                let inputs = self.build_inputs(&shard.tokens);
+                let out = self.grad_art.execute(&inputs)?;
+                loss_acc += out[0].scalar()?;
+                for (si, slot) in self.subspace.slots.iter().enumerate() {
+                    db_acc[si].push(out[slot.db_output].as_f32()?.to_vec());
+                }
+                for (fi, fslot) in self.full_slots.iter().enumerate() {
+                    df_acc[fi].push(out[fslot.dout].as_f32()?.to_vec());
+                }
+            }
+            let loss = loss_acc / shards.len() as f32;
+            let mut db: Vec<Vec<f32>> = db_acc
+                .into_iter()
+                .map(|mut g| {
+                    allreduce_mean(&mut g);
+                    g.swap_remove(0)
+                })
+                .collect();
+            let mut df: Vec<Vec<f32>> = df_acc
+                .into_iter()
+                .map(|mut g| {
+                    allreduce_mean(&mut g);
+                    g.swap_remove(0)
+                })
+                .collect();
+
+            // global-norm clip across all gradients (paper: 1.0)
+            let mut views: Vec<&mut [f32]> = Vec::with_capacity(n_b + n_f);
+            views.extend(db.iter_mut().map(|g| g.as_mut_slice()));
+            views.extend(df.iter_mut().map(|g| g.as_mut_slice()));
+            let grad_norm = clip_global_norm(&mut views, cfg.clip);
+
+            // optimizer steps
+            for (slot, g) in self.subspace.slots.iter_mut().zip(&db) {
+                slot.adam.step(&mut slot.b, g, lr);
+            }
+            for (fslot, g) in self.full_slots.iter_mut().zip(&df) {
+                let p = self.store.f32_mut(fslot.param_pos)?;
+                fslot.adam.step(p, g, lr);
+            }
+
+            log.push(StepRecord {
+                step,
+                loss,
+                lr,
+                grad_norm,
+                step_time_s: t0.elapsed().as_secs_f64(),
+            });
+
+            if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+                let ev = self.eval_loss(&eval_sets)?;
+                log.push_eval(step + 1, ev);
+            }
+        }
+        // final lift so the stored Θ is the trained model
+        self.subspace.lift(&mut self.store)?;
+        self.store.assert_finite()?;
+        producer.shutdown();
+
+        let final_eval_loss = log.evals.last().map(|&(_, v)| v);
+        Ok(PretrainResult {
+            final_eval_loss,
+            params_elements: self.store.num_elements(),
+            b_elements: self.subspace.b_elements(),
+            log,
+        })
+    }
+
+    pub fn store(&self) -> &ParamStore {
+        &self.store
+    }
+
+    pub fn save_checkpoint(&self, dir: &Path) -> Result<()> {
+        self.store.save(dir)
+    }
+}

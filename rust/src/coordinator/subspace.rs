@@ -1,0 +1,211 @@
+//! Per-matrix subspace state: the (B, V) pair of Algorithm 1 plus its
+//! Adam moments, wired to the artifact input/output slots by name.
+//!
+//! The manifest naming convention (aot.py) is the contract:
+//!   inputs  `params[<name>]`, `bs[<name>]`, `vs[<name>]`, `tokens`, …
+//!   outputs `out[0]` (loss), `out[1][<name>]` (dB), `out[2][<name>]`
+//!   (full-rank gradients for embeddings/norms — LM artifacts only).
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{lift_into, ParamStore};
+use crate::optim::{Adam, AdamConfig};
+use crate::projection::{build_sampler, ProjectorKind};
+use crate::rng::Rng;
+use crate::runtime::ArtifactManifest;
+
+/// One reparameterized matrix W (m×n) with its auxiliary B (m×r) and
+/// projector V (n×r).
+pub struct MatrixSlot {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub r: usize,
+    /// Artifact input slot of B (usize::MAX if the artifact has no B
+    /// input, e.g. the ZO artifacts where B ≡ ±σZ).
+    pub b_input: usize,
+    /// Artifact input slot of V.
+    pub v_input: usize,
+    /// Artifact output slot of dB (usize::MAX for ZO artifacts).
+    pub db_output: usize,
+    /// Position of W in the [`ParamStore`].
+    pub param_pos: usize,
+    pub b: Vec<f32>,
+    pub v: Vec<f32>,
+    pub adam: Adam,
+}
+
+/// A full-rank trainable (embedding / norm) with its gradient output.
+pub struct FullSlot {
+    pub name: String,
+    pub param_pos: usize,
+    pub dout: usize,
+    pub adam: Adam,
+}
+
+/// All subspace state for one artifact.
+pub struct SubspaceSet {
+    pub slots: Vec<MatrixSlot>,
+    pub kind: ProjectorKind,
+    pub c: f64,
+    outer_iterations: u64,
+}
+
+fn bracket_name(s: &str, prefix: &str) -> Option<String> {
+    // "bs[layer0.w1]" with prefix "bs" → "layer0.w1"
+    s.strip_prefix(prefix)
+        .and_then(|rest| rest.strip_prefix('['))
+        .and_then(|rest| rest.strip_suffix(']'))
+        .map(|x| x.to_string())
+}
+
+impl SubspaceSet {
+    /// Build from a manifest that has `bs[...]`/`vs[...]` inputs (the
+    /// grad-style artifacts).
+    pub fn from_manifest(
+        manifest: &ArtifactManifest,
+        store: &ParamStore,
+        kind: ProjectorKind,
+        c: f64,
+        adam_cfg: AdamConfig,
+    ) -> Result<Self> {
+        let mut slots = Vec::new();
+        for spec in &manifest.inputs {
+            let Some(name) = bracket_name(&spec.name, "bs") else { continue };
+            let (m, r) = match spec.shape.as_slice() {
+                [m, r] => (*m, *r),
+                other => bail!("B slot {name} has shape {other:?}"),
+            };
+            let v_input = manifest
+                .inputs
+                .iter()
+                .position(|s| s.name == format!("vs[{name}]"))
+                .with_context(|| format!("no vs[{name}] input"))?;
+            let n = manifest.inputs[v_input].shape[0];
+            let db_output = manifest
+                .outputs
+                .iter()
+                .position(|s| s.name == format!("out[1][{name}]"))
+                .unwrap_or(usize::MAX);
+            let param_pos = store
+                .position(&format!("[{name}]"))
+                .with_context(|| format!("param {name} not in store"))?;
+            slots.push(MatrixSlot {
+                name,
+                m,
+                n,
+                r,
+                b_input: spec.index,
+                v_input,
+                db_output,
+                param_pos,
+                b: vec![0.0; m * r],
+                v: vec![0.0; n * r],
+                adam: Adam::new(m * r, adam_cfg),
+            });
+        }
+        if slots.is_empty() {
+            bail!("manifest {} has no bs[...] inputs", manifest.name);
+        }
+        Ok(SubspaceSet { slots, kind, c, outer_iterations: 0 })
+    }
+
+    /// Build for ZO artifacts: `zs[...]`/`vs[...]` inputs, no B input
+    /// and no dB output (the estimator is formed in Rust).
+    pub fn from_zo_manifest(
+        manifest: &ArtifactManifest,
+        store: &ParamStore,
+        kind: ProjectorKind,
+        c: f64,
+        adam_cfg: AdamConfig,
+    ) -> Result<Self> {
+        let mut slots = Vec::new();
+        for spec in &manifest.inputs {
+            let Some(name) = bracket_name(&spec.name, "zs") else { continue };
+            let (m, r) = match spec.shape.as_slice() {
+                [m, r] => (*m, *r),
+                other => bail!("Z slot {name} has shape {other:?}"),
+            };
+            let v_input = manifest
+                .inputs
+                .iter()
+                .position(|s| s.name == format!("vs[{name}]"))
+                .with_context(|| format!("no vs[{name}] input"))?;
+            let n = manifest.inputs[v_input].shape[0];
+            let param_pos = store
+                .position(&format!("[{name}]"))
+                .with_context(|| format!("param {name} not in store"))?;
+            slots.push(MatrixSlot {
+                name,
+                m,
+                n,
+                r,
+                b_input: spec.index, // the Z slot doubles as the "B" input
+                v_input,
+                db_output: usize::MAX,
+                param_pos,
+                b: vec![0.0; m * r],
+                v: vec![0.0; n * r],
+                adam: Adam::new(m * r, adam_cfg),
+            });
+        }
+        if slots.is_empty() {
+            bail!("manifest {} has no zs[...] inputs", manifest.name);
+        }
+        Ok(SubspaceSet { slots, kind, c, outer_iterations: 0 })
+    }
+
+    /// Resample every V (Algorithm 1 line 3): B ← 0, fresh V, Adam
+    /// moments reset (they live in the old subspace's coordinates).
+    pub fn resample(&mut self, rng: &mut Rng) {
+        for slot in &mut self.slots {
+            let mut sampler = build_sampler(self.kind, slot.n, slot.r, self.c, None);
+            let v = sampler.sample(rng);
+            for (dst, src) in slot.v.iter_mut().zip(&v.data) {
+                *dst = *src as f32;
+            }
+            slot.b.iter_mut().for_each(|x| *x = 0.0);
+            slot.adam.reset();
+        }
+        self.outer_iterations += 1;
+    }
+
+    /// Lift Θ ← Θ + B·Vᵀ into the store and zero B (Algorithm 1 line 8).
+    pub fn lift(&mut self, store: &mut ParamStore) -> Result<()> {
+        for slot in &mut self.slots {
+            let theta = store.f32_mut(slot.param_pos)?;
+            lift_into(theta, &slot.b, &slot.v, slot.m, slot.n, slot.r);
+            slot.b.iter_mut().for_each(|x| *x = 0.0);
+        }
+        Ok(())
+    }
+
+    pub fn outer_iterations(&self) -> u64 {
+        self.outer_iterations
+    }
+
+    /// Σ m·r — total subspace parameter count (the memory story).
+    pub fn b_elements(&self) -> usize {
+        self.slots.iter().map(|s| s.m * s.r).sum()
+    }
+
+    /// Bytes of optimizer state held by the subspace Adam instances.
+    pub fn optimizer_state_bytes(&self) -> usize {
+        self.slots.iter().map(|s| s.adam.state_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bracket_name_parses() {
+        assert_eq!(bracket_name("bs[layer0.w1]", "bs").as_deref(), Some("layer0.w1"));
+        assert_eq!(bracket_name("vs[x]", "vs").as_deref(), Some("x"));
+        assert_eq!(bracket_name("tokens", "bs"), None);
+        assert_eq!(bracket_name("bs[unclosed", "bs"), None);
+        // params[...] must not match the bs prefix
+        assert_eq!(bracket_name("params[embed]", "bs"), None);
+    }
+}

@@ -1,0 +1,86 @@
+//! LM batcher: a corpus stream packed into `(batch, seq_len+1)` i32
+//! next-token batches (inputs = [:, :-1], targets = [:, 1:] inside the
+//! artifact). Train/eval splits come from disjoint RNG streams.
+
+use crate::rng::Rng;
+
+use super::corpus::ZipfMarkovCorpus;
+
+pub struct LmBatcher {
+    corpus: ZipfMarkovCorpus,
+    batch: usize,
+    seq_len: usize,
+    rng: Rng,
+}
+
+impl LmBatcher {
+    pub fn new(corpus: ZipfMarkovCorpus, batch: usize, seq_len: usize, rng: Rng) -> Self {
+        LmBatcher { corpus, batch, seq_len, rng }
+    }
+
+    pub fn batch_shape(&self) -> (usize, usize) {
+        (self.batch, self.seq_len + 1)
+    }
+
+    /// Next `(batch, seq_len+1)` flat row-major token batch.
+    pub fn next_batch(&mut self) -> Vec<i32> {
+        let width = self.seq_len + 1;
+        let mut out = Vec::with_capacity(self.batch * width);
+        for _ in 0..self.batch {
+            out.extend(self.corpus.stream(width, &mut self.rng));
+        }
+        out
+    }
+
+    /// A held-out eval set of `n_batches` fixed batches (deterministic:
+    /// independent of how many train batches were drawn).
+    pub fn eval_batches(&self, n_batches: usize, eval_seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(eval_seed ^ 0x5EED_EA10_u64);
+        let width = self.seq_len + 1;
+        (0..n_batches)
+            .map(|_| {
+                let mut out = Vec::with_capacity(self.batch * width);
+                for _ in 0..self.batch {
+                    out.extend(self.corpus.stream(width, &mut rng));
+                }
+                out
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> LmBatcher {
+        LmBatcher::new(ZipfMarkovCorpus::new(128, 1), 4, 16, Rng::new(7))
+    }
+
+    #[test]
+    fn batch_has_right_shape_and_range() {
+        let mut b = mk();
+        let batch = b.next_batch();
+        assert_eq!(batch.len(), 4 * 17);
+        assert!(batch.iter().all(|&t| (0..128).contains(&t)));
+    }
+
+    #[test]
+    fn successive_batches_differ() {
+        let mut b = mk();
+        let b1 = b.next_batch();
+        let b2 = b.next_batch();
+        assert_ne!(b1, b2);
+    }
+
+    #[test]
+    fn eval_batches_deterministic_and_disjoint_from_train() {
+        let b = mk();
+        let e1 = b.eval_batches(3, 42);
+        let e2 = b.eval_batches(3, 42);
+        assert_eq!(e1, e2);
+        let mut b2 = mk();
+        let train = b2.next_batch();
+        assert_ne!(e1[0], train);
+    }
+}

@@ -1,0 +1,183 @@
+//! Zipf–Markov synthetic corpus.
+//!
+//! Token t+1 is drawn from a mixture: with probability `bigram_weight` a
+//! deterministic pseudo-random bigram table of the previous token (top-B
+//! successors, Zipf-weighted), otherwise the global Zipf unigram. The
+//! mixture gives the LM a learnable signal — the loss curve shows the
+//! paper-typical fast-drop-then-grind shape — while the Zipf unigram
+//! keeps the marginal distribution realistic (s ≈ 1.1, like natural
+//! text).
+
+use crate::rng::{Rng, Zipf};
+
+#[derive(Clone)]
+pub struct ZipfMarkovCorpus {
+    vocab: usize,
+    unigram: Zipf,
+    successor_pick: Zipf,
+    bigram_weight: f64,
+    branch: usize,
+    table_seed: u64,
+}
+
+impl ZipfMarkovCorpus {
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        ZipfMarkovCorpus {
+            vocab,
+            unigram: Zipf::new(vocab, 1.1),
+            successor_pick: Zipf::new(32, 1.3),
+            bigram_weight: 0.75,
+            branch: 32,
+            table_seed: seed,
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// The b-th preferred successor of token `prev` — a fixed
+    /// pseudo-random function so every stream sees the same bigram
+    /// structure (that is what makes it learnable).
+    fn successor(&self, prev: usize, b: usize) -> usize {
+        let mut h = self
+            .table_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(prev as u64)
+            .wrapping_mul(0xD1B54A32D192ED03)
+            .wrapping_add(b as u64);
+        h ^= h >> 31;
+        h = h.wrapping_mul(0xBF58476D1CE4E5B9);
+        h ^= h >> 29;
+        (h % self.vocab as u64) as usize
+    }
+
+    /// Next token given the previous one.
+    pub fn next_token(&self, prev: usize, rng: &mut Rng) -> usize {
+        if rng.uniform() < self.bigram_weight {
+            let b = self.successor_pick.sample(rng).min(self.branch - 1);
+            self.successor(prev, b)
+        } else {
+            self.unigram.sample(rng)
+        }
+    }
+
+    /// Generate a stream of `len` tokens.
+    pub fn stream(&self, len: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(len);
+        let mut prev = self.unigram.sample(rng);
+        out.push(prev as i32);
+        for _ in 1..len {
+            prev = self.next_token(prev, rng);
+            out.push(prev as i32);
+        }
+        out
+    }
+
+    /// Render token ids as synthetic "words" (for the text→tokenizer
+    /// round-trip): id → base-26 word of 3–7 letters, deterministic.
+    pub fn render_word(id: usize) -> String {
+        let mut s = String::new();
+        let mut x = id as u64 * 2654435761 % 8031810176; // 26^7
+        let len = 3 + (id % 5);
+        for _ in 0..len {
+            s.push((b'a' + (x % 26) as u8) as char);
+            x /= 26;
+        }
+        s
+    }
+
+    /// Render a token stream as text.
+    pub fn render_text(tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| Self::render_word(t as usize))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_tokens_in_vocab() {
+        let c = ZipfMarkovCorpus::new(512, 1);
+        let mut rng = Rng::new(2);
+        for t in c.stream(5000, &mut rng) {
+            assert!((0..512).contains(&(t as usize)));
+        }
+    }
+
+    #[test]
+    fn unigram_marginal_is_skewed() {
+        let c = ZipfMarkovCorpus::new(256, 3);
+        let mut rng = Rng::new(4);
+        let stream = c.stream(60_000, &mut rng);
+        let mut counts = vec![0usize; 256];
+        for &t in &stream {
+            counts[t as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // top-16 tokens should hold a large share (Zipf + concentrated bigrams)
+        let top16: usize = counts[..16].iter().sum();
+        assert!(
+            top16 as f64 / stream.len() as f64 > 0.2,
+            "marginal not skewed: top16 share {}",
+            top16 as f64 / stream.len() as f64
+        );
+    }
+
+    #[test]
+    fn bigram_structure_is_learnable() {
+        // empirical bigram entropy must be well below unigram entropy
+        let c = ZipfMarkovCorpus::new(128, 5);
+        let mut rng = Rng::new(6);
+        let stream = c.stream(200_000, &mut rng);
+        let mut uni = vec![0f64; 128];
+        let mut big = std::collections::HashMap::<(i32, i32), f64>::new();
+        let mut prev_counts = vec![0f64; 128];
+        for w in stream.windows(2) {
+            uni[w[1] as usize] += 1.0;
+            *big.entry((w[0], w[1])).or_default() += 1.0;
+            prev_counts[w[0] as usize] += 1.0;
+        }
+        let n = (stream.len() - 1) as f64;
+        let h_uni: f64 = uni
+            .iter()
+            .filter(|&&c| c > 0.0)
+            .map(|&c| -(c / n) * (c / n).ln())
+            .sum();
+        let h_big: f64 = big
+            .iter()
+            .map(|(&(p, _), &c)| {
+                let cond = c / prev_counts[p as usize];
+                -(c / n) * cond.ln()
+            })
+            .sum();
+        assert!(
+            h_big < 0.8 * h_uni,
+            "conditional entropy {h_big:.3} not below unigram {h_uni:.3}"
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = ZipfMarkovCorpus::new(64, 7);
+        let s1 = c.stream(100, &mut Rng::new(9));
+        let s2 = c.stream(100, &mut Rng::new(9));
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn words_deterministic_and_lowercase() {
+        let w1 = ZipfMarkovCorpus::render_word(42);
+        let w2 = ZipfMarkovCorpus::render_word(42);
+        assert_eq!(w1, w2);
+        assert!(w1.chars().all(|c| c.is_ascii_lowercase()));
+        assert!(w1.len() >= 3 && w1.len() <= 7);
+        let text = ZipfMarkovCorpus::render_text(&[1, 2, 3]);
+        assert_eq!(text.split(' ').count(), 3);
+    }
+}

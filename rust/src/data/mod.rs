@@ -1,0 +1,23 @@
+//! Synthetic data pipeline (the OpenWebText/T5-tokenizer substitution —
+//! DESIGN.md §2).
+//!
+//! * [`corpus`] — a Zipf–Markov token-stream generator with realistic
+//!   unigram skew and learnable bigram structure, plus a synthetic-word
+//!   text renderer.
+//! * [`tokenizer`] — a deterministic word-hash tokenizer (text → ids)
+//!   closing the text round-trip.
+//! * [`batcher`] — packs the stream into `(batch, seq+1)` next-token
+//!   prediction batches for the LM artifacts.
+//! * [`classify`] — the six synthetic classification tasks standing in
+//!   for SST-2 / SST-5 / SNLI / MNLI / RTE / TREC (same class counts,
+//!   graded difficulty).
+
+mod batcher;
+mod classify;
+mod corpus;
+mod tokenizer;
+
+pub use batcher::LmBatcher;
+pub use classify::{ClassifyTask, Example, TaskSpec, TASKS};
+pub use corpus::ZipfMarkovCorpus;
+pub use tokenizer::WordHashTokenizer;

@@ -1,0 +1,116 @@
+//! Word-hash tokenizer: whitespace-split words → FNV-1a hash → token id.
+//!
+//! Stands in for the paper's T5-base tokenizer (DESIGN.md §2): the
+//! properties the experiments rely on are (a) deterministic text→id
+//! mapping and (b) a fixed vocabulary size matching the model's
+//! embedding table — both hold here. Case-folding and punctuation
+//! stripping give it the usual normalizing behavior.
+
+#[derive(Clone, Copy, Debug)]
+pub struct WordHashTokenizer {
+    vocab: usize,
+}
+
+impl WordHashTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab > 1);
+        WordHashTokenizer { vocab }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn hash_word(word: &str) -> u64 {
+        // FNV-1a
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in word.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    pub fn token(&self, word: &str) -> i32 {
+        let norm: String = word
+            .chars()
+            .filter(|c| c.is_alphanumeric())
+            .flat_map(|c| c.to_lowercase())
+            .collect();
+        if norm.is_empty() {
+            return 0;
+        }
+        (Self::hash_word(&norm) % self.vocab as u64) as i32
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace().map(|w| self.token(w)).collect()
+    }
+
+    /// Encode and pad/truncate to a fixed length (padding with token 0).
+    pub fn encode_fixed(&self, text: &str, len: usize) -> Vec<i32> {
+        let mut ids = self.encode(text);
+        ids.truncate(len);
+        while ids.len() < len {
+            ids.push(0);
+        }
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let t = WordHashTokenizer::new(1000);
+        let a = t.encode("the quick brown fox");
+        let b = t.encode("the quick brown fox");
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&id| (0..1000).contains(&id)));
+    }
+
+    #[test]
+    fn normalization_folds_case_and_punct() {
+        let t = WordHashTokenizer::new(4096);
+        assert_eq!(t.token("Hello"), t.token("hello"));
+        assert_eq!(t.token("hello!"), t.token("hello"));
+        assert_eq!(t.token("he,llo"), t.token("hello"));
+    }
+
+    #[test]
+    fn distinct_words_mostly_distinct_ids() {
+        let t = WordHashTokenizer::new(4096);
+        let ids: std::collections::HashSet<i32> =
+            (0..1000).map(|i| t.token(&format!("word{i}"))).collect();
+        assert!(ids.len() > 850, "too many collisions: {} unique", ids.len());
+    }
+
+    #[test]
+    fn fixed_length_pads_and_truncates() {
+        let t = WordHashTokenizer::new(100);
+        let short = t.encode_fixed("a b", 5);
+        assert_eq!(short.len(), 5);
+        assert_eq!(&short[2..], &[0, 0, 0]);
+        let long = t.encode_fixed("a b c d e f g", 3);
+        assert_eq!(long.len(), 3);
+    }
+
+    #[test]
+    fn corpus_text_roundtrip_consistent() {
+        // rendering corpus tokens to text and re-tokenizing yields a
+        // deterministic id stream (not necessarily the same ids — the
+        // tokenizer defines its own id space — but stable).
+        use crate::data::corpus::ZipfMarkovCorpus;
+        let c = ZipfMarkovCorpus::new(256, 11);
+        let mut rng = crate::rng::Rng::new(12);
+        let toks = c.stream(50, &mut rng);
+        let text = ZipfMarkovCorpus::render_text(&toks);
+        let t = WordHashTokenizer::new(256);
+        let ids1 = t.encode(&text);
+        let ids2 = t.encode(&text);
+        assert_eq!(ids1.len(), 50);
+        assert_eq!(ids1, ids2);
+    }
+}

@@ -1,0 +1,45 @@
+//! Stochastic gradient estimators and their MSE theory (paper §3–§5)
+//! plus the §6.1 toy experiment.
+//!
+//! * [`theory`] — every closed form the paper derives: the Proposition 1
+//!   MSE decomposition, the Theorem 2 floor `n²c²/r`, the exact MSE of
+//!   isotropic-optimal and Gaussian projectors, Remark 1's baselines,
+//!   Theorem 3's Φ_min, Proposition 4's full-rank-matching condition and
+//!   the eq. (14) uniform bound.
+//! * [`toy`] — the quadratic matrix-regression problem (19) with its
+//!   closed-form gradient, IPA and two-point-LR estimators, and their
+//!   low-rank projections.
+//! * [`mse`] — the Monte-Carlo harness that regenerates Figures 2–5
+//!   (MSE versus sample size for each projector law and each c).
+
+pub mod mse;
+pub mod theory;
+pub mod toy;
+
+/// Which classical gradient-estimation family (paper §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Infinitesimal perturbation analysis — pathwise gradients
+    /// (backpropagation in NN training).
+    Ipa,
+    /// Likelihood-ratio / score-function — here the antithetic two-point
+    /// ZO instance of Example 2.
+    Lr,
+}
+
+impl Family {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Ipa => "ipa",
+            Family::Lr => "lr",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "ipa" => Some(Family::Ipa),
+            "lr" | "zo" => Some(Family::Lr),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Monte-Carlo MSE harness — regenerates the paper's Figures 2–5.
+//!
+//! For a fixed evaluation point W, the harness draws i.i.d. one-shot
+//! estimates ĝ₁, ĝ₂, …, maintains the running mean ḡ_N, and records
+//! ‖ḡ_N − g(W)‖_F² at each requested sample size N, averaged over
+//! independent replications. With weak unbiasedness (c < 1) the curves
+//! plateau at the bias floor (1−c)²‖g‖_F² as N grows — the
+//! bias–variance trade-off the paper's §6.1 figures display.
+
+use super::toy::{project_lift, ToyProblem};
+use super::Family;
+use crate::linalg::Mat;
+use crate::projection::{build_sampler, ProjectionSampler, ProjectorKind};
+use crate::rng::Rng;
+
+/// What estimator to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EstimatorSpec {
+    /// Classical full-rank IPA/LR (Remark 1's first baseline).
+    FullRank,
+    /// Low-rank estimator with the given projector law.
+    LowRank(ProjectorKind),
+}
+
+impl EstimatorSpec {
+    pub fn label(&self) -> String {
+        match self {
+            EstimatorSpec::FullRank => "full-rank".to_string(),
+            EstimatorSpec::LowRank(k) => format!("lowrank-{}", k.name()),
+        }
+    }
+}
+
+/// Configuration of one MSE-versus-samples curve.
+#[derive(Clone, Debug)]
+pub struct MseCurveConfig {
+    pub family: Family,
+    pub spec: EstimatorSpec,
+    /// Weak-unbiasedness scale c (Definition 1).
+    pub c: f64,
+    /// Projection rank r.
+    pub r: usize,
+    /// Sample sizes N at which the running-mean MSE is recorded.
+    pub sample_sizes: Vec<usize>,
+    /// Independent replications to average over.
+    pub reps: usize,
+    pub seed: u64,
+    /// ZO perturbation scale σ for the LR family.
+    pub zo_sigma: f64,
+    /// Warm-up draws for the instance-dependent Σ estimate.
+    pub warmup: usize,
+}
+
+impl MseCurveConfig {
+    pub fn default_for(family: Family, spec: EstimatorSpec, c: f64) -> Self {
+        MseCurveConfig {
+            family,
+            spec,
+            c,
+            r: 4,
+            sample_sizes: vec![10, 20, 50, 100, 200, 500],
+            reps: 40,
+            seed: 2026,
+            zo_sigma: 1e-2,
+            warmup: 200,
+        }
+    }
+}
+
+/// One computed curve.
+#[derive(Clone, Debug)]
+pub struct MseCurve {
+    pub label: String,
+    pub c: f64,
+    /// (N, averaged MSE of the N-sample mean estimator).
+    pub points: Vec<(usize, f64)>,
+}
+
+/// Compute an MSE curve on the toy problem at evaluation point `w`.
+pub fn mse_curve(problem: &ToyProblem, w: &Mat, cfg: &MseCurveConfig) -> MseCurve {
+    let g = problem.true_gradient(w);
+    let scaled_truth = g.clone(); // compare against the *true* gradient,
+                                  // so weak unbiasedness shows as bias.
+    let n_max = *cfg.sample_sizes.iter().max().expect("empty sample_sizes");
+    let mut rng = Rng::new(cfg.seed);
+
+    // Dependent sampler needs Σ = Σ_ξ + Σ_Θ estimated once (warm-up).
+    let mut sampler: Option<Box<dyn ProjectionSampler + Send>> = match cfg.spec {
+        EstimatorSpec::LowRank(kind) => {
+            let sigma = if kind == ProjectorKind::Dependent {
+                Some(problem.sigma_total(w, &mut rng, cfg.warmup, cfg.family, cfg.zo_sigma))
+            } else {
+                None
+            };
+            Some(build_sampler(kind, problem.n, cfg.r, cfg.c, sigma.as_ref()))
+        }
+        EstimatorSpec::FullRank => None,
+    };
+
+    let mut sums = vec![0.0f64; cfg.sample_sizes.len()];
+    for rep in 0..cfg.reps {
+        let mut rep_rng = rng.fork(rep as u64);
+        let mut mean = Mat::zeros(problem.m, problem.n);
+        let mut next_ckpt = 0usize;
+        for t in 1..=n_max {
+            let a = problem.sample_a(&mut rep_rng);
+            let est = match (&mut sampler, cfg.family) {
+                (None, Family::Ipa) => problem.ipa_estimate(w, &a),
+                (None, Family::Lr) => problem.lr_estimate(w, &a, &mut rep_rng, cfg.zo_sigma),
+                (Some(s), Family::Ipa) => {
+                    let v = s.sample(&mut rep_rng);
+                    let ghat = problem.ipa_estimate(w, &a);
+                    project_lift(&ghat, &v)
+                }
+                (Some(s), Family::Lr) => {
+                    let v = s.sample(&mut rep_rng);
+                    problem.lowrank_lr_estimate(w, &a, &mut rep_rng, cfg.zo_sigma, &v)
+                }
+            };
+            // running mean: ḡ_t = ḡ_{t−1} + (ĝ_t − ḡ_{t−1})/t
+            let inv_t = 1.0 / t as f64;
+            for (m_v, e_v) in mean.data.iter_mut().zip(&est.data) {
+                *m_v += (e_v - *m_v) * inv_t;
+            }
+            while next_ckpt < cfg.sample_sizes.len() && cfg.sample_sizes[next_ckpt] == t {
+                sums[next_ckpt] += mean.sub(&scaled_truth).fro_norm_sq();
+                next_ckpt += 1;
+            }
+        }
+    }
+
+    let points = cfg
+        .sample_sizes
+        .iter()
+        .zip(&sums)
+        .map(|(&n, &s)| (n, s / cfg.reps as f64))
+        .collect();
+    MseCurve { label: format!("{}-{}", cfg.spec.label(), cfg.family.name()), c: cfg.c, points }
+}
+
+/// One-shot (N = 1) MSE of an estimator — used by tests to compare
+/// against the §5 closed forms.
+pub fn one_shot_mse(problem: &ToyProblem, w: &Mat, cfg: &MseCurveConfig, draws: usize) -> f64 {
+    let mut c2 = cfg.clone();
+    c2.sample_sizes = vec![1];
+    c2.reps = draws;
+    mse_curve(problem, w, &c2).points[0].1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(family: Family, spec: EstimatorSpec, c: f64) -> MseCurveConfig {
+        MseCurveConfig {
+            family,
+            spec,
+            c,
+            r: 4,
+            sample_sizes: vec![5, 25, 125],
+            reps: 24,
+            seed: 99,
+            zo_sigma: 1e-2,
+            warmup: 120,
+        }
+    }
+
+    #[test]
+    fn unbiased_curves_decay_roughly_as_one_over_n() {
+        let p = ToyProblem::small(31);
+        let w = p.eval_point(32);
+        let cfg = small_cfg(Family::Ipa, EstimatorSpec::FullRank, 1.0);
+        let curve = mse_curve(&p, &w, &cfg);
+        let (n0, m0) = curve.points[0];
+        let (n2, m2) = curve.points[2];
+        let ratio = m0 / m2;
+        let expect = n2 as f64 / n0 as f64; // 25×
+        assert!(
+            ratio > expect * 0.4 && ratio < expect * 2.5,
+            "MSE decay ratio {ratio}, expected ≈ {expect}"
+        );
+    }
+
+    #[test]
+    fn weakly_biased_curve_plateaus_at_bias_floor() {
+        let p = ToyProblem::small(33);
+        let w = p.eval_point(34);
+        let c = 0.3;
+        let cfg = small_cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Stiefel), c);
+        let curve = mse_curve(&p, &w, &cfg);
+        let g = p.true_gradient(&w);
+        let floor = (1.0 - c) * (1.0 - c) * g.fro_norm_sq();
+        let last = curve.points.last().unwrap().1;
+        assert!(
+            last > 0.6 * floor,
+            "biased curve fell below its bias floor: {last} < {floor}"
+        );
+        // and the floor dominates the tail (variance mostly averaged out)
+        assert!(last < 3.0 * floor, "tail {last} ≫ floor {floor}");
+    }
+
+    #[test]
+    fn stiefel_one_shot_mse_matches_closed_form() {
+        // exact check of Prop 1 + Thm 2 via simulation (IPA family)
+        let p = ToyProblem::small(35);
+        let w = p.eval_point(36);
+        let mut rng = Rng::new(37);
+        let sxi = p.sigma_xi_empirical(&w, &mut rng, 3000, Family::Ipa, 1e-2);
+        let sth = p.sigma_theta(&w);
+        let (n, r, c) = (p.n, 4usize, 1.0);
+        let predicted = crate::estimator::theory::mse_isotropic_exact(
+            n, r, c, sxi.trace(), sth.trace(),
+        );
+        let cfg = small_cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Stiefel), c);
+        let measured = one_shot_mse(&p, &w, &cfg, 3000);
+        let rel = (measured - predicted).abs() / predicted;
+        assert!(rel < 0.15, "one-shot MSE {measured} vs closed form {predicted} (rel {rel})");
+    }
+
+    #[test]
+    fn gaussian_one_shot_mse_exceeds_stiefel() {
+        // the Fig 2/3 ordering at matched (c, r): Gaussian > Stiefel.
+        let p = ToyProblem::small(39);
+        let w = p.eval_point(40);
+        let cfg_g = small_cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Gaussian), 1.0);
+        let cfg_s = small_cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Stiefel), 1.0);
+        let mse_g = one_shot_mse(&p, &w, &cfg_g, 2500);
+        let mse_s = one_shot_mse(&p, &w, &cfg_s, 2500);
+        assert!(
+            mse_g > 1.1 * mse_s,
+            "Gaussian one-shot MSE {mse_g} should exceed Stiefel {mse_s}"
+        );
+    }
+
+    #[test]
+    fn dependent_one_shot_mse_below_stiefel() {
+        // the Fig 4/5 ordering: Dependent < independent (Stiefel).
+        let p = ToyProblem::small(41);
+        let w = p.eval_point(42);
+        let cfg_d = small_cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Dependent), 1.0);
+        let cfg_s = small_cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Stiefel), 1.0);
+        let mse_d = one_shot_mse(&p, &w, &cfg_d, 2500);
+        let mse_s = one_shot_mse(&p, &w, &cfg_s, 2500);
+        assert!(
+            mse_d < mse_s,
+            "Dependent one-shot MSE {mse_d} should be below Stiefel {mse_s}"
+        );
+    }
+}

@@ -1,0 +1,257 @@
+//! Closed-form MSE theory from §5 of the paper.
+//!
+//! Every formula the paper states is implemented here and cross-checked
+//! against Monte-Carlo simulation in the test suites of [`super::toy`]
+//! and `rust/tests/theory_vs_simulation.rs`. All quantities are for the
+//! low-rank estimator ĝ = ĝ_classical · P, P = VVᵀ, E[P] = c·I_n.
+
+use crate::linalg::{trace_product, Mat};
+use crate::sampling::optimal_inclusion;
+
+/// Proposition 1 decomposition of the MSE into its three parts:
+/// tr(Σ_ξ E[P²]) + tr(Σ_Θ E[P² − c²I]) + (1−c)²·tr Σ_Θ.
+#[derive(Clone, Copy, Debug)]
+pub struct MseBreakdown {
+    /// tr(Σ_ξ E[P²]) — intrinsic IPA/LR variance through the projector.
+    pub classical_variance: f64,
+    /// tr(Σ_Θ E[P² − c²I]) — variance induced by the random projection.
+    pub projection_variance: f64,
+    /// (1−c)²·tr Σ_Θ — scalar bias from weak unbiasedness.
+    pub scalar_bias: f64,
+}
+
+impl MseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.classical_variance + self.projection_variance + self.scalar_bias
+    }
+}
+
+/// Proposition 1 evaluated with an explicit second-moment matrix E[P²].
+pub fn mse_decomposition(
+    sigma_xi: &Mat,
+    sigma_theta: &Mat,
+    e_p2: &Mat,
+    c: f64,
+) -> MseBreakdown {
+    let n = sigma_xi.rows;
+    assert_eq!(sigma_xi.rows, sigma_xi.cols);
+    assert_eq!(sigma_theta.rows, n);
+    assert_eq!(e_p2.rows, n);
+    let classical_variance = trace_product(sigma_xi, e_p2);
+    let shifted = {
+        let mut m = e_p2.clone();
+        for i in 0..n {
+            let v = m.get(i, i) - c * c;
+            m.set(i, i, v);
+        }
+        m
+    };
+    let projection_variance = trace_product(sigma_theta, &shifted);
+    let scalar_bias = (1.0 - c) * (1.0 - c) * sigma_theta.trace();
+    MseBreakdown { classical_variance, projection_variance, scalar_bias }
+}
+
+/// MSE of the full-rank classical estimator (Remark 1, first baseline):
+/// MSE_F = tr(Σ_ξ).
+pub fn mse_full_rank(tr_sigma_xi: f64) -> f64 {
+    tr_sigma_xi
+}
+
+/// Theorem 2: the smallest achievable tr(E[P²]) over the admissible
+/// class — n²c²/r.
+pub fn thm2_floor(n: usize, r: usize, c: f64) -> f64 {
+    (n * n) as f64 * c * c / r as f64
+}
+
+/// Exact MSE of an **isotropic-optimal** projector (Stiefel/coordinate,
+/// Algorithms 2–3). These laws satisfy P² = (cn/r)·P almost surely, so
+/// E[P²] = (c²n/r)·I exactly and
+///
+///   MSE = (c²n/r)·tr Σ_ξ + (c²n/r − 2c + 1)·tr Σ_Θ.
+pub fn mse_isotropic_exact(n: usize, r: usize, c: f64, tr_sxi: f64, tr_sth: f64) -> f64 {
+    let k = c * c * n as f64 / r as f64;
+    k * tr_sxi + (k - 2.0 * c + 1.0) * tr_sth
+}
+
+/// Exact MSE of the **Gaussian** projector with V_ij ~ N(0, c/r)
+/// (Remark 1, second baseline): E[P²] = c²(n+r+1)/r · I (Wishart second
+/// moment), hence
+///
+///   MSE_G = c²(n+r+1)/r·tr Σ_ξ + (c²(n+r+1)/r − 2c + 1)·tr Σ_Θ,
+///
+/// which at c = 1 reduces to the paper's
+/// MSE_G = ((n+r+1)/r)·tr Σ_ξ + ((n+1)/r)·tr Σ_Θ.
+pub fn mse_gaussian_exact(n: usize, r: usize, c: f64, tr_sxi: f64, tr_sth: f64) -> f64 {
+    let k = c * c * (n + r + 1) as f64 / r as f64;
+    k * tr_sxi + (k - 2.0 * c + 1.0) * tr_sth
+}
+
+/// Equation (14): the uniform (spectral-norm) upper bound on the MSE of
+/// the isotropic-optimal estimator:
+/// (c²n/r)‖Σ_ξ‖₂ + (1 − 2c + c²n/r)‖Σ_Θ‖₂.
+pub fn mse_upper_bound_eq14(
+    n: usize,
+    r: usize,
+    c: f64,
+    spec_sxi: f64,
+    spec_sth: f64,
+) -> f64 {
+    let k = c * c * n as f64 / r as f64;
+    k * spec_sxi + (1.0 - 2.0 * c + k) * spec_sth
+}
+
+/// Theorem 3: Φ_min = c²·[Σ_{sat} σ_i + (Σ_{unsat} √σ_i)²/(r−t)], the
+/// optimal value of tr(Σ E[P²]) over the admissible class, computed via
+/// the water-filling solver.
+pub fn phi_min(sigma_spectrum: &[f64], r: usize, c: f64) -> f64 {
+    let sol = optimal_inclusion(sigma_spectrum, r, crate::sampling::DEFAULT_SIGMA_FLOOR);
+    c * c * sol.objective
+}
+
+/// Minimal MSE under the optimal instance-dependent projector (§5.2):
+/// MSE_min = Φ_min + (1 − 2c)·tr Σ_Θ, where the spectrum is that of
+/// Σ = Σ_ξ + Σ_Θ.
+pub fn mse_dependent_min(
+    sigma_spectrum: &[f64],
+    r: usize,
+    c: f64,
+    tr_sigma_theta: f64,
+) -> f64 {
+    phi_min(sigma_spectrum, r, c) + (1.0 - 2.0 * c) * tr_sigma_theta
+}
+
+/// Proposition 4 predicate: with c = 1 and rank(Σ) ≤ r the dependent
+/// optimum matches the full-rank MSE: MSE_min = tr(Σ_ξ).
+pub fn prop4_matches_full_rank(sigma_spectrum: &[f64], r: usize, rank_tol: f64) -> bool {
+    let smax = sigma_spectrum.iter().cloned().fold(0.0, f64::max);
+    let rank = sigma_spectrum.iter().filter(|&&s| s > rank_tol * smax).count();
+    rank <= r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_reduces_to_remark1_at_c1() {
+        let (n, r) = (100, 4);
+        let (txi, tth) = (3.0, 7.0);
+        let got = mse_gaussian_exact(n, r, 1.0, txi, tth);
+        let want = (n + r + 1) as f64 / r as f64 * txi + (n + 1) as f64 / r as f64 * tth;
+        assert!((got - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn isotropic_beats_gaussian_everywhere() {
+        // Theorem 2 ⇒ for every (n, r, c) the isotropic-optimal MSE is
+        // below the Gaussian MSE (strictly, since n+r+1 > n for r ≥ 1).
+        for &(n, r) in &[(50, 2), (100, 4), (64, 16), (10, 9)] {
+            for &c in &[0.1, 0.5, 1.0] {
+                let iso = mse_isotropic_exact(n, r, c, 1.0, 1.0);
+                let gau = mse_gaussian_exact(n, r, c, 1.0, 1.0);
+                assert!(iso < gau, "iso {iso} !< gauss {gau} at n={n} r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn remark1_small_c_limit() {
+        // c = r/n: MSE = (r/n)trΣ_ξ + (1 − 2r/n + r/n)trΣ_Θ
+        //             = (r/n)trΣ_ξ + (1 − r/n)trΣ_Θ  (trace version)
+        let (n, r) = (100usize, 4usize);
+        let c = r as f64 / n as f64;
+        let got = mse_isotropic_exact(n, r, c, 1.0, 1.0);
+        let want = c * 1.0 + (1.0 - c) * 1.0;
+        assert!((got - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strong_unbiased_isotropic_formula() {
+        // c = 1: MSE = (n/r)trΣ_ξ + (n/r − 1)trΣ_Θ
+        let (n, r) = (60usize, 5usize);
+        let got = mse_isotropic_exact(n, r, 1.0, 2.0, 3.0);
+        let want = 12.0 * 2.0 + 11.0 * 3.0;
+        assert!((got - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decomposition_consistency_with_isotropic_closed_form() {
+        // E[P²] = (c²n/r)I plugged into Prop 1 must equal the closed form.
+        let (n, r, c) = (20usize, 4usize, 0.6);
+        let sxi = Mat::from_fn(n, n, |i, j| if i == j { 0.5 + i as f64 * 0.01 } else { 0.0 });
+        let sth = Mat::from_fn(n, n, |i, j| if i == j { 1.0 / (1 + i) as f64 } else { 0.0 });
+        let e_p2 = Mat::eye(n).scaled(c * c * n as f64 / r as f64);
+        let d = mse_decomposition(&sxi, &sth, &e_p2, c);
+        let closed = mse_isotropic_exact(n, r, c, sxi.trace(), sth.trace());
+        assert!((d.total() - closed).abs() < 1e-9);
+        assert!(d.scalar_bias > 0.0 && d.projection_variance > 0.0);
+    }
+
+    #[test]
+    fn phi_min_flat_spectrum_equals_thm2_value() {
+        // flat σ ⇒ Φ_min = c²·σ·n²/r = σ · (Thm 2 floor)
+        let n = 30;
+        let r = 6;
+        let c = 1.0;
+        let sigma = vec![2.5; n];
+        let got = phi_min(&sigma, r, c);
+        let want = 2.5 * thm2_floor(n, r, c);
+        assert!((got - want).abs() / want < 1e-9);
+    }
+
+    #[test]
+    fn prop4_dependent_matches_full_rank_when_rank_leq_r() {
+        // rank(Σ) = 3 ≤ r = 4, c = 1: MSE_min = tr(Σ_ξ).
+        let mut spec = vec![0.0; 50];
+        spec[0] = 4.0;
+        spec[1] = 2.0;
+        spec[2] = 1.0; // tr Σ = 7
+        assert!(prop4_matches_full_rank(&spec, 4, 1e-9));
+        // Split Σ = Σ_ξ + Σ_Θ with tr Σ_Θ = 3 ⇒ tr Σ_ξ = 4.
+        let mse = mse_dependent_min(&spec, 4, 1.0, 3.0);
+        assert!((mse - 4.0).abs() < 1e-6, "MSE_min = {mse}, want tr Σ_ξ = 4");
+    }
+
+    #[test]
+    fn dependent_never_worse_than_isotropic() {
+        // Φ_min ≤ tr(Σ)·(c²n/r) since uniform π = r/n is feasible.
+        let spec: Vec<f64> = (0..40).map(|i| 1.0 / (1 + i) as f64).collect();
+        let tr: f64 = spec.iter().sum();
+        for &r in &[1usize, 4, 10, 39] {
+            let dep = phi_min(&spec, r, 1.0);
+            let iso = tr * 40.0 / r as f64;
+            assert!(dep <= iso + 1e-9, "r={r}: dep {dep} > iso {iso}");
+        }
+    }
+
+    #[test]
+    fn eq14_dominates_exact_mse_for_isotropic_law() {
+        // the spectral bound must upper-bound the trace-exact MSE when
+        // Σ's are scaled so ‖Σ‖₂·n ≥ tr Σ (always true).
+        let (n, r, c) = (25usize, 5usize, 0.8);
+        let sxi_spec = 0.9; // ‖Σ_ξ‖₂
+        let sth_spec = 0.4;
+        // worst-case trace: tr ≤ n·‖·‖₂
+        let exact = mse_isotropic_exact(n, r, c, sxi_spec, sth_spec);
+        let bound = mse_upper_bound_eq14(n, r, c, sxi_spec, sth_spec);
+        // with tr = ‖·‖₂ (rank-one Σ) the bound and exact differ only in
+        // the Σ_Θ coefficient: (1−2c+c²n/r) vs (c²n/r−2c+1) — identical.
+        assert!((exact - bound).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bias_variance_tradeoff_in_c() {
+        // Variance terms shrink with c², bias grows as (1−c)²: the MSE
+        // at fixed (n, r) is convex in c with interior optimum when
+        // tr Σ_Θ > 0. Check the optimum lands strictly inside (0, 1).
+        let (n, r) = (100usize, 4usize);
+        let (txi, tth) = (1.0, 1.0);
+        let f = |c: f64| mse_isotropic_exact(n, r, c, txi, tth);
+        // closed-form optimum: d/dc [c²k₀(txi+tth) − 2c·tth] = 0
+        // with k₀ = n/r ⇒ c* = tth / (k₀(txi+tth))
+        let k0 = n as f64 / r as f64;
+        let c_star = tth / (k0 * (txi + tth));
+        assert!(c_star > 0.0 && c_star < 1.0);
+        assert!(f(c_star) < f(1.0) && f(c_star) < f(0.01));
+    }
+}

@@ -1,0 +1,108 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! * **K (lazy-update interval)** — the exploration/exploitation knob of
+//!   §4.2: K = 1 resamples every step (max exploration, max projection
+//!   variance and per-step QR cost), large K over-commits to one
+//!   subspace.
+//! * **c (weak-unbiasedness scale)** — Remark 1's bias/variance dial.
+//! * **projector law** — the headline comparison, at matched budget.
+//!
+//! Each cell is a short pretraining run from identical Θ₀/data; the
+//! reported metric is the tail-mean training loss.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::{PretrainConfig, PretrainTrainer};
+use crate::projection::ProjectorKind;
+use crate::runtime::Runtime;
+
+#[derive(Clone, Debug)]
+pub struct AblationOptions {
+    pub steps: u64,
+    pub seed: u64,
+    pub k_grid: Vec<u64>,
+    pub c_grid: Vec<f64>,
+}
+
+impl Default for AblationOptions {
+    fn default() -> Self {
+        AblationOptions {
+            steps: 100,
+            seed: 2026,
+            k_grid: vec![1, 5, 25, 100],
+            c_grid: vec![0.5, 1.0],
+        }
+    }
+}
+
+fn one_run(
+    rt: &mut Runtime,
+    dir: &Path,
+    sampler: ProjectorKind,
+    k: u64,
+    c: f64,
+    opts: &AblationOptions,
+) -> Result<(f32, f64)> {
+    let cfg = PretrainConfig {
+        scale: "s".into(),
+        sampler,
+        c,
+        k_interval: k,
+        steps: opts.steps,
+        lr: 2e-3,
+        warmup: 5,
+        clip: 1.0,
+        weight_decay: 0.05,
+        seed: opts.seed,
+        workers: 1,
+        eval_every: 0,
+        eval_batches: 1,
+    };
+    let mut t = PretrainTrainer::new(rt, dir, cfg)?;
+    let res = t.run()?;
+    Ok((
+        res.log.tail_mean_loss(10).unwrap_or(f32::NAN),
+        res.log.mean_step_time(3).unwrap_or(f64::NAN),
+    ))
+}
+
+pub fn run(
+    rt: &mut Runtime,
+    artifacts_dir: &Path,
+    opts: &AblationOptions,
+    out_csv: &Path,
+) -> Result<()> {
+    let mut f = std::fs::File::create(out_csv)?;
+    writeln!(f, "axis,sampler,k,c,tail_loss,step_s")?;
+
+    println!("== ablation: lazy-update interval K (Stiefel, c=1, {} steps) ==", opts.steps);
+    for &k in &opts.k_grid {
+        let (loss, step_s) = one_run(rt, artifacts_dir, ProjectorKind::Stiefel, k, 1.0, opts)?;
+        println!("  K = {k:<4} tail loss {loss:.4}  step {step_s:.3}s");
+        writeln!(f, "k,stiefel,{k},1.0,{loss},{step_s}")?;
+    }
+
+    println!("== ablation: weak-unbiasedness scale c (Stiefel, K=25) ==");
+    for &c in &opts.c_grid {
+        let (loss, step_s) = one_run(rt, artifacts_dir, ProjectorKind::Stiefel, 25, c, opts)?;
+        println!("  c = {c:<4} tail loss {loss:.4}  step {step_s:.3}s");
+        writeln!(f, "c,stiefel,25,{c},{loss},{step_s}")?;
+    }
+
+    println!("== ablation: projector law (K=25, c=1) ==");
+    for kind in [
+        ProjectorKind::Stiefel,
+        ProjectorKind::Coordinate,
+        ProjectorKind::Gaussian,
+    ] {
+        let (loss, step_s) = one_run(rt, artifacts_dir, kind, 25, 1.0, opts)?;
+        println!("  {:<10} tail loss {loss:.4}  step {step_s:.3}s", kind.name());
+        writeln!(f, "law,{},25,1.0,{loss},{step_s}", kind.name())?;
+    }
+
+    println!("  wrote {}", out_csv.display());
+    Ok(())
+}

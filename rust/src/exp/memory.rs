@@ -1,0 +1,111 @@
+//! Table 2: peak-memory profile of the four fine-tuning methods.
+//!
+//! Evaluated twice: (a) the analytical inventory at **true RoBERTa-large
+//! dimensions** (the paper's setting — we cannot measure GPU peaks here,
+//! DESIGN.md §2), and (b) the same inventory at our proxy scale, where
+//! the artifact-driven runs actually execute. The reproduced claim is
+//! the ordering and ratio structure; paper absolutes are printed
+//! alongside for comparison.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::model::{MemoryModel, TrainMethod};
+
+/// Paper Table 2 (GB).
+pub const PAPER_GB: [(TrainMethod, f64); 4] = [
+    (TrainMethod::VanillaIpa, 16.7),
+    (TrainMethod::LowRankIpa, 14.3),
+    (TrainMethod::VanillaLr, 5.49),
+    (TrainMethod::LowRankLr, 3.83),
+];
+
+pub fn run(out_csv: &std::path::Path) -> Result<Vec<(TrainMethod, f64)>> {
+    println!("== Table 2: memory profile (RoBERTa-large fine-tuning) ==");
+    let model = MemoryModel::roberta_large();
+    println!(
+        "   dims: L={} d={} ff={} vocab={} batch={} seq={} r={}",
+        model.layers, model.d_model, model.d_ff, model.vocab, model.batch, model.seq, model.rank
+    );
+    println!(
+        "{:<14} {:>10} {:>10} {:>9} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "method", "model(GB)", "paper(GB)", "weights", "grads", "optim", "acts", "perturb", "logits"
+    );
+
+    let mut rows = Vec::new();
+    let mut f = std::fs::File::create(out_csv)?;
+    writeln!(
+        f,
+        "method,scope,total_gb,weights_gb,grads_gb,optim_gb,acts_gb,perturb_gb,logits_gb,paper_gb"
+    )?;
+    let gb = |x: usize| x as f64 / (1 << 30) as f64;
+    for (method, paper) in PAPER_GB {
+        let bd = model.breakdown(method);
+        println!(
+            "{:<14} {:>10.2} {:>10.2} {:>9.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            method.name(),
+            bd.total_gb(),
+            paper,
+            gb(bd.weights),
+            gb(bd.gradients),
+            gb(bd.optimizer_state),
+            gb(bd.activations),
+            gb(bd.perturbations),
+            gb(bd.logits)
+        );
+        writeln!(
+            f,
+            "{},roberta-large,{},{},{},{},{},{},{},{}",
+            method.name(),
+            bd.total_gb(),
+            gb(bd.weights),
+            gb(bd.gradients),
+            gb(bd.optimizer_state),
+            gb(bd.activations),
+            gb(bd.perturbations),
+            gb(bd.logits),
+            paper
+        )?;
+        rows.push((method, bd.total_gb()));
+    }
+
+    // the proxy-scale inventory (what our artifact runs actually carry)
+    println!("-- proxy scale (clf artifacts) --");
+    let proxy = MemoryModel::clf_proxy();
+    for (method, _) in PAPER_GB {
+        let bd = proxy.breakdown(method);
+        let mb = bd.total() as f64 / (1 << 20) as f64;
+        println!("{:<14} {:>9.2} MB", method.name(), mb);
+        writeln!(
+            f,
+            "{},clf-proxy,{},{},{},{},{},{},{},",
+            method.name(),
+            bd.total_gb(),
+            gb(bd.weights),
+            gb(bd.gradients),
+            gb(bd.optimizer_state),
+            gb(bd.activations),
+            gb(bd.perturbations),
+            gb(bd.logits)
+        )?;
+    }
+    println!("  wrote {}", out_csv.display());
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_reproduces_ordering() {
+        let dir = std::env::temp_dir().join("lowrank_sge_mem_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let rows = run(&dir.join("table2.csv")).unwrap();
+        assert_eq!(rows.len(), 4);
+        for w in rows.windows(2) {
+            assert!(w[0].1 > w[1].1, "ordering violated: {rows:?}");
+        }
+    }
+}

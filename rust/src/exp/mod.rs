@@ -1,0 +1,28 @@
+//! Experiment harnesses — one per table/figure of the paper's §6 (the
+//! per-experiment index lives in DESIGN.md §4).
+//!
+//! | harness | regenerates |
+//! |---------|-------------|
+//! | [`toy_mse`]   | Figures 2–5 (toy MSE vs samples, LR/IPA × independent/dependent) |
+//! | [`finetune`]  | Table 1 (accuracy) + Figure 6 (loss curves) + Table 3 (per-step time) |
+//! | [`memory`]    | Table 2 (peak-memory accounting) |
+//! | [`pretrain`]  | Figures 7–9 (Stiefel vs Gaussian LowRank-IPA loss curves per scale) |
+//!
+//! Every harness prints the paper-style rows/series to stdout and writes
+//! CSV series under `results/`.
+
+pub mod ablation;
+pub mod diagnostics;
+pub mod finetune;
+pub mod memory;
+pub mod pretrain;
+pub mod toy_mse;
+
+use std::path::PathBuf;
+
+/// Default results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}

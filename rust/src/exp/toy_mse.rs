@@ -1,0 +1,146 @@
+//! Figures 2–5: MSE versus sample size on the toy quadratic matrix
+//! regression (paper §6.1; m = n = 100, o = 30).
+//!
+//! * Figures 2 (LR) and 3 (IPA): *independent* setting — Gaussian vs
+//!   Stiefel vs Coordinate at several values of c (the bias–variance
+//!   trade-off: c < 1 curves plateau at the bias floor).
+//! * Figures 4 (LR) and 5 (IPA): *dependent* setting — adds the
+//!   Algorithm-4 sampler, which sits uniformly below the independent
+//!   laws.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::estimator::mse::{mse_curve, EstimatorSpec, MseCurve, MseCurveConfig};
+use crate::estimator::toy::ToyProblem;
+use crate::estimator::Family;
+use crate::projection::ProjectorKind;
+
+/// Harness options.
+#[derive(Clone, Debug)]
+pub struct ToyMseOptions {
+    pub family: Family,
+    /// false → Figures 2/3 (independent laws); true → Figures 4/5
+    /// (adds the dependent sampler).
+    pub dependent: bool,
+    pub c_grid: Vec<f64>,
+    pub rank: usize,
+    pub sample_sizes: Vec<usize>,
+    pub reps: usize,
+    pub seed: u64,
+}
+
+impl ToyMseOptions {
+    pub fn paper(family: Family, dependent: bool) -> Self {
+        ToyMseOptions {
+            family,
+            dependent,
+            c_grid: vec![0.1, 0.4, 0.7, 1.0],
+            rank: 4,
+            sample_sizes: vec![10, 20, 50, 100, 200, 500],
+            reps: 30,
+            seed: 2026,
+        }
+    }
+
+    pub fn quick(family: Family, dependent: bool) -> Self {
+        ToyMseOptions {
+            c_grid: vec![0.4, 1.0],
+            sample_sizes: vec![10, 50, 200],
+            reps: 8,
+            ..Self::paper(family, dependent)
+        }
+    }
+}
+
+fn specs_for(dependent: bool) -> Vec<EstimatorSpec> {
+    let mut v = vec![
+        EstimatorSpec::FullRank,
+        EstimatorSpec::LowRank(ProjectorKind::Gaussian),
+        EstimatorSpec::LowRank(ProjectorKind::Stiefel),
+        EstimatorSpec::LowRank(ProjectorKind::Coordinate),
+    ];
+    if dependent {
+        v.push(EstimatorSpec::LowRank(ProjectorKind::Dependent));
+    }
+    v
+}
+
+/// Run the harness: prints paper-style series, writes one CSV.
+pub fn run(opts: &ToyMseOptions, out_csv: &std::path::Path) -> Result<Vec<MseCurve>> {
+    let problem = ToyProblem::paper_default(opts.seed);
+    let w = problem.eval_point(opts.seed + 1);
+    let fig = match (opts.family, opts.dependent) {
+        (Family::Lr, false) => "Figure 2",
+        (Family::Ipa, false) => "Figure 3",
+        (Family::Lr, true) => "Figure 4",
+        (Family::Ipa, true) => "Figure 5",
+    };
+    println!("== {fig}: toy MSE vs samples ({} family, {} setting) ==",
+        opts.family.name(),
+        if opts.dependent { "dependent" } else { "independent" });
+    println!("   m=n={}, o={}, r={}, reps={}", problem.m, problem.o, opts.rank, opts.reps);
+
+    let mut curves = Vec::new();
+    for &c in &opts.c_grid {
+        for spec in specs_for(opts.dependent) {
+            // full-rank baseline is c-independent: only run it once
+            if spec == EstimatorSpec::FullRank && c != *opts.c_grid.last().unwrap() {
+                continue;
+            }
+            let cfg = MseCurveConfig {
+                family: opts.family,
+                spec,
+                c,
+                r: opts.rank,
+                sample_sizes: opts.sample_sizes.clone(),
+                reps: opts.reps,
+                seed: opts.seed,
+                zo_sigma: 1e-2,
+                warmup: 300,
+            };
+            let curve = mse_curve(&problem, &w, &cfg);
+            let pts: Vec<String> = curve
+                .points
+                .iter()
+                .map(|(n, m)| format!("N={n}:{m:.3e}"))
+                .collect();
+            println!("  c={c:<4} {:<22} {}", curve.label, pts.join("  "));
+            curves.push(curve);
+        }
+    }
+
+    let mut f = std::fs::File::create(out_csv)?;
+    writeln!(f, "family,label,c,samples,mse")?;
+    for curve in &curves {
+        for (n, m) in &curve.points {
+            writeln!(f, "{},{},{},{},{}", opts.family.name(), curve.label, curve.c, n, m)?;
+        }
+    }
+    println!("  wrote {}", out_csv.display());
+    Ok(curves)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_produces_expected_curve_count() {
+        let opts = ToyMseOptions {
+            reps: 3,
+            sample_sizes: vec![5, 20],
+            c_grid: vec![1.0],
+            ..ToyMseOptions::quick(Family::Ipa, true)
+        };
+        let dir = std::env::temp_dir().join("lowrank_sge_toymse_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("fig.csv");
+        let curves = run(&opts, &csv).unwrap();
+        // 1 c-value × (full + gaussian + stiefel + coordinate + dependent)
+        assert_eq!(curves.len(), 5);
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert!(text.lines().count() > 5);
+    }
+}

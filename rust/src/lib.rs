@@ -1,0 +1,40 @@
+//! `lowrank_sge` — Optimal Low-Rank Stochastic Gradient Estimation for
+//! LLM Training (Li, Ren, Zhang, Chen, Peng; CS.LG 2026), reproduced as a
+//! three-layer Rust + JAX + Pallas training framework.
+//!
+//! # Layer map
+//!
+//! * **L3 (this crate)** — the run-time system: projection samplers
+//!   ([`projection`]), the lazy-update optimizer stack ([`optim`]), the
+//!   PJRT runtime that executes AOT-compiled JAX/Pallas artifacts
+//!   ([`runtime`]), data pipeline ([`data`]), trainers and the DDP
+//!   simulation ([`coordinator`]), the MSE theory + toy experiments
+//!   ([`estimator`]), and the experiment harnesses ([`exp`]).
+//! * **L2/L1 (python/, build-time only)** — JAX model graphs and Pallas
+//!   kernels, lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use lowrank_sge::projection::{build_sampler, ProjectorKind};
+//! use lowrank_sge::rng::Rng;
+//!
+//! let mut rng = Rng::new(0);
+//! let mut sampler = build_sampler(ProjectorKind::Stiefel, 256, 8, 1.0, None);
+//! let v = sampler.sample(&mut rng); // V ∈ ℝ^{256×8}, VᵀV = (n/r)·I
+//! assert_eq!((v.rows, v.cols), (256, 8));
+//! ```
+
+pub mod bench_util;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod estimator;
+pub mod exp;
+pub mod linalg;
+pub mod model;
+pub mod optim;
+pub mod projection;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;

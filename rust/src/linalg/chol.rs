@@ -1,0 +1,63 @@
+//! Cholesky factorization (lower-triangular), used to sample the toy
+//! problem's correlated Gaussian data A ~ N(μ, Σ_A): A = μ + L·z with
+//! Σ_A = LLᵀ.
+
+use super::Mat;
+
+/// Lower-triangular L with A = L·Lᵀ. Panics if `a` is not (numerically)
+/// symmetric positive definite.
+pub fn cholesky(a: &Mat) -> Mat {
+    assert!(a.is_square(), "cholesky requires a square matrix");
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.get(i, j);
+            for k in 0..j {
+                s -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                assert!(s > 0.0, "matrix not positive definite at pivot {i} (s={s})");
+                l.set(i, j, s.sqrt());
+            } else {
+                l.set(i, j, s / l.get(j, j));
+            }
+        }
+    }
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::{matmul, transpose};
+
+    #[test]
+    fn reconstructs_spd_matrix() {
+        // AR(1) covariance, ρ = 0.6
+        let n = 12;
+        let a = Mat::from_fn(n, n, |i, j| 0.6f64.powi((i as i32 - j as i32).abs()));
+        let l = cholesky(&a);
+        let rec = matmul(&l, &transpose(&l));
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+        // L is lower triangular
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_eq!(l.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_factors_to_identity() {
+        let l = cholesky(&Mat::eye(5));
+        assert!(l.max_abs_diff(&Mat::eye(5)) < 1e-14);
+    }
+
+    #[test]
+    #[should_panic(expected = "not positive definite")]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, −1
+        cholesky(&a);
+    }
+}

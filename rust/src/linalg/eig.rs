@@ -1,0 +1,163 @@
+//! Symmetric eigendecomposition by the cyclic Jacobi method.
+//!
+//! Algorithm 4 (instance-dependent sampler) needs the full spectral
+//! decomposition Σ = Q diag(σ) Qᵀ of the (symmetric PSD) second-moment
+//! matrix. Jacobi is the right tool here: Σ is small (n = per-layer input
+//! dim), the method is unconditionally stable, and it delivers orthogonal
+//! eigenvectors to machine precision — which the sampler's isotropy
+//! constraint E[P] = cI relies on exactly.
+
+use super::Mat;
+
+/// Result of [`sym_eig`]: `a ≈ q · diag(values) · qᵀ`, eigenvalues sorted
+/// in **descending** order (σ₁ ≥ … ≥ σ_n, the paper's convention).
+pub struct EigDecomp {
+    /// Eigenvalues, descending.
+    pub values: Vec<f64>,
+    /// n×n orthogonal matrix; column j is the eigenvector of `values[j]`.
+    pub q: Mat,
+}
+
+/// Cyclic Jacobi eigensolver for a symmetric matrix.
+///
+/// Panics if `a` is not square; symmetry is enforced by averaging
+/// (A+Aᵀ)/2 so tiny asymmetries from accumulation don't bite.
+pub fn sym_eig(a: &Mat) -> EigDecomp {
+    assert!(a.is_square(), "sym_eig requires a square matrix");
+    let n = a.rows;
+    // symmetrized working copy
+    let mut m = Mat::from_fn(n, n, |i, j| 0.5 * (a.get(i, j) + a.get(j, i)));
+    let mut q = Mat::eye(n);
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() <= 1e-14 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for r in (p + 1)..n {
+                let apq = m.get(p, r);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(r, r);
+                // rotation angle: tan(2θ) = 2apq / (app − aqq)
+                let theta = 0.5 * (2.0 * apq).atan2(app - aqq);
+                let (s, c) = theta.sin_cos();
+                // apply Jᵀ M J where J rotates the (p, r) plane
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, r);
+                    m.set(k, p, c * mkp + s * mkq);
+                    m.set(k, r, -s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(r, k);
+                    m.set(p, k, c * mpk + s * mqk);
+                    m.set(r, k, -s * mpk + c * mqk);
+                }
+                for k in 0..n {
+                    let qkp = q.get(k, p);
+                    let qkq = q.get(k, r);
+                    q.set(k, p, c * qkp + s * qkq);
+                    q.set(k, r, -s * qkp + c * qkq);
+                }
+            }
+        }
+    }
+
+    // extract, sort descending, permute eigenvector columns to match
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    idx.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let qs = Mat::from_fn(n, n, |i, j| q.get(i, idx[j]));
+    EigDecomp { values, q: qs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::{matmul, matmul_tn, transpose};
+
+    fn arb_sym(n: usize, seed: u64) -> Mat {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(9);
+        let g = Mat::from_fn(n, n, |_, _| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 33) as f64) / (u32::MAX as f64) - 0.5
+        });
+        // GᵀG is symmetric PSD
+        matmul_tn(&g, &g)
+    }
+
+    #[test]
+    fn reconstruction() {
+        for &n in &[1, 2, 5, 17, 40] {
+            let a = arb_sym(n, n as u64);
+            let e = sym_eig(&a);
+            let lam = Mat::diag(&e.values);
+            let rec = matmul(&matmul(&e.q, &lam), &transpose(&e.q));
+            assert!(rec.max_abs_diff(&a) < 1e-8 * (1.0 + a.fro_norm()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthogonal() {
+        let a = arb_sym(23, 3);
+        let e = sym_eig(&a);
+        let qtq = matmul_tn(&e.q, &e.q);
+        assert!(qtq.max_abs_diff(&Mat::eye(23)) < 1e-10);
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending_and_nonnegative_for_psd() {
+        let a = arb_sym(15, 7);
+        let e = sym_eig(&a);
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        for &v in &e.values {
+            assert!(v > -1e-9, "PSD matrix produced negative eigenvalue {v}");
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues_are_entries() {
+        let a = Mat::diag(&[3.0, 1.0, 4.0, 1.5]);
+        let e = sym_eig(&a);
+        let expect = vec![4.0, 3.0, 1.5, 1.0];
+        for (got, want) in e.values.iter().zip(&expect) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let a = arb_sym(19, 13);
+        let e = sym_eig(&a);
+        let sum: f64 = e.values.iter().sum();
+        assert!((sum - a.trace()).abs() < 1e-9 * (1.0 + a.trace().abs()));
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Mat::from_rows(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+        // eigenvector of 3 is ±(1,1)/√2
+        let v0 = e.q.col(0);
+        assert!((v0[0].abs() - (0.5f64).sqrt()).abs() < 1e-10);
+        assert!((v0[0] - v0[1]).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,301 @@
+//! Matrix products and norms.
+//!
+//! `matmul` is a cache-blocked, k-innermost GEMM — the single hot path of
+//! the rust-side estimator stack (toy experiments run millions of
+//! `m×n · n×r` products). The blocking mirrors the L1 Pallas kernel's
+//! BlockSpec schedule: a tile of A and a panel of B stay resident while a
+//! C tile accumulates.
+
+use super::Mat;
+
+/// Cache-block edge (f64 elements). 64×64×8B = 32 KB per tile, three tiles
+/// comfortably fit in a 256 KB L2.
+const BLOCK: usize = 64;
+
+/// C = A · B (blocked GEMM).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C += A · B without allocating. C must be m×n and pre-initialized.
+pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for j0 in (0..n).step_by(BLOCK) {
+                let j1 = (j0 + BLOCK).min(n);
+                for i in i0..i1 {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut c.data[i * n..(i + 1) * n];
+                    for kk in k0..k1 {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b.data[kk * n..(kk + 1) * n];
+                        // innermost j loop: contiguous in both B and C,
+                        // auto-vectorizes.
+                        for j in j0..j1 {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = A · B into a pre-allocated (zeroed here) output.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    c.data.iter_mut().for_each(|v| *v = 0.0);
+    matmul_acc(a, b, c);
+}
+
+/// Aᵀ as a new matrix.
+pub fn transpose(a: &Mat) -> Mat {
+    let mut t = Mat::zeros(a.cols, a.rows);
+    for i in 0..a.rows {
+        for j in 0..a.cols {
+            t.data[j * a.rows + i] = a.data[i * a.cols + j];
+        }
+    }
+    t
+}
+
+/// C = Aᵀ · B without materializing Aᵀ.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    // (AᵀB)_{ij} = Σ_k A_{ki} B_{kj}; iterate k outer so both reads stream.
+    for kk in 0..k {
+        let arow = &a.data[kk * m..(kk + 1) * m];
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aki = arow[i];
+            if aki == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aki * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ without materializing Bᵀ.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut s = 0.0;
+            for kk in 0..k {
+                s += arow[kk] * brow[kk];
+            }
+            crow[j] = s;
+        }
+    }
+    c
+}
+
+/// Frobenius inner product ⟨A, B⟩ = tr(AᵀB).
+pub fn fro_inner(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum()
+}
+
+/// tr(A·B) for square A·B without forming the product.
+pub fn trace_product(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(a.rows, b.cols, "trace_product needs square A·B");
+    // tr(AB) = Σ_{i,k} A_{ik} B_{ki}
+    let mut s = 0.0;
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            s += a.data[i * a.cols + k] * b.data[k * b.cols + i];
+        }
+    }
+    s
+}
+
+/// Spectral norm ‖A‖₂ (largest singular value) by power iteration on AᵀA.
+pub fn spectral_norm(a: &Mat, iters: usize) -> f64 {
+    let n = a.cols;
+    if a.data.iter().all(|&v| v == 0.0) {
+        return 0.0;
+    }
+    // deterministic start: normalized row-sum vector perturbed to avoid
+    // landing exactly in a null space.
+    let mut v: Vec<f64> = (0..n).map(|j| 1.0 + (j as f64) * 1e-3).collect();
+    let mut norm = (v.iter().map(|x| x * x).sum::<f64>()).sqrt();
+    v.iter_mut().for_each(|x| *x /= norm);
+    let mut sigma_sq = 0.0;
+    for _ in 0..iters {
+        // w = Av ; v' = Aᵀw
+        let mut w = vec![0.0; a.rows];
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let mut s = 0.0;
+            for j in 0..n {
+                s += arow[j] * v[j];
+            }
+            w[i] = s;
+        }
+        let mut v2 = vec![0.0; n];
+        for i in 0..a.rows {
+            let arow = a.row(i);
+            let wi = w[i];
+            for j in 0..n {
+                v2[j] += arow[j] * wi;
+            }
+        }
+        norm = (v2.iter().map(|x| x * x).sum::<f64>()).sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        sigma_sq = norm; // ‖AᵀAv‖ → λ_max(AᵀA) as v converges
+        v2.iter_mut().for_each(|x| *x /= norm);
+        v = v2;
+    }
+    sigma_sq.sqrt()
+}
+
+/// A · v for a vector v.
+pub fn matvec(a: &Mat, v: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols, v.len());
+    (0..a.rows)
+        .map(|i| a.row(i).iter().zip(v).map(|(x, y)| x * y).sum())
+        .collect()
+}
+
+/// Aᵀ · v for a vector v.
+pub fn matvec_t(a: &Mat, v: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, v.len());
+    let mut out = vec![0.0; a.cols];
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let vi = v[i];
+        for j in 0..a.cols {
+            out[j] += arow[j] * vi;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    fn arb(rows: usize, cols: usize, seed: u64) -> Mat {
+        // lightweight LCG so linalg tests don't depend on rng module
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        Mat::from_fn(rows, cols, |_, _| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 33) as f64) / (u32::MAX as f64) - 0.5
+        })
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_rect() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (70, 65, 130), (128, 64, 96)] {
+            let a = arb(m, k, 7);
+            let b = arb(k, n, 11);
+            let c = matmul(&a, &b);
+            let cn = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&cn) < 1e-10, "mismatch at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transpose() {
+        let a = arb(40, 33, 3);
+        let b = arb(40, 21, 5);
+        let c1 = matmul_tn(&a, &b);
+        let c2 = matmul(&transpose(&a), &b);
+        assert!(c1.max_abs_diff(&c2) < 1e-10);
+
+        let d = arb(17, 33, 9);
+        let e1 = matmul_nt(&a, &d); // 40x33 · (17x33)ᵀ
+        let e2 = matmul(&a, &transpose(&d));
+        assert!(e1.max_abs_diff(&e2) < 1e-10);
+    }
+
+    #[test]
+    fn trace_product_matches_full_product() {
+        let a = arb(12, 8, 1);
+        let b = arb(8, 12, 2);
+        let t1 = trace_product(&a, &b);
+        let t2 = matmul(&a, &b).trace();
+        assert!((t1 - t2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn fro_inner_is_trace_of_atb() {
+        let a = arb(9, 7, 4);
+        let b = arb(9, 7, 6);
+        let t = matmul_tn(&a, &b).trace();
+        assert!((fro_inner(&a, &b) - t).abs() < 1e-10);
+    }
+
+    #[test]
+    fn spectral_norm_of_diag_is_max_entry() {
+        let d = Mat::diag(&[0.5, 3.0, 2.0]);
+        let s = spectral_norm(&d, 100);
+        assert!((s - 3.0).abs() < 1e-8, "got {s}");
+    }
+
+    #[test]
+    fn spectral_norm_bounded_by_fro() {
+        let a = arb(30, 20, 8);
+        let s = spectral_norm(&a, 200);
+        assert!(s <= a.fro_norm() + 1e-9);
+        assert!(s >= a.fro_norm() / (20f64).sqrt() - 1e-9);
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let a = arb(6, 4, 10);
+        let v: Vec<f64> = (0..4).map(|i| i as f64 + 1.0).collect();
+        let b = Mat { rows: 4, cols: 1, data: v.clone() };
+        let full = matmul(&a, &b);
+        assert_eq!(matvec(&a, &v), full.data);
+
+        let w: Vec<f64> = (0..6).map(|i| i as f64 - 2.0).collect();
+        let wt = matvec_t(&a, &w);
+        let full_t = matmul_tn(&a, &Mat { rows: 6, cols: 1, data: w });
+        assert_eq!(wt, full_t.data);
+    }
+
+    #[test]
+    fn zero_matrix_spectral_norm_is_zero() {
+        assert_eq!(spectral_norm(&Mat::zeros(5, 5), 50), 0.0);
+    }
+}

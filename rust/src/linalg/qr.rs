@@ -1,0 +1,193 @@
+//! Householder thin-QR factorization with the sign correction from
+//! Algorithm 2 (Haar–Stiefel sampler).
+//!
+//! Given G ∈ ℝ^{n×r} (n ≥ r), produce Q ∈ ℝ^{n×r} with orthonormal
+//! columns and upper-triangular R ∈ ℝ^{r×r} with **positive diagonal**.
+//! The positive-diagonal normalization removes the QR sign ambiguity:
+//! only then is Q exactly Haar-distributed on the Stiefel manifold when G
+//! has i.i.d. Gaussian entries (Stewart 1980; paper Algorithm 2, step 3).
+
+use super::{ops, Mat};
+
+/// Result of [`thin_qr`].
+pub struct QrFactors {
+    /// n×r, orthonormal columns, QᵀQ = I_r.
+    pub q: Mat,
+    /// r×r upper triangular with non-negative diagonal.
+    pub r: Mat,
+}
+
+/// Thin QR via Householder reflections; O(n r²).
+pub fn thin_qr(g: &Mat) -> QrFactors {
+    let (n, r) = (g.rows, g.cols);
+    assert!(n >= r, "thin_qr requires n >= r (got {n} < {r})");
+    // Work on a copy that becomes R in its upper triangle while we store
+    // the Householder vectors in the lower part (classic compact scheme).
+    let mut a = g.clone();
+    // Householder vectors (each of length n, but zero above its pivot).
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(r);
+
+    for k in 0..r {
+        // Build the reflector for column k, rows k..n.
+        let mut norm_sq = 0.0;
+        for i in k..n {
+            let x = a.get(i, k);
+            norm_sq += x * x;
+        }
+        let norm = norm_sq.sqrt();
+        let mut v = vec![0.0; n];
+        if norm > 0.0 {
+            let akk = a.get(k, k);
+            let alpha = if akk >= 0.0 { -norm } else { norm };
+            v[k] = akk - alpha;
+            for i in (k + 1)..n {
+                v[i] = a.get(i, k);
+            }
+            let vnorm_sq: f64 = v[k..].iter().map(|x| x * x).sum();
+            if vnorm_sq > 0.0 {
+                // Apply H = I − 2vvᵀ/‖v‖² to A[k.., k..].
+                for j in k..r {
+                    let mut dot = 0.0;
+                    for i in k..n {
+                        dot += v[i] * a.get(i, j);
+                    }
+                    let f = 2.0 * dot / vnorm_sq;
+                    for i in k..n {
+                        let val = a.get(i, j) - f * v[i];
+                        a.set(i, j, val);
+                    }
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // R = upper triangle of the transformed A.
+    let mut rmat = Mat::zeros(r, r);
+    for i in 0..r {
+        for j in i..r {
+            rmat.set(i, j, a.get(i, j));
+        }
+    }
+
+    // Q = H_0 H_1 … H_{r-1} · [I_r; 0]  (apply reflectors in reverse to
+    // the thin identity).
+    let mut q = Mat::zeros(n, r);
+    for i in 0..r {
+        q.set(i, i, 1.0);
+    }
+    for k in (0..r).rev() {
+        let v = &vs[k];
+        let vnorm_sq: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm_sq == 0.0 {
+            continue;
+        }
+        for j in 0..r {
+            let mut dot = 0.0;
+            for i in k..n {
+                dot += v[i] * q.get(i, j);
+            }
+            let f = 2.0 * dot / vnorm_sq;
+            for i in k..n {
+                let val = q.get(i, j) - f * v[i];
+                q.set(i, j, val);
+            }
+        }
+    }
+
+    // Sign fix (Algorithm 2 step 3): D = diag(sgn(diag(R))), Q ← QD, R ← DR.
+    for k in 0..r {
+        if rmat.get(k, k) < 0.0 {
+            for i in 0..n {
+                let val = -q.get(i, k);
+                q.set(i, k, val);
+            }
+            for j in k..r {
+                let val = -rmat.get(k, j);
+                rmat.set(k, j, val);
+            }
+        }
+    }
+
+    QrFactors { q, r: rmat }
+}
+
+/// Orthonormality defect ‖QᵀQ − I‖_F (test/diagnostic helper).
+pub fn orthonormality_defect(q: &Mat) -> f64 {
+    let gram = ops::matmul_tn(q, q);
+    gram.sub(&Mat::eye(q.cols)).fro_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::{matmul, transpose};
+
+    fn arb(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(5);
+        Mat::from_fn(rows, cols, |_, _| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 33) as f64) / (u32::MAX as f64) - 0.5
+        })
+    }
+
+    #[test]
+    fn qr_reconstructs_input() {
+        for &(n, r) in &[(5, 3), (20, 7), (64, 8), (100, 4), (6, 6)] {
+            let g = arb(n, r, n as u64 * 31 + r as u64);
+            let f = thin_qr(&g);
+            let rec = matmul(&f.q, &f.r);
+            assert!(rec.max_abs_diff(&g) < 1e-9, "reconstruction failed at {n}x{r}");
+        }
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let g = arb(50, 10, 17);
+        let f = thin_qr(&g);
+        assert!(orthonormality_defect(&f.q) < 1e-10);
+    }
+
+    #[test]
+    fn r_is_upper_triangular_with_positive_diagonal() {
+        let g = arb(30, 6, 23);
+        let f = thin_qr(&g);
+        for i in 0..6 {
+            assert!(f.r.get(i, i) > 0.0, "diag({i}) = {}", f.r.get(i, i));
+            for j in 0..i {
+                assert!(f.r.get(i, j).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn square_qr_gives_orthogonal_q() {
+        let g = arb(12, 12, 29);
+        let f = thin_qr(&g);
+        let qtq = matmul(&transpose(&f.q), &f.q);
+        assert!(qtq.max_abs_diff(&Mat::eye(12)) < 1e-10);
+    }
+
+    #[test]
+    fn qr_of_orthonormal_input_is_identity_r() {
+        // Q of a previous QR is orthonormal; its QR must give R = I.
+        let g = arb(25, 5, 41);
+        let q = thin_qr(&g).q;
+        let f2 = thin_qr(&q);
+        assert!(f2.r.max_abs_diff(&Mat::eye(5)) < 1e-9);
+    }
+
+    #[test]
+    fn rank_deficient_column_handled() {
+        // second column = 2 × first column → R[1,1] ≈ 0, no NaNs.
+        let mut g = Mat::zeros(8, 2);
+        for i in 0..8 {
+            g.set(i, 0, (i + 1) as f64);
+            g.set(i, 1, 2.0 * (i + 1) as f64);
+        }
+        let f = thin_qr(&g);
+        assert!(f.q.data.iter().all(|v| v.is_finite()));
+        assert!(f.r.get(1, 1).abs() < 1e-9);
+        assert!(matmul(&f.q, &f.r).max_abs_diff(&g) < 1e-9);
+    }
+}

@@ -1,0 +1,317 @@
+//! `lowrank-sge` — launcher CLI.
+//!
+//! ```text
+//! lowrank-sge exp toy-mse   [--family ipa|lr] [--mode independent|dependent] [--quick]
+//! lowrank-sge exp finetune  [--steps N] [--tasks a,b,c] [--quick]
+//! lowrank-sge exp curves    [--steps N] [--quick]            # Figure 6
+//! lowrank-sge exp memory                                     # Table 2
+//! lowrank-sge exp pretrain  --scale s|m|l [--steps N] [--quick]
+//! lowrank-sge exp all       [--quick]
+//! lowrank-sge pretrain      --scale s [--sampler stiefel] [--steps N] [--workers W] …
+//! lowrank-sge finetune      --task sst2 --method stiefel-lowrank-lr [--steps N] …
+//! lowrank-sge inspect                                        # list artifacts
+//! ```
+//!
+//! All experiment output lands in `results/` as CSV; see DESIGN.md §4
+//! for the experiment ↔ paper-artifact index.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use lowrank_sge::config::ArgMap;
+use lowrank_sge::coordinator::{FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig, PretrainTrainer};
+use lowrank_sge::estimator::Family;
+use lowrank_sge::exp;
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::runtime::Runtime;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("LOWRANK_SGE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: lowrank-sge <exp|pretrain|finetune|inspect> …  (see `rust/src/main.rs` docs)"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    match cmd.as_str() {
+        "exp" => {
+            let Some(sub) = argv.get(1) else { usage() };
+            let args = ArgMap::parse(&argv[2..])?;
+            run_exp(sub, &args)
+        }
+        "pretrain" => {
+            let args = ArgMap::parse(&argv[1..])?;
+            cmd_pretrain(&args)
+        }
+        "finetune" => {
+            let args = ArgMap::parse(&argv[1..])?;
+            cmd_finetune(&args)
+        }
+        "inspect" => cmd_inspect(),
+        _ => usage(),
+    }
+}
+
+fn run_exp(sub: &str, args: &ArgMap) -> Result<()> {
+    let quick = args.has_flag("quick");
+    let results = exp::results_dir();
+    match sub {
+        "toy-mse" => {
+            let family = Family::parse(args.str_or("family", "both"));
+            let mode = args.str_or("mode", "both");
+            let fams = match family {
+                Some(f) => vec![f],
+                None => vec![Family::Lr, Family::Ipa],
+            };
+            let modes: Vec<bool> = match mode {
+                "independent" => vec![false],
+                "dependent" => vec![true],
+                _ => vec![false, true],
+            };
+            for f in fams {
+                for dep in &modes {
+                    let mut opts = if quick {
+                        exp::toy_mse::ToyMseOptions::quick(f, *dep)
+                    } else {
+                        exp::toy_mse::ToyMseOptions::paper(f, *dep)
+                    };
+                    if let Some(r) = args.get("reps") {
+                        opts.reps = r.parse().unwrap_or(opts.reps);
+                    }
+                    let tag = format!(
+                        "toy_mse_{}_{}",
+                        f.name(),
+                        if *dep { "dependent" } else { "independent" }
+                    );
+                    exp::toy_mse::run(&opts, &results.join(format!("{tag}.csv")))?;
+                }
+            }
+            Ok(())
+        }
+        "memory" => {
+            exp::memory::run(&results.join("table2_memory.csv"))?;
+            Ok(())
+        }
+        "grad-rank" => {
+            let mut rt = Runtime::new(artifacts_dir())?;
+            exp::diagnostics::run(&mut rt, &results.join("grad_rank.csv"))?;
+            Ok(())
+        }
+        "ablation" => {
+            let mut rt = Runtime::new(artifacts_dir())?;
+            let mut opts = exp::ablation::AblationOptions::default();
+            opts.steps = args.u64_or("steps", if quick { 40 } else { opts.steps });
+            exp::ablation::run(&mut rt, &artifacts_dir(), &opts, &results.join("ablation.csv"))
+        }
+        "finetune" => {
+            let mut rt = Runtime::new(artifacts_dir())?;
+            let mut opts = if quick {
+                exp::finetune::FinetuneOptions::quick()
+            } else {
+                exp::finetune::FinetuneOptions::paper()
+            };
+            opts.steps = args.u64_or("steps", opts.steps);
+            if let Some(tasks) = args.get("tasks") {
+                opts.tasks = tasks.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            exp::finetune::run(&mut rt, &artifacts_dir(), &opts, &results)
+        }
+        "curves" => {
+            let mut rt = Runtime::new(artifacts_dir())?;
+            let mut opts = if quick {
+                exp::finetune::FinetuneOptions::quick()
+            } else {
+                exp::finetune::FinetuneOptions::paper()
+            };
+            opts.steps = args.u64_or("steps", opts.steps);
+            if let Some(tasks) = args.get("tasks") {
+                opts.tasks = tasks.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            exp::finetune::run_curves(&mut rt, &artifacts_dir(), &opts, &results)
+        }
+        "pretrain" => {
+            let mut rt = Runtime::new(artifacts_dir())?;
+            let scale = args.str_or("scale", "s").to_string();
+            let mut opts = if quick {
+                exp::pretrain::PretrainOptions::quick(&scale)
+            } else {
+                exp::pretrain::PretrainOptions::paper(&scale)
+            };
+            opts.steps = args.u64_or("steps", opts.steps);
+            opts.workers = args.usize_or("workers", opts.workers);
+            exp::pretrain::run(&mut rt, &artifacts_dir(), &opts, &results)
+        }
+        "all" => {
+            // the full reproduction suite, in paper order
+            for f in [Family::Lr, Family::Ipa] {
+                for dep in [false, true] {
+                    let opts = if quick {
+                        exp::toy_mse::ToyMseOptions::quick(f, dep)
+                    } else {
+                        exp::toy_mse::ToyMseOptions::paper(f, dep)
+                    };
+                    let tag = format!(
+                        "toy_mse_{}_{}",
+                        f.name(),
+                        if dep { "dependent" } else { "independent" }
+                    );
+                    exp::toy_mse::run(&opts, &results.join(format!("{tag}.csv")))?;
+                }
+            }
+            let mut rt = Runtime::new(artifacts_dir())?;
+            let fopts = if quick {
+                exp::finetune::FinetuneOptions::quick()
+            } else {
+                exp::finetune::FinetuneOptions::paper()
+            };
+            exp::finetune::run(&mut rt, &artifacts_dir(), &fopts, &results)?;
+            exp::memory::run(&results.join("table2_memory.csv"))?;
+            for scale in ["s", "m", "l"] {
+                let opts = if quick {
+                    exp::pretrain::PretrainOptions::quick(scale)
+                } else {
+                    exp::pretrain::PretrainOptions::paper(scale)
+                };
+                exp::pretrain::run(&mut rt, &artifacts_dir(), &opts, &results)?;
+            }
+            Ok(())
+        }
+        _ => usage(),
+    }
+}
+
+fn parse_method(s: &str) -> Result<FinetuneMethod> {
+    Ok(match s {
+        "zero-shot" => FinetuneMethod::ZeroShot,
+        "vanilla-lr" => FinetuneMethod::VanillaLr,
+        "vanilla-ipa" => FinetuneMethod::VanillaIpa,
+        other => {
+            if let Some(kind) = other
+                .strip_suffix("-lowrank-lr")
+                .and_then(ProjectorKind::parse)
+            {
+                FinetuneMethod::LowRankLr(kind)
+            } else if let Some(kind) = other
+                .strip_suffix("-lowrank-ipa")
+                .and_then(ProjectorKind::parse)
+            {
+                FinetuneMethod::LowRankIpa(kind)
+            } else {
+                bail!("unknown method {other:?} (try stiefel-lowrank-lr, vanilla-ipa, …)")
+            }
+        }
+    })
+}
+
+fn cmd_pretrain(args: &ArgMap) -> Result<()> {
+    let dir = artifacts_dir();
+    let mut rt = Runtime::new(&dir)?;
+    // defaults ← config file (--config path, [pretrain] section) ← CLI
+    let file = match args.get("config") {
+        Some(p) => lowrank_sge::config::ConfigFile::load(std::path::Path::new(p))?,
+        None => lowrank_sge::config::ConfigFile::default(),
+    };
+    let sampler = ProjectorKind::parse(
+        args.get("sampler")
+            .unwrap_or_else(|| file.str_or("pretrain.sampler", "stiefel")),
+    )
+    .context("bad sampler")?;
+    let cfg = PretrainConfig {
+        scale: args
+            .get("scale")
+            .unwrap_or_else(|| file.str_or("pretrain.scale", "s"))
+            .to_string(),
+        sampler,
+        c: args.f64_or("c", file.f64_or("pretrain.c", 1.0)),
+        k_interval: args.u64_or("k", file.i64_or("pretrain.k", 25) as u64),
+        steps: args.u64_or("steps", file.i64_or("pretrain.steps", 200) as u64),
+        lr: args.f32_or("lr", file.f64_or("pretrain.lr", 2e-3) as f32),
+        warmup: args.u64_or("warmup", file.i64_or("pretrain.warmup", 10) as u64),
+        clip: args.f32_or("clip", file.f64_or("pretrain.clip", 1.0) as f32),
+        weight_decay: args.f32_or("wd", file.f64_or("pretrain.wd", 0.05) as f32),
+        seed: args.u64_or("seed", file.i64_or("pretrain.seed", 2026) as u64),
+        workers: args.usize_or("workers", file.i64_or("pretrain.workers", 1) as usize),
+        eval_every: args.u64_or("eval-every", file.i64_or("pretrain.eval_every", 25) as u64),
+        eval_batches: args.usize_or("eval-batches", 2),
+    };
+    println!(
+        "pretrain scale={} sampler={} steps={} K={} workers={}",
+        cfg.scale, sampler.name(), cfg.steps, cfg.k_interval, cfg.workers
+    );
+    let mut trainer = PretrainTrainer::new(&mut rt, &dir, cfg)?;
+    let res = trainer.run()?;
+    println!(
+        "final train loss {:.4} (tail {:.4}); eval {:?}; mean step {:.3}s",
+        res.log.final_train_loss().unwrap_or(f32::NAN),
+        res.log.tail_mean_loss(10).unwrap_or(f32::NAN),
+        res.final_eval_loss,
+        res.log.mean_step_time(3).unwrap_or(f64::NAN)
+    );
+    if let Some(out) = args.get("out-csv") {
+        res.log.write_csv(std::path::Path::new(out))?;
+        println!("wrote {out}");
+    }
+    if let Some(ckpt) = args.get("checkpoint") {
+        trainer.save_checkpoint(std::path::Path::new(ckpt))?;
+        println!("checkpoint saved to {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_finetune(args: &ArgMap) -> Result<()> {
+    let dir = artifacts_dir();
+    let mut rt = Runtime::new(&dir)?;
+    let method = parse_method(args.str_or("method", "stiefel-lowrank-lr"))?;
+    let cfg = FinetuneConfig {
+        task: args.str_or("task", "sst2").to_string(),
+        method,
+        steps: args.u64_or("steps", 300),
+        k_interval: args.u64_or("k", 50),
+        ipa_lr: args.f32_or("ipa-lr", 1e-3),
+        zo_lr: args.f32_or("zo-lr", 2e-3),
+        sigma: args.f32_or("sigma", 1e-2),
+        c: args.f64_or("c", 1.0),
+        seed: args.u64_or("seed", 2026),
+        eval_examples: args.usize_or("eval-examples", 256),
+    };
+    println!("finetune task={} method={} steps={}", cfg.task, method.name(), cfg.steps);
+    let mut trainer = FinetuneTrainer::new(&mut rt, &dir, cfg)?;
+    let res = trainer.run()?;
+    println!(
+        "accuracy {:.3}; final loss {:.4}; mean step {:.4}s",
+        res.accuracy,
+        res.log.tail_mean_loss(10).unwrap_or(f32::NAN),
+        res.log.mean_step_time(3).unwrap_or(f64::NAN)
+    );
+    if let Some(out) = args.get("out-csv") {
+        res.log.write_csv(std::path::Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_inspect() -> Result<()> {
+    let dir = artifacts_dir();
+    let mut rt = Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    for name in rt.available()? {
+        let art = rt.load(&name)?;
+        println!(
+            "{name:<22} inputs {:>3}  outputs {:>2}  compile {:.2}s  model {}",
+            art.manifest.inputs.len(),
+            art.manifest.outputs.len(),
+            art.compile_time_s,
+            art.manifest.meta.get("model").map(|s| s.as_str()).unwrap_or("-")
+        );
+    }
+    Ok(())
+}

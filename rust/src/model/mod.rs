@@ -1,0 +1,20 @@
+//! Run-time model state: parameter store, f32 tensor math for the lift,
+//! and the Table-2 memory accounting.
+//!
+//! * [`tensor`] — minimal f32 kernels Rust needs on the hot path: the
+//!   rank-r lift ΔΘ = B·Vᵀ (O(mnr), once per K steps) and the ZO update
+//!   direction. Everything heavy runs inside the PJRT artifacts.
+//! * [`store`] — [`ParamStore`]: the ordered set of named parameter
+//!   tensors matching an artifact manifest's `params` slots, loadable
+//!   from the `artifacts/init/<tag>/` dumps so Rust and Python agree on
+//!   Θ₀ bit-for-bit.
+//! * [`memory`] — the analytical peak-memory model that regenerates
+//!   Table 2 at true RoBERTa-large scale and audits the proxy runs.
+
+mod memory;
+mod store;
+mod tensor;
+
+pub use memory::{MemoryBreakdown, MemoryModel, TrainMethod};
+pub use store::ParamStore;
+pub use tensor::{gemm_nt_f32, lift_into, zo_update_into};

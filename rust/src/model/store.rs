@@ -1,0 +1,204 @@
+//! Parameter store: the ordered, named set of f32/i32 tensors matching
+//! an artifact manifest's `params[...]` input slots.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{ArtifactManifest, HostTensor, TensorSpec};
+#[cfg(test)]
+use crate::runtime::DType;
+
+/// Ordered parameter set. Order matches the `params` prefix slots of the
+/// artifact the store was built for, so `tensors()` can be spliced
+/// directly into the input vector.
+pub struct ParamStore {
+    specs: Vec<TensorSpec>,
+    tensors: Vec<HostTensor>,
+}
+
+impl ParamStore {
+    /// Load Θ₀ from an `artifacts/init/<tag>/` dump, validated against
+    /// the manifest's `params` slots.
+    pub fn load_init(artifacts_dir: &Path, tag: &str, manifest: &ArtifactManifest) -> Result<Self> {
+        let specs: Vec<TensorSpec> = manifest
+            .inputs
+            .iter()
+            .filter(|s| s.name.starts_with("params"))
+            .cloned()
+            .collect();
+        if specs.is_empty() {
+            bail!("manifest {} has no params inputs", manifest.name);
+        }
+        let dir = artifacts_dir.join("init").join(tag);
+        let mut tensors = Vec::with_capacity(specs.len());
+        for (i, spec) in specs.iter().enumerate() {
+            let path = dir.join(format!("p_{i:03}.bin"));
+            let t = HostTensor::from_bin_file(&path, spec)
+                .with_context(|| format!("loading init param {} ({})", i, spec.name))?;
+            tensors.push(t);
+        }
+        Ok(ParamStore { specs, tensors })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total trainable element count.
+    pub fn num_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.num_elements()).sum()
+    }
+
+    pub fn specs(&self) -> &[TensorSpec] {
+        &self.specs
+    }
+
+    pub fn tensors(&self) -> &[HostTensor] {
+        &self.tensors
+    }
+
+    /// Position within the store (not the artifact) of a named param.
+    pub fn position(&self, name_suffix: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.name.ends_with(name_suffix))
+    }
+
+    /// Mutable f32 view of param `i`.
+    pub fn f32_mut(&mut self, i: usize) -> Result<&mut [f32]> {
+        self.tensors[i].as_f32_mut()
+    }
+
+    pub fn f32(&self, i: usize) -> Result<&[f32]> {
+        self.tensors[i].as_f32()
+    }
+
+    pub fn shape(&self, i: usize) -> &[usize] {
+        &self.specs[i].shape
+    }
+
+    pub fn name(&self, i: usize) -> &str {
+        &self.specs[i].name
+    }
+
+    /// Save a checkpoint (same binary layout as the init dumps).
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut lines = Vec::new();
+        for (i, (spec, t)) in self.specs.iter().zip(&self.tensors).enumerate() {
+            let bytes: Vec<u8> = match t {
+                HostTensor::F32 { data, .. } => {
+                    data.iter().flat_map(|v| v.to_le_bytes()).collect()
+                }
+                HostTensor::I32 { data, .. } => {
+                    data.iter().flat_map(|v| v.to_le_bytes()).collect()
+                }
+            };
+            std::fs::write(dir.join(format!("p_{i:03}.bin")), bytes)?;
+            let shape = if spec.shape.is_empty() {
+                "scalar".to_string()
+            } else {
+                spec.shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+            };
+            lines.push(format!("param {i} {} {} {shape}", spec.name, spec.dtype.tag()));
+        }
+        std::fs::write(dir.join("params.txt"), lines.join("\n") + "\n")?;
+        Ok(())
+    }
+
+    /// Load a checkpoint previously written by [`save`] (or aot.py).
+    pub fn load_checkpoint(dir: &Path, reference: &ParamStore) -> Result<Self> {
+        let mut tensors = Vec::with_capacity(reference.specs.len());
+        for (i, spec) in reference.specs.iter().enumerate() {
+            let t = HostTensor::from_bin_file(&dir.join(format!("p_{i:03}.bin")), spec)?;
+            tensors.push(t);
+        }
+        Ok(ParamStore { specs: reference.specs.clone(), tensors })
+    }
+
+    /// Total parameter bytes (f32).
+    pub fn byte_size(&self) -> usize {
+        self.specs.iter().map(|s| s.byte_len()).sum()
+    }
+
+    /// Sanity check: all values finite.
+    pub fn assert_finite(&self) -> Result<()> {
+        for (spec, t) in self.specs.iter().zip(&self.tensors) {
+            if let Ok(data) = t.as_f32() {
+                if data.iter().any(|v| !v.is_finite()) {
+                    bail!("non-finite values in param {}", spec.name);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Overwrite param `i` (used by tests and the checkpoint path).
+    pub fn set(&mut self, i: usize, t: HostTensor) -> Result<()> {
+        t.check_spec(&self.specs[i])?;
+        self.tensors[i] = t;
+        Ok(())
+    }
+
+    #[cfg(test)]
+    pub(crate) fn for_test(specs: Vec<TensorSpec>, tensors: Vec<HostTensor>) -> Self {
+        ParamStore { specs, tensors }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_store() -> ParamStore {
+        let specs = vec![
+            TensorSpec { index: 0, name: "params[embed]".into(), dtype: DType::F32, shape: vec![4, 2] },
+            TensorSpec { index: 1, name: "params[layer0.wq]".into(), dtype: DType::F32, shape: vec![2, 2] },
+        ];
+        let tensors = vec![
+            HostTensor::f32(vec![4, 2], (0..8).map(|i| i as f32).collect()),
+            HostTensor::f32(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]),
+        ];
+        ParamStore::for_test(specs, tensors)
+    }
+
+    #[test]
+    fn lookup_and_sizes() {
+        let s = toy_store();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.num_elements(), 12);
+        assert_eq!(s.byte_size(), 48);
+        assert_eq!(s.position("wq]"), Some(1));
+        assert_eq!(s.position("nope"), None);
+        assert_eq!(s.shape(0), &[4, 2]);
+    }
+
+    #[test]
+    fn save_and_reload_roundtrip() {
+        let mut s = toy_store();
+        s.f32_mut(1).unwrap()[0] = 42.0;
+        let dir = std::env::temp_dir().join("lowrank_sge_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        s.save(&dir).unwrap();
+        let restored = ParamStore::load_checkpoint(&dir, &s).unwrap();
+        assert_eq!(restored.f32(1).unwrap()[0], 42.0);
+        assert_eq!(restored.f32(0).unwrap(), s.f32(0).unwrap());
+    }
+
+    #[test]
+    fn finite_check_catches_nan() {
+        let mut s = toy_store();
+        s.f32_mut(0).unwrap()[3] = f32::NAN;
+        assert!(s.assert_finite().is_err());
+    }
+
+    #[test]
+    fn set_validates_spec() {
+        let mut s = toy_store();
+        assert!(s.set(1, HostTensor::f32(vec![2, 2], vec![0.0; 4])).is_ok());
+        assert!(s.set(1, HostTensor::f32(vec![4], vec![0.0; 4])).is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Minimal f32 tensor kernels for the L3 hot path.
+//!
+//! The only dense math Rust does per training step is O(m·r) optimizer
+//! updates; the O(m·n·r) lift runs once per K steps (Algorithm 1 line
+//! 8). Both are implemented here with the same k-innermost blocking as
+//! the f64 `linalg` GEMM.
+
+/// C += A·Bᵀ with A (m×r), B (n×r), C (m×n), all row-major f32.
+/// This is exactly the lift ΔΘ = B_aux·Vᵀ with A = B_aux, B = V.
+pub fn gemm_nt_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, r: usize) {
+    assert_eq!(a.len(), m * r);
+    assert_eq!(b.len(), n * r);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * r..(i + 1) * r];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * r..(j + 1) * r];
+            let mut s = 0.0f32;
+            for k in 0..r {
+                s += arow[k] * brow[k];
+            }
+            crow[j] += s;
+        }
+    }
+}
+
+/// Θ += B_aux·Vᵀ — the Algorithm 1 outer update, in place.
+pub fn lift_into(theta: &mut [f32], b_aux: &[f32], v: &[f32], m: usize, n: usize, r: usize) {
+    gemm_nt_f32(b_aux, v, theta, m, n, r);
+}
+
+/// Θ += scale·Z·Vᵀ — the ZO/LR update direction lifted to the full
+/// space (used by the Vanilla-LR trainer where the estimator is
+/// scale·Z·Vᵀ with scale = (F⁺−F⁻)/(2σ)).
+pub fn zo_update_into(
+    theta: &mut [f32],
+    z: &[f32],
+    v: &[f32],
+    scale: f32,
+    m: usize,
+    n: usize,
+    r: usize,
+) {
+    assert_eq!(z.len(), m * r);
+    assert_eq!(v.len(), n * r);
+    assert_eq!(theta.len(), m * n);
+    for i in 0..m {
+        let zrow = &z[i * r..(i + 1) * r];
+        let trow = &mut theta[i * n..(i + 1) * n];
+        for j in 0..n {
+            let vrow = &v[j * r..(j + 1) * r];
+            let mut s = 0.0f32;
+            for k in 0..r {
+                s += zrow[k] * vrow[k];
+            }
+            trow[j] += scale * s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_nt_matches_naive() {
+        let (m, n, r) = (5, 7, 3);
+        let a: Vec<f32> = (0..m * r).map(|i| (i as f32) * 0.1 - 0.5).collect();
+        let b: Vec<f32> = (0..n * r).map(|i| (i as f32) * 0.05 - 0.3).collect();
+        let mut c = vec![1.0f32; m * n];
+        gemm_nt_f32(&a, &b, &mut c, m, n, r);
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 1.0;
+                for k in 0..r {
+                    want += a[i * r + k] * b[j * r + k];
+                }
+                assert!((c[i * n + j] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn lift_matches_rank1_outer_product() {
+        // r = 1: Θ += b·vᵀ
+        let (m, n) = (3, 4);
+        let b = vec![1.0f32, 2.0, 3.0];
+        let v = vec![0.5f32, -1.0, 0.0, 2.0];
+        let mut theta = vec![0.0f32; m * n];
+        lift_into(&mut theta, &b, &v, m, n, 1);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(theta[i * n + j], b[i] * v[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn zo_update_scales() {
+        let (m, n, r) = (2, 2, 2);
+        let z = vec![1.0f32, 0.0, 0.0, 1.0];
+        let v = vec![1.0f32, 0.0, 0.0, 1.0];
+        let mut theta = vec![0.0f32; 4];
+        zo_update_into(&mut theta, &z, &v, -2.0, m, n, r);
+        assert_eq!(theta, vec![-2.0, 0.0, 0.0, -2.0]); // −2·I
+    }
+
+    #[test]
+    fn lift_consistent_with_f64_linalg() {
+        use crate::linalg::{matmul_nt, Mat};
+        let (m, n, r) = (9, 11, 4);
+        let mut rng = crate::rng::Rng::new(5);
+        let a64 = Mat::from_fn(m, r, |_, _| rng.normal());
+        let b64 = Mat::from_fn(n, r, |_, _| rng.normal());
+        let want = matmul_nt(&a64, &b64);
+        let a32: Vec<f32> = a64.data.iter().map(|&x| x as f32).collect();
+        let b32: Vec<f32> = b64.data.iter().map(|&x| x as f32).collect();
+        let mut c = vec![0.0f32; m * n];
+        lift_into(&mut c, &a32, &b32, m, n, r);
+        for (got, want) in c.iter().zip(&want.data) {
+            assert!((*got as f64 - want).abs() < 1e-5);
+        }
+    }
+}

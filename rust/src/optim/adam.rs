@@ -1,0 +1,167 @@
+//! Adam (Kingma & Ba 2014) with decoupled weight decay, operating on
+//! flat f32 slices — one instance per named tensor. In subspace training
+//! the B-tensors are m×r, so the two moment buffers cost O(mr) instead
+//! of O(mn): the optimizer-state column of Table 2.
+
+/// Hyperparameters (paper §6.2.2: β₁ = 0.9, β₂ = 0.999, wd = 0.05).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+impl AdamConfig {
+    pub fn paper_pretrain() -> Self {
+        AdamConfig { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.05 }
+    }
+}
+
+/// Adam state for one tensor.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    cfg: AdamConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(len: usize, cfg: AdamConfig) -> Self {
+        Adam { cfg, m: vec![0.0; len], v: vec![0.0; len], t: 0 }
+    }
+
+    /// Bytes of optimizer state held (for the memory accounting).
+    pub fn state_bytes(&self) -> usize {
+        8 * self.m.len()
+    }
+
+    /// Reset moments (used when the subspace is resampled: the old
+    /// moments live in the old V's coordinates and are meaningless in
+    /// the new subspace — the paper's "subproblem reset interval").
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+
+    /// One update: param ← param − lr·( m̂/(√v̂+ε) + wd·param ).
+    pub fn step(&mut self, param: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(param.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let wd = self.cfg.weight_decay;
+        for i in 0..param.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            param[i] -= lr * (mhat / (vhat.sqrt() + self.cfg.eps) + wd * param[i]);
+        }
+    }
+
+    pub fn steps_taken(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scalar reference implementation for cross-checking.
+    fn reference_adam(g_seq: &[f32], lr: f32, cfg: AdamConfig, x0: f32) -> f32 {
+        let (mut m, mut v, mut x) = (0.0f32, 0.0f32, x0);
+        for (t, &g) in g_seq.iter().enumerate() {
+            let t = (t + 1) as i32;
+            m = cfg.beta1 * m + (1.0 - cfg.beta1) * g;
+            v = cfg.beta2 * v + (1.0 - cfg.beta2) * g * g;
+            let mhat = m / (1.0 - cfg.beta1.powi(t));
+            let vhat = v / (1.0 - cfg.beta2.powi(t));
+            x -= lr * (mhat / (vhat.sqrt() + cfg.eps) + cfg.weight_decay * x);
+        }
+        x
+    }
+
+    #[test]
+    fn matches_scalar_reference() {
+        let cfg = AdamConfig { weight_decay: 0.01, ..Default::default() };
+        let mut opt = Adam::new(1, cfg);
+        let mut x = [0.5f32];
+        let gs = [0.3, -0.1, 0.7, 0.2, -0.5];
+        for &g in &gs {
+            opt.step(&mut x, &[g], 1e-2);
+        }
+        let want = reference_adam(&gs, 1e-2, cfg, 0.5);
+        assert!((x[0] - want).abs() < 1e-6, "{} vs {want}", x[0]);
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // classic Adam property: |Δx| ≈ lr on step 1 regardless of g scale
+        for &g in &[1e-6f32, 1.0, 1e4] {
+            let mut opt = Adam::new(1, AdamConfig::default());
+            let mut x = [0.0f32];
+            opt.step(&mut x, &[g], 0.01);
+            assert!((x[0].abs() - 0.01).abs() < 1e-4, "g={g}: step {}", x[0]);
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize ½Σ(x_i − a_i)²
+        let a: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) * 0.1).collect();
+        let mut x = vec![0.0f32; 16];
+        let mut opt = Adam::new(16, AdamConfig::default());
+        for _ in 0..2000 {
+            let g: Vec<f32> = x.iter().zip(&a).map(|(xi, ai)| xi - ai).collect();
+            opt.step(&mut x, &g, 0.01);
+        }
+        for (xi, ai) in x.iter().zip(&a) {
+            assert!((xi - ai).abs() < 1e-2, "{xi} vs {ai}");
+        }
+    }
+
+    #[test]
+    fn reset_clears_moments() {
+        let mut opt = Adam::new(4, AdamConfig::default());
+        let mut x = vec![0.0f32; 4];
+        opt.step(&mut x, &[1.0; 4], 0.1);
+        assert_eq!(opt.steps_taken(), 1);
+        opt.reset();
+        assert_eq!(opt.steps_taken(), 0);
+        // after reset, behaves like fresh: first step ≈ lr again
+        let mut y = vec![0.0f32; 4];
+        opt.step(&mut y, &[123.0; 4], 0.1);
+        assert!((y[0].abs() - 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn state_bytes_counts_two_f32_buffers() {
+        let opt = Adam::new(100, AdamConfig::default());
+        assert_eq!(opt.state_bytes(), 800);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params_without_gradient() {
+        let cfg = AdamConfig { weight_decay: 0.1, ..Default::default() };
+        let mut opt = Adam::new(1, cfg);
+        let mut x = [1.0f32];
+        for _ in 0..10 {
+            opt.step(&mut x, &[0.0], 0.1);
+        }
+        assert!(x[0] < 1.0 && x[0] > 0.8);
+    }
+}

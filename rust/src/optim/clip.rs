@@ -1,0 +1,67 @@
+//! Global-norm gradient clipping (paper §6.2.2: clip at 1.0), applied
+//! jointly across all trainable tensors of a step.
+
+/// √(Σ over all tensors of Σ g²).
+pub fn global_norm(grads: &[&[f32]]) -> f32 {
+    grads
+        .iter()
+        .map(|g| g.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>())
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+/// Scale every gradient by min(1, max_norm/‖g‖). Returns the pre-clip
+/// norm (logged by the trainers).
+pub fn clip_global_norm(grads: &mut [&mut [f32]], max_norm: f32) -> f32 {
+    let views: Vec<&[f32]> = grads.iter().map(|g| &**g).collect();
+    let norm = global_norm(&views);
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for x in g.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_across_tensors() {
+        let a = [3.0f32];
+        let b = [4.0f32];
+        assert!((global_norm(&[&a, &b]) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn no_clip_when_below_threshold() {
+        let mut a = vec![0.3f32, 0.4];
+        let pre = clip_global_norm(&mut [&mut a], 1.0);
+        assert!((pre - 0.5).abs() < 1e-6);
+        assert_eq!(a, vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn clips_to_exact_norm() {
+        let mut a = vec![3.0f32];
+        let mut b = vec![4.0f32];
+        let pre = clip_global_norm(&mut [&mut a, &mut b], 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        let post = global_norm(&[&a, &b]);
+        assert!((post - 1.0).abs() < 1e-6);
+        // direction preserved
+        assert!((a[0] / b[0] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_gradient_is_noop() {
+        let mut a = vec![0.0f32; 4];
+        let pre = clip_global_norm(&mut [&mut a], 1.0);
+        assert_eq!(pre, 0.0);
+        assert!(a.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,103 @@
+//! The lazy-update state machine (paper §4.2, Algorithm 1).
+//!
+//! One outer iteration = sample V, run K inner steps on B in span(V),
+//! then lift Θ ← Θ + B_K·Vᵀ and reset. The controller tells the trainer
+//! what to do at each global step; the trainer stays a flat loop.
+
+/// What the trainer must do *before* the gradient step at a given
+/// global step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LazyAction {
+    /// First step of an outer iteration: lift the previous B (unless
+    /// this is step 0), reset B ← 0, resample V, reset B-optimizer.
+    ResampleSubspace,
+    /// Plain inner step: keep the current subspace.
+    InnerStep,
+}
+
+/// Tracks the outer/inner structure. `k_interval` is the paper's K
+/// ("lazy update interval" = 50 in fine-tuning, "subproblem reset
+/// interval" = 200 in pretraining).
+#[derive(Clone, Copy, Debug)]
+pub struct LazyUpdateController {
+    k_interval: u64,
+}
+
+impl LazyUpdateController {
+    pub fn new(k_interval: u64) -> Self {
+        assert!(k_interval >= 1, "K must be ≥ 1");
+        LazyUpdateController { k_interval }
+    }
+
+    pub fn k_interval(&self) -> u64 {
+        self.k_interval
+    }
+
+    /// Action before executing global step `step` (0-based).
+    pub fn action(&self, step: u64) -> LazyAction {
+        if step % self.k_interval == 0 {
+            LazyAction::ResampleSubspace
+        } else {
+            LazyAction::InnerStep
+        }
+    }
+
+    /// Does a lift happen when *finishing* step `step`? (Exactly the
+    /// steps after which the next action is a resample; the final lift
+    /// at training end is the trainer's job.)
+    pub fn lifts_after(&self, step: u64) -> bool {
+        (step + 1) % self.k_interval == 0
+    }
+
+    /// Outer-iteration index t of a global step.
+    pub fn outer_index(&self, step: u64) -> u64 {
+        step / self.k_interval
+    }
+
+    /// Inner-step index k within the outer iteration.
+    pub fn inner_index(&self, step: u64) -> u64 {
+        step % self.k_interval
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k1_resamples_every_step() {
+        let c = LazyUpdateController::new(1);
+        for s in 0..5 {
+            assert_eq!(c.action(s), LazyAction::ResampleSubspace);
+            assert!(c.lifts_after(s));
+        }
+    }
+
+    #[test]
+    fn schedule_structure_k3() {
+        let c = LazyUpdateController::new(3);
+        let actions: Vec<bool> = (0..9)
+            .map(|s| c.action(s) == LazyAction::ResampleSubspace)
+            .collect();
+        assert_eq!(actions, vec![true, false, false, true, false, false, true, false, false]);
+        let lifts: Vec<bool> = (0..9).map(|s| c.lifts_after(s)).collect();
+        assert_eq!(lifts, vec![false, false, true, false, false, true, false, false, true]);
+    }
+
+    #[test]
+    fn indices_consistent() {
+        let c = LazyUpdateController::new(4);
+        assert_eq!(c.outer_index(0), 0);
+        assert_eq!(c.outer_index(7), 1);
+        assert_eq!(c.inner_index(7), 3);
+        assert_eq!(c.outer_index(8), 2);
+        assert_eq!(c.inner_index(8), 0);
+    }
+
+    #[test]
+    fn every_step_has_exactly_one_lift_per_k_steps() {
+        let c = LazyUpdateController::new(50);
+        let lifts = (0..500).filter(|&s| c.lifts_after(s)).count();
+        assert_eq!(lifts, 10);
+    }
+}

@@ -1,0 +1,26 @@
+//! Optimizer stack for Algorithm 1 (low-rank gradient descent with lazy
+//! update).
+//!
+//! * [`adam`] — Adam "specifically adapted for subspace training"
+//!   (paper §6.2.2): moment buffers live on the m×r auxiliary variable B
+//!   (and on the full-rank trainables), which is exactly where the
+//!   paper's optimizer-state memory saving comes from.
+//! * [`sgd`] — plain SGD with optional momentum (the toy/finetune
+//!   inner-loop default).
+//! * [`schedule`] — cosine annealing with linear warmup (paper §6.2.2:
+//!   warmup 1000, cycle 100k; scaled down in the proxy configs).
+//! * [`clip`] — global-norm gradient clipping at 1.0 (paper §6.2.2).
+//! * [`lazy`] — the outer/inner lazy-update state machine: reuse one
+//!   sampled subspace V for K inner steps, then lift and resample.
+
+mod adam;
+mod clip;
+mod lazy;
+mod schedule;
+mod sgd;
+
+pub use adam::{Adam, AdamConfig};
+pub use clip::{clip_global_norm, global_norm};
+pub use lazy::{LazyAction, LazyUpdateController};
+pub use schedule::{CosineSchedule, LrSchedule};
+pub use sgd::Sgd;

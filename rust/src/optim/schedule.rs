@@ -1,0 +1,89 @@
+//! Learning-rate schedules. Paper §6.2.2: cosine annealing with a
+//! 100k-step cycle and 1000 warmup steps (scaled down proportionally in
+//! the proxy configs).
+
+/// A learning-rate schedule.
+pub trait LrSchedule {
+    fn lr(&self, step: u64) -> f32;
+}
+
+/// Linear warmup to `base_lr`, then cosine decay to `min_lr` over
+/// `total_steps`.
+#[derive(Clone, Copy, Debug)]
+pub struct CosineSchedule {
+    pub base_lr: f32,
+    pub min_lr: f32,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+}
+
+impl CosineSchedule {
+    pub fn new(base_lr: f32, warmup_steps: u64, total_steps: u64) -> Self {
+        assert!(total_steps > warmup_steps, "cycle shorter than warmup");
+        CosineSchedule { base_lr, min_lr: base_lr * 0.1, warmup_steps, total_steps }
+    }
+
+    /// Constant schedule (warmup 0, no decay) — used by the finetune
+    /// experiments which fix lr = 1e-6 (paper §6.2.1).
+    pub fn constant(lr: f32) -> Self {
+        CosineSchedule { base_lr: lr, min_lr: lr, warmup_steps: 0, total_steps: u64::MAX }
+    }
+}
+
+impl LrSchedule for CosineSchedule {
+    fn lr(&self, step: u64) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if self.total_steps == u64::MAX {
+            return self.base_lr;
+        }
+        let t = (step - self.warmup_steps).min(self.total_steps - self.warmup_steps) as f32;
+        let horizon = (self.total_steps - self.warmup_steps) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t / horizon).cos());
+        self.min_lr + (self.base_lr - self.min_lr) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = CosineSchedule::new(1.0, 10, 100);
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_min() {
+        let s = CosineSchedule::new(1.0, 10, 100);
+        assert!((s.lr(10) - 1.0).abs() < 1e-6);
+        let mid = s.lr(55);
+        assert!(mid < 1.0 && mid > 0.1);
+        assert!((s.lr(100) - 0.1).abs() < 1e-3);
+        // past the horizon it stays at min
+        assert!((s.lr(10_000) - 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = CosineSchedule::new(3e-3, 100, 10_000);
+        let mut prev = f32::INFINITY;
+        for step in (100..10_000).step_by(500) {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-9, "lr increased at {step}");
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn constant_schedule_is_flat() {
+        let s = CosineSchedule::constant(1e-6);
+        for step in [0u64, 1, 1000, 1_000_000] {
+            assert_eq!(s.lr(step), 1e-6);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! SGD with optional heavy-ball momentum (flat-slice form, matching the
+//! [`super::Adam`] interface).
+
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    momentum: f32,
+    buf: Option<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(len: usize, momentum: f32) -> Self {
+        assert!((0.0..1.0).contains(&momentum), "momentum in [0,1)");
+        let buf = if momentum > 0.0 { Some(vec![0.0; len]) } else { None };
+        Sgd { momentum, buf }
+    }
+
+    pub fn reset(&mut self) {
+        if let Some(b) = &mut self.buf {
+            b.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.buf.as_ref().map_or(0, |b| 4 * b.len())
+    }
+
+    pub fn step(&mut self, param: &mut [f32], grad: &[f32], lr: f32) {
+        assert_eq!(param.len(), grad.len());
+        match &mut self.buf {
+            None => {
+                for (p, g) in param.iter_mut().zip(grad) {
+                    *p -= lr * g;
+                }
+            }
+            Some(buf) => {
+                let mu = self.momentum;
+                for i in 0..param.len() {
+                    buf[i] = mu * buf[i] + grad[i];
+                    param[i] -= lr * buf[i];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_step() {
+        let mut opt = Sgd::new(2, 0.0);
+        let mut x = [1.0f32, 2.0];
+        opt.step(&mut x, &[0.5, -0.5], 0.1);
+        assert_eq!(x, [0.95, 2.05]);
+        assert_eq!(opt.state_bytes(), 0);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(1, 0.9);
+        let mut x = [0.0f32];
+        opt.step(&mut x, &[1.0], 1.0); // v=1, x=-1
+        opt.step(&mut x, &[1.0], 1.0); // v=1.9, x=-2.9
+        assert!((x[0] + 2.9).abs() < 1e-6);
+        assert_eq!(opt.state_bytes(), 4);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = Sgd::new(1, 0.9);
+        let mut x = [5.0f32];
+        for _ in 0..300 {
+            let g = x[0] - 2.0;
+            opt.step(&mut x, &[g], 0.05);
+        }
+        assert!((x[0] - 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn reset_zeroes_momentum() {
+        let mut opt = Sgd::new(1, 0.5);
+        let mut x = [0.0f32];
+        opt.step(&mut x, &[1.0], 1.0);
+        opt.reset();
+        let mut y = [0.0f32];
+        opt.step(&mut y, &[1.0], 1.0);
+        assert_eq!(y[0], -1.0); // no leftover momentum
+    }
+}

@@ -1,0 +1,141 @@
+//! Coordinate-axis sampler (Algorithm 3) — the discrete instance-
+//! independent optimum.
+//!
+//! Select r of the n coordinates uniformly without replacement, stack the
+//! corresponding standard basis vectors, rescale by α = √(cn/r). Like the
+//! Haar–Stiefel law it satisfies VᵀV = (cn/r)I almost surely and
+//! E[VVᵀ] = cI (Proposition 2(ii)) — but each draw touches only r rows,
+//! so sampling is O(r) instead of O(nr²): the cheap choice in the
+//! training hot loop.
+
+use super::ProjectionSampler;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CoordinateSampler {
+    n: usize,
+    r: usize,
+    c: f64,
+    alpha: f64,
+}
+
+impl CoordinateSampler {
+    pub fn new(n: usize, r: usize, c: f64) -> Self {
+        assert!(r >= 1 && r <= n, "rank r={r} out of range for n={n}");
+        assert!(c > 0.0, "c must be positive");
+        CoordinateSampler { n, r, c, alpha: (c * n as f64 / r as f64).sqrt() }
+    }
+
+    /// Draw just the selected coordinate set J (|J| = r, sorted) — used
+    /// by callers that exploit the sparsity of V directly.
+    pub fn sample_support(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut j = rng.sample_without_replacement(self.n, self.r);
+        j.sort_unstable();
+        j
+    }
+}
+
+impl ProjectionSampler for CoordinateSampler {
+    fn sample(&mut self, rng: &mut Rng) -> Mat {
+        let j = self.sample_support(rng);
+        let mut v = Mat::zeros(self.n, self.r);
+        for (k, &jk) in j.iter().enumerate() {
+            v.set(jk, k, self.alpha);
+        }
+        v
+    }
+
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn rank(&self) -> usize {
+        self.r
+    }
+
+    fn scale_c(&self) -> f64 {
+        self.c
+    }
+
+    fn name(&self) -> &'static str {
+        "coordinate"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_tn};
+    use crate::projection::tests::check_mean_isotropy;
+    use crate::projection::projector_matrix;
+
+    #[test]
+    fn gram_is_exactly_scaled_identity() {
+        let (n, r, c) = (25, 6, 1.0);
+        let mut s = CoordinateSampler::new(n, r, c);
+        let mut rng = Rng::new(31);
+        for _ in 0..20 {
+            let v = s.sample(&mut rng);
+            let gram = matmul_tn(&v, &v);
+            let target = Mat::eye(r).scaled(c * n as f64 / r as f64);
+            assert!(gram.max_abs_diff(&target) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn projector_is_diagonal_with_alpha_sq_on_support() {
+        let (n, r, c) = (10, 3, 1.0);
+        let mut s = CoordinateSampler::new(n, r, c);
+        let mut rng = Rng::new(37);
+        let v = s.sample(&mut rng);
+        let p = projector_matrix(&v);
+        let alpha_sq = c * n as f64 / r as f64;
+        let mut on_support = 0;
+        for i in 0..n {
+            for j in 0..n {
+                let val = p.get(i, j);
+                if i == j && val.abs() > 1e-12 {
+                    assert!((val - alpha_sq).abs() < 1e-12);
+                    on_support += 1;
+                } else if i != j {
+                    assert!(val.abs() < 1e-12, "off-diagonal leak at ({i},{j})");
+                }
+            }
+        }
+        assert_eq!(on_support, r);
+    }
+
+    #[test]
+    fn mean_projector_is_c_identity() {
+        let mut s = CoordinateSampler::new(12, 4, 1.0);
+        check_mean_isotropy(&mut s, 30_000, 0.05);
+    }
+
+    #[test]
+    fn tr_p2_attains_thm2_floor_exactly() {
+        let (n, r, c) = (18, 3, 0.5);
+        let mut s = CoordinateSampler::new(n, r, c);
+        let mut rng = Rng::new(41);
+        let floor = (n * n) as f64 * c * c / r as f64;
+        for _ in 0..10 {
+            let p = projector_matrix(&s.sample(&mut rng));
+            let p2 = matmul(&p, &p);
+            assert!((p2.trace() - floor).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn support_is_distinct_and_sorted() {
+        let s = CoordinateSampler::new(15, 5, 1.0);
+        let mut rng = Rng::new(43);
+        for _ in 0..100 {
+            let j = s.sample_support(&mut rng);
+            assert_eq!(j.len(), 5);
+            for w in j.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(*j.last().unwrap() < 15);
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Instance-dependent optimal sampler (Algorithm 4).
+//!
+//! Given Σ = Σ_ξ + Σ_Θ (known or estimated from warm-up gradients):
+//!
+//! 1. spectral-decompose Σ = Q diag(σ) Qᵀ (Jacobi, [`crate::linalg`]);
+//! 2. water-fill the optimal inclusion probabilities π* (Theorem 3 /
+//!    eq. 17, [`crate::sampling::optimal_inclusion`]);
+//! 3. draw J, |J| = r, with Pr(i ∈ J) = π*_i via a fixed-size
+//!    unequal-probability design;
+//! 4. emit V = Q_J · diag(√(c/π*_i)) — the 1/π* reweighting restores
+//!    E[VVᵀ] = cI (Proposition 3) while E[QᵀP²Q] = c² diag(1/π*) attains
+//!    Φ_min.
+//!
+//! The eigendecomposition and water-filling are done **once at
+//! construction** and reused for every draw — in training, the lazy
+//! update (Algorithm 1) refreshes Σ only once per outer step, so this
+//! amortization mirrors the paper's cost model.
+
+use super::ProjectionSampler;
+use crate::linalg::{sym_eig, Mat};
+use crate::rng::Rng;
+use crate::sampling::{
+    conditional_poisson_calibrate, optimal_inclusion, sample_conditional_poisson,
+    sample_sampford, sample_systematic, sample_tille, CpsDesign, FixedSizeDesign,
+};
+
+pub struct DependentSampler {
+    n: usize,
+    r: usize,
+    c: f64,
+    /// Eigenvectors of Σ (columns).
+    q: Mat,
+    /// Eigenvalues of Σ, descending.
+    sigma: Vec<f64>,
+    /// Optimal inclusion probabilities aligned with `sigma`.
+    pi: Vec<f64>,
+    design: FixedSizeDesign,
+    cps: Option<CpsDesign>,
+}
+
+impl DependentSampler {
+    /// Build from a symmetric PSD Σ estimate with the default
+    /// (systematic) design.
+    pub fn new(sigma_mat: &Mat, r: usize, c: f64) -> Self {
+        Self::with_design(sigma_mat, r, c, FixedSizeDesign::Systematic)
+    }
+
+    pub fn with_design(sigma_mat: &Mat, r: usize, c: f64, design: FixedSizeDesign) -> Self {
+        assert!(sigma_mat.is_square(), "Σ must be square");
+        let n = sigma_mat.rows;
+        assert!(r >= 1 && r <= n, "rank r={r} out of range for n={n}");
+        assert!(c > 0.0, "c must be positive");
+        let eig = sym_eig(sigma_mat);
+        let sol = optimal_inclusion(&eig.values, r, crate::sampling::DEFAULT_SIGMA_FLOOR);
+        let cps = match design {
+            FixedSizeDesign::ConditionalPoisson => {
+                Some(conditional_poisson_calibrate(&sol.pi, r))
+            }
+            _ => None,
+        };
+        DependentSampler { n, r, c, q: eig.q, sigma: eig.values, pi: sol.pi, design, cps }
+    }
+
+    /// The water-filled inclusion probabilities π* (descending-σ order).
+    pub fn inclusion_probabilities(&self) -> &[f64] {
+        &self.pi
+    }
+
+    /// Eigenvalues σ (descending).
+    pub fn spectrum(&self) -> &[f64] {
+        &self.sigma
+    }
+
+    /// Eigenbasis Q of the Σ estimate.
+    pub fn eigenbasis(&self) -> &Mat {
+        &self.q
+    }
+
+    /// Φ_min/c² — the Theorem 3 optimal objective for this instance.
+    pub fn phi_min_over_c2(&self) -> f64 {
+        self.sigma
+            .iter()
+            .zip(&self.pi)
+            .map(|(&s, &p)| if p > 0.0 { s / p } else { 0.0 })
+            .sum()
+    }
+
+    fn draw_subset(&self, rng: &mut Rng) -> Vec<usize> {
+        match self.design {
+            FixedSizeDesign::Systematic => sample_systematic(&self.pi, self.r, rng),
+            FixedSizeDesign::Sampford => sample_sampford(&self.pi, self.r, rng),
+            FixedSizeDesign::Tille => sample_tille(&self.pi, self.r, rng),
+            FixedSizeDesign::ConditionalPoisson => {
+                sample_conditional_poisson(self.cps.as_ref().unwrap(), rng)
+            }
+        }
+    }
+}
+
+impl ProjectionSampler for DependentSampler {
+    fn sample(&mut self, rng: &mut Rng) -> Mat {
+        let j = self.draw_subset(rng);
+        debug_assert_eq!(j.len(), self.r);
+        // V[:, k] = √(c/π*_{j_k}) · q_{j_k}
+        let mut v = Mat::zeros(self.n, self.r);
+        for (k, &jk) in j.iter().enumerate() {
+            let w = (self.c / self.pi[jk]).sqrt();
+            for i in 0..self.n {
+                v.set(i, k, w * self.q.get(i, jk));
+            }
+        }
+        v
+    }
+
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn rank(&self) -> usize {
+        self.r
+    }
+
+    fn scale_c(&self) -> f64 {
+        self.c
+    }
+
+    fn name(&self) -> &'static str {
+        "dependent"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_tn, transpose};
+    use crate::projection::{empirical_moments, projector_matrix};
+
+    /// A non-flat PSD Σ with a known eigenbasis (diagonal in a rotated
+    /// frame to exercise the eigensolver path).
+    fn test_sigma(n: usize) -> (Mat, Vec<f64>) {
+        let vals: Vec<f64> = (0..n).map(|i| 2.0f64.powi(-(i as i32))).collect();
+        // rotate by a Householder reflector H = I − 2uuᵀ
+        let u: Vec<f64> = (0..n).map(|i| ((i + 1) as f64).sqrt()).collect();
+        let norm_sq: f64 = u.iter().map(|x| x * x).sum();
+        let h = Mat::from_fn(n, n, |i, j| {
+            let d = if i == j { 1.0 } else { 0.0 };
+            d - 2.0 * u[i] * u[j] / norm_sq
+        });
+        let lam = Mat::diag(&vals);
+        let sig = matmul(&matmul(&h, &lam), &transpose(&h));
+        (sig, vals)
+    }
+
+    #[test]
+    fn mean_projector_is_c_identity() {
+        let (sig, _) = test_sigma(8);
+        for design in [
+            FixedSizeDesign::Systematic,
+            FixedSizeDesign::Sampford,
+            FixedSizeDesign::ConditionalPoisson,
+            FixedSizeDesign::Tille,
+        ] {
+            let mut s = DependentSampler::with_design(&sig, 3, 1.0, design);
+            let mut rng = Rng::new(51);
+            let m = empirical_moments(&mut s, &mut rng, 20_000);
+            let err = m.mean_p.max_abs_diff(&Mat::eye(8));
+            assert!(err < 0.06, "{}: ‖Ē[P] − I‖ = {err}", design.name());
+        }
+    }
+
+    #[test]
+    fn second_moment_diagonal_in_eigenbasis_matches_prop3() {
+        let (sig, _) = test_sigma(6);
+        let mut s = DependentSampler::new(&sig, 2, 1.0);
+        let pi = s.inclusion_probabilities().to_vec();
+        let q = s.eigenbasis().clone();
+        let mut rng = Rng::new(53);
+        let trials = 30_000;
+        let mut acc = Mat::zeros(6, 6);
+        for _ in 0..trials {
+            let p = projector_matrix(&s.sample(&mut rng));
+            let p2 = matmul(&p, &p);
+            acc.axpy_inplace(1.0 / trials as f64, &p2);
+        }
+        // rotate into eigenbasis: QᵀĒ[P²]Q ≈ diag(1/π*)
+        let rot = matmul(&matmul_tn(&q, &acc), &q);
+        for i in 0..6 {
+            let expect = 1.0 / pi[i];
+            let got = rot.get(i, i);
+            assert!(
+                (got - expect).abs() / expect < 0.1,
+                "diag[{i}]: got {got}, expect {expect}"
+            );
+            for j in 0..6 {
+                if i != j {
+                    assert!(rot.get(i, j).abs() < 0.25, "off-diag ({i},{j}) = {}", rot.get(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn objective_attains_phi_min() {
+        // tr(Σ Ē[P²]) should converge to Φ_min = c² Σ σ_i/π*_i.
+        let (sig, _) = test_sigma(6);
+        let mut s = DependentSampler::new(&sig, 2, 1.0);
+        let phi_min = s.phi_min_over_c2();
+        let mut rng = Rng::new(57);
+        let trials = 30_000;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let p = projector_matrix(&s.sample(&mut rng));
+            let p2 = matmul(&p, &p);
+            acc += crate::linalg::trace_product(&sig, &p2) / trials as f64;
+        }
+        assert!((acc - phi_min).abs() / phi_min < 0.05, "tr(ΣĒP²)={acc} vs Φ_min={phi_min}");
+    }
+
+    #[test]
+    fn dependent_beats_stiefel_on_skewed_spectrum() {
+        // Theorem 3: anisotropic optimum ≤ isotropic value tr(Σ)·n/r.
+        let (sig, vals) = test_sigma(8);
+        let s = DependentSampler::new(&sig, 2, 1.0);
+        let phi_dep = s.phi_min_over_c2();
+        let phi_iso: f64 = vals.iter().sum::<f64>() * 8.0 / 2.0;
+        assert!(
+            phi_dep < 0.9 * phi_iso,
+            "dependent {phi_dep} should beat isotropic {phi_iso} on skewed σ"
+        );
+    }
+
+    #[test]
+    fn low_rank_sigma_gives_full_saturation_prop4() {
+        // rank(Σ) = 2 ≤ r = 3 ⇒ Φ_min = tr(Σ) (Proposition 4).
+        let n = 7;
+        let mut diag = vec![0.0; n];
+        diag[0] = 5.0;
+        diag[1] = 1.0;
+        let sig = Mat::diag(&diag);
+        let s = DependentSampler::new(&sig, 3, 1.0);
+        let phi = s.phi_min_over_c2();
+        assert!((phi - 6.0).abs() < 1e-6, "Φ_min = {phi}, want tr(Σ) = 6");
+    }
+
+    #[test]
+    fn sample_has_rank_r_and_orthogonal_columns() {
+        let (sig, _) = test_sigma(9);
+        let mut s = DependentSampler::new(&sig, 4, 1.0);
+        let mut rng = Rng::new(61);
+        let v = s.sample(&mut rng);
+        let gram = matmul_tn(&v, &v);
+        // columns are orthogonal (distinct eigenvectors) with norms c/π
+        for i in 0..4 {
+            for j in 0..4 {
+                if i != j {
+                    assert!(gram.get(i, j).abs() < 1e-9);
+                } else {
+                    assert!(gram.get(i, i) >= 1.0 - 1e-9); // c/π ≥ c = 1
+                }
+            }
+        }
+    }
+}

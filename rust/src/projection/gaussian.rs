@@ -1,0 +1,127 @@
+//! Gaussian projection baseline (Remark 1; Chen et al. 2024, He et al.
+//! 2024b).
+//!
+//! V has i.i.d. N(0, c/r) entries, so E[VVᵀ] = cI_n — admissible, but it
+//! does **not** satisfy Theorem 2's optimality condition VᵀV = (cn/r)I
+//! (the Gram matrix of a Gaussian V is Wishart-distributed, not a scaled
+//! identity), and its second moment E[P²] = c²·(n+r+1)/r·I is strictly
+//! larger than the Stiefel/coordinate optimum c²·n/r·I whenever n > r−1…
+//! which is exactly the gap the paper's Figures 2–5 display.
+
+use super::ProjectionSampler;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct GaussianSampler {
+    n: usize,
+    r: usize,
+    c: f64,
+    sd: f64,
+}
+
+impl GaussianSampler {
+    pub fn new(n: usize, r: usize, c: f64) -> Self {
+        assert!(r >= 1 && r <= n, "rank r={r} out of range for n={n}");
+        assert!(c > 0.0, "c must be positive");
+        GaussianSampler { n, r, c, sd: (c / r as f64).sqrt() }
+    }
+}
+
+impl ProjectionSampler for GaussianSampler {
+    fn sample(&mut self, rng: &mut Rng) -> Mat {
+        let mut v = Mat::zeros(self.n, self.r);
+        for x in &mut v.data {
+            *x = self.sd * rng.normal();
+        }
+        v
+    }
+
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn rank(&self) -> usize {
+        self.r
+    }
+
+    fn scale_c(&self) -> f64 {
+        self.c
+    }
+
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::tests::check_mean_isotropy;
+    use crate::projection::{empirical_moments, projector_matrix};
+
+    #[test]
+    fn mean_projector_is_c_identity() {
+        let mut s = GaussianSampler::new(8, 3, 1.0);
+        check_mean_isotropy(&mut s, 30_000, 0.05);
+        let mut s2 = GaussianSampler::new(8, 3, 0.4);
+        check_mean_isotropy(&mut s2, 30_000, 0.05);
+    }
+
+    #[test]
+    fn second_moment_matches_wishart_formula() {
+        // E[P²] = c²(n+r+1)/r · I for V_ij ~ N(0, c/r).
+        let (n, r, c) = (6, 2, 1.0);
+        let mut s = GaussianSampler::new(n, r, c);
+        let mut rng = Rng::new(99);
+        let m = empirical_moments(&mut s, &mut rng, 60_000);
+        let expect = c * c * (n as f64 + r as f64 + 1.0) / r as f64;
+        let tr = m.mean_p2.trace() / n as f64;
+        assert!(
+            (tr - expect).abs() / expect < 0.05,
+            "tr Ē[P²]/n = {tr}, wishart predicts {expect}"
+        );
+    }
+
+    #[test]
+    fn gram_is_not_scaled_identity() {
+        // certifies Gaussian violates Thm 2's a.s. condition VᵀV=(cn/r)I
+        let mut s = GaussianSampler::new(20, 4, 1.0);
+        let mut rng = Rng::new(3);
+        let v = s.sample(&mut rng);
+        let gram = crate::linalg::matmul_tn(&v, &v);
+        let target = Mat::eye(4).scaled(20.0 / 4.0);
+        assert!(gram.max_abs_diff(&target) > 0.1);
+    }
+
+    #[test]
+    fn tr_p2_exceeds_thm2_floor() {
+        let (n, r, c) = (12, 3, 1.0);
+        let mut s = GaussianSampler::new(n, r, c);
+        let mut rng = Rng::new(5);
+        let m = empirical_moments(&mut s, &mut rng, 20_000);
+        let floor = (n * n) as f64 * c * c / r as f64; // Thm 2 optimum
+        let got = m.mean_p2.trace();
+        assert!(got > 1.2 * floor, "Gaussian tr E[P²]={got} should exceed floor {floor}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut s = GaussianSampler::new(5, 2, 1.0);
+        let v1 = s.sample(&mut Rng::new(42));
+        let v2 = s.sample(&mut Rng::new(42));
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn projector_rank_at_most_r() {
+        let mut s = GaussianSampler::new(10, 2, 1.0);
+        let mut rng = Rng::new(7);
+        let p = projector_matrix(&s.sample(&mut rng));
+        let e = crate::linalg::sym_eig(&p);
+        // eigenvalues 3..n must vanish
+        for &lam in &e.values[2..] {
+            assert!(lam.abs() < 1e-9, "rank leak: λ={lam}");
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Random projection samplers — the paper's §5 contribution.
+//!
+//! Each sampler draws V ∈ ℝ^{n×r} from a law in the admissible class 𝒟
+//! (Definition 3): E[VVᵀ] = c·I_n, rank ≤ r. Four laws are provided:
+//!
+//! | law | paper ref | optimality |
+//! |-----|-----------|------------|
+//! | [`GaussianSampler`]    | Remark 1 baseline (Chen et al. 2024) | none — MSE_G = ((n+r+1)/r)tr Σ_ξ + ((n+1)/r)tr Σ_Θ |
+//! | [`StiefelSampler`]     | Algorithm 2 | instance-independent optimum (Thm 2): VᵀV = (cn/r)I a.s. |
+//! | [`CoordinateSampler`]  | Algorithm 3 | instance-independent optimum (Thm 2) |
+//! | [`DependentSampler`]   | Algorithm 4 | instance-dependent optimum (Thm 3): E[QᵀP²Q] = c²diag(1/π*) |
+//!
+//! Training code treats a sampler as a policy object: the HLO artifacts
+//! take V as a runtime input, so swapping laws never recompiles anything.
+
+mod gaussian;
+mod stiefel;
+mod coordinate;
+mod dependent;
+
+pub use coordinate::CoordinateSampler;
+pub use dependent::DependentSampler;
+pub use gaussian::GaussianSampler;
+pub use stiefel::StiefelSampler;
+
+use crate::linalg::{matmul_nt, Mat};
+use crate::rng::Rng;
+
+/// Which projector law to use (CLI/config-facing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectorKind {
+    Gaussian,
+    Stiefel,
+    Coordinate,
+    Dependent,
+}
+
+impl ProjectorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProjectorKind::Gaussian => "gaussian",
+            ProjectorKind::Stiefel => "stiefel",
+            ProjectorKind::Coordinate => "coordinate",
+            ProjectorKind::Dependent => "dependent",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "gaussian" => Some(ProjectorKind::Gaussian),
+            "stiefel" | "haar" | "haar-stiefel" => Some(ProjectorKind::Stiefel),
+            "coordinate" | "coord" => Some(ProjectorKind::Coordinate),
+            "dependent" | "instance-dependent" | "optimal" => Some(ProjectorKind::Dependent),
+            _ => None,
+        }
+    }
+}
+
+/// A law over projection matrices V ∈ ℝ^{n×r}.
+pub trait ProjectionSampler {
+    /// Draw one V.
+    fn sample(&mut self, rng: &mut Rng) -> Mat;
+    /// Ambient dimension n.
+    fn dim(&self) -> usize;
+    /// Rank budget r.
+    fn rank(&self) -> usize;
+    /// Weak-unbiasedness scale c in E[VVᵀ] = cI.
+    fn scale_c(&self) -> f64;
+    /// Human-readable law name.
+    fn name(&self) -> &'static str;
+}
+
+/// P = VVᵀ (n×n).
+pub fn projector_matrix(v: &Mat) -> Mat {
+    matmul_nt(v, v)
+}
+
+/// Draw V and flatten it to f32 row-major — the form the PJRT artifacts
+/// consume. The f64→f32 rounding happens exactly once, here.
+pub fn sample_f32(sampler: &mut dyn ProjectionSampler, rng: &mut Rng) -> Vec<f32> {
+    sampler.sample(rng).data.iter().map(|&x| x as f32).collect()
+}
+
+/// Monte-Carlo diagnostics for a sampler: empirical Ē[P] and Ē[P²]
+/// (used by tests to certify admissibility and optimality conditions).
+pub struct ProjectorMoments {
+    pub mean_p: Mat,
+    pub mean_p2: Mat,
+}
+
+pub fn empirical_moments(
+    sampler: &mut dyn ProjectionSampler,
+    rng: &mut Rng,
+    trials: usize,
+) -> ProjectorMoments {
+    let n = sampler.dim();
+    let mut mean_p = Mat::zeros(n, n);
+    let mut mean_p2 = Mat::zeros(n, n);
+    for _ in 0..trials {
+        let v = sampler.sample(rng);
+        let p = projector_matrix(&v);
+        let p2 = crate::linalg::matmul(&p, &p);
+        mean_p.axpy_inplace(1.0 / trials as f64, &p);
+        mean_p2.axpy_inplace(1.0 / trials as f64, &p2);
+    }
+    ProjectorMoments { mean_p, mean_p2 }
+}
+
+/// Build a sampler by kind. `sigma` is required for (and only for)
+/// [`ProjectorKind::Dependent`].
+pub fn build_sampler(
+    kind: ProjectorKind,
+    n: usize,
+    r: usize,
+    c: f64,
+    sigma: Option<&Mat>,
+) -> Box<dyn ProjectionSampler + Send> {
+    match kind {
+        ProjectorKind::Gaussian => Box::new(GaussianSampler::new(n, r, c)),
+        ProjectorKind::Stiefel => Box::new(StiefelSampler::new(n, r, c)),
+        ProjectorKind::Coordinate => Box::new(CoordinateSampler::new(n, r, c)),
+        ProjectorKind::Dependent => {
+            let sigma = sigma.expect("DependentSampler requires a Σ estimate");
+            Box::new(DependentSampler::new(sigma, r, c))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared admissibility check: ‖Ē[P] − cI‖_max small after `trials`.
+    pub(super) fn check_mean_isotropy(
+        sampler: &mut dyn ProjectionSampler,
+        trials: usize,
+        tol: f64,
+    ) {
+        let mut rng = Rng::new(777);
+        let m = empirical_moments(sampler, &mut rng, trials);
+        let n = sampler.dim();
+        let target = Mat::eye(n).scaled(sampler.scale_c());
+        let err = m.mean_p.max_abs_diff(&target);
+        assert!(err < tol, "{}: ‖Ē[P] − cI‖_max = {err} > {tol}", sampler.name());
+    }
+
+    #[test]
+    fn builder_produces_all_kinds() {
+        let sigma = Mat::eye(6);
+        for kind in [
+            ProjectorKind::Gaussian,
+            ProjectorKind::Stiefel,
+            ProjectorKind::Coordinate,
+            ProjectorKind::Dependent,
+        ] {
+            let mut s = build_sampler(kind, 6, 2, 1.0, Some(&sigma));
+            let mut rng = Rng::new(1);
+            let v = s.sample(&mut rng);
+            assert_eq!((v.rows, v.cols), (6, 2));
+            assert_eq!(s.dim(), 6);
+            assert_eq!(s.rank(), 2);
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in [
+            ProjectorKind::Gaussian,
+            ProjectorKind::Stiefel,
+            ProjectorKind::Coordinate,
+            ProjectorKind::Dependent,
+        ] {
+            assert_eq!(ProjectorKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ProjectorKind::parse("haar"), Some(ProjectorKind::Stiefel));
+        assert_eq!(ProjectorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn sample_f32_matches_f64_draw() {
+        let mut s1 = StiefelSampler::new(10, 3, 1.0);
+        let mut s2 = StiefelSampler::new(10, 3, 1.0);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let v64 = s1.sample(&mut r1);
+        let v32 = sample_f32(&mut s2, &mut r2);
+        for (a, b) in v64.data.iter().zip(&v32) {
+            assert!((*a as f32 - b).abs() == 0.0);
+        }
+    }
+}

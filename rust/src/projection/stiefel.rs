@@ -1,0 +1,150 @@
+//! Haar–Stiefel sampler (Algorithm 2) — the paper's instance-independent
+//! optimal projector.
+//!
+//! Draw G with i.i.d. N(0,1) entries, thin-QR it, fix the sign ambiguity
+//! (D = diag(sgn diag R)), and rescale by α = √(cn/r). The result
+//! satisfies, almost surely, the Theorem 2 optimality condition
+//! VᵀV = (cn/r)·I_r, and by Haar invariance E[VVᵀ] = c·I_n
+//! (Proposition 2(i)).
+
+use super::ProjectionSampler;
+use crate::linalg::{thin_qr, Mat};
+use crate::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct StiefelSampler {
+    n: usize,
+    r: usize,
+    c: f64,
+    alpha: f64,
+}
+
+impl StiefelSampler {
+    pub fn new(n: usize, r: usize, c: f64) -> Self {
+        assert!(r >= 1 && r <= n, "rank r={r} out of range for n={n}");
+        assert!(c > 0.0, "c must be positive");
+        StiefelSampler { n, r, c, alpha: (c * n as f64 / r as f64).sqrt() }
+    }
+
+    /// α = √(cn/r), the rescaling from the Stiefel frame to V.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+}
+
+impl ProjectionSampler for StiefelSampler {
+    fn sample(&mut self, rng: &mut Rng) -> Mat {
+        // G ~ N(0,1)^{n×r}
+        let mut g = Mat::zeros(self.n, self.r);
+        for x in &mut g.data {
+            *x = rng.normal();
+        }
+        // thin QR; our thin_qr already applies the sign fix of Alg 2 step 3
+        let q = thin_qr(&g).q;
+        q.scaled(self.alpha)
+    }
+
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn rank(&self) -> usize {
+        self.r
+    }
+
+    fn scale_c(&self) -> f64 {
+        self.c
+    }
+
+    fn name(&self) -> &'static str {
+        "stiefel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_tn};
+    use crate::projection::tests::check_mean_isotropy;
+    use crate::projection::{empirical_moments, projector_matrix};
+
+    #[test]
+    fn gram_is_exactly_scaled_identity() {
+        // Theorem 2's a.s. optimality condition, to near machine precision.
+        let (n, r, c) = (30, 5, 1.0);
+        let mut s = StiefelSampler::new(n, r, c);
+        let mut rng = Rng::new(11);
+        for _ in 0..20 {
+            let v = s.sample(&mut rng);
+            let gram = matmul_tn(&v, &v);
+            let target = Mat::eye(r).scaled(c * n as f64 / r as f64);
+            assert!(gram.max_abs_diff(&target) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn tr_p2_attains_thm2_floor_exactly() {
+        // tr(P²) = n²c²/r almost surely (not just in expectation).
+        let (n, r, c) = (16, 4, 0.7);
+        let mut s = StiefelSampler::new(n, r, c);
+        let mut rng = Rng::new(13);
+        let floor = (n * n) as f64 * c * c / r as f64;
+        for _ in 0..10 {
+            let p = projector_matrix(&s.sample(&mut rng));
+            let p2 = matmul(&p, &p);
+            assert!((p2.trace() - floor).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn mean_projector_is_c_identity() {
+        let mut s = StiefelSampler::new(10, 3, 1.0);
+        check_mean_isotropy(&mut s, 20_000, 0.05);
+        let mut s2 = StiefelSampler::new(10, 3, 0.3); // weak unbiasedness c<1
+        check_mean_isotropy(&mut s2, 20_000, 0.05);
+    }
+
+    #[test]
+    fn second_moment_is_c2_n_over_r_identity() {
+        // E[P²] = (c²n/r)·I for the Haar law (isotropy + a.s. trace).
+        let (n, r, c) = (8, 2, 1.0);
+        let mut s = StiefelSampler::new(n, r, c);
+        let mut rng = Rng::new(17);
+        let m = empirical_moments(&mut s, &mut rng, 20_000);
+        let target = Mat::eye(n).scaled(c * c * n as f64 / r as f64);
+        assert!(m.mean_p2.max_abs_diff(&target) < 0.15, "Ē[P²] deviates");
+    }
+
+    #[test]
+    fn haar_rotation_invariance_of_column_span() {
+        // first-column direction should be uniform on the sphere: its
+        // coordinates have mean 0 and variance 1/n.
+        let n = 12;
+        let mut s = StiefelSampler::new(n, 2, 1.0);
+        let mut rng = Rng::new(23);
+        let trials = 30_000;
+        let mut mean = vec![0.0; n];
+        let mut var = vec![0.0; n];
+        let alpha = s.alpha();
+        for _ in 0..trials {
+            let v = s.sample(&mut rng);
+            for i in 0..n {
+                let u = v.get(i, 0) / alpha; // unit-frame coordinate
+                mean[i] += u / trials as f64;
+                var[i] += u * u / trials as f64;
+            }
+        }
+        for i in 0..n {
+            assert!(mean[i].abs() < 0.02, "mean[{i}]={}", mean[i]);
+            assert!((var[i] - 1.0 / n as f64).abs() < 0.01, "var[{i}]={}", var[i]);
+        }
+    }
+
+    #[test]
+    fn alpha_scales_with_c() {
+        let s1 = StiefelSampler::new(100, 4, 1.0);
+        let s2 = StiefelSampler::new(100, 4, 0.04); // c = r/n
+        assert!((s1.alpha() - 5.0).abs() < 1e-12);
+        assert!((s2.alpha() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,76 @@
+//! Standard-normal sampling (Marsaglia polar method).
+//!
+//! The Gaussian baseline projector and the ZO perturbations Z ~ N(0, I)
+//! draw millions of normals per experiment; the polar method needs no
+//! transcendental `sin`/`cos` and accepts ~78.5% of candidate pairs.
+
+use super::Rng;
+
+/// One N(0,1) draw (discards the paired deviate — keeping `Rng` stateless
+/// w.r.t. caching makes `fork()` semantics exact).
+#[inline]
+pub(super) fn sample_polar(rng: &mut Rng) -> f64 {
+    loop {
+        let u = 2.0 * rng.uniform() - 1.0;
+        let v = 2.0 * rng.uniform() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * (-2.0 * s.ln() / s).sqrt();
+        }
+    }
+}
+
+/// A reusable source of N(mean, sd²) values.
+#[derive(Clone, Debug)]
+pub struct NormalSource {
+    pub mean: f64,
+    pub sd: f64,
+}
+
+impl NormalSource {
+    pub fn standard() -> Self {
+        NormalSource { mean: 0.0, sd: 1.0 }
+    }
+
+    pub fn new(mean: f64, sd: f64) -> Self {
+        assert!(sd >= 0.0, "negative standard deviation");
+        NormalSource { mean, sd }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        self.mean + self.sd * sample_polar(rng)
+    }
+
+    pub fn sample_vec(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shifted_scaled_moments() {
+        let mut rng = Rng::new(101);
+        let src = NormalSource::new(2.0, 3.0);
+        let n = 100_000;
+        let xs = src.sample_vec(&mut rng, n);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 2.0).abs() < 0.05, "mean={mean}");
+        assert!((var - 9.0).abs() < 0.3, "var={var}");
+    }
+
+    #[test]
+    fn tail_mass_roughly_gaussian() {
+        let mut rng = Rng::new(103);
+        let src = NormalSource::standard();
+        let n = 200_000;
+        let beyond2 = (0..n).filter(|_| src.sample(&mut rng).abs() > 2.0).count();
+        let frac = beyond2 as f64 / n as f64;
+        // P(|Z|>2) ≈ 0.0455
+        assert!((frac - 0.0455).abs() < 0.004, "frac={frac}");
+    }
+}

@@ -1,0 +1,100 @@
+//! Zipf-distributed integer sampling for the synthetic corpus.
+//!
+//! The paper pretrains on OpenWebText; our substitute corpus (DESIGN.md
+//! §2) needs realistic unigram skew. We precompute the normalized CDF of
+//! p(k) ∝ k^(−s) over a finite vocabulary and invert it by binary search —
+//! O(log V) per draw, exact.
+
+use super::Rng;
+
+/// Zipf(s) over ranks 1..=n (returned 0-indexed: 0..n).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "empty support");
+        assert!(s > 0.0, "exponent must be positive");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += (k as f64).powf(-s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in &mut cdf {
+            *v /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn support(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw a 0-indexed rank.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        // first index with cdf[i] >= u
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Probability mass of rank k (0-indexed).
+    pub fn pmf(&self, k: usize) -> f64 {
+        if k == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[k] - self.cdf[k - 1]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pmf_sums_to_one() {
+        let z = Zipf::new(100, 1.1);
+        let total: f64 = (0..100).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_one_is_most_frequent() {
+        let z = Zipf::new(50, 1.0);
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts[0] > counts[1]);
+        assert!(counts[1] > counts[5]);
+        // empirical frequency of rank 1 ≈ pmf(0)
+        let f0 = counts[0] as f64 / 50_000.0;
+        assert!((f0 - z.pmf(0)).abs() < 0.01, "f0={f0} pmf={}", z.pmf(0));
+    }
+
+    #[test]
+    fn heavier_tail_for_smaller_s() {
+        let z_light = Zipf::new(1000, 2.0);
+        let z_heavy = Zipf::new(1000, 0.8);
+        // heavier tail ⇒ less mass on top rank
+        assert!(z_heavy.pmf(0) < z_light.pmf(0));
+    }
+
+    #[test]
+    fn samples_within_support() {
+        let z = Zipf::new(10, 1.5);
+        let mut rng = Rng::new(9);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 10);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! The caching artifact loader + typed executor.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ArtifactManifest;
+use super::tensor::HostTensor;
+
+/// One compiled artifact: manifest + PJRT executable.
+pub struct LoadedArtifact {
+    pub manifest: ArtifactManifest,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    /// Wall time spent compiling (for the perf log).
+    pub compile_time_s: f64,
+}
+
+impl LoadedArtifact {
+    /// Execute with manifest validation. Inputs must match the manifest
+    /// slot-for-slot; outputs come back in manifest order.
+    ///
+    /// Inputs go through `execute_b` with Rust-owned `PjRtBuffer`s
+    /// rather than the crate's literal-based `execute`: the latter's C
+    /// wrapper `release()`s the device buffers it creates per input and
+    /// never frees them — a ~5 MB/step leak at our artifact sizes that
+    /// OOMs a long training run (see EXPERIMENTS.md §Perf). The buffer
+    /// path also skips one host-side literal copy per input.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "artifact {}: {} inputs given, manifest wants {}",
+                self.manifest.name,
+                inputs.len(),
+                self.manifest.inputs.len()
+            );
+        }
+        let mut buffers = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.manifest.inputs) {
+            t.check_spec(spec)
+                .with_context(|| format!("artifact {}", self.manifest.name))?;
+            let buf = match t {
+                HostTensor::F32 { shape, data } => {
+                    self.client.buffer_from_host_buffer(data, shape, None)?
+                }
+                HostTensor::I32 { shape, data } => {
+                    self.client.buffer_from_host_buffer(data, shape, None)?
+                }
+            };
+            buffers.push(buf);
+        }
+        let result = self.exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        let root = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "artifact {}: {} outputs returned, manifest wants {}",
+                self.manifest.name,
+                parts.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.manifest.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// Caching loader over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, Arc<LoadedArtifact>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client over `dir` (usually `artifacts/`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.join("INDEX.txt").exists() {
+            bail!(
+                "artifact directory {dir:?} has no INDEX.txt — run `make artifacts` first"
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names listed in INDEX.txt.
+    pub fn available(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("INDEX.txt"))?;
+        Ok(text.lines().map(|l| l.trim().to_string()).filter(|l| !l.is_empty()).collect())
+    }
+
+    /// Load (compile) an artifact, memoized.
+    pub fn load(&mut self, name: &str) -> Result<Arc<LoadedArtifact>> {
+        if let Some(a) = self.cache.get(name) {
+            return Ok(a.clone());
+        }
+        let manifest = ArtifactManifest::load(&self.dir.join(format!("{name}.manifest.txt")))?;
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let compile_time_s = t0.elapsed().as_secs_f64();
+        let art = Arc::new(LoadedArtifact {
+            manifest,
+            exe,
+            client: self.client.clone(),
+            compile_time_s,
+        });
+        self.cache.insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+
+    /// Golden-vector inputs for an artifact (written by aot.py).
+    pub fn golden_inputs(&self, art: &LoadedArtifact) -> Result<Vec<HostTensor>> {
+        let gdir = self.dir.join("golden").join(&art.manifest.name);
+        art.manifest
+            .inputs
+            .iter()
+            .map(|spec| {
+                HostTensor::from_bin_file(&gdir.join(format!("in_{:03}.bin", spec.index)), spec)
+            })
+            .collect()
+    }
+
+    /// Golden-vector outputs.
+    pub fn golden_outputs(&self, art: &LoadedArtifact) -> Result<Vec<HostTensor>> {
+        let gdir = self.dir.join("golden").join(&art.manifest.name);
+        art.manifest
+            .outputs
+            .iter()
+            .map(|spec| {
+                HostTensor::from_bin_file(&gdir.join(format!("out_{:03}.bin", spec.index)), spec)
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,247 @@
+//! Artifact manifest parsing.
+//!
+//! aot.py writes one `<name>.manifest.txt` per artifact:
+//!
+//! ```text
+//! artifact = lm_grad_s
+//! model = llama-s
+//! ...
+//! num_inputs = 72
+//! num_outputs = 30
+//! input 0 params[embed] f32 4096x128
+//! ...
+//! output 0 out f32 scalar
+//! ```
+//!
+//! The manifest is deliberately a trivial line format: Rust needs no
+//! serde dependency and any mismatch is loud.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor crossing the PJRT boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype tag {other:?}"),
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+/// One input or output slot.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub index: usize,
+    pub name: String,
+    pub dtype: DType,
+    /// Empty for scalars.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn byte_len(&self) -> usize {
+        4 * self.num_elements()
+    }
+}
+
+/// Parsed manifest for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub name: String,
+    pub meta: HashMap<String, String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().context("bad dim"))
+        .collect()
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut meta = HashMap::new();
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.is_empty() {
+                continue;
+            }
+            match parts[0] {
+                "input" | "output" => {
+                    if parts.len() != 5 {
+                        bail!("line {}: malformed tensor line {line:?}", lineno + 1);
+                    }
+                    let spec = TensorSpec {
+                        index: parts[1].parse().context("bad index")?,
+                        name: parts[2].to_string(),
+                        dtype: DType::parse(parts[3])?,
+                        shape: parse_shape(parts[4])?,
+                    };
+                    if parts[0] == "input" {
+                        inputs.push(spec);
+                    } else {
+                        outputs.push(spec);
+                    }
+                }
+                key if parts.len() >= 3 && parts[1] == "=" => {
+                    meta.insert(key.to_string(), parts[2..].join(" "));
+                }
+                _ => bail!("line {}: unrecognized manifest line {line:?}", lineno + 1),
+            }
+        }
+        let name = meta
+            .get("artifact")
+            .context("manifest missing `artifact =` line")?
+            .clone();
+        // consistency checks
+        let ni: usize = meta
+            .get("num_inputs")
+            .context("missing num_inputs")?
+            .parse()?;
+        let no: usize = meta
+            .get("num_outputs")
+            .context("missing num_outputs")?
+            .parse()?;
+        if inputs.len() != ni || outputs.len() != no {
+            bail!(
+                "manifest {name}: counts disagree (inputs {} vs {ni}, outputs {} vs {no})",
+                inputs.len(),
+                outputs.len()
+            );
+        }
+        for (i, spec) in inputs.iter().enumerate() {
+            if spec.index != i {
+                bail!("manifest {name}: input {i} has index {}", spec.index);
+            }
+        }
+        for (i, spec) in outputs.iter().enumerate() {
+            if spec.index != i {
+                bail!("manifest {name}: output {i} has index {}", spec.index);
+            }
+        }
+        Ok(ArtifactManifest { name, meta, inputs, outputs })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Meta value parsed as integer.
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .with_context(|| format!("missing meta key {key}"))?
+            .parse()
+            .with_context(|| format!("meta key {key} not an integer"))
+    }
+
+    /// Index of the first input whose name starts with `prefix`.
+    pub fn input_index(&self, prefix: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name.starts_with(prefix))
+    }
+
+    /// All input indices whose names start with `prefix`, in order.
+    pub fn input_indices(&self, prefix: &str) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .filter(|s| s.name.starts_with(prefix))
+            .map(|s| s.index)
+            .collect()
+    }
+
+    /// All output indices whose names start with `prefix`, in order.
+    pub fn output_indices(&self, prefix: &str) -> Vec<usize> {
+        self.outputs
+            .iter()
+            .filter(|s| s.name.starts_with(prefix))
+            .map(|s| s.index)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact = demo
+model = tiny
+num_inputs = 3
+num_outputs = 2
+input 0 params[embed] f32 64x32
+input 1 tokens i32 4x17
+input 2 sigma f32 scalar
+output 0 out[0] f32 scalar
+output 1 out[1] f32 64x32
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "demo");
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.outputs.len(), 2);
+        assert_eq!(m.inputs[0].shape, vec![64, 32]);
+        assert_eq!(m.inputs[1].dtype, DType::I32);
+        assert_eq!(m.inputs[2].shape, Vec::<usize>::new());
+        assert_eq!(m.inputs[2].num_elements(), 1);
+        assert_eq!(m.meta["model"], "tiny");
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let bad = SAMPLE.replace("num_inputs = 3", "num_inputs = 4");
+        assert!(ArtifactManifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_order_indices() {
+        let bad = SAMPLE.replace("input 1 tokens", "input 2 tokens");
+        assert!(ArtifactManifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn prefix_lookup() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.input_index("tokens"), Some(1));
+        assert_eq!(m.input_indices("params"), vec![0]);
+        assert_eq!(m.output_indices("out"), vec![0, 1]);
+        assert_eq!(m.input_index("nope"), None);
+    }
+
+    #[test]
+    fn byte_len_is_4x_elements() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.inputs[0].byte_len(), 64 * 32 * 4);
+        assert_eq!(m.inputs[2].byte_len(), 4);
+    }
+}

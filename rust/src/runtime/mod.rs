@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! execute them from the L3 hot path. Python is never invoked here.
+//!
+//! * [`manifest`] — parses the `key = value` manifests aot.py writes;
+//!   the manifest is the binding contract between L2 and L3 (input
+//!   order, dtypes, shapes). The runtime refuses to execute on any
+//!   mismatch — fail fast, not wrong numerics.
+//! * [`tensor`] — [`HostTensor`], the host-side f32/i32 value type that
+//!   crosses the PJRT boundary.
+//! * [`client`] — [`Runtime`], a caching loader
+//!   (HLO text → `HloModuleProto` → compile → `PjRtLoadedExecutable`)
+//!   plus the typed `execute` entry point.
+
+mod client;
+mod manifest;
+mod tensor;
+
+pub use client::{LoadedArtifact, Runtime};
+pub use manifest::{ArtifactManifest, DType, TensorSpec};
+pub use tensor::HostTensor;

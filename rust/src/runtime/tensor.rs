@@ -1,0 +1,251 @@
+//! Host-side tensors crossing the PJRT boundary.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host tensor (row-major), f32 or i32 — the only element types the
+/// artifact contract uses.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product::<usize>().max(1);
+        HostTensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape().iter().product::<usize>().max(1)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar f32 value (shape [] or [1]).
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("not a scalar: {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Validate against a manifest slot.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!(
+                "input {} ({}): dtype {} != manifest {}",
+                spec.index,
+                spec.name,
+                self.dtype().tag(),
+                spec.dtype.tag()
+            );
+        }
+        if self.shape() != spec.shape.as_slice() {
+            bail!(
+                "input {} ({}): shape {:?} != manifest {:?}",
+                spec.index,
+                spec.name,
+                self.shape(),
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        if dims.is_empty() {
+            // scalar: reshape a 1-element vector to rank 0
+            lit.reshape(&[]).context("reshape to scalar")
+        } else {
+            lit.reshape(&dims).context("reshape literal")
+        }
+    }
+
+    /// Read back from an XLA literal with a known spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        let t = match spec.dtype {
+            DType::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? },
+            DType::I32 => HostTensor::I32 { shape: spec.shape.clone(), data: lit.to_vec::<i32>()? },
+        };
+        if t.num_elements() != spec.num_elements() {
+            bail!(
+                "output {} ({}): element count {} != manifest {}",
+                spec.index,
+                spec.name,
+                t.num_elements(),
+                spec.num_elements()
+            );
+        }
+        Ok(t)
+    }
+
+    /// Load from a raw little-endian binary (the aot.py golden format).
+    pub fn from_bin_file(path: &std::path::Path, spec: &TensorSpec) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != spec.byte_len() {
+            bail!(
+                "{path:?}: {} bytes, manifest says {} ({})",
+                bytes.len(),
+                spec.byte_len(),
+                spec.name
+            );
+        }
+        Ok(match spec.dtype {
+            DType::F32 => {
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                HostTensor::F32 { shape: spec.shape.clone(), data }
+            }
+            DType::I32 => {
+                let data = bytes
+                    .chunks_exact(4)
+                    .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                HostTensor::I32 { shape: spec.shape.clone(), data }
+            }
+        })
+    }
+
+    /// Max |a − b| against another f32 tensor.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        if a.len() != b.len() {
+            bail!("length mismatch {} vs {}", a.len(), b.len());
+        }
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(dtype: DType, shape: Vec<usize>) -> TensorSpec {
+        TensorSpec { index: 0, name: "t".into(), dtype, shape }
+    }
+
+    #[test]
+    fn shape_data_consistency_enforced() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.num_elements(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_data_len() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(2.5);
+        assert_eq!(t.scalar().unwrap(), 2.5);
+        assert_eq!(t.num_elements(), 1);
+    }
+
+    #[test]
+    fn check_spec_catches_mismatches() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert!(t.check_spec(&spec(DType::F32, vec![2, 3])).is_ok());
+        assert!(t.check_spec(&spec(DType::F32, vec![3, 2])).is_err());
+        assert!(t.check_spec(&spec(DType::I32, vec![2, 3])).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let s = spec(DType::F32, vec![2, 2]);
+        let back = HostTensor::from_literal(&lit, &s).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_scalar() {
+        let t = HostTensor::i32(vec![3], vec![7, -1, 2]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &spec(DType::I32, vec![3])).unwrap();
+        assert_eq!(t, back);
+
+        let s = HostTensor::scalar_f32(-0.5);
+        let lit = s.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &spec(DType::F32, vec![])).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn bin_file_roundtrip() {
+        let dir = std::env::temp_dir().join("lowrank_sge_test_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let data = vec![1.5f32, -2.25, 0.0];
+        let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let s = spec(DType::F32, vec![3]);
+        let t = HostTensor::from_bin_file(&path, &s).unwrap();
+        assert_eq!(t.as_f32().unwrap(), data.as_slice());
+    }
+}

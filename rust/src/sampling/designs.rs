@@ -1,0 +1,393 @@
+//! Fixed-size unequal-probability sampling designs (π-ps designs).
+//!
+//! Algorithm 4 step 3: "Sample a random subset J ⊂ {1,…,n} of fixed size
+//! |J| = r such that Pr(i ∈ J) = π*_i, using any fixed-size
+//! unequal-probability design (e.g., conditional Poisson, Sampford, or
+//! Tillé's elimination)." We provide three:
+//!
+//! * **Conditional Poisson / rejective sampling** (Hájek 1964) — exact,
+//!   implemented with the elementary-symmetric-polynomial DP both for the
+//!   sequential sampler and for calibrating working weights so that the
+//!   *conditional* inclusion probabilities hit the targets (Deville &
+//!   Tillé 1998 fixed point).
+//! * **Sampford's method** (1967) — rejective two-phase scheme; exact
+//!   π-ps, simple, but the acceptance rate degrades as r → n.
+//! * **Systematic PPS** (Madow) — exact marginals, O(n), the default in
+//!   the training hot loop (order is randomized each draw to break joint
+//!   inclusion artifacts).
+
+use crate::rng::Rng;
+
+/// Which fixed-size design to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FixedSizeDesign {
+    ConditionalPoisson,
+    Sampford,
+    Systematic,
+    Tille,
+}
+
+impl FixedSizeDesign {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FixedSizeDesign::ConditionalPoisson => "conditional-poisson",
+            FixedSizeDesign::Sampford => "sampford",
+            FixedSizeDesign::Systematic => "systematic",
+            FixedSizeDesign::Tille => "tille",
+        }
+    }
+}
+
+fn validate_pi(pi: &[f64], r: usize) {
+    let sum: f64 = pi.iter().sum();
+    assert!(
+        (sum - r as f64).abs() < 1e-6,
+        "inclusion probabilities must sum to r: Σπ = {sum}, r = {r}"
+    );
+    for &p in pi {
+        assert!(p > 0.0 && p <= 1.0 + 1e-9, "π_i must lie in (0,1], got {p}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Systematic PPS (Madow)
+// ---------------------------------------------------------------------------
+
+/// Systematic π-ps sampling: cumulate π in a random order and take the r
+/// points {u, u+1, …, u+r−1} for u ~ U(0,1). Exact fixed size, exact
+/// first-order inclusion probabilities, O(n).
+pub fn sample_systematic(pi: &[f64], r: usize, rng: &mut Rng) -> Vec<usize> {
+    validate_pi(pi, r);
+    let n = pi.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let u = rng.uniform();
+    let mut selected = Vec::with_capacity(r);
+    let mut cum = 0.0;
+    let mut next_point = u;
+    for &i in &order {
+        let lo = cum;
+        cum += pi[i];
+        // select once for every integer-offset point in [lo, cum)
+        while next_point < cum && selected.len() < r {
+            debug_assert!(next_point >= lo - 1e-12);
+            selected.push(i);
+            next_point += 1.0;
+        }
+    }
+    // guard against fp shortfall on the last unit
+    while selected.len() < r {
+        selected.push(order[n - 1]);
+    }
+    selected.sort_unstable();
+    selected
+}
+
+// ---------------------------------------------------------------------------
+// Sampford
+// ---------------------------------------------------------------------------
+
+/// Sampford's rejective π-ps design. Units with π_i = 1 are forced into
+/// the sample and the scheme runs on the remainder.
+pub fn sample_sampford(pi: &[f64], r: usize, rng: &mut Rng) -> Vec<usize> {
+    validate_pi(pi, r);
+    let n = pi.len();
+    let mut forced: Vec<usize> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    for i in 0..n {
+        if pi[i] >= 1.0 - 1e-12 {
+            forced.push(i);
+        } else {
+            free.push(i);
+        }
+    }
+    let r_free = r - forced.len();
+    if r_free == 0 {
+        forced.sort_unstable();
+        return forced;
+    }
+    // residual targets on the free units sum to r_free
+    let p: Vec<f64> = free.iter().map(|&i| pi[i]).collect();
+    let rf = r_free as f64;
+    let w_first: Vec<f64> = p.iter().map(|&x| x / rf).collect();
+    let w_rest: Vec<f64> = p.iter().map(|&x| x / (1.0 - x)).collect();
+
+    let max_attempts = 200_000;
+    for _ in 0..max_attempts {
+        let mut draw: Vec<usize> = Vec::with_capacity(r_free);
+        draw.push(rng.categorical(&w_first));
+        for _ in 1..r_free {
+            draw.push(rng.categorical(&w_rest));
+        }
+        let mut sorted = draw.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() == r_free {
+            let mut out: Vec<usize> = forced;
+            out.extend(sorted.into_iter().map(|k| free[k]));
+            out.sort_unstable();
+            return out;
+        }
+    }
+    panic!("Sampford rejection did not terminate (r too close to n?)");
+}
+
+// ---------------------------------------------------------------------------
+// Conditional Poisson (rejective) with exact DP
+// ---------------------------------------------------------------------------
+
+/// Calibrated conditional-Poisson design: working weights `w` such that
+/// the size-r conditional inclusion probabilities equal the targets.
+#[derive(Clone, Debug)]
+pub struct CpsDesign {
+    /// Working weights w_i = p_i/(1−p_i) of the underlying Poisson design.
+    pub weights: Vec<f64>,
+    /// Target inclusion probabilities (forced units have π = 1).
+    pub target_pi: Vec<f64>,
+    /// Sample size.
+    pub r: usize,
+    forced: Vec<usize>,
+    free: Vec<usize>,
+}
+
+/// Elementary symmetric polynomials e_0..e_r of `w` (DP, O(n·r)).
+#[cfg(test)]
+fn esp(w: &[f64], r: usize) -> Vec<f64> {
+    let mut e = vec![0.0; r + 1];
+    e[0] = 1.0;
+    for &wi in w {
+        for k in (1..=r).rev() {
+            e[k] += wi * e[k - 1];
+        }
+    }
+    e
+}
+
+/// CPS inclusion probabilities for working weights `w` at size `r`:
+/// π_i(w) = w_i · e_{r−1}(w₋ᵢ) / e_r(w). Computed with the
+/// "leave-one-out via forward/backward ESP" trick in O(n·r).
+fn cps_inclusion(w: &[f64], r: usize) -> Vec<f64> {
+    let n = w.len();
+    // forward[i] = ESP of w[0..i] (vector of length r+1)
+    let mut forward = Vec::with_capacity(n + 1);
+    let mut cur = vec![0.0; r + 1];
+    cur[0] = 1.0;
+    forward.push(cur.clone());
+    for &wi in w {
+        for k in (1..=r).rev() {
+            cur[k] += wi * cur[k - 1];
+        }
+        forward.push(cur.clone());
+    }
+    // backward[i] = ESP of w[i..n]
+    let mut backward = vec![vec![0.0; r + 1]; n + 1];
+    backward[n][0] = 1.0;
+    for i in (0..n).rev() {
+        let wi = w[i];
+        for k in 0..=r {
+            backward[i][k] = backward[i + 1][k]
+                + if k > 0 { wi * backward[i + 1][k - 1] } else { 0.0 };
+        }
+    }
+    let er = forward[n][r];
+    assert!(er > 0.0, "degenerate CPS normalizer");
+    // e_{r-1}(w₋ᵢ) = Σ_{a+b=r-1} forward[i][a] · backward[i+1][b]
+    (0..n)
+        .map(|i| {
+            let mut s = 0.0;
+            for a in 0..r {
+                s += forward[i][a] * backward[i + 1][r - 1 - a];
+            }
+            w[i] * s / er
+        })
+        .collect()
+}
+
+/// Calibrate working weights so CPS inclusion probabilities match the
+/// targets (Deville–Tillé fixed point: w ← w · π_target / π_current).
+pub fn conditional_poisson_calibrate(pi: &[f64], r: usize) -> CpsDesign {
+    validate_pi(pi, r);
+    let n = pi.len();
+    let mut forced = Vec::new();
+    let mut free = Vec::new();
+    for i in 0..n {
+        if pi[i] >= 1.0 - 1e-12 {
+            forced.push(i);
+        } else {
+            free.push(i);
+        }
+    }
+    let r_free = r - forced.len();
+    let targets: Vec<f64> = free.iter().map(|&i| pi[i]).collect();
+    let mut w: Vec<f64> = targets.iter().map(|&p| p / (1.0 - p)).collect();
+    if r_free > 0 {
+        for _iter in 0..200 {
+            let cur = cps_inclusion(&w, r_free);
+            let mut max_err = 0.0f64;
+            for i in 0..w.len() {
+                max_err = max_err.max((cur[i] - targets[i]).abs());
+                // multiplicative update; clamp to keep weights positive
+                let ratio = (targets[i] / cur[i].max(1e-300)).clamp(1e-6, 1e6);
+                w[i] *= ratio;
+            }
+            if max_err < 1e-12 {
+                break;
+            }
+        }
+    }
+    CpsDesign { weights: w, target_pi: pi.to_vec(), r, forced, free }
+}
+
+/// Draw one sample from a calibrated CPS design using the sequential
+/// conditional method: unit i is included with probability
+/// w_i · e_{k−1}(w_{i+1..}) / e_k(w_{i..}) given k slots remain.
+pub fn sample_conditional_poisson(design: &CpsDesign, rng: &mut Rng) -> Vec<usize> {
+    let r_free = design.r - design.forced.len();
+    let mut out = design.forced.clone();
+    if r_free > 0 {
+        let w = &design.weights;
+        let n = w.len();
+        // backward ESP table over the free units
+        let mut backward = vec![vec![0.0; r_free + 1]; n + 1];
+        backward[n][0] = 1.0;
+        for i in (0..n).rev() {
+            for k in 0..=r_free {
+                backward[i][k] = backward[i + 1][k]
+                    + if k > 0 { w[i] * backward[i + 1][k - 1] } else { 0.0 };
+            }
+        }
+        let mut k = r_free;
+        for i in 0..n {
+            if k == 0 {
+                break;
+            }
+            // Pr(include i | k slots remain among units i..n)
+            let denom = backward[i][k];
+            let num = w[i] * backward[i + 1][k - 1];
+            let p_inc = if denom > 0.0 { num / denom } else { 1.0 };
+            if n - i == k || rng.bernoulli(p_inc) {
+                out.push(design.free[i]);
+                k -= 1;
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn target_pi() -> (Vec<f64>, usize) {
+        // n = 6, r = 3, one saturated unit.
+        (vec![1.0, 0.7, 0.5, 0.4, 0.25, 0.15], 3)
+    }
+
+    fn check_marginals(
+        sampler: impl Fn(&mut Rng) -> Vec<usize>,
+        pi: &[f64],
+        r: usize,
+        trials: usize,
+        tol_sigmas: f64,
+    ) {
+        let mut rng = Rng::new(12345);
+        let mut counts = vec![0usize; pi.len()];
+        for _ in 0..trials {
+            let s = sampler(&mut rng);
+            assert_eq!(s.len(), r, "wrong sample size: {s:?}");
+            let mut d = s.clone();
+            d.dedup();
+            assert_eq!(d.len(), r, "duplicate units: {s:?}");
+            for i in s {
+                counts[i] += 1;
+            }
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let expect = trials as f64 * pi[i];
+            let sd = (trials as f64 * pi[i] * (1.0 - pi[i])).sqrt().max(1.0);
+            assert!(
+                (c as f64 - expect).abs() < tol_sigmas * sd,
+                "unit {i}: got {c}, expect {expect:.1} ± {sd:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn systematic_fixed_size_and_marginals() {
+        let (pi, r) = target_pi();
+        check_marginals(|rng| sample_systematic(&pi, r, rng), &pi, r, 40_000, 5.0);
+    }
+
+    #[test]
+    fn sampford_fixed_size_and_marginals() {
+        let (pi, r) = target_pi();
+        check_marginals(|rng| sample_sampford(&pi, r, rng), &pi, r, 20_000, 5.0);
+    }
+
+    #[test]
+    fn cps_fixed_size_and_marginals() {
+        let (pi, r) = target_pi();
+        let design = conditional_poisson_calibrate(&pi, r);
+        check_marginals(|rng| sample_conditional_poisson(&design, rng), &pi, r, 20_000, 5.0);
+    }
+
+    #[test]
+    fn cps_calibration_is_exact_in_expectation() {
+        let (pi, r) = target_pi();
+        let design = conditional_poisson_calibrate(&pi, r);
+        // free-unit targets recovered by the DP inclusion formula
+        let free_targets: Vec<f64> = pi.iter().cloned().filter(|&p| p < 1.0).collect();
+        let got = cps_inclusion(&design.weights, r - 1);
+        for (g, t) in got.iter().zip(&free_targets) {
+            assert!((g - t).abs() < 1e-9, "calibrated {g} vs target {t}");
+        }
+    }
+
+    #[test]
+    fn esp_matches_bruteforce() {
+        let w = [0.5, 1.5, 2.0, 0.25];
+        let e = esp(&w, 3);
+        // e1 = Σw, e2 = Σ_{i<j} w_i w_j, e3 = Σ_{i<j<k} ...
+        let e1: f64 = w.iter().sum();
+        let mut e2 = 0.0;
+        let mut e3 = 0.0;
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                e2 += w[i] * w[j];
+                for k in (j + 1)..4 {
+                    e3 += w[i] * w[j] * w[k];
+                }
+            }
+        }
+        assert!((e[1] - e1).abs() < 1e-12);
+        assert!((e[2] - e2).abs() < 1e-12);
+        assert!((e[3] - e3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn equal_pi_reduces_to_srswor_marginals() {
+        let pi = vec![0.5; 8];
+        let r = 4;
+        check_marginals(|rng| sample_systematic(&pi, r, rng), &pi, r, 30_000, 5.0);
+        let design = conditional_poisson_calibrate(&pi, r);
+        check_marginals(|rng| sample_conditional_poisson(&design, rng), &pi, r, 20_000, 5.0);
+    }
+
+    #[test]
+    fn all_units_forced_when_r_equals_n() {
+        let pi = vec![1.0; 5];
+        let mut rng = Rng::new(3);
+        assert_eq!(sample_sampford(&pi, 5, &mut rng), vec![0, 1, 2, 3, 4]);
+        let d = conditional_poisson_calibrate(&pi, 5);
+        assert_eq!(sample_conditional_poisson(&d, &mut rng), vec![0, 1, 2, 3, 4]);
+        assert_eq!(sample_systematic(&pi, 5, &mut rng).len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to r")]
+    fn rejects_inconsistent_budget() {
+        let mut rng = Rng::new(1);
+        sample_systematic(&[0.5, 0.5, 0.5], 2, &mut rng);
+    }
+}

@@ -1,0 +1,257 @@
+//! Optimal inclusion probabilities (Theorem 3, eq. 17).
+//!
+//! Given the spectrum σ₁ ≥ … ≥ σ_n ≥ 0 of Σ and a rank budget r, solve
+//!
+//! ```text
+//! min Σ_i σ_i / π_i   s.t.  0 < π_i ≤ 1,  Σ_i π_i = r
+//! ```
+//!
+//! whose KKT solution is π*_i = min{1, √(σ_i/μ)} with μ chosen so the
+//! budget binds. Directions with large σ saturate at 1 (always included);
+//! the rest get mass ∝ √σ_i — the paper's "√σ water-filling".
+//!
+//! Degenerate directions (σ_i = 0) would receive π = 0, which breaks the
+//! isotropy constraint E[P] = cI (the reweighting c/π_i is undefined).
+//! Following the construction in the paper's Proposition 4 proof — which
+//! distributes leftover budget arbitrarily over null directions — we
+//! spread any residual budget uniformly across zero-σ directions, and
+//! additionally floor σ at `sigma_floor · max σ` so estimated spectra
+//! with numerically-zero tails stay usable.
+
+/// Solution of the water-filling problem.
+#[derive(Clone, Debug)]
+pub struct InclusionSolution {
+    /// π*_i aligned with the input σ order.
+    pub pi: Vec<f64>,
+    /// Number of saturated directions t = #{i : π*_i = 1}.
+    pub saturated: usize,
+    /// Optimal objective Σ_i σ_i / π*_i (σ after flooring).
+    pub objective: f64,
+}
+
+/// Relative floor applied to σ before solving (see module docs).
+pub const DEFAULT_SIGMA_FLOOR: f64 = 1e-12;
+
+/// Solve eq. (17). `sigma` need not be sorted; ordering is handled
+/// internally and the returned π aligns with the input order.
+pub fn optimal_inclusion(sigma: &[f64], r: usize, sigma_floor: f64) -> InclusionSolution {
+    let n = sigma.len();
+    assert!(r >= 1 && r <= n, "rank budget r={r} out of range for n={n}");
+    let smax = sigma.iter().cloned().fold(0.0, f64::max);
+    // Empirically-estimated spectra carry O(ε) negative eigenvalues from
+    // the eigensolver; clamp those, but reject genuinely indefinite input.
+    assert!(
+        sigma.iter().all(|&s| s >= -1e-9 * smax.max(1.0)),
+        "σ must be non-negative (min = {:?})",
+        sigma.iter().cloned().fold(f64::INFINITY, f64::min)
+    );
+    let sigma: Vec<f64> = sigma.iter().map(|&s| s.max(0.0)).collect();
+    let sigma = &sigma[..];
+    if smax == 0.0 {
+        // Flat (all-zero) spectrum: the problem degenerates to the
+        // instance-independent case; uniform π = r/n is optimal.
+        let pi = vec![r as f64 / n as f64; n];
+        return InclusionSolution { pi, saturated: if r == n { n } else { 0 }, objective: 0.0 };
+    }
+    let floor = sigma_floor * smax;
+    let sig: Vec<f64> = sigma.iter().map(|&s| s.max(floor)).collect();
+
+    // Sort indices by σ descending; saturation happens in this order
+    // because π*_i is monotone in σ_i.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| sig[b].partial_cmp(&sig[a]).unwrap());
+
+    let sqrt_sig: Vec<f64> = order.iter().map(|&i| sig[i].sqrt()).collect();
+    let mut suffix_sum = vec![0.0; n + 1];
+    for i in (0..n).rev() {
+        suffix_sum[i] = suffix_sum[i + 1] + sqrt_sig[i];
+    }
+
+    // Find the smallest t such that the largest uncapped candidate
+    // (r − t)·√σ_{t+1} / Σ_{j>t} √σ_j ≤ 1.
+    let mut t = 0usize;
+    while t < r {
+        if t == n {
+            break;
+        }
+        let denom = suffix_sum[t];
+        if denom == 0.0 {
+            break;
+        }
+        let cand = (r - t) as f64 * sqrt_sig[t] / denom;
+        if cand <= 1.0 + 1e-15 {
+            break;
+        }
+        t += 1;
+    }
+
+    let mut pi = vec![0.0; n];
+    let denom = suffix_sum[t];
+    for (k, &i) in order.iter().enumerate() {
+        if k < t {
+            pi[i] = 1.0;
+        } else if denom > 0.0 {
+            pi[i] = ((r - t) as f64 * sqrt_sig[k] / denom).min(1.0);
+        }
+    }
+
+    // Numerical cleanup: renormalize the uncapped block so Σπ = r exactly.
+    let capped_sum: f64 = pi.iter().filter(|&&p| p >= 1.0 - 1e-12).map(|_| 1.0).sum();
+    let uncapped_sum: f64 = pi.iter().filter(|&&p| p < 1.0 - 1e-12).sum();
+    if uncapped_sum > 0.0 {
+        let target = r as f64 - capped_sum;
+        let scale = target / uncapped_sum;
+        for p in pi.iter_mut() {
+            if *p < 1.0 - 1e-12 {
+                *p *= scale;
+            } else {
+                *p = 1.0;
+            }
+        }
+    }
+
+    let objective: f64 = sig
+        .iter()
+        .zip(&pi)
+        .map(|(&s, &p)| if p > 0.0 { s / p } else { 0.0 })
+        .sum();
+    let saturated = pi.iter().filter(|&&p| p >= 1.0 - 1e-12).count();
+    InclusionSolution { pi, saturated, objective }
+}
+
+/// Closed-form optimal value Φ_min/c² from eq. (16), for cross-checking
+/// the solver: Σ_{sat} σ_i + (Σ_{unsat} √σ_i)² / (r − t).
+pub fn phi_min_over_c2(sigma: &[f64], r: usize, sigma_floor: f64) -> f64 {
+    let sol = optimal_inclusion(sigma, r, sigma_floor);
+    sol.objective
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_feasible(pi: &[f64], r: usize) {
+        let sum: f64 = pi.iter().sum();
+        assert!((sum - r as f64).abs() < 1e-9, "Σπ = {sum} ≠ {r}");
+        for &p in pi {
+            assert!(p > 0.0 && p <= 1.0 + 1e-12, "π out of (0,1]: {p}");
+        }
+    }
+
+    #[test]
+    fn flat_spectrum_gives_uniform() {
+        let sol = optimal_inclusion(&[2.0; 10], 4, DEFAULT_SIGMA_FLOOR);
+        assert_feasible(&sol.pi, 4);
+        for &p in &sol.pi {
+            assert!((p - 0.4).abs() < 1e-12);
+        }
+        assert_eq!(sol.saturated, 0);
+    }
+
+    #[test]
+    fn budget_equals_n_saturates_all() {
+        let sol = optimal_inclusion(&[5.0, 1.0, 0.1], 3, DEFAULT_SIGMA_FLOOR);
+        assert_feasible(&sol.pi, 3);
+        assert_eq!(sol.saturated, 3);
+    }
+
+    #[test]
+    fn dominant_direction_saturates() {
+        // σ = (100, 1, 1, 1), r = 2: direction 1 must be always included.
+        let sol = optimal_inclusion(&[100.0, 1.0, 1.0, 1.0], 2, DEFAULT_SIGMA_FLOOR);
+        assert_feasible(&sol.pi, 2);
+        assert!((sol.pi[0] - 1.0).abs() < 1e-12);
+        assert_eq!(sol.saturated, 1);
+        // remaining three share the leftover budget equally (equal σ)
+        for &p in &sol.pi[1..] {
+            assert!((p - 1.0 / 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn uncapped_mass_proportional_to_sqrt_sigma() {
+        let sigma = [4.0, 1.0, 0.25, 0.0625];
+        let sol = optimal_inclusion(&sigma, 1, DEFAULT_SIGMA_FLOOR);
+        assert_feasible(&sol.pi, 1);
+        // no saturation at r=1 with this spread: π_i ∝ √σ_i = (2,1,.5,.25)
+        let total: f64 = 2.0 + 1.0 + 0.5 + 0.25;
+        for (i, w) in [2.0, 1.0, 0.5, 0.25].iter().enumerate() {
+            assert!((sol.pi[i] - w / total).abs() < 1e-9, "π={:?}", sol.pi);
+        }
+    }
+
+    #[test]
+    fn objective_matches_closed_form_eq16() {
+        let sigma = [9.0, 4.0, 1.0, 0.5, 0.1];
+        let r = 3;
+        let sol = optimal_inclusion(&sigma, r, 0.0);
+        // recompute eq. (16) from the reported saturation set
+        let t = sol.saturated;
+        let mut sat = 0.0;
+        let mut unsat_sqrt = 0.0;
+        for (i, &p) in sol.pi.iter().enumerate() {
+            if p >= 1.0 - 1e-12 {
+                sat += sigma[i];
+            } else {
+                unsat_sqrt += sigma[i].sqrt();
+            }
+        }
+        let closed = sat + unsat_sqrt * unsat_sqrt / (r - t) as f64;
+        assert!((sol.objective - closed).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solver_beats_uniform_on_nonflat_spectrum() {
+        // optimality sanity: Σσ_i/π*_i ≤ Σσ_i/(r/n)
+        let sigma = [10.0, 5.0, 2.0, 1.0, 0.5, 0.2, 0.1, 0.05];
+        let r = 3;
+        let sol = optimal_inclusion(&sigma, r, 0.0);
+        let uniform: f64 = sigma.iter().map(|s| s / (r as f64 / 8.0)).sum();
+        assert!(sol.objective < uniform);
+    }
+
+    #[test]
+    fn brute_force_agreement_small_case() {
+        // n=3, r=2: grid-search the simplex {π: Σπ=2, 0<π≤1} and compare.
+        let sigma = [3.0, 1.0, 0.2];
+        let sol = optimal_inclusion(&sigma, 2, 0.0);
+        let mut best = f64::INFINITY;
+        let steps = 2000;
+        for a in 1..steps {
+            let p1 = a as f64 / steps as f64;
+            for b in 1..steps {
+                let p2 = b as f64 / steps as f64;
+                let p3 = 2.0 - p1 - p2;
+                if p3 <= 0.0 || p3 > 1.0 {
+                    continue;
+                }
+                let obj = sigma[0] / p1 + sigma[1] / p2 + sigma[2] / p3;
+                if obj < best {
+                    best = obj;
+                }
+            }
+        }
+        assert!(sol.objective <= best + 1e-3, "solver {} vs grid {}", sol.objective, best);
+    }
+
+    #[test]
+    fn zero_directions_get_positive_pi() {
+        let sigma = [1.0, 1.0, 0.0, 0.0];
+        let sol = optimal_inclusion(&sigma, 3, DEFAULT_SIGMA_FLOOR);
+        assert_feasible(&sol.pi, 3);
+        // rank(Σ)=2 ≤ r=3 ⇒ positive-σ directions saturate (Prop 4)
+        assert!((sol.pi[0] - 1.0).abs() < 1e-9);
+        assert!((sol.pi[1] - 1.0).abs() < 1e-9);
+        assert!(sol.pi[2] > 0.0 && sol.pi[3] > 0.0);
+    }
+
+    #[test]
+    fn unsorted_input_handled() {
+        let sorted = optimal_inclusion(&[8.0, 2.0, 1.0], 2, 0.0);
+        let shuffled = optimal_inclusion(&[1.0, 8.0, 2.0], 2, 0.0);
+        assert!((sorted.pi[0] - shuffled.pi[1]).abs() < 1e-12);
+        assert!((sorted.pi[1] - shuffled.pi[2]).abs() < 1e-12);
+        assert!((sorted.pi[2] - shuffled.pi[0]).abs() < 1e-12);
+        assert!((sorted.objective - shuffled.objective).abs() < 1e-12);
+    }
+}

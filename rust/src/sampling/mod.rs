@@ -1,0 +1,23 @@
+//! Survey-sampling substrate for the instance-dependent projector.
+//!
+//! Algorithm 4 of the paper needs two things this module provides:
+//!
+//! 1. the **optimal inclusion probabilities** π* of Theorem 3 (eq. 17) —
+//!    a √σ water-filling with saturation at 1 ([`inclusion`]);
+//! 2. a **fixed-size unequal-probability sampling design** realizing
+//!    Pr(i ∈ J) = π*_i with |J| = r exactly ([`designs`]): the paper cites
+//!    conditional Poisson (Hájek 1964), Sampford (1967) and Tillé-style
+//!    sequential schemes; we implement conditional Poisson (exact, via
+//!    elementary-symmetric-polynomial DP), Sampford (rejective), and
+//!    systematic PPS (Madow) as the fast default.
+
+mod inclusion;
+mod designs;
+mod tille;
+
+pub use inclusion::{optimal_inclusion, phi_min_over_c2, InclusionSolution, DEFAULT_SIGMA_FLOOR};
+pub use designs::{
+    conditional_poisson_calibrate, sample_conditional_poisson, sample_sampford,
+    sample_systematic, CpsDesign, FixedSizeDesign,
+};
+pub use tille::sample_tille;

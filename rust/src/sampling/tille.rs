@@ -1,0 +1,178 @@
+//! Tillé's elimination procedure (Tillé 1996; cited by Algorithm 4 as
+//! "Tillé's elimination") — the third fixed-size π-ps design the paper
+//! names.
+//!
+//! The procedure walks the sample size down from n to r: at stage
+//! k (selecting k units out of the survivors) every surviving unit i
+//! carries the inclusion probability π_i(k) of the *size-k* design, and
+//! one unit is eliminated with probability
+//!
+//! ```text
+//! p_i = 1 − π_i(k) / π_i(k+1)
+//! ```
+//!
+//! (normalized over survivors). The size-k inclusion probabilities are
+//! recomputed by the standard Hájek fixed point at each stage so every
+//! stage is a proper π-ps problem. The eliminations are sequential and
+//! the final survivor set has exactly the target first-order inclusion
+//! probabilities.
+
+use crate::rng::Rng;
+
+/// Compute size-k inclusion probabilities proportional to `w`, capped at
+/// 1 (the classic πps fixed point: saturate, redistribute, repeat).
+fn pips_probabilities(w: &[f64], k: usize) -> Vec<f64> {
+    let n = w.len();
+    assert!(k <= n);
+    let mut pi = vec![0.0; n];
+    let mut capped = vec![false; n];
+    loop {
+        let free_weight: f64 = w
+            .iter()
+            .zip(&capped)
+            .filter(|(_, &c)| !c)
+            .map(|(&x, _)| x)
+            .sum();
+        let k_free = k - capped.iter().filter(|&&c| c).count();
+        if free_weight <= 0.0 || k_free == 0 {
+            break;
+        }
+        let mut newly_capped = false;
+        for i in 0..n {
+            if capped[i] {
+                continue;
+            }
+            let p = k_free as f64 * w[i] / free_weight;
+            if p >= 1.0 {
+                pi[i] = 1.0;
+                capped[i] = true;
+                newly_capped = true;
+            } else {
+                pi[i] = p;
+            }
+        }
+        if !newly_capped {
+            break;
+        }
+    }
+    pi
+}
+
+/// Draw a fixed-size-r sample with Pr(i ∈ J) = pi_target_i by Tillé's
+/// elimination. `pi_target` must lie in (0, 1] and sum to r.
+pub fn sample_tille(pi_target: &[f64], r: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = pi_target.len();
+    let sum: f64 = pi_target.iter().sum();
+    assert!(
+        (sum - r as f64).abs() < 1e-6,
+        "inclusion probabilities must sum to r: Σπ = {sum}, r = {r}"
+    );
+    for &p in pi_target {
+        assert!(p > 0.0 && p <= 1.0 + 1e-9, "π_i must lie in (0,1], got {p}");
+    }
+    // Use the targets themselves as the size weights: π_i(k) ∝ π_target
+    // capped at 1, which reproduces π_target exactly at k = r.
+    let mut alive: Vec<usize> = (0..n).collect();
+    let mut pi_k1 = vec![1.0; n]; // π_i(n) = 1 for all units
+    for k in (r..n).rev() {
+        // size-k probabilities over the full population (dead units
+        // already have π(k+1) = their elimination state; the recursion
+        // only ever eliminates units with π < 1)
+        let pi_k = pips_probabilities(pi_target, k);
+        // elimination weights over the survivors
+        let weights: Vec<f64> = alive
+            .iter()
+            .map(|&i| (1.0 - pi_k[i] / pi_k1[i]).max(0.0))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let victim_pos = if total <= 0.0 {
+            // degenerate (all saturated): eliminate uniformly among
+            // the non-saturated; fall back to uniform if none
+            rng.below(alive.len() as u64) as usize
+        } else {
+            rng.categorical(&weights)
+        };
+        alive.swap_remove(victim_pos);
+        pi_k1 = pi_k;
+    }
+    alive.sort_unstable();
+    alive
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pips_fixed_point_saturates_and_sums() {
+        let w = [10.0, 1.0, 1.0, 1.0];
+        let pi = pips_probabilities(&w, 2);
+        assert!((pi[0] - 1.0).abs() < 1e-12, "dominant unit must saturate");
+        let sum: f64 = pi.iter().sum();
+        assert!((sum - 2.0).abs() < 1e-9, "Σπ = {sum}");
+        // remaining mass split evenly
+        for &p in &pi[1..] {
+            assert!((p - 1.0 / 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn sample_has_fixed_size_and_valid_units() {
+        let pi = [0.9, 0.7, 0.5, 0.4, 0.3, 0.2];
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let s = sample_tille(&pi, 3, &mut rng);
+            assert_eq!(s.len(), 3);
+            let mut d = s.clone();
+            d.dedup();
+            assert_eq!(d.len(), 3);
+            assert!(*s.last().unwrap() < 6);
+        }
+    }
+
+    #[test]
+    fn marginals_match_targets() {
+        let pi = [1.0, 0.7, 0.5, 0.4, 0.25, 0.15];
+        let r = 3;
+        let trials = 40_000;
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0usize; pi.len()];
+        for _ in 0..trials {
+            for i in sample_tille(&pi, r, &mut rng) {
+                counts[i] += 1;
+            }
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let expect = trials as f64 * pi[i];
+            let sd = (trials as f64 * pi[i] * (1.0 - pi[i])).sqrt().max(1.0);
+            assert!(
+                (c as f64 - expect).abs() < 6.0 * sd,
+                "unit {i}: got {c}, expect {expect:.0} ± {sd:.0}"
+            );
+        }
+    }
+
+    #[test]
+    fn equal_probabilities_reduce_to_srswor() {
+        let pi = vec![0.5; 8];
+        let mut rng = Rng::new(9);
+        let trials = 30_000;
+        let mut counts = vec![0usize; 8];
+        for _ in 0..trials {
+            for i in sample_tille(&pi, 4, &mut rng) {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials as f64 * 0.5;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 6.0 * (trials as f64 * 0.25).sqrt());
+        }
+    }
+
+    #[test]
+    fn r_equals_n_returns_everything() {
+        let pi = vec![1.0; 5];
+        let mut rng = Rng::new(11);
+        assert_eq!(sample_tille(&pi, 5, &mut rng), vec![0, 1, 2, 3, 4]);
+    }
+}

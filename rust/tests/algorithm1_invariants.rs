@@ -1,0 +1,155 @@
+//! Algorithm-1 state-machine invariants over a real artifact manifest:
+//! the resample/lift machinery must be exactly the paper's outer/inner
+//! structure.
+
+use lowrank_sge::coordinator::SubspaceSet;
+use lowrank_sge::linalg::{matmul_nt, Mat};
+use lowrank_sge::model::ParamStore;
+use lowrank_sge::optim::AdamConfig;
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::rng::Rng;
+use lowrank_sge::runtime::ArtifactManifest;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn setup() -> Option<(ArtifactManifest, ParamStore)> {
+    let dir = artifacts_dir();
+    if !dir.join("INDEX.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = ArtifactManifest::load(&dir.join("lm_grad_s.manifest.txt")).unwrap();
+    let store = ParamStore::load_init(&dir, "s", &manifest).unwrap();
+    Some((manifest, store))
+}
+
+#[test]
+fn subspace_covers_every_reparameterized_matrix() {
+    let Some((manifest, store)) = setup() else { return };
+    let sub = SubspaceSet::from_manifest(&manifest, &store, ProjectorKind::Stiefel, 1.0,
+        AdamConfig::default()).unwrap();
+    // llama-s: 3 layers × 7 matrices
+    assert_eq!(sub.slots.len(), 21);
+    for slot in &sub.slots {
+        assert_eq!(slot.r, 8);
+        assert!(slot.m == 128 || slot.m == 384);
+        assert!(slot.n == 128 || slot.n == 384);
+        // dB output exists for the grad artifact
+        assert_ne!(slot.db_output, usize::MAX, "{}", slot.name);
+    }
+    // B memory is Σ m·r ≪ Σ m·n (the Table-2 story)
+    let full: usize = sub.slots.iter().map(|s| s.m * s.n).sum();
+    let expect_b: usize = sub.slots.iter().map(|s| s.m * s.r).sum();
+    assert_eq!(sub.b_elements(), expect_b);
+    assert!(sub.b_elements() < full / 10);
+    assert_eq!(sub.optimizer_state_bytes(), 8 * sub.b_elements());
+}
+
+#[test]
+fn lift_with_zero_b_is_identity() {
+    let Some((manifest, store)) = setup() else { return };
+    let mut store = store;
+    let before: Vec<Vec<f32>> = (0..store.len())
+        .map(|i| store.f32(i).map(|s| s.to_vec()).unwrap_or_default())
+        .collect();
+    let mut sub = SubspaceSet::from_manifest(&manifest, &store, ProjectorKind::Stiefel, 1.0,
+        AdamConfig::default()).unwrap();
+    let mut rng = Rng::new(1);
+    sub.resample(&mut rng); // B = 0 after resample
+    sub.lift(&mut store).unwrap();
+    for i in 0..store.len() {
+        if let Ok(after) = store.f32(i) {
+            assert_eq!(after, before[i].as_slice(), "param {i} changed by zero lift");
+        }
+    }
+}
+
+#[test]
+fn lift_matches_explicit_bvt_product() {
+    let Some((manifest, store)) = setup() else { return };
+    let mut store = store;
+    let mut sub = SubspaceSet::from_manifest(&manifest, &store, ProjectorKind::Coordinate, 1.0,
+        AdamConfig::default()).unwrap();
+    let mut rng = Rng::new(2);
+    sub.resample(&mut rng);
+    // set B of slot 0 to something nonzero
+    let (m, n, r) = (sub.slots[0].m, sub.slots[0].n, sub.slots[0].r);
+    for (i, b) in sub.slots[0].b.iter_mut().enumerate() {
+        *b = (i as f32 * 0.01).sin();
+    }
+    let pos = sub.slots[0].param_pos;
+    let theta_before = store.f32(pos).unwrap().to_vec();
+    let b64 = Mat::from_fn(m, r, |i, j| sub.slots[0].b[i * r + j] as f64);
+    let v64 = Mat::from_fn(n, r, |i, j| sub.slots[0].v[i * r + j] as f64);
+    let delta = matmul_nt(&b64, &v64);
+    sub.lift(&mut store).unwrap();
+    let theta_after = store.f32(pos).unwrap();
+    for i in 0..m * n {
+        let want = theta_before[i] as f64 + delta.data[i];
+        assert!((theta_after[i] as f64 - want).abs() < 1e-5, "lift mismatch at {i}");
+    }
+    // B zeroed after lift (Algorithm 1 line 3 of the next outer iter)
+    assert!(sub.slots[0].b.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn resample_changes_v_and_counts_outer_iterations() {
+    let Some((manifest, store)) = setup() else { return };
+    let mut sub = SubspaceSet::from_manifest(&manifest, &store, ProjectorKind::Stiefel, 1.0,
+        AdamConfig::default()).unwrap();
+    assert_eq!(sub.outer_iterations(), 0);
+    let mut rng = Rng::new(3);
+    sub.resample(&mut rng);
+    let v1 = sub.slots[0].v.clone();
+    sub.resample(&mut rng);
+    let v2 = sub.slots[0].v.clone();
+    assert_ne!(v1, v2, "resample produced identical V");
+    assert_eq!(sub.outer_iterations(), 2);
+}
+
+#[test]
+fn stiefel_v_gram_condition_survives_f32_roundtrip() {
+    // Theorem 2's VᵀV = (cn/r)·I must hold (to f32 precision) on the
+    // f32 V the artifact actually receives.
+    let Some((manifest, store)) = setup() else { return };
+    let mut sub = SubspaceSet::from_manifest(&manifest, &store, ProjectorKind::Stiefel, 1.0,
+        AdamConfig::default()).unwrap();
+    let mut rng = Rng::new(4);
+    sub.resample(&mut rng);
+    for slot in &sub.slots {
+        let target = slot.n as f32 / slot.r as f32;
+        for a in 0..slot.r {
+            for b in 0..slot.r {
+                let mut dot = 0.0f32;
+                for i in 0..slot.n {
+                    dot += slot.v[i * slot.r + a] * slot.v[i * slot.r + b];
+                }
+                let want = if a == b { target } else { 0.0 };
+                assert!(
+                    (dot - want).abs() < 1e-3 * target,
+                    "{}: VᵀV[{a},{b}] = {dot}, want {want}",
+                    slot.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zo_manifest_maps_z_slots() {
+    let dir = artifacts_dir();
+    if !dir.join("INDEX.txt").exists() {
+        return;
+    }
+    let manifest = ArtifactManifest::load(&dir.join("clf_zo_lowrank.manifest.txt")).unwrap();
+    let store = ParamStore::load_init(&dir, "clf", &manifest).unwrap();
+    let sub = SubspaceSet::from_zo_manifest(&manifest, &store, ProjectorKind::Gaussian, 1.0,
+        AdamConfig::default()).unwrap();
+    assert_eq!(sub.slots.len(), 21); // 3 layers × 7 matrices
+    for slot in &sub.slots {
+        assert_eq!(slot.db_output, usize::MAX); // ZO: no dB output
+        assert_eq!(slot.r, 4);
+    }
+}

@@ -1,0 +1,90 @@
+//! Integration: the Rust runtime executes every golden-carrying artifact
+//! and reproduces the Python-recorded outputs. This is the L2↔L3
+//! numerical contract test.
+
+use lowrank_sge::runtime::Runtime;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("INDEX.txt").exists()
+}
+
+#[test]
+fn golden_artifacts_reproduce_python_outputs() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    for name in ["lm_grad_s", "lm_eval_s", "lm_grad_s_pallas"] {
+        let art = rt.load(name).unwrap();
+        let inputs = rt.golden_inputs(&art).unwrap();
+        let expected = rt.golden_outputs(&art).unwrap();
+        let got = art.execute(&inputs).unwrap();
+        assert_eq!(got.len(), expected.len(), "{name}: output arity");
+        for (i, (g, e)) in got.iter().zip(&expected).enumerate() {
+            let scale = e
+                .as_f32()
+                .map(|d| d.iter().fold(0f32, |a, &b| a.max(b.abs())))
+                .unwrap_or(1.0)
+                .max(1e-3);
+            let diff = g.max_abs_diff(e).unwrap();
+            assert!(
+                diff <= 1e-4 * scale + 1e-6,
+                "{name}: output {i} diff {diff} (scale {scale})"
+            );
+        }
+        println!("{name}: {} outputs match golden", got.len());
+    }
+}
+
+#[test]
+fn pallas_artifact_matches_jnp_artifact_on_same_inputs() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let jnp = rt.load("lm_grad_s").unwrap();
+    let pls = rt.load("lm_grad_s_pallas").unwrap();
+    let inputs = rt.golden_inputs(&jnp).unwrap();
+    let out_j = jnp.execute(&inputs).unwrap();
+    let out_p = pls.execute(&inputs).unwrap();
+    // loss
+    let (lj, lp) = (out_j[0].scalar().unwrap(), out_p[0].scalar().unwrap());
+    assert!((lj - lp).abs() < 1e-4 * lj.abs().max(1.0), "loss: jnp {lj} vs pallas {lp}");
+    // all gradients
+    for i in 1..out_j.len() {
+        let diff = out_j[i].max_abs_diff(&out_p[i]).unwrap();
+        let scale = out_j[i]
+            .as_f32()
+            .unwrap()
+            .iter()
+            .fold(0f32, |a, &b| a.max(b.abs()))
+            .max(1e-3);
+        assert!(diff < 5e-3 * scale + 1e-5, "output {i}: kernel/oracle diff {diff}");
+    }
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut rt = Runtime::new(artifacts_dir()).unwrap();
+    let art = rt.load("lm_eval_s").unwrap();
+    let mut inputs = rt.golden_inputs(&art).unwrap();
+    // corrupt one shape
+    if let lowrank_sge::runtime::HostTensor::F32 { shape, .. } = &mut inputs[0] {
+        shape.swap(0, 1);
+    }
+    assert!(art.execute(&inputs).is_err());
+    // wrong arity
+    let art2 = rt.load("lm_eval_s").unwrap();
+    let short = rt.golden_inputs(&art2).unwrap()[1..].to_vec();
+    assert!(art2.execute(&short).is_err());
+}

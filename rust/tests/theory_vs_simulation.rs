@@ -1,0 +1,153 @@
+//! Theory ↔ simulation cross-checks at the paper's own toy scale
+//! (m = n = 100, o = 30): the §5 closed forms must predict the measured
+//! one-shot MSE of each estimator on problem (19).
+
+use lowrank_sge::estimator::mse::{one_shot_mse, EstimatorSpec, MseCurveConfig};
+use lowrank_sge::estimator::theory;
+use lowrank_sge::estimator::toy::ToyProblem;
+use lowrank_sge::estimator::Family;
+use lowrank_sge::linalg::sym_eig;
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::rng::Rng;
+
+fn cfg(family: Family, spec: EstimatorSpec, c: f64, r: usize) -> MseCurveConfig {
+    MseCurveConfig {
+        family,
+        spec,
+        c,
+        r,
+        sample_sizes: vec![1],
+        reps: 1,
+        seed: 314,
+        zo_sigma: 1e-2,
+        warmup: 400,
+    }
+}
+
+#[test]
+fn paper_scale_stiefel_matches_closed_form_ipa() {
+    let p = ToyProblem::paper_default(1);
+    let w = p.eval_point(2);
+    let mut rng = Rng::new(3);
+    let sxi = p.sigma_xi_empirical(&w, &mut rng, 1500, Family::Ipa, 1e-2);
+    let sth = p.sigma_theta(&w);
+    for &(c, r) in &[(1.0, 4usize), (0.5, 4), (1.0, 16)] {
+        let predicted =
+            theory::mse_isotropic_exact(p.n, r, c, sxi.trace(), sth.trace());
+        let measured = one_shot_mse(
+            &p,
+            &w,
+            &cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Stiefel), c, r),
+            1200,
+        );
+        let rel = (measured - predicted).abs() / predicted;
+        assert!(
+            rel < 0.2,
+            "c={c} r={r}: measured {measured:.3e} vs predicted {predicted:.3e} (rel {rel:.3})"
+        );
+    }
+}
+
+#[test]
+fn paper_scale_gaussian_matches_wishart_form() {
+    let p = ToyProblem::paper_default(5);
+    let w = p.eval_point(6);
+    let mut rng = Rng::new(7);
+    let sxi = p.sigma_xi_empirical(&w, &mut rng, 1500, Family::Ipa, 1e-2);
+    let sth = p.sigma_theta(&w);
+    let (c, r) = (1.0, 4usize);
+    let predicted = theory::mse_gaussian_exact(p.n, r, c, sxi.trace(), sth.trace());
+    let measured = one_shot_mse(
+        &p,
+        &w,
+        &cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Gaussian), c, r),
+        1200,
+    );
+    let rel = (measured - predicted).abs() / predicted;
+    assert!(
+        rel < 0.25,
+        "measured {measured:.3e} vs predicted {predicted:.3e} (rel {rel:.3})"
+    );
+}
+
+#[test]
+fn figure_ordering_full_vs_gaussian_vs_stiefel_vs_dependent() {
+    // the Figures 2–5 method ordering at matched (c = 1, r = 4):
+    //   Gaussian > Stiefel/Coordinate > Dependent (one-shot MSE).
+    let p = ToyProblem::paper_default(9);
+    let w = p.eval_point(10);
+    let draws = 900;
+    let m_g = one_shot_mse(
+        &p,
+        &w,
+        &cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Gaussian), 1.0, 4),
+        draws,
+    );
+    let m_s = one_shot_mse(
+        &p,
+        &w,
+        &cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Stiefel), 1.0, 4),
+        draws,
+    );
+    let m_c = one_shot_mse(
+        &p,
+        &w,
+        &cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Coordinate), 1.0, 4),
+        draws,
+    );
+    let m_d = one_shot_mse(
+        &p,
+        &w,
+        &cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Dependent), 1.0, 4),
+        draws,
+    );
+    assert!(m_g > m_s, "gaussian {m_g:.3e} !> stiefel {m_s:.3e}");
+    assert!(m_g > m_c, "gaussian {m_g:.3e} !> coordinate {m_c:.3e}");
+    assert!(m_d < m_s, "dependent {m_d:.3e} !< stiefel {m_s:.3e}");
+}
+
+#[test]
+fn dependent_mse_matches_thm3_value() {
+    let p = ToyProblem::paper_default(11);
+    let w = p.eval_point(12);
+    let mut rng = Rng::new(13);
+    let sigma = p.sigma_total(&w, &mut rng, 1500, Family::Ipa, 1e-2);
+    let spec = sym_eig(&sigma).values;
+    let sth = p.sigma_theta(&w);
+    let (c, r) = (1.0, 8usize);
+    let predicted = theory::mse_dependent_min(&spec, r, c, sth.trace());
+    let measured = one_shot_mse(
+        &p,
+        &w,
+        &cfg(Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Dependent), c, r),
+        1200,
+    );
+    let rel = (measured - predicted).abs() / predicted.abs().max(1e-12);
+    assert!(
+        rel < 0.25,
+        "measured {measured:.3e} vs Thm-3 value {predicted:.3e} (rel {rel:.3})"
+    );
+}
+
+#[test]
+fn lr_family_shows_same_ordering() {
+    let p = ToyProblem::paper_default(15);
+    let w = p.eval_point(16);
+    let draws = 700;
+    let m_g = one_shot_mse(
+        &p,
+        &w,
+        &cfg(Family::Lr, EstimatorSpec::LowRank(ProjectorKind::Gaussian), 1.0, 4),
+        draws,
+    );
+    let m_s = one_shot_mse(
+        &p,
+        &w,
+        &cfg(Family::Lr, EstimatorSpec::LowRank(ProjectorKind::Stiefel), 1.0, 4),
+        draws,
+    );
+    assert!(
+        m_g > m_s,
+        "LR family: gaussian {m_g:.3e} should exceed stiefel {m_s:.3e}"
+    );
+}
