@@ -1,0 +1,74 @@
+//! Checkpoint save/restore throughput at pretrain-scale tensor counts.
+//!
+//! The cost model that matters for picking `--save-every`: a checkpoint
+//! is ~2× the parameter bytes (Θ + subspace + two Adam moment buffers),
+//! and the save sits on the training critical path (the leader writes at
+//! the step barrier). This measures full commits — codec + CRC + temp
+//! dir + rename + LATEST — and verified loads, per scale.
+
+use lowrank_sge::bench_util::{bench, log_csv, report};
+use lowrank_sge::ckpt::{load_checkpoint, save_checkpoint, ResumeSpec, StateDict};
+use lowrank_sge::rng::Rng;
+
+/// A synthetic "model": `tensors` f32 matrices of rows×cols plus nested
+/// Adam moments, mimicking the params + subspace groups of a pretrain
+/// checkpoint.
+fn synthetic_groups(tensors: usize, rows: usize, cols: usize) -> Vec<(String, StateDict)> {
+    let mut rng = Rng::new(42);
+    let mut params = StateDict::new();
+    let mut opt = StateDict::new();
+    for i in 0..tensors {
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32).collect();
+        params.put_f32(format!("params[t{i}]"), vec![rows, cols], data.clone());
+        opt.put_f32(format!("adam[t{i}].m"), vec![rows, cols], data.clone());
+        opt.put_f32(format!("adam[t{i}].v"), vec![rows, cols], data);
+        opt.put_u64s(format!("adam[t{i}].t"), &[1000 + i as u64]);
+    }
+    let mut rng_state = StateDict::new();
+    rng_state.put_u64s("xoshiro_state", &[1, 2, 3, 4]);
+    vec![
+        ("params".to_string(), params),
+        ("opt".to_string(), opt),
+        ("rng".to_string(), rng_state),
+    ]
+}
+
+fn main() {
+    let root = std::env::temp_dir().join("lowrank_sge_ckpt_io_bench");
+    let _ = std::fs::remove_dir_all(&root);
+
+    // (tag, tensors, rows, cols): llama-s proxy … llama-100M-ish counts
+    let cases = [
+        ("s_14x256x128", 14usize, 256usize, 128usize),
+        ("m_32x512x256", 32, 512, 256),
+        ("l_48x1024x512", 48, 1024, 512),
+    ];
+    for (tag, tensors, rows, cols) in cases {
+        let groups = synthetic_groups(tensors, rows, cols);
+        let named: Vec<(&str, StateDict)> =
+            groups.iter().map(|(n, sd)| (n.as_str(), sd.clone())).collect();
+        let bytes: usize = groups.iter().map(|(_, sd)| sd.payload_bytes()).sum();
+        let mb = bytes as f64 / (1024.0 * 1024.0);
+        let dir = root.join(tag);
+
+        let mut step = 0u64;
+        let stats = bench(1, 8, || {
+            step += 1;
+            save_checkpoint(&dir, step, &[], &named, 2).unwrap();
+        });
+        let name = format!("ckpt_save_{tag}");
+        report(&name, &stats);
+        println!("    {:>10.1} MB  {:>8.1} MB/s (keep-last 2, full commit)", mb, stats.per_second(mb));
+        log_csv("ckpt_io.csv", &name, &stats);
+
+        let stats = bench(1, 8, || {
+            let ckpt = load_checkpoint(&dir, ResumeSpec::Latest).unwrap();
+            assert_eq!(ckpt.group_names().len(), 3);
+        });
+        let name = format!("ckpt_load_{tag}");
+        report(&name, &stats);
+        println!("    {:>10.1} MB  {:>8.1} MB/s (CRC-verified load)", mb, stats.per_second(mb));
+        log_csv("ckpt_io.csv", &name, &stats);
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -1,0 +1,226 @@
+//! On-disk layout of a checkpoint directory:
+//!
+//! ```text
+//! <ckpt-dir>/
+//!   LATEST              # `latest = <step>` (key = value dialect)
+//!   step-0000001200/    # one committed checkpoint
+//!     MANIFEST
+//!     params.tsr
+//!     subspace.tsr
+//!     ...
+//!   .tmp-step-…         # in-flight write (renamed into place on commit)
+//! ```
+//!
+//! Commits are atomic at the directory level: shards and MANIFEST are
+//! written into a temp dir which is `rename(2)`d to its final name, so a
+//! crash mid-save never leaves a half-readable `step-*` directory, and
+//! `LATEST` is itself updated via write-temp-then-rename.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Zero-padded so lexicographic order == numeric order.
+pub fn step_dir_name(step: u64) -> String {
+    format!("step-{step:010}")
+}
+
+/// Inverse of [`step_dir_name`]; `None` for foreign directory names.
+pub fn parse_step_dir(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("step-")?;
+    if digits.len() != 10 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// What `--resume` asked for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResumeSpec {
+    /// Follow the `LATEST` pointer (falling back to the highest
+    /// committed step if the pointer is missing).
+    Latest,
+    /// A specific committed step.
+    Step(u64),
+}
+
+impl ResumeSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        if s.eq_ignore_ascii_case("latest") {
+            return Ok(ResumeSpec::Latest);
+        }
+        match s.parse::<u64>() {
+            Ok(step) => Ok(ResumeSpec::Step(step)),
+            Err(_) => bail!("bad --resume value {s:?} (want `latest` or a step number)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ResumeSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ResumeSpec::Latest => write!(f, "latest"),
+            ResumeSpec::Step(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// Path helpers over one checkpoint root.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    root: PathBuf,
+}
+
+impl Layout {
+    pub fn new(root: impl AsRef<Path>) -> Self {
+        Layout { root: root.as_ref().to_path_buf() }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn step_dir(&self, step: u64) -> PathBuf {
+        self.root.join(step_dir_name(step))
+    }
+
+    pub fn tmp_dir(&self, step: u64) -> PathBuf {
+        self.root.join(format!(".tmp-{}", step_dir_name(step)))
+    }
+
+    pub fn latest_path(&self) -> PathBuf {
+        self.root.join("LATEST")
+    }
+
+    /// Committed steps (directories with a MANIFEST), ascending.
+    pub fn list_steps(&self) -> Result<Vec<u64>> {
+        let mut steps = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return Ok(steps), // no directory yet == no checkpoints
+        };
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(step) = parse_step_dir(name) else { continue };
+            if entry.path().join(super::manifest::MANIFEST_FILE).is_file() {
+                steps.push(step);
+            }
+        }
+        steps.sort_unstable();
+        Ok(steps)
+    }
+
+    /// Read the `LATEST` pointer, if present and well-formed.
+    pub fn read_latest(&self) -> Result<Option<u64>> {
+        let path = self.latest_path();
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        for line in text.lines() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if let ["latest", "=", v] = parts.as_slice() {
+                let step = v
+                    .parse::<u64>()
+                    .with_context(|| format!("{path:?}: bad step {v:?}"))?;
+                return Ok(Some(step));
+            }
+        }
+        bail!("{path:?} has no `latest = <step>` line");
+    }
+
+    /// Atomically point `LATEST` at `step`.
+    pub fn write_latest(&self, step: u64) -> Result<()> {
+        let tmp = self.root.join(".LATEST.tmp");
+        std::fs::write(&tmp, format!("latest = {step}\n"))
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, self.latest_path()).context("committing LATEST pointer")?;
+        Ok(())
+    }
+
+    /// Resolve a resume spec against the committed checkpoints.
+    pub fn resolve(&self, spec: ResumeSpec) -> Result<u64> {
+        let steps = self.list_steps()?;
+        match spec {
+            ResumeSpec::Step(step) => {
+                if !steps.contains(&step) {
+                    bail!(
+                        "no committed checkpoint at step {step} under {:?} (have: {steps:?})",
+                        self.root
+                    );
+                }
+                Ok(step)
+            }
+            ResumeSpec::Latest => {
+                if let Some(step) = self.read_latest()? {
+                    if steps.contains(&step) {
+                        return Ok(step);
+                    }
+                    // stale pointer (e.g. pruned by hand): fall back
+                }
+                steps.last().copied().with_context(|| {
+                    format!("no committed checkpoints under {:?}", self.root)
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_dir_names_roundtrip_and_sort() {
+        assert_eq!(step_dir_name(0), "step-0000000000");
+        assert_eq!(step_dir_name(1200), "step-0000001200");
+        assert_eq!(parse_step_dir("step-0000001200"), Some(1200));
+        assert_eq!(parse_step_dir("step-12"), None);
+        assert_eq!(parse_step_dir("other"), None);
+        assert!(step_dir_name(9) < step_dir_name(10));
+        assert!(step_dir_name(999) < step_dir_name(1000));
+    }
+
+    #[test]
+    fn resume_spec_parses() {
+        assert_eq!(ResumeSpec::parse("latest").unwrap(), ResumeSpec::Latest);
+        assert_eq!(ResumeSpec::parse("LATEST").unwrap(), ResumeSpec::Latest);
+        assert_eq!(ResumeSpec::parse("400").unwrap(), ResumeSpec::Step(400));
+        assert!(ResumeSpec::parse("-3").is_err());
+        assert!(ResumeSpec::parse("soonish").is_err());
+    }
+
+    #[test]
+    fn latest_pointer_roundtrip() {
+        let root = std::env::temp_dir().join("lowrank_sge_layout_test");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(&root).unwrap();
+        let layout = Layout::new(&root);
+        assert_eq!(layout.read_latest().unwrap(), None);
+        layout.write_latest(77).unwrap();
+        assert_eq!(layout.read_latest().unwrap(), Some(77));
+        layout.write_latest(154).unwrap();
+        assert_eq!(layout.read_latest().unwrap(), Some(154));
+        assert!(layout.list_steps().unwrap().is_empty()); // pointer only, no dirs
+    }
+
+    #[test]
+    fn list_steps_ignores_foreign_and_manifestless_dirs() {
+        let root = std::env::temp_dir().join("lowrank_sge_layout_list_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let layout = Layout::new(&root);
+        assert!(layout.list_steps().unwrap().is_empty()); // missing root ok
+        for (step, with_manifest) in [(5u64, true), (10, false), (2, true)] {
+            let d = layout.step_dir(step);
+            std::fs::create_dir_all(&d).unwrap();
+            if with_manifest {
+                std::fs::write(d.join(super::super::manifest::MANIFEST_FILE), "x").unwrap();
+            }
+        }
+        std::fs::create_dir_all(root.join("not-a-step")).unwrap();
+        assert_eq!(layout.list_steps().unwrap(), vec![2, 5]);
+    }
+}

@@ -1,0 +1,200 @@
+//! The per-step `MANIFEST` — the same trivial `key = value` line dialect
+//! as [`crate::runtime::manifest`], plus one `group` line per shard:
+//!
+//! ```text
+//! format = lowrank-sge-ckpt
+//! version = 1
+//! step = 1200
+//! trainer = pretrain
+//! scale = s
+//! num_groups = 4
+//! group params params.tsr 0x1a2b3c4d 14
+//! group subspace subspace.tsr 0x99aa55ee 37
+//! ...
+//! ```
+//!
+//! A checkpoint is only valid if the MANIFEST parses, every listed shard
+//! exists, and every shard's CRC matches both its own trailer and the
+//! value recorded here.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const FORMAT_TAG: &str = "lowrank-sge-ckpt";
+pub const MANIFEST_VERSION: u32 = 1;
+pub const MANIFEST_FILE: &str = "MANIFEST";
+
+/// One shard entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GroupEntry {
+    pub name: String,
+    pub file: String,
+    pub crc32: u32,
+    pub tensors: usize,
+}
+
+/// Parsed per-step manifest.
+#[derive(Clone, Debug)]
+pub struct CkptManifest {
+    pub step: u64,
+    /// Trainer-supplied key/value metadata (trainer kind, scale, …).
+    pub meta: BTreeMap<String, String>,
+    pub groups: Vec<GroupEntry>,
+}
+
+/// Group names become file stems: keep them path-safe.
+pub fn validate_group_name(name: &str) -> Result<()> {
+    if name.is_empty()
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-')
+    {
+        bail!("invalid checkpoint group name {name:?} (want [a-z0-9_-]+)");
+    }
+    Ok(())
+}
+
+impl CkptManifest {
+    pub fn new(step: u64) -> Self {
+        CkptManifest { step, meta: BTreeMap::new(), groups: Vec::new() }
+    }
+
+    pub fn render(&self) -> String {
+        let mut lines = Vec::new();
+        lines.push(format!("format = {FORMAT_TAG}"));
+        lines.push(format!("version = {MANIFEST_VERSION}"));
+        lines.push(format!("step = {}", self.step));
+        for (k, v) in &self.meta {
+            lines.push(format!("{k} = {v}"));
+        }
+        lines.push(format!("num_groups = {}", self.groups.len()));
+        for g in &self.groups {
+            lines.push(format!("group {} {} {:#010x} {}", g.name, g.file, g.crc32, g.tensors));
+        }
+        lines.join("\n") + "\n"
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut meta = BTreeMap::new();
+        let mut groups = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.is_empty() {
+                continue;
+            }
+            match parts[0] {
+                "group" => {
+                    if parts.len() != 5 {
+                        bail!("MANIFEST line {}: malformed group line {line:?}", lineno + 1);
+                    }
+                    let crc_str = parts[3];
+                    let crc32 = u32::from_str_radix(
+                        crc_str.strip_prefix("0x").unwrap_or(crc_str),
+                        16,
+                    )
+                    .with_context(|| format!("MANIFEST line {}: bad crc", lineno + 1))?;
+                    groups.push(GroupEntry {
+                        name: parts[1].to_string(),
+                        file: parts[2].to_string(),
+                        crc32,
+                        tensors: parts[4]
+                            .parse()
+                            .with_context(|| format!("MANIFEST line {}: bad count", lineno + 1))?,
+                    });
+                }
+                key if parts.len() >= 3 && parts[1] == "=" => {
+                    meta.insert(key.to_string(), parts[2..].join(" "));
+                }
+                _ => bail!("MANIFEST line {}: unrecognized line {line:?}", lineno + 1),
+            }
+        }
+        match meta.remove("format") {
+            Some(tag) if tag == FORMAT_TAG => {}
+            other => bail!("not a checkpoint MANIFEST (format tag {other:?})"),
+        }
+        let version: u32 = meta
+            .remove("version")
+            .context("MANIFEST missing version")?
+            .parse()
+            .context("MANIFEST version not an integer")?;
+        if version != MANIFEST_VERSION {
+            bail!("unsupported checkpoint MANIFEST version {version}");
+        }
+        let step: u64 = meta
+            .remove("step")
+            .context("MANIFEST missing step")?
+            .parse()
+            .context("MANIFEST step not an integer")?;
+        let num_groups: usize = meta
+            .remove("num_groups")
+            .context("MANIFEST missing num_groups")?
+            .parse()
+            .context("MANIFEST num_groups not an integer")?;
+        if groups.len() != num_groups {
+            bail!("MANIFEST lists {} groups but num_groups = {num_groups}", groups.len());
+        }
+        for g in &groups {
+            validate_group_name(&g.name)?;
+        }
+        Ok(CkptManifest { step, meta, groups })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint MANIFEST {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CkptManifest {
+        let mut m = CkptManifest::new(1200);
+        m.meta.insert("trainer".into(), "pretrain".into());
+        m.meta.insert("scale".into(), "s".into());
+        m.groups.push(GroupEntry {
+            name: "params".into(),
+            file: "params.tsr".into(),
+            crc32: 0x1A2B_3C4D,
+            tensors: 14,
+        });
+        m.groups.push(GroupEntry {
+            name: "rng".into(),
+            file: "rng.tsr".into(),
+            crc32: 0xFFFF_0000,
+            tensors: 1,
+        });
+        m
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let m = sample();
+        let back = CkptManifest::parse(&m.render()).unwrap();
+        assert_eq!(back.step, 1200);
+        assert_eq!(back.meta.get("trainer").map(String::as_str), Some("pretrain"));
+        assert_eq!(back.meta.get("scale").map(String::as_str), Some("s"));
+        assert_eq!(back.groups, m.groups);
+    }
+
+    #[test]
+    fn rejects_wrong_format_and_count_mismatch() {
+        let text = sample().render();
+        assert!(CkptManifest::parse(&text.replace(FORMAT_TAG, "other")).is_err());
+        assert!(CkptManifest::parse(&text.replace("num_groups = 2", "num_groups = 3")).is_err());
+        assert!(CkptManifest::parse("junk line\n").is_err());
+    }
+
+    #[test]
+    fn group_names_are_validated() {
+        assert!(validate_group_name("params").is_ok());
+        assert!(validate_group_name("full_slots-2").is_ok());
+        assert!(validate_group_name("").is_err());
+        assert!(validate_group_name("../evil").is_err());
+        assert!(validate_group_name("Caps").is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! `ckpt` — sharded checkpoint + resume for every trainer.
+//!
+//! Long-horizon training (Algorithm 1 runs for thousands of lazy-update
+//! steps) needs durable state: a crash at step 9 999 must cost at most
+//! `save_every` steps, and a resumed run must continue on the *same*
+//! trajectory — which means round-tripping not just Θ but the subspace
+//! state (B, V), every Adam moment, and the RNG stream position
+//! bit-exactly.
+//!
+//! * [`crc32`] — dependency-free CRC-32 (IEEE), the shard integrity check.
+//! * [`codec`] — the versioned binary tensor codec (`LRCK` magic +
+//!   header + f32/i32 payloads + trailing CRC-32).
+//! * [`state`] — [`StateDict`] and the [`Checkpointable`] capture/restore
+//!   trait, implemented by [`crate::model::ParamStore`],
+//!   [`crate::optim::Adam`], [`crate::coordinator::SubspaceSet`], and
+//!   [`crate::rng::Rng`].
+//! * [`manifest`] — the per-step `MANIFEST` in the same `key = value`
+//!   dialect as [`crate::runtime::manifest`].
+//! * [`layout`] — `ckpt/<step>/` naming, the `LATEST` pointer,
+//!   [`ResumeSpec`] (`latest` or a step number).
+//! * [`writer`] — atomic commit (temp dir + rename), full-verification
+//!   load, and retention of the newest K checkpoints.
+//!
+//! Trainers drive this through `--save-every N --ckpt-dir D` and
+//! `--resume [latest|<step>]`; in the DDP simulation only the leader
+//! rank writes (see [`crate::coordinator::BatchProducer`]'s module docs).
+
+pub mod codec;
+pub mod crc32;
+pub mod layout;
+pub mod manifest;
+pub mod state;
+pub mod writer;
+
+pub use layout::{Layout, ResumeSpec};
+pub use manifest::CkptManifest;
+pub use state::{Checkpointable, StateDict};
+pub use writer::{load_checkpoint, save_checkpoint, CkptOptions, LoadedCheckpoint};

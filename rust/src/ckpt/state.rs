@@ -1,0 +1,234 @@
+//! [`StateDict`] — the ordered, named tensor map a component serializes
+//! itself into — and [`Checkpointable`], the capture/restore contract
+//! every piece of training state implements ([`crate::model::ParamStore`],
+//! [`crate::optim::Adam`], `SubspaceSet`, [`crate::rng::Rng`]).
+//!
+//! Payloads are restricted to the codec's f32/i32 dtypes; wider values
+//! (u64 step counters, f64 projector entries) are carried losslessly as
+//! (lo, hi) i32 word pairs so every restore is bit-exact.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::HostTensor;
+
+/// An ordered set of named tensors. Insertion order is the on-disk
+/// order, names must be unique within a dict.
+#[derive(Clone, Debug, Default)]
+pub struct StateDict {
+    entries: Vec<(String, HostTensor)>,
+}
+
+/// Pack u64 words as (lo, hi) i32 pairs — the codec's only integer type.
+fn u64s_to_i32s(xs: &[u64]) -> Vec<i32> {
+    let mut out = Vec::with_capacity(2 * xs.len());
+    for &x in xs {
+        out.push((x & 0xFFFF_FFFF) as u32 as i32);
+        out.push((x >> 32) as u32 as i32);
+    }
+    out
+}
+
+fn i32s_to_u64s(xs: &[i32]) -> Result<Vec<u64>> {
+    if xs.len() % 2 != 0 {
+        bail!("u64-encoded tensor has odd length {}", xs.len());
+    }
+    Ok(xs
+        .chunks_exact(2)
+        .map(|p| (p[0] as u32 as u64) | ((p[1] as u32 as u64) << 32))
+        .collect())
+}
+
+impl StateDict {
+    pub fn new() -> Self {
+        StateDict::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[(String, HostTensor)] {
+        &self.entries
+    }
+
+    /// Build from raw entries (the codec's decode path); names must be
+    /// unique.
+    pub fn from_entries(entries: Vec<(String, HostTensor)>) -> Result<Self> {
+        for (i, (name, _)) in entries.iter().enumerate() {
+            if entries[..i].iter().any(|(n, _)| n == name) {
+                bail!("duplicate tensor name {name:?} in state dict");
+            }
+        }
+        Ok(StateDict { entries })
+    }
+
+    /// Insert a tensor; panics on duplicate names (a serialization bug,
+    /// not a runtime condition).
+    pub fn put_tensor(&mut self, name: impl Into<String>, t: HostTensor) {
+        let name = name.into();
+        assert!(
+            !self.entries.iter().any(|(n, _)| *n == name),
+            "duplicate state-dict entry {name:?}"
+        );
+        self.entries.push((name, t));
+    }
+
+    pub fn put_f32(&mut self, name: impl Into<String>, shape: Vec<usize>, data: Vec<f32>) {
+        self.put_tensor(name, HostTensor::f32(shape, data));
+    }
+
+    pub fn put_i32(&mut self, name: impl Into<String>, shape: Vec<usize>, data: Vec<i32>) {
+        self.put_tensor(name, HostTensor::i32(shape, data));
+    }
+
+    /// Store u64 words losslessly (i32 tensor of length 2n).
+    pub fn put_u64s(&mut self, name: impl Into<String>, xs: &[u64]) {
+        let data = u64s_to_i32s(xs);
+        self.put_i32(name, vec![data.len()], data);
+    }
+
+    /// Store f64 values losslessly via their IEEE-754 bit patterns.
+    pub fn put_f64_bits(&mut self, name: impl Into<String>, xs: &[f64]) {
+        let bits: Vec<u64> = xs.iter().map(|x| x.to_bits()).collect();
+        self.put_u64s(name, &bits);
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&HostTensor> {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+            .with_context(|| format!("state dict missing tensor {name:?}"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&[f32]> {
+        self.tensor(name)?
+            .as_f32()
+            .with_context(|| format!("tensor {name:?}"))
+    }
+
+    pub fn i32(&self, name: &str) -> Result<&[i32]> {
+        self.tensor(name)?
+            .as_i32()
+            .with_context(|| format!("tensor {name:?}"))
+    }
+
+    pub fn u64s(&self, name: &str) -> Result<Vec<u64>> {
+        i32s_to_u64s(self.i32(name)?).with_context(|| format!("tensor {name:?}"))
+    }
+
+    /// Single u64 scalar (length-1 u64 tensor).
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        let xs = self.u64s(name)?;
+        if xs.len() != 1 {
+            bail!("tensor {name:?}: expected 1 u64, got {}", xs.len());
+        }
+        Ok(xs[0])
+    }
+
+    pub fn f64_bits(&self, name: &str) -> Result<Vec<f64>> {
+        Ok(self.u64s(name)?.into_iter().map(f64::from_bits).collect())
+    }
+
+    /// Merge another dict's entries under `prefix` (nesting, e.g. per-slot
+    /// optimizer state: `adam[layer0.wq].m`).
+    pub fn merge_prefixed(&mut self, prefix: &str, other: StateDict) {
+        for (name, t) in other.entries {
+            self.put_tensor(format!("{prefix}{name}"), t);
+        }
+    }
+
+    /// Inverse of [`merge_prefixed`]: the sub-dict of entries under
+    /// `prefix`, with the prefix stripped.
+    pub fn extract_prefixed(&self, prefix: &str) -> StateDict {
+        let entries = self
+            .entries
+            .iter()
+            .filter_map(|(n, t)| {
+                n.strip_prefix(prefix).map(|rest| (rest.to_string(), t.clone()))
+            })
+            .collect();
+        StateDict { entries }
+    }
+
+    /// Total payload bytes (4 per element).
+    pub fn payload_bytes(&self) -> usize {
+        self.entries.iter().map(|(_, t)| 4 * t.num_elements()).sum()
+    }
+}
+
+/// Capture/restore contract. `load_state` must reject shape or length
+/// mismatches instead of silently truncating — a checkpoint from a
+/// different model or config is an error, not a warm start.
+pub trait Checkpointable {
+    /// Serialize the full mutable state into named tensors.
+    fn state_dict(&self) -> StateDict;
+
+    /// Restore from a captured dict; bit-exact inverse of `state_dict`.
+    fn load_state(&mut self, sd: &StateDict) -> Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_packing_roundtrips_extremes() {
+        let xs = [0u64, 1, u64::MAX, 0xDEAD_BEEF_CAFE_F00D, 1 << 63];
+        let packed = u64s_to_i32s(&xs);
+        assert_eq!(packed.len(), 10);
+        assert_eq!(i32s_to_u64s(&packed).unwrap(), xs.to_vec());
+        assert!(i32s_to_u64s(&packed[..3]).is_err());
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_is_bit_exact() {
+        let xs = [0.0f64, -0.0, 1.5e-300, f64::MAX, f64::NEG_INFINITY, f64::NAN];
+        let mut sd = StateDict::new();
+        sd.put_f64_bits("x", &xs);
+        let back = sd.f64_bits("x").unwrap();
+        for (a, b) in xs.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn prefix_merge_and_extract_invert() {
+        let mut inner = StateDict::new();
+        inner.put_f32("m", vec![2], vec![1.0, 2.0]);
+        inner.put_u64s("t", &[7]);
+        let mut outer = StateDict::new();
+        outer.put_f32("w", vec![1], vec![0.5]);
+        outer.merge_prefixed("adam[q].", inner);
+        assert_eq!(outer.len(), 3);
+        let sub = outer.extract_prefixed("adam[q].");
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.f32("m").unwrap(), &[1.0, 2.0]);
+        assert_eq!(sub.u64("t").unwrap(), 7);
+        assert!(outer.extract_prefixed("nope.").is_empty());
+    }
+
+    #[test]
+    fn missing_and_duplicate_names_are_errors() {
+        let mut sd = StateDict::new();
+        sd.put_f32("a", vec![1], vec![0.0]);
+        assert!(sd.tensor("b").is_err());
+        assert!(StateDict::from_entries(vec![
+            ("x".into(), HostTensor::f32(vec![1], vec![0.0])),
+            ("x".into(), HostTensor::f32(vec![1], vec![0.0])),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate")]
+    fn put_panics_on_duplicate() {
+        let mut sd = StateDict::new();
+        sd.put_f32("a", vec![1], vec![0.0]);
+        sd.put_f32("a", vec![1], vec![1.0]);
+    }
+}

@@ -1,0 +1,408 @@
+//! Save/load of whole checkpoints: shard each tensor group through the
+//! codec into a temp dir, commit with a single rename, advance `LATEST`,
+//! and prune old steps down to the retention budget.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::codec;
+use super::layout::{Layout, ResumeSpec};
+use super::manifest::{validate_group_name, CkptManifest, GroupEntry, MANIFEST_FILE};
+use super::state::StateDict;
+
+/// Checkpoint policy carried by trainer configs. `Default` disables
+/// checkpointing entirely, so existing construction sites opt in
+/// explicitly.
+#[derive(Clone, Debug, Default)]
+pub struct CkptOptions {
+    /// Save every N optimizer steps (0 = never).
+    pub save_every: u64,
+    /// Checkpoint root directory; required for saving or resuming.
+    pub dir: Option<PathBuf>,
+    /// Resume target, honored once at the start of `run()`.
+    pub resume: Option<ResumeSpec>,
+    /// Keep only the newest K committed steps (0 = keep all).
+    pub keep_last: usize,
+}
+
+impl CkptOptions {
+    /// Whether a save fires after completing `step` (1-based barrier:
+    /// `step + 1` optimizer steps are done).
+    pub fn should_save(&self, step: u64) -> bool {
+        self.save_every > 0 && self.dir.is_some() && (step + 1) % self.save_every == 0
+    }
+}
+
+/// A fully verified, in-memory checkpoint.
+#[derive(Debug)]
+pub struct LoadedCheckpoint {
+    pub step: u64,
+    pub meta: BTreeMap<String, String>,
+    groups: Vec<(String, StateDict)>,
+}
+
+impl LoadedCheckpoint {
+    pub fn group(&self, name: &str) -> Result<&StateDict> {
+        self.groups
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, sd)| sd)
+            .with_context(|| format!("checkpoint has no group {name:?}"))
+    }
+
+    pub fn group_names(&self) -> Vec<&str> {
+        self.groups.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(String::as_str)
+    }
+
+    /// Bail unless checkpoint metadata `key` equals `want` — the guard
+    /// against restoring a checkpoint into the wrong trainer/model.
+    pub fn expect_meta(&self, key: &str, want: &str) -> Result<()> {
+        match self.meta_str(key) {
+            Some(got) if got == want => Ok(()),
+            Some(got) => bail!(
+                "checkpoint {key} mismatch: checkpoint has {got:?}, this run wants {want:?}"
+            ),
+            None => bail!("checkpoint MANIFEST missing {key:?}"),
+        }
+    }
+}
+
+/// Write one checkpoint atomically. `meta` lands in the MANIFEST as
+/// `key = value` lines; `groups` become one shard file each. Returns the
+/// committed step directory.
+pub fn save_checkpoint(
+    root: &Path,
+    step: u64,
+    meta: &[(&str, String)],
+    groups: &[(&str, StateDict)],
+    keep_last: usize,
+) -> Result<PathBuf> {
+    let reserved = ["format", "version", "step", "num_groups"];
+    for (k, v) in meta {
+        if reserved.contains(k) {
+            bail!("checkpoint meta key {k:?} is reserved");
+        }
+        // the MANIFEST line dialect splits on whitespace: a value must
+        // be non-empty, single-spaced text or it cannot round-trip —
+        // catch that at save time, not at the first resume
+        let normalized = v.split_whitespace().collect::<Vec<_>>().join(" ");
+        if v.is_empty() || normalized != *v {
+            bail!(
+                "checkpoint meta value for {k:?} must be non-empty single-spaced text, got {v:?}"
+            );
+        }
+    }
+    for (i, (name, _)) in groups.iter().enumerate() {
+        validate_group_name(name)?;
+        if groups[..i].iter().any(|(n, _)| n == name) {
+            bail!("duplicate checkpoint group {name:?}");
+        }
+    }
+    let layout = Layout::new(root);
+    std::fs::create_dir_all(root).with_context(|| format!("creating {root:?}"))?;
+
+    // stage into a temp dir …
+    let tmp = layout.tmp_dir(step);
+    if tmp.exists() {
+        std::fs::remove_dir_all(&tmp).with_context(|| format!("clearing stale {tmp:?}"))?;
+    }
+    std::fs::create_dir_all(&tmp)?;
+    let mut manifest = CkptManifest::new(step);
+    for (k, v) in meta {
+        manifest.meta.insert((*k).to_string(), v.clone());
+    }
+    for (name, sd) in groups {
+        let file = format!("{name}.tsr");
+        let crc32 = codec::write_group(&tmp.join(&file), sd)?;
+        manifest.groups.push(GroupEntry {
+            name: (*name).to_string(),
+            file,
+            crc32,
+            tensors: sd.len(),
+        });
+    }
+    std::fs::write(tmp.join(MANIFEST_FILE), manifest.render())?;
+
+    // flush shard + MANIFEST data to disk *before* the rename becomes
+    // durable, so a power cut cannot commit a directory of empty files
+    for g in &manifest.groups {
+        sync_file(&tmp.join(&g.file))?;
+    }
+    sync_file(&tmp.join(MANIFEST_FILE))?;
+    sync_dir(&tmp)?;
+
+    // … commit with one rename, then advance LATEST and prune.
+    let final_dir = layout.step_dir(step);
+    if final_dir.exists() {
+        std::fs::remove_dir_all(&final_dir)
+            .with_context(|| format!("replacing existing {final_dir:?}"))?;
+    }
+    std::fs::rename(&tmp, &final_dir)
+        .with_context(|| format!("committing checkpoint {final_dir:?}"))?;
+    layout.write_latest(step)?;
+    sync_dir(root)?;
+    prune(&layout, keep_last, step)?;
+    Ok(final_dir)
+}
+
+fn sync_file(path: &Path) -> Result<()> {
+    std::fs::File::open(path)
+        .and_then(|f| f.sync_all())
+        .with_context(|| format!("fsync {path:?}"))
+}
+
+/// Durably record directory entries (renames, new files). Directory
+/// fsync is a POSIX-ism; elsewhere it is a no-op.
+fn sync_dir(path: &Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        std::fs::File::open(path)
+            .and_then(|f| f.sync_all())
+            .with_context(|| format!("fsync dir {path:?}"))?;
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = path;
+    }
+    Ok(())
+}
+
+/// Remove committed steps beyond the newest `keep_last` (0 = keep all).
+/// `protect` is never removed regardless of ordering.
+fn prune(layout: &Layout, keep_last: usize, protect: u64) -> Result<()> {
+    if keep_last == 0 {
+        return Ok(());
+    }
+    let steps = layout.list_steps()?;
+    if steps.len() <= keep_last {
+        return Ok(());
+    }
+    for &step in &steps[..steps.len() - keep_last] {
+        if step == protect {
+            continue;
+        }
+        let dir = layout.step_dir(step);
+        std::fs::remove_dir_all(&dir).with_context(|| format!("pruning {dir:?}"))?;
+    }
+    Ok(())
+}
+
+/// Load and fully verify one checkpoint (manifest + every shard CRC).
+///
+/// `ResumeSpec::Step(n)` is strict: that step loads or the call fails.
+/// `ResumeSpec::Latest` is resilient: if the newest committed step is
+/// unreadable (e.g. torn by a crash mid-write on a filesystem that
+/// reordered the commit), it walks back to the newest *loadable* step,
+/// warning about each one skipped, and only fails when none remain.
+pub fn load_checkpoint(root: &Path, spec: ResumeSpec) -> Result<LoadedCheckpoint> {
+    let layout = Layout::new(root);
+    match spec {
+        ResumeSpec::Step(_) => {
+            let step = layout.resolve(spec)?;
+            load_step(&layout, step)
+        }
+        ResumeSpec::Latest => {
+            let steps = layout.list_steps()?;
+            if steps.is_empty() {
+                bail!("no committed checkpoints under {root:?}");
+            }
+            // honor the LATEST pointer first (an operator may have
+            // re-pointed it to roll back), then newest → oldest
+            let mut order: Vec<u64> = steps.iter().rev().copied().collect();
+            if let Ok(Some(pointed)) = layout.read_latest() {
+                if let Some(pos) = order.iter().position(|&s| s == pointed) {
+                    order.remove(pos);
+                    order.insert(0, pointed);
+                }
+            }
+            let mut last_err = None;
+            for &step in &order {
+                match load_step(&layout, step) {
+                    Ok(ckpt) => {
+                        if last_err.is_some() {
+                            eprintln!(
+                                "warning: fell back to checkpoint step {step} \
+                                 (preferred ones were unreadable)"
+                            );
+                        }
+                        return Ok(ckpt);
+                    }
+                    Err(e) => {
+                        eprintln!("warning: checkpoint step {step} unreadable: {e:#}");
+                        last_err = Some(e);
+                    }
+                }
+            }
+            Err(last_err.expect("non-empty steps implies at least one error"))
+                .context("every committed checkpoint failed verification")
+        }
+    }
+}
+
+/// Load and fully verify one specific committed step.
+fn load_step(layout: &Layout, step: u64) -> Result<LoadedCheckpoint> {
+    let dir = layout.step_dir(step);
+    let manifest = CkptManifest::load(&dir.join(MANIFEST_FILE))?;
+    if manifest.step != step {
+        bail!(
+            "checkpoint {dir:?}: MANIFEST says step {} but directory names step {step}",
+            manifest.step
+        );
+    }
+    let mut groups = Vec::with_capacity(manifest.groups.len());
+    for g in &manifest.groups {
+        let sd = codec::read_group(&dir.join(&g.file), Some(g.crc32))
+            .with_context(|| format!("checkpoint group {:?}", g.name))?;
+        if sd.len() != g.tensors {
+            bail!(
+                "checkpoint group {:?}: {} tensors on disk, MANIFEST says {}",
+                g.name,
+                sd.len(),
+                g.tensors
+            );
+        }
+        groups.push((g.name.clone(), sd));
+    }
+    Ok(LoadedCheckpoint { step, meta: manifest.meta, groups })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_groups() -> Vec<(&'static str, StateDict)> {
+        let mut a = StateDict::new();
+        a.put_f32("w", vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = StateDict::new();
+        b.put_u64s("state", &[11, 22, 33, 44]);
+        vec![("params", a), ("rng", b)]
+    }
+
+    fn fresh_root(tag: &str) -> PathBuf {
+        let root = std::env::temp_dir().join(format!("lowrank_sge_writer_{tag}"));
+        let _ = std::fs::remove_dir_all(&root);
+        root
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_meta() {
+        let root = fresh_root("roundtrip");
+        let meta = [("trainer", "pretrain".to_string()), ("scale", "s".to_string())];
+        save_checkpoint(&root, 40, &meta, &toy_groups(), 0).unwrap();
+        let ckpt = load_checkpoint(&root, ResumeSpec::Latest).unwrap();
+        assert_eq!(ckpt.step, 40);
+        assert_eq!(ckpt.meta_str("trainer"), Some("pretrain"));
+        assert!(ckpt.expect_meta("scale", "s").is_ok());
+        assert!(ckpt.expect_meta("scale", "m").is_err());
+        assert!(ckpt.expect_meta("nope", "x").is_err());
+        assert_eq!(ckpt.group("params").unwrap().f32("w").unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ckpt.group("rng").unwrap().u64s("state").unwrap(), vec![11, 22, 33, 44]);
+        assert!(ckpt.group("missing").is_err());
+    }
+
+    #[test]
+    fn latest_follows_newest_and_specific_steps_load() {
+        let root = fresh_root("latest");
+        for step in [10u64, 20, 30] {
+            save_checkpoint(&root, step, &[], &toy_groups(), 0).unwrap();
+        }
+        assert_eq!(load_checkpoint(&root, ResumeSpec::Latest).unwrap().step, 30);
+        assert_eq!(load_checkpoint(&root, ResumeSpec::Step(20)).unwrap().step, 20);
+        assert!(load_checkpoint(&root, ResumeSpec::Step(25)).is_err());
+    }
+
+    #[test]
+    fn retention_keeps_only_last_k() {
+        let root = fresh_root("retention");
+        for step in [10u64, 20, 30, 40, 50] {
+            save_checkpoint(&root, step, &[], &toy_groups(), 2).unwrap();
+        }
+        let layout = Layout::new(&root);
+        assert_eq!(layout.list_steps().unwrap(), vec![40, 50]);
+        assert_eq!(load_checkpoint(&root, ResumeSpec::Latest).unwrap().step, 50);
+        assert!(load_checkpoint(&root, ResumeSpec::Step(10)).is_err());
+    }
+
+    #[test]
+    fn corrupted_shard_is_rejected_with_crc_error() {
+        let root = fresh_root("corrupt");
+        save_checkpoint(&root, 5, &[], &toy_groups(), 0).unwrap();
+        let shard = Layout::new(&root).step_dir(5).join("params.tsr");
+        let mut bytes = std::fs::read(&shard).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&shard, &bytes).unwrap();
+        let err = format!("{:#}", load_checkpoint(&root, ResumeSpec::Latest).unwrap_err());
+        assert!(err.contains("CRC32"), "{err}");
+    }
+
+    #[test]
+    fn latest_walks_back_past_an_unreadable_newest_step() {
+        let root = fresh_root("fallback");
+        save_checkpoint(&root, 10, &[], &toy_groups(), 0).unwrap();
+        save_checkpoint(&root, 20, &[], &toy_groups(), 0).unwrap();
+        // tear the newest commit (as a crash mid-write would)
+        let shard = Layout::new(&root).step_dir(20).join("params.tsr");
+        std::fs::write(&shard, b"torn").unwrap();
+        let ckpt = load_checkpoint(&root, ResumeSpec::Latest).unwrap();
+        assert_eq!(ckpt.step, 10);
+        // explicit step selection stays strict
+        assert!(load_checkpoint(&root, ResumeSpec::Step(20)).is_err());
+    }
+
+    #[test]
+    fn truncated_shard_is_rejected() {
+        let root = fresh_root("truncate");
+        save_checkpoint(&root, 5, &[], &toy_groups(), 0).unwrap();
+        let shard = Layout::new(&root).step_dir(5).join("rng.tsr");
+        let bytes = std::fs::read(&shard).unwrap();
+        std::fs::write(&shard, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(load_checkpoint(&root, ResumeSpec::Latest).is_err());
+    }
+
+    #[test]
+    fn stale_tmp_dirs_do_not_block_saving() {
+        let root = fresh_root("staletmp");
+        let layout = Layout::new(&root);
+        std::fs::create_dir_all(layout.tmp_dir(9)).unwrap();
+        std::fs::write(layout.tmp_dir(9).join("junk"), "x").unwrap();
+        save_checkpoint(&root, 9, &[], &toy_groups(), 0).unwrap();
+        assert!(!layout.tmp_dir(9).exists());
+        let ckpt = load_checkpoint(&root, ResumeSpec::Step(9)).unwrap();
+        assert_eq!(ckpt.group_names(), vec!["params", "rng"]);
+    }
+
+    #[test]
+    fn reserved_meta_and_bad_group_names_rejected() {
+        let root = fresh_root("reserved");
+        let err = save_checkpoint(&root, 1, &[("step", "9".into())], &toy_groups(), 0);
+        assert!(err.is_err());
+        let mut sd = StateDict::new();
+        sd.put_f32("x", vec![1], vec![0.0]);
+        assert!(save_checkpoint(&root, 1, &[], &[("Bad Name", sd)], 0).is_err());
+        // values that cannot round-trip through the MANIFEST dialect are
+        // rejected at save time
+        assert!(save_checkpoint(&root, 1, &[("task", "".into())], &toy_groups(), 0).is_err());
+        assert!(save_checkpoint(&root, 1, &[("task", "a  b".into())], &toy_groups(), 0).is_err());
+        assert!(save_checkpoint(&root, 1, &[("task", "a b".into())], &toy_groups(), 0).is_ok());
+    }
+
+    #[test]
+    fn latest_honors_a_rolled_back_pointer() {
+        let root = fresh_root("pointer");
+        save_checkpoint(&root, 10, &[], &toy_groups(), 0).unwrap();
+        save_checkpoint(&root, 20, &[], &toy_groups(), 0).unwrap();
+        // operator rolls back by re-pointing LATEST at the older step
+        Layout::new(&root).write_latest(10).unwrap();
+        assert_eq!(load_checkpoint(&root, ResumeSpec::Latest).unwrap().step, 10);
+        // a stale pointer at a pruned step falls through to the newest
+        Layout::new(&root).write_latest(999).unwrap();
+        assert_eq!(load_checkpoint(&root, ResumeSpec::Latest).unwrap().step, 20);
+    }
+}

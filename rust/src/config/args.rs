@@ -46,6 +46,20 @@ impl ArgMap {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// Three-way lookup for options that work both bare and with a
+    /// value (e.g. `--resume` ≡ `--resume latest`, `--resume 400`):
+    /// `None` when absent, `Some(None)` for a bare flag, `Some(Some(v))`
+    /// when a value was given.
+    pub fn flag_or_value(&self, key: &str) -> Option<Option<&str>> {
+        if let Some(v) = self.values.get(key) {
+            return Some(Some(v.as_str()));
+        }
+        if self.has_flag(key) {
+            return Some(None);
+        }
+        None
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.values
             .get(key)
@@ -107,5 +121,15 @@ mod tests {
     fn defaults_on_bad_parse() {
         let a = ArgMap::parse(&toks("--steps abc")).unwrap();
         assert_eq!(a.u64_or("steps", 9), 9);
+    }
+
+    #[test]
+    fn flag_or_value_three_way() {
+        let a = ArgMap::parse(&toks("--resume --ckpt-dir runs/ck")).unwrap();
+        assert_eq!(a.flag_or_value("resume"), Some(None));
+        assert_eq!(a.flag_or_value("ckpt-dir"), Some(Some("runs/ck")));
+        assert_eq!(a.flag_or_value("absent"), None);
+        let b = ArgMap::parse(&toks("--resume 400")).unwrap();
+        assert_eq!(b.flag_or_value("resume"), Some(Some("400")));
     }
 }

@@ -125,6 +125,12 @@ impl ConfigFile {
         self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
     }
 
+    /// String value with no default (for keys like `pretrain.ckpt_dir`
+    /// where absence means "feature off").
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+
     pub fn i64_or(&self, key: &str, default: i64) -> i64 {
         self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
     }
@@ -177,6 +183,9 @@ use_ddp = true
         assert_eq!(c.i64_or("missing", 7), 7);
         assert_eq!(c.f64_or("a", 0.0), 1.0); // int coerces to float
         assert_eq!(c.str_or("missing", "x"), "x");
+        assert_eq!(c.str_opt("missing"), None);
+        let d = ConfigFile::parse("[pretrain]\nckpt_dir = \"runs/ck\"").unwrap();
+        assert_eq!(d.str_opt("pretrain.ckpt_dir"), Some("runs/ck"));
     }
 
     #[test]

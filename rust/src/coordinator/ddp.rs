@@ -17,6 +17,14 @@ use std::thread::JoinHandle;
 use crate::data::{LmBatcher, ZipfMarkovCorpus};
 use crate::rng::Rng;
 
+/// Rank that owns shared side effects (checkpoint writes, LATEST
+/// updates, metrics files). In this in-process simulation the trainer
+/// thread *is* rank 0 by construction, so the constant is documentation
+/// of the contract rather than a runtime check; a real multi-process
+/// DDP deployment must enforce the same discipline — every rank reaches
+/// the step barrier, exactly one writes the checkpoint.
+pub const LEADER_RANK: usize = 0;
+
 /// A batch shard produced by one worker.
 #[derive(Clone, Debug)]
 pub struct Shard {
@@ -34,7 +42,15 @@ pub struct BatchProducer {
 impl BatchProducer {
     /// Spawn `workers` producer threads, each generating `(batch,
     /// seq+1)` LM shards from its own forked RNG stream. `depth` bounds
-    /// the queue (backpressure).
+    /// the queue (backpressure). `skip` fast-forwards every worker past
+    /// its first `skip` batches — on `--resume` at step S each stream is
+    /// replayed to exactly where the interrupted run left off, so a
+    /// single-worker resumed run sees the identical token sequence.
+    /// (With several workers the rejoin is approximate: the interrupted
+    /// run consumed `workers·S` shards in timing-dependent per-worker
+    /// proportions and discarded up to `depth` queued shards, so exact
+    /// per-stream positions are unknowable — matching the inherent
+    /// nondeterminism of multi-worker shard ordering itself.)
     pub fn spawn_lm(
         corpus: ZipfMarkovCorpus,
         batch: usize,
@@ -42,6 +58,7 @@ impl BatchProducer {
         workers: usize,
         depth: usize,
         seed_rng: &mut Rng,
+        skip: u64,
     ) -> Self {
         assert!(workers >= 1);
         let (tx, rx) = mpsc::sync_channel::<Shard>(depth.max(workers));
@@ -52,6 +69,9 @@ impl BatchProducer {
             let rng = seed_rng.fork(w as u64 + 1);
             handles.push(std::thread::spawn(move || {
                 let mut batcher = LmBatcher::new(corpus, batch, seq_len, rng);
+                for _ in 0..skip {
+                    let _ = batcher.next_batch();
+                }
                 loop {
                     let tokens = batcher.next_batch();
                     if tx.send(Shard { worker: w, tokens }).is_err() {
@@ -110,10 +130,27 @@ mod tests {
     use super::*;
 
     #[test]
+    fn skip_fast_forwards_the_stream_exactly() {
+        let corpus = ZipfMarkovCorpus::new(64, 7);
+        // reference: one worker, no skip, drain 5 batches
+        let mut rng_a = Rng::new(9);
+        let pool_a = BatchProducer::spawn_lm(corpus.clone(), 2, 4, 1, 2, &mut rng_a, 0);
+        let batches: Vec<Vec<i32>> =
+            (0..5).map(|_| pool_a.next_step_shards().remove(0).tokens).collect();
+        pool_a.shutdown();
+        // resumed: same seed, skip 3 → must continue at batch 3
+        let mut rng_b = Rng::new(9);
+        let pool_b = BatchProducer::spawn_lm(corpus, 2, 4, 1, 2, &mut rng_b, 3);
+        assert_eq!(pool_b.next_step_shards().remove(0).tokens, batches[3]);
+        assert_eq!(pool_b.next_step_shards().remove(0).tokens, batches[4]);
+        pool_b.shutdown();
+    }
+
+    #[test]
     fn shards_have_right_shape_and_distinct_streams() {
         let corpus = ZipfMarkovCorpus::new(128, 3);
         let mut rng = Rng::new(1);
-        let pool = BatchProducer::spawn_lm(corpus, 4, 8, 3, 8, &mut rng);
+        let pool = BatchProducer::spawn_lm(corpus, 4, 8, 3, 8, &mut rng, 0);
         let shards = pool.next_step_shards();
         assert_eq!(shards.len(), 3);
         for s in &shards {
@@ -128,7 +165,7 @@ mod tests {
     fn backpressure_queue_does_not_grow_unbounded() {
         let corpus = ZipfMarkovCorpus::new(64, 5);
         let mut rng = Rng::new(2);
-        let pool = BatchProducer::spawn_lm(corpus, 2, 4, 2, 4, &mut rng);
+        let pool = BatchProducer::spawn_lm(corpus, 2, 4, 2, 4, &mut rng, 0);
         // producers are rate-limited by the bounded channel: draining
         // several steps still works and terminates.
         for _ in 0..20 {

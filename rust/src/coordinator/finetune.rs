@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use super::metrics::{MetricsLog, StepRecord};
 use super::subspace::SubspaceSet;
+use crate::ckpt::{self, Checkpointable, CkptOptions, LoadedCheckpoint, StateDict};
 use crate::data::ClassifyTask;
 use crate::model::ParamStore;
 use crate::optim::{Adam, AdamConfig, LazyAction, LazyUpdateController};
@@ -82,6 +83,8 @@ pub struct FinetuneConfig {
     pub seed: u64,
     /// Eval set size (examples).
     pub eval_examples: usize,
+    /// Checkpoint/resume policy (default: disabled).
+    pub ckpt: CkptOptions,
 }
 
 impl FinetuneConfig {
@@ -97,6 +100,7 @@ impl FinetuneConfig {
             c: 1.0,
             seed: 2026,
             eval_examples: 256,
+            ckpt: CkptOptions::default(),
         }
     }
 }
@@ -333,7 +337,29 @@ impl FinetuneTrainer {
         let controller = LazyUpdateController::new(cfg.k_interval);
         let mut rng = self.rng.fork(1);
 
-        for step in 0..cfg.steps {
+        // resume: restore Θ, subspace, optimizer moments, and the loop
+        // RNG so the continuation is the exact sequence the interrupted
+        // run would have produced (fine-tuning is single-threaded, so
+        // the whole trajectory is bitwise reproducible)
+        let mut start_step = 0u64;
+        if let Some(resume) = cfg.ckpt.resume {
+            let dir = cfg
+                .ckpt
+                .dir
+                .as_ref()
+                .context("resume requested but no checkpoint dir configured")?;
+            let loaded = ckpt::load_checkpoint(dir, resume)?;
+            self.restore_state(&loaded, &mut rng)?;
+            start_step = loaded.step;
+            if start_step >= cfg.steps {
+                bail!(
+                    "checkpoint step {start_step} is not before the target step count {}",
+                    cfg.steps
+                );
+            }
+        }
+
+        for step in start_step..cfg.steps {
             let t0 = Instant::now();
             // lazy update: resample V for the low-rank methods
             if let Some(sub) = &mut self.subspace {
@@ -491,6 +517,11 @@ impl FinetuneTrainer {
                 grad_norm,
                 step_time_s: t0.elapsed().as_secs_f64(),
             });
+
+            if cfg.ckpt.should_save(step) {
+                let dir = cfg.ckpt.dir.as_ref().expect("should_save implies dir");
+                self.save_state(dir, step + 1, cfg.ckpt.keep_last, &rng)?;
+            }
         }
 
         // final lift for the IPA low-rank path
@@ -500,5 +531,57 @@ impl FinetuneTrainer {
         self.store.assert_finite()?;
         let acc = self.evaluate(&task)?;
         Ok(FinetuneResult { method: cfg.method, task: cfg.task, accuracy: acc, log })
+    }
+
+    /// Commit the full fine-tuning state (Θ, optional subspace, head and
+    /// IPA Adam moments, loop RNG) as checkpoint `step` under `dir`.
+    pub fn save_state(&self, dir: &Path, step: u64, keep_last: usize, rng: &Rng) -> Result<()> {
+        let mut opt = StateDict::new();
+        opt.merge_prefixed("adam[head].", self.head_adam.state_dict());
+        for (name, _, _, adam) in &self.ipa_full {
+            opt.merge_prefixed(&format!("adam[{name}]."), adam.state_dict());
+        }
+        let mut groups = vec![
+            ("params", self.store.state_dict()),
+            ("opt", opt),
+            ("rng", rng.state_dict()),
+        ];
+        if let Some(sub) = &self.subspace {
+            groups.push(("subspace", sub.state_dict()));
+        }
+        let meta = [
+            ("trainer", "finetune".to_string()),
+            ("method", self.cfg.method.name()),
+            ("task", self.cfg.task.clone()),
+            ("seed", self.cfg.seed.to_string()),
+        ];
+        ckpt::save_checkpoint(dir, step, &meta, &groups, keep_last)?;
+        Ok(())
+    }
+
+    /// Restore from a loaded checkpoint; `rng` is the training-loop RNG
+    /// to rewind to the saved stream position. Validates trainer kind,
+    /// method, and task before mutating anything.
+    pub fn restore_state(&mut self, loaded: &LoadedCheckpoint, rng: &mut Rng) -> Result<()> {
+        loaded.expect_meta("trainer", "finetune")?;
+        loaded.expect_meta("method", &self.cfg.method.name())?;
+        loaded.expect_meta("task", &self.cfg.task)?;
+        // batches and ZO noise derive from the seed; a resume under a
+        // different seed would not continue the saved trajectory
+        loaded.expect_meta("seed", &self.cfg.seed.to_string())?;
+        self.store.load_state(loaded.group("params")?)?;
+        if let Some(sub) = &mut self.subspace {
+            sub.load_state(loaded.group("subspace")?)?;
+        }
+        let opt = loaded.group("opt")?;
+        self.head_adam
+            .load_state(&opt.extract_prefixed("adam[head]."))
+            .context("head optimizer")?;
+        for (name, _, _, adam) in &mut self.ipa_full {
+            adam.load_state(&opt.extract_prefixed(&format!("adam[{name}].")))
+                .with_context(|| format!("ipa slot {name}"))?;
+        }
+        rng.load_state(loaded.group("rng")?)?;
+        Ok(())
     }
 }

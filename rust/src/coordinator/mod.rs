@@ -13,6 +13,12 @@
 //!   leader executes and all-reduces gradients (DESIGN.md §2).
 //! * [`metrics`] — step records and CSV emission for the figure
 //!   harnesses.
+//!
+//! Both trainers checkpoint through [`crate::ckpt`]: `CkptOptions` on
+//! their configs controls `save_every`/`dir`/`resume`/retention, saves
+//! happen at step barriers on the leader rank only, and a restore
+//! round-trips Θ, (B, V), every Adam moment, and the RNG stream
+//! position bit-exactly.
 
 mod ddp;
 mod finetune;
@@ -20,7 +26,7 @@ mod metrics;
 mod pretrain;
 mod subspace;
 
-pub use ddp::BatchProducer;
+pub use ddp::{BatchProducer, LEADER_RANK};
 pub use finetune::{FinetuneConfig, FinetuneMethod, FinetuneResult, FinetuneTrainer};
 pub use metrics::{MetricsLog, StepRecord};
 pub use pretrain::{PretrainConfig, PretrainResult, PretrainTrainer};

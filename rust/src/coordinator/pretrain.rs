@@ -16,6 +16,7 @@ use anyhow::{bail, Context, Result};
 use super::ddp::{allreduce_mean, BatchProducer};
 use super::metrics::{MetricsLog, StepRecord};
 use super::subspace::{FullSlot, SubspaceSet};
+use crate::ckpt::{self, Checkpointable, CkptOptions, LoadedCheckpoint, StateDict};
 use crate::data::ZipfMarkovCorpus;
 use crate::model::ParamStore;
 use crate::optim::{clip_global_norm, Adam, AdamConfig, CosineSchedule, LazyAction, LazyUpdateController, LrSchedule};
@@ -46,6 +47,8 @@ pub struct PretrainConfig {
     /// lifted copy, so it is exact at any step.
     pub eval_every: u64,
     pub eval_batches: usize,
+    /// Checkpoint/resume policy (default: disabled).
+    pub ckpt: CkptOptions,
 }
 
 impl PretrainConfig {
@@ -64,6 +67,7 @@ impl PretrainConfig {
             workers: 1,
             eval_every: 25,
             eval_batches: 2,
+            ckpt: CkptOptions::default(),
         }
     }
 }
@@ -213,30 +217,61 @@ impl PretrainTrainer {
         Ok(total / eval_sets.len() as f32)
     }
 
-    /// Run the full training loop.
+    /// Run the full training loop (optionally resuming from a
+    /// checkpoint first — see [`CkptOptions`]).
     pub fn run(&mut self) -> Result<PretrainResult> {
         let cfg = self.cfg.clone();
         let controller = LazyUpdateController::new(cfg.k_interval);
         let schedule = CosineSchedule::new(cfg.lr, cfg.warmup, cfg.steps.max(cfg.warmup + 1));
+
+        // resume before touching any stream state
+        let mut start_step = 0u64;
+        if let Some(resume) = cfg.ckpt.resume {
+            let dir = cfg
+                .ckpt
+                .dir
+                .as_ref()
+                .context("resume requested but no checkpoint dir configured")?;
+            let loaded = ckpt::load_checkpoint(dir, resume)?;
+            self.restore_state(&loaded)?;
+            start_step = loaded.step;
+            if start_step >= cfg.steps {
+                bail!(
+                    "checkpoint step {start_step} is not before the target step count {}",
+                    cfg.steps
+                );
+            }
+        }
+
+        // Data streams draw from a dedicated RNG (not `self.rng`) so the
+        // trainer RNG round-trips through checkpoints exactly; producers
+        // fast-forward `start_step` batches to rejoin their streams.
+        // With workers == 1 this makes a resumed run bitwise identical
+        // to the uninterrupted one. With workers > 1 the rejoin is
+        // approximate (±queue depth per stream): the shared channel
+        // already makes multi-worker shard order — and therefore the
+        // uninterrupted trajectory itself — timing-dependent.
         let corpus = ZipfMarkovCorpus::new(self.vocab, cfg.seed ^ 0xC0FFEE);
+        let mut data_rng = Rng::new(cfg.seed ^ 0xDA7A);
         let producer = BatchProducer::spawn_lm(
             corpus.clone(),
             self.batch,
             self.seq_len,
             cfg.workers,
             2 * cfg.workers,
-            &mut self.rng,
+            &mut data_rng,
+            start_step,
         );
         let eval_sets = crate::data::LmBatcher::new(
             corpus,
             self.batch,
             self.seq_len,
-            self.rng.fork(0xE),
+            data_rng.fork(0xE),
         )
         .eval_batches(cfg.eval_batches, cfg.seed);
 
         let mut log = MetricsLog::default();
-        for step in 0..cfg.steps {
+        for step in start_step..cfg.steps {
             let t0 = Instant::now();
             if controller.action(step) == LazyAction::ResampleSubspace {
                 if step > 0 {
@@ -307,6 +342,15 @@ impl PretrainTrainer {
                 let ev = self.eval_loss(&eval_sets)?;
                 log.push_eval(step + 1, ev);
             }
+
+            // Step barrier: every worker's shard is folded in. This
+            // trainer thread is the DDP leader (`ddp::LEADER_RANK`) by
+            // construction — in a real multi-process deployment exactly
+            // one rank may write here.
+            if cfg.ckpt.should_save(step) {
+                let dir = cfg.ckpt.dir.as_ref().expect("should_save implies dir");
+                self.save_state(dir, step + 1, cfg.ckpt.keep_last)?;
+            }
         }
         // final lift so the stored Θ is the trained model
         self.subspace.lift(&mut self.store)?;
@@ -326,7 +370,59 @@ impl PretrainTrainer {
         &self.store
     }
 
+    /// Legacy params-only export (same binary layout as the init dumps).
+    /// Full training-state durability lives in [`save_state`].
     pub fn save_checkpoint(&self, dir: &Path) -> Result<()> {
         self.store.save(dir)
+    }
+
+    /// Commit the full training state — Θ, per-matrix (B, V, Adam),
+    /// full-rank Adam moments, and the trainer RNG — as checkpoint
+    /// `step` under `dir`.
+    pub fn save_state(&self, dir: &Path, step: u64, keep_last: usize) -> Result<()> {
+        let mut full = StateDict::new();
+        for fslot in &self.full_slots {
+            full.merge_prefixed(&format!("adam[{}].", fslot.name), fslot.adam.state_dict());
+        }
+        let groups = [
+            ("params", self.store.state_dict()),
+            ("subspace", self.subspace.state_dict()),
+            ("full", full),
+            ("rng", self.rng.state_dict()),
+        ];
+        let meta = [
+            ("trainer", "pretrain".to_string()),
+            ("scale", self.cfg.scale.clone()),
+            ("sampler", self.cfg.sampler.name().to_string()),
+            ("workers", self.cfg.workers.to_string()),
+            ("seed", self.cfg.seed.to_string()),
+        ];
+        ckpt::save_checkpoint(dir, step, &meta, &groups, keep_last)?;
+        Ok(())
+    }
+
+    /// Restore the full training state from a loaded checkpoint. The
+    /// checkpoint must come from a pretrain run of the same scale and
+    /// worker topology; everything is validated before anything mutates.
+    pub fn restore_state(&mut self, loaded: &LoadedCheckpoint) -> Result<()> {
+        loaded.expect_meta("trainer", "pretrain")?;
+        loaded.expect_meta("scale", &self.cfg.scale)?;
+        loaded.expect_meta("workers", &self.cfg.workers.to_string())?;
+        // the corpus, data streams, and resample draws all derive from
+        // the seed — resuming under a different one would silently
+        // continue on a different trajectory
+        loaded.expect_meta("seed", &self.cfg.seed.to_string())?;
+        loaded.expect_meta("sampler", self.cfg.sampler.name())?;
+        self.store.load_state(loaded.group("params")?)?;
+        self.subspace.load_state(loaded.group("subspace")?)?;
+        let full = loaded.group("full")?;
+        for fslot in &mut self.full_slots {
+            fslot
+                .adam
+                .load_state(&full.extract_prefixed(&format!("adam[{}].", fslot.name)))
+                .with_context(|| format!("full-rank slot {}", fslot.name))?;
+        }
+        self.rng.load_state(loaded.group("rng")?)?;
+        Ok(())
     }
 }

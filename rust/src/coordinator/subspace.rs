@@ -8,6 +8,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::ckpt::Checkpointable;
 use crate::model::{lift_into, ParamStore};
 use crate::optim::{Adam, AdamConfig};
 use crate::projection::{build_sampler, ProjectorKind};
@@ -195,9 +196,136 @@ impl SubspaceSet {
     }
 }
 
+/// Checkpointing: per slot the live B and V matrices plus the nested
+/// Adam moments (`adam[<name>].{m,v,t}` — `t` is the per-slot inner-step
+/// counter), and the outer-iteration count. Restoring mid-outer-iteration
+/// continues in the *same* subspace V with the same optimizer momentum,
+/// which is what makes a resumed run track the uninterrupted trajectory.
+impl crate::ckpt::Checkpointable for SubspaceSet {
+    fn state_dict(&self) -> crate::ckpt::StateDict {
+        let mut sd = crate::ckpt::StateDict::new();
+        sd.put_u64s("outer_iterations", &[self.outer_iterations]);
+        for slot in &self.slots {
+            sd.put_f32(format!("b[{}]", slot.name), vec![slot.m, slot.r], slot.b.clone());
+            sd.put_f32(format!("v[{}]", slot.name), vec![slot.n, slot.r], slot.v.clone());
+            sd.merge_prefixed(&format!("adam[{}].", slot.name), slot.adam.state_dict());
+        }
+        sd
+    }
+
+    fn load_state(&mut self, sd: &crate::ckpt::StateDict) -> Result<()> {
+        // 1 scalar + per slot: b, v, adam.{m,v,t}
+        let want = 1 + 5 * self.slots.len();
+        if sd.len() != want {
+            bail!("subspace checkpoint has {} tensors, expected {want}", sd.len());
+        }
+        let outer = sd.u64("outer_iterations")?;
+        let mut staged: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let b_t = sd.tensor(&format!("b[{}]", slot.name))?;
+            if b_t.shape() != [slot.m, slot.r] {
+                bail!(
+                    "subspace checkpoint b[{}] has shape {:?}, expected [{}, {}]",
+                    slot.name,
+                    b_t.shape(),
+                    slot.m,
+                    slot.r
+                );
+            }
+            let v_t = sd.tensor(&format!("v[{}]", slot.name))?;
+            if v_t.shape() != [slot.n, slot.r] {
+                bail!(
+                    "subspace checkpoint v[{}] has shape {:?}, expected [{}, {}]",
+                    slot.name,
+                    v_t.shape(),
+                    slot.n,
+                    slot.r
+                );
+            }
+            staged.push((b_t.as_f32()?.to_vec(), v_t.as_f32()?.to_vec()));
+        }
+        // all validated — now apply
+        for (slot, (b, v)) in self.slots.iter_mut().zip(staged) {
+            slot.b = b;
+            slot.v = v;
+            slot.adam
+                .load_state(&sd.extract_prefixed(&format!("adam[{}].", slot.name)))
+                .with_context(|| format!("subspace slot {}", slot.name))?;
+        }
+        self.outer_iterations = outer;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{HostTensor, TensorSpec};
+
+    const TOY_MANIFEST: &str = "\
+artifact = toy_grad
+num_inputs = 5
+num_outputs = 2
+input 0 params[embed] f32 8x4
+input 1 params[w0] f32 4x4
+input 2 bs[w0] f32 4x2
+input 3 vs[w0] f32 4x2
+input 4 tokens i32 2x3
+output 0 out[0] f32 scalar
+output 1 out[1][w0] f32 4x2
+";
+
+    fn toy_set() -> SubspaceSet {
+        let manifest = ArtifactManifest::parse(TOY_MANIFEST).unwrap();
+        let specs: Vec<TensorSpec> = manifest
+            .inputs
+            .iter()
+            .take(2)
+            .cloned()
+            .collect();
+        let tensors = vec![
+            HostTensor::f32(vec![8, 4], vec![0.0; 32]),
+            HostTensor::f32(vec![4, 4], vec![0.0; 16]),
+        ];
+        let store = ParamStore::for_test(specs, tensors);
+        SubspaceSet::from_manifest(&manifest, &store, ProjectorKind::Stiefel, 1.0, AdamConfig::default())
+            .unwrap()
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_restores_b_v_and_moments_bitwise() {
+        let mut src = toy_set();
+        let mut rng = Rng::new(5);
+        src.resample(&mut rng);
+        // advance the slot optimizer so moments and t are non-trivial
+        for k in 0..3 {
+            let g: Vec<f32> = (0..8).map(|i| (k * 8 + i) as f32 * 0.1 - 0.3).collect();
+            let slot = &mut src.slots[0];
+            let mut b = std::mem::take(&mut slot.b);
+            slot.adam.step(&mut b, &g, 1e-2);
+            slot.b = b;
+        }
+        let sd = src.state_dict();
+
+        let mut dst = toy_set();
+        dst.load_state(&sd).unwrap();
+        assert_eq!(dst.outer_iterations(), 1);
+        for (a, b) in src.slots.iter().zip(&dst.slots) {
+            assert_eq!(a.adam.steps_taken(), b.adam.steps_taken());
+            for (x, y) in a.b.iter().zip(&b.b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in a.v.iter().zip(&b.v) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // a truncated dict is rejected
+        let partial = sd.extract_prefixed("");
+        assert_eq!(partial.len(), sd.len());
+        let mut missing = crate::ckpt::StateDict::new();
+        missing.put_u64s("outer_iterations", &[1]);
+        assert!(dst.load_state(&missing).is_err());
+    }
 
     #[test]
     fn bracket_name_parses() {

@@ -75,6 +75,7 @@ pub fn run(
                 c: 1.0,
                 seed: opts.seed,
                 eval_examples: 256,
+                ckpt: Default::default(),
             };
             let mut trainer = FinetuneTrainer::new(rt, artifacts_dir, cfg)?;
             let res = trainer.run()?;
@@ -144,6 +145,7 @@ pub fn run_curves(
                 c: 1.0,
                 seed: opts.seed,
                 eval_examples: 128,
+                ckpt: Default::default(),
             };
             let mut trainer = FinetuneTrainer::new(rt, artifacts_dir, cfg)?;
             let res = trainer.run()?;

@@ -8,8 +8,11 @@
 //!   ([`projection`]), the lazy-update optimizer stack ([`optim`]), the
 //!   PJRT runtime that executes AOT-compiled JAX/Pallas artifacts
 //!   ([`runtime`]), data pipeline ([`data`]), trainers and the DDP
-//!   simulation ([`coordinator`]), the MSE theory + toy experiments
-//!   ([`estimator`]), and the experiment harnesses ([`exp`]).
+//!   simulation ([`coordinator`]), the sharded checkpoint/resume
+//!   subsystem ([`ckpt`]: CRC-verified binary shards, atomic commit,
+//!   `LATEST` pointer, retention, bit-exact state round-trip), the MSE
+//!   theory + toy experiments ([`estimator`]), and the experiment
+//!   harnesses ([`exp`]).
 //! * **L2/L1 (python/, build-time only)** — JAX model graphs and Pallas
 //!   kernels, lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
 //!
@@ -26,6 +29,7 @@
 //! ```
 
 pub mod bench_util;
+pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -7,10 +7,21 @@
 //! lowrank-sge exp memory                                     # Table 2
 //! lowrank-sge exp pretrain  --scale s|m|l [--steps N] [--quick]
 //! lowrank-sge exp all       [--quick]
-//! lowrank-sge pretrain      --scale s [--sampler stiefel] [--steps N] [--workers W] …
-//! lowrank-sge finetune      --task sst2 --method stiefel-lowrank-lr [--steps N] …
+//! lowrank-sge pretrain      --scale s [--sampler stiefel] [--steps N] [--workers W]
+//!                           [--save-every N] [--ckpt-dir D] [--keep-last K]
+//!                           [--resume [latest|<step>]] …
+//! lowrank-sge finetune      --task sst2 --method stiefel-lowrank-lr [--steps N]
+//!                           [--save-every N] [--ckpt-dir D] [--keep-last K]
+//!                           [--resume [latest|<step>]] …
 //! lowrank-sge inspect                                        # list artifacts
 //! ```
+//!
+//! Checkpointing: `--save-every N --ckpt-dir D` commits the full
+//! training state (Θ, subspace B/V, Adam moments, RNG stream) every N
+//! steps as CRC-verified shards under `D/step-*/`, keeps the newest
+//! `--keep-last` (default 3, 0 = all), and maintains a `LATEST`
+//! pointer. `--resume` (bare or `latest`) or `--resume <step>` restores
+//! and continues the run.
 //!
 //! All experiment output lands in `results/` as CSV; see DESIGN.md §4
 //! for the experiment ↔ paper-artifact index.
@@ -19,7 +30,8 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use lowrank_sge::config::ArgMap;
+use lowrank_sge::ckpt::{CkptOptions, ResumeSpec};
+use lowrank_sge::config::{ArgMap, ConfigFile};
 use lowrank_sge::coordinator::{FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig, PretrainTrainer};
 use lowrank_sge::estimator::Family;
 use lowrank_sge::exp;
@@ -212,13 +224,41 @@ fn parse_method(s: &str) -> Result<FinetuneMethod> {
     })
 }
 
+/// Checkpoint policy from CLI + config file (`<section>.save_every`,
+/// `<section>.ckpt_dir`, `<section>.keep_last`). `--resume` is CLI-only:
+/// bare `--resume` (or `--resume latest`) follows `LATEST`, `--resume
+/// <step>` picks a committed step.
+fn ckpt_options(args: &ArgMap, file: &ConfigFile, section: &str) -> Result<CkptOptions> {
+    let resume = match args.flag_or_value("resume") {
+        None => None,
+        Some(None) => Some(ResumeSpec::Latest),
+        Some(Some(v)) => Some(ResumeSpec::parse(v)?),
+    };
+    let dir = args
+        .get("ckpt-dir")
+        .or_else(|| file.str_opt(&format!("{section}.ckpt_dir")))
+        .map(PathBuf::from);
+    let opts = CkptOptions {
+        save_every: args
+            .u64_or("save-every", file.i64_or(&format!("{section}.save_every"), 0).max(0) as u64),
+        keep_last: args
+            .usize_or("keep-last", file.i64_or(&format!("{section}.keep_last"), 3).max(0) as usize),
+        dir,
+        resume,
+    };
+    if (opts.save_every > 0 || opts.resume.is_some()) && opts.dir.is_none() {
+        bail!("--save-every/--resume need --ckpt-dir (or {section}.ckpt_dir in the config)");
+    }
+    Ok(opts)
+}
+
 fn cmd_pretrain(args: &ArgMap) -> Result<()> {
     let dir = artifacts_dir();
     let mut rt = Runtime::new(&dir)?;
     // defaults ← config file (--config path, [pretrain] section) ← CLI
     let file = match args.get("config") {
-        Some(p) => lowrank_sge::config::ConfigFile::load(std::path::Path::new(p))?,
-        None => lowrank_sge::config::ConfigFile::default(),
+        Some(p) => ConfigFile::load(std::path::Path::new(p))?,
+        None => ConfigFile::default(),
     };
     let sampler = ProjectorKind::parse(
         args.get("sampler")
@@ -242,11 +282,23 @@ fn cmd_pretrain(args: &ArgMap) -> Result<()> {
         workers: args.usize_or("workers", file.i64_or("pretrain.workers", 1) as usize),
         eval_every: args.u64_or("eval-every", file.i64_or("pretrain.eval_every", 25) as u64),
         eval_batches: args.usize_or("eval-batches", 2),
+        ckpt: ckpt_options(args, &file, "pretrain")?,
     };
     println!(
         "pretrain scale={} sampler={} steps={} K={} workers={}",
         cfg.scale, sampler.name(), cfg.steps, cfg.k_interval, cfg.workers
     );
+    if let Some(resume) = cfg.ckpt.resume {
+        println!("resuming from {resume} in {:?}", cfg.ckpt.dir.as_ref().unwrap());
+    }
+    if cfg.ckpt.save_every > 0 {
+        println!(
+            "checkpointing every {} steps to {:?} (keep last {})",
+            cfg.ckpt.save_every,
+            cfg.ckpt.dir.as_ref().unwrap(),
+            cfg.ckpt.keep_last
+        );
+    }
     let mut trainer = PretrainTrainer::new(&mut rt, &dir, cfg)?;
     let res = trainer.run()?;
     println!(
@@ -270,6 +322,11 @@ fn cmd_pretrain(args: &ArgMap) -> Result<()> {
 fn cmd_finetune(args: &ArgMap) -> Result<()> {
     let dir = artifacts_dir();
     let mut rt = Runtime::new(&dir)?;
+    // defaults ← config file (--config path, [finetune] section) ← CLI
+    let file = match args.get("config") {
+        Some(p) => ConfigFile::load(std::path::Path::new(p))?,
+        None => ConfigFile::default(),
+    };
     let method = parse_method(args.str_or("method", "stiefel-lowrank-lr"))?;
     let cfg = FinetuneConfig {
         task: args.str_or("task", "sst2").to_string(),
@@ -282,8 +339,12 @@ fn cmd_finetune(args: &ArgMap) -> Result<()> {
         c: args.f64_or("c", 1.0),
         seed: args.u64_or("seed", 2026),
         eval_examples: args.usize_or("eval-examples", 256),
+        ckpt: ckpt_options(args, &file, "finetune")?,
     };
     println!("finetune task={} method={} steps={}", cfg.task, method.name(), cfg.steps);
+    if let Some(resume) = cfg.ckpt.resume {
+        println!("resuming from {resume} in {:?}", cfg.ckpt.dir.as_ref().unwrap());
+    }
     let mut trainer = FinetuneTrainer::new(&mut rt, &dir, cfg)?;
     let res = trainer.run()?;
     println!(

@@ -149,6 +149,39 @@ impl ParamStore {
     }
 }
 
+/// Checkpointing: every parameter tensor under its manifest name. A
+/// restore must see exactly the tensors this store already holds (same
+/// names, dtypes, shapes) — a checkpoint from a different scale or
+/// artifact is rejected, never partially applied.
+impl crate::ckpt::Checkpointable for ParamStore {
+    fn state_dict(&self) -> crate::ckpt::StateDict {
+        let mut sd = crate::ckpt::StateDict::new();
+        for (spec, t) in self.specs.iter().zip(&self.tensors) {
+            sd.put_tensor(spec.name.as_str(), t.clone());
+        }
+        sd
+    }
+
+    fn load_state(&mut self, sd: &crate::ckpt::StateDict) -> Result<()> {
+        if sd.len() != self.specs.len() {
+            bail!(
+                "param checkpoint has {} tensors, store expects {}",
+                sd.len(),
+                self.specs.len()
+            );
+        }
+        let mut fresh = Vec::with_capacity(self.specs.len());
+        for spec in &self.specs {
+            let t = sd.tensor(&spec.name)?;
+            t.check_spec(spec)
+                .with_context(|| format!("param checkpoint tensor {}", spec.name))?;
+            fresh.push(t.clone());
+        }
+        self.tensors = fresh;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,6 +219,33 @@ mod tests {
         let restored = ParamStore::load_checkpoint(&dir, &s).unwrap();
         assert_eq!(restored.f32(1).unwrap()[0], 42.0);
         assert_eq!(restored.f32(0).unwrap(), s.f32(0).unwrap());
+    }
+
+    #[test]
+    fn checkpointable_roundtrip_is_bit_exact_and_validated() {
+        use crate::ckpt::Checkpointable;
+        let mut src = toy_store();
+        src.f32_mut(0).unwrap()[5] = -1.25e-30;
+        src.f32_mut(1).unwrap()[2] = f32::MIN_POSITIVE;
+        let sd = src.state_dict();
+        let mut dst = toy_store();
+        dst.load_state(&sd).unwrap();
+        for i in 0..src.len() {
+            for (a, b) in src.f32(i).unwrap().iter().zip(dst.f32(i).unwrap()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // shape mismatch rejected without partial application
+        let bad_specs = vec![
+            TensorSpec { index: 0, name: "params[embed]".into(), dtype: DType::F32, shape: vec![2, 4] },
+            TensorSpec { index: 1, name: "params[layer0.wq]".into(), dtype: DType::F32, shape: vec![2, 2] },
+        ];
+        let bad_tensors = vec![
+            HostTensor::f32(vec![2, 4], vec![0.0; 8]),
+            HostTensor::f32(vec![2, 2], vec![0.0; 4]),
+        ];
+        let mut other = ParamStore::for_test(bad_specs, bad_tensors);
+        assert!(other.load_state(&sd).is_err());
     }
 
     #[test]

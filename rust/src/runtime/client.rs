@@ -10,6 +10,11 @@ use anyhow::{bail, Context, Result};
 use super::manifest::ArtifactManifest;
 use super::tensor::HostTensor;
 
+// Default builds route `xla::…` to the in-crate stub; `--features pjrt`
+// resolves it to the real bindings from the extern prelude.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 /// One compiled artifact: manifest + PJRT executable.
 pub struct LoadedArtifact {
     pub manifest: ArtifactManifest,

@@ -12,8 +12,13 @@
 //!   plus the typed `execute` entry point.
 
 mod client;
-mod manifest;
+pub mod manifest;
 mod tensor;
+
+/// API-compatible stand-in for the `xla` crate when the `pjrt` feature
+/// is off (the default): literals work, PJRT execution errors cleanly.
+#[cfg(not(feature = "pjrt"))]
+pub(crate) mod xla_stub;
 
 pub use client::{LoadedArtifact, Runtime};
 pub use manifest::{ArtifactManifest, DType, TensorSpec};

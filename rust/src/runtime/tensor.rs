@@ -4,6 +4,11 @@ use anyhow::{bail, Context, Result};
 
 use super::manifest::{DType, TensorSpec};
 
+// Default builds route `xla::…` to the in-crate stub; `--features pjrt`
+// resolves it to the real bindings from the extern prelude.
+#[cfg(not(feature = "pjrt"))]
+use super::xla_stub as xla;
+
 /// A host tensor (row-major), f32 or i32 — the only element types the
 /// artifact contract uses.
 #[derive(Clone, Debug, PartialEq)]

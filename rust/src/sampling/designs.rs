@@ -87,9 +87,22 @@ pub fn sample_systematic(pi: &[f64], r: usize, rng: &mut Rng) -> Vec<usize> {
 // Sampford
 // ---------------------------------------------------------------------------
 
-/// Sampford's rejective π-ps design. Units with π_i = 1 are forced into
-/// the sample and the scheme runs on the remainder.
-pub fn sample_sampford(pi: &[f64], r: usize, rng: &mut Rng) -> Vec<usize> {
+/// Default rejection budget for [`sample_sampford_bounded`]. Generous —
+/// typical (n, r) regimes accept within a handful of attempts — but
+/// finite, so a degenerate target can never spin a training run forever.
+pub const SAMPFORD_MAX_ATTEMPTS: usize = 10_000;
+
+/// Sampford's rejective π-ps design with a bounded retry budget. Units
+/// with π_i = 1 are forced into the sample and the scheme runs on the
+/// remainder. Returns `Err` if no draw is accepted within
+/// `max_attempts` — Sampford's acceptance rate degrades sharply as
+/// r → n, so a bad (n, r) pair is a recoverable condition, not a panic.
+pub fn sample_sampford_bounded(
+    pi: &[f64],
+    r: usize,
+    rng: &mut Rng,
+    max_attempts: usize,
+) -> Result<Vec<usize>, SampfordRejected> {
     validate_pi(pi, r);
     let n = pi.len();
     let mut forced: Vec<usize> = Vec::new();
@@ -104,7 +117,7 @@ pub fn sample_sampford(pi: &[f64], r: usize, rng: &mut Rng) -> Vec<usize> {
     let r_free = r - forced.len();
     if r_free == 0 {
         forced.sort_unstable();
-        return forced;
+        return Ok(forced);
     }
     // residual targets on the free units sum to r_free
     let p: Vec<f64> = free.iter().map(|&i| pi[i]).collect();
@@ -112,7 +125,6 @@ pub fn sample_sampford(pi: &[f64], r: usize, rng: &mut Rng) -> Vec<usize> {
     let w_first: Vec<f64> = p.iter().map(|&x| x / rf).collect();
     let w_rest: Vec<f64> = p.iter().map(|&x| x / (1.0 - x)).collect();
 
-    let max_attempts = 200_000;
     for _ in 0..max_attempts {
         let mut draw: Vec<usize> = Vec::with_capacity(r_free);
         draw.push(rng.categorical(&w_first));
@@ -126,10 +138,70 @@ pub fn sample_sampford(pi: &[f64], r: usize, rng: &mut Rng) -> Vec<usize> {
             let mut out: Vec<usize> = forced;
             out.extend(sorted.into_iter().map(|k| free[k]));
             out.sort_unstable();
-            return out;
+            return Ok(out);
         }
     }
-    panic!("Sampford rejection did not terminate (r too close to n?)");
+    Err(SampfordRejected { n, r, attempts: max_attempts })
+}
+
+/// Every attempt in a [`sample_sampford_bounded`] call was rejected.
+#[derive(Clone, Copy, Debug)]
+pub struct SampfordRejected {
+    pub n: usize,
+    pub r: usize,
+    pub attempts: usize,
+}
+
+impl std::fmt::Display for SampfordRejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Sampford rejection sampling exhausted {} attempts (n = {}, r = {}; \
+             acceptance degrades as r → n)",
+            self.attempts, self.n, self.r
+        )
+    }
+}
+
+impl std::error::Error for SampfordRejected {}
+
+/// [`sample_sampford`] with an explicit retry budget (exposed for
+/// tests and callers that want a tighter cap). Callers hitting the
+/// fallback repeatedly should switch to [`conditional_poisson_calibrate`]
+/// + [`sample_conditional_poisson`] directly: the fallback re-calibrates
+/// on every draw, whereas a held [`CpsDesign`] amortizes that cost.
+pub fn sample_sampford_with_fallback(
+    pi: &[f64],
+    r: usize,
+    rng: &mut Rng,
+    max_attempts: usize,
+) -> Vec<usize> {
+    match sample_sampford_bounded(pi, r, rng, max_attempts) {
+        Ok(s) => s,
+        Err(err) => {
+            // loud once per process: the design silently changing would
+            // invalidate any per-design analysis of the run
+            static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+            WARN_ONCE.call_once(|| {
+                eprintln!(
+                    "warning: {err}; falling back to the calibrated conditional-Poisson \
+                     design (same first-order inclusion probabilities) for this and any \
+                     further exhausted draws"
+                );
+            });
+            let design = conditional_poisson_calibrate(pi, r);
+            sample_conditional_poisson(&design, rng)
+        }
+    }
+}
+
+/// Sampford's design with the production failure policy: bounded
+/// rejection retries, then fall back to the calibrated
+/// conditional-Poisson design (same first-order inclusion probabilities,
+/// no rejection loop) so one degenerate (n, r) pair cannot kill a
+/// long-running training job.
+pub fn sample_sampford(pi: &[f64], r: usize, rng: &mut Rng) -> Vec<usize> {
+    sample_sampford_with_fallback(pi, r, rng, SAMPFORD_MAX_ATTEMPTS)
 }
 
 // ---------------------------------------------------------------------------
@@ -389,5 +461,48 @@ mod tests {
     fn rejects_inconsistent_budget() {
         let mut rng = Rng::new(1);
         sample_systematic(&[0.5, 0.5, 0.5], 2, &mut rng);
+    }
+
+    #[test]
+    fn sampford_bounded_reports_exhaustion_instead_of_panicking() {
+        let (pi, r) = target_pi();
+        let mut rng = Rng::new(31);
+        let err = sample_sampford_bounded(&pi, r, &mut rng, 0).unwrap_err();
+        assert_eq!(err.attempts, 0);
+        assert!(err.to_string().contains("Sampford"), "{err}");
+        // with a sane budget the same target succeeds
+        assert_eq!(sample_sampford_bounded(&pi, r, &mut rng, 1000).unwrap().len(), r);
+    }
+
+    #[test]
+    fn sampford_falls_back_to_cps_with_correct_marginals() {
+        // zero retry budget forces the conditional-Poisson fallback on
+        // every draw: the sample size must stay fixed and the marginals
+        // exact — the degenerate-(n, r) path keeps training alive with
+        // the right distribution.
+        let (pi, r) = target_pi();
+        check_marginals(
+            |rng| sample_sampford_with_fallback(&pi, r, rng, 0),
+            &pi,
+            r,
+            20_000,
+            5.0,
+        );
+    }
+
+    #[test]
+    fn sampford_never_panics_on_degenerate_targets() {
+        // r = n − 1 with a heavily skewed target: Sampford's acceptance
+        // rate collapses (duplicate draws of near-saturated units). The
+        // public entry point must still return a valid fixed-size sample.
+        let pi = vec![0.999, 0.999, 0.997, 0.005];
+        let mut rng = Rng::new(77);
+        for _ in 0..50 {
+            let s = sample_sampford_with_fallback(&pi, 3, &mut rng, 3);
+            assert_eq!(s.len(), 3);
+            let mut d = s.clone();
+            d.dedup();
+            assert_eq!(d.len(), 3, "duplicates in {s:?}");
+        }
     }
 }

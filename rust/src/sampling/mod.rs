@@ -18,6 +18,7 @@ mod tille;
 pub use inclusion::{optimal_inclusion, phi_min_over_c2, InclusionSolution, DEFAULT_SIGMA_FLOOR};
 pub use designs::{
     conditional_poisson_calibrate, sample_conditional_poisson, sample_sampford,
-    sample_systematic, CpsDesign, FixedSizeDesign,
+    sample_sampford_bounded, sample_sampford_with_fallback, sample_systematic, CpsDesign,
+    FixedSizeDesign, SampfordRejected, SAMPFORD_MAX_ATTEMPTS,
 };
 pub use tille::sample_tille;

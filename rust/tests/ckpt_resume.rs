@@ -1,0 +1,231 @@
+//! Checkpoint/resume integration on the toy estimator path — no PJRT
+//! artifacts needed, so this runs everywhere the crate builds.
+//!
+//! The core guarantee: `train(2k)` ≡ `train(k) → save → load → train(k)`
+//! **bitwise** — same per-step losses, same final parameters — because
+//! the checkpoint round-trips every piece of mutable state: W, the
+//! current projector V, the Adam moments, and the RNG stream position.
+
+use std::path::{Path, PathBuf};
+
+use lowrank_sge::ckpt::{
+    load_checkpoint, save_checkpoint, Checkpointable, Layout, ResumeSpec, StateDict,
+};
+use lowrank_sge::estimator::toy::ToyProblem;
+use lowrank_sge::linalg::Mat;
+use lowrank_sge::optim::{Adam, AdamConfig};
+use lowrank_sge::projection::{ProjectionSampler, StiefelSampler};
+use lowrank_sge::rng::Rng;
+
+const RANK: usize = 4;
+const K_INTERVAL: u64 = 5;
+const LR: f32 = 5e-3;
+
+/// A miniature Algorithm-1 loop over the §6.1 toy problem: every K
+/// steps resample a Stiefel V, each step form the LowRank-IPA estimate
+/// ĝ·VVᵀ at the current W and take an Adam step.
+struct ToyTrainer {
+    problem: ToyProblem,
+    w: Vec<f32>,
+    v: Mat,
+    adam: Adam,
+    rng: Rng,
+    step: u64,
+}
+
+impl ToyTrainer {
+    fn new(seed: u64) -> Self {
+        let problem = ToyProblem::small(seed);
+        let w0 = problem.eval_point(seed ^ 1);
+        let w: Vec<f32> = w0.data.iter().map(|&x| x as f32).collect();
+        let (m, n) = (problem.m, problem.n);
+        ToyTrainer {
+            problem,
+            w,
+            v: Mat::zeros(n, RANK),
+            adam: Adam::new(m * n, AdamConfig::default()),
+            rng: Rng::new(seed ^ 2),
+            step: 0,
+        }
+    }
+
+    fn w_mat(&self) -> Mat {
+        Mat {
+            rows: self.problem.m,
+            cols: self.problem.n,
+            data: self.w.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// One training step; returns the sample-path loss at the pre-update W.
+    fn train_step(&mut self) -> f64 {
+        if self.step % K_INTERVAL == 0 {
+            let mut sampler = StiefelSampler::new(self.problem.n, RANK, 1.0);
+            self.v = sampler.sample(&mut self.rng);
+            self.adam.reset();
+        }
+        let a = self.problem.sample_a(&mut self.rng);
+        let w_mat = self.w_mat();
+        let loss = self.problem.loss(&w_mat, &a);
+        let ghat = self.problem.lowrank_ipa_estimate(&w_mat, &a, &self.v);
+        let g32: Vec<f32> = ghat.data.iter().map(|&x| x as f32).collect();
+        self.adam.step(&mut self.w, &g32, LR);
+        self.step += 1;
+        loss
+    }
+
+    fn run(&mut self, steps: u64) -> Vec<f64> {
+        (0..steps).map(|_| self.train_step()).collect()
+    }
+
+    fn save(&self, dir: &Path, keep_last: usize) {
+        let mut toy = StateDict::new();
+        toy.put_f32("w", vec![self.problem.m, self.problem.n], self.w.clone());
+        toy.put_f64_bits("v", &self.v.data);
+        toy.put_u64s("step", &[self.step]);
+        let groups = [
+            ("toy", toy),
+            ("adam", self.adam.state_dict()),
+            ("rng", self.rng.state_dict()),
+        ];
+        let meta = [("trainer", "toy".to_string())];
+        save_checkpoint(dir, self.step, &meta, &groups, keep_last).unwrap();
+    }
+
+    fn restore(&mut self, dir: &Path, spec: ResumeSpec) {
+        let ckpt = load_checkpoint(dir, spec).unwrap();
+        ckpt.expect_meta("trainer", "toy").unwrap();
+        let toy = ckpt.group("toy").unwrap();
+        self.w = toy.f32("w").unwrap().to_vec();
+        self.v = Mat {
+            rows: self.problem.n,
+            cols: RANK,
+            data: toy.f64_bits("v").unwrap(),
+        };
+        self.step = toy.u64("step").unwrap();
+        self.adam.load_state(ckpt.group("adam").unwrap()).unwrap();
+        self.rng.load_state(ckpt.group("rng").unwrap()).unwrap();
+        assert_eq!(self.step, ckpt.step);
+    }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lowrank_sge_resume_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn toy_resume_equivalence_is_bitwise() {
+    // k = 12 places the save mid-outer-iteration (resamples at 10 and
+    // 15), so the restored V/Adam state — not a fresh resample — must
+    // carry steps 12..15.
+    let k = 12u64;
+
+    // uninterrupted reference: 2k steps
+    let mut a = ToyTrainer::new(2026);
+    let losses_a = a.run(2 * k);
+
+    // interrupted: k steps, save, fresh process, load, k more steps
+    let dir = fresh_dir("equiv");
+    let mut b = ToyTrainer::new(2026);
+    let losses_b1 = b.run(k);
+    b.save(&dir, 0);
+    drop(b);
+
+    let mut c = ToyTrainer::new(9999); // wrong seed on purpose: state must come from disk
+    c.restore(&dir, ResumeSpec::Latest);
+    assert_eq!(c.step, k);
+    let losses_c = c.run(k);
+
+    // the first segment matches the reference prefix …
+    for (x, y) in losses_a[..k as usize].iter().zip(&losses_b1) {
+        assert_eq!(x.to_bits(), y.to_bits(), "prefix diverged");
+    }
+    // … and the resumed segment reproduces the reference *bitwise*
+    for (i, (x, y)) in losses_a[k as usize..].iter().zip(&losses_c).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "loss diverged at resumed step {i}: {x} vs {y}"
+        );
+    }
+    // final parameters identical to the last bit
+    for (x, y) in a.w.iter().zip(&c.w) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    // and the RNG streams are in the same position going forward
+    assert_eq!(a.rng.state(), c.rng.state());
+}
+
+#[test]
+fn resume_from_specific_step_and_latest_pointer() {
+    let dir = fresh_dir("specific");
+    let mut t = ToyTrainer::new(7);
+    for _ in 0..3 {
+        t.run(4);
+        t.save(&dir, 0);
+    }
+    assert_eq!(Layout::new(&dir).list_steps().unwrap(), vec![4, 8, 12]);
+    assert_eq!(load_checkpoint(&dir, ResumeSpec::Latest).unwrap().step, 12);
+
+    let mut back = ToyTrainer::new(7);
+    back.restore(&dir, ResumeSpec::Step(8));
+    assert_eq!(back.step, 8);
+    // continuing from step 8 rejoins the same trajectory
+    let mut reference = ToyTrainer::new(7);
+    let ref_losses = reference.run(10);
+    let got = back.run(2);
+    assert_eq!(got[0].to_bits(), ref_losses[8].to_bits());
+    assert_eq!(got[1].to_bits(), ref_losses[9].to_bits());
+}
+
+#[test]
+fn retention_prunes_and_latest_tracks_newest() {
+    let dir = fresh_dir("retention");
+    let mut t = ToyTrainer::new(3);
+    for _ in 0..5 {
+        t.run(2);
+        t.save(&dir, 2);
+    }
+    let layout = Layout::new(&dir);
+    assert_eq!(layout.list_steps().unwrap(), vec![8, 10]);
+    assert_eq!(layout.read_latest().unwrap(), Some(10));
+    assert!(load_checkpoint(&dir, ResumeSpec::Step(2)).is_err());
+}
+
+#[test]
+fn corrupted_checkpoint_is_rejected_not_loaded() {
+    let dir = fresh_dir("corrupt");
+    let mut t = ToyTrainer::new(11);
+    t.run(6);
+    t.save(&dir, 0);
+
+    // flip one payload byte in the params shard
+    let shard = Layout::new(&dir).step_dir(6).join("toy.tsr");
+    let mut bytes = std::fs::read(&shard).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&shard, &bytes).unwrap();
+    let err = format!("{:#}", load_checkpoint(&dir, ResumeSpec::Latest).unwrap_err());
+    assert!(err.contains("CRC32"), "wanted a CRC error, got: {err}");
+
+    // truncation is also fatal
+    std::fs::write(&shard, &bytes[..bytes.len() - 7]).unwrap();
+    assert!(load_checkpoint(&dir, ResumeSpec::Latest).is_err());
+
+    // a missing shard (manifest lists it) is fatal too
+    std::fs::remove_file(&shard).unwrap();
+    assert!(load_checkpoint(&dir, ResumeSpec::Latest).is_err());
+}
+
+#[test]
+fn mismatched_trainer_metadata_is_rejected() {
+    let dir = fresh_dir("meta");
+    let mut t = ToyTrainer::new(5);
+    t.run(2);
+    t.save(&dir, 0);
+    let ckpt = load_checkpoint(&dir, ResumeSpec::Latest).unwrap();
+    assert!(ckpt.expect_meta("trainer", "pretrain").is_err());
+    assert!(ckpt.expect_meta("trainer", "toy").is_ok());
+}

@@ -70,6 +70,44 @@ fn pallas_artifact_matches_jnp_artifact_on_same_inputs() {
 }
 
 #[test]
+fn param_store_checkpoints_init_params_bit_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use lowrank_sge::ckpt::{load_checkpoint, save_checkpoint, Checkpointable, ResumeSpec};
+    use lowrank_sge::model::ParamStore;
+
+    let dir = artifacts_dir();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let art = rt.load("lm_grad_s").unwrap();
+    let store = ParamStore::load_init(&dir, "s", &art.manifest).unwrap();
+
+    let ckpt_dir = std::env::temp_dir().join("lowrank_sge_golden_param_ckpt");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let groups = [("params", store.state_dict())];
+    save_checkpoint(&ckpt_dir, 1, &[], &groups, 0).unwrap();
+
+    let mut restored = ParamStore::load_init(&dir, "s", &art.manifest).unwrap();
+    // scramble, then restore from disk
+    for i in 0..restored.len() {
+        if let Ok(d) = restored.f32_mut(i) {
+            d.iter_mut().for_each(|v| *v = -1.0);
+        }
+    }
+    let loaded = load_checkpoint(&ckpt_dir, ResumeSpec::Latest).unwrap();
+    restored.load_state(loaded.group("params").unwrap()).unwrap();
+    for i in 0..store.len() {
+        let (a, b) = (store.f32(i), restored.f32(i));
+        if let (Ok(a), Ok(b)) = (a, b) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "param {i} not bit-exact");
+            }
+        }
+    }
+}
+
+#[test]
 fn runtime_rejects_wrong_shapes() {
     if !have_artifacts() {
         eprintln!("skipping: artifacts not built");

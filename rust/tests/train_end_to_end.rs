@@ -3,6 +3,7 @@
 //! on an easy task. These are short smoke-scale runs; the full
 //! experiments live in `lowrank-sge exp …`.
 
+use lowrank_sge::ckpt::{CkptOptions, ResumeSpec};
 use lowrank_sge::coordinator::{
     FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig, PretrainTrainer,
 };
@@ -64,6 +65,133 @@ fn pretrain_ddp_two_workers_runs() {
     let res = trainer.run().unwrap();
     assert_eq!(res.log.records.len(), 6);
     assert!(res.log.records.iter().all(|r| r.loss.is_finite()));
+}
+
+#[test]
+fn pretrain_resume_reproduces_uninterrupted_run_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let ckpt_dir = std::env::temp_dir().join("lowrank_sge_e2e_pretrain_resume");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+    let base = {
+        let mut cfg = PretrainConfig::quick("s", ProjectorKind::Stiefel);
+        cfg.steps = 12;
+        cfg.k_interval = 5; // step 6 sits mid-outer-iteration
+        cfg.eval_every = 0;
+        cfg.workers = 1; // single worker ⇒ deterministic shard order
+        cfg
+    };
+
+    // uninterrupted reference
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut trainer = PretrainTrainer::new(&mut rt, &dir, base.clone()).unwrap();
+    let reference = trainer.run().unwrap();
+
+    // interrupted at step 6 …
+    let mut cfg_a = base.clone();
+    cfg_a.steps = 6;
+    cfg_a.ckpt =
+        CkptOptions { save_every: 6, dir: Some(ckpt_dir.clone()), resume: None, keep_last: 0 };
+    let mut part1 = PretrainTrainer::new(&mut rt, &dir, cfg_a).unwrap();
+    let res1 = part1.run().unwrap();
+    drop(part1);
+
+    // … resumed from LATEST in a fresh trainer
+    let mut cfg_b = base.clone();
+    cfg_b.ckpt = CkptOptions {
+        save_every: 0,
+        dir: Some(ckpt_dir.clone()),
+        resume: Some(ResumeSpec::Latest),
+        keep_last: 0,
+    };
+    let mut part2 = PretrainTrainer::new(&mut rt, &dir, cfg_b).unwrap();
+    let res2 = part2.run().unwrap();
+
+    assert_eq!(res1.log.records.len(), 6);
+    assert_eq!(res2.log.records.len(), 6);
+    assert_eq!(res2.log.records[0].step, 6);
+    for (r, s) in reference.log.records[..6].iter().zip(&res1.log.records) {
+        assert_eq!(r.loss.to_bits(), s.loss.to_bits(), "pre-save step {} diverged", r.step);
+    }
+    for (r, s) in reference.log.records[6..].iter().zip(&res2.log.records) {
+        assert_eq!(
+            r.loss.to_bits(),
+            s.loss.to_bits(),
+            "resumed step {} diverged: {} vs {}",
+            r.step,
+            r.loss,
+            s.loss
+        );
+    }
+    // final lifted parameters agree bitwise
+    for i in 0..trainer.store().len() {
+        let a = trainer.store().f32(i).unwrap();
+        let b = part2.store().f32(i).unwrap();
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "param {i} diverged");
+        }
+    }
+}
+
+#[test]
+fn finetune_resume_reproduces_uninterrupted_run_exactly() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let dir = artifacts_dir();
+    let ckpt_dir = std::env::temp_dir().join("lowrank_sge_e2e_finetune_resume");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+    let method = FinetuneMethod::LowRankIpa(ProjectorKind::Stiefel);
+    let base = {
+        let mut cfg = FinetuneConfig::quick("sst2", method);
+        cfg.steps = 20;
+        cfg.k_interval = 8; // save at 10 is mid-outer-iteration
+        cfg
+    };
+
+    let mut rt = Runtime::new(&dir).unwrap();
+    let reference = FinetuneTrainer::new(&mut rt, &dir, base.clone()).unwrap().run().unwrap();
+
+    let mut cfg_a = base.clone();
+    cfg_a.steps = 10;
+    cfg_a.ckpt =
+        CkptOptions { save_every: 10, dir: Some(ckpt_dir.clone()), resume: None, keep_last: 0 };
+    let res1 = FinetuneTrainer::new(&mut rt, &dir, cfg_a).unwrap().run().unwrap();
+
+    let mut cfg_b = base.clone();
+    cfg_b.ckpt = CkptOptions {
+        save_every: 0,
+        dir: Some(ckpt_dir.clone()),
+        resume: Some(ResumeSpec::Latest),
+        keep_last: 0,
+    };
+    let res2 = FinetuneTrainer::new(&mut rt, &dir, cfg_b).unwrap().run().unwrap();
+
+    for (r, s) in reference.log.records[..10].iter().zip(&res1.log.records) {
+        assert_eq!(r.loss.to_bits(), s.loss.to_bits(), "pre-save step {} diverged", r.step);
+    }
+    for (r, s) in reference.log.records[10..].iter().zip(&res2.log.records) {
+        assert_eq!(r.loss.to_bits(), s.loss.to_bits(), "resumed step {} diverged", r.step);
+    }
+    // the final eval accuracy is a function of the final Θ: must match
+    assert_eq!(reference.accuracy, res2.accuracy);
+
+    // resuming under the wrong method is rejected up front
+    let mut cfg_bad = base;
+    cfg_bad.method = FinetuneMethod::VanillaIpa;
+    cfg_bad.ckpt = CkptOptions {
+        save_every: 0,
+        dir: Some(ckpt_dir),
+        resume: Some(ResumeSpec::Latest),
+        keep_last: 0,
+    };
+    assert!(FinetuneTrainer::new(&mut rt, &dir, cfg_bad).unwrap().run().is_err());
 }
 
 #[test]
