@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
         workers: 2,
         eval_every: (steps / 8).max(1),
         eval_batches: 2,
+        threads: 0,
         ckpt: Default::default(),
     };
     println!(

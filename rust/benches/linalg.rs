@@ -1,7 +1,10 @@
 //! Dense-linalg hot paths: GEMM (the toy-experiment inner loop), QR
-//! (Stiefel draws), Jacobi eigensolver (Algorithm 4 setup), f32 lift.
+//! (Stiefel draws), Jacobi eigensolver (Algorithm 4 setup), f32 lift —
+//! plus the serial-vs-parallel comparison of the shared kernel
+//! substrate (same bits at every thread count; see `kernel` docs).
 
 use lowrank_sge::bench_util::{bench, log_csv, report};
+use lowrank_sge::kernel::{self, KernelPool};
 use lowrank_sge::linalg::{matmul, matmul_tn, sym_eig, thin_qr, Mat};
 use lowrank_sge::model::lift_into;
 use lowrank_sge::rng::Rng;
@@ -12,6 +15,34 @@ fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
 }
 
 fn main() {
+    println!("-- kernel GEMM: serial vs parallel (1024x1024x64, f64) --");
+    // the acceptance shape: C (1024×64) = A (1024×1024) · B (1024×64)
+    let (m, k, n) = (1024usize, 1024usize, 64usize);
+    let a = rand_mat(m, k, 40);
+    let b = rand_mat(k, n, 41);
+    let mut medians = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let pool = KernelPool::new(threads);
+        let mut c = vec![0.0f64; m * n];
+        let stats = bench(2, 10, || {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            kernel::gemm_nn(&pool, &a.data, &b.data, &mut c, m, k, n);
+            std::hint::black_box(&c);
+        });
+        let name = format!("gemm_kernel_{m}x{k}x{n}_t{threads}");
+        report(&name, &stats);
+        let flops = 2.0 * (m * k * n) as f64;
+        println!("{:>60}", format!("≈ {:.2} GFLOP/s", flops / stats.median_s / 1e9));
+        log_csv("linalg.csv", &name, &stats);
+        medians.push((threads, stats.median_s));
+    }
+    if let (Some(&(_, serial)), Some(&(_, par4))) = (medians.first(), medians.last()) {
+        println!(
+            "{:>60}",
+            format!("4-thread speedup over serial: {:.2}x", serial / par4)
+        );
+    }
+
     println!("-- f64 GEMM (toy-experiment inner loop) --");
     for &n in &[64usize, 128, 256] {
         let a = rand_mat(n, n, 1);

@@ -1,9 +1,15 @@
 //! End-to-end per-step latency through the PJRT artifacts — the
 //! Table 3 measurement at proxy scale, plus the pretraining step cost
-//! per scale. Skips gracefully when artifacts are missing.
+//! per scale. Opens with a serial-vs-parallel comparison of the
+//! kernel-substrate step work (lift fan-out, DDP all-reduce) that needs
+//! no artifacts; the artifact sections skip gracefully when missing.
 
 use lowrank_sge::bench_util::{bench, log_csv, report};
-use lowrank_sge::coordinator::{FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig, PretrainTrainer};
+use lowrank_sge::coordinator::{
+    allreduce_mean_with, FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig,
+    PretrainTrainer,
+};
+use lowrank_sge::kernel::KernelPool;
 use lowrank_sge::projection::ProjectorKind;
 use lowrank_sge::runtime::Runtime;
 
@@ -12,6 +18,45 @@ fn artifacts_dir() -> std::path::PathBuf {
 }
 
 fn main() -> anyhow::Result<()> {
+    // Kernel-substrate step costs (no artifacts needed): the per-step
+    // pieces the trainers run on the pool, serial vs parallel.
+    println!("-- per-step kernel work: serial vs 4-thread pool --");
+    for threads in [1usize, 4] {
+        let pool = KernelPool::new(threads);
+
+        // lift fan-out proxy: 8 slots of 384×384 rank-16, Θ += B·Vᵀ
+        let slots = 8usize;
+        let (m, n, r) = (384usize, 384usize, 16usize);
+        let b: Vec<f32> = (0..m * r).map(|i| (i as f32) * 1e-4).collect();
+        let v: Vec<f32> = (0..n * r).map(|i| (i as f32) * 1e-4 - 0.1).collect();
+        let mut thetas: Vec<Vec<f32>> = vec![vec![0.0f32; m * n]; slots];
+        let stats = bench(2, 10, || {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for theta in thetas.iter_mut() {
+                let (b, v) = (&b, &v);
+                tasks.push(Box::new(move || {
+                    lowrank_sge::kernel::serial::gemm_nt(1.0f32, b, v, theta, m, n, r)
+                }));
+            }
+            pool.run(tasks);
+            std::hint::black_box(&thetas);
+        });
+        let name = format!("lift_fanout_{slots}x{m}x{n}_r{r}_t{threads}");
+        report(&name, &stats);
+        log_csv("train_step.csv", &name, &stats);
+
+        // DDP all-reduce: 4 worker shards of 1M f32, fixed pairing tree
+        let mut grads: Vec<Vec<f32>> =
+            (0..4).map(|w| (0..1_000_000).map(|i| ((w * 7 + i) as f32) * 1e-6).collect()).collect();
+        let stats = bench(2, 10, || {
+            allreduce_mean_with(&pool, &mut grads);
+            std::hint::black_box(&grads);
+        });
+        let name = format!("allreduce_4x1M_t{threads}");
+        report(&name, &stats);
+        log_csv("train_step.csv", &name, &stats);
+    }
+
     let dir = artifacts_dir();
     if !dir.join("INDEX.txt").exists() {
         eprintln!("artifacts not built — run `make artifacts` first; skipping");

@@ -87,6 +87,16 @@ impl ArgMap {
             .and_then(|s| s.parse().ok())
             .unwrap_or(default)
     }
+
+    /// `--threads N` — kernel pool size, shared by every subcommand;
+    /// this is the single place the flag is parsed. `default` is the
+    /// config-file fallback (0 where no config key exists). 0 leaves
+    /// the pool at its current size (initially `LOWRANK_THREADS` if
+    /// set, else the machine's available parallelism). Results are
+    /// bitwise identical at any value (see [`crate::kernel`]).
+    pub fn threads_or(&self, default: usize) -> usize {
+        self.usize_or("threads", default)
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +131,15 @@ mod tests {
     fn defaults_on_bad_parse() {
         let a = ArgMap::parse(&toks("--steps abc")).unwrap();
         assert_eq!(a.u64_or("steps", 9), 9);
+    }
+
+    #[test]
+    fn threads_defaults_to_auto() {
+        let a = ArgMap::parse(&toks("--threads 4")).unwrap();
+        assert_eq!(a.threads_or(0), 4);
+        let b = ArgMap::parse(&toks("--steps 5")).unwrap();
+        assert_eq!(b.threads_or(0), 0);
+        assert_eq!(b.threads_or(2), 2); // config-file fallback wins
     }
 
     #[test]

@@ -139,6 +139,15 @@ impl ConfigFile {
         self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
 
+    /// Non-negative integer (counts: threads, workers, …); negative
+    /// values clamp to the default.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_i64())
+            .and_then(|i| usize::try_from(i).ok())
+            .unwrap_or(default)
+    }
+
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
@@ -186,6 +195,14 @@ use_ddp = true
         assert_eq!(c.str_opt("missing"), None);
         let d = ConfigFile::parse("[pretrain]\nckpt_dir = \"runs/ck\"").unwrap();
         assert_eq!(d.str_opt("pretrain.ckpt_dir"), Some("runs/ck"));
+    }
+
+    #[test]
+    fn usize_or_clamps_negatives_to_default() {
+        let c = ConfigFile::parse("threads = 4\nbad = -2").unwrap();
+        assert_eq!(c.usize_or("threads", 0), 4);
+        assert_eq!(c.usize_or("bad", 1), 1);
+        assert_eq!(c.usize_or("missing", 7), 7);
     }
 
     #[test]

@@ -104,24 +104,45 @@ impl BatchProducer {
 }
 
 /// All-reduce (mean) a set of per-worker gradient vectors in place into
-/// the first one. Returns the number of shards reduced.
+/// the first one, on the global kernel pool. Returns the number of
+/// shards reduced. See [`allreduce_mean_with`] for the reduction order
+/// and the scratch-use of `grads[1..]`.
 pub fn allreduce_mean(grads: &mut [Vec<f32>]) -> usize {
+    allreduce_mean_with(&crate::kernel::global(), grads)
+}
+
+/// All-reduce (mean) with an explicit pool.
+///
+/// Shards combine in a **fixed pairing order** — a stride-doubling
+/// binary tree over the worker index (`g[i] += g[i+gap]` for gap = 1,
+/// 2, 4, …) — and each pairwise add is chunked elementwise across the
+/// pool. Both the tree shape (a function of the worker count alone) and
+/// the chunking (disjoint elements) are independent of the thread
+/// count, so the reduced gradient is bitwise identical from 1 thread to
+/// N — the property the DDP determinism tests pin down.
+///
+/// Only `grads[0]` holds the result; the tree uses the remaining
+/// shards as scratch (inner nodes hold partial sums afterwards), so
+/// callers must not read `grads[1..]` after the reduce.
+pub fn allreduce_mean_with(pool: &crate::kernel::KernelPool, grads: &mut [Vec<f32>]) -> usize {
     let n = grads.len();
     assert!(n >= 1);
     let len = grads[0].len();
     for g in grads.iter() {
         assert_eq!(g.len(), len, "gradient length mismatch across workers");
     }
-    let (first, rest) = grads.split_at_mut(1);
-    for g in rest.iter() {
-        for (a, b) in first[0].iter_mut().zip(g) {
-            *a += *b;
+    let mut gap = 1;
+    while gap < n {
+        let mut i = 0;
+        while i + gap < n {
+            let (left, right) = grads.split_at_mut(i + gap);
+            crate::kernel::add_assign(pool, &mut left[i], &right[0]);
+            i += 2 * gap;
         }
+        gap *= 2;
     }
     let inv = 1.0 / n as f32;
-    for a in first[0].iter_mut() {
-        *a *= inv;
-    }
+    crate::kernel::scale(pool, &mut grads[0], inv);
     n
 }
 

@@ -83,6 +83,12 @@ pub struct FinetuneConfig {
     pub seed: u64,
     /// Eval set size (examples).
     pub eval_examples: usize,
+    /// Kernel pool size for this run (`--threads`); > 0 resizes the
+    /// process-global pool, 0 leaves it as it currently is (initially:
+    /// `LOWRANK_THREADS` env, else available parallelism — or whatever
+    /// a previous run in this process set). Results are bitwise
+    /// identical at any value.
+    pub threads: usize,
     /// Checkpoint/resume policy (default: disabled).
     pub ckpt: CkptOptions,
 }
@@ -100,6 +106,7 @@ impl FinetuneConfig {
             c: 1.0,
             seed: 2026,
             eval_examples: 256,
+            threads: 0,
             ckpt: CkptOptions::default(),
         }
     }
@@ -325,6 +332,9 @@ impl FinetuneTrainer {
     /// Run fine-tuning; returns accuracy and the loss series.
     pub fn run(&mut self) -> Result<FinetuneResult> {
         let cfg = self.cfg.clone();
+        if cfg.threads > 0 {
+            crate::kernel::set_global_threads(cfg.threads);
+        }
         let task = ClassifyTask::by_name(&cfg.task, self.vocab, self.seq, cfg.seed ^ 0x7A5C)
             .with_context(|| format!("unknown task {}", cfg.task))?;
         let mut log = MetricsLog::default();
@@ -453,11 +463,14 @@ impl FinetuneTrainer {
                     let loss = out[0].scalar()?;
                     let sub = self.subspace.as_mut().unwrap();
                     let mut norm_sq = 0f64;
-                    for slot in &mut sub.slots {
+                    let mut grads: Vec<&[f32]> = Vec::with_capacity(sub.slots.len());
+                    for slot in &sub.slots {
                         let g = out[slot.db_output].as_f32()?;
                         norm_sq += g.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
-                        slot.adam.step(&mut slot.b, g, cfg.ipa_lr);
+                        grads.push(g);
                     }
+                    // per-slot Adam steps fan out across the kernel pool
+                    sub.adam_step_all(&grads, cfg.ipa_lr);
                     // head gradient is out[2]
                     let head_out = art
                         .manifest
@@ -473,17 +486,29 @@ impl FinetuneTrainer {
                     let (fp, fm) = (out[0].scalar()?, out[1].scalar()?);
                     let scale = (fp - fm) / (2.0 * cfg.sigma);
                     let sub = self.subspace.as_mut().unwrap();
-                    for (slot, z) in sub.slots.iter_mut().zip(&zs) {
-                        // ĝ_B = scale·Z ; Adam step on B, then push the
-                        // *delta* into Θ so Θ stays the lifted point.
-                        let g: Vec<f32> = z.iter().map(|x| scale * x).collect();
-                        let old_b = slot.b.clone();
-                        slot.adam.step(&mut slot.b, &g, cfg.zo_lr);
-                        let delta: Vec<f32> =
-                            slot.b.iter().zip(&old_b).map(|(n, o)| n - o).collect();
-                        let theta = self.store.f32_mut(slot.param_pos)?;
-                        crate::model::lift_into(theta, &delta, &slot.v, slot.m, slot.n, slot.r);
+                    // ĝ_B = scale·Z ; Adam step on B, then push the
+                    // *delta* into Θ so Θ stays the lifted point. Each
+                    // slot touches its own (B, Adam, Θ) triple, so the
+                    // whole update fans out across the kernel pool.
+                    let positions: Vec<usize> =
+                        sub.slots.iter().map(|s| s.param_pos).collect();
+                    let thetas = self.store.f32_mut_many(&positions)?;
+                    let zo_lr = cfg.zo_lr;
+                    let pool = crate::kernel::global();
+                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                    for ((slot, theta), z) in sub.slots.iter_mut().zip(thetas).zip(&zs) {
+                        tasks.push(Box::new(move || {
+                            let g: Vec<f32> = z.iter().map(|x| scale * x).collect();
+                            let old_b = slot.b.clone();
+                            slot.adam.step(&mut slot.b, &g, zo_lr);
+                            let delta: Vec<f32> =
+                                slot.b.iter().zip(&old_b).map(|(n, o)| n - o).collect();
+                            crate::kernel::serial::gemm_nt(
+                                1.0f32, &delta, &slot.v, theta, slot.m, slot.n, slot.r,
+                            );
+                        }));
                     }
+                    pool.run(tasks);
                     let gh: Vec<f32> = z_head.iter().map(|x| scale * x).collect();
                     self.head_adam.step(self.store.f32_mut(self.head_pos)?, &gh, cfg.zo_lr);
                     ((fp + fm) * 0.5, scale.abs())
@@ -491,17 +516,16 @@ impl FinetuneTrainer {
                 FinetuneMethod::VanillaLr => {
                     let (fp, fm) = (out[0].scalar()?, out[1].scalar()?);
                     let scale = (fp - fm) / (2.0 * cfg.sigma);
-                    // MeZO-style SGD: Θ ← Θ − lr·scale·Z
+                    // MeZO-style SGD: Θ ← Θ − lr·scale·Z (kernel AXPY;
+                    // −(lr·scale)·z ≡ the old `t -= lr·scale·z` to the bit)
+                    let pool = crate::kernel::global();
+                    let alpha = -(cfg.zo_lr * scale);
                     for (slot, z) in self.zo_full_slots.iter().zip(&zs) {
                         let theta = self.store.f32_mut(slot.param_pos)?;
-                        for (t, zi) in theta.iter_mut().zip(z) {
-                            *t -= cfg.zo_lr * scale * zi;
-                        }
+                        crate::kernel::axpy(&pool, alpha, z, theta);
                     }
                     let head = self.store.f32_mut(self.head_pos)?;
-                    for (t, zi) in head.iter_mut().zip(&z_head) {
-                        *t -= cfg.zo_lr * scale * zi;
-                    }
+                    crate::kernel::axpy(&pool, alpha, &z_head, head);
                     ((fp + fm) * 0.5, scale.abs())
                 }
                 FinetuneMethod::ZeroShot => unreachable!(),

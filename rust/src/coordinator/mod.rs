@@ -10,7 +10,9 @@
 //!   Vanilla IPA / LowRank-IPA) on the classifier artifacts.
 //! * [`ddp`] — the data-parallel worker simulation: N producer threads
 //!   feed sharded batches through a bounded channel (backpressure), the
-//!   leader executes and all-reduces gradients (DESIGN.md §2).
+//!   leader executes and all-reduces gradients (DESIGN.md §2). The
+//!   all-reduce combines shards in a fixed pairing order on the
+//!   [`crate::kernel`] pool — bitwise identical at any thread count.
 //! * [`metrics`] — step records and CSV emission for the figure
 //!   harnesses.
 //!
@@ -26,7 +28,7 @@ mod metrics;
 mod pretrain;
 mod subspace;
 
-pub use ddp::{BatchProducer, LEADER_RANK};
+pub use ddp::{allreduce_mean, allreduce_mean_with, BatchProducer, LEADER_RANK};
 pub use finetune::{FinetuneConfig, FinetuneMethod, FinetuneResult, FinetuneTrainer};
 pub use metrics::{MetricsLog, StepRecord};
 pub use pretrain::{PretrainConfig, PretrainResult, PretrainTrainer};

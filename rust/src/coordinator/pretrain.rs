@@ -47,6 +47,12 @@ pub struct PretrainConfig {
     /// lifted copy, so it is exact at any step.
     pub eval_every: u64,
     pub eval_batches: usize,
+    /// Kernel pool size for this run (`--threads`); > 0 resizes the
+    /// process-global pool, 0 leaves it as it currently is (initially:
+    /// `LOWRANK_THREADS` env, else available parallelism — or whatever
+    /// a previous run in this process set). Results are bitwise
+    /// identical at any value.
+    pub threads: usize,
     /// Checkpoint/resume policy (default: disabled).
     pub ckpt: CkptOptions,
 }
@@ -67,6 +73,7 @@ impl PretrainConfig {
             workers: 1,
             eval_every: 25,
             eval_batches: 2,
+            threads: 0,
             ckpt: CkptOptions::default(),
         }
     }
@@ -221,6 +228,9 @@ impl PretrainTrainer {
     /// checkpoint first — see [`CkptOptions`]).
     pub fn run(&mut self) -> Result<PretrainResult> {
         let cfg = self.cfg.clone();
+        if cfg.threads > 0 {
+            crate::kernel::set_global_threads(cfg.threads);
+        }
         let controller = LazyUpdateController::new(cfg.k_interval);
         let schedule = CosineSchedule::new(cfg.lr, cfg.warmup, cfg.steps.max(cfg.warmup + 1));
 
@@ -321,13 +331,20 @@ impl PretrainTrainer {
             views.extend(df.iter_mut().map(|g| g.as_mut_slice()));
             let grad_norm = clip_global_norm(&mut views, cfg.clip);
 
-            // optimizer steps
-            for (slot, g) in self.subspace.slots.iter_mut().zip(&db) {
-                slot.adam.step(&mut slot.b, g, lr);
-            }
-            for (fslot, g) in self.full_slots.iter_mut().zip(&df) {
-                let p = self.store.f32_mut(fslot.param_pos)?;
-                fslot.adam.step(p, g, lr);
+            // optimizer steps: per-matrix updates are independent, so
+            // both the subspace-B and the full-rank Adam steps fan out
+            // across the kernel pool (bitwise equal to the serial loop)
+            self.subspace.adam_step_all(&db, lr);
+            {
+                let positions: Vec<usize> =
+                    self.full_slots.iter().map(|f| f.param_pos).collect();
+                let params = self.store.f32_mut_many(&positions)?;
+                let pool = crate::kernel::global();
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                for ((fslot, p), g) in self.full_slots.iter_mut().zip(params).zip(&df) {
+                    tasks.push(Box::new(move || fslot.adam.step(p, g, lr)));
+                }
+                pool.run(tasks);
             }
 
             log.push(StepRecord {

@@ -9,9 +9,10 @@
 use anyhow::{bail, Context, Result};
 
 use crate::ckpt::Checkpointable;
-use crate::model::{lift_into, ParamStore};
+use crate::kernel;
+use crate::model::ParamStore;
 use crate::optim::{Adam, AdamConfig};
-use crate::projection::{build_sampler, ProjectorKind};
+use crate::projection::{sample_batch, ProjectorKind};
 use crate::rng::Rng;
 use crate::runtime::ArtifactManifest;
 
@@ -158,10 +159,15 @@ impl SubspaceSet {
 
     /// Resample every V (Algorithm 1 line 3): B ← 0, fresh V, Adam
     /// moments reset (they live in the old subspace's coordinates).
+    ///
+    /// Draws fan out across the kernel pool via
+    /// [`crate::projection::sample_batch`]: one forked child stream per
+    /// slot (in slot order), so the result depends only on `rng` — not
+    /// on the thread count.
     pub fn resample(&mut self, rng: &mut Rng) {
-        for slot in &mut self.slots {
-            let mut sampler = build_sampler(self.kind, slot.n, slot.r, self.c, None);
-            let v = sampler.sample(rng);
+        let dims: Vec<(usize, usize)> = self.slots.iter().map(|s| (s.n, s.r)).collect();
+        let vs = sample_batch(self.kind, &dims, self.c, None, rng);
+        for (slot, v) in self.slots.iter_mut().zip(vs) {
             for (dst, src) in slot.v.iter_mut().zip(&v.data) {
                 *dst = *src as f32;
             }
@@ -172,13 +178,40 @@ impl SubspaceSet {
     }
 
     /// Lift Θ ← Θ + B·Vᵀ into the store and zero B (Algorithm 1 line 8).
+    ///
+    /// The per-matrix lifts are independent (disjoint Θ tensors), so
+    /// they fan out across the kernel pool — one task per slot, each
+    /// running the serial GEMM body so the parallelism stays one level
+    /// deep and the bytes match a serial pass exactly.
     pub fn lift(&mut self, store: &mut ParamStore) -> Result<()> {
+        let positions: Vec<usize> = self.slots.iter().map(|s| s.param_pos).collect();
+        let thetas = store.f32_mut_many(&positions)?;
+        let pool = kernel::global();
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (slot, theta) in self.slots.iter().zip(thetas) {
+            let (m, n, r) = (slot.m, slot.n, slot.r);
+            let (b, v) = (&slot.b, &slot.v);
+            tasks.push(Box::new(move || kernel::serial::gemm_nt(1.0f32, b, v, theta, m, n, r)));
+        }
+        pool.run(tasks);
         for slot in &mut self.slots {
-            let theta = store.f32_mut(slot.param_pos)?;
-            lift_into(theta, &slot.b, &slot.v, slot.m, slot.n, slot.r);
             slot.b.iter_mut().for_each(|x| *x = 0.0);
         }
         Ok(())
+    }
+
+    /// One Adam step per slot's B, fanned out across the kernel pool.
+    /// Slots are independent, so parallel equals serial bitwise.
+    /// Generic over the gradient container (`Vec<f32>`, `&[f32]`, …) so
+    /// callers holding borrowed artifact outputs never have to copy.
+    pub fn adam_step_all<G: AsRef<[f32]> + Sync>(&mut self, grads: &[G], lr: f32) {
+        assert_eq!(grads.len(), self.slots.len(), "one gradient per slot");
+        let pool = kernel::global();
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for (slot, g) in self.slots.iter_mut().zip(grads) {
+            tasks.push(Box::new(move || slot.adam.step(&mut slot.b, g.as_ref(), lr)));
+        }
+        pool.run(tasks);
     }
 
     pub fn outer_iterations(&self) -> u64 {
@@ -325,6 +358,144 @@ output 1 out[1][w0] f32 4x2
         let mut missing = crate::ckpt::StateDict::new();
         missing.put_u64s("outer_iterations", &[1]);
         assert!(dst.load_state(&missing).is_err());
+    }
+
+    const TRIPLE_MANIFEST: &str = "\
+artifact = toy3_grad
+num_inputs = 10
+num_outputs = 4
+input 0 params[w0] f32 40x24
+input 1 params[w1] f32 24x24
+input 2 params[w2] f32 48x16
+input 3 bs[w0] f32 40x3
+input 4 vs[w0] f32 24x3
+input 5 bs[w1] f32 24x2
+input 6 vs[w1] f32 24x2
+input 7 bs[w2] f32 48x4
+input 8 vs[w2] f32 16x4
+input 9 tokens i32 2x3
+output 0 out[0] f32 scalar
+output 1 out[1][w0] f32 40x3
+output 2 out[1][w1] f32 24x2
+output 3 out[1][w2] f32 48x4
+";
+
+    fn triple_store() -> ParamStore {
+        let manifest = ArtifactManifest::parse(TRIPLE_MANIFEST).unwrap();
+        let specs: Vec<TensorSpec> = manifest.inputs.iter().take(3).cloned().collect();
+        let tensors = specs
+            .iter()
+            .map(|s| {
+                let len: usize = s.shape.iter().product();
+                HostTensor::f32(
+                    s.shape.clone(),
+                    (0..len).map(|i| (i as f32) * 1e-3 - 0.2).collect(),
+                )
+            })
+            .collect();
+        ParamStore::for_test(specs, tensors)
+    }
+
+    /// Collect every file under `dir` as (relative path, bytes).
+    fn dir_bytes(dir: &std::path::Path) -> std::collections::BTreeMap<String, Vec<u8>> {
+        fn walk(
+            root: &std::path::Path,
+            dir: &std::path::Path,
+            out: &mut std::collections::BTreeMap<String, Vec<u8>>,
+        ) {
+            for entry in std::fs::read_dir(dir).unwrap() {
+                let path = entry.unwrap().path();
+                if path.is_dir() {
+                    walk(root, &path, out);
+                } else {
+                    let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+                    out.insert(rel, std::fs::read(&path).unwrap());
+                }
+            }
+        }
+        let mut out = std::collections::BTreeMap::new();
+        walk(dir, dir, &mut out);
+        out
+    }
+
+    /// Drive the full slot fan-out (resample → per-slot Adam steps →
+    /// lift) at a given pool size, returning the final parameter bits
+    /// and the committed checkpoint bytes.
+    fn run_slot_fanout(threads: usize) -> (Vec<u32>, std::collections::BTreeMap<String, Vec<u8>>) {
+        crate::kernel::set_global_threads(threads);
+        let manifest = ArtifactManifest::parse(TRIPLE_MANIFEST).unwrap();
+        let mut store = triple_store();
+        let mut set = SubspaceSet::from_manifest(
+            &manifest,
+            &store,
+            ProjectorKind::Stiefel,
+            1.0,
+            AdamConfig::default(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(4242);
+        for outer in 0..2u64 {
+            set.resample(&mut rng);
+            for step in 0..3u64 {
+                let grads: Vec<Vec<f32>> = set
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .map(|(si, s)| {
+                        (0..s.m * s.r)
+                            .map(|i| (((outer * 100 + step * 31 + si as u64 * 7 + i as u64) as f32)
+                                * 0.01)
+                                .sin())
+                            .collect()
+                    })
+                    .collect();
+                set.adam_step_all(&grads, 1e-2);
+            }
+            set.lift(&mut store).unwrap();
+        }
+        let bits: Vec<u32> = (0..store.len())
+            .flat_map(|i| store.f32(i).unwrap().iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+            .collect();
+        // PID-unique path so concurrent test binaries on one machine
+        // cannot race each other's remove/save/read cycle
+        let dir = std::env::temp_dir()
+            .join(format!("lowrank_sge_slot_fanout_p{}_t{threads}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::ckpt::save_checkpoint(
+            &dir,
+            1,
+            &[],
+            &[("params", store.state_dict()), ("subspace", set.state_dict())],
+            0,
+        )
+        .unwrap();
+        let bytes = dir_bytes(&dir);
+        let _ = std::fs::remove_dir_all(&dir);
+        (bits, bytes)
+    }
+
+    #[test]
+    fn slot_fanout_is_thread_count_invariant() {
+        // Satellite: a 3-matrix artifact stepped with threads = 1 and
+        // threads = 4 must produce identical ParamStore bytes and
+        // identical checkpoint shards.
+        let _guard = crate::kernel::pool::global_test_guard();
+        let prev_threads = crate::kernel::global_threads();
+        let (bits_serial, ckpt_serial) = run_slot_fanout(1);
+        let (bits_par, ckpt_par) = run_slot_fanout(4);
+        // restore so the LOWRANK_THREADS-driven CI legs keep their
+        // configured pool size for the rest of the suite
+        crate::kernel::set_global_threads(prev_threads);
+        assert!(!bits_serial.is_empty());
+        assert_eq!(bits_serial, bits_par, "ParamStore bytes diverged across thread counts");
+        assert_eq!(
+            ckpt_serial.keys().collect::<Vec<_>>(),
+            ckpt_par.keys().collect::<Vec<_>>()
+        );
+        for (name, bytes) in &ckpt_serial {
+            assert_eq!(bytes, &ckpt_par[name], "checkpoint shard {name} diverged");
+        }
+        assert!(ckpt_serial.keys().any(|k| k.contains("MANIFEST")));
     }
 
     #[test]

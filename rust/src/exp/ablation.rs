@@ -60,6 +60,7 @@ fn one_run(
         workers: 1,
         eval_every: 0,
         eval_batches: 1,
+        threads: 0,
         ckpt: Default::default(),
     };
     let mut t = PretrainTrainer::new(rt, dir, cfg)?;

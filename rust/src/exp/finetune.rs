@@ -75,6 +75,7 @@ pub fn run(
                 c: 1.0,
                 seed: opts.seed,
                 eval_examples: 256,
+                threads: 0,
                 ckpt: Default::default(),
             };
             let mut trainer = FinetuneTrainer::new(rt, artifacts_dir, cfg)?;
@@ -145,6 +146,7 @@ pub fn run_curves(
                 c: 1.0,
                 seed: opts.seed,
                 eval_examples: 128,
+                threads: 0,
                 ckpt: Default::default(),
             };
             let mut trainer = FinetuneTrainer::new(rt, artifacts_dir, cfg)?;

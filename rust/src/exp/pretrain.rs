@@ -82,6 +82,7 @@ pub fn run(
             workers: opts.workers,
             eval_every: opts.eval_every,
             eval_batches: 2,
+            threads: 0,
             ckpt: Default::default(),
         };
         let mut trainer = PretrainTrainer::new(rt, artifacts_dir, cfg)?;

@@ -1,0 +1,37 @@
+//! `kernel` — the crate's single parallel compute substrate.
+//!
+//! Everything dense in the Rust layer runs through this module, exactly
+//! once per operation and generically over [`Scalar`] (`f32`/`f64`):
+//!
+//! * [`scalar`] — the [`Scalar`] trait binding the two precisions to
+//!   one set of kernels.
+//! * [`ops`] — blocked GEMM (`nn`/`tn`/`nt`), AXPY/scale,
+//!   deterministic chunked reductions, and the strided panel/rotation
+//!   primitives used by QR and the Jacobi eigensolver.
+//! * [`pool`] — the persistent [`KernelPool`] (`std::thread` +
+//!   queue/condvar, no external deps) plus the process-global instance
+//!   sized by `--threads` / `LOWRANK_THREADS` (default: available
+//!   parallelism).
+//!
+//! # Determinism guarantee
+//!
+//! For every operation here, **parallel output is bitwise identical to
+//! serial output at any thread count**: GEMM partitions C into fixed
+//! row blocks whose per-element accumulation order never changes, and
+//! reductions combine fixed-size chunk partials through a fixed-shape
+//! tree. Layers above inherit the guarantee — the projection samplers,
+//! the per-slot subspace fan-out, and the DDP all-reduce all produce
+//! the same bits with `--threads 1` and `--threads 64`. The
+//! `tests/kernel_determinism.rs` suite and the CI matrix
+//! (`LOWRANK_THREADS` ∈ {1, 4}) pin this down.
+
+pub mod ops;
+pub mod pool;
+pub mod scalar;
+
+pub use ops::{
+    add_assign, auto, axpy, dot, gemm_nn, gemm_nt, gemm_tn, gemv_t_strided, ger_sub_strided,
+    rot_cols_strided, rot_rows, scale, serial, sum_sq, tree_reduce, REDUCE_CHUNK, ROW_BLOCK,
+};
+pub use pool::{global, global_threads, set_global_threads, KernelPool};
+pub use scalar::Scalar;

@@ -1,0 +1,774 @@
+//! The Scalar-generic compute core: blocked GEMM (`nn`/`tn`/`nt`),
+//! AXPY/scale, deterministic reductions, and the strided panel/rotation
+//! primitives the factorizations need. Every dense loop in the crate
+//! routes through here — exactly once per operation, for both `f32` and
+//! `f64`.
+//!
+//! # Determinism contract
+//!
+//! Parallel results are **bitwise identical** to serial, independent of
+//! thread count:
+//!
+//! * GEMM parallelizes over disjoint row blocks of C; each output
+//!   element is accumulated by exactly one task in k-ascending order —
+//!   the same order the serial kernel uses — so the partitioning cannot
+//!   change a single bit.
+//! * Reductions ([`dot`]) split the input into fixed
+//!   [`REDUCE_CHUNK`]-sized chunks (a function of the length only,
+//!   never of the thread count), compute per-chunk partials, and
+//!   combine them with a fixed-shape pairwise tree ([`tree_reduce`]).
+//! * Elementwise ops (AXPY, scale) touch each element independently.
+//!
+//! The kernels are **branchless** over the data: no zero-skip
+//! shortcuts, so NaN/Inf propagate exactly as IEEE arithmetic dictates
+//! (the old `linalg` GEMM silently dropped NaNs in B behind an
+//! `a == 0.0` skip; the regression tests in `linalg::ops` pin the fix).
+
+use super::pool::KernelPool;
+use super::scalar::Scalar;
+
+/// Row-granularity quantum of the GEMM partitioning: every parallel
+/// task owns a multiple of this many rows of C (see [`rows_per_task`]).
+/// Fixed — never derived from the thread count — so the task set is a
+/// pure function of the problem shape.
+pub const ROW_BLOCK: usize = 32;
+
+/// Cache tile edge for the k/j blocking inside one GEMM task. 64×64×8 B
+/// = 32 KB per f64 tile — the same budget the old `linalg` GEMM used.
+const TILE: usize = 64;
+
+/// Elements per reduction chunk; partials are combined by a fixed-shape
+/// tree, so this must never depend on the thread count.
+pub const REDUCE_CHUNK: usize = 4096;
+
+/// Elements per task for elementwise ops.
+const ELEM_CHUNK: usize = 16384;
+
+/// Minimum multiply-add count (m·k·n) before a GEMM is worth queueing
+/// on the pool; below this the dispatch overhead (boxed closures,
+/// queue mutex, latch) dwarfs the arithmetic, and the toy-MSE hot path
+/// runs millions of such small products. The determinism tests use
+/// shapes above this bound so they exercise the parallel path.
+const PAR_GEMM_MIN_WORK: usize = 1 << 16;
+
+/// Rows of C per parallel task: a [`ROW_BLOCK`] multiple sized so each
+/// task carries a worthwhile amount of arithmetic — tall-skinny shapes
+/// (e.g. a mat-vec with n = 1) would otherwise shred into hundreds of
+/// micro-tasks whose dispatch cost dwarfs their work. A pure function
+/// of the shape, so the partitioning stays thread-count-independent.
+fn rows_per_task(k: usize, n: usize) -> usize {
+    const TASK_MIN_WORK: usize = PAR_GEMM_MIN_WORK / 4;
+    let per_row = (k * n).max(1);
+    let min_rows = TASK_MIN_WORK.div_ceil(per_row);
+    min_rows.div_ceil(ROW_BLOCK).max(1) * ROW_BLOCK
+}
+
+// ---------------------------------------------------------------------------
+// Serial per-block bodies. These define the canonical element-wise
+// accumulation order; the parallel drivers below only decide which rows
+// each task owns.
+// ---------------------------------------------------------------------------
+
+/// `c` (rows×n) += `a` (rows×k) · `b` (k×n); k-innermost, tiled.
+fn gemm_nn_rows<T: Scalar>(a: &[T], b: &[T], c: &mut [T], rows: usize, k: usize, n: usize) {
+    for k0 in (0..k).step_by(TILE) {
+        let k1 = (k0 + TILE).min(k);
+        for j0 in (0..n).step_by(TILE) {
+            let j1 = (j0 + TILE).min(n);
+            for i in 0..rows {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    // innermost j: contiguous in B and C, auto-vectorizes
+                    for j in j0..j1 {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Rows `i0 .. i0+rows` of C (m×n) += (Aᵀ·B) with A stored k×m, B k×n;
+/// `c` is the row-block slice. k-outermost so both reads stream.
+#[allow(clippy::too_many_arguments)]
+fn gemm_tn_rows<T: Scalar>(
+    a: &[T],
+    b: &[T],
+    c: &mut [T],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    m: usize,
+    n: usize,
+) {
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for i in 0..rows {
+            let aki = arow[i0 + i];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aki * brow[j];
+            }
+        }
+    }
+}
+
+/// `c` (rows×n) += α·(`a` (rows×k) · `b`ᵀ) with `b` stored n×k.
+fn gemm_nt_rows<T: Scalar>(
+    alpha: T,
+    a: &[T],
+    b: &[T],
+    c: &mut [T],
+    rows: usize,
+    n: usize,
+    k: usize,
+) {
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut s = T::ZERO;
+            for kk in 0..k {
+                s += arow[kk] * brow[kk];
+            }
+            crow[j] += alpha * s;
+        }
+    }
+}
+
+/// Strictly serial entry points (identical math, one thread). The
+/// coordinator's per-slot fan-out uses these inside its own pool tasks
+/// so parallelism stays one level deep by construction.
+pub mod serial {
+    use super::*;
+
+    /// C += A·B, row-major; A m×k, B k×n, C m×n.
+    pub fn gemm_nn<T: Scalar>(a: &[T], b: &[T], c: &mut [T], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k, "gemm_nn: A is not {m}x{k}");
+        assert_eq!(b.len(), k * n, "gemm_nn: B is not {k}x{n}");
+        assert_eq!(c.len(), m * n, "gemm_nn: C is not {m}x{n}");
+        gemm_nn_rows(a, b, c, m, k, n);
+    }
+
+    /// C += Aᵀ·B; A stored k×m, B k×n, C m×n.
+    pub fn gemm_tn<T: Scalar>(a: &[T], b: &[T], c: &mut [T], k: usize, m: usize, n: usize) {
+        assert_eq!(a.len(), k * m, "gemm_tn: A is not {k}x{m}");
+        assert_eq!(b.len(), k * n, "gemm_tn: B is not {k}x{n}");
+        assert_eq!(c.len(), m * n, "gemm_tn: C is not {m}x{n}");
+        gemm_tn_rows(a, b, c, 0, m, k, m, n);
+    }
+
+    /// C += α·A·Bᵀ; A m×k, B n×k, C m×n.
+    pub fn gemm_nt<T: Scalar>(
+        alpha: T,
+        a: &[T],
+        b: &[T],
+        c: &mut [T],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) {
+        assert_eq!(a.len(), m * k, "gemm_nt: A is not {m}x{k}");
+        assert_eq!(b.len(), n * k, "gemm_nt: B is not {n}x{k}");
+        assert_eq!(c.len(), m * n, "gemm_nt: C is not {m}x{n}");
+        gemm_nt_rows(alpha, a, b, c, m, n, k);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel drivers: row-block partitioning over the pool.
+// ---------------------------------------------------------------------------
+
+/// C += A·B across the pool; A m×k, B k×n, C m×n, all row-major.
+pub fn gemm_nn<T: Scalar>(
+    pool: &KernelPool,
+    a: &[T],
+    b: &[T],
+    c: &mut [T],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "gemm_nn: A is not {m}x{k}");
+    assert_eq!(b.len(), k * n, "gemm_nn: B is not {k}x{n}");
+    assert_eq!(c.len(), m * n, "gemm_nn: C is not {m}x{n}");
+    if m == 0 || n == 0 {
+        return;
+    }
+    // single-task and small problems skip the queue entirely — the
+    // toy-MSE hot path runs millions of small GEMMs and must stay
+    // allocation-free (the serial body computes identical bits)
+    if pool.threads() == 1 || m <= ROW_BLOCK || m * k * n <= PAR_GEMM_MIN_WORK {
+        gemm_nn_rows(a, b, c, m, k, n);
+        return;
+    }
+    let rpt = rows_per_task(k, n);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (blk, c_rows) in c.chunks_mut(rpt * n).enumerate() {
+        let i0 = blk * rpt;
+        let rows = c_rows.len() / n;
+        let a_rows = &a[i0 * k..(i0 + rows) * k];
+        tasks.push(Box::new(move || gemm_nn_rows(a_rows, b, c_rows, rows, k, n)));
+    }
+    pool.run(tasks);
+}
+
+/// C += Aᵀ·B across the pool; A stored k×m, B k×n, C m×n.
+pub fn gemm_tn<T: Scalar>(
+    pool: &KernelPool,
+    a: &[T],
+    b: &[T],
+    c: &mut [T],
+    k: usize,
+    m: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), k * m, "gemm_tn: A is not {k}x{m}");
+    assert_eq!(b.len(), k * n, "gemm_tn: B is not {k}x{n}");
+    assert_eq!(c.len(), m * n, "gemm_tn: C is not {m}x{n}");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if pool.threads() == 1 || m <= ROW_BLOCK || m * k * n <= PAR_GEMM_MIN_WORK {
+        gemm_tn_rows(a, b, c, 0, m, k, m, n);
+        return;
+    }
+    let rpt = rows_per_task(k, n);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (blk, c_rows) in c.chunks_mut(rpt * n).enumerate() {
+        let i0 = blk * rpt;
+        let rows = c_rows.len() / n;
+        tasks.push(Box::new(move || gemm_tn_rows(a, b, c_rows, i0, rows, k, m, n)));
+    }
+    pool.run(tasks);
+}
+
+/// C += α·A·Bᵀ across the pool; A m×k, B n×k, C m×n. `alpha = ONE`
+/// reproduces the plain accumulate bit-for-bit (`1·x ≡ x` in IEEE).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt<T: Scalar>(
+    pool: &KernelPool,
+    alpha: T,
+    a: &[T],
+    b: &[T],
+    c: &mut [T],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    assert_eq!(a.len(), m * k, "gemm_nt: A is not {m}x{k}");
+    assert_eq!(b.len(), n * k, "gemm_nt: B is not {n}x{k}");
+    assert_eq!(c.len(), m * n, "gemm_nt: C is not {m}x{n}");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if pool.threads() == 1 || m <= ROW_BLOCK || m * n * k <= PAR_GEMM_MIN_WORK {
+        gemm_nt_rows(alpha, a, b, c, m, n, k);
+        return;
+    }
+    let rpt = rows_per_task(k, n);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (blk, c_rows) in c.chunks_mut(rpt * n).enumerate() {
+        let i0 = blk * rpt;
+        let rows = c_rows.len() / n;
+        let a_rows = &a[i0 * k..(i0 + rows) * k];
+        tasks.push(Box::new(move || gemm_nt_rows(alpha, a_rows, b, c_rows, rows, n, k)));
+    }
+    pool.run(tasks);
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise ops.
+// ---------------------------------------------------------------------------
+
+/// y += α·x, elementwise across the pool.
+pub fn axpy<T: Scalar>(pool: &KernelPool, alpha: T, x: &[T], y: &mut [T]) {
+    assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    if pool.threads() == 1 || y.len() <= ELEM_CHUNK {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * *xi;
+        }
+        return;
+    }
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (yc, xc) in y.chunks_mut(ELEM_CHUNK).zip(x.chunks(ELEM_CHUNK)) {
+        tasks.push(Box::new(move || {
+            for (yi, xi) in yc.iter_mut().zip(xc) {
+                *yi += alpha * *xi;
+            }
+        }));
+    }
+    pool.run(tasks);
+}
+
+/// y += x, elementwise across the pool (the all-reduce combine step;
+/// kept separate from [`axpy`] so the sum is a plain `+`, matching the
+/// historical accumulate exactly).
+pub fn add_assign<T: Scalar>(pool: &KernelPool, y: &mut [T], x: &[T]) {
+    assert_eq!(x.len(), y.len(), "add_assign length mismatch");
+    if pool.threads() == 1 || y.len() <= ELEM_CHUNK {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += *xi;
+        }
+        return;
+    }
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for (yc, xc) in y.chunks_mut(ELEM_CHUNK).zip(x.chunks(ELEM_CHUNK)) {
+        tasks.push(Box::new(move || {
+            for (yi, xi) in yc.iter_mut().zip(xc) {
+                *yi += *xi;
+            }
+        }));
+    }
+    pool.run(tasks);
+}
+
+/// x *= α, elementwise across the pool.
+pub fn scale<T: Scalar>(pool: &KernelPool, x: &mut [T], alpha: T) {
+    if pool.threads() == 1 || x.len() <= ELEM_CHUNK {
+        for xi in x.iter_mut() {
+            *xi *= alpha;
+        }
+        return;
+    }
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for xc in x.chunks_mut(ELEM_CHUNK) {
+        tasks.push(Box::new(move || {
+            for xi in xc.iter_mut() {
+                *xi *= alpha;
+            }
+        }));
+    }
+    pool.run(tasks);
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic reductions.
+// ---------------------------------------------------------------------------
+
+/// Fixed-shape pairwise tree sum: the combine order is a pure function
+/// of `xs.len()`, never of who computed the entries.
+pub fn tree_reduce<T: Scalar>(xs: &[T]) -> T {
+    match xs.len() {
+        0 => T::ZERO,
+        1 => xs[0],
+        len => {
+            let mid = len / 2;
+            tree_reduce(&xs[..mid]) + tree_reduce(&xs[mid..])
+        }
+    }
+}
+
+/// ⟨x, y⟩ with the chunked-partials + fixed-tree reduction order. The
+/// serial path computes the identical chunk partials in the identical
+/// order, so the result is thread-count-independent to the bit.
+pub fn dot<T: Scalar>(pool: &KernelPool, x: &[T], y: &[T]) -> T {
+    assert_eq!(x.len(), y.len(), "dot length mismatch");
+    if x.is_empty() {
+        return T::ZERO;
+    }
+    // single-chunk inputs reduce inline, allocation-free — identical to
+    // the chunked path (one partial, sequential within the chunk)
+    if x.len() <= REDUCE_CHUNK {
+        return chunk_dot(x, y);
+    }
+    let nchunks = x.len().div_ceil(REDUCE_CHUNK);
+    let mut partials = vec![T::ZERO; nchunks];
+    if pool.threads() == 1 {
+        // same chunk partials in the same order, without boxing tasks
+        for ((p, xc), yc) in partials
+            .iter_mut()
+            .zip(x.chunks(REDUCE_CHUNK))
+            .zip(y.chunks(REDUCE_CHUNK))
+        {
+            *p = chunk_dot(xc, yc);
+        }
+    } else {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        for ((p, xc), yc) in partials
+            .iter_mut()
+            .zip(x.chunks(REDUCE_CHUNK))
+            .zip(y.chunks(REDUCE_CHUNK))
+        {
+            tasks.push(Box::new(move || *p = chunk_dot(xc, yc)));
+        }
+        pool.run(tasks);
+    }
+    tree_reduce(&partials)
+}
+
+/// One reduction chunk's partial ⟨x, y⟩ (sequential within the chunk —
+/// the canonical order both the serial and parallel paths share).
+fn chunk_dot<T: Scalar>(x: &[T], y: &[T]) -> T {
+    let mut s = T::ZERO;
+    for (a, b) in x.iter().zip(y) {
+        s += *a * *b;
+    }
+    s
+}
+
+/// Σ xᵢ² with the same deterministic reduction as [`dot`].
+pub fn sum_sq<T: Scalar>(pool: &KernelPool, x: &[T]) -> T {
+    dot(pool, x, x)
+}
+
+/// Global-pool entry points that touch the process-global pool only
+/// when the problem is large enough to parallelize. The small-op hot
+/// path — toy-MSE sweeps run millions of tiny GEMMs and inner
+/// products — stays free of the global `RwLock`, `Arc` traffic, and
+/// heap allocation; results are bit-identical to the pooled path
+/// either way.
+pub mod auto {
+    use super::*;
+    use crate::kernel::pool::global;
+
+    /// C += A·B; A m×k, B k×n, C m×n.
+    pub fn gemm_nn<T: Scalar>(a: &[T], b: &[T], c: &mut [T], m: usize, k: usize, n: usize) {
+        if m <= ROW_BLOCK || m * k * n <= PAR_GEMM_MIN_WORK {
+            assert_eq!(a.len(), m * k, "gemm_nn: A is not {m}x{k}");
+            assert_eq!(b.len(), k * n, "gemm_nn: B is not {k}x{n}");
+            assert_eq!(c.len(), m * n, "gemm_nn: C is not {m}x{n}");
+            gemm_nn_rows(a, b, c, m, k, n);
+        } else {
+            super::gemm_nn(&global(), a, b, c, m, k, n);
+        }
+    }
+
+    /// C += Aᵀ·B; A stored k×m, B k×n, C m×n.
+    pub fn gemm_tn<T: Scalar>(a: &[T], b: &[T], c: &mut [T], k: usize, m: usize, n: usize) {
+        if m <= ROW_BLOCK || m * k * n <= PAR_GEMM_MIN_WORK {
+            assert_eq!(a.len(), k * m, "gemm_tn: A is not {k}x{m}");
+            assert_eq!(b.len(), k * n, "gemm_tn: B is not {k}x{n}");
+            assert_eq!(c.len(), m * n, "gemm_tn: C is not {m}x{n}");
+            gemm_tn_rows(a, b, c, 0, m, k, m, n);
+        } else {
+            super::gemm_tn(&global(), a, b, c, k, m, n);
+        }
+    }
+
+    /// C += α·A·Bᵀ; A m×k, B n×k, C m×n.
+    pub fn gemm_nt<T: Scalar>(
+        alpha: T,
+        a: &[T],
+        b: &[T],
+        c: &mut [T],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) {
+        if m <= ROW_BLOCK || m * n * k <= PAR_GEMM_MIN_WORK {
+            assert_eq!(a.len(), m * k, "gemm_nt: A is not {m}x{k}");
+            assert_eq!(b.len(), n * k, "gemm_nt: B is not {n}x{k}");
+            assert_eq!(c.len(), m * n, "gemm_nt: C is not {m}x{n}");
+            gemm_nt_rows(alpha, a, b, c, m, n, k);
+        } else {
+            super::gemm_nt(&global(), alpha, a, b, c, m, n, k);
+        }
+    }
+
+    /// y += α·x.
+    pub fn axpy<T: Scalar>(alpha: T, x: &[T], y: &mut [T]) {
+        if y.len() <= ELEM_CHUNK {
+            assert_eq!(x.len(), y.len(), "axpy length mismatch");
+            for (yi, xi) in y.iter_mut().zip(x) {
+                *yi += alpha * *xi;
+            }
+        } else {
+            super::axpy(&global(), alpha, x, y);
+        }
+    }
+
+    /// x *= α.
+    pub fn scale<T: Scalar>(x: &mut [T], alpha: T) {
+        if x.len() <= ELEM_CHUNK {
+            for xi in x.iter_mut() {
+                *xi *= alpha;
+            }
+        } else {
+            super::scale(&global(), x, alpha);
+        }
+    }
+
+    /// ⟨x, y⟩ (deterministic chunked reduction).
+    pub fn dot<T: Scalar>(x: &[T], y: &[T]) -> T {
+        if x.len() <= REDUCE_CHUNK {
+            assert_eq!(x.len(), y.len(), "dot length mismatch");
+            chunk_dot(x, y)
+        } else {
+            super::dot(&global(), x, y)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strided panel primitives (serial — used inside factorization sweeps
+// whose outer structure is inherently sequential).
+// ---------------------------------------------------------------------------
+
+/// w[j] = Σᵢ x[i] · A[i0+i, j0+j] over a row-major matrix with leading
+/// dimension `ld` — the strided panel Aᵀx of a Householder update.
+#[allow(clippy::too_many_arguments)]
+pub fn gemv_t_strided<T: Scalar>(
+    a: &[T],
+    ld: usize,
+    i0: usize,
+    j0: usize,
+    rows: usize,
+    cols: usize,
+    x: &[T],
+    w: &mut [T],
+) {
+    assert_eq!(x.len(), rows, "gemv_t_strided: x length");
+    assert_eq!(w.len(), cols, "gemv_t_strided: w length");
+    for wj in w.iter_mut() {
+        *wj = T::ZERO;
+    }
+    for (i, &xi) in x.iter().enumerate() {
+        let arow = &a[(i0 + i) * ld + j0..(i0 + i) * ld + j0 + cols];
+        for (wj, &aij) in w.iter_mut().zip(arow) {
+            *wj += xi * aij;
+        }
+    }
+}
+
+/// A[i0+i, j0+j] −= x[i] · w[j] — strided rank-1 panel update.
+#[allow(clippy::too_many_arguments)]
+pub fn ger_sub_strided<T: Scalar>(
+    a: &mut [T],
+    ld: usize,
+    i0: usize,
+    j0: usize,
+    rows: usize,
+    cols: usize,
+    x: &[T],
+    w: &[T],
+) {
+    assert_eq!(x.len(), rows, "ger_sub_strided: x length");
+    assert_eq!(w.len(), cols, "ger_sub_strided: w length");
+    for (i, &xi) in x.iter().enumerate() {
+        let arow = &mut a[(i0 + i) * ld + j0..(i0 + i) * ld + j0 + cols];
+        for (aij, &wj) in arow.iter_mut().zip(w) {
+            *aij -= xi * wj;
+        }
+    }
+}
+
+/// Plane rotation of two contiguous rows: (x, y) ← (c·x + s·y, c·y − s·x).
+pub fn rot_rows<T: Scalar>(x: &mut [T], y: &mut [T], c: T, s: T) {
+    assert_eq!(x.len(), y.len(), "rot_rows length mismatch");
+    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+        let (xv, yv) = (*xi, *yi);
+        *xi = c * xv + s * yv;
+        *yi = c * yv - s * xv;
+    }
+}
+
+/// Plane rotation of two strided columns of a row-major matrix:
+/// (A[·,p], A[·,q]) ← (c·A[·,p] + s·A[·,q], c·A[·,q] − s·A[·,p]).
+pub fn rot_cols_strided<T: Scalar>(
+    a: &mut [T],
+    ld: usize,
+    p: usize,
+    q: usize,
+    rows: usize,
+    c: T,
+    s: T,
+) {
+    assert!(p < ld && q < ld, "rot_cols_strided: column out of stride");
+    for i in 0..rows {
+        let xp = a[i * ld + p];
+        let xq = a[i * ld + q];
+        a[i * ld + p] = c * xp + s * xq;
+        a[i * ld + q] = c * xq - s * xp;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arb<T: Scalar>(len: usize, seed: u64) -> Vec<T> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(13);
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                T::from_f64(((s >> 33) as f64) / (u32::MAX as f64) - 0.5)
+            })
+            .collect()
+    }
+
+    fn naive_nn(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_nn_matches_naive_on_ragged_shapes() {
+        let pool = KernelPool::new(3);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 3, 2), (70, 65, 33), (97, 31, 53)] {
+            let a: Vec<f64> = arb(m * k, 1);
+            let b: Vec<f64> = arb(k * n, 2);
+            let mut c = vec![0.0; m * n];
+            gemm_nn(&pool, &a, &b, &mut c, m, k, n);
+            let want = naive_nn(&a, &b, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-10, "{m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_consistent_with_nn() {
+        let pool = KernelPool::new(2);
+        let (m, k, n) = (37usize, 19usize, 23usize);
+        let a: Vec<f64> = arb(m * k, 3);
+        let b: Vec<f64> = arb(k * n, 4);
+        // tn: feed Aᵀ explicitly
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mut c_tn = vec![0.0; m * n];
+        gemm_tn(&pool, &at, &b, &mut c_tn, k, m, n);
+        // nt: feed Bᵀ explicitly
+        let mut bt = vec![0.0; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut c_nt = vec![0.0; m * n];
+        gemm_nt(&pool, 1.0f64, &a, &bt, &mut c_nt, m, n, k);
+        let want = naive_nn(&a, &b, m, k, n);
+        for i in 0..m * n {
+            assert!((c_tn[i] - want[i]).abs() < 1e-10);
+            assert!((c_nt[i] - want[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn serial_equals_parallel_bitwise() {
+        let (m, k, n) = (101usize, 43usize, 29usize); // primes: ragged blocks
+        let a: Vec<f32> = arb(m * k, 7);
+        let b: Vec<f32> = arb(k * n, 8);
+        let mut c_serial = vec![0.0f32; m * n];
+        serial::gemm_nn(&a, &b, &mut c_serial, m, k, n);
+        for threads in [1usize, 2, 4, 7] {
+            let pool = KernelPool::new(threads);
+            let mut c = vec![0.0f32; m * n];
+            gemm_nn(&pool, &a, &b, &mut c, m, k, n);
+            for (x, y) in c.iter().zip(&c_serial) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_alpha_scales() {
+        let pool = KernelPool::new(1);
+        let a = vec![1.0f32, 0.0, 0.0, 1.0]; // 2×2 identity
+        let b = vec![1.0f32, 2.0, 3.0, 4.0]; // 2×2
+        let mut c = vec![0.0f32; 4];
+        gemm_nt(&pool, -2.0f32, &a, &b, &mut c, 2, 2, 2);
+        // C = −2·A·Bᵀ = −2·Bᵀ
+        assert_eq!(c, vec![-2.0, -6.0, -4.0, -8.0]);
+    }
+
+    #[test]
+    fn dot_is_thread_count_independent_bitwise() {
+        let x: Vec<f64> = arb(3 * REDUCE_CHUNK + 777, 11);
+        let y: Vec<f64> = arb(3 * REDUCE_CHUNK + 777, 12);
+        let reference = dot(&KernelPool::new(1), &x, &y);
+        for threads in [2usize, 4, 7] {
+            let got = dot(&KernelPool::new(threads), &x, &y);
+            assert_eq!(got.to_bits(), reference.to_bits(), "threads={threads}");
+        }
+        // sanity vs plain sum
+        let plain: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((reference - plain).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tree_reduce_fixed_shape() {
+        assert_eq!(tree_reduce::<f64>(&[]), 0.0);
+        assert_eq!(tree_reduce(&[4.0f64]), 4.0);
+        assert_eq!(tree_reduce(&[1.0f64, 2.0, 3.0, 4.0, 5.0]), 15.0);
+    }
+
+    #[test]
+    fn axpy_scale_add_assign_elementwise() {
+        let pool = KernelPool::new(2);
+        let x: Vec<f32> = arb(ELEM_CHUNK * 2 + 5, 21);
+        let mut y: Vec<f32> = arb(ELEM_CHUNK * 2 + 5, 22);
+        let y0 = y.clone();
+        axpy(&pool, 0.5f32, &x, &mut y);
+        for i in 0..y.len() {
+            assert_eq!(y[i].to_bits(), (y0[i] + 0.5 * x[i]).to_bits());
+        }
+        add_assign(&pool, &mut y, &x);
+        scale(&pool, &mut y, 2.0f32);
+        for i in 0..y.len() {
+            assert_eq!(y[i].to_bits(), (((y0[i] + 0.5 * x[i]) + x[i]) * 2.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn branchless_core_propagates_nan_through_zeros() {
+        let pool = KernelPool::new(2);
+        // A row of zeros against a B with a NaN and an Inf: the products
+        // 0·NaN and 0·Inf are both NaN and must reach C.
+        let a = vec![0.0f64, 0.0];
+        let b = vec![1.0f64, f64::NAN, 2.0, 3.0, 4.0, f64::INFINITY];
+        let mut c = vec![0.0f64; 3];
+        gemm_nn(&pool, &a, &b, &mut c, 1, 2, 3);
+        assert!(!c[0].is_nan());
+        assert!(c[1].is_nan(), "0·NaN dropped");
+        assert!(c[2].is_nan(), "0·Inf dropped");
+    }
+
+    #[test]
+    fn strided_panel_primitives() {
+        // 3×4 matrix, panel at (1,1) of size 2×2
+        let mut a: Vec<f64> = (0..12).map(|i| i as f64).collect();
+        let x = vec![2.0, 3.0];
+        let mut w = vec![0.0; 2];
+        gemv_t_strided(&a, 4, 1, 1, 2, 2, &x, &mut w);
+        // w[0] = 2·a[1,1] + 3·a[2,1] = 2·5 + 3·9 = 37 ; w[1] = 2·6+3·10 = 42
+        assert_eq!(w, vec![37.0, 42.0]);
+        ger_sub_strided(&mut a, 4, 1, 1, 2, 2, &x, &w);
+        assert_eq!(a[5], 5.0 - 2.0 * 37.0);
+        assert_eq!(a[10], 10.0 - 3.0 * 42.0);
+        // untouched outside the panel
+        assert_eq!(a[0], 0.0);
+        assert_eq!(a[4], 4.0);
+    }
+
+    #[test]
+    fn rotations_are_orthogonal() {
+        let theta: f64 = 0.3;
+        let (s, c) = theta.sin_cos();
+        let mut x = vec![1.0, 0.0];
+        let mut y = vec![0.0, 1.0];
+        rot_rows(&mut x, &mut y, c, s);
+        // norms preserved
+        assert!((x[0] * x[0] + y[0] * y[0] - 1.0).abs() < 1e-12);
+        let mut m = vec![1.0f64, 0.0, 0.0, 1.0];
+        rot_cols_strided(&mut m, 2, 0, 1, 2, c, s);
+        assert!((m[0] - c).abs() < 1e-12);
+        assert!((m[1] + s).abs() < 1e-12);
+    }
+}

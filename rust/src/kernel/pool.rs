@@ -1,0 +1,324 @@
+//! Persistent worker pool for the kernel layer — `std::thread` +
+//! channel-style queueing, no external dependencies.
+//!
+//! Design constraints (they shape everything here):
+//!
+//! * **Determinism.** The pool never influences *what* is computed, only
+//!   *when*. Callers split work into tasks whose outputs are disjoint
+//!   (row blocks of C, fixed-size reduction chunks), so any execution
+//!   order — including fully serial — produces bitwise-identical
+//!   results. `threads = 1` runs every task inline on the caller,
+//!   which *is* the serial baseline.
+//! * **No idle deadlock.** [`KernelPool::run`] is a fork-join scope: the
+//!   calling thread helps drain the shared queue before blocking on the
+//!   completion latch, so nested `run` calls (a fan-out task that itself
+//!   uses the pool) always make progress even when every worker is busy.
+//! * **Persistence.** Workers are spawned once and reused; the global
+//!   pool lives for the process (size from `--threads` /
+//!   `LOWRANK_THREADS`, default: available parallelism).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Queue + wakeup state shared between the pool handle and its workers.
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Completion latch for one `run` scope.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => j(),
+            None => return,
+        }
+    }
+}
+
+/// A fixed-size persistent worker pool. `threads` counts the calling
+/// thread: a pool of size N spawns N − 1 workers, and size 1 spawns
+/// none (every `run` executes inline — the serial baseline).
+pub struct KernelPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl KernelPool {
+    /// Build a pool with `threads` total lanes of parallelism
+    /// (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (1..threads)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        KernelPool { shared, workers, threads }
+    }
+
+    /// Total parallelism (workers + the participating caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run a batch of tasks to completion (fork-join). Tasks may borrow
+    /// caller state: `run` does not return until every task finished.
+    ///
+    /// With one task, or on a single-thread pool, tasks execute inline
+    /// in order — this is the path the determinism tests compare the
+    /// parallel runs against. A panicking task poisons the batch: the
+    /// remaining tasks still run, then the first panic payload is
+    /// rethrown on the caller (original message intact).
+    pub fn run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        if self.threads == 1 || tasks.len() == 1 {
+            for t in tasks {
+                t();
+            }
+            return;
+        }
+
+        type Payload = Box<dyn std::any::Any + Send>;
+        let latch = Arc::new(Latch::new(tasks.len()));
+        let first_panic: Arc<Mutex<Option<Payload>>> = Arc::new(Mutex::new(None));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in tasks {
+                // SAFETY: every job finishes (latch) before `run`
+                // returns, so borrows scoped to 'scope outlive the job.
+                let t: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(t) };
+                let latch = latch.clone();
+                let first_panic = first_panic.clone();
+                q.push_back(Box::new(move || {
+                    if let Err(payload) =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(t))
+                    {
+                        let mut slot = first_panic.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                    }
+                    latch.count_down();
+                }));
+            }
+            self.shared.work_cv.notify_all();
+        }
+
+        // Help drain the queue (our own tasks, or a nested scope's)
+        // before blocking — this is what makes nested `run` calls safe.
+        loop {
+            let job = self.shared.queue.lock().unwrap().pop_front();
+            match job {
+                Some(j) => j(),
+                None => break,
+            }
+        }
+        latch.wait();
+        let payload = first_panic.lock().unwrap().take();
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pool size when nothing was configured: `LOWRANK_THREADS` if set and
+/// ≥ 1, else the machine's available parallelism.
+fn default_threads() -> usize {
+    std::env::var("LOWRANK_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+static GLOBAL: OnceLock<RwLock<Arc<KernelPool>>> = OnceLock::new();
+
+fn global_cell() -> &'static RwLock<Arc<KernelPool>> {
+    GLOBAL.get_or_init(|| RwLock::new(Arc::new(KernelPool::new(default_threads()))))
+}
+
+/// The process-wide pool every convenience wrapper uses. Cheap to call
+/// (one `Arc` clone).
+pub fn global() -> Arc<KernelPool> {
+    global_cell().read().unwrap().clone()
+}
+
+/// Replace the global pool with one of `threads` lanes (no-op when the
+/// size already matches). In-flight users keep the old pool via their
+/// `Arc` until they finish — determinism makes the handoff benign.
+pub fn set_global_threads(threads: usize) {
+    let threads = threads.max(1);
+    let mut w = global_cell().write().unwrap();
+    if w.threads() != threads {
+        *w = Arc::new(KernelPool::new(threads));
+    }
+}
+
+/// Current global pool size.
+pub fn global_threads() -> usize {
+    global().threads()
+}
+
+/// Serializes tests that assert on the *size* of the global pool (its
+/// results are thread-count-independent, but `global_threads()` is not).
+#[cfg(test)]
+pub(crate) static GLOBAL_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+#[cfg(test)]
+pub(crate) fn global_test_guard() -> std::sync::MutexGuard<'static, ()> {
+    GLOBAL_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn counting_tasks<'a>(
+        counter: &'a AtomicUsize,
+        n: usize,
+    ) -> Vec<Box<dyn FnOnce() + Send + 'a>> {
+        (0..n)
+            .map(|_| {
+                let b: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+                b
+            })
+            .collect()
+    }
+
+    #[test]
+    fn runs_every_task_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = KernelPool::new(threads);
+            let counter = AtomicUsize::new(0);
+            pool.run(counting_tasks(&counter, 23));
+            assert_eq!(counter.load(Ordering::SeqCst), 23, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tasks_can_write_disjoint_borrows() {
+        let pool = KernelPool::new(4);
+        let mut out = vec![0usize; 40];
+        {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (i, chunk) in out.chunks_mut(7).enumerate() {
+                tasks.push(Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = i * 100 + j;
+                    }
+                }));
+            }
+            pool.run(tasks);
+        }
+        for (idx, &v) in out.iter().enumerate() {
+            assert_eq!(v, (idx / 7) * 100 + idx % 7);
+        }
+    }
+
+    #[test]
+    fn nested_run_completes() {
+        let pool = Arc::new(KernelPool::new(3));
+        let counter = AtomicUsize::new(0);
+        {
+            let mut outer: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for _ in 0..4 {
+                let pool = pool.clone();
+                let counter = &counter;
+                outer.push(Box::new(move || {
+                    pool.run(counting_tasks(counter, 5));
+                }));
+            }
+            pool.run(outer);
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn task_panic_rethrows_original_payload() {
+        let pool = KernelPool::new(2);
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+        tasks.push(Box::new(|| panic!("boom")));
+        tasks.push(Box::new(|| {}));
+        pool.run(tasks);
+    }
+
+    #[test]
+    fn global_pool_resizes() {
+        let _guard = global_test_guard();
+        let prev = global_threads();
+        set_global_threads(3);
+        assert_eq!(global_threads(), 3);
+        set_global_threads(1);
+        assert_eq!(global_threads(), 1);
+        set_global_threads(0); // clamped
+        assert_eq!(global_threads(), 1);
+        set_global_threads(prev); // restore for other tests
+    }
+}

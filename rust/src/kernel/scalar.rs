@@ -1,0 +1,94 @@
+//! The [`Scalar`] abstraction: the one place where "a float the kernel
+//! layer can compute with" is defined.
+//!
+//! Every dense kernel in [`crate::kernel`] is written once, generically
+//! over `Scalar`, and instantiated for `f32` (the training hot path) and
+//! `f64` (the estimator/theory stack). The bounds are deliberately
+//! minimal — plain IEEE arithmetic plus the constants the kernels need —
+//! so the generic code monomorphizes to exactly the loops the old
+//! hand-rolled per-precision kernels contained.
+
+use std::fmt::Debug;
+use std::ops::{Add, AddAssign, Mul, MulAssign, Sub, SubAssign};
+
+/// An IEEE float the kernel layer operates on (`f32` or `f64`).
+pub trait Scalar:
+    Copy
+    + Debug
+    + PartialEq
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+{
+    const ZERO: Self;
+    const ONE: Self;
+
+    /// Lossy conversion from f64 (used by tests and mixed-precision
+    /// call sites; f64 → f32 rounds to nearest).
+    fn from_f64(x: f64) -> Self;
+
+    /// Widening conversion to f64 (exact for both instances).
+    fn to_f64(self) -> f64;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn generic_fma<T: Scalar>(a: T, b: T, c: T) -> T {
+        a * b + c
+    }
+
+    #[test]
+    fn both_instances_compute() {
+        assert_eq!(generic_fma(2.0f32, 3.0, 1.0), 7.0);
+        assert_eq!(generic_fma(2.0f64, 3.0, 1.0), 7.0);
+        assert_eq!(f32::from_f64(0.5), 0.5f32);
+        assert_eq!(1.25f32.to_f64(), 1.25f64);
+    }
+
+    #[test]
+    fn nan_propagates_through_generic_arithmetic() {
+        // the kernel core is branchless exactly so this holds
+        let x = generic_fma(f64::ZERO, f64::NAN, 1.0);
+        assert!(x.is_nan());
+        let y = generic_fma(0.0f32, f32::INFINITY, 1.0);
+        assert!(y.is_nan());
+    }
+}

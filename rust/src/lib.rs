@@ -13,6 +13,15 @@
 //!   `LATEST` pointer, retention, bit-exact state round-trip), the MSE
 //!   theory + toy experiments ([`estimator`]), and the experiment
 //!   harnesses ([`exp`]).
+//! * **L3 compute substrate** — [`kernel`]: the one Scalar-generic
+//!   (f32/f64) dense compute layer — blocked GEMM, AXPY/scale,
+//!   deterministic reductions, strided panel primitives — running on a
+//!   persistent thread pool whose parallel results are **bitwise
+//!   identical to serial at any thread count**. [`linalg`] (f64 `Mat`
+//!   ops, QR, Jacobi eig), [`model`] (f32 lift/ZO tensors), the
+//!   [`projection`] batch sampler, and the [`coordinator`] slot fan-out
+//!   + DDP all-reduce are all thin layers over it; `--threads N` /
+//!   `LOWRANK_THREADS` size the pool.
 //! * **L2/L1 (python/, build-time only)** — JAX model graphs and Pallas
 //!   kernels, lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
 //!
@@ -35,6 +44,7 @@ pub mod coordinator;
 pub mod data;
 pub mod estimator;
 pub mod exp;
+pub mod kernel;
 pub mod linalg;
 pub mod model;
 pub mod optim;

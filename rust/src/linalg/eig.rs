@@ -8,6 +8,7 @@
 //! constraint E[P] = cI relies on exactly.
 
 use super::Mat;
+use crate::kernel;
 
 /// Result of [`sym_eig`]: `a ≈ q · diag(values) · qᵀ`, eigenvalues sorted
 /// in **descending** order (σ₁ ≥ … ≥ σ_n, the paper's convention).
@@ -52,25 +53,17 @@ pub fn sym_eig(a: &Mat) -> EigDecomp {
                 // rotation angle: tan(2θ) = 2apq / (app − aqq)
                 let theta = 0.5 * (2.0 * apq).atan2(app - aqq);
                 let (s, c) = theta.sin_cos();
-                // apply Jᵀ M J where J rotates the (p, r) plane
-                for k in 0..n {
-                    let mkp = m.get(k, p);
-                    let mkq = m.get(k, r);
-                    m.set(k, p, c * mkp + s * mkq);
-                    m.set(k, r, -s * mkp + c * mkq);
+                // apply Jᵀ M J where J rotates the (p, r) plane — the
+                // column/row sweeps are the kernel's plane-rotation
+                // primitives (strided for columns, contiguous for rows)
+                kernel::rot_cols_strided(&mut m.data, n, p, r, n, c, s);
+                {
+                    let (lo, hi) = m.data.split_at_mut(r * n);
+                    let rowp = &mut lo[p * n..(p + 1) * n];
+                    let rowr = &mut hi[..n];
+                    kernel::rot_rows(rowp, rowr, c, s);
                 }
-                for k in 0..n {
-                    let mpk = m.get(p, k);
-                    let mqk = m.get(r, k);
-                    m.set(p, k, c * mpk + s * mqk);
-                    m.set(r, k, -s * mpk + c * mqk);
-                }
-                for k in 0..n {
-                    let qkp = q.get(k, p);
-                    let qkq = q.get(k, r);
-                    q.set(k, p, c * qkp + s * qkq);
-                    q.set(k, r, -s * qkp + c * qkq);
-                }
+                kernel::rot_cols_strided(&mut q.data, n, p, r, n, c, s);
             }
         }
     }

@@ -1,4 +1,5 @@
-//! Dense linear algebra substrate (f64, row-major).
+//! Dense f64 linear algebra (row-major [`Mat`]) — a thin layer over the
+//! [`crate::kernel`] compute substrate.
 //!
 //! The paper's samplers and theory need: blocked GEMM (everything),
 //! Householder thin-QR with sign correction (Algorithm 2, Haar–Stiefel),
@@ -6,6 +7,14 @@
 //! and Frobenius/spectral norms (Proposition 1, eq. 12). We implement all
 //! of it here rather than pulling a BLAS/LAPACK dependency: the estimator
 //! stack must be auditable and deterministic across platforms.
+//!
+//! Since the kernel refactor this module owns **no dense loops of its
+//! own**: GEMM/AXPY/scale/reductions live once in [`crate::kernel`]
+//! (shared with the f32 training path) and run on the global kernel
+//! pool; the QR panel updates and Jacobi sweeps use the kernel's
+//! strided panel/rotation primitives, which are serial (the
+//! factorizations' outer structure is inherently sequential). Either
+//! way, results are bitwise-deterministic in the thread count.
 
 mod ops;
 mod qr;
@@ -135,11 +144,9 @@ impl Mat {
             .fold(0.0, f64::max)
     }
 
-    /// In-place scale by a scalar.
+    /// In-place scale by a scalar (kernel substrate).
     pub fn scale_inplace(&mut self, s: f64) {
-        for v in &mut self.data {
-            *v *= s;
-        }
+        crate::kernel::auto::scale(&mut self.data, s);
     }
 
     /// Return a scaled copy.
@@ -149,12 +156,10 @@ impl Mat {
         m
     }
 
-    /// self += s * other (axpy).
+    /// self += s * other (axpy, kernel substrate).
     pub fn axpy_inplace(&mut self, s: f64, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += s * b;
-        }
+        crate::kernel::auto::axpy(s, &other.data, &mut self.data);
     }
 
     /// Elementwise difference.

@@ -1,22 +1,23 @@
-//! Matrix products and norms.
+//! Matrix products and norms — thin f64 wrappers over the
+//! [`crate::kernel`] substrate.
 //!
-//! `matmul` is a cache-blocked, k-innermost GEMM — the single hot path of
-//! the rust-side estimator stack (toy experiments run millions of
-//! `m×n · n×r` products). The blocking mirrors the L1 Pallas kernel's
-//! BlockSpec schedule: a tile of A and a panel of B stay resident while a
-//! C tile accumulates.
+//! Since the kernel refactor this module owns no GEMM loops of its own:
+//! `matmul`/`matmul_tn`/`matmul_nt`/`matvec` all delegate to the shared
+//! Scalar-generic blocked kernels, which run on the global
+//! [`crate::kernel::KernelPool`] and are bitwise-deterministic across
+//! thread counts. The kernels are branchless over the data — the old
+//! `if aik == 0.0 { continue; }` zero-skip silently swallowed NaN/Inf
+//! coming from B (0·NaN must be NaN); the regression tests below pin
+//! the fixed behavior.
 
 use super::Mat;
+use crate::kernel;
 
-/// Cache-block edge (f64 elements). 64×64×8B = 32 KB per tile, three tiles
-/// comfortably fit in a 256 KB L2.
-const BLOCK: usize = 64;
-
-/// C = A · B (blocked GEMM).
+/// C = A · B (blocked GEMM on the kernel pool).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch: {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
     let mut c = Mat::zeros(a.rows, b.cols);
-    matmul_into(a, b, &mut c);
+    matmul_acc(a, b, &mut c);
     c
 }
 
@@ -24,32 +25,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 pub fn matmul_acc(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
-        for k0 in (0..k).step_by(BLOCK) {
-            let k1 = (k0 + BLOCK).min(k);
-            for j0 in (0..n).step_by(BLOCK) {
-                let j1 = (j0 + BLOCK).min(n);
-                for i in i0..i1 {
-                    let arow = &a.data[i * k..(i + 1) * k];
-                    let crow = &mut c.data[i * n..(i + 1) * n];
-                    for kk in k0..k1 {
-                        let aik = arow[kk];
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = &b.data[kk * n..(kk + 1) * n];
-                        // innermost j loop: contiguous in both B and C,
-                        // auto-vectorizes.
-                        for j in j0..j1 {
-                            crow[j] += aik * brow[j];
-                        }
-                    }
-                }
-            }
-        }
-    }
+    kernel::auto::gemm_nn(&a.data, &b.data, &mut c.data, a.rows, a.cols, b.cols);
 }
 
 /// C = A · B into a pre-allocated (zeroed here) output.
@@ -72,50 +48,24 @@ pub fn transpose(a: &Mat) -> Mat {
 /// C = Aᵀ · B without materializing Aᵀ.
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
-    let (k, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
-    // (AᵀB)_{ij} = Σ_k A_{ki} B_{kj}; iterate k outer so both reads stream.
-    for kk in 0..k {
-        let arow = &a.data[kk * m..(kk + 1) * m];
-        let brow = &b.data[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let aki = arow[i];
-            if aki == 0.0 {
-                continue;
-            }
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += aki * brow[j];
-            }
-        }
-    }
+    let mut c = Mat::zeros(a.cols, b.cols);
+    kernel::auto::gemm_tn(&a.data, &b.data, &mut c.data, a.rows, a.cols, b.cols);
     c
 }
 
 /// C = A · Bᵀ without materializing Bᵀ.
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            let mut s = 0.0;
-            for kk in 0..k {
-                s += arow[kk] * brow[kk];
-            }
-            crow[j] = s;
-        }
-    }
+    let mut c = Mat::zeros(a.rows, b.rows);
+    kernel::auto::gemm_nt(1.0, &a.data, &b.data, &mut c.data, a.rows, b.rows, a.cols);
     c
 }
 
-/// Frobenius inner product ⟨A, B⟩ = tr(AᵀB).
+/// Frobenius inner product ⟨A, B⟩ = tr(AᵀB) (deterministic chunked
+/// reduction on the kernel pool).
 pub fn fro_inner(a: &Mat, b: &Mat) -> f64 {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols));
-    a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum()
+    kernel::auto::dot(&a.data, &b.data)
 }
 
 /// tr(A·B) for square A·B without forming the product.
@@ -145,24 +95,9 @@ pub fn spectral_norm(a: &Mat, iters: usize) -> f64 {
     v.iter_mut().for_each(|x| *x /= norm);
     let mut sigma_sq = 0.0;
     for _ in 0..iters {
-        // w = Av ; v' = Aᵀw
-        let mut w = vec![0.0; a.rows];
-        for i in 0..a.rows {
-            let arow = a.row(i);
-            let mut s = 0.0;
-            for j in 0..n {
-                s += arow[j] * v[j];
-            }
-            w[i] = s;
-        }
-        let mut v2 = vec![0.0; n];
-        for i in 0..a.rows {
-            let arow = a.row(i);
-            let wi = w[i];
-            for j in 0..n {
-                v2[j] += arow[j] * wi;
-            }
-        }
+        // w = Av ; v' = Aᵀw — both through the kernel GEMV paths
+        let w = matvec(a, &v);
+        let mut v2 = matvec_t(a, &w);
         norm = (v2.iter().map(|x| x * x).sum::<f64>()).sqrt();
         if norm == 0.0 {
             return 0.0;
@@ -174,25 +109,19 @@ pub fn spectral_norm(a: &Mat, iters: usize) -> f64 {
     sigma_sq.sqrt()
 }
 
-/// A · v for a vector v.
+/// A · v for a vector v (GEMM with n = 1).
 pub fn matvec(a: &Mat, v: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols, v.len());
-    (0..a.rows)
-        .map(|i| a.row(i).iter().zip(v).map(|(x, y)| x * y).sum())
-        .collect()
+    let mut out = vec![0.0; a.rows];
+    kernel::auto::gemm_nn(&a.data, v, &mut out, a.rows, a.cols, 1);
+    out
 }
 
-/// Aᵀ · v for a vector v.
+/// Aᵀ · v for a vector v (transposed GEMM with n = 1).
 pub fn matvec_t(a: &Mat, v: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows, v.len());
     let mut out = vec![0.0; a.cols];
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        let vi = v[i];
-        for j in 0..a.cols {
-            out[j] += arow[j] * vi;
-        }
-    }
+    kernel::auto::gemm_tn(&a.data, v, &mut out, a.rows, a.cols, 1);
     out
 }
 
@@ -297,5 +226,32 @@ mod tests {
     #[test]
     fn zero_matrix_spectral_norm_is_zero() {
         assert_eq!(spectral_norm(&Mat::zeros(5, 5), 50), 0.0);
+    }
+
+    #[test]
+    fn nan_in_b_propagates_through_zero_rows_of_a() {
+        // Regression: the pre-kernel GEMM skipped `aik == 0.0` terms, so
+        // a zero row of A masked NaN/Inf in B. 0·NaN = NaN and
+        // 0·∞ = NaN must reach C in every variant.
+        let a = Mat::from_rows(2, 2, &[0.0, 0.0, 1.0, 1.0]);
+        let b = Mat::from_rows(2, 3, &[1.0, f64::NAN, 2.0, 3.0, 4.0, f64::INFINITY]);
+
+        let c = matmul(&a, &b);
+        assert!(!c.get(0, 0).is_nan(), "finite column stays finite");
+        assert!(c.get(0, 1).is_nan(), "matmul dropped 0·NaN");
+        assert!(c.get(0, 2).is_nan(), "matmul dropped 0·Inf");
+        assert!(c.get(1, 1).is_nan());
+
+        // Aᵀ has a zero column ⇒ zero coefficients hit B's NaN column.
+        let at = Mat::from_rows(2, 2, &[0.0, 1.0, 0.0, 1.0]);
+        let ct = matmul_tn(&at, &b);
+        assert!(ct.get(0, 1).is_nan(), "matmul_tn dropped 0·NaN");
+        assert!(ct.get(0, 2).is_nan(), "matmul_tn dropped 0·Inf");
+
+        // nt: B row with NaN against zero A row.
+        let bn = Mat::from_rows(2, 2, &[f64::NAN, 1.0, 2.0, 3.0]);
+        let cn = matmul_nt(&a, &bn); // 2×2 · (2×2)ᵀ
+        assert!(cn.get(0, 0).is_nan(), "matmul_nt dropped 0·NaN");
+        assert!(cn.get(1, 0).is_nan());
     }
 }

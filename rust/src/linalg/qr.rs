@@ -8,6 +8,7 @@
 //! has i.i.d. Gaussian entries (Stewart 1980; paper Algorithm 2, step 3).
 
 use super::{ops, Mat};
+use crate::kernel;
 
 /// Result of [`thin_qr`].
 pub struct QrFactors {
@@ -45,18 +46,15 @@ pub fn thin_qr(g: &Mat) -> QrFactors {
             }
             let vnorm_sq: f64 = v[k..].iter().map(|x| x * x).sum();
             if vnorm_sq > 0.0 {
-                // Apply H = I − 2vvᵀ/‖v‖² to A[k.., k..].
-                for j in k..r {
-                    let mut dot = 0.0;
-                    for i in k..n {
-                        dot += v[i] * a.get(i, j);
-                    }
-                    let f = 2.0 * dot / vnorm_sq;
-                    for i in k..n {
-                        let val = a.get(i, j) - f * v[i];
-                        a.set(i, j, val);
-                    }
+                // Apply H = I − 2vvᵀ/‖v‖² to the panel A[k.., k..]:
+                // w = Aᵀv, scale by 2/‖v‖², then the rank-1 downdate —
+                // both through the kernel's strided panel primitives.
+                let mut w = vec![0.0; r - k];
+                kernel::gemv_t_strided(&a.data, r, k, k, n - k, r - k, &v[k..], &mut w);
+                for wj in &mut w {
+                    *wj = 2.0 * *wj / vnorm_sq;
                 }
+                kernel::ger_sub_strided(&mut a.data, r, k, k, n - k, r - k, &v[k..], &w);
             }
         }
         vs.push(v);
@@ -82,17 +80,13 @@ pub fn thin_qr(g: &Mat) -> QrFactors {
         if vnorm_sq == 0.0 {
             continue;
         }
-        for j in 0..r {
-            let mut dot = 0.0;
-            for i in k..n {
-                dot += v[i] * q.get(i, j);
-            }
-            let f = 2.0 * dot / vnorm_sq;
-            for i in k..n {
-                let val = q.get(i, j) - f * v[i];
-                q.set(i, j, val);
-            }
+        // Same panel update, applied to all r columns of Q.
+        let mut w = vec![0.0; r];
+        kernel::gemv_t_strided(&q.data, r, k, 0, n - k, r, &v[k..], &mut w);
+        for wj in &mut w {
+            *wj = 2.0 * *wj / vnorm_sq;
         }
+        kernel::ger_sub_strided(&mut q.data, r, k, 0, n - k, r, &v[k..], &w);
     }
 
     // Sign fix (Algorithm 2 step 3): D = diag(sgn(diag(R))), Q ← QD, R ← DR.

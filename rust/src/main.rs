@@ -8,13 +8,22 @@
 //! lowrank-sge exp pretrain  --scale s|m|l [--steps N] [--quick]
 //! lowrank-sge exp all       [--quick]
 //! lowrank-sge pretrain      --scale s [--sampler stiefel] [--steps N] [--workers W]
-//!                           [--save-every N] [--ckpt-dir D] [--keep-last K]
-//!                           [--resume [latest|<step>]] …
+//!                           [--threads T] [--save-every N] [--ckpt-dir D]
+//!                           [--keep-last K] [--resume [latest|<step>]] …
 //! lowrank-sge finetune      --task sst2 --method stiefel-lowrank-lr [--steps N]
-//!                           [--save-every N] [--ckpt-dir D] [--keep-last K]
-//!                           [--resume [latest|<step>]] …
+//!                           [--threads T] [--save-every N] [--ckpt-dir D]
+//!                           [--keep-last K] [--resume [latest|<step>]] …
 //! lowrank-sge inspect                                        # list artifacts
 //! ```
+//!
+//! Parallelism: `--threads T` (every subcommand; config keys
+//! `pretrain.threads` / `finetune.threads`) sizes the kernel compute
+//! pool that all dense math — GEMM, samplers, per-matrix optimizer
+//! fan-out, DDP all-reduce — runs on. Default (0): the
+//! `LOWRANK_THREADS` env var, else the machine's available
+//! parallelism. **Determinism guarantee:** results are bitwise
+//! identical at every thread count — `--threads 1` and `--threads 64`
+//! produce the same losses, parameters, and checkpoint shards.
 //!
 //! Checkpointing: `--save-every N --ckpt-dir D` commits the full
 //! training state (Θ, subspace B/V, Adam moments, RNG stream) every N
@@ -75,6 +84,10 @@ fn main() -> Result<()> {
 
 fn run_exp(sub: &str, args: &ArgMap) -> Result<()> {
     let quick = args.has_flag("quick");
+    let threads = args.threads_or(0);
+    if threads > 0 {
+        lowrank_sge::kernel::set_global_threads(threads);
+    }
     let results = exp::results_dir();
     match sub {
         "toy-mse" => {
@@ -282,11 +295,17 @@ fn cmd_pretrain(args: &ArgMap) -> Result<()> {
         workers: args.usize_or("workers", file.i64_or("pretrain.workers", 1) as usize),
         eval_every: args.u64_or("eval-every", file.i64_or("pretrain.eval_every", 25) as u64),
         eval_batches: args.usize_or("eval-batches", 2),
+        threads: args.threads_or(file.usize_or("pretrain.threads", 0)),
         ckpt: ckpt_options(args, &file, "pretrain")?,
     };
     println!(
-        "pretrain scale={} sampler={} steps={} K={} workers={}",
-        cfg.scale, sampler.name(), cfg.steps, cfg.k_interval, cfg.workers
+        "pretrain scale={} sampler={} steps={} K={} workers={} threads={}",
+        cfg.scale,
+        sampler.name(),
+        cfg.steps,
+        cfg.k_interval,
+        cfg.workers,
+        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() }
     );
     if let Some(resume) = cfg.ckpt.resume {
         println!("resuming from {resume} in {:?}", cfg.ckpt.dir.as_ref().unwrap());
@@ -339,6 +358,7 @@ fn cmd_finetune(args: &ArgMap) -> Result<()> {
         c: args.f64_or("c", 1.0),
         seed: args.u64_or("seed", 2026),
         eval_examples: args.usize_or("eval-examples", 256),
+        threads: args.threads_or(file.usize_or("finetune.threads", 0)),
         ckpt: ckpt_options(args, &file, "finetune")?,
     };
     println!("finetune task={} method={} steps={}", cfg.task, method.name(), cfg.steps);

@@ -1,9 +1,11 @@
 //! Run-time model state: parameter store, f32 tensor math for the lift,
 //! and the Table-2 memory accounting.
 //!
-//! * [`tensor`] — minimal f32 kernels Rust needs on the hot path: the
-//!   rank-r lift ΔΘ = B·Vᵀ (O(mnr), once per K steps) and the ZO update
-//!   direction. Everything heavy runs inside the PJRT artifacts.
+//! * [`tensor`] — the f32 hot-path entry points (rank-r lift
+//!   ΔΘ = B·Vᵀ, once per K steps, and the ZO update direction), now
+//!   thin wrappers over the shared [`crate::kernel`] GEMM substrate —
+//!   no standalone dense loops live here. Everything heavier runs
+//!   inside the PJRT artifacts.
 //! * [`store`] — [`ParamStore`]: the ordered set of named parameter
 //!   tensors matching an artifact manifest's `params` slots, loadable
 //!   from the `artifacts/init/<tag>/` dumps so Rust and Python agree on

@@ -76,6 +76,38 @@ impl ParamStore {
         self.tensors[i].as_f32()
     }
 
+    /// Disjoint mutable f32 views of several store positions at once —
+    /// the borrow split the coordinator's per-slot fan-out needs to
+    /// update every matrix in parallel. Positions must be unique; the
+    /// returned views are in `positions` order.
+    pub fn f32_mut_many(&mut self, positions: &[usize]) -> Result<Vec<&mut [f32]>> {
+        let len = self.tensors.len();
+        let mut wanted = vec![false; len];
+        for &p in positions {
+            if p >= len {
+                bail!("param position {p} out of range (store has {len})");
+            }
+            if wanted[p] {
+                bail!("duplicate param position {p} in f32_mut_many");
+            }
+            wanted[p] = true;
+        }
+        let mut views: Vec<Option<&mut [f32]>> = self
+            .tensors
+            .iter_mut()
+            .enumerate()
+            .map(|(i, t)| if wanted[i] { t.as_f32_mut().ok() } else { None })
+            .collect();
+        positions
+            .iter()
+            .map(|&p| {
+                views[p]
+                    .take()
+                    .with_context(|| format!("param {p} is not an f32 tensor"))
+            })
+            .collect()
+    }
+
     pub fn shape(&self, i: usize) -> &[usize] {
         &self.specs[i].shape
     }
@@ -246,6 +278,19 @@ mod tests {
         ];
         let mut other = ParamStore::for_test(bad_specs, bad_tensors);
         assert!(other.load_state(&sd).is_err());
+    }
+
+    #[test]
+    fn f32_mut_many_returns_disjoint_views_in_order() {
+        let mut s = toy_store();
+        {
+            let views = s.f32_mut_many(&[1, 0]).unwrap();
+            assert_eq!(views.len(), 2);
+            assert_eq!(views[0].len(), 4); // position 1 first
+            assert_eq!(views[1].len(), 8);
+        }
+        assert!(s.f32_mut_many(&[0, 0]).is_err(), "duplicates rejected");
+        assert!(s.f32_mut_many(&[9]).is_err(), "out of range rejected");
     }
 
     #[test]

@@ -1,28 +1,20 @@
-//! Minimal f32 tensor kernels for the L3 hot path.
+//! f32 tensor entry points for the L3 hot path — thin wrappers over the
+//! [`crate::kernel`] substrate.
 //!
 //! The only dense math Rust does per training step is O(m·r) optimizer
 //! updates; the O(m·n·r) lift runs once per K steps (Algorithm 1 line
-//! 8). Both are implemented here with the same k-innermost blocking as
-//! the f64 `linalg` GEMM.
+//! 8). Since the kernel refactor this module contains **no GEMM loops
+//! of its own**: both entry points delegate to the shared
+//! Scalar-generic `gemm_nt` kernel (the same code the f64 `linalg`
+//! stack uses), which runs on the global kernel pool and is bitwise
+//! identical at every thread count.
+
+use crate::kernel;
 
 /// C += A·Bᵀ with A (m×r), B (n×r), C (m×n), all row-major f32.
 /// This is exactly the lift ΔΘ = B_aux·Vᵀ with A = B_aux, B = V.
 pub fn gemm_nt_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, r: usize) {
-    assert_eq!(a.len(), m * r);
-    assert_eq!(b.len(), n * r);
-    assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * r..(i + 1) * r];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * r..(j + 1) * r];
-            let mut s = 0.0f32;
-            for k in 0..r {
-                s += arow[k] * brow[k];
-            }
-            crow[j] += s;
-        }
-    }
+    kernel::auto::gemm_nt(1.0f32, a, b, c, m, n, r);
 }
 
 /// Θ += B_aux·Vᵀ — the Algorithm 1 outer update, in place.
@@ -32,7 +24,8 @@ pub fn lift_into(theta: &mut [f32], b_aux: &[f32], v: &[f32], m: usize, n: usize
 
 /// Θ += scale·Z·Vᵀ — the ZO/LR update direction lifted to the full
 /// space (used by the Vanilla-LR trainer where the estimator is
-/// scale·Z·Vᵀ with scale = (F⁺−F⁻)/(2σ)).
+/// scale·Z·Vᵀ with scale = (F⁺−F⁻)/(2σ)). The scaling is fused into the
+/// kernel's α so the rank-r product is formed exactly once.
 pub fn zo_update_into(
     theta: &mut [f32],
     z: &[f32],
@@ -42,21 +35,7 @@ pub fn zo_update_into(
     n: usize,
     r: usize,
 ) {
-    assert_eq!(z.len(), m * r);
-    assert_eq!(v.len(), n * r);
-    assert_eq!(theta.len(), m * n);
-    for i in 0..m {
-        let zrow = &z[i * r..(i + 1) * r];
-        let trow = &mut theta[i * n..(i + 1) * n];
-        for j in 0..n {
-            let vrow = &v[j * r..(j + 1) * r];
-            let mut s = 0.0f32;
-            for k in 0..r {
-                s += zrow[k] * vrow[k];
-            }
-            trow[j] += scale * s;
-        }
-    }
+    kernel::auto::gemm_nt(scale, z, v, theta, m, n, r);
 }
 
 #[cfg(test)]
@@ -121,5 +100,18 @@ mod tests {
         for (got, want) in c.iter().zip(&want.data) {
             assert!((*got as f64 - want).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn zo_update_propagates_nan_from_v() {
+        // branchless kernel: a NaN in V must reach Θ even when Z is zero
+        let (m, n, r) = (2, 2, 1);
+        let z = vec![0.0f32, 1.0];
+        let v = vec![f32::NAN, 1.0];
+        let mut theta = vec![0.0f32; m * n];
+        zo_update_into(&mut theta, &z, &v, 1.0, m, n, r);
+        assert!(theta[0].is_nan()); // 0·NaN
+        assert!(theta[2].is_nan()); // 1·NaN
+        assert!(!theta[3].is_nan());
     }
 }

@@ -12,6 +12,9 @@
 //!
 //! Training code treats a sampler as a policy object: the HLO artifacts
 //! take V as a runtime input, so swapping laws never recompiles anything.
+//! Multi-matrix draws go through [`sample_batch`], which forks one child
+//! RNG stream per request and fans the draws out across the
+//! [`crate::kernel`] pool — bitwise-deterministic in the thread count.
 
 mod gaussian;
 mod stiefel;
@@ -79,6 +82,40 @@ pub fn projector_matrix(v: &Mat) -> Mat {
 /// consume. The f64→f32 rounding happens exactly once, here.
 pub fn sample_f32(sampler: &mut dyn ProjectionSampler, rng: &mut Rng) -> Vec<f32> {
     sampler.sample(rng).data.iter().map(|&x| x as f32).collect()
+}
+
+/// Draw one V per `(n, r)` request, fanned out across the kernel pool.
+///
+/// Each draw runs on an independent child stream forked from `rng` in
+/// request order, so the output is a pure function of the parent stream
+/// and the request list — **identical at every thread count** (the
+/// subspace resample determinism test pins this). `sigma` is required
+/// for (and only consumed by) [`ProjectorKind::Dependent`]; note that
+/// each Dependent draw builds its own sampler — and therefore repeats
+/// the O(n³) eigendecomposition of Σ — so callers with many same-shape
+/// Dependent draws should construct one [`DependentSampler`] directly
+/// and sample from it instead.
+pub fn sample_batch(
+    kind: ProjectorKind,
+    dims: &[(usize, usize)],
+    c: f64,
+    sigma: Option<&Mat>,
+    rng: &mut Rng,
+) -> Vec<Mat> {
+    // fork all child streams first: this is the only part that touches
+    // the (inherently sequential) parent stream
+    let mut children: Vec<Rng> = (0..dims.len()).map(|i| rng.fork(i as u64 + 1)).collect();
+    let mut out: Vec<Mat> = vec![Mat::zeros(0, 0); dims.len()];
+    let pool = crate::kernel::global();
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    for ((slot, child), &(n, r)) in out.iter_mut().zip(children.iter_mut()).zip(dims) {
+        tasks.push(Box::new(move || {
+            let mut sampler = build_sampler(kind, n, r, c, sigma);
+            *slot = sampler.sample(child);
+        }));
+    }
+    pool.run(tasks);
+    out
 }
 
 /// Monte-Carlo diagnostics for a sampler: empirical Ē[P] and Ē[P²]
@@ -174,6 +211,30 @@ mod tests {
         }
         assert_eq!(ProjectorKind::parse("haar"), Some(ProjectorKind::Stiefel));
         assert_eq!(ProjectorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn sample_batch_is_thread_count_invariant() {
+        let _guard = crate::kernel::pool::global_test_guard();
+        let prev_threads = crate::kernel::global_threads();
+        let dims = [(12usize, 3usize), (8, 2), (20, 5)];
+        let mut draws = Vec::new();
+        for threads in [1usize, 4] {
+            crate::kernel::set_global_threads(threads);
+            let mut rng = Rng::new(99);
+            draws.push(sample_batch(ProjectorKind::Stiefel, &dims, 1.0, None, &mut rng));
+        }
+        // restore the configured size for the rest of the suite
+        crate::kernel::set_global_threads(prev_threads);
+        for (a, b) in draws[0].iter().zip(&draws[1]) {
+            assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        // shapes follow the request list
+        assert_eq!((draws[0][0].rows, draws[0][0].cols), (12, 3));
+        assert_eq!((draws[0][2].rows, draws[0][2].cols), (20, 5));
     }
 
     #[test]

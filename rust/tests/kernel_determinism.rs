@@ -1,0 +1,167 @@
+//! Integration: the kernel substrate's determinism guarantee — parallel
+//! results are bitwise identical to serial for every tested thread
+//! count, on non-block-aligned (prime) shapes, in both precisions.
+//!
+//! These tests use explicit `KernelPool` instances (not the global
+//! pool) so thread counts are exact and independent of the test
+//! harness; CI additionally runs the whole suite under
+//! `LOWRANK_THREADS=1` and `LOWRANK_THREADS=4` to catch any
+//! thread-count dependence sneaking in through the global pool.
+
+use lowrank_sge::coordinator::allreduce_mean_with;
+use lowrank_sge::kernel::{self, KernelPool};
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 7];
+
+fn arb_f64(len: usize, seed: u64) -> Vec<f64> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(17);
+    (0..len)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 33) as f64) / (u32::MAX as f64) - 0.5
+        })
+        .collect()
+}
+
+fn arb_f32(len: usize, seed: u64) -> Vec<f32> {
+    arb_f64(len, seed).into_iter().map(|x| x as f32).collect()
+}
+
+/// Prime dims: no shape is a multiple of the 32-row task block or the
+/// 64-wide cache tile, so every partition boundary is ragged. Each
+/// shape's m·k·n exceeds the kernel's small-GEMM inline threshold
+/// (2¹⁶), so the parallel row-block path is genuinely exercised.
+const SHAPES: [(usize, usize, usize); 3] = [(97, 53, 31), (131, 67, 17), (61, 37, 101)];
+
+#[test]
+fn gemm_nn_bitwise_across_thread_counts_f64() {
+    for &(m, k, n) in &SHAPES {
+        let a = arb_f64(m * k, 1);
+        let b = arb_f64(k * n, 2);
+        let mut reference = vec![0.0f64; m * n];
+        kernel::serial::gemm_nn(&a, &b, &mut reference, m, k, n);
+        for &threads in &THREAD_COUNTS {
+            let pool = KernelPool::new(threads);
+            let mut c = vec![0.0f64; m * n];
+            kernel::gemm_nn(&pool, &a, &b, &mut c, m, k, n);
+            for (x, y) in c.iter().zip(&reference) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{m}x{k}x{n} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_nn_bitwise_across_thread_counts_f32() {
+    for &(m, k, n) in &SHAPES {
+        let a = arb_f32(m * k, 3);
+        let b = arb_f32(k * n, 4);
+        let mut reference = vec![0.0f32; m * n];
+        kernel::serial::gemm_nn(&a, &b, &mut reference, m, k, n);
+        for &threads in &THREAD_COUNTS {
+            let pool = KernelPool::new(threads);
+            let mut c = vec![0.0f32; m * n];
+            kernel::gemm_nn(&pool, &a, &b, &mut c, m, k, n);
+            for (x, y) in c.iter().zip(&reference) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{m}x{k}x{n} threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_tn_and_nt_bitwise_across_thread_counts() {
+    let (m, k, n) = (101usize, 43usize, 29usize);
+    // tn: A stored k×m
+    let a_tn = arb_f64(k * m, 5);
+    let b = arb_f64(k * n, 6);
+    let mut ref_tn = vec![0.0f64; m * n];
+    kernel::serial::gemm_tn(&a_tn, &b, &mut ref_tn, k, m, n);
+    // nt: A m×k, B n×k, f32 with a non-trivial α
+    let a_nt = arb_f32(m * k, 7);
+    let b_nt = arb_f32(n * k, 8);
+    let mut ref_nt = vec![0.0f32; m * n];
+    kernel::serial::gemm_nt(0.37f32, &a_nt, &b_nt, &mut ref_nt, m, n, k);
+    for &threads in &THREAD_COUNTS {
+        let pool = KernelPool::new(threads);
+        let mut c_tn = vec![0.0f64; m * n];
+        kernel::gemm_tn(&pool, &a_tn, &b, &mut c_tn, k, m, n);
+        let mut c_nt = vec![0.0f32; m * n];
+        kernel::gemm_nt(&pool, 0.37f32, &a_nt, &b_nt, &mut c_nt, m, n, k);
+        for i in 0..m * n {
+            assert_eq!(c_tn[i].to_bits(), ref_tn[i].to_bits(), "tn threads={threads}");
+            assert_eq!(c_nt[i].to_bits(), ref_nt[i].to_bits(), "nt threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn reductions_bitwise_across_thread_counts() {
+    // long enough for many reduction chunks, prime length
+    let len = 6 * kernel::REDUCE_CHUNK + 1009;
+    let x = arb_f64(len, 9);
+    let y = arb_f64(len, 10);
+    let x32 = arb_f32(len, 11);
+    let ref_dot = kernel::dot(&KernelPool::new(1), &x, &y);
+    let ref_ssq = kernel::sum_sq(&KernelPool::new(1), &x32);
+    for &threads in &THREAD_COUNTS {
+        let pool = KernelPool::new(threads);
+        assert_eq!(kernel::dot(&pool, &x, &y).to_bits(), ref_dot.to_bits());
+        assert_eq!(kernel::sum_sq(&pool, &x32).to_bits(), ref_ssq.to_bits());
+    }
+}
+
+#[test]
+fn allreduce_bitwise_across_thread_counts() {
+    // 5 workers (odd: ragged pairing tree) × prime-length f32 shards
+    let workers = 5usize;
+    let len = 40_961usize;
+    let make = || -> Vec<Vec<f32>> {
+        (0..workers).map(|w| arb_f32(len, 100 + w as u64)).collect()
+    };
+    let mut reference = make();
+    let n = allreduce_mean_with(&KernelPool::new(1), &mut reference);
+    assert_eq!(n, workers);
+    for &threads in &THREAD_COUNTS {
+        let pool = KernelPool::new(threads);
+        let mut grads = make();
+        allreduce_mean_with(&pool, &mut grads);
+        for (x, y) in grads[0].iter().zip(&reference[0]) {
+            assert_eq!(x.to_bits(), y.to_bits(), "allreduce threads={threads}");
+        }
+    }
+    // sanity: it really is the mean
+    let grads = make();
+    let manual: f32 = (0..workers).map(|w| grads[w][17]).sum::<f32>() / workers as f32;
+    assert!((reference[0][17] - manual).abs() < 1e-6);
+}
+
+#[test]
+fn linalg_mat_ops_bitwise_across_global_thread_counts() {
+    // The f64 Mat API rides the *global* pool; swap its size and check
+    // the high-level results stay identical. (The global pool is also
+    // what LOWRANK_THREADS steers in CI.)
+    use lowrank_sge::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+    let a = Mat::from_fn(67, 41, |i, j| ((i * 41 + j) as f64 * 0.619).sin());
+    let b = Mat::from_fn(41, 53, |i, j| ((i * 53 + j) as f64 * 0.377).cos());
+    let c = Mat::from_fn(29, 41, |i, j| ((i + 2 * j) as f64 * 0.211).sin());
+    let mut snapshots = Vec::new();
+    for &threads in &[1usize, 4] {
+        kernel::set_global_threads(threads);
+        let p1 = matmul(&a, &b);
+        let p2 = matmul_tn(&a, &p1); // 41×53
+        let p3 = matmul_nt(&a, &c); // 67×29
+        snapshots.push((p1, p2, p3));
+    }
+    let (r1, r2, r3) = &snapshots[0];
+    let (s1, s2, s3) = &snapshots[1];
+    for (x, y) in r1.data.iter().zip(&s1.data) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in r2.data.iter().zip(&s2.data) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in r3.data.iter().zip(&s3.data) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+}
