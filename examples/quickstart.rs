@@ -10,9 +10,10 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use lowrank_sge::estimator::engine::project_lift;
 use lowrank_sge::estimator::mse::{one_shot_mse, EstimatorSpec, MseCurveConfig};
 use lowrank_sge::estimator::theory;
-use lowrank_sge::estimator::toy::{project_lift, ToyProblem};
+use lowrank_sge::estimator::toy::ToyProblem;
 use lowrank_sge::estimator::Family;
 use lowrank_sge::linalg::Mat;
 use lowrank_sge::projection::{ProjectionSampler, ProjectorKind, StiefelSampler};

@@ -1,8 +1,10 @@
 //! Figures 2–5 regeneration cost: one-shot estimator throughput on the
-//! toy problem (the inner loop of the MSE harness).
+//! toy problem (the inner loop of the MSE harness), driven through the
+//! shared estimator engine.
 
 use lowrank_sge::bench_util::{bench, log_csv, report};
-use lowrank_sge::estimator::toy::{project_lift, ToyProblem};
+use lowrank_sge::estimator::engine::{MethodShape, OracleEngine};
+use lowrank_sge::estimator::toy::ToyProblem;
 use lowrank_sge::projection::{ProjectionSampler, StiefelSampler};
 use lowrank_sge::rng::Rng;
 
@@ -10,39 +12,29 @@ fn main() {
     let problem = ToyProblem::paper_default(1);
     let w = problem.eval_point(2);
     let mut rng = Rng::new(3);
+    let r = 4usize;
+    let sigma = 1e-2;
 
     println!("-- one-shot estimator cost (m=n=100, o=30, r=4) --");
-    let stats = bench(5, 50, || {
-        let a = problem.sample_a(&mut rng);
-        std::hint::black_box(problem.ipa_estimate(&w, &a));
-    });
-    report("ipa_full_rank", &stats);
-    log_csv("toy_mse.csv", "ipa_full_rank", &stats);
-
-    let mut sampler = StiefelSampler::new(problem.n, 4, 1.0);
-    let stats = bench(5, 50, || {
-        let a = problem.sample_a(&mut rng);
-        let v = sampler.sample(&mut rng);
-        let g = problem.ipa_estimate(&w, &a);
-        std::hint::black_box(project_lift(&g, &v));
-    });
-    report("ipa_lowrank_stiefel", &stats);
-    log_csv("toy_mse.csv", "ipa_lowrank_stiefel", &stats);
-
-    let stats = bench(5, 50, || {
-        let a = problem.sample_a(&mut rng);
-        std::hint::black_box(problem.lr_estimate(&w, &a, &mut rng, 1e-2));
-    });
-    report("lr_full_rank_2pt", &stats);
-    log_csv("toy_mse.csv", "lr_full_rank_2pt", &stats);
-
-    let stats = bench(5, 50, || {
-        let a = problem.sample_a(&mut rng);
-        let v = sampler.sample(&mut rng);
-        std::hint::black_box(problem.lowrank_lr_estimate(&w, &a, &mut rng, 1e-2, &v));
-    });
-    report("lr_lowrank_stiefel_2pt", &stats);
-    log_csv("toy_mse.csv", "lr_lowrank_stiefel_2pt", &stats);
+    for (name, shape) in [
+        ("ipa_full_rank", MethodShape::FullIpa),
+        ("ipa_lowrank_stiefel", MethodShape::LowRankIpa),
+        ("lr_full_rank_2pt", MethodShape::FullLr),
+        ("lr_lowrank_stiefel_2pt", MethodShape::LowRankLr),
+    ] {
+        let sampler: Option<Box<dyn ProjectionSampler + Send + Sync>> = if shape.is_low_rank() {
+            Some(Box::new(StiefelSampler::new(problem.n, r, 1.0)))
+        } else {
+            None
+        };
+        let mut engine = OracleEngine::new(shape, problem.m, problem.n, r, sampler);
+        let stats = bench(5, 50, || {
+            let a = problem.sample_a(&mut rng);
+            std::hint::black_box(engine.step(&problem, &w, &a, &mut rng, sigma));
+        });
+        report(name, &stats);
+        log_csv("toy_mse.csv", name, &stats);
+    }
 
     println!("-- Σ estimation (dependent-sampler warm-up) --");
     let stats = bench(1, 3, || {

@@ -1,23 +1,81 @@
 //! End-to-end per-step latency through the PJRT artifacts — the
 //! Table 3 measurement at proxy scale, plus the pretraining step cost
-//! per scale. Opens with a serial-vs-parallel comparison of the
-//! kernel-substrate step work (lift fan-out, DDP all-reduce) that needs
-//! no artifacts; the artifact sections skip gracefully when missing.
+//! per scale. Opens with the estimator-engine steady-state allocation
+//! counter (a counting global allocator asserting the LowRank-LR step
+//! loop is heap-allocation-free after warm-up) and a serial-vs-parallel
+//! comparison of the kernel-substrate step work (lift fan-out, DDP
+//! all-reduce) that needs no artifacts; the artifact sections skip
+//! gracefully when missing.
 
-use lowrank_sge::bench_util::{bench, log_csv, report};
+use lowrank_sge::bench_util::{bench, engine_fixture, log_csv, report, CountingAlloc};
 use lowrank_sge::coordinator::{
     allreduce_mean_with, FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig,
-    PretrainTrainer,
+    PretrainTrainer, SubspaceSet,
 };
+use lowrank_sge::estimator::engine::{GradEstimator, GradSignal, MethodShape};
 use lowrank_sge::kernel::KernelPool;
+use lowrank_sge::model::ParamStore;
+use lowrank_sge::optim::AdamConfig;
 use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::rng::Rng;
 use lowrank_sge::runtime::Runtime;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Steady-state allocations per LowRank-LR engine step (synthetic
+/// 3-matrix + head problem, serial pool). Asserts the zero-allocation
+/// contract the engine documents — same fixture and counter as
+/// `tests/engine_alloc.rs`, at pretraining-like shapes.
+fn engine_alloc_steady_state() {
+    println!("-- estimator engine: steady-state allocations per step --");
+    lowrank_sge::kernel::set_global_threads(1);
+    let dims = [(384usize, 384usize, 16usize), (384, 128, 8), (128, 384, 8)];
+    let head_len = 128usize;
+    let (mut store, slots) = engine_fixture(&dims, head_len);
+    let sub = SubspaceSet::from_slots(slots, ProjectorKind::Stiefel, 1.0);
+    let mut engine = GradEstimator::new(
+        MethodShape::LowRankLr,
+        1e-2,
+        Some(sub),
+        Vec::new(),
+        Vec::new(),
+        Some((dims.len(), head_len, AdamConfig::default())),
+    );
+    let mut rng = Rng::new(11);
+    engine.subspace.as_mut().unwrap().resample(&mut rng);
+    let mut step_once = |step: u64, engine: &mut GradEstimator, store: &mut ParamStore| {
+        engine.draw_perturbations(&mut rng);
+        let fp = 0.8 + (step as f32) * 0.003;
+        let fm = 0.7 - (step as f32) * 0.002;
+        engine
+            .step(store, GradSignal::Antithetic { f_plus: fp, f_minus: fm }, 1e-3)
+            .unwrap();
+    };
+    for step in 0..3 {
+        step_once(step, &mut engine, &mut store); // warm-up
+    }
+    let steps = 50u64;
+    let before = CountingAlloc::count();
+    for step in 3..3 + steps {
+        step_once(step, &mut engine, &mut store);
+    }
+    let delta = CountingAlloc::count() - before;
+    println!(
+        "lowrank_lr_engine_step: {delta} heap allocations over {steps} steps \
+         ({:.2} per step)",
+        delta as f64 / steps as f64
+    );
+    assert_eq!(delta, 0, "LowRank-LR steady-state step loop must not allocate");
+}
+
 fn main() -> anyhow::Result<()> {
+    engine_alloc_steady_state();
+
     // Kernel-substrate step costs (no artifacts needed): the per-step
     // pieces the trainers run on the pool, serial vs parallel.
     println!("-- per-step kernel work: serial vs 4-thread pool --");

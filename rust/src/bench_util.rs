@@ -3,8 +3,113 @@
 //! binary built on these helpers: warmup, N timed iterations, robust
 //! stats, one `name ... median ± spread` line per case, and a CSV dump
 //! compatible with the experiment results.
+//!
+//! Also hosts the shared allocation-counting allocator and the
+//! synthetic engine fixture used by both the steady-state allocation
+//! test (`tests/engine_alloc.rs`) and the `train_step` bench, so the
+//! two measure exactly the same thing.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
+
+use crate::coordinator::MatrixSlot;
+use crate::model::ParamStore;
+use crate::optim::{Adam, AdamConfig};
+use crate::runtime::{DType, HostTensor, TensorSpec};
+
+/// Allocation-counting wrapper around the system allocator: every entry
+/// point that hands out memory bumps a global counter, so a
+/// steady-state "allocations per step" measurement is exact, not
+/// sampled. Install per binary with
+/// `#[global_allocator] static A: CountingAlloc = CountingAlloc;`
+/// and read the counter via [`CountingAlloc::count`].
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+impl CountingAlloc {
+    /// Total allocator entries (alloc/alloc_zeroed/realloc) so far.
+    pub fn count() -> usize {
+        ALLOCS.load(Ordering::SeqCst)
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Synthetic engine fixture: a parameter store with one m×n tensor per
+/// `dims` entry `(m, n, r)` plus a trailing head vector of `head_len`
+/// elements (store position `dims.len()`), and the matching low-rank
+/// [`MatrixSlot`]s (artifact wiring slots unset). Deterministic
+/// contents, no artifacts needed.
+pub fn engine_fixture(
+    dims: &[(usize, usize, usize)],
+    head_len: usize,
+) -> (ParamStore, Vec<MatrixSlot>) {
+    let mut specs = Vec::new();
+    let mut tensors = Vec::new();
+    for (i, &(m, n, _)) in dims.iter().enumerate() {
+        specs.push(TensorSpec {
+            index: i,
+            name: format!("params[w{i}]"),
+            dtype: DType::F32,
+            shape: vec![m, n],
+        });
+        tensors.push(HostTensor::f32(
+            vec![m, n],
+            (0..m * n).map(|k| ((k + i) as f32 * 0.01).sin() * 0.1).collect(),
+        ));
+    }
+    specs.push(TensorSpec {
+        index: dims.len(),
+        name: "params[head]".into(),
+        dtype: DType::F32,
+        shape: vec![head_len],
+    });
+    tensors.push(HostTensor::f32(
+        vec![head_len],
+        (0..head_len).map(|k| (k as f32 * 0.02).cos() * 0.1).collect(),
+    ));
+    let store = ParamStore::from_parts(specs, tensors).expect("fixture specs match tensors");
+    let slots = dims
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, n, r))| MatrixSlot {
+            name: format!("w{i}"),
+            m,
+            n,
+            r,
+            b_input: usize::MAX,
+            v_input: usize::MAX,
+            db_output: usize::MAX,
+            param_pos: i,
+            b: Arc::new(vec![0.0; m * r]),
+            v: Arc::new(vec![0.0; n * r]),
+            adam: Adam::new(m * r, AdamConfig::default()),
+        })
+        .collect();
+    (store, slots)
+}
 
 /// Timing statistics over the measured iterations (seconds).
 #[derive(Clone, Copy, Debug)]
@@ -116,5 +221,20 @@ mod tests {
     fn per_second_inverse_of_median() {
         let s = BenchStats { iters: 1, mean_s: 0.5, median_s: 0.5, min_s: 0.5, max_s: 0.5 };
         assert!((s.per_second(10.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_fixture_shapes_line_up() {
+        let dims = [(6usize, 4usize, 2usize), (4, 4, 1)];
+        let (store, slots) = engine_fixture(&dims, 5);
+        assert_eq!(store.len(), 3);
+        assert_eq!(slots.len(), 2);
+        for (slot, &(m, n, r)) in slots.iter().zip(&dims) {
+            assert_eq!((slot.m, slot.n, slot.r), (m, n, r));
+            assert_eq!(slot.b.len(), m * r);
+            assert_eq!(slot.v.len(), n * r);
+            assert_eq!(store.f32(slot.param_pos).unwrap().len(), m * n);
+        }
+        assert_eq!(store.f32(2).unwrap().len(), 5); // head
     }
 }

@@ -61,12 +61,12 @@ pub fn encode_group(sd: &StateDict) -> Vec<u8> {
         }
         match t {
             HostTensor::F32 { data, .. } => {
-                for v in data {
+                for v in data.iter() {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
             HostTensor::I32 { data, .. } => {
-                for v in data {
+                for v in data.iter() {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }

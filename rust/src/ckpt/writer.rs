@@ -1,6 +1,12 @@
 //! Save/load of whole checkpoints: shard each tensor group through the
 //! codec into a temp dir, commit with a single rename, advance `LATEST`,
 //! and prune old steps down to the retention budget.
+//!
+//! Group shards are independent files, so serialization + CRC + write
+//! of the groups fan out across the kernel pool ([`save_checkpoint`]):
+//! the encode/IO of one group overlaps the others', while the atomic
+//! temp-dir+rename commit — and the bytes of every shard — stay exactly
+//! as the serial writer produced them.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -117,12 +123,27 @@ pub fn save_checkpoint(
     for (k, v) in meta {
         manifest.meta.insert((*k).to_string(), v.clone());
     }
-    for (name, sd) in groups {
-        let file = format!("{name}.tsr");
-        let crc32 = codec::write_group(&tmp.join(&file), sd)?;
+    // Stage every group shard through the kernel pool: encode + CRC +
+    // write are per-group and independent, so they overlap. Results are
+    // collected in group order, so the MANIFEST (and every shard's
+    // bytes) are identical to a serial write.
+    let mut shard_results: Vec<Option<Result<u32>>> = groups.iter().map(|_| None).collect();
+    {
+        let pool = crate::kernel::global();
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(groups.len());
+        for ((name, sd), slot) in groups.iter().zip(shard_results.iter_mut()) {
+            let path = tmp.join(format!("{name}.tsr"));
+            tasks.push(Box::new(move || *slot = Some(codec::write_group(&path, sd))));
+        }
+        pool.run(tasks);
+    }
+    for ((name, sd), result) in groups.iter().zip(shard_results) {
+        let crc32 = result
+            .expect("pool ran every shard task")
+            .with_context(|| format!("writing checkpoint group {name:?}"))?;
         manifest.groups.push(GroupEntry {
             name: (*name).to_string(),
-            file,
+            file: format!("{name}.tsr"),
             crc32,
             tensors: sd.len(),
         });

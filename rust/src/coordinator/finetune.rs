@@ -12,6 +12,13 @@
 //! The LR family never executes a backward graph: the artifacts
 //! evaluate both antithetic losses forward-only and Rust forms
 //! ĝ = (F⁺−F⁻)/(2σ)·Z·Vᵀ (the paper's memory story, Table 2).
+//!
+//! The per-step pipeline itself lives in
+//! [`crate::estimator::engine::GradEstimator`]: this trainer owns the
+//! artifact wiring (input staging, output routing) and delegates draw +
+//! update to the engine. Staging is zero-copy — parameters, (B, V), the
+//! engine's Z buffers and the batch tokens are spliced into the input
+//! list by `Arc` bump, never copied.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -20,9 +27,10 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::metrics::{MetricsLog, StepRecord};
-use super::subspace::SubspaceSet;
+use super::subspace::{FullSlot, SubspaceSet};
 use crate::ckpt::{self, Checkpointable, CkptOptions, LoadedCheckpoint, StateDict};
 use crate::data::ClassifyTask;
+use crate::estimator::engine::{GradEstimator, GradSignal, MethodShape, ZoTarget};
 use crate::model::ParamStore;
 use crate::optim::{Adam, AdamConfig, LazyAction, LazyUpdateController};
 use crate::projection::ProjectorKind;
@@ -60,6 +68,18 @@ impl FinetuneMethod {
             FinetuneMethod::LowRankLr(ProjectorKind::Coordinate),
             FinetuneMethod::VanillaIpa,
         ]
+    }
+
+    /// The Algorithm-1 shape this method steps. ZeroShot never steps;
+    /// it gets an inert FullIpa engine so the state surface (head Adam)
+    /// matches the other methods.
+    fn method_shape(&self) -> MethodShape {
+        match self {
+            FinetuneMethod::ZeroShot | FinetuneMethod::VanillaIpa => MethodShape::FullIpa,
+            FinetuneMethod::VanillaLr => MethodShape::FullLr,
+            FinetuneMethod::LowRankLr(_) => MethodShape::LowRankLr,
+            FinetuneMethod::LowRankIpa(_) => MethodShape::LowRankIpa,
+        }
     }
 }
 
@@ -124,9 +144,9 @@ enum Src {
     Param(usize),
     B(usize),
     V(usize),
-    /// Fresh per-step Z for slot i (ZO low-rank).
+    /// Engine Z buffer for subspace slot i (ZO low-rank).
     Z(usize),
-    /// Fresh per-step full-rank Z for full-slot i (ZO full).
+    /// Engine Z buffer for full-rank target i (ZO full).
     ZFull(usize),
     ZHead,
     Sigma,
@@ -134,30 +154,28 @@ enum Src {
     Labels,
 }
 
-/// Full-rank ZO slot (Vanilla LR).
-struct ZoFullSlot {
-    param_pos: usize,
-    m: usize,
-    n: usize,
-}
-
 pub struct FinetuneTrainer {
     cfg: FinetuneConfig,
     grad_art: Option<Arc<LoadedArtifact>>,
     eval_art: Arc<LoadedArtifact>,
     store: ParamStore,
-    subspace: Option<SubspaceSet>,
-    zo_full_slots: Vec<ZoFullSlot>,
-    /// IPA-family full slots: (name, param_pos, output_idx, adam).
-    ipa_full: Vec<(String, usize, usize, Adam)>,
-    head_pos: usize,
-    head_adam: Adam,
+    /// The Algorithm-1 pipeline: subspace state, full-rank channels,
+    /// head, and every per-step workspace.
+    engine: GradEstimator,
     input_map: Vec<Src>,
     rng: Rng,
     batch: usize,
     seq: usize,
     vocab: usize,
     eval_batch: usize,
+    /// Cached head tensor shape for Z-head staging.
+    head_shape: Vec<usize>,
+    /// Artifact output slot of each subspace dB (LowRank-IPA).
+    db_outs: Vec<usize>,
+    /// Artifact output slot of each full-rank gradient (Vanilla IPA).
+    ipa_douts: Vec<usize>,
+    /// Artifact output slot of the head gradient (LowRank-IPA).
+    head_dout: Option<usize>,
 }
 
 impl FinetuneTrainer {
@@ -199,17 +217,18 @@ impl FinetuneTrainer {
 
         let head_pos = store.position("[head]").context("no head param")?;
         let head_len = store.tensors()[head_pos].num_elements();
+        let head_shape = store.shape(head_pos).to_vec();
 
-        // Vanilla-LR full-rank Z slots / Vanilla-IPA gradient slots.
-        let mut zo_full_slots = Vec::new();
-        let mut ipa_full = Vec::new();
+        // Vanilla-LR full-rank Z targets / Vanilla-IPA gradient slots.
+        let mut zo_targets: Vec<ZoTarget> = Vec::new();
+        let mut ipa_full: Vec<FullSlot> = Vec::new();
         if let Some(art) = &grad_art {
             for spec in &art.manifest.inputs {
                 if let Some(name) =
                     spec.name.strip_prefix("zs_full[").and_then(|s| s.strip_suffix(']'))
                 {
                     let pos = store.position(&format!("[{name}]")).context("zs_full param")?;
-                    zo_full_slots.push(ZoFullSlot {
+                    zo_targets.push(ZoTarget {
                         param_pos: pos,
                         m: spec.shape[0],
                         n: spec.shape[1],
@@ -225,7 +244,12 @@ impl FinetuneTrainer {
                             .position(&format!("[{name}]"))
                             .with_context(|| format!("ipa grad target {name}"))?;
                         let len = store.tensors()[pos].num_elements();
-                        ipa_full.push((name.to_string(), pos, oi, Adam::new(len, adam_cfg)));
+                        ipa_full.push(FullSlot {
+                            name: name.to_string(),
+                            param_pos: pos,
+                            dout: oi,
+                            adam: Adam::new(len, adam_cfg),
+                        });
                     }
                 }
             }
@@ -244,7 +268,7 @@ impl FinetuneTrainer {
                     let sub = subspace.as_ref().unwrap();
                     Src::B(sub.slots.iter().position(|s| s.b_input == spec.index).unwrap())
                 } else if spec.name.starts_with("zs_full[") {
-                    let idx = zo_full_slots
+                    let idx = zo_targets
                         .iter()
                         .position(|z| {
                             store.name(z.param_pos).ends_with(&spec.name[7..])
@@ -272,6 +296,34 @@ impl FinetuneTrainer {
             }
         }
 
+        // output routing (resolved once; the step loop just indexes)
+        let db_outs: Vec<usize> = match (cfg.method, &subspace) {
+            (FinetuneMethod::LowRankIpa(_), Some(sub)) => {
+                sub.slots.iter().map(|s| s.db_output).collect()
+            }
+            _ => Vec::new(),
+        };
+        let ipa_douts: Vec<usize> = ipa_full.iter().map(|f| f.dout).collect();
+        let head_dout = match (cfg.method, &grad_art) {
+            (FinetuneMethod::LowRankIpa(_), Some(art)) => Some(
+                art.manifest
+                    .outputs
+                    .iter()
+                    .position(|o| o.name == "out[2]")
+                    .context("no head grad output")?,
+            ),
+            _ => None,
+        };
+
+        let engine = GradEstimator::new(
+            cfg.method.method_shape(),
+            cfg.sigma,
+            subspace,
+            zo_targets,
+            ipa_full,
+            Some((head_pos, head_len, adam_cfg)),
+        );
+
         let meta_src = grad_art.as_ref().map(|a| &a.manifest).unwrap_or(&eval_art.manifest);
         let batch = meta_src.meta_usize("batch").unwrap_or(16);
         let seq = meta_src.meta_usize("seq_len")?;
@@ -284,16 +336,16 @@ impl FinetuneTrainer {
             grad_art,
             eval_art,
             store,
-            subspace,
-            zo_full_slots,
-            ipa_full,
-            head_pos,
-            head_adam: Adam::new(head_len, adam_cfg),
+            engine,
             input_map,
             batch,
             seq,
             vocab,
             eval_batch,
+            head_shape,
+            db_outs,
+            ipa_douts,
+            head_dout,
         })
     }
 
@@ -323,10 +375,6 @@ impl FinetuneTrainer {
             bail!("eval set smaller than one artifact batch");
         }
         Ok(correct as f64 / total as f64)
-    }
-
-    fn fresh_normals(rng: &mut Rng, len: usize) -> Vec<f32> {
-        (0..len).map(|_| rng.normal() as f32).collect()
     }
 
     /// Run fine-tuning; returns accuracy and the loss series.
@@ -371,17 +419,13 @@ impl FinetuneTrainer {
 
         for step in start_step..cfg.steps {
             let t0 = Instant::now();
-            // lazy update: resample V for the low-rank methods
-            if let Some(sub) = &mut self.subspace {
-                if controller.action(step) == LazyAction::ResampleSubspace {
+            // lazy update: resample V for the low-rank methods. The ZO
+            // path keeps Θ always-lifted, so only (V, B, Adam) reset —
+            // resample does all three; IPA lifts Θ first.
+            if controller.action(step) == LazyAction::ResampleSubspace {
+                if let Some(sub) = self.engine.subspace.as_mut() {
                     if step > 0 && matches!(cfg.method, FinetuneMethod::LowRankIpa(_)) {
                         sub.lift(&mut self.store)?;
-                    }
-                    // ZO keeps Θ always-lifted, so only V/B/Adam reset
-                    if matches!(cfg.method, FinetuneMethod::LowRankLr(_)) {
-                        for slot in &mut sub.slots {
-                            slot.b.iter_mut().for_each(|x| *x = 0.0);
-                        }
                     }
                     sub.resample(&mut rng);
                 }
@@ -389,156 +433,111 @@ impl FinetuneTrainer {
 
             let (tokens, labels) = task.train_batch(self.batch, &mut rng);
 
-            // per-step fresh randomness for the ZO paths
-            let z_head_len = self.store.tensors()[self.head_pos].num_elements();
-            let z_head: Vec<f32> = match cfg.method {
-                FinetuneMethod::VanillaLr | FinetuneMethod::LowRankLr(_) => {
-                    Self::fresh_normals(&mut rng, z_head_len)
-                }
-                _ => vec![0.0; z_head_len],
-            };
-            let zs: Vec<Vec<f32>> = match cfg.method {
-                FinetuneMethod::LowRankLr(_) => self
-                    .subspace
-                    .as_ref()
-                    .unwrap()
-                    .slots
-                    .iter()
-                    .map(|s| Self::fresh_normals(&mut rng, s.m * s.r))
-                    .collect(),
-                FinetuneMethod::VanillaLr => self
-                    .zo_full_slots
-                    .iter()
-                    .map(|s| Self::fresh_normals(&mut rng, s.m * s.n))
-                    .collect(),
-                _ => Vec::new(),
-            };
+            // per-step fresh randomness for the ZO paths, drawn into
+            // the engine's reusable buffers (head Z first, then slots —
+            // the canonical stream order)
+            self.engine.draw_perturbations(&mut rng);
 
-            // assemble inputs
+            // assemble inputs — every payload is staged by Arc bump
             let art = self.grad_art.as_ref().unwrap().clone();
+            let tokens_t = HostTensor::i32(vec![self.batch, self.seq], tokens);
+            let labels_t = HostTensor::i32(vec![self.batch], labels);
             let inputs: Vec<HostTensor> = self
                 .input_map
                 .iter()
                 .map(|src| match src {
                     Src::Param(i) => self.store.tensors()[*i].clone(),
                     Src::B(s) | Src::V(s) | Src::Z(s) => {
-                        let sub = self.subspace.as_ref().unwrap();
+                        let sub = self.engine.subspace.as_ref().unwrap();
                         let slot = &sub.slots[*s];
                         match src {
-                            Src::B(_) => HostTensor::f32(vec![slot.m, slot.r], slot.b.clone()),
-                            Src::V(_) => HostTensor::f32(vec![slot.n, slot.r], slot.v.clone()),
-                            Src::Z(_) => HostTensor::f32(vec![slot.m, slot.r], zs[*s].clone()),
+                            Src::B(_) => {
+                                HostTensor::f32_shared(vec![slot.m, slot.r], slot.b.clone())
+                            }
+                            Src::V(_) => {
+                                HostTensor::f32_shared(vec![slot.n, slot.r], slot.v.clone())
+                            }
+                            Src::Z(_) => {
+                                HostTensor::f32_shared(vec![slot.m, slot.r], self.engine.z_arc(*s))
+                            }
                             _ => unreachable!(),
                         }
                     }
                     Src::ZFull(i) => {
-                        let z = &self.zo_full_slots[*i];
-                        HostTensor::f32(vec![z.m, z.n], zs[*i].clone())
+                        let t = &self.engine.full_lr[*i];
+                        HostTensor::f32_shared(vec![t.m, t.n], self.engine.z_arc(*i))
                     }
                     Src::ZHead => {
-                        let shape = self.store.shape(self.head_pos).to_vec();
-                        HostTensor::f32(shape, z_head.clone())
+                        HostTensor::f32_shared(self.head_shape.clone(), self.engine.head_z_arc())
                     }
                     Src::Sigma => HostTensor::scalar_f32(cfg.sigma),
-                    Src::Tokens => HostTensor::i32(vec![self.batch, self.seq], tokens.clone()),
-                    Src::Labels => HostTensor::i32(vec![self.batch], labels.clone()),
+                    Src::Tokens => tokens_t.clone(),
+                    Src::Labels => labels_t.clone(),
                 })
                 .collect();
 
             let out = art.execute(&inputs)?;
+            // drop the staged clones so the engine's buffers are unique
+            // again — the updates below then mutate in place
+            drop(inputs);
 
-            // apply the method's update
-            let (loss, grad_norm) = match cfg.method {
+            // apply the method's update through the engine
+            let stats = match cfg.method {
                 FinetuneMethod::VanillaIpa => {
-                    let loss = out[0].scalar()?;
-                    let mut norm_sq = 0f64;
-                    for (_, pos, oi, adam) in &mut self.ipa_full {
-                        let g = out[*oi].as_f32()?;
-                        norm_sq += g.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
-                        adam.step(self.store.f32_mut(*pos)?, g, cfg.ipa_lr);
-                    }
-                    (loss, norm_sq.sqrt() as f32)
+                    let slot_grads: Vec<&[f32]> = self
+                        .ipa_douts
+                        .iter()
+                        .map(|&oi| out[oi].as_f32())
+                        .collect::<Result<_>>()?;
+                    self.engine.step(
+                        &mut self.store,
+                        GradSignal::Grads {
+                            loss: out[0].scalar()?,
+                            slots: &slot_grads,
+                            head: None,
+                            grad_norm: None,
+                        },
+                        cfg.ipa_lr,
+                    )?
                 }
                 FinetuneMethod::LowRankIpa(_) => {
-                    let loss = out[0].scalar()?;
-                    let sub = self.subspace.as_mut().unwrap();
-                    let mut norm_sq = 0f64;
-                    let mut grads: Vec<&[f32]> = Vec::with_capacity(sub.slots.len());
-                    for slot in &sub.slots {
-                        let g = out[slot.db_output].as_f32()?;
-                        norm_sq += g.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
-                        grads.push(g);
-                    }
-                    // per-slot Adam steps fan out across the kernel pool
-                    sub.adam_step_all(&grads, cfg.ipa_lr);
-                    // head gradient is out[2]
-                    let head_out = art
-                        .manifest
-                        .outputs
+                    let slot_grads: Vec<&[f32]> = self
+                        .db_outs
                         .iter()
-                        .position(|o| o.name == "out[2]")
-                        .context("no head grad output")?;
-                    let g = out[head_out].as_f32()?.to_vec();
-                    self.head_adam.step(self.store.f32_mut(self.head_pos)?, &g, cfg.ipa_lr);
-                    (loss, norm_sq.sqrt() as f32)
+                        .map(|&oi| out[oi].as_f32())
+                        .collect::<Result<_>>()?;
+                    let head_g =
+                        out[self.head_dout.context("no head grad output")?].as_f32()?;
+                    self.engine.step(
+                        &mut self.store,
+                        GradSignal::Grads {
+                            loss: out[0].scalar()?,
+                            slots: &slot_grads,
+                            head: Some(head_g),
+                            grad_norm: None,
+                        },
+                        cfg.ipa_lr,
+                    )?
                 }
-                FinetuneMethod::LowRankLr(_) => {
-                    let (fp, fm) = (out[0].scalar()?, out[1].scalar()?);
-                    let scale = (fp - fm) / (2.0 * cfg.sigma);
-                    let sub = self.subspace.as_mut().unwrap();
-                    // ĝ_B = scale·Z ; Adam step on B, then push the
-                    // *delta* into Θ so Θ stays the lifted point. Each
-                    // slot touches its own (B, Adam, Θ) triple, so the
-                    // whole update fans out across the kernel pool.
-                    let positions: Vec<usize> =
-                        sub.slots.iter().map(|s| s.param_pos).collect();
-                    let thetas = self.store.f32_mut_many(&positions)?;
-                    let zo_lr = cfg.zo_lr;
-                    let pool = crate::kernel::global();
-                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
-                    for ((slot, theta), z) in sub.slots.iter_mut().zip(thetas).zip(&zs) {
-                        tasks.push(Box::new(move || {
-                            let g: Vec<f32> = z.iter().map(|x| scale * x).collect();
-                            let old_b = slot.b.clone();
-                            slot.adam.step(&mut slot.b, &g, zo_lr);
-                            let delta: Vec<f32> =
-                                slot.b.iter().zip(&old_b).map(|(n, o)| n - o).collect();
-                            crate::kernel::serial::gemm_nt(
-                                1.0f32, &delta, &slot.v, theta, slot.m, slot.n, slot.r,
-                            );
-                        }));
-                    }
-                    pool.run(tasks);
-                    let gh: Vec<f32> = z_head.iter().map(|x| scale * x).collect();
-                    self.head_adam.step(self.store.f32_mut(self.head_pos)?, &gh, cfg.zo_lr);
-                    ((fp + fm) * 0.5, scale.abs())
-                }
-                FinetuneMethod::VanillaLr => {
-                    let (fp, fm) = (out[0].scalar()?, out[1].scalar()?);
-                    let scale = (fp - fm) / (2.0 * cfg.sigma);
-                    // MeZO-style SGD: Θ ← Θ − lr·scale·Z (kernel AXPY;
-                    // −(lr·scale)·z ≡ the old `t -= lr·scale·z` to the bit)
-                    let pool = crate::kernel::global();
-                    let alpha = -(cfg.zo_lr * scale);
-                    for (slot, z) in self.zo_full_slots.iter().zip(&zs) {
-                        let theta = self.store.f32_mut(slot.param_pos)?;
-                        crate::kernel::axpy(&pool, alpha, z, theta);
-                    }
-                    let head = self.store.f32_mut(self.head_pos)?;
-                    crate::kernel::axpy(&pool, alpha, &z_head, head);
-                    ((fp + fm) * 0.5, scale.abs())
-                }
+                FinetuneMethod::VanillaLr | FinetuneMethod::LowRankLr(_) => self.engine.step(
+                    &mut self.store,
+                    GradSignal::Antithetic {
+                        f_plus: out[0].scalar()?,
+                        f_minus: out[1].scalar()?,
+                    },
+                    cfg.zo_lr,
+                )?,
                 FinetuneMethod::ZeroShot => unreachable!(),
             };
 
             log.push(StepRecord {
                 step,
-                loss,
+                loss: stats.loss,
                 lr: match cfg.method {
                     FinetuneMethod::VanillaIpa | FinetuneMethod::LowRankIpa(_) => cfg.ipa_lr,
                     _ => cfg.zo_lr,
                 },
-                grad_norm,
+                grad_norm: stats.grad_norm,
                 step_time_s: t0.elapsed().as_secs_f64(),
             });
 
@@ -549,8 +548,10 @@ impl FinetuneTrainer {
         }
 
         // final lift for the IPA low-rank path
-        if let (FinetuneMethod::LowRankIpa(_), Some(sub)) = (cfg.method, &mut self.subspace) {
-            sub.lift(&mut self.store)?;
+        if matches!(cfg.method, FinetuneMethod::LowRankIpa(_)) {
+            if let Some(sub) = self.engine.subspace.as_mut() {
+                sub.lift(&mut self.store)?;
+            }
         }
         self.store.assert_finite()?;
         let acc = self.evaluate(&task)?;
@@ -561,16 +562,17 @@ impl FinetuneTrainer {
     /// IPA Adam moments, loop RNG) as checkpoint `step` under `dir`.
     pub fn save_state(&self, dir: &Path, step: u64, keep_last: usize, rng: &Rng) -> Result<()> {
         let mut opt = StateDict::new();
-        opt.merge_prefixed("adam[head].", self.head_adam.state_dict());
-        for (name, _, _, adam) in &self.ipa_full {
-            opt.merge_prefixed(&format!("adam[{name}]."), adam.state_dict());
+        let head = self.engine.head.as_ref().expect("finetune engine always has a head");
+        opt.merge_prefixed("adam[head].", head.adam.state_dict());
+        for fslot in &self.engine.ipa_full {
+            opt.merge_prefixed(&format!("adam[{}].", fslot.name), fslot.adam.state_dict());
         }
         let mut groups = vec![
             ("params", self.store.state_dict()),
             ("opt", opt),
             ("rng", rng.state_dict()),
         ];
-        if let Some(sub) = &self.subspace {
+        if let Some(sub) = &self.engine.subspace {
             groups.push(("subspace", sub.state_dict()));
         }
         let meta = [
@@ -594,16 +596,19 @@ impl FinetuneTrainer {
         // different seed would not continue the saved trajectory
         loaded.expect_meta("seed", &self.cfg.seed.to_string())?;
         self.store.load_state(loaded.group("params")?)?;
-        if let Some(sub) = &mut self.subspace {
+        if let Some(sub) = &mut self.engine.subspace {
             sub.load_state(loaded.group("subspace")?)?;
         }
         let opt = loaded.group("opt")?;
-        self.head_adam
+        let head = self.engine.head.as_mut().expect("finetune engine always has a head");
+        head.adam
             .load_state(&opt.extract_prefixed("adam[head]."))
             .context("head optimizer")?;
-        for (name, _, _, adam) in &mut self.ipa_full {
-            adam.load_state(&opt.extract_prefixed(&format!("adam[{name}].")))
-                .with_context(|| format!("ipa slot {name}"))?;
+        for fslot in &mut self.engine.ipa_full {
+            fslot
+                .adam
+                .load_state(&opt.extract_prefixed(&format!("adam[{}].", fslot.name)))
+                .with_context(|| format!("ipa slot {}", fslot.name))?;
         }
         rng.load_state(loaded.group("rng")?)?;
         Ok(())

@@ -1,8 +1,16 @@
 //! L3 coordinator: the trainers that drive the PJRT artifacts with the
 //! paper's Algorithm 1 (low-rank gradient descent with lazy update).
 //!
+//! The per-step pipeline itself — project→estimate→lift→update, with
+//! its preallocated workspaces — is **not** implemented here: both
+//! trainers construct a [`crate::estimator::engine::GradEstimator`] and
+//! delegate every draw and update to it. What this layer owns is the
+//! artifact wiring (zero-copy input staging, output routing), the data
+//! pipeline, DDP coordination, scheduling, and checkpoint policy.
+//!
 //! * [`subspace`] — [`SubspaceSet`]: per-matrix (B, V, Adam) state, the
-//!   resample/lift machinery shared by all trainers.
+//!   resample/lift machinery the engine steps; B and V are `Arc`-backed
+//!   so staging them into artifact inputs is a reference-count bump.
 //! * [`pretrain`] — LowRank-IPA pretraining of the LLaMA-proxy LMs
 //!   (paper §6.2.2, Figures 7–9).
 //! * [`finetune`] — the six-method fine-tuning matrix of Table 1 /

@@ -4,8 +4,12 @@
 //! every K steps it lifts Θ ← Θ + B·Vᵀ and resamples V from the
 //! configured projector law (Stiefel vs Gaussian is the Figures 7–9
 //! contrast); each inner step executes the artifact once per DDP worker
-//! shard, all-reduces the gradients, clips, and takes a subspace-Adam
-//! step on every B (plus full-rank Adam on embeddings/norms).
+//! shard, all-reduces the gradients, clips, and hands the reduced
+//! gradients to the shared pipeline —
+//! [`crate::estimator::engine::GradEstimator`] — which fans the
+//! subspace-B and full-rank (embeddings/norms) Adam steps out across
+//! the kernel pool. Input staging is zero-copy: parameters, (B, V) and
+//! the shard tokens are spliced by `Arc` bump.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -18,6 +22,7 @@ use super::metrics::{MetricsLog, StepRecord};
 use super::subspace::{FullSlot, SubspaceSet};
 use crate::ckpt::{self, Checkpointable, CkptOptions, LoadedCheckpoint, StateDict};
 use crate::data::ZipfMarkovCorpus;
+use crate::estimator::engine::{GradEstimator, GradSignal, MethodShape};
 use crate::model::ParamStore;
 use crate::optim::{clip_global_norm, Adam, AdamConfig, CosineSchedule, LazyAction, LazyUpdateController, LrSchedule};
 use crate::projection::ProjectorKind;
@@ -100,13 +105,18 @@ pub struct PretrainTrainer {
     grad_art: Arc<LoadedArtifact>,
     eval_art: Arc<LoadedArtifact>,
     store: ParamStore,
-    subspace: SubspaceSet,
-    full_slots: Vec<FullSlot>,
+    /// The Algorithm-1 pipeline: subspace (B, V, Adam) state plus the
+    /// full-rank embedding/norm channels.
+    engine: GradEstimator,
     input_map: Vec<Src>,
     rng: Rng,
     batch: usize,
     seq_len: usize,
     vocab: usize,
+    /// Artifact output slot of each subspace dB, in slot order.
+    db_outs: Vec<usize>,
+    /// Artifact output slot of each full-rank gradient, in slot order.
+    f_douts: Vec<usize>,
 }
 
 impl PretrainTrainer {
@@ -166,6 +176,17 @@ impl PretrainTrainer {
             }
         }
 
+        let db_outs: Vec<usize> = subspace.slots.iter().map(|s| s.db_output).collect();
+        let f_douts: Vec<usize> = full_slots.iter().map(|f| f.dout).collect();
+        let engine = GradEstimator::new(
+            MethodShape::LowRankIpa,
+            0.0,
+            Some(subspace),
+            Vec::new(),
+            full_slots,
+            None,
+        );
+
         let batch = grad_art.manifest.meta_usize("batch")?;
         let seq_len = grad_art.manifest.meta_usize("seq_len")?;
         let vocab = grad_art.manifest.meta_usize("vocab")?;
@@ -175,32 +196,38 @@ impl PretrainTrainer {
             grad_art,
             eval_art,
             store,
-            subspace,
-            full_slots,
+            engine,
             input_map,
             rng,
             batch,
             seq_len,
             vocab,
+            db_outs,
+            f_douts,
         })
     }
 
-    fn build_inputs(&self, tokens: &[i32]) -> Vec<HostTensor> {
+    fn subspace(&self) -> &SubspaceSet {
+        self.engine.subspace.as_ref().expect("pretrain engine always has a subspace")
+    }
+
+    /// Stage one shard's inputs — zero-copy (`Arc` bumps; the token
+    /// vector is moved, not copied).
+    fn build_inputs(&self, tokens: Vec<i32>) -> Vec<HostTensor> {
+        let tokens_t = HostTensor::i32(vec![self.batch, self.seq_len + 1], tokens);
         self.input_map
             .iter()
             .map(|src| match src {
                 Src::Param(i) => self.store.tensors()[*i].clone(),
                 Src::B(s) => {
-                    let slot = &self.subspace.slots[*s];
-                    HostTensor::f32(vec![slot.m, slot.r], slot.b.clone())
+                    let slot = &self.subspace().slots[*s];
+                    HostTensor::f32_shared(vec![slot.m, slot.r], slot.b.clone())
                 }
                 Src::V(s) => {
-                    let slot = &self.subspace.slots[*s];
-                    HostTensor::f32(vec![slot.n, slot.r], slot.v.clone())
+                    let slot = &self.subspace().slots[*s];
+                    HostTensor::f32_shared(vec![slot.n, slot.r], slot.v.clone())
                 }
-                Src::Tokens => {
-                    HostTensor::i32(vec![self.batch, self.seq_len + 1], tokens.to_vec())
-                }
+                Src::Tokens => tokens_t.clone(),
             })
             .collect()
     }
@@ -208,11 +235,19 @@ impl PretrainTrainer {
     /// Eval loss on held-out batches, at the lifted point (copy; the
     /// live B/V state is untouched).
     pub fn eval_loss(&mut self, eval_sets: &[Vec<i32>]) -> Result<f32> {
-        // lifted copy of the parameters
+        // lifted copy of the parameters (copy-on-write: only the
+        // reparameterized tensors are actually duplicated)
         let mut lifted: Vec<HostTensor> = self.store.tensors().to_vec();
-        for slot in &self.subspace.slots {
+        for slot in &self.engine.subspace.as_ref().expect("subspace").slots {
             let theta = lifted[slot.param_pos].as_f32_mut()?;
-            crate::model::lift_into(theta, &slot.b, &slot.v, slot.m, slot.n, slot.r);
+            crate::model::lift_into(
+                theta,
+                slot.b.as_slice(),
+                slot.v.as_slice(),
+                slot.m,
+                slot.n,
+                slot.r,
+            );
         }
         let mut total = 0.0f32;
         for tokens in eval_sets {
@@ -284,32 +319,35 @@ impl PretrainTrainer {
         for step in start_step..cfg.steps {
             let t0 = Instant::now();
             if controller.action(step) == LazyAction::ResampleSubspace {
+                let sub = self.engine.subspace.as_mut().expect("subspace");
                 if step > 0 {
-                    self.subspace.lift(&mut self.store)?;
+                    sub.lift(&mut self.store)?;
                 }
-                self.subspace.resample(&mut self.rng);
+                sub.resample(&mut self.rng);
             }
             let lr = schedule.lr(step);
 
             // one shard per worker; all-reduce gradients
             let shards = producer.next_step_shards();
-            let n_b = self.subspace.slots.len();
-            let n_f = self.full_slots.len();
+            let n_shards = shards.len();
+            let n_b = self.db_outs.len();
+            let n_f = self.f_douts.len();
             let mut db_acc: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_b];
             let mut df_acc: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_f];
             let mut loss_acc = 0.0f32;
-            for shard in &shards {
-                let inputs = self.build_inputs(&shard.tokens);
+            for shard in shards {
+                let inputs = self.build_inputs(shard.tokens);
                 let out = self.grad_art.execute(&inputs)?;
+                drop(inputs);
                 loss_acc += out[0].scalar()?;
-                for (si, slot) in self.subspace.slots.iter().enumerate() {
-                    db_acc[si].push(out[slot.db_output].as_f32()?.to_vec());
+                for (si, &oi) in self.db_outs.iter().enumerate() {
+                    db_acc[si].push(out[oi].as_f32()?.to_vec());
                 }
-                for (fi, fslot) in self.full_slots.iter().enumerate() {
-                    df_acc[fi].push(out[fslot.dout].as_f32()?.to_vec());
+                for (fi, &oi) in self.f_douts.iter().enumerate() {
+                    df_acc[fi].push(out[oi].as_f32()?.to_vec());
                 }
             }
-            let loss = loss_acc / shards.len() as f32;
+            let loss = loss_acc / n_shards as f32;
             let mut db: Vec<Vec<f32>> = db_acc
                 .into_iter()
                 .map(|mut g| {
@@ -331,27 +369,30 @@ impl PretrainTrainer {
             views.extend(df.iter_mut().map(|g| g.as_mut_slice()));
             let grad_norm = clip_global_norm(&mut views, cfg.clip);
 
-            // optimizer steps: per-matrix updates are independent, so
-            // both the subspace-B and the full-rank Adam steps fan out
-            // across the kernel pool (bitwise equal to the serial loop)
-            self.subspace.adam_step_all(&db, lr);
-            {
-                let positions: Vec<usize> =
-                    self.full_slots.iter().map(|f| f.param_pos).collect();
-                let params = self.store.f32_mut_many(&positions)?;
-                let pool = crate::kernel::global();
-                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
-                for ((fslot, p), g) in self.full_slots.iter_mut().zip(params).zip(&df) {
-                    tasks.push(Box::new(move || fslot.adam.step(p, g, lr)));
-                }
-                pool.run(tasks);
-            }
+            // one engine step: subspace-B and full-rank Adam updates,
+            // both fanned out across the kernel pool (bitwise equal to
+            // the serial loop)
+            let slot_grads: Vec<&[f32]> = db
+                .iter()
+                .map(|g| g.as_slice())
+                .chain(df.iter().map(|g| g.as_slice()))
+                .collect();
+            let stats = self.engine.step(
+                &mut self.store,
+                GradSignal::Grads {
+                    loss,
+                    slots: &slot_grads,
+                    head: None,
+                    grad_norm: Some(grad_norm),
+                },
+                lr,
+            )?;
 
             log.push(StepRecord {
                 step,
-                loss,
+                loss: stats.loss,
                 lr,
-                grad_norm,
+                grad_norm: stats.grad_norm,
                 step_time_s: t0.elapsed().as_secs_f64(),
             });
 
@@ -370,7 +411,7 @@ impl PretrainTrainer {
             }
         }
         // final lift so the stored Θ is the trained model
-        self.subspace.lift(&mut self.store)?;
+        self.engine.subspace.as_mut().expect("subspace").lift(&mut self.store)?;
         self.store.assert_finite()?;
         producer.shutdown();
 
@@ -378,7 +419,7 @@ impl PretrainTrainer {
         Ok(PretrainResult {
             final_eval_loss,
             params_elements: self.store.num_elements(),
-            b_elements: self.subspace.b_elements(),
+            b_elements: self.subspace().b_elements(),
             log,
         })
     }
@@ -388,7 +429,7 @@ impl PretrainTrainer {
     }
 
     /// Legacy params-only export (same binary layout as the init dumps).
-    /// Full training-state durability lives in [`save_state`].
+    /// Full training-state durability lives in [`save_state`](Self::save_state).
     pub fn save_checkpoint(&self, dir: &Path) -> Result<()> {
         self.store.save(dir)
     }
@@ -398,12 +439,12 @@ impl PretrainTrainer {
     /// `step` under `dir`.
     pub fn save_state(&self, dir: &Path, step: u64, keep_last: usize) -> Result<()> {
         let mut full = StateDict::new();
-        for fslot in &self.full_slots {
+        for fslot in &self.engine.ipa_full {
             full.merge_prefixed(&format!("adam[{}].", fslot.name), fslot.adam.state_dict());
         }
         let groups = [
             ("params", self.store.state_dict()),
-            ("subspace", self.subspace.state_dict()),
+            ("subspace", self.subspace().state_dict()),
             ("full", full),
             ("rng", self.rng.state_dict()),
         ];
@@ -431,9 +472,13 @@ impl PretrainTrainer {
         loaded.expect_meta("seed", &self.cfg.seed.to_string())?;
         loaded.expect_meta("sampler", self.cfg.sampler.name())?;
         self.store.load_state(loaded.group("params")?)?;
-        self.subspace.load_state(loaded.group("subspace")?)?;
+        self.engine
+            .subspace
+            .as_mut()
+            .expect("subspace")
+            .load_state(loaded.group("subspace")?)?;
         let full = loaded.group("full")?;
-        for fslot in &mut self.full_slots {
+        for fslot in &mut self.engine.ipa_full {
             fslot
                 .adam
                 .load_state(&full.extract_prefixed(&format!("adam[{}].", fslot.name)))

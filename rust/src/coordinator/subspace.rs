@@ -5,6 +5,13 @@
 //!   inputs  `params[<name>]`, `bs[<name>]`, `vs[<name>]`, `tokens`, …
 //!   outputs `out[0]` (loss), `out[1][<name>]` (dB), `out[2][<name>]`
 //!   (full-rank gradients for embeddings/norms — LM artifacts only).
+//!
+//! B and V are `Arc`-backed so the trainers stage them into artifact
+//! inputs by reference-count bump (zero-copy); mutation goes through
+//! `Arc::make_mut`, which is in-place whenever no staged clone is alive
+//! — i.e. always, in the steady-state step loop.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -32,8 +39,10 @@ pub struct MatrixSlot {
     pub db_output: usize,
     /// Position of W in the [`ParamStore`].
     pub param_pos: usize,
-    pub b: Vec<f32>,
-    pub v: Vec<f32>,
+    /// Auxiliary B (m×r), shared with the staging path (see module docs).
+    pub b: Arc<Vec<f32>>,
+    /// Projector V (n×r), shared with the staging path.
+    pub v: Arc<Vec<f32>>,
     pub adam: Adam,
 }
 
@@ -62,6 +71,13 @@ fn bracket_name(s: &str, prefix: &str) -> Option<String> {
 }
 
 impl SubspaceSet {
+    /// Assemble directly from slots — the manifest-free path the engine
+    /// golden tests and allocation benches use.
+    pub fn from_slots(slots: Vec<MatrixSlot>, kind: ProjectorKind, c: f64) -> Self {
+        assert!(!slots.is_empty(), "a SubspaceSet needs at least one slot");
+        SubspaceSet { slots, kind, c, outer_iterations: 0 }
+    }
+
     /// Build from a manifest that has `bs[...]`/`vs[...]` inputs (the
     /// grad-style artifacts).
     pub fn from_manifest(
@@ -101,8 +117,8 @@ impl SubspaceSet {
                 v_input,
                 db_output,
                 param_pos,
-                b: vec![0.0; m * r],
-                v: vec![0.0; n * r],
+                b: Arc::new(vec![0.0; m * r]),
+                v: Arc::new(vec![0.0; n * r]),
                 adam: Adam::new(m * r, adam_cfg),
             });
         }
@@ -146,8 +162,8 @@ impl SubspaceSet {
                 v_input,
                 db_output: usize::MAX,
                 param_pos,
-                b: vec![0.0; m * r],
-                v: vec![0.0; n * r],
+                b: Arc::new(vec![0.0; m * r]),
+                v: Arc::new(vec![0.0; n * r]),
                 adam: Adam::new(m * r, adam_cfg),
             });
         }
@@ -168,10 +184,10 @@ impl SubspaceSet {
         let dims: Vec<(usize, usize)> = self.slots.iter().map(|s| (s.n, s.r)).collect();
         let vs = sample_batch(self.kind, &dims, self.c, None, rng);
         for (slot, v) in self.slots.iter_mut().zip(vs) {
-            for (dst, src) in slot.v.iter_mut().zip(&v.data) {
+            for (dst, src) in Arc::make_mut(&mut slot.v).iter_mut().zip(&v.data) {
                 *dst = *src as f32;
             }
-            slot.b.iter_mut().for_each(|x| *x = 0.0);
+            Arc::make_mut(&mut slot.b).iter_mut().for_each(|x| *x = 0.0);
             slot.adam.reset();
         }
         self.outer_iterations += 1;
@@ -190,12 +206,12 @@ impl SubspaceSet {
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
         for (slot, theta) in self.slots.iter().zip(thetas) {
             let (m, n, r) = (slot.m, slot.n, slot.r);
-            let (b, v) = (&slot.b, &slot.v);
+            let (b, v) = (slot.b.as_slice(), slot.v.as_slice());
             tasks.push(Box::new(move || kernel::serial::gemm_nt(1.0f32, b, v, theta, m, n, r)));
         }
         pool.run(tasks);
         for slot in &mut self.slots {
-            slot.b.iter_mut().for_each(|x| *x = 0.0);
+            Arc::make_mut(&mut slot.b).iter_mut().for_each(|x| *x = 0.0);
         }
         Ok(())
     }
@@ -209,7 +225,9 @@ impl SubspaceSet {
         let pool = kernel::global();
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
         for (slot, g) in self.slots.iter_mut().zip(grads) {
-            tasks.push(Box::new(move || slot.adam.step(&mut slot.b, g.as_ref(), lr)));
+            tasks.push(Box::new(move || {
+                slot.adam.step(Arc::make_mut(&mut slot.b), g.as_ref(), lr)
+            }));
         }
         pool.run(tasks);
     }
@@ -239,8 +257,14 @@ impl crate::ckpt::Checkpointable for SubspaceSet {
         let mut sd = crate::ckpt::StateDict::new();
         sd.put_u64s("outer_iterations", &[self.outer_iterations]);
         for slot in &self.slots {
-            sd.put_f32(format!("b[{}]", slot.name), vec![slot.m, slot.r], slot.b.clone());
-            sd.put_f32(format!("v[{}]", slot.name), vec![slot.n, slot.r], slot.v.clone());
+            sd.put_tensor(
+                format!("b[{}]", slot.name),
+                crate::runtime::HostTensor::f32_shared(vec![slot.m, slot.r], slot.b.clone()),
+            );
+            sd.put_tensor(
+                format!("v[{}]", slot.name),
+                crate::runtime::HostTensor::f32_shared(vec![slot.n, slot.r], slot.v.clone()),
+            );
             sd.merge_prefixed(&format!("adam[{}].", slot.name), slot.adam.state_dict());
         }
         sd
@@ -253,7 +277,11 @@ impl crate::ckpt::Checkpointable for SubspaceSet {
             bail!("subspace checkpoint has {} tensors, expected {want}", sd.len());
         }
         let outer = sd.u64("outer_iterations")?;
-        let mut staged: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(self.slots.len());
+        // validate every slot's shapes/dtypes, staging the payloads by
+        // Arc share (no per-slot copy — the live buffers unshare lazily
+        // on first mutation) …
+        let mut staged_b: Vec<Arc<Vec<f32>>> = Vec::with_capacity(self.slots.len());
+        let mut staged_v: Vec<Arc<Vec<f32>>> = Vec::with_capacity(self.slots.len());
         for slot in &self.slots {
             let b_t = sd.tensor(&format!("b[{}]", slot.name))?;
             if b_t.shape() != [slot.m, slot.r] {
@@ -265,6 +293,7 @@ impl crate::ckpt::Checkpointable for SubspaceSet {
                     slot.r
                 );
             }
+            staged_b.push(b_t.f32_arc()?);
             let v_t = sd.tensor(&format!("v[{}]", slot.name))?;
             if v_t.shape() != [slot.n, slot.r] {
                 bail!(
@@ -275,10 +304,10 @@ impl crate::ckpt::Checkpointable for SubspaceSet {
                     slot.r
                 );
             }
-            staged.push((b_t.as_f32()?.to_vec(), v_t.as_f32()?.to_vec()));
+            staged_v.push(v_t.f32_arc()?);
         }
-        // all validated — now apply
-        for (slot, (b, v)) in self.slots.iter_mut().zip(staged) {
+        // … then apply
+        for ((slot, b), v) in self.slots.iter_mut().zip(staged_b).zip(staged_v) {
             slot.b = b;
             slot.v = v;
             slot.adam
@@ -334,9 +363,7 @@ output 1 out[1][w0] f32 4x2
         for k in 0..3 {
             let g: Vec<f32> = (0..8).map(|i| (k * 8 + i) as f32 * 0.1 - 0.3).collect();
             let slot = &mut src.slots[0];
-            let mut b = std::mem::take(&mut slot.b);
-            slot.adam.step(&mut b, &g, 1e-2);
-            slot.b = b;
+            slot.adam.step(std::sync::Arc::make_mut(&mut slot.b), &g, 1e-2);
         }
         let sd = src.state_dict();
 

@@ -1,0 +1,755 @@
+//! The estimator engine — the crate's **single** implementation of the
+//! paper's Algorithm-1 step pipeline:
+//!
+//! ```text
+//!   project  →  estimate  →  lift  →  update
+//! ```
+//!
+//! draw a projector V (and, for the LR/ZO family, a perturbation Z),
+//! obtain the raw gradient signal (a closed-form oracle on the toy
+//! problem, artifact outputs in training), lift the low-rank estimate
+//! back to the ambient space, and apply the update. Before this module
+//! existed the pipeline was implemented three times — `estimator/toy.rs`
+//! for §6.1, `coordinator/finetune.rs` for Table 1, and
+//! `coordinator/pretrain.rs` for Figures 7–9 — each with its own
+//! per-step allocation churn. Both instantiations here own preallocated
+//! workspaces, so the steady-state step loop reuses every buffer:
+//!
+//! * [`GradEstimator`] — the f32, artifact-driven engine the finetune
+//!   and pretrain trainers route through. One [`GradEstimator::step`]
+//!   covers all four method shapes ([`MethodShape`]); the LowRank-LR
+//!   path is heap-allocation-free after warm-up on a serial pool (the
+//!   `engine_alloc` test and `train_step` bench pin this down).
+//! * [`OracleEngine`] — the f64, oracle-driven engine behind the §6.1
+//!   MSE study ([`super::mse`]): the same four shapes forming one-shot
+//!   estimates against [`ToyProblem`]'s closed-form gradient.
+//!
+//! Both run every dense op through [`crate::kernel`], so the bitwise
+//! serial ≡ parallel guarantee of the substrate lifts to whole training
+//! trajectories and MSE curves.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::toy::ToyProblem;
+use super::Family;
+use crate::coordinator::{FullSlot, MatrixSlot, SubspaceSet};
+use crate::kernel;
+use crate::linalg::{matmul, Mat};
+use crate::model::ParamStore;
+use crate::optim::{Adam, AdamConfig};
+use crate::projection::ProjectionSampler;
+use crate::rng::Rng;
+
+/// The four estimator shapes of Algorithm 1 (paper Examples 1–3):
+/// {IPA, LR} × {full-rank, low-rank}.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodShape {
+    /// Full-rank pathwise gradient (backprop), plain optimizer step.
+    FullIpa,
+    /// Rank-r reparameterization W = Θ + B·Vᵀ; dB from the estimate
+    /// source, subspace optimizer on B (Example 1 projected).
+    LowRankIpa,
+    /// Full-rank antithetic two-point ZO (Example 2), SGD on Θ.
+    FullLr,
+    /// Rank-r antithetic ZO over σ·Z·Vᵀ (Example 3(ii)), subspace
+    /// optimizer on B with ĝ_B = scale·Z, Θ kept lifted.
+    LowRankLr,
+}
+
+impl MethodShape {
+    pub fn of(family: Family, low_rank: bool) -> MethodShape {
+        match (family, low_rank) {
+            (Family::Ipa, false) => MethodShape::FullIpa,
+            (Family::Ipa, true) => MethodShape::LowRankIpa,
+            (Family::Lr, false) => MethodShape::FullLr,
+            (Family::Lr, true) => MethodShape::LowRankLr,
+        }
+    }
+
+    pub fn family(&self) -> Family {
+        match self {
+            MethodShape::FullIpa | MethodShape::LowRankIpa => Family::Ipa,
+            MethodShape::FullLr | MethodShape::LowRankLr => Family::Lr,
+        }
+    }
+
+    pub fn is_low_rank(&self) -> bool {
+        matches!(self, MethodShape::LowRankIpa | MethodShape::LowRankLr)
+    }
+
+    /// LR/ZO family — the shapes that draw per-step perturbations.
+    pub fn is_lr(&self) -> bool {
+        self.family() == Family::Lr
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodShape::FullIpa => "full-ipa",
+            MethodShape::LowRankIpa => "lowrank-ipa",
+            MethodShape::FullLr => "full-lr",
+            MethodShape::LowRankLr => "lowrank-lr",
+        }
+    }
+}
+
+/// (G·V)·Vᵀ — project a gradient onto span(V) and lift back: the
+/// low-rank estimator's defining map, O(mnr), never forming P = VVᵀ.
+pub fn project_lift(g: &Mat, v: &Mat) -> Mat {
+    assert_eq!(
+        g.cols, v.rows,
+        "project_lift: G is {}x{}, V is {}x{}",
+        g.rows, g.cols, v.rows, v.cols
+    );
+    let gv = matmul(g, v); // m×r
+    let mut out = Mat::zeros(g.rows, v.rows);
+    kernel::auto::gemm_nt(1.0f64, &gv.data, &v.data, &mut out.data, g.rows, v.rows, v.cols);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// f32 trainer engine
+// ---------------------------------------------------------------------------
+
+/// A full-rank ZO perturbation target (FullLr): one parameter tensor
+/// perturbed by σ·Z and updated by Θ ← Θ − lr·scale·Z. (The tensor's
+/// name lives in the `ParamStore` spec at `param_pos`.)
+pub struct ZoTarget {
+    pub param_pos: usize,
+    pub m: usize,
+    pub n: usize,
+}
+
+/// The distinguished classifier-head channel of the finetune trainer:
+/// full-rank, with its own Adam moments and its own per-step Z draw
+/// (drawn *before* the slot Z's — the canonical stream order).
+pub struct HeadChannel {
+    pub param_pos: usize,
+    pub adam: Adam,
+    /// Per-step perturbation; stays all-zero for the IPA shapes (the
+    /// artifacts still take a `z_head` input there).
+    z: Arc<Vec<f32>>,
+    /// Scaled-gradient scratch g = scale·z.
+    g: Vec<f32>,
+}
+
+impl HeadChannel {
+    /// Share the head Z buffer for zero-copy input staging.
+    pub fn z_arc(&self) -> Arc<Vec<f32>> {
+        self.z.clone()
+    }
+}
+
+/// Per-step gradient signal from the estimate source (artifact outputs
+/// in training, synthetic values in tests/benches).
+pub enum GradSignal<'a> {
+    /// LR family: the two antithetic forward losses F(Θ±σΔ).
+    Antithetic { f_plus: f32, f_minus: f32 },
+    /// IPA family: per-slot gradient views — subspace dB's first (in
+    /// slot order), then the full-rank dΘ's (in `ipa_full` order) —
+    /// plus the optional head gradient. `grad_norm` short-circuits the
+    /// engine's norm when the caller already computed it (pretrain's
+    /// global-norm clip).
+    Grads {
+        loss: f32,
+        slots: &'a [&'a [f32]],
+        head: Option<&'a [f32]>,
+        grad_norm: Option<f32>,
+    },
+}
+
+/// What one engine step reports back to the trainer's metrics log.
+#[derive(Clone, Copy, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    pub grad_norm: f32,
+}
+
+/// The f32 Algorithm-1 pipeline object: owns the subspace state
+/// (B, V, Adam per matrix), the full-rank channels, and every per-step
+/// scratch buffer, and exposes one [`step`](Self::step) covering all
+/// four [`MethodShape`]s. Perturbation buffers are `Arc`-backed so the
+/// trainers stage them into artifact inputs without copying.
+pub struct GradEstimator {
+    pub shape: MethodShape,
+    /// ZO perturbation scale σ (LR shapes).
+    pub sigma: f32,
+    /// Low-rank (B, V, Adam) state — `Some` for the low-rank shapes.
+    pub subspace: Option<SubspaceSet>,
+    /// Full-rank ZO targets (FullLr shape).
+    pub full_lr: Vec<ZoTarget>,
+    /// Full-rank IPA gradient targets with their Adam moments
+    /// (FullIpa: every trainable; LowRankIpa: embeddings/norms).
+    pub ipa_full: Vec<FullSlot>,
+    /// Optional head channel (finetune).
+    pub head: Option<HeadChannel>,
+    /// Per-slot perturbation draws, reused every step (LR shapes).
+    z: Vec<Arc<Vec<f32>>>,
+    /// Per-slot scaled-gradient scratch (LowRankLr).
+    g: Vec<Vec<f32>>,
+    /// Per-slot previous-B scratch for the Θ delta push (LowRankLr).
+    b_prev: Vec<Vec<f32>>,
+    /// Cached store positions of the LowRankLr slot fan-out.
+    lr_positions: Vec<usize>,
+    /// Cached store positions of the `ipa_full` fan-out.
+    ipa_positions: Vec<usize>,
+}
+
+impl GradEstimator {
+    /// Assemble an engine. `head` is `(store position, element count,
+    /// Adam config)` for the finetune head channel.
+    pub fn new(
+        shape: MethodShape,
+        sigma: f32,
+        subspace: Option<SubspaceSet>,
+        full_lr: Vec<ZoTarget>,
+        ipa_full: Vec<FullSlot>,
+        head: Option<(usize, usize, AdamConfig)>,
+    ) -> Self {
+        let (z, g, b_prev, lr_positions) = match shape {
+            MethodShape::LowRankLr => {
+                let sub = subspace.as_ref().expect("LowRankLr engine needs a subspace");
+                (
+                    sub.slots.iter().map(|s| Arc::new(vec![0.0f32; s.m * s.r])).collect(),
+                    sub.slots.iter().map(|s| vec![0.0f32; s.m * s.r]).collect(),
+                    sub.slots.iter().map(|s| vec![0.0f32; s.m * s.r]).collect(),
+                    sub.slots.iter().map(|s| s.param_pos).collect(),
+                )
+            }
+            MethodShape::FullLr => (
+                full_lr.iter().map(|t| Arc::new(vec![0.0f32; t.m * t.n])).collect(),
+                Vec::new(),
+                Vec::new(),
+                Vec::new(),
+            ),
+            _ => (Vec::new(), Vec::new(), Vec::new(), Vec::new()),
+        };
+        let ipa_positions = ipa_full.iter().map(|f| f.param_pos).collect();
+        let head = head.map(|(param_pos, len, cfg)| HeadChannel {
+            param_pos,
+            adam: Adam::new(len, cfg),
+            z: Arc::new(vec![0.0f32; len]),
+            g: vec![0.0f32; len],
+        });
+        GradEstimator {
+            shape,
+            sigma,
+            subspace,
+            full_lr,
+            ipa_full,
+            head,
+            z,
+            g,
+            b_prev,
+            lr_positions,
+            ipa_positions,
+        }
+    }
+
+    /// Share slot `i`'s perturbation buffer for zero-copy staging.
+    pub fn z_arc(&self, i: usize) -> Arc<Vec<f32>> {
+        self.z[i].clone()
+    }
+
+    /// Share the head perturbation buffer for zero-copy staging.
+    pub fn head_z_arc(&self) -> Arc<Vec<f32>> {
+        self.head.as_ref().expect("engine has no head channel").z_arc()
+    }
+
+    /// Draw the per-step perturbations in place (LR shapes; a no-op for
+    /// the IPA shapes, whose head Z stays zero). Stream order is the
+    /// canonical one the pre-engine trainers used: head Z first, then
+    /// one buffer per slot in slot order. Buffers are unshared by the
+    /// time this runs (staged clones die right after `execute`), so the
+    /// fill is in-place and allocation-free in steady state.
+    pub fn draw_perturbations(&mut self, rng: &mut Rng) {
+        if !self.shape.is_lr() {
+            return;
+        }
+        if let Some(h) = &mut self.head {
+            for zi in Arc::make_mut(&mut h.z).iter_mut() {
+                *zi = rng.normal() as f32;
+            }
+        }
+        for z in &mut self.z {
+            for zi in Arc::make_mut(z).iter_mut() {
+                *zi = rng.normal() as f32;
+            }
+        }
+    }
+
+    /// One Algorithm-1 update: consume the step's gradient signal and
+    /// apply the shape's optimizer update to `store`. Per-matrix work
+    /// fans out across the kernel pool (bitwise equal to serial); on a
+    /// single-thread pool the LowRank-LR path runs inline without
+    /// boxing tasks, keeping the steady-state loop heap-allocation-free.
+    pub fn step(
+        &mut self,
+        store: &mut ParamStore,
+        signal: GradSignal<'_>,
+        lr: f32,
+    ) -> Result<StepStats> {
+        match self.shape {
+            MethodShape::FullIpa => {
+                let GradSignal::Grads { loss, slots, grad_norm, .. } = signal else {
+                    bail!("FullIpa step expects per-slot gradients");
+                };
+                if slots.len() != self.ipa_full.len() {
+                    bail!(
+                        "FullIpa step got {} gradients for {} slots",
+                        slots.len(),
+                        self.ipa_full.len()
+                    );
+                }
+                let mut norm_sq = 0f64;
+                for (fslot, g) in self.ipa_full.iter_mut().zip(slots) {
+                    norm_sq += g.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+                    fslot.adam.step(store.f32_mut(fslot.param_pos)?, g, lr);
+                }
+                let grad_norm = grad_norm.unwrap_or_else(|| norm_sq.sqrt() as f32);
+                Ok(StepStats { loss, grad_norm })
+            }
+
+            MethodShape::LowRankIpa => {
+                let GradSignal::Grads { loss, slots, head, grad_norm } = signal else {
+                    bail!("LowRankIpa step expects per-slot gradients");
+                };
+                let sub = self.subspace.as_mut().context("LowRankIpa engine has no subspace")?;
+                let n_sub = sub.slots.len();
+                if slots.len() != n_sub + self.ipa_full.len() {
+                    bail!(
+                        "LowRankIpa step got {} gradients for {} subspace + {} full slots",
+                        slots.len(),
+                        n_sub,
+                        self.ipa_full.len()
+                    );
+                }
+                // grad norm over the dB's only (the finetune metric) —
+                // skipped entirely when the caller already computed one
+                // (pretrain passes its global-norm clip result).
+                let grad_norm = grad_norm.unwrap_or_else(|| {
+                    let mut norm_sq = 0f64;
+                    for g in &slots[..n_sub] {
+                        norm_sq += g.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>();
+                    }
+                    norm_sq.sqrt() as f32
+                });
+                // per-slot Adam steps fan out across the kernel pool
+                sub.adam_step_all(&slots[..n_sub], lr);
+                // full-rank channels (embeddings/norms), same fan-out
+                if !self.ipa_full.is_empty() {
+                    let fgrads = &slots[n_sub..];
+                    let pool = kernel::global();
+                    if pool.threads() == 1 {
+                        for (fslot, g) in self.ipa_full.iter_mut().zip(fgrads) {
+                            fslot.adam.step(store.f32_mut(fslot.param_pos)?, g, lr);
+                        }
+                    } else {
+                        let params = store.f32_mut_many(&self.ipa_positions)?;
+                        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                            Vec::with_capacity(self.ipa_full.len());
+                        for ((fslot, p), g) in
+                            self.ipa_full.iter_mut().zip(params).zip(fgrads)
+                        {
+                            tasks.push(Box::new(move || fslot.adam.step(p, g, lr)));
+                        }
+                        pool.run(tasks);
+                    }
+                }
+                if let Some(h) = &mut self.head {
+                    if let Some(gh) = head {
+                        h.adam.step(store.f32_mut(h.param_pos)?, gh, lr);
+                    }
+                }
+                Ok(StepStats { loss, grad_norm })
+            }
+
+            MethodShape::LowRankLr => {
+                let GradSignal::Antithetic { f_plus, f_minus } = signal else {
+                    bail!("LowRankLr step expects antithetic losses");
+                };
+                let scale = (f_plus - f_minus) / (2.0 * self.sigma);
+                let sub = self.subspace.as_mut().context("LowRankLr engine has no subspace")?;
+                // ĝ_B = scale·Z; Adam step on B, then push the *delta*
+                // into Θ so Θ stays the lifted point. Slots touch
+                // disjoint (B, Adam, Θ, scratch) tuples, so the whole
+                // update fans out across the kernel pool.
+                let pool = kernel::global();
+                if pool.threads() == 1 {
+                    for (((slot, z), g), bp) in sub
+                        .slots
+                        .iter_mut()
+                        .zip(self.z.iter())
+                        .zip(self.g.iter_mut())
+                        .zip(self.b_prev.iter_mut())
+                    {
+                        let theta = store.f32_mut(slot.param_pos)?;
+                        lowrank_lr_slot_update(slot, z.as_slice(), g, bp, theta, scale, lr);
+                    }
+                } else {
+                    let thetas = store.f32_mut_many(&self.lr_positions)?;
+                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                        Vec::with_capacity(sub.slots.len());
+                    for ((((slot, theta), z), g), bp) in sub
+                        .slots
+                        .iter_mut()
+                        .zip(thetas)
+                        .zip(self.z.iter())
+                        .zip(self.g.iter_mut())
+                        .zip(self.b_prev.iter_mut())
+                    {
+                        tasks.push(Box::new(move || {
+                            lowrank_lr_slot_update(
+                                slot,
+                                z.as_slice(),
+                                g,
+                                bp,
+                                theta,
+                                scale,
+                                lr,
+                            )
+                        }));
+                    }
+                    pool.run(tasks);
+                }
+                if let Some(h) = &mut self.head {
+                    for (gi, zi) in h.g.iter_mut().zip(h.z.iter()) {
+                        *gi = scale * *zi;
+                    }
+                    h.adam.step(store.f32_mut(h.param_pos)?, &h.g, lr);
+                }
+                Ok(StepStats { loss: (f_plus + f_minus) * 0.5, grad_norm: scale.abs() })
+            }
+
+            MethodShape::FullLr => {
+                let GradSignal::Antithetic { f_plus, f_minus } = signal else {
+                    bail!("FullLr step expects antithetic losses");
+                };
+                let scale = (f_plus - f_minus) / (2.0 * self.sigma);
+                // MeZO-style SGD: Θ ← Θ − lr·scale·Z (kernel AXPY)
+                let pool = kernel::global();
+                let alpha = -(lr * scale);
+                for (target, z) in self.full_lr.iter().zip(self.z.iter()) {
+                    kernel::axpy(&pool, alpha, z.as_slice(), store.f32_mut(target.param_pos)?);
+                }
+                if let Some(h) = &mut self.head {
+                    kernel::axpy(&pool, alpha, h.z.as_slice(), store.f32_mut(h.param_pos)?);
+                }
+                Ok(StepStats { loss: (f_plus + f_minus) * 0.5, grad_norm: scale.abs() })
+            }
+        }
+    }
+}
+
+/// One LowRank-LR slot update, allocation-free: g ← scale·z, Adam on B,
+/// Θ += (B_new − B_old)·Vᵀ through the serial GEMM body (parallelism
+/// stays one level deep — the slot fan-out above this call).
+fn lowrank_lr_slot_update(
+    slot: &mut MatrixSlot,
+    z: &[f32],
+    g: &mut [f32],
+    b_prev: &mut [f32],
+    theta: &mut [f32],
+    scale: f32,
+    lr: f32,
+) {
+    for (gi, zi) in g.iter_mut().zip(z) {
+        *gi = scale * *zi;
+    }
+    b_prev.copy_from_slice(slot.b.as_slice());
+    slot.adam.step(Arc::make_mut(&mut slot.b), g, lr);
+    // reuse g as the B delta (the gradient is spent)
+    for (d, (bn, bo)) in g.iter_mut().zip(slot.b.iter().zip(b_prev.iter())) {
+        *d = *bn - *bo;
+    }
+    kernel::serial::gemm_nt(1.0f32, g, slot.v.as_slice(), theta, slot.m, slot.n, slot.r);
+}
+
+// ---------------------------------------------------------------------------
+// f64 oracle engine (§6.1 toy study)
+// ---------------------------------------------------------------------------
+
+/// The f64 instantiation of the pipeline: one-shot estimates against the
+/// toy problem's closed-form gradient oracle, with every intermediate
+/// (Z draw, lifted direction, antithetic points, projection, estimate)
+/// living in preallocated workspaces.
+pub struct OracleEngine {
+    pub shape: MethodShape,
+    m: usize,
+    n: usize,
+    r: usize,
+    sampler: Option<Box<dyn ProjectionSampler + Send + Sync>>,
+    /// Current projector draw V (n×r).
+    v: Mat,
+    /// Perturbation draw Z (m×r low-rank, m×n full-rank).
+    z: Mat,
+    /// Lifted perturbation direction Z·Vᵀ (m×n).
+    dir: Mat,
+    /// Antithetic evaluation points W ± σΔ.
+    wp: Mat,
+    wm: Mat,
+    /// Raw full-rank IPA estimate ĝ (m×n).
+    ghat: Mat,
+    /// Projection scratch ĝ·V (m×r).
+    gv: Mat,
+    /// The step's estimate (m×n).
+    est: Mat,
+}
+
+impl OracleEngine {
+    /// Build an engine for an m×n decision variable. `r` and `sampler`
+    /// are consumed by the low-rank shapes only (`r` ignored, `sampler`
+    /// unused otherwise).
+    pub fn new(
+        shape: MethodShape,
+        m: usize,
+        n: usize,
+        r: usize,
+        sampler: Option<Box<dyn ProjectionSampler + Send + Sync>>,
+    ) -> Self {
+        assert!(
+            !shape.is_low_rank() || sampler.is_some(),
+            "low-rank shape {} needs a projection sampler",
+            shape.name()
+        );
+        let empty = || Mat::zeros(0, 0);
+        let (z, dir) = match shape {
+            MethodShape::LowRankLr => (Mat::zeros(m, r), Mat::zeros(m, n)),
+            MethodShape::FullLr => (Mat::zeros(m, n), empty()),
+            _ => (empty(), empty()),
+        };
+        let (wp, wm) = if shape.is_lr() {
+            (Mat::zeros(m, n), Mat::zeros(m, n))
+        } else {
+            (empty(), empty())
+        };
+        let (ghat, gv) = if shape == MethodShape::LowRankIpa {
+            (Mat::zeros(m, n), Mat::zeros(m, r))
+        } else {
+            (empty(), empty())
+        };
+        OracleEngine {
+            shape,
+            m,
+            n,
+            r,
+            sampler,
+            v: empty(),
+            z,
+            dir,
+            wp,
+            wm,
+            ghat,
+            gv,
+            est: Mat::zeros(m, n),
+        }
+    }
+
+    /// Rank budget r (0 for the full-rank shapes).
+    pub fn rank(&self) -> usize {
+        self.r
+    }
+
+    /// One project→estimate→lift pass: form this step's estimate at
+    /// evaluation point `w` for the data draw `a`, consuming (V, Z)
+    /// draws from `rng` in the canonical order (V before Z). Returns a
+    /// view of the workspace estimate — valid until the next step.
+    pub fn step(
+        &mut self,
+        problem: &ToyProblem,
+        w: &Mat,
+        a: &[f64],
+        rng: &mut Rng,
+        zo_sigma: f64,
+    ) -> &Mat {
+        match self.shape {
+            MethodShape::FullIpa => {
+                problem.ipa_estimate_into(w, a, &mut self.est);
+            }
+            MethodShape::LowRankIpa => {
+                self.v = self.sampler.as_mut().expect("sampler").sample(rng);
+                problem.ipa_estimate_into(w, a, &mut self.ghat);
+                // est = (ĝ·V)·Vᵀ
+                for x in &mut self.gv.data {
+                    *x = 0.0;
+                }
+                kernel::auto::gemm_nn(
+                    &self.ghat.data,
+                    &self.v.data,
+                    &mut self.gv.data,
+                    self.m,
+                    self.n,
+                    self.r,
+                );
+                for x in &mut self.est.data {
+                    *x = 0.0;
+                }
+                kernel::auto::gemm_nt(
+                    1.0f64,
+                    &self.gv.data,
+                    &self.v.data,
+                    &mut self.est.data,
+                    self.m,
+                    self.n,
+                    self.r,
+                );
+            }
+            MethodShape::FullLr => {
+                for zi in &mut self.z.data {
+                    *zi = rng.normal();
+                }
+                self.wp.data.copy_from_slice(&w.data);
+                self.wp.axpy_inplace(zo_sigma, &self.z);
+                self.wm.data.copy_from_slice(&w.data);
+                self.wm.axpy_inplace(-zo_sigma, &self.z);
+                let scale =
+                    (problem.loss(&self.wp, a) - problem.loss(&self.wm, a)) / (2.0 * zo_sigma);
+                for (e, zi) in self.est.data.iter_mut().zip(&self.z.data) {
+                    *e = *zi * scale;
+                }
+            }
+            MethodShape::LowRankLr => {
+                self.v = self.sampler.as_mut().expect("sampler").sample(rng);
+                for zi in &mut self.z.data {
+                    *zi = rng.normal();
+                }
+                // Δ = Z·Vᵀ, the rank-r perturbation direction
+                for x in &mut self.dir.data {
+                    *x = 0.0;
+                }
+                kernel::auto::gemm_nt(
+                    1.0f64,
+                    &self.z.data,
+                    &self.v.data,
+                    &mut self.dir.data,
+                    self.m,
+                    self.n,
+                    self.r,
+                );
+                self.wp.data.copy_from_slice(&w.data);
+                self.wp.axpy_inplace(zo_sigma, &self.dir);
+                self.wm.data.copy_from_slice(&w.data);
+                self.wm.axpy_inplace(-zo_sigma, &self.dir);
+                let scale =
+                    (problem.loss(&self.wp, a) - problem.loss(&self.wm, a)) / (2.0 * zo_sigma);
+                for (e, di) in self.est.data.iter_mut().zip(&self.dir.data) {
+                    *e = *di * scale;
+                }
+            }
+        }
+        &self.est
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::projection::{projector_matrix, StiefelSampler};
+
+    #[test]
+    fn project_lift_equals_g_times_p() {
+        let mut rng = Rng::new(17);
+        let g = Mat::from_fn(7, 9, |_, _| rng.normal());
+        let mut s = StiefelSampler::new(9, 3, 1.0);
+        let v = s.sample(&mut rng);
+        let fast = project_lift(&g, &v);
+        let p = projector_matrix(&v);
+        let slow = matmul(&g, &p);
+        assert!(fast.max_abs_diff(&slow) < 1e-9);
+    }
+
+    #[test]
+    fn shape_table_is_consistent() {
+        for (family, low_rank, want) in [
+            (Family::Ipa, false, MethodShape::FullIpa),
+            (Family::Ipa, true, MethodShape::LowRankIpa),
+            (Family::Lr, false, MethodShape::FullLr),
+            (Family::Lr, true, MethodShape::LowRankLr),
+        ] {
+            let s = MethodShape::of(family, low_rank);
+            assert_eq!(s, want);
+            assert_eq!(s.family(), family);
+            assert_eq!(s.is_low_rank(), low_rank);
+            assert_eq!(s.is_lr(), family == Family::Lr);
+        }
+    }
+
+    #[test]
+    fn oracle_lr_2pt_estimator_is_unbiased_for_quadratic() {
+        // For a quadratic sample path the antithetic 2-point ZO estimator
+        // is exactly unbiased (no O(σ²) smoothing bias).
+        let p = ToyProblem::small(9);
+        let w = p.eval_point(10);
+        let g = p.true_gradient(&w);
+        let mut rng = Rng::new(11);
+        let mut engine = OracleEngine::new(MethodShape::FullLr, p.m, p.n, 0, None);
+        let n_mc = 60_000;
+        let mut mean = Mat::zeros(p.m, p.n);
+        for _ in 0..n_mc {
+            let a = p.sample_a(&mut rng);
+            let est = engine.step(&p, &w, &a, &mut rng, 1e-2);
+            mean.axpy_inplace(1.0 / n_mc as f64, est);
+        }
+        // O(mn/N) relative variance: the tolerance is statistical.
+        let rel = mean.sub(&g).fro_norm() / g.fro_norm();
+        assert!(rel < 0.25, "LR bias: rel err {rel}");
+    }
+
+    #[test]
+    fn oracle_lowrank_ipa_weakly_unbiased_with_c() {
+        // E[ĝ·P] = c·g — check at c = 0.5 through the engine pipeline.
+        let p = ToyProblem::small(13);
+        let w = p.eval_point(14);
+        let g = p.true_gradient(&w);
+        let c = 0.5;
+        let sampler = Box::new(StiefelSampler::new(p.n, 4, c));
+        let mut engine = OracleEngine::new(MethodShape::LowRankIpa, p.m, p.n, 4, Some(sampler));
+        let mut rng = Rng::new(15);
+        let n_mc = 20_000;
+        let mut mean = Mat::zeros(p.m, p.n);
+        for _ in 0..n_mc {
+            let a = p.sample_a(&mut rng);
+            let est = engine.step(&p, &w, &a, &mut rng, 1e-2);
+            mean.axpy_inplace(1.0 / n_mc as f64, est);
+        }
+        let target = g.scaled(c);
+        let rel = mean.sub(&target).fro_norm() / target.fro_norm();
+        assert!(rel < 0.1, "LowRank-IPA weak-unbiasedness rel err {rel}");
+    }
+
+    #[test]
+    fn oracle_engine_matches_inline_reference_bitwise() {
+        // The engine's workspace-reusing arithmetic must be bit-for-bit
+        // the pre-refactor per-step allocation style.
+        let p = ToyProblem::small(21);
+        let w = p.eval_point(22);
+        let sampler = Box::new(StiefelSampler::new(p.n, 3, 1.0));
+        let mut engine = OracleEngine::new(MethodShape::LowRankLr, p.m, p.n, 3, Some(sampler));
+        let mut rng_e = Rng::new(77);
+        let mut rng_r = Rng::new(77);
+        let sigma = 1e-2;
+        for _ in 0..5 {
+            let a_e = p.sample_a(&mut rng_e);
+            let est = engine.step(&p, &w, &a_e, &mut rng_e, sigma).clone();
+
+            // reference: fresh allocations, old-style ops
+            let a_r = p.sample_a(&mut rng_r);
+            assert_eq!(a_e, a_r);
+            let mut s = StiefelSampler::new(p.n, 3, 1.0);
+            let v = s.sample(&mut rng_r);
+            let z = Mat::from_fn(p.m, 3, |_, _| rng_r.normal());
+            let zvt = crate::linalg::matmul_nt(&z, &v);
+            let mut wp = w.clone();
+            wp.axpy_inplace(sigma, &zvt);
+            let mut wm = w.clone();
+            wm.axpy_inplace(-sigma, &zvt);
+            let scale = (p.loss(&wp, &a_r) - p.loss(&wm, &a_r)) / (2.0 * sigma);
+            let want = zvt.scaled(scale);
+            for (x, y) in est.data.iter().zip(&want.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

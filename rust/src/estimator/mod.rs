@@ -1,17 +1,25 @@
 //! Stochastic gradient estimators and their MSE theory (paper §3–§5)
 //! plus the §6.1 toy experiment.
 //!
+//! * [`engine`] — **the** Algorithm-1 pipeline: the single
+//!   project→estimate→lift→update implementation behind every method
+//!   shape. [`engine::GradEstimator`] (f32, preallocated workspaces,
+//!   zero-copy staging) is what the finetune and pretrain trainers step;
+//!   [`engine::OracleEngine`] (f64) is the same pipeline against the toy
+//!   problem's closed-form oracle.
 //! * [`theory`] — every closed form the paper derives: the Proposition 1
 //!   MSE decomposition, the Theorem 2 floor `n²c²/r`, the exact MSE of
 //!   isotropic-optimal and Gaussian projectors, Remark 1's baselines,
 //!   Theorem 3's Φ_min, Proposition 4's full-rank-matching condition and
 //!   the eq. (14) uniform bound.
-//! * [`toy`] — the quadratic matrix-regression problem (19) with its
-//!   closed-form gradient, IPA and two-point-LR estimators, and their
-//!   low-rank projections.
+//! * [`toy`] — the quadratic matrix-regression problem (19): data law,
+//!   loss, closed-form gradient, and the raw IPA oracle the engine
+//!   drives.
 //! * [`mse`] — the Monte-Carlo harness that regenerates Figures 2–5
-//!   (MSE versus sample size for each projector law and each c).
+//!   (MSE versus sample size for each projector law and each c),
+//!   fanning independent replications across the kernel pool.
 
+pub mod engine;
 pub mod mse;
 pub mod theory;
 pub mod toy;

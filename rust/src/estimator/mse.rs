@@ -6,8 +6,15 @@
 //! independent replications. With weak unbiasedness (c < 1) the curves
 //! plateau at the bias floor (1−c)²‖g‖_F² as N grows — the
 //! bias–variance trade-off the paper's §6.1 figures display.
+//!
+//! Estimates are formed by [`OracleEngine`] — the shared Algorithm-1
+//! pipeline — and whole replications fan out across the kernel pool:
+//! every rep runs on its own pre-forked child stream with its own
+//! engine (and sampler clone), so the curves are **bitwise identical**
+//! to the serial rep loop at any thread count.
 
-use super::toy::{project_lift, ToyProblem};
+use super::engine::{MethodShape, OracleEngine};
+use super::toy::ToyProblem;
 use super::Family;
 use crate::linalg::Mat;
 use crate::projection::{build_sampler, ProjectionSampler, ProjectorKind};
@@ -84,8 +91,11 @@ pub fn mse_curve(problem: &ToyProblem, w: &Mat, cfg: &MseCurveConfig) -> MseCurv
     let n_max = *cfg.sample_sizes.iter().max().expect("empty sample_sizes");
     let mut rng = Rng::new(cfg.seed);
 
-    // Dependent sampler needs Σ = Σ_ξ + Σ_Θ estimated once (warm-up).
-    let mut sampler: Option<Box<dyn ProjectionSampler + Send>> = match cfg.spec {
+    // Projector prototype. The Dependent law estimates Σ = Σ_ξ + Σ_Θ
+    // from warm-up draws first — consuming the parent stream exactly as
+    // the serial harness always did, before any rep stream is forked.
+    let shape = MethodShape::of(cfg.family, matches!(cfg.spec, EstimatorSpec::LowRank(_)));
+    let proto: Option<Box<dyn ProjectionSampler + Send + Sync>> = match cfg.spec {
         EstimatorSpec::LowRank(kind) => {
             let sigma = if kind == ProjectorKind::Dependent {
                 Some(problem.sigma_total(w, &mut rng, cfg.warmup, cfg.family, cfg.zo_sigma))
@@ -97,35 +107,56 @@ pub fn mse_curve(problem: &ToyProblem, w: &Mat, cfg: &MseCurveConfig) -> MseCurv
         EstimatorSpec::FullRank => None,
     };
 
+    // Fork every replication stream from the parent in rep order — the
+    // identical parent-stream consumption of a serial rep loop — then
+    // fan the reps out across the kernel pool. Each task builds its own
+    // engine from a clone of the prototype sampler (so live workspaces
+    // are bounded by the pool width, not the rep count); every law is
+    // draw-stateless, so a clone draws exactly what a shared sampler
+    // would: curves are bitwise identical at any thread count.
+    let rep_rngs: Vec<Rng> = (0..cfg.reps).map(|rep| rng.fork(rep as u64)).collect();
+    let mut partials: Vec<Vec<f64>> = vec![vec![0.0f64; cfg.sample_sizes.len()]; cfg.reps];
+    let pool = crate::kernel::global();
+    {
+        let scaled_truth = &scaled_truth;
+        let proto = &proto;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(cfg.reps);
+        for (mut rep_rng, out) in rep_rngs.into_iter().zip(partials.iter_mut()) {
+            tasks.push(Box::new(move || {
+                let mut engine = OracleEngine::new(
+                    shape,
+                    problem.m,
+                    problem.n,
+                    cfg.r,
+                    proto.as_ref().map(|s| s.clone_box()),
+                );
+                let mut mean = Mat::zeros(problem.m, problem.n);
+                let mut next_ckpt = 0usize;
+                for t in 1..=n_max {
+                    let a = problem.sample_a(&mut rep_rng);
+                    let est = engine.step(problem, w, &a, &mut rep_rng, cfg.zo_sigma);
+                    // running mean: ḡ_t = ḡ_{t−1} + (ĝ_t − ḡ_{t−1})/t
+                    let inv_t = 1.0 / t as f64;
+                    for (m_v, e_v) in mean.data.iter_mut().zip(&est.data) {
+                        *m_v += (e_v - *m_v) * inv_t;
+                    }
+                    while next_ckpt < cfg.sample_sizes.len()
+                        && cfg.sample_sizes[next_ckpt] == t
+                    {
+                        out[next_ckpt] += mean.sub(scaled_truth).fro_norm_sq();
+                        next_ckpt += 1;
+                    }
+                }
+            }));
+        }
+        pool.run(tasks);
+    }
+    // Combine rep partials in rep order — bitwise the serial
+    // rep-by-rep accumulation.
     let mut sums = vec![0.0f64; cfg.sample_sizes.len()];
-    for rep in 0..cfg.reps {
-        let mut rep_rng = rng.fork(rep as u64);
-        let mut mean = Mat::zeros(problem.m, problem.n);
-        let mut next_ckpt = 0usize;
-        for t in 1..=n_max {
-            let a = problem.sample_a(&mut rep_rng);
-            let est = match (&mut sampler, cfg.family) {
-                (None, Family::Ipa) => problem.ipa_estimate(w, &a),
-                (None, Family::Lr) => problem.lr_estimate(w, &a, &mut rep_rng, cfg.zo_sigma),
-                (Some(s), Family::Ipa) => {
-                    let v = s.sample(&mut rep_rng);
-                    let ghat = problem.ipa_estimate(w, &a);
-                    project_lift(&ghat, &v)
-                }
-                (Some(s), Family::Lr) => {
-                    let v = s.sample(&mut rep_rng);
-                    problem.lowrank_lr_estimate(w, &a, &mut rep_rng, cfg.zo_sigma, &v)
-                }
-            };
-            // running mean: ḡ_t = ḡ_{t−1} + (ĝ_t − ḡ_{t−1})/t
-            let inv_t = 1.0 / t as f64;
-            for (m_v, e_v) in mean.data.iter_mut().zip(&est.data) {
-                *m_v += (e_v - *m_v) * inv_t;
-            }
-            while next_ckpt < cfg.sample_sizes.len() && cfg.sample_sizes[next_ckpt] == t {
-                sums[next_ckpt] += mean.sub(&scaled_truth).fro_norm_sq();
-                next_ckpt += 1;
-            }
+    for p in &partials {
+        for (s, v) in sums.iter_mut().zip(p) {
+            *s += *v;
         }
     }
 

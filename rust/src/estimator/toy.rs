@@ -15,14 +15,13 @@
 //! lets the MSE of every estimator be measured exactly — this is the
 //! paper's controlled validation of Theorems 2–3.
 //!
-//! Estimators implemented (Example 1/2/3 shapes):
-//!   * full-rank IPA:  ĝ = Aᵀ(AWB − C)Bᵀ
-//!   * LowRank-IPA:    ĝ·P with P = VVᵀ
-//!   * full-rank LR:   antithetic 2-point ZO over Z ~ N(0, I_{mn})
-//!   * LowRank-LR:     antithetic 2-point ZO over the rank-r perturbation
-//!                     σZVᵀ, Z ∈ ℝ^{m×r}, lifted by Vᵀ.
+//! This module owns the *problem* (data law, loss, closed-form gradient,
+//! raw IPA estimate — the "estimate" stage's oracle). The four estimator
+//! shapes themselves (full/low-rank × IPA/LR) live in exactly one place:
+//! [`crate::estimator::engine::OracleEngine`], which drives this oracle
+//! through the shared project→estimate→lift pipeline.
 
-use crate::linalg::{cholesky, matmul, matmul_nt, matmul_tn, transpose, Mat};
+use crate::linalg::{cholesky, matmul, matmul_nt, matmul_tn, Mat};
 use crate::rng::Rng;
 
 /// Problem instance. The data covariance Σ_A is AR(1) with parameter ρ —
@@ -125,60 +124,35 @@ impl ToyProblem {
         g
     }
 
-    /// Full-rank IPA estimator ĝ = Aᵀ·(AWB − C)·Bᵀ (m×n).
+    /// Full-rank IPA estimator ĝ = Aᵀ·(AWB − C)·Bᵀ (m×n) — the IPA
+    /// family's raw oracle the engine projects and lifts.
     pub fn ipa_estimate(&self, w: &Mat, a: &[f64]) -> Mat {
+        let mut out = Mat::zeros(self.m, self.n);
+        self.ipa_estimate_into(w, a, &mut out);
+        out
+    }
+
+    /// [`ipa_estimate`](Self::ipa_estimate) into a preallocated m×n
+    /// workspace (the engine's steady-state entry point).
+    pub fn ipa_estimate_into(&self, w: &Mat, a: &[f64], out: &mut Mat) {
+        assert_eq!((out.rows, out.cols), (self.m, self.n));
         let res = self.residual(w, a); // 1×o
         // d = res·Bᵀ (1×n)
         let d = crate::linalg::matvec(&self.b, &res);
         // outer product aᵀ·d
-        Mat::from_fn(self.m, self.n, |i, j| a[i] * d[j])
-    }
-
-    /// LowRank-IPA: ĝ_IPA·P computed efficiently as (ĝ·V)·Vᵀ — never
-    /// forming P. Cost O(mnr) instead of O(mn²).
-    pub fn lowrank_ipa_estimate(&self, w: &Mat, a: &[f64], v: &Mat) -> Mat {
-        let g = self.ipa_estimate(w, a);
-        project_lift(&g, v)
-    }
-
-    /// Full-rank antithetic two-point LR/ZO estimator (Example 2):
-    /// ĝ = [F(W+σZ) − F(W−σZ)]/(2σ)·Z with Z ~ N(0, I_{mn}).
-    pub fn lr_estimate(&self, w: &Mat, a: &[f64], rng: &mut Rng, sigma: f64) -> Mat {
-        let z = Mat::from_fn(self.m, self.n, |_, _| rng.normal());
-        let mut wp = w.clone();
-        wp.axpy_inplace(sigma, &z);
-        let mut wm = w.clone();
-        wm.axpy_inplace(-sigma, &z);
-        let scale = (self.loss(&wp, a) - self.loss(&wm, a)) / (2.0 * sigma);
-        z.scaled(scale)
-    }
-
-    /// LowRank-LR (Example 3(ii)): rank-r antithetic perturbation σZVᵀ,
-    /// Z ∈ ℝ^{m×r}; estimator [F(W+σZVᵀ) − F(W−σZVᵀ)]/(2σ)·ZVᵀ.
-    pub fn lowrank_lr_estimate(
-        &self,
-        w: &Mat,
-        a: &[f64],
-        rng: &mut Rng,
-        sigma: f64,
-        v: &Mat,
-    ) -> Mat {
-        assert_eq!(v.rows, self.n);
-        let r = v.cols;
-        let z = Mat::from_fn(self.m, r, |_, _| rng.normal());
-        let zvt = matmul_nt(&z, v); // m×n rank-r perturbation direction
-        let mut wp = w.clone();
-        wp.axpy_inplace(sigma, &zvt);
-        let mut wm = w.clone();
-        wm.axpy_inplace(-sigma, &zvt);
-        let scale = (self.loss(&wp, a) - self.loss(&wm, a)) / (2.0 * sigma);
-        zvt.scaled(scale)
+        for i in 0..self.m {
+            let row = out.row_mut(i);
+            for (o, dj) in row.iter_mut().zip(&d) {
+                *o = a[i] * dj;
+            }
+        }
     }
 
     /// Data-noise second moment Σ_ξ = E[(ĝ−g)ᵀ(ĝ−g)] (n×n), estimated
     /// from `n_samples` warm-up draws of the given family's full-rank
     /// estimator — this is the "roughly estimated from a small set of
     /// warm-up samples" input to the instance-dependent design (§5.2).
+    /// The draws run through the engine's full-rank pipeline.
     pub fn sigma_xi_empirical(
         &self,
         w: &Mat,
@@ -188,13 +162,17 @@ impl ToyProblem {
         zo_sigma: f64,
     ) -> Mat {
         let g = self.true_gradient(w);
+        let mut engine = super::engine::OracleEngine::new(
+            super::engine::MethodShape::of(family, false),
+            self.m,
+            self.n,
+            0,
+            None,
+        );
         let mut acc = Mat::zeros(self.n, self.n);
         for _ in 0..n_samples {
             let a = self.sample_a(rng);
-            let ghat = match family {
-                super::Family::Ipa => self.ipa_estimate(w, &a),
-                super::Family::Lr => self.lr_estimate(w, &a, rng, zo_sigma),
-            };
+            let ghat = engine.step(self, w, &a, rng, zo_sigma);
             let delta = ghat.sub(&g);
             // acc += δᵀδ
             let dtd = matmul_tn(&delta, &delta);
@@ -232,18 +210,11 @@ impl ToyProblem {
     }
 }
 
-/// (G·V)·Vᵀ — project a gradient onto span(V) and lift back, the
-/// low-rank estimator's defining map, O(mnr).
-pub fn project_lift(g: &Mat, v: &Mat) -> Mat {
-    let gv = matmul(g, v); // m×r
-    matmul(&gv, &transpose(v)) // m×n
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::estimator::Family;
-    use crate::projection::{ProjectionSampler, StiefelSampler};
+    use crate::linalg::transpose;
 
     #[test]
     fn true_gradient_matches_finite_differences() {
@@ -292,56 +263,18 @@ mod tests {
     }
 
     #[test]
-    fn lr_2pt_estimator_is_unbiased_for_quadratic() {
-        // For a quadratic sample path the antithetic 2-point ZO estimator
-        // is exactly unbiased (no O(σ²) smoothing bias).
+    fn ipa_estimate_into_matches_allocating_form() {
         let p = ToyProblem::small(9);
         let w = p.eval_point(10);
-        let g = p.true_gradient(&w);
         let mut rng = Rng::new(11);
-        let n_mc = 60_000;
-        let mut mean = Mat::zeros(p.m, p.n);
-        for _ in 0..n_mc {
-            let a = p.sample_a(&mut rng);
-            mean.axpy_inplace(1.0 / n_mc as f64, &p.lr_estimate(&w, &a, &mut rng, 1e-2));
+        let a = p.sample_a(&mut rng);
+        let fresh = p.ipa_estimate(&w, &a);
+        let mut out = Mat::zeros(p.m, p.n);
+        out.data.iter_mut().for_each(|x| *x = 7.0); // stale workspace
+        p.ipa_estimate_into(&w, &a, &mut out);
+        for (x, y) in fresh.data.iter().zip(&out.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
-        // The full-rank ZO estimator has O(mn/N) relative variance, so
-        // the tolerance here is statistical, not a bias bound.
-        let rel = mean.sub(&g).fro_norm() / g.fro_norm();
-        assert!(rel < 0.25, "LR bias: rel err {rel}");
-    }
-
-    #[test]
-    fn lowrank_ipa_weakly_unbiased_with_c() {
-        // E[ĝ·P] = c·g — check at c = 0.5.
-        let p = ToyProblem::small(13);
-        let w = p.eval_point(14);
-        let g = p.true_gradient(&w);
-        let c = 0.5;
-        let mut sampler = StiefelSampler::new(p.n, 4, c);
-        let mut rng = Rng::new(15);
-        let n_mc = 20_000;
-        let mut mean = Mat::zeros(p.m, p.n);
-        for _ in 0..n_mc {
-            let a = p.sample_a(&mut rng);
-            let v = sampler.sample(&mut rng);
-            mean.axpy_inplace(1.0 / n_mc as f64, &p.lowrank_ipa_estimate(&w, &a, &v));
-        }
-        let target = g.scaled(c);
-        let rel = mean.sub(&target).fro_norm() / target.fro_norm();
-        assert!(rel < 0.1, "LowRank-IPA weak-unbiasedness rel err {rel}");
-    }
-
-    #[test]
-    fn project_lift_equals_g_times_p() {
-        let mut rng = Rng::new(17);
-        let g = Mat::from_fn(7, 9, |_, _| rng.normal());
-        let mut s = StiefelSampler::new(9, 3, 1.0);
-        let v = s.sample(&mut rng);
-        let fast = project_lift(&g, &v);
-        let p = crate::projection::projector_matrix(&v);
-        let slow = matmul(&g, &p);
-        assert!(fast.max_abs_diff(&slow) < 1e-9);
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //! * Figures 4 (LR) and 5 (IPA): *dependent* setting — adds the
 //!   Algorithm-4 sampler, which sits uniformly below the independent
 //!   laws.
+//!
+//! Each curve's replications fan out across the kernel pool (see
+//! [`mse_curve`]): one pre-forked child stream + engine per rep, so the
+//! CSV this harness writes is bitwise identical at any `--threads`.
 
 use std::io::Write;
 

@@ -5,14 +5,22 @@
 //! # Layer map
 //!
 //! * **L3 (this crate)** — the run-time system: projection samplers
-//!   ([`projection`]), the lazy-update optimizer stack ([`optim`]), the
-//!   PJRT runtime that executes AOT-compiled JAX/Pallas artifacts
-//!   ([`runtime`]), data pipeline ([`data`]), trainers and the DDP
-//!   simulation ([`coordinator`]), the sharded checkpoint/resume
-//!   subsystem ([`ckpt`]: CRC-verified binary shards, atomic commit,
-//!   `LATEST` pointer, retention, bit-exact state round-trip), the MSE
-//!   theory + toy experiments ([`estimator`]), and the experiment
-//!   harnesses ([`exp`]).
+//!   ([`projection`]), **the estimator engine**
+//!   ([`estimator::engine`] — the single owner of Algorithm 1's
+//!   project→estimate→lift→update step, with preallocated workspaces;
+//!   the f32 [`estimator::engine::GradEstimator`] steps both trainers
+//!   allocation-free in steady state, the f64
+//!   [`estimator::engine::OracleEngine`] drives the §6.1 MSE study),
+//!   the lazy-update optimizer stack ([`optim`]), the PJRT runtime that
+//!   executes AOT-compiled JAX/Pallas artifacts ([`runtime`];
+//!   `HostTensor` payloads are `Arc`-backed copy-on-write, so input
+//!   staging is zero-copy), data pipeline ([`data`]), trainers and the
+//!   DDP simulation ([`coordinator`] — artifact wiring around the
+//!   engine), the sharded checkpoint/resume subsystem ([`ckpt`]:
+//!   CRC-verified binary shards written through the kernel pool, atomic
+//!   commit, `LATEST` pointer, retention, bit-exact state round-trip),
+//!   the MSE theory + toy experiments ([`estimator`]), and the
+//!   experiment harnesses ([`exp`]).
 //! * **L3 compute substrate** — [`kernel`]: the one Scalar-generic
 //!   (f32/f64) dense compute layer — blocked GEMM, AXPY/scale,
 //!   deterministic reductions, strided panel primitives — running on a

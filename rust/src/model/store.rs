@@ -175,6 +175,20 @@ impl ParamStore {
         Ok(())
     }
 
+    /// Assemble a store directly from specs + tensors (validated
+    /// pairwise). Used by the engine golden tests and the allocation
+    /// benches, which need stores without an `artifacts/` tree.
+    pub fn from_parts(specs: Vec<TensorSpec>, tensors: Vec<HostTensor>) -> Result<Self> {
+        if specs.len() != tensors.len() {
+            bail!("{} specs but {} tensors", specs.len(), tensors.len());
+        }
+        for (spec, t) in specs.iter().zip(&tensors) {
+            t.check_spec(spec)
+                .with_context(|| format!("from_parts tensor {}", spec.name))?;
+        }
+        Ok(ParamStore { specs, tensors })
+    }
+
     #[cfg(test)]
     pub(crate) fn for_test(specs: Vec<TensorSpec>, tensors: Vec<HostTensor>) -> Self {
         ParamStore { specs, tensors }

@@ -61,6 +61,10 @@ impl ProjectionSampler for CoordinateSampler {
     fn name(&self) -> &'static str {
         "coordinate"
     }
+
+    fn clone_box(&self) -> Box<dyn ProjectionSampler + Send + Sync> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -24,6 +24,7 @@ use crate::sampling::{
     sample_sampford, sample_systematic, sample_tille, CpsDesign, FixedSizeDesign,
 };
 
+#[derive(Clone)]
 pub struct DependentSampler {
     n: usize,
     r: usize,
@@ -126,6 +127,10 @@ impl ProjectionSampler for DependentSampler {
 
     fn name(&self) -> &'static str {
         "dependent"
+    }
+
+    fn clone_box(&self) -> Box<dyn ProjectionSampler + Send + Sync> {
+        Box::new(self.clone())
     }
 }
 

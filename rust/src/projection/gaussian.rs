@@ -52,6 +52,10 @@ impl ProjectionSampler for GaussianSampler {
     fn name(&self) -> &'static str {
         "gaussian"
     }
+
+    fn clone_box(&self) -> Box<dyn ProjectionSampler + Send + Sync> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

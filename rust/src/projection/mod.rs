@@ -60,6 +60,16 @@ impl ProjectorKind {
 }
 
 /// A law over projection matrices V ∈ ℝ^{n×r}.
+///
+/// Every law is **draw-stateless**: `sample` takes `&mut self` only for
+/// object-safety/scratch reasons — a draw is a pure function of the
+/// sampler's immutable configuration (including any precomputed
+/// eigenstructure) and the `rng` stream. [`clone_box`] relies on this:
+/// a clone produces the identical draw sequence from the same stream,
+/// which is what lets the MSE harness fan independent replications out
+/// across the kernel pool with one sampler clone per rep.
+///
+/// [`clone_box`]: ProjectionSampler::clone_box
 pub trait ProjectionSampler {
     /// Draw one V.
     fn sample(&mut self, rng: &mut Rng) -> Mat;
@@ -71,6 +81,9 @@ pub trait ProjectionSampler {
     fn scale_c(&self) -> f64;
     /// Human-readable law name.
     fn name(&self) -> &'static str;
+    /// Clone into a fresh boxed sampler — same law, same precomputation
+    /// (the Dependent law's O(n³) eigendecomposition is *not* redone).
+    fn clone_box(&self) -> Box<dyn ProjectionSampler + Send + Sync>;
 }
 
 /// P = VVᵀ (n×n).
@@ -151,7 +164,7 @@ pub fn build_sampler(
     r: usize,
     c: f64,
     sigma: Option<&Mat>,
-) -> Box<dyn ProjectionSampler + Send> {
+) -> Box<dyn ProjectionSampler + Send + Sync> {
     match kind {
         ProjectorKind::Gaussian => Box::new(GaussianSampler::new(n, r, c)),
         ProjectorKind::Stiefel => Box::new(StiefelSampler::new(n, r, c)),

@@ -59,6 +59,10 @@ impl ProjectionSampler for StiefelSampler {
     fn name(&self) -> &'static str {
         "stiefel"
     }
+
+    fn clone_box(&self) -> Box<dyn ProjectionSampler + Send + Sync> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -49,10 +49,10 @@ impl LoadedArtifact {
                 .with_context(|| format!("artifact {}", self.manifest.name))?;
             let buf = match t {
                 HostTensor::F32 { shape, data } => {
-                    self.client.buffer_from_host_buffer(data, shape, None)?
+                    self.client.buffer_from_host_buffer(data.as_slice(), shape, None)?
                 }
                 HostTensor::I32 { shape, data } => {
-                    self.client.buffer_from_host_buffer(data, shape, None)?
+                    self.client.buffer_from_host_buffer(data.as_slice(), shape, None)?
                 }
             };
             buffers.push(buf);

@@ -1,4 +1,15 @@
 //! Host-side tensors crossing the PJRT boundary.
+//!
+//! Since the estimator-engine refactor the payload is **shared,
+//! copy-on-write**: both variants back their data with an
+//! `Arc<Vec<_>>`, so `clone()` is a reference-count bump and the
+//! trainers' per-step input staging (`params`, `bs[...]`, `vs[...]`,
+//! `zs[...]`, tokens) is zero-copy in steady state. Mutation goes
+//! through [`Arc::make_mut`]: unique owners mutate in place (the hot
+//! path — staged clones are dropped right after `execute`), shared
+//! owners get a private copy first, so value semantics are unchanged.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -10,31 +21,45 @@ use super::manifest::{DType, TensorSpec};
 use super::xla_stub as xla;
 
 /// A host tensor (row-major), f32 or i32 — the only element types the
-/// artifact contract uses.
+/// artifact contract uses. Cloning shares the payload (see module docs).
 #[derive(Clone, Debug, PartialEq)]
 pub enum HostTensor {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+    F32 { shape: Vec<usize>, data: Arc<Vec<f32>> },
+    I32 { shape: Vec<usize>, data: Arc<Vec<i32>> },
 }
 
 impl HostTensor {
     pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>().max(1), data.len());
-        HostTensor::F32 { shape, data }
+        HostTensor::F32 { shape, data: Arc::new(data) }
     }
 
     pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::I32 { shape, data: Arc::new(data) }
+    }
+
+    /// Wrap an already-shared f32 payload without copying — the staging
+    /// path trainers use to splice live (B, V, Z) buffers into an
+    /// artifact input list.
+    pub fn f32_shared(shape: Vec<usize>, data: Arc<Vec<f32>>) -> Self {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    /// Wrap an already-shared i32 payload without copying.
+    pub fn i32_shared(shape: Vec<usize>, data: Arc<Vec<i32>>) -> Self {
         assert_eq!(shape.iter().product::<usize>().max(1), data.len());
         HostTensor::I32 { shape, data }
     }
 
     pub fn scalar_f32(v: f32) -> Self {
-        HostTensor::F32 { shape: vec![], data: vec![v] }
+        HostTensor::F32 { shape: vec![], data: Arc::new(vec![v]) }
     }
 
     pub fn zeros_f32(shape: Vec<usize>) -> Self {
         let n = shape.iter().product::<usize>().max(1);
-        HostTensor::F32 { shape, data: vec![0.0; n] }
+        HostTensor::F32 { shape, data: Arc::new(vec![0.0; n]) }
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -56,21 +81,32 @@ impl HostTensor {
 
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
-            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::F32 { data, .. } => Ok(data.as_slice()),
             _ => bail!("tensor is not f32"),
         }
     }
 
+    /// Mutable f32 view (copy-on-write: unique owners mutate in place;
+    /// a tensor whose payload is still staged elsewhere is unshared
+    /// first, preserving value semantics).
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match self {
-            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::F32 { data, .. } => Ok(Arc::make_mut(data).as_mut_slice()),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Share the f32 payload (reference-count bump, no copy).
+    pub fn f32_arc(&self) -> Result<Arc<Vec<f32>>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data.clone()),
             _ => bail!("tensor is not f32"),
         }
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
-            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::I32 { data, .. } => Ok(data.as_slice()),
             _ => bail!("tensor is not i32"),
         }
     }
@@ -111,8 +147,8 @@ impl HostTensor {
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
-            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
-            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
         };
         if dims.is_empty() {
             // scalar: reshape a 1-element vector to rank 0
@@ -125,8 +161,12 @@ impl HostTensor {
     /// Read back from an XLA literal with a known spec.
     pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
         let t = match spec.dtype {
-            DType::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? },
-            DType::I32 => HostTensor::I32 { shape: spec.shape.clone(), data: lit.to_vec::<i32>()? },
+            DType::F32 => {
+                HostTensor::F32 { shape: spec.shape.clone(), data: Arc::new(lit.to_vec::<f32>()?) }
+            }
+            DType::I32 => {
+                HostTensor::I32 { shape: spec.shape.clone(), data: Arc::new(lit.to_vec::<i32>()?) }
+            }
         };
         if t.num_elements() != spec.num_elements() {
             bail!(
@@ -157,14 +197,14 @@ impl HostTensor {
                     .chunks_exact(4)
                     .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                     .collect();
-                HostTensor::F32 { shape: spec.shape.clone(), data }
+                HostTensor::F32 { shape: spec.shape.clone(), data: Arc::new(data) }
             }
             DType::I32 => {
                 let data = bytes
                     .chunks_exact(4)
                     .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                     .collect();
-                HostTensor::I32 { shape: spec.shape.clone(), data }
+                HostTensor::I32 { shape: spec.shape.clone(), data: Arc::new(data) }
             }
         })
     }
@@ -239,6 +279,35 @@ mod tests {
         let lit = s.to_literal().unwrap();
         let back = HostTensor::from_literal(&lit, &spec(DType::F32, vec![])).unwrap();
         assert_eq!(s, back);
+    }
+
+    #[test]
+    fn clone_shares_payload_and_mutation_unshares() {
+        let a = HostTensor::f32(vec![2], vec![1.0, 2.0]);
+        let mut b = a.clone();
+        // staged clone: same allocation, no copy
+        assert_eq!(a.as_f32().unwrap().as_ptr(), b.as_f32().unwrap().as_ptr());
+        // copy-on-write: mutating the clone leaves the original intact
+        b.as_f32_mut().unwrap()[0] = 9.0;
+        assert_eq!(a.as_f32().unwrap()[0], 1.0);
+        assert_eq!(b.as_f32().unwrap()[0], 9.0);
+        assert_ne!(a.as_f32().unwrap().as_ptr(), b.as_f32().unwrap().as_ptr());
+        // unique owner mutates in place (the steady-state hot path)
+        let p = b.as_f32().unwrap().as_ptr();
+        b.as_f32_mut().unwrap()[1] = 7.0;
+        assert_eq!(b.as_f32().unwrap().as_ptr(), p);
+    }
+
+    #[test]
+    fn shared_constructors_wrap_without_copy() {
+        let buf = Arc::new(vec![1.0f32, 2.0, 3.0]);
+        let t = HostTensor::f32_shared(vec![3], buf.clone());
+        assert_eq!(t.as_f32().unwrap().as_ptr(), buf.as_ptr());
+        assert_eq!(t.f32_arc().unwrap().as_ptr(), buf.as_ptr());
+        let ibuf = Arc::new(vec![1i32, 2]);
+        let it = HostTensor::i32_shared(vec![2], ibuf.clone());
+        assert_eq!(it.as_i32().unwrap().as_ptr(), ibuf.as_ptr());
+        assert!(it.f32_arc().is_err());
     }
 
     #[test]

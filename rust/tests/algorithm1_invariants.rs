@@ -76,7 +76,7 @@ fn lift_matches_explicit_bvt_product() {
     sub.resample(&mut rng);
     // set B of slot 0 to something nonzero
     let (m, n, r) = (sub.slots[0].m, sub.slots[0].n, sub.slots[0].r);
-    for (i, b) in sub.slots[0].b.iter_mut().enumerate() {
+    for (i, b) in std::sync::Arc::make_mut(&mut sub.slots[0].b).iter_mut().enumerate() {
         *b = (i as f32 * 0.01).sin();
     }
     let pos = sub.slots[0].param_pos;

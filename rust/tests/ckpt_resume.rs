@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 use lowrank_sge::ckpt::{
     load_checkpoint, save_checkpoint, Checkpointable, Layout, ResumeSpec, StateDict,
 };
+use lowrank_sge::estimator::engine::project_lift;
 use lowrank_sge::estimator::toy::ToyProblem;
 use lowrank_sge::linalg::Mat;
 use lowrank_sge::optim::{Adam, AdamConfig};
@@ -67,7 +68,7 @@ impl ToyTrainer {
         let a = self.problem.sample_a(&mut self.rng);
         let w_mat = self.w_mat();
         let loss = self.problem.loss(&w_mat, &a);
-        let ghat = self.problem.lowrank_ipa_estimate(&w_mat, &a, &self.v);
+        let ghat = project_lift(&self.problem.ipa_estimate(&w_mat, &a), &self.v);
         let g32: Vec<f32> = ghat.data.iter().map(|&x| x as f32).collect();
         self.adam.step(&mut self.w, &g32, LR);
         self.step += 1;

@@ -1,0 +1,77 @@
+//! Steady-state allocation discipline of the estimator engine: after
+//! warm-up, the LowRank-LR step loop (perturbation draw + Adam-on-B +
+//! Θ delta push + head update) performs **zero heap allocations** on a
+//! serial kernel pool — every buffer is an engine workspace reused in
+//! place. This binary holds exactly one test so no concurrent test can
+//! pollute the allocation counter. The counting allocator and the
+//! synthetic fixture are shared with `benches/train_step.rs` via
+//! `bench_util`, so the bench measures exactly the same loop.
+
+use lowrank_sge::bench_util::{engine_fixture, CountingAlloc};
+use lowrank_sge::coordinator::SubspaceSet;
+use lowrank_sge::estimator::engine::{GradEstimator, GradSignal, MethodShape};
+use lowrank_sge::model::ParamStore;
+use lowrank_sge::optim::AdamConfig;
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::rng::Rng;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+const DIMS: [(usize, usize, usize); 3] = [(48, 32, 4), (32, 32, 2), (40, 24, 8)];
+const HEAD_LEN: usize = 24;
+
+fn run_steps(
+    engine: &mut GradEstimator,
+    store: &mut ParamStore,
+    rng: &mut Rng,
+    from: u64,
+    to: u64,
+) {
+    for step in from..to {
+        engine.draw_perturbations(rng);
+        let fp = 0.8 + (step as f32) * 0.003;
+        let fm = 0.7 - (step as f32) * 0.002;
+        engine
+            .step(store, GradSignal::Antithetic { f_plus: fp, f_minus: fm }, 1e-3)
+            .unwrap();
+    }
+}
+
+#[test]
+fn lowrank_lr_step_loop_is_allocation_free_after_warmup() {
+    // serial pool: the engine runs its inline (non-boxing) path — the
+    // configuration the zero-allocation contract is stated for
+    lowrank_sge::kernel::set_global_threads(1);
+
+    let (mut store, slots) = engine_fixture(&DIMS, HEAD_LEN);
+    let sub = SubspaceSet::from_slots(slots, ProjectorKind::Stiefel, 1.0);
+    let mut engine = GradEstimator::new(
+        MethodShape::LowRankLr,
+        1e-2,
+        Some(sub),
+        Vec::new(),
+        Vec::new(),
+        Some((DIMS.len(), HEAD_LEN, AdamConfig::default())),
+    );
+    let mut rng = Rng::new(7);
+    engine.subspace.as_mut().unwrap().resample(&mut rng);
+
+    // warm-up: first steps may fault in lazily-initialized state
+    run_steps(&mut engine, &mut store, &mut rng, 0, 3);
+
+    let before = CountingAlloc::count();
+    run_steps(&mut engine, &mut store, &mut rng, 3, 23);
+    let after = CountingAlloc::count();
+
+    assert_eq!(
+        after - before,
+        0,
+        "LowRank-LR steady-state step loop allocated {} times over 20 steps",
+        after - before
+    );
+
+    // sanity: the loop actually trained (B moved off zero)
+    let sub = engine.subspace.as_ref().unwrap();
+    assert!(sub.slots.iter().any(|s| s.b.iter().any(|&x| x != 0.0)));
+}

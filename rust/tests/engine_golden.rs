@@ -1,0 +1,477 @@
+//! Golden bitwise tests for the estimator-engine refactor: the engine's
+//! workspace-reusing, pool-fanned pipeline must reproduce the
+//! pre-refactor per-step arithmetic **bit for bit** — same ParamStore
+//! bytes for the trainer shapes, same toy-MSE curves — at every thread
+//! count. Each test pits the engine against an inline reference that is
+//! a verbatim copy of the pre-engine implementation (fresh allocations,
+//! transpose-based lifts, serial loops).
+
+use std::sync::{Arc, Mutex};
+
+use lowrank_sge::bench_util::engine_fixture;
+use lowrank_sge::coordinator::{FullSlot, MatrixSlot, SubspaceSet};
+use lowrank_sge::estimator::engine::{
+    project_lift, GradEstimator, GradSignal, MethodShape, ZoTarget,
+};
+use lowrank_sge::estimator::mse::{mse_curve, EstimatorSpec, MseCurveConfig};
+use lowrank_sge::estimator::toy::ToyProblem;
+use lowrank_sge::estimator::Family;
+use lowrank_sge::linalg::{matmul, matmul_nt, transpose, Mat};
+use lowrank_sge::model::ParamStore;
+use lowrank_sge::optim::{Adam, AdamConfig};
+use lowrank_sge::projection::{build_sampler, ProjectionSampler, ProjectorKind};
+use lowrank_sge::rng::Rng;
+
+/// Serializes tests that resize the process-global kernel pool.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// shared fixtures: a 3-matrix + head parameter store
+// ---------------------------------------------------------------------------
+
+const DIMS: [(usize, usize, usize); 3] = [(12, 8, 3), (8, 8, 2), (10, 6, 4)];
+const HEAD_LEN: usize = 10;
+const SIGMA: f32 = 1e-2;
+const LR: f32 = 2e-3;
+
+fn build_store() -> ParamStore {
+    engine_fixture(&DIMS, HEAD_LEN).0
+}
+
+fn build_slots() -> Vec<MatrixSlot> {
+    engine_fixture(&DIMS, HEAD_LEN).1
+}
+
+fn store_bits(store: &ParamStore) -> Vec<u32> {
+    (0..store.len())
+        .flat_map(|i| store.f32(i).unwrap().iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+        .collect()
+}
+
+fn losses(step: u64) -> (f32, f32) {
+    let fp = 0.73 + (step as f32) * 0.011;
+    let fm = 0.69 - (step as f32) * 0.007;
+    (fp, fm)
+}
+
+// ---------------------------------------------------------------------------
+// LowRank-LR: engine vs the pre-refactor finetune inner loop
+// ---------------------------------------------------------------------------
+
+/// Pre-refactor reference: fresh `Vec` per draw, `clone`-based delta,
+/// serial slot loop — copied from the old `FinetuneTrainer::run`.
+fn reference_lowrank_lr(steps: u64, seed: u64) -> Vec<u32> {
+    let mut store = build_store();
+    let mut sub = SubspaceSet::from_slots(build_slots(), ProjectorKind::Stiefel, 1.0);
+    let mut head_adam = Adam::new(HEAD_LEN, AdamConfig::default());
+    let mut rng = Rng::new(seed);
+    sub.resample(&mut rng);
+    for step in 0..steps {
+        let z_head: Vec<f32> = (0..HEAD_LEN).map(|_| rng.normal() as f32).collect();
+        let zs: Vec<Vec<f32>> = sub
+            .slots
+            .iter()
+            .map(|s| (0..s.m * s.r).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let (fp, fm) = losses(step);
+        let scale = (fp - fm) / (2.0 * SIGMA);
+        for (slot, z) in sub.slots.iter_mut().zip(&zs) {
+            let g: Vec<f32> = z.iter().map(|x| scale * x).collect();
+            let old_b: Vec<f32> = slot.b.as_slice().to_vec();
+            slot.adam.step(Arc::make_mut(&mut slot.b), &g, LR);
+            let delta: Vec<f32> = slot.b.iter().zip(&old_b).map(|(n, o)| n - o).collect();
+            let theta = store.f32_mut(slot.param_pos).unwrap();
+            lowrank_sge::kernel::serial::gemm_nt(
+                1.0f32,
+                &delta,
+                slot.v.as_slice(),
+                theta,
+                slot.m,
+                slot.n,
+                slot.r,
+            );
+        }
+        let gh: Vec<f32> = z_head.iter().map(|x| scale * x).collect();
+        head_adam.step(store.f32_mut(3).unwrap(), &gh, LR);
+    }
+    store_bits(&store)
+}
+
+fn engine_lowrank_lr(steps: u64, seed: u64) -> Vec<u32> {
+    let mut store = build_store();
+    let sub = SubspaceSet::from_slots(build_slots(), ProjectorKind::Stiefel, 1.0);
+    let mut engine = GradEstimator::new(
+        MethodShape::LowRankLr,
+        SIGMA,
+        Some(sub),
+        Vec::new(),
+        Vec::new(),
+        Some((3, HEAD_LEN, AdamConfig::default())),
+    );
+    let mut rng = Rng::new(seed);
+    engine.subspace.as_mut().unwrap().resample(&mut rng);
+    for step in 0..steps {
+        engine.draw_perturbations(&mut rng);
+        let (fp, fm) = losses(step);
+        engine
+            .step(&mut store, GradSignal::Antithetic { f_plus: fp, f_minus: fm }, LR)
+            .unwrap();
+    }
+    store_bits(&store)
+}
+
+#[test]
+fn lowrank_lr_engine_matches_prerefactor_reference_bitwise() {
+    let _guard = lock_pool();
+    let prev = lowrank_sge::kernel::global_threads();
+    let want = {
+        lowrank_sge::kernel::set_global_threads(1);
+        reference_lowrank_lr(7, 99)
+    };
+    for threads in [1usize, 4] {
+        lowrank_sge::kernel::set_global_threads(threads);
+        let got = engine_lowrank_lr(7, 99);
+        assert_eq!(got, want, "LowRank-LR diverged at {threads} threads");
+    }
+    lowrank_sge::kernel::set_global_threads(prev);
+}
+
+// ---------------------------------------------------------------------------
+// Vanilla-LR (FullLr): engine vs the pre-refactor MeZO-style SGD loop
+// ---------------------------------------------------------------------------
+
+fn reference_full_lr(steps: u64, seed: u64) -> Vec<u32> {
+    let mut store = build_store();
+    let mut rng = Rng::new(seed);
+    let pool = lowrank_sge::kernel::global();
+    for step in 0..steps {
+        let z_head: Vec<f32> = (0..HEAD_LEN).map(|_| rng.normal() as f32).collect();
+        let zs: Vec<Vec<f32>> = DIMS
+            .iter()
+            .map(|&(m, n, _)| (0..m * n).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let (fp, fm) = losses(step);
+        let scale = (fp - fm) / (2.0 * SIGMA);
+        let alpha = -(LR * scale);
+        for (i, z) in zs.iter().enumerate() {
+            let theta = store.f32_mut(i).unwrap();
+            lowrank_sge::kernel::axpy(&pool, alpha, z, theta);
+        }
+        let head = store.f32_mut(3).unwrap();
+        lowrank_sge::kernel::axpy(&pool, alpha, &z_head, head);
+    }
+    store_bits(&store)
+}
+
+fn engine_full_lr(steps: u64, seed: u64) -> Vec<u32> {
+    let mut store = build_store();
+    let targets: Vec<ZoTarget> = DIMS
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, n, _))| ZoTarget { param_pos: i, m, n })
+        .collect();
+    let mut engine = GradEstimator::new(
+        MethodShape::FullLr,
+        SIGMA,
+        None,
+        targets,
+        Vec::new(),
+        Some((3, HEAD_LEN, AdamConfig::default())),
+    );
+    let mut rng = Rng::new(seed);
+    for step in 0..steps {
+        engine.draw_perturbations(&mut rng);
+        let (fp, fm) = losses(step);
+        engine
+            .step(&mut store, GradSignal::Antithetic { f_plus: fp, f_minus: fm }, LR)
+            .unwrap();
+    }
+    store_bits(&store)
+}
+
+#[test]
+fn full_lr_engine_matches_prerefactor_reference_bitwise() {
+    let _guard = lock_pool();
+    let prev = lowrank_sge::kernel::global_threads();
+    lowrank_sge::kernel::set_global_threads(1);
+    let want = reference_full_lr(6, 17);
+    for threads in [1usize, 4] {
+        lowrank_sge::kernel::set_global_threads(threads);
+        let got = engine_full_lr(6, 17);
+        assert_eq!(got, want, "Vanilla-LR diverged at {threads} threads");
+    }
+    lowrank_sge::kernel::set_global_threads(prev);
+}
+
+// ---------------------------------------------------------------------------
+// LowRank-IPA (pretrain shape): engine vs the pre-refactor serial loops
+// ---------------------------------------------------------------------------
+
+fn ipa_grads(step: u64) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let db: Vec<Vec<f32>> = DIMS
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, _, r))| {
+            (0..m * r)
+                .map(|k| (((step * 31 + i as u64 * 7 + k as u64) as f32) * 0.01).sin())
+                .collect()
+        })
+        .collect();
+    let df: Vec<Vec<f32>> = vec![(0..HEAD_LEN)
+        .map(|k| (((step * 13 + k as u64) as f32) * 0.02).cos())
+        .collect()];
+    (db, df)
+}
+
+fn reference_lowrank_ipa(steps: u64, seed: u64) -> (Vec<u32>, Vec<u32>) {
+    let mut store = build_store();
+    let mut sub = SubspaceSet::from_slots(build_slots(), ProjectorKind::Stiefel, 1.0);
+    let mut full_adam = Adam::new(HEAD_LEN, AdamConfig::default());
+    let mut rng = Rng::new(seed);
+    sub.resample(&mut rng);
+    for step in 0..steps {
+        let (db, df) = ipa_grads(step);
+        // pre-engine serial order: every subspace B first, then the
+        // full-rank channels
+        for (slot, g) in sub.slots.iter_mut().zip(&db) {
+            slot.adam.step(Arc::make_mut(&mut slot.b), g, LR);
+        }
+        full_adam.step(store.f32_mut(3).unwrap(), &df[0], LR);
+    }
+    sub.lift(&mut store).unwrap();
+    let b_bits = sub
+        .slots
+        .iter()
+        .flat_map(|s| s.b.iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+        .collect();
+    (store_bits(&store), b_bits)
+}
+
+fn engine_lowrank_ipa(steps: u64, seed: u64) -> (Vec<u32>, Vec<u32>) {
+    let mut store = build_store();
+    let sub = SubspaceSet::from_slots(build_slots(), ProjectorKind::Stiefel, 1.0);
+    let full = vec![FullSlot {
+        name: "head".into(),
+        param_pos: 3,
+        dout: usize::MAX,
+        adam: Adam::new(HEAD_LEN, AdamConfig::default()),
+    }];
+    let mut engine =
+        GradEstimator::new(MethodShape::LowRankIpa, 0.0, Some(sub), Vec::new(), full, None);
+    let mut rng = Rng::new(seed);
+    engine.subspace.as_mut().unwrap().resample(&mut rng);
+    for step in 0..steps {
+        let (db, df) = ipa_grads(step);
+        let views: Vec<&[f32]> = db
+            .iter()
+            .map(|g| g.as_slice())
+            .chain(df.iter().map(|g| g.as_slice()))
+            .collect();
+        let stats = engine
+            .step(
+                &mut store,
+                GradSignal::Grads {
+                    loss: 1.25,
+                    slots: &views,
+                    head: None,
+                    grad_norm: None,
+                },
+                LR,
+            )
+            .unwrap();
+        assert_eq!(stats.loss, 1.25);
+    }
+    let sub = engine.subspace.as_mut().unwrap();
+    sub.lift(&mut store).unwrap();
+    let b_bits = sub
+        .slots
+        .iter()
+        .flat_map(|s| s.b.iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+        .collect();
+    (store_bits(&store), b_bits)
+}
+
+#[test]
+fn lowrank_ipa_engine_matches_prerefactor_reference_bitwise() {
+    let _guard = lock_pool();
+    let prev = lowrank_sge::kernel::global_threads();
+    lowrank_sge::kernel::set_global_threads(1);
+    let (want_store, want_b) = reference_lowrank_ipa(5, 7);
+    for threads in [1usize, 4] {
+        lowrank_sge::kernel::set_global_threads(threads);
+        let (got_store, got_b) = engine_lowrank_ipa(5, 7);
+        assert_eq!(got_store, want_store, "LowRank-IPA Θ diverged at {threads} threads");
+        assert_eq!(got_b, want_b, "LowRank-IPA B diverged at {threads} threads");
+    }
+    lowrank_sge::kernel::set_global_threads(prev);
+}
+
+// ---------------------------------------------------------------------------
+// Toy MSE: engine-driven curves vs the pre-refactor serial harness
+// ---------------------------------------------------------------------------
+
+/// Verbatim pre-engine `mse_curve`: one shared sampler, rep streams
+/// forked lazily, fresh allocations per estimate, transpose-based lift.
+fn reference_mse_points(
+    problem: &ToyProblem,
+    w: &Mat,
+    cfg: &MseCurveConfig,
+) -> Vec<(usize, f64)> {
+    let g = problem.true_gradient(w);
+    let n_max = *cfg.sample_sizes.iter().max().unwrap();
+    let mut rng = Rng::new(cfg.seed);
+    let mut sampler: Option<Box<dyn ProjectionSampler + Send + Sync>> = match cfg.spec {
+        EstimatorSpec::LowRank(kind) => {
+            Some(build_sampler(kind, problem.n, cfg.r, cfg.c, None))
+        }
+        EstimatorSpec::FullRank => None,
+    };
+    let mut sums = vec![0.0f64; cfg.sample_sizes.len()];
+    for rep in 0..cfg.reps {
+        let mut rep_rng = rng.fork(rep as u64);
+        let mut mean = Mat::zeros(problem.m, problem.n);
+        let mut next_ckpt = 0usize;
+        for t in 1..=n_max {
+            let a = problem.sample_a(&mut rep_rng);
+            let est = match (&mut sampler, cfg.family) {
+                (None, Family::Ipa) => problem.ipa_estimate(w, &a),
+                (None, Family::Lr) => {
+                    let z = Mat::from_fn(problem.m, problem.n, |_, _| rep_rng.normal());
+                    let mut wp = w.clone();
+                    wp.axpy_inplace(cfg.zo_sigma, &z);
+                    let mut wm = w.clone();
+                    wm.axpy_inplace(-cfg.zo_sigma, &z);
+                    let scale =
+                        (problem.loss(&wp, &a) - problem.loss(&wm, &a)) / (2.0 * cfg.zo_sigma);
+                    z.scaled(scale)
+                }
+                (Some(s), Family::Ipa) => {
+                    let v = s.sample(&mut rep_rng);
+                    let ghat = problem.ipa_estimate(w, &a);
+                    // the old project_lift: explicit transpose + GEMM
+                    let gv = matmul(&ghat, &v);
+                    matmul(&gv, &transpose(&v))
+                }
+                (Some(s), Family::Lr) => {
+                    let v = s.sample(&mut rep_rng);
+                    let z = Mat::from_fn(problem.m, v.cols, |_, _| rep_rng.normal());
+                    let zvt = matmul_nt(&z, &v);
+                    let mut wp = w.clone();
+                    wp.axpy_inplace(cfg.zo_sigma, &zvt);
+                    let mut wm = w.clone();
+                    wm.axpy_inplace(-cfg.zo_sigma, &zvt);
+                    let scale =
+                        (problem.loss(&wp, &a) - problem.loss(&wm, &a)) / (2.0 * cfg.zo_sigma);
+                    zvt.scaled(scale)
+                }
+            };
+            let inv_t = 1.0 / t as f64;
+            for (m_v, e_v) in mean.data.iter_mut().zip(&est.data) {
+                *m_v += (e_v - *m_v) * inv_t;
+            }
+            while next_ckpt < cfg.sample_sizes.len() && cfg.sample_sizes[next_ckpt] == t {
+                sums[next_ckpt] += mean.sub(&g).fro_norm_sq();
+                next_ckpt += 1;
+            }
+        }
+    }
+    cfg.sample_sizes
+        .iter()
+        .zip(&sums)
+        .map(|(&n, &s)| (n, s / cfg.reps as f64))
+        .collect()
+}
+
+#[test]
+fn toy_mse_curves_match_prerefactor_reference_bitwise() {
+    let _guard = lock_pool();
+    let prev = lowrank_sge::kernel::global_threads();
+    let problem = ToyProblem::small(51);
+    let w = problem.eval_point(52);
+    let configs = [
+        (Family::Ipa, EstimatorSpec::FullRank),
+        (Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Stiefel)),
+        (Family::Lr, EstimatorSpec::FullRank),
+        (Family::Lr, EstimatorSpec::LowRank(ProjectorKind::Gaussian)),
+        (Family::Ipa, EstimatorSpec::LowRank(ProjectorKind::Coordinate)),
+    ];
+    for (family, spec) in configs {
+        let cfg = MseCurveConfig {
+            family,
+            spec,
+            c: 1.0,
+            r: 3,
+            sample_sizes: vec![2, 6],
+            reps: 4,
+            seed: 1234,
+            zo_sigma: 1e-2,
+            warmup: 10,
+        };
+        lowrank_sge::kernel::set_global_threads(1);
+        let want = reference_mse_points(&problem, &w, &cfg);
+        for threads in [1usize, 4] {
+            lowrank_sge::kernel::set_global_threads(threads);
+            let curve = mse_curve(&problem, &w, &cfg);
+            assert_eq!(curve.points.len(), want.len());
+            for ((n_got, m_got), (n_want, m_want)) in curve.points.iter().zip(&want) {
+                assert_eq!(n_got, n_want);
+                assert_eq!(
+                    m_got.to_bits(),
+                    m_want.to_bits(),
+                    "{}-{} MSE diverged at {threads} threads: {m_got} vs {m_want}",
+                    spec.label(),
+                    family.name()
+                );
+            }
+        }
+    }
+    lowrank_sge::kernel::set_global_threads(prev);
+}
+
+#[test]
+fn toy_mse_csv_is_thread_count_invariant() {
+    let _guard = lock_pool();
+    let prev = lowrank_sge::kernel::global_threads();
+    let mut opts = lowrank_sge::exp::toy_mse::ToyMseOptions::quick(Family::Ipa, false);
+    opts.reps = 2;
+    opts.sample_sizes = vec![3, 7];
+    opts.c_grid = vec![1.0];
+    let dir = std::env::temp_dir()
+        .join(format!("lowrank_sge_engine_golden_p{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut bytes = Vec::new();
+    for threads in [1usize, 4] {
+        lowrank_sge::kernel::set_global_threads(threads);
+        let csv = dir.join(format!("fig_t{threads}.csv"));
+        lowrank_sge::exp::toy_mse::run(&opts, &csv).unwrap();
+        bytes.push(std::fs::read(&csv).unwrap());
+    }
+    lowrank_sge::kernel::set_global_threads(prev);
+    let _ = std::fs::remove_dir_all(&dir);
+    assert!(!bytes[0].is_empty());
+    assert_eq!(bytes[0], bytes[1], "toy-MSE CSV bytes diverged across thread counts");
+}
+
+#[test]
+fn new_project_lift_matches_transpose_form_bitwise() {
+    // the engine's gemm_nt lift vs the old transpose + gemm_nn form:
+    // per-element accumulation order is identical, so the bits are too.
+    let _guard = lock_pool();
+    let mut rng = Rng::new(5);
+    for (m, n, r) in [(7, 9, 3), (40, 33, 8), (64, 64, 4)] {
+        let g = Mat::from_fn(m, n, |_, _| rng.normal());
+        let mut s = build_sampler(ProjectorKind::Stiefel, n, r, 1.0, None);
+        let v = s.sample(&mut rng);
+        let fast = project_lift(&g, &v);
+        let gv = matmul(&g, &v);
+        let slow = matmul(&gv, &transpose(&v));
+        for (x, y) in fast.data.iter().zip(&slow.data) {
+            assert_eq!(x.to_bits(), y.to_bits(), "project_lift bits diverged at {m}x{n}x{r}");
+        }
+    }
+}
