@@ -1,0 +1,114 @@
+//! All-reduce cost at lifted-gradient sizes: the in-process pairing
+//! tree vs the real multi-process comm collectives (2- and 4-rank ring
+//! and tree over Unix-domain sockets on this host).
+//!
+//! Payload sizes follow the low-rank story — dB is m·r, so the wire
+//! carries the LLaMA-proxy lifted gradients (m·r for the `s`/`m`/`l`
+//! scale shapes) plus a 1M-element full-gradient reference point.
+//! Reports median per-op latency, effective MB/s (2·(w−1)/w of the
+//! payload each way per rank), and the per-step overhead next to the
+//! `train_step` numbers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use lowrank_sge::bench_util::{bench, fmt_time, log_csv, report};
+use lowrank_sge::comm::{Algorithm, CommConfig, Communicator, TransportKind};
+use lowrank_sge::coordinator::allreduce_mean_with;
+use lowrank_sge::kernel::KernelPool;
+
+static DIR_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+fn fresh_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lowrank_bench_allreduce_{}_{}",
+        std::process::id(),
+        DIR_COUNTER.fetch_add(1, Ordering::SeqCst)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn payload(rank: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| ((rank * 31 + i) as f32).sin() * 1e-3).collect()
+}
+
+/// In-process baseline: one pairing-tree mean over `world` shards.
+fn bench_in_process(world: usize, len: usize, label: &str) {
+    let pool = KernelPool::new(world.min(4));
+    let mut grads: Vec<Vec<f32>> = (0..world).map(|r| payload(r, len)).collect();
+    let stats = bench(3, 15, || {
+        allreduce_mean_with(&pool, &mut grads);
+        std::hint::black_box(&grads);
+    });
+    let name = format!("inproc_tree_{label}_w{world}");
+    report(&name, &stats);
+    log_csv("allreduce.csv", &name, &stats);
+}
+
+/// Multi-process: `world` communicator threads over Unix sockets, each
+/// timing the same all-reduce; rank 0's stats are reported.
+fn bench_comm(world: usize, len: usize, label: &str, algo: Algorithm) {
+    let dir = fresh_dir();
+    let stats = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let dir = dir.clone();
+                scope.spawn(move || {
+                    let cfg = CommConfig {
+                        world,
+                        rank: Some(rank),
+                        transport: TransportKind::default_for_host(),
+                        rdzv_dir: dir,
+                        timeout: Duration::from_secs(60),
+                        algo,
+                    };
+                    let mut comm = Communicator::connect(&cfg).expect("bench communicator");
+                    let mut data = payload(rank, len);
+                    bench(3, 15, || {
+                        comm.allreduce_sum_with(algo, &mut data).unwrap();
+                        std::hint::black_box(&data);
+                    })
+                })
+            })
+            .collect();
+        let mut all = handles.into_iter().map(|h| h.join().expect("bench rank"));
+        let rank0 = all.next().expect("world >= 1");
+        for _ in all {} // join the rest
+        rank0
+    });
+    // ring moves 2·(w−1)/w of the payload per rank each way; report
+    // that as the effective bandwidth of the reduce
+    let bytes = 4.0 * len as f64 * 2.0 * (world as f64 - 1.0) / world as f64;
+    let mbps = bytes / stats.median_s / 1e6;
+    let name = format!("comm_{}_{label}_w{world}", algo.name());
+    report(&name, &stats);
+    println!(
+        "    {name}: {:.1} MB/s effective, {} per-step overhead vs in-process",
+        mbps,
+        fmt_time(stats.median_s)
+    );
+    log_csv("allreduce.csv", &name, &stats);
+}
+
+fn main() {
+    println!("== all-reduce: in-process tree vs multi-process ring/tree ==");
+    // (label, elements): lifted-gradient m·r at the LLaMA-proxy scale
+    // shapes (d_model 128/192/256 × rank 16), and a 1M full-grad point
+    let sizes: &[(&str, usize)] = &[
+        ("lifted_s_2k", 128 * 16),
+        ("lifted_m_3k", 192 * 16),
+        ("lifted_l_4k", 256 * 16),
+        ("lifted_stack_64k", 16 * 256 * 16),
+        ("full_1m", 1_000_000),
+    ];
+    for &(label, len) in sizes {
+        println!("-- {label}: {len} f32 ({} KiB) --", 4 * len / 1024);
+        for world in [2usize, 4] {
+            bench_in_process(world, len, label);
+            bench_comm(world, len, label, Algorithm::Ring);
+            bench_comm(world, len, label, Algorithm::Tree);
+        }
+    }
+    println!("(context: compare per-step overhead against `cargo bench --bench train_step`)");
+}

@@ -20,11 +20,24 @@
 //!   [`ResumeSpec`] (`latest` or a step number).
 //! * [`writer`] — atomic commit (temp dir + rename), full-verification
 //!   load, and retention of the newest K checkpoints.
+//! * [`async_writer`] — [`AsyncCheckpointer`]: the whole save on a
+//!   background IO thread, double-buffered against live trainer state
+//!   via the `Arc`-backed copy-on-write tensors; errors surface at the
+//!   next save or at shutdown, the trainer never blocks on IO.
 //!
 //! Trainers drive this through `--save-every N --ckpt-dir D` and
-//! `--resume [latest|<step>]`; in the DDP simulation only the leader
-//! rank writes (see [`crate::coordinator::BatchProducer`]'s module docs).
+//! `--resume [latest|<step>]`. In a multi-process `launch` run only the
+//! leader rank writes — enforced by the [`crate::coordinator::Collective`]
+//! leader gate and the trainers' `save_state` guard, with every rank
+//! crossing the same save barrier (the barrier aligns step counts;
+//! async saves become durable at the writer's next drain).
+//!
+//! The `comm` wire format ([`crate::comm::wire`]) reuses this module's
+//! framing discipline (magic + dtype + CRC-32) and [`crc32`]
+//! implementation, so gradient payloads on the wire are self-validating
+//! exactly like checkpoint shards on disk.
 
+pub mod async_writer;
 pub mod codec;
 pub mod crc32;
 pub mod layout;
@@ -32,6 +45,7 @@ pub mod manifest;
 pub mod state;
 pub mod writer;
 
+pub use async_writer::AsyncCheckpointer;
 pub use layout::{Layout, ResumeSpec};
 pub use manifest::CkptManifest;
 pub use state::{Checkpointable, StateDict};

@@ -1,0 +1,534 @@
+//! The [`Communicator`]: rank/world identity plus the collectives —
+//! `allreduce_sum` / `allreduce_mean` (ring and tree), `broadcast`,
+//! `all_gather`, `barrier` — over the full-mesh socket connections the
+//! rendezvous established.
+//!
+//! # Determinism contract (extends the in-process one across processes)
+//!
+//! The combine order of every reduction is a **pure function of (world
+//! size, payload length)** — never of thread count, arrival timing, or
+//! transport:
+//!
+//! * The **tree** algorithm is the stride-doubling pairing tree of
+//!   [`crate::coordinator::allreduce_mean_with`] verbatim: at gap g,
+//!   rank r with `r % 2g == 0` folds rank r+g's payload into its own
+//!   (`data += remote`, the same [`crate::kernel::add_assign`]), so the
+//!   rank-0 total carries the identical association — then the total is
+//!   broadcast back down the reverse tree.
+//! * The **ring** algorithm partitions the payload into `world`
+//!   contiguous chunks (bounds `i·len/world`), ring-offset-exchanges
+//!   chunk copies (step s: send to rank+s, receive from rank−s, full
+//!   duplex via a helper send thread), locally reduces the `world`
+//!   copies of the owned chunk **with the same pairing tree in rank
+//!   order on the kernel pool**, and ring all-gathers the reduced
+//!   chunks. Per element the association is identical to the tree, so
+//!   ring ≡ tree ≡ in-process, bitwise.
+//!
+//! At `world == 1` every collective is the identity, so a 1-process
+//! comm run is bitwise the in-process serial run. Every receive
+//! validates frame kind, sequence number, and chunk order — a peer that
+//! desyncs, corrupts, or dies produces a loud error within the
+//! configured timeout, never a silent wrong answer and never a hang.
+//!
+//! SPMD discipline: all ranks must issue the same collectives in the
+//! same order (the sequence number pins this down at the protocol
+//! level).
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::rendezvous::Rendezvous;
+use super::transport::{Conn, Listener, TransportKind};
+use super::wire::{self, Kind};
+
+/// Which reduction algorithm a communicator uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Chunked ring: bandwidth-optimal (2·(w−1)/w of the payload per
+    /// rank each way) — the right choice for large lifted gradients.
+    Ring,
+    /// Pairing tree: latency-optimal (log₂ w rounds) — the right
+    /// choice for small head gradients and scalars.
+    Tree,
+    /// Pick per call by payload length (a pure function of the length,
+    /// so determinism is unaffected).
+    Auto,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Algorithm> {
+        Ok(match s {
+            "ring" => Algorithm::Ring,
+            "tree" => Algorithm::Tree,
+            "auto" => Algorithm::Auto,
+            other => bail!("unknown comm algorithm {other:?} (expected ring, tree, or auto)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Ring => "ring",
+            Algorithm::Tree => "tree",
+            Algorithm::Auto => "auto",
+        }
+    }
+}
+
+/// `Auto` switches from tree to ring at this payload length.
+pub const RING_MIN_ELEMS: usize = 8192;
+
+/// How a [`Communicator`] is built (usually from the `launch` env; see
+/// [`Communicator::from_env`]).
+#[derive(Clone, Debug)]
+pub struct CommConfig {
+    pub world: usize,
+    /// Explicit rank, or `None` to claim the lowest free slot.
+    pub rank: Option<usize>,
+    pub transport: TransportKind,
+    pub rdzv_dir: PathBuf,
+    /// Bounds rendezvous waiting, connection setup, and every
+    /// per-message send/receive.
+    pub timeout: Duration,
+    pub algo: Algorithm,
+}
+
+/// A connected member of a multi-process collective group.
+#[derive(Debug)]
+pub struct Communicator {
+    rank: usize,
+    world: usize,
+    /// Full mesh, indexed by peer rank (`None` at our own slot).
+    peers: Vec<Option<Conn>>,
+    algo: Algorithm,
+    /// Collective sequence number — every rank's n-th collective call
+    /// tags its frames with n, so cross-collective desync is detected.
+    seq: u64,
+}
+
+impl Communicator {
+    /// Rendezvous and build the full connection mesh: every pair of
+    /// ranks shares one socket (rank i dials every j < i and identifies
+    /// itself with a hello frame; j accepts and indexes the connection
+    /// by the hello's rank).
+    pub fn connect(cfg: &CommConfig) -> Result<Communicator> {
+        if cfg.world == 0 {
+            bail!("comm world size must be >= 1");
+        }
+        let rdzv = Rendezvous::new(&cfg.rdzv_dir, cfg.world, cfg.timeout)?;
+        let rank = rdzv.claim_rank(cfg.rank)?;
+        let deadline = Instant::now() + cfg.timeout;
+        let (listener, addr) = Listener::bind(cfg.transport, rdzv.dir(), rank)?;
+        let table = rdzv.exchange(rank, &addr)?;
+
+        let mut peers: Vec<Option<Conn>> = (0..cfg.world).map(|_| None).collect();
+        for (r, peer_addr) in table.iter().enumerate().take(rank) {
+            let conn = Conn::connect(peer_addr, deadline, cfg.timeout)
+                .with_context(|| format!("rank {rank} dialing rank {r}"))?;
+            wire::send_frame(&conn, Kind::Hello, 0, rank as u32, &[])?;
+            peers[r] = Some(conn);
+        }
+        for _ in rank + 1..cfg.world {
+            let conn = listener.accept(deadline, cfg.timeout)?;
+            let hello = wire::recv_frame(&conn).context("reading comm hello")?;
+            if hello.kind != Kind::Hello {
+                bail!("comm handshake desync: expected hello, got {:?}", hello.kind);
+            }
+            let peer = hello.part as usize;
+            if peer <= rank || peer >= cfg.world {
+                bail!("comm hello from unexpected rank {peer} (we are rank {rank})");
+            }
+            if peers[peer].is_some() {
+                bail!("duplicate comm connection from rank {peer}");
+            }
+            peers[peer] = Some(conn);
+        }
+        Ok(Communicator { rank, world: cfg.world, peers, algo: cfg.algo, seq: 0 })
+    }
+
+    /// Build from the `launch` runner's environment. Returns `None`
+    /// when `LOWRANK_COMM_RDZV` is unset — the single-process default.
+    ///
+    /// Env contract (all set by `lowrank-sge launch`):
+    /// `LOWRANK_COMM_RDZV` (rendezvous dir), `LOWRANK_COMM_WORLD`,
+    /// `LOWRANK_COMM_RANK` (optional — lowest free slot when absent),
+    /// `LOWRANK_COMM_TRANSPORT` (`tcp`|`unix`), `LOWRANK_COMM_TIMEOUT_MS`,
+    /// `LOWRANK_COMM_ALGO` (`ring`|`tree`|`auto`).
+    pub fn from_env() -> Result<Option<Communicator>> {
+        let Ok(rdzv_dir) = std::env::var("LOWRANK_COMM_RDZV") else {
+            return Ok(None);
+        };
+        let world: usize = std::env::var("LOWRANK_COMM_WORLD")
+            .context("LOWRANK_COMM_RDZV is set but LOWRANK_COMM_WORLD is not")?
+            .parse()
+            .context("LOWRANK_COMM_WORLD must be a positive integer")?;
+        let rank = match std::env::var("LOWRANK_COMM_RANK") {
+            Ok(s) => Some(s.parse::<usize>().context("LOWRANK_COMM_RANK must be an integer")?),
+            Err(_) => None,
+        };
+        let transport = match std::env::var("LOWRANK_COMM_TRANSPORT") {
+            Ok(s) => TransportKind::parse(&s)?,
+            Err(_) => TransportKind::default_for_host(),
+        };
+        let timeout_ms: u64 = match std::env::var("LOWRANK_COMM_TIMEOUT_MS") {
+            Ok(s) => s.parse().context("LOWRANK_COMM_TIMEOUT_MS must be an integer")?,
+            Err(_) => 60_000,
+        };
+        let algo = match std::env::var("LOWRANK_COMM_ALGO") {
+            Ok(s) => Algorithm::parse(&s)?,
+            Err(_) => Algorithm::Auto,
+        };
+        let cfg = CommConfig {
+            world,
+            rank,
+            transport,
+            rdzv_dir: PathBuf::from(rdzv_dir),
+            timeout: Duration::from_millis(timeout_ms.max(1)),
+            algo,
+        };
+        Communicator::connect(&cfg).map(Some)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn algorithm(&self) -> Algorithm {
+        self.algo
+    }
+
+    pub fn set_algorithm(&mut self, algo: Algorithm) {
+        self.algo = algo;
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    fn peer(&self, rank: usize) -> Result<&Conn> {
+        self.peers
+            .get(rank)
+            .and_then(|c| c.as_ref())
+            .with_context(|| format!("no comm connection to rank {rank}"))
+    }
+
+    /// In-place sum across all ranks with the configured algorithm;
+    /// every rank ends with the identical (bitwise) total.
+    pub fn allreduce_sum(&mut self, data: &mut [f32]) -> Result<()> {
+        self.allreduce_sum_with(self.algo, data)
+    }
+
+    /// In-place sum with an explicit algorithm (the determinism tests
+    /// pin ring ≡ tree ≡ in-process with this).
+    pub fn allreduce_sum_with(&mut self, algo: Algorithm, data: &mut [f32]) -> Result<()> {
+        if self.world == 1 {
+            return Ok(());
+        }
+        let seq = self.next_seq();
+        let use_ring = match algo {
+            Algorithm::Ring => true,
+            Algorithm::Tree => false,
+            Algorithm::Auto => data.len() >= RING_MIN_ELEMS,
+        };
+        if use_ring {
+            self.ring_allreduce(seq, data)
+        } else {
+            self.tree_allreduce(seq, data)
+        }
+    }
+
+    /// All-reduce mean: the cross-process generalization of
+    /// [`crate::coordinator::allreduce_mean`] — sum with the pairing
+    /// tree order, then one scale by 1/world on the kernel pool.
+    pub fn allreduce_mean(&mut self, data: &mut [f32]) -> Result<()> {
+        self.allreduce_sum(data)?;
+        if self.world > 1 {
+            let pool = crate::kernel::global();
+            crate::kernel::scale(&pool, data, 1.0 / self.world as f32);
+        }
+        Ok(())
+    }
+
+    /// Broadcast `data` from `root` to every rank (binomial tree over
+    /// root-relative ranks).
+    pub fn broadcast(&mut self, data: &mut [f32], root: usize) -> Result<()> {
+        if root >= self.world {
+            bail!("broadcast root {root} out of range for world {}", self.world);
+        }
+        if self.world == 1 {
+            return Ok(());
+        }
+        let seq = self.next_seq();
+        let (rank, world) = (self.rank, self.world);
+        let rel = (rank + world - root) % world;
+        if rel != 0 {
+            let parent = (tree_parent(rel) + root) % world;
+            wire::recv_f32s_into(self.peer(parent)?, seq, data)?;
+        }
+        for &child_rel in tree_children(rel, world).iter().rev() {
+            let child = (child_rel + root) % world;
+            wire::send_f32s(self.peer(child)?, seq, data)?;
+        }
+        Ok(())
+    }
+
+    /// Gather every rank's equal-length contribution into
+    /// `out[rank·len .. (rank+1)·len]` on all ranks (ring schedule).
+    pub fn all_gather(&mut self, mine: &[f32], out: &mut [f32]) -> Result<()> {
+        let k = mine.len();
+        if out.len() != k * self.world {
+            bail!(
+                "all_gather output has {} elements, expected {} (world {} × {k})",
+                out.len(),
+                k * self.world,
+                self.world
+            );
+        }
+        let (rank, world) = (self.rank, self.world);
+        out[rank * k..(rank + 1) * k].copy_from_slice(mine);
+        if world == 1 {
+            return Ok(());
+        }
+        let seq = self.next_seq();
+        for s in 1..world {
+            let dst = (rank + s) % world;
+            let src = (rank + world - s) % world;
+            let dst_conn = self.peer(dst)?;
+            let src_conn = self.peer(src)?;
+            let recv_slice = &mut out[src * k..(src + 1) * k];
+            both_ways(
+                || wire::send_f32s(dst_conn, seq, mine),
+                || wire::recv_f32s_into(src_conn, seq, recv_slice),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Block until every rank has reached this barrier (token reduce up
+    /// the pairing tree, release broadcast back down).
+    pub fn barrier(&mut self) -> Result<()> {
+        if self.world == 1 {
+            return Ok(());
+        }
+        let seq = self.next_seq();
+        let (rank, world) = (self.rank, self.world);
+        let mut gap = 1;
+        while gap < world {
+            if rank % (2 * gap) == 0 {
+                let src = rank + gap;
+                if src < world {
+                    self.expect_barrier(src, seq)?;
+                }
+            } else {
+                wire::send_frame(self.peer(rank - gap)?, Kind::Barrier, seq, 0, &[])?;
+                break;
+            }
+            gap *= 2;
+        }
+        if rank != 0 {
+            self.expect_barrier(tree_parent(rank), seq)?;
+        }
+        for &child in tree_children(rank, world).iter().rev() {
+            wire::send_frame(self.peer(child)?, Kind::Barrier, seq, 0, &[])?;
+        }
+        Ok(())
+    }
+
+    fn expect_barrier(&self, from: usize, seq: u64) -> Result<()> {
+        let frame = wire::recv_frame(self.peer(from)?)?;
+        if frame.kind != Kind::Barrier || frame.seq != seq {
+            bail!(
+                "collective protocol desync at barrier: got {:?} seq {} from rank {from}, \
+                 expected barrier seq {seq}",
+                frame.kind,
+                frame.seq
+            );
+        }
+        Ok(())
+    }
+
+    /// Stride-doubling pairing tree (identical association to the
+    /// in-process `allreduce_mean_with`), then release broadcast of the
+    /// rank-0 total.
+    fn tree_allreduce(&self, seq: u64, data: &mut [f32]) -> Result<()> {
+        let (rank, world) = (self.rank, self.world);
+        let pool = crate::kernel::global();
+        // allocated lazily at the first receive: leaf ranks (half the
+        // world) only ever send and never pay for the scratch
+        let mut scratch: Vec<f32> = Vec::new();
+        let mut gap = 1;
+        while gap < world {
+            if rank % (2 * gap) == 0 {
+                let src = rank + gap;
+                if src < world {
+                    if scratch.len() != data.len() {
+                        scratch.resize(data.len(), 0.0);
+                    }
+                    wire::recv_f32s_into(self.peer(src)?, seq, &mut scratch)?;
+                    crate::kernel::add_assign(&pool, data, &scratch);
+                }
+            } else {
+                // this rank's partial is folded into rank − gap; it
+                // waits for the release broadcast below
+                wire::send_f32s(self.peer(rank - gap)?, seq, data)?;
+                break;
+            }
+            gap *= 2;
+        }
+        if rank != 0 {
+            wire::recv_f32s_into(self.peer(tree_parent(rank))?, seq, data)?;
+        }
+        for &child in tree_children(rank, world).iter().rev() {
+            wire::send_f32s(self.peer(child)?, seq, data)?;
+        }
+        Ok(())
+    }
+
+    /// Chunked ring: ring-offset exchange of chunk copies, local
+    /// pairing-tree reduce of the owned chunk on the kernel pool, ring
+    /// all-gather of the reduced chunks. Bitwise identical to
+    /// [`Self::tree_allreduce`] (see module docs).
+    fn ring_allreduce(&self, seq: u64, data: &mut [f32]) -> Result<()> {
+        let (rank, world) = (self.rank, self.world);
+        let len = data.len();
+        // chunk bounds are a pure function of (world, len)
+        let bounds: Vec<usize> = (0..=world).map(|i| i * len / world).collect();
+        let own = bounds[rank]..bounds[rank + 1];
+        let own_len = own.len();
+        let pool = crate::kernel::global();
+
+        // phase 1 — exchange: step s sends our copy of rank (rank+s)'s
+        // chunk and receives rank (rank−s)'s copy of ours, full duplex.
+        let mut copies: Vec<Option<Vec<f32>>> = (0..world).map(|_| None).collect();
+        for s in 1..world {
+            let dst = (rank + s) % world;
+            let src = (rank + world - s) % world;
+            let send_chunk = &data[bounds[dst]..bounds[dst + 1]];
+            let mut buf = vec![0.0f32; own_len];
+            let dst_conn = self.peer(dst)?;
+            let src_conn = self.peer(src)?;
+            both_ways(
+                || wire::send_f32s(dst_conn, seq, send_chunk),
+                || wire::recv_f32s_into(src_conn, seq, &mut buf),
+            )?;
+            copies[src] = Some(buf);
+        }
+
+        // phase 2 — reduce the world copies of our chunk in rank order
+        // with the pairing tree on the kernel pool: elementwise the
+        // same association as the full-vector tree.
+        let mut contrib: Vec<Vec<f32>> = (0..world)
+            .map(|r| {
+                if r == rank {
+                    data[own.clone()].to_vec()
+                } else {
+                    copies[r].take().expect("phase 1 filled every peer slot")
+                }
+            })
+            .collect();
+        crate::kernel::tree_sum_vecs(&pool, &mut contrib);
+        data[own.clone()].copy_from_slice(&contrib[0]);
+
+        // phase 3 — all-gather the reduced chunks around the ring.
+        let own_copy = std::mem::take(&mut contrib[0]);
+        for s in 1..world {
+            let dst = (rank + s) % world;
+            let src = (rank + world - s) % world;
+            let dst_conn = self.peer(dst)?;
+            let src_conn = self.peer(src)?;
+            let recv_slice = &mut data[bounds[src]..bounds[src + 1]];
+            both_ways(
+                || wire::send_f32s(dst_conn, seq, &own_copy),
+                || wire::recv_f32s_into(src_conn, seq, recv_slice),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Run a send and a receive concurrently (the send on a scoped helper
+/// thread) so every rank is always draining its inbound link while its
+/// outbound one fills — the schedule stays deadlock-free at any payload
+/// size, independent of socket buffer depth.
+///
+/// The per-call thread spawn (~10 µs) is a deliberate simplicity
+/// tradeoff: it keeps the exchange logic free of persistent sender
+/// state. If `benches/allreduce.rs` ever shows it dominating at small
+/// payloads, a long-lived sender thread per peer is the follow-on
+/// (ROADMAP: overlapped per-slot reduction).
+fn both_ways<S, R>(send: S, recv: R) -> Result<()>
+where
+    S: FnOnce() -> Result<()> + Send,
+    R: FnOnce() -> Result<()>,
+{
+    std::thread::scope(|scope| {
+        let sender = scope.spawn(send);
+        let recv_res = recv();
+        let send_res = sender
+            .join()
+            .map_err(|_| anyhow::anyhow!("comm sender thread panicked"))?;
+        send_res?;
+        recv_res
+    })
+}
+
+/// Parent of `rank` in the stride-doubling pairing tree: the rank it
+/// sends its partial to (and receives the release broadcast from).
+fn tree_parent(rank: usize) -> usize {
+    debug_assert!(rank > 0);
+    rank - (rank & rank.wrapping_neg())
+}
+
+/// Children of `rank`, in ascending-gap (reduce receive) order; the
+/// release broadcast walks them in reverse.
+fn tree_children(rank: usize, world: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut gap = 1;
+    while gap < world {
+        if rank % (2 * gap) != 0 {
+            break;
+        }
+        if rank + gap < world {
+            out.push(rank + gap);
+        }
+        gap *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_topology_matches_the_pairing_order() {
+        // world 4: 1→0 and 3→2 at gap 1, then 2→0 at gap 2
+        assert_eq!(tree_parent(1), 0);
+        assert_eq!(tree_parent(2), 0);
+        assert_eq!(tree_parent(3), 2);
+        assert_eq!(tree_children(0, 4), vec![1, 2]);
+        assert_eq!(tree_children(2, 4), vec![3]);
+        assert_eq!(tree_children(1, 4), Vec::<usize>::new());
+        // world 3: no partner for rank 2 at gap 1; it folds at gap 2
+        assert_eq!(tree_children(0, 3), vec![1, 2]);
+        assert_eq!(tree_parent(2), 0);
+        // world 6: rank 4 receives 5, then folds into 0 at gap 4
+        assert_eq!(tree_children(4, 6), vec![5]);
+        assert_eq!(tree_parent(4), 0);
+        assert_eq!(tree_children(0, 6), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn algorithm_parse_roundtrip() {
+        for a in [Algorithm::Ring, Algorithm::Tree, Algorithm::Auto] {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algorithm::parse("carrier-pigeon").is_err());
+    }
+}

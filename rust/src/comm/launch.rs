@@ -1,0 +1,158 @@
+//! The `launch` runner — torchrun-style local multi-process spawner.
+//!
+//! `lowrank-sge launch --nproc N <subcommand …>` re-executes the current
+//! binary N times with the child argv, wiring each child into one
+//! collective group through the env-var rendezvous
+//! ([`crate::comm::Communicator::from_env`]): a fresh rendezvous
+//! directory, explicit ranks 0..N, shared world size / transport /
+//! timeout. Child stdout/stderr are line-multiplexed onto the parent's
+//! with a `[rank r]` prefix, and the first non-zero child exit status
+//! is propagated as the runner's own.
+//!
+//! Everything else (threads, checkpoint flags, config files) passes
+//! through untouched — the children parse the exact argv the operator
+//! wrote after `launch`'s own flags.
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use super::transport::TransportKind;
+
+/// Options of the runner itself (everything before the child command).
+#[derive(Clone, Debug)]
+pub struct LaunchOptions {
+    /// Number of ranks to spawn.
+    pub nproc: usize,
+    pub transport: TransportKind,
+    /// Rendezvous directory; a fresh per-launch temp dir when `None`.
+    pub rdzv_dir: Option<PathBuf>,
+    /// Comm timeout handed to the children (`LOWRANK_COMM_TIMEOUT_MS`).
+    pub timeout_ms: u64,
+    /// Collective algorithm override (`ring`|`tree`|`auto`).
+    pub algo: Option<String>,
+}
+
+impl Default for LaunchOptions {
+    fn default() -> Self {
+        LaunchOptions {
+            nproc: 2,
+            transport: TransportKind::default_for_host(),
+            rdzv_dir: None,
+            timeout_ms: 120_000,
+            algo: None,
+        }
+    }
+}
+
+/// Distinguishes concurrent launches inside one parent process.
+static LAUNCH_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+/// Spawn `nproc` ranks of the current binary running `child_args`,
+/// multiplex their output, and return the first non-zero exit code in
+/// rank order (0 when every rank succeeded).
+pub fn run_launch(opts: &LaunchOptions, child_args: &[String]) -> Result<i32> {
+    if opts.nproc == 0 {
+        bail!("launch: --nproc must be >= 1");
+    }
+    if child_args.is_empty() {
+        bail!("launch: missing child command (e.g. `launch --nproc 2 pretrain --steps 100`)");
+    }
+    let exe = std::env::current_exe().context("resolving the lowrank-sge binary path")?;
+    // The rendezvous must start empty: stale claim/addr files from a
+    // previous run would assign ranks from a dead world. Our own temp
+    // dir is safe to clear; an operator-supplied dir is NOT ours to
+    // wipe — refuse a non-empty one instead of destroying its contents.
+    let rdzv = match &opts.rdzv_dir {
+        Some(d) => {
+            std::fs::create_dir_all(d).with_context(|| format!("creating {d:?}"))?;
+            let occupied = std::fs::read_dir(d)
+                .with_context(|| format!("listing {d:?}"))?
+                .next()
+                .is_some();
+            if occupied {
+                bail!(
+                    "launch: --rdzv-dir {d:?} is not empty — point it at a fresh directory \
+                     (stale rendezvous files would corrupt rank assignment)"
+                );
+            }
+            d.clone()
+        }
+        None => {
+            let d = std::env::temp_dir().join(format!(
+                "lowrank-launch-{}-{}",
+                std::process::id(),
+                LAUNCH_COUNTER.fetch_add(1, Ordering::SeqCst)
+            ));
+            if d.exists() {
+                std::fs::remove_dir_all(&d).with_context(|| format!("clearing stale {d:?}"))?;
+            }
+            std::fs::create_dir_all(&d)?;
+            d
+        }
+    };
+
+    let mut children = Vec::with_capacity(opts.nproc);
+    for rank in 0..opts.nproc {
+        let mut cmd = Command::new(&exe);
+        cmd.args(child_args)
+            .env("LOWRANK_COMM_RDZV", &rdzv)
+            .env("LOWRANK_COMM_WORLD", opts.nproc.to_string())
+            .env("LOWRANK_COMM_RANK", rank.to_string())
+            .env("LOWRANK_COMM_TRANSPORT", opts.transport.name())
+            .env("LOWRANK_COMM_TIMEOUT_MS", opts.timeout_ms.to_string())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped());
+        if let Some(algo) = &opts.algo {
+            cmd.env("LOWRANK_COMM_ALGO", algo);
+        }
+        let mut child = cmd
+            .spawn()
+            .with_context(|| format!("spawning rank {rank} ({})", exe.display()))?;
+        let out_pump = pump(child.stdout.take().expect("piped stdout"), rank, false);
+        let err_pump = pump(child.stderr.take().expect("piped stderr"), rank, true);
+        children.push((rank, child, out_pump, err_pump));
+    }
+
+    let mut first_failure = 0i32;
+    for (rank, mut child, out_pump, err_pump) in children {
+        let status = child
+            .wait()
+            .with_context(|| format!("waiting for rank {rank}"))?;
+        let _ = out_pump.join();
+        let _ = err_pump.join();
+        if !status.success() && first_failure == 0 {
+            // signal-killed children have no code; report a generic 101
+            first_failure = status.code().unwrap_or(101);
+            eprintln!("launch: rank {rank} exited with {status}");
+        }
+    }
+    // only our own temp dir is removed; an operator-supplied dir keeps
+    // its (now-stale) rendezvous files for post-mortem inspection
+    if opts.rdzv_dir.is_none() {
+        let _ = std::fs::remove_dir_all(&rdzv);
+    }
+    Ok(first_failure)
+}
+
+/// Forward one child stream line-by-line with a `[rank r]` prefix.
+fn pump(
+    stream: impl std::io::Read + Send + 'static,
+    rank: usize,
+    is_err: bool,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if is_err {
+                eprintln!("[rank {rank}] {line}");
+            } else {
+                println!("[rank {rank}] {line}");
+            }
+        }
+    })
+}

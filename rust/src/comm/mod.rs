@@ -1,0 +1,42 @@
+//! `comm` — the multi-process collective communication subsystem.
+//!
+//! The DDP story stops being an in-process simulation here: training
+//! processes rendezvous over the filesystem, connect a full socket mesh
+//! (TCP or Unix-domain), and run real collectives — `allreduce_mean`,
+//! `broadcast`, `all_gather`, `barrier` — over a self-validating wire
+//! format borrowed from the checkpoint codec (magic + dtype + CRC-32,
+//! [`wire`]). Low-rank training is exactly the workload where this
+//! pays: the lifted gradients `dB ∈ ℝ^{m×r}` are r/n of the full
+//! gradient, so collective bandwidth (not memory) is the scaling lever.
+//!
+//! * [`transport`] — [`Conn`]/[`Listener`] over TCP and Unix sockets,
+//!   with read/write timeouts so a dead peer is an error, not a hang.
+//! * [`rendezvous`] — file rendezvous: atomic rank claims (O_EXCL) and
+//!   address exchange under one shared directory.
+//! * [`wire`] — length-prefixed, CRC-verified frames in the
+//!   `ckpt::codec` framing style; chunked payload streaming.
+//! * [`collective`] — the [`Communicator`]: chunked-ring and
+//!   pairing-tree all-reduce, broadcast, all-gather, barrier.
+//! * [`launch`] — the torchrun-style local runner behind
+//!   `lowrank-sge launch --nproc N …`.
+//!
+//! # Determinism contract
+//!
+//! The combine order of every reduction is a pure function of (world
+//! size, payload length) and matches the in-process
+//! [`crate::coordinator::allreduce_mean_with`] pairing tree exactly —
+//! so ring ≡ tree ≡ in-process, bitwise; results are independent of
+//! message-arrival timing and thread count; and `world == 1` is
+//! bitwise the single-process serial run. See [`collective`] for the
+//! construction.
+
+pub mod collective;
+pub mod launch;
+pub mod rendezvous;
+pub mod transport;
+pub mod wire;
+
+pub use collective::{Algorithm, CommConfig, Communicator, RING_MIN_ELEMS};
+pub use launch::{run_launch, LaunchOptions};
+pub use rendezvous::Rendezvous;
+pub use transport::{Conn, Listener, TransportKind};

@@ -1,0 +1,194 @@
+//! File-system rendezvous: how `world` independent processes find each
+//! other, agree on ranks, and exchange listener addresses before any
+//! socket is connected.
+//!
+//! The rendezvous root is a shared directory (the `launch` runner
+//! creates a fresh one per run and exports it as `LOWRANK_COMM_RDZV`).
+//! Two file families live in it:
+//!
+//! * `claim-<rank>` — rank assignment. A process with an explicit rank
+//!   (from `LOWRANK_COMM_RANK`) claims its slot; a process without one
+//!   atomically claims the lowest free slot via `create_new` (O_EXCL),
+//!   so concurrent joiners can never collide on a rank.
+//! * `addr-<rank>` — the claimed rank's listener address (`tcp://…` or
+//!   `unix://…`), written to a temp name and renamed so readers never
+//!   observe a half-written address. Every process polls until all
+//!   `world` addresses exist, then returns the full table.
+//!
+//! Everything is bounded by the configured timeout: a missing peer is a
+//! loud "rendezvous timed out" error naming the ranks still absent.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Rendezvous handle over a shared directory.
+#[derive(Clone, Debug)]
+pub struct Rendezvous {
+    dir: PathBuf,
+    world: usize,
+    timeout: Duration,
+}
+
+impl Rendezvous {
+    pub fn new(dir: impl Into<PathBuf>, world: usize, timeout: Duration) -> Result<Rendezvous> {
+        if world == 0 {
+            bail!("comm world size must be >= 1");
+        }
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating rendezvous dir {dir:?}"))?;
+        Ok(Rendezvous { dir, world, timeout })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    fn claim_path(&self, rank: usize) -> PathBuf {
+        self.dir.join(format!("claim-{rank}"))
+    }
+
+    fn addr_path(&self, rank: usize) -> PathBuf {
+        self.dir.join(format!("addr-{rank}"))
+    }
+
+    /// Claim a rank. `want = Some(r)` claims exactly `r` (failing if a
+    /// different process got there first); `None` claims the lowest
+    /// free slot atomically.
+    pub fn claim_rank(&self, want: Option<usize>) -> Result<usize> {
+        if let Some(rank) = want {
+            if rank >= self.world {
+                bail!("rank {rank} is out of range for world size {}", self.world);
+            }
+            claim_file(&self.claim_path(rank))
+                .with_context(|| format!("claiming comm rank {rank} (already taken?)"))?;
+            return Ok(rank);
+        }
+        for rank in 0..self.world {
+            if claim_file(&self.claim_path(rank)).is_ok() {
+                return Ok(rank);
+            }
+        }
+        bail!("no free rank slot: all {} ranks are already claimed", self.world)
+    }
+
+    /// Publish this rank's listener address and wait for every peer's.
+    /// Returns the full address table, indexed by rank.
+    pub fn exchange(&self, rank: usize, addr: &str) -> Result<Vec<String>> {
+        let tmp = self.dir.join(format!(".addr-{rank}.tmp"));
+        std::fs::write(&tmp, addr).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, self.addr_path(rank))
+            .with_context(|| format!("publishing address for rank {rank}"))?;
+
+        let deadline = Instant::now() + self.timeout;
+        let mut table = vec![None::<String>; self.world];
+        loop {
+            let mut missing = Vec::new();
+            for (r, slot) in table.iter_mut().enumerate() {
+                if slot.is_none() {
+                    match std::fs::read_to_string(self.addr_path(r)) {
+                        Ok(s) => *slot = Some(s.trim().to_string()),
+                        Err(_) => missing.push(r),
+                    }
+                }
+            }
+            if missing.is_empty() {
+                return Ok(table.into_iter().map(|s| s.expect("all slots filled")).collect());
+            }
+            if Instant::now() >= deadline {
+                bail!(
+                    "rendezvous timed out after {:?}: ranks {missing:?} never published \
+                     an address under {:?}",
+                    self.timeout,
+                    self.dir
+                );
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// Atomic create-new claim (O_EXCL): exactly one concurrent caller wins.
+fn claim_file(path: &Path) -> Result<()> {
+    std::fs::OpenOptions::new()
+        .write(true)
+        .create_new(true)
+        .open(path)
+        .map(|_| ())
+        .with_context(|| format!("claim file {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lowrank_comm_rdzv_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn concurrent_claims_get_distinct_ranks() {
+        let dir = fresh_dir("claims");
+        let rdzv = Rendezvous::new(&dir, 4, Duration::from_secs(5)).unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let rdzv = rdzv.clone();
+            handles.push(std::thread::spawn(move || rdzv.claim_rank(None).unwrap()));
+        }
+        let mut ranks: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, vec![0, 1, 2, 3]);
+        // a fifth joiner finds no slot
+        assert!(rdzv.claim_rank(None).is_err());
+    }
+
+    #[test]
+    fn explicit_claim_conflicts_are_loud() {
+        let dir = fresh_dir("explicit");
+        let rdzv = Rendezvous::new(&dir, 2, Duration::from_secs(1)).unwrap();
+        assert_eq!(rdzv.claim_rank(Some(1)).unwrap(), 1);
+        assert!(rdzv.claim_rank(Some(1)).is_err());
+        assert!(rdzv.claim_rank(Some(7)).is_err());
+        assert_eq!(rdzv.claim_rank(None).unwrap(), 0);
+    }
+
+    #[test]
+    fn exchange_returns_the_full_table() {
+        let dir = fresh_dir("exchange");
+        let rdzv = Rendezvous::new(&dir, 3, Duration::from_secs(5)).unwrap();
+        let mut handles = Vec::new();
+        for rank in 0..3 {
+            let rdzv = rdzv.clone();
+            handles.push(std::thread::spawn(move || {
+                rdzv.exchange(rank, &format!("tcp://127.0.0.1:{}", 9000 + rank)).unwrap()
+            }));
+        }
+        for h in handles {
+            let table = h.join().unwrap();
+            assert_eq!(
+                table,
+                vec![
+                    "tcp://127.0.0.1:9000".to_string(),
+                    "tcp://127.0.0.1:9001".to_string(),
+                    "tcp://127.0.0.1:9002".to_string(),
+                ]
+            );
+        }
+    }
+
+    #[test]
+    fn missing_peer_times_out_with_the_absent_ranks_named() {
+        let dir = fresh_dir("timeout");
+        let rdzv = Rendezvous::new(&dir, 2, Duration::from_millis(80)).unwrap();
+        let err = rdzv.exchange(0, "tcp://127.0.0.1:1").unwrap_err().to_string();
+        assert!(err.contains("timed out") && err.contains("[1]"), "{err}");
+    }
+}

@@ -1,0 +1,358 @@
+//! Socket transport for the comm subsystem: TCP (loopback or real
+//! network) and Unix-domain sockets behind one [`Conn`] / [`Listener`]
+//! pair, with explicit read/write timeouts so a dead peer surfaces as
+//! an error, never a hang.
+//!
+//! All reads and writes go through `&Conn` (the standard library
+//! implements `Read`/`Write` for `&TcpStream` / `&UnixStream`), so one
+//! connection can be sending on a helper thread while the owning thread
+//! receives — the full-duplex overlap the ring collectives rely on.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Which socket family a run uses. Unix-domain is the default for
+/// single-host `launch` trees (lower latency, no port allocation); TCP
+/// works everywhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    Tcp,
+    #[cfg(unix)]
+    Unix,
+}
+
+impl TransportKind {
+    /// Parse `"tcp"` / `"unix"`. On non-Unix platforms `"unix"` is
+    /// rejected at parse time rather than failing at bind time.
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s {
+            "tcp" => Ok(TransportKind::Tcp),
+            #[cfg(unix)]
+            "unix" => Ok(TransportKind::Unix),
+            other => bail!("unknown comm transport {other:?} (expected tcp or unix)"),
+        }
+    }
+
+    /// Platform default: Unix-domain where available, else TCP.
+    pub fn default_for_host() -> TransportKind {
+        #[cfg(unix)]
+        {
+            TransportKind::Unix
+        }
+        #[cfg(not(unix))]
+        {
+            TransportKind::Tcp
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Tcp => "tcp",
+            #[cfg(unix)]
+            TransportKind::Unix => "unix",
+        }
+    }
+}
+
+/// A parsed peer address — splitting parse from dial keeps permanent
+/// errors (bad address) out of the transient-retry loop.
+#[derive(Clone, Debug)]
+enum PeerAddr {
+    Tcp(std::net::SocketAddr),
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+impl PeerAddr {
+    fn parse(addr: &str) -> Result<PeerAddr> {
+        if let Some(rest) = addr.strip_prefix("tcp://") {
+            let sock = rest
+                .parse()
+                .with_context(|| format!("bad tcp peer address {rest:?}"))?;
+            return Ok(PeerAddr::Tcp(sock));
+        }
+        #[cfg(unix)]
+        if let Some(path) = addr.strip_prefix("unix://") {
+            return Ok(PeerAddr::Unix(PathBuf::from(path)));
+        }
+        bail!("unparseable comm peer address {addr:?} (expected tcp://host:port or unix://path)")
+    }
+
+    fn dial(&self, io_timeout: Duration) -> Result<Conn> {
+        match self {
+            PeerAddr::Tcp(sock) => {
+                let stream = TcpStream::connect_timeout(sock, io_timeout)?;
+                stream.set_nodelay(true)?;
+                Ok(Conn::Tcp(stream))
+            }
+            #[cfg(unix)]
+            PeerAddr::Unix(path) => {
+                let stream = UnixStream::connect(path)?;
+                Ok(Conn::Unix(stream))
+            }
+        }
+    }
+}
+
+/// One established peer connection.
+#[derive(Debug)]
+pub enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    /// Dial a peer address (as published through the rendezvous),
+    /// retrying connection attempts until `deadline` — the peer's
+    /// listener is bound before its address is published, so retries
+    /// only cover transient connect races, not an open-ended wait. A
+    /// malformed address is permanent and fails immediately.
+    pub fn connect(addr: &str, deadline: Instant, io_timeout: Duration) -> Result<Conn> {
+        let target = PeerAddr::parse(addr)?;
+        loop {
+            let attempt = target.dial(io_timeout);
+            match attempt {
+                Ok(conn) => {
+                    conn.set_timeouts(io_timeout)?;
+                    return Ok(conn);
+                }
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e).with_context(|| format!("connecting to comm peer {addr}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        }
+    }
+
+    /// Apply read/write timeouts — the bound that turns a dead peer
+    /// into an error instead of a hang.
+    pub fn set_timeouts(&self, timeout: Duration) -> Result<()> {
+        match self {
+            Conn::Tcp(s) => {
+                s.set_read_timeout(Some(timeout))?;
+                s.set_write_timeout(Some(timeout))?;
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                s.set_read_timeout(Some(timeout))?;
+                s.set_write_timeout(Some(timeout))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Blocking full write through a shared reference (full-duplex with
+    /// concurrent reads — `Write` is implemented for `&TcpStream` /
+    /// `&UnixStream`). Timeouts and closed peers surface as errors.
+    pub fn write_all(&self, buf: &[u8]) -> Result<()> {
+        let res = match self {
+            Conn::Tcp(s) => {
+                let mut w: &TcpStream = s;
+                w.write_all(buf)
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                let mut w: &UnixStream = s;
+                w.write_all(buf)
+            }
+        };
+        res.map_err(map_io_err).context("comm send")
+    }
+
+    /// Blocking full read through a shared reference.
+    pub fn read_exact(&self, buf: &mut [u8]) -> Result<()> {
+        let res = match self {
+            Conn::Tcp(s) => {
+                let mut r: &TcpStream = s;
+                r.read_exact(buf)
+            }
+            #[cfg(unix)]
+            Conn::Unix(s) => {
+                let mut r: &UnixStream = s;
+                r.read_exact(buf)
+            }
+        };
+        res.map_err(map_io_err).context("comm recv")
+    }
+}
+
+/// Normalize the two timeout flavors the OS reports into one message
+/// the fault tests (and operators) can recognize.
+fn map_io_err(e: std::io::Error) -> anyhow::Error {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            anyhow::anyhow!("timed out waiting for comm peer (peer dead or stalled?): {e}")
+        }
+        std::io::ErrorKind::UnexpectedEof => {
+            anyhow::anyhow!("comm peer closed the connection mid-message (truncated frame): {e}")
+        }
+        _ => anyhow::anyhow!(e),
+    }
+}
+
+/// A bound, not-yet-connected local endpoint.
+#[derive(Debug)]
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind an ephemeral local endpoint: TCP on `127.0.0.1:0`, Unix on
+    /// `<dir>/rank-<rank>.sock` (any stale socket file is removed
+    /// first). Returns the listener plus the `tcp://` / `unix://`
+    /// address string to publish through the rendezvous.
+    pub fn bind(kind: TransportKind, dir: &Path, rank: usize) -> Result<(Listener, String)> {
+        match kind {
+            TransportKind::Tcp => {
+                let l = TcpListener::bind("127.0.0.1:0").context("binding comm tcp listener")?;
+                let addr = format!("tcp://{}", l.local_addr()?);
+                Ok((Listener::Tcp(l), addr))
+            }
+            #[cfg(unix)]
+            TransportKind::Unix => {
+                let path = dir.join(format!("rank-{rank}.sock"));
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)
+                    .with_context(|| format!("binding comm unix listener {path:?}"))?;
+                let addr = format!("unix://{}", path.display());
+                Ok((Listener::Unix(l, path), addr))
+            }
+        }
+    }
+
+    /// Accept one connection, polling until `deadline` (listeners have
+    /// no native accept timeout). The accepted stream is switched back
+    /// to blocking mode with `io_timeout` reads/writes.
+    pub fn accept(&self, deadline: Instant, io_timeout: Duration) -> Result<Conn> {
+        self.set_nonblocking(true)?;
+        let conn = loop {
+            let attempt = match self {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                    let _ = s.set_nodelay(true);
+                    Conn::Tcp(s)
+                }),
+                #[cfg(unix)]
+                Listener::Unix(l, _) => l.accept().map(|(s, _)| Conn::Unix(s)),
+            };
+            match attempt {
+                Ok(conn) => break conn,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!("timed out waiting for a comm peer to connect");
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e).context("accepting comm connection"),
+            }
+        };
+        self.set_nonblocking(false)?;
+        match &conn {
+            Conn::Tcp(s) => s.set_nonblocking(false)?,
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(false)?,
+        }
+        conn.set_timeouts(io_timeout)?;
+        Ok(conn)
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb)?,
+            #[cfg(unix)]
+            Listener::Unix(l, _) => l.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+}
+
+#[cfg(unix)]
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(kind: TransportKind) -> (Conn, Conn) {
+        let dir = std::env::temp_dir().join(format!("lowrank_comm_transport_{}", kind.name()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (listener, addr) = Listener::bind(kind, &dir, 0).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let io = Duration::from_secs(5);
+        let handle = std::thread::spawn(move || Conn::connect(&addr, deadline, io).unwrap());
+        let accepted = listener.accept(deadline, io).unwrap();
+        (handle.join().unwrap(), accepted)
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let (a, b) = pair(TransportKind::Tcp);
+        a.write_all(b"hello over tcp").unwrap();
+        let mut buf = [0u8; 14];
+        b.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"hello over tcp");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_roundtrip() {
+        let (a, b) = pair(TransportKind::Unix);
+        b.write_all(b"hi").unwrap();
+        let mut buf = [0u8; 2];
+        a.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"hi");
+    }
+
+    #[test]
+    fn read_times_out_instead_of_hanging() {
+        let (a, _b) = pair(TransportKind::Tcp);
+        a.set_timeouts(Duration::from_millis(50)).unwrap();
+        let mut buf = [0u8; 1];
+        let err = a.read_exact(&mut buf).unwrap_err().to_string();
+        let root = format!("{:#}", a.read_exact(&mut buf).unwrap_err());
+        assert!(err.contains("recv") || root.contains("timed out"), "{err} / {root}");
+    }
+
+    #[test]
+    fn peer_drop_is_an_error_not_a_hang() {
+        let (a, b) = pair(TransportKind::Tcp);
+        drop(b);
+        let mut buf = [0u8; 8];
+        assert!(a.read_exact(&mut buf).is_err());
+    }
+
+    #[test]
+    fn accept_timeout_is_bounded() {
+        let dir = std::env::temp_dir().join("lowrank_comm_transport_accept");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (listener, _addr) = Listener::bind(TransportKind::Tcp, &dir, 0).unwrap();
+        let deadline = Instant::now() + Duration::from_millis(60);
+        let err = listener
+            .accept(deadline, Duration::from_secs(1))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn bad_address_is_rejected() {
+        let deadline = Instant::now();
+        assert!(Conn::connect("carrier-pigeon://coop", deadline, Duration::from_secs(1)).is_err());
+    }
+}

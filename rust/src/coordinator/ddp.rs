@@ -1,56 +1,87 @@
-//! Data-parallel worker simulation (the paper's "Distributed Data
-//! Parallel for multi-GPU acceleration", DESIGN.md §2).
+//! Data-parallel coordination (the paper's "Distributed Data Parallel
+//! for multi-GPU acceleration", DESIGN.md §2) — both topologies:
 //!
-//! N producer threads each own an independent RNG stream and generate
-//! batch shards into a bounded channel — the backpressure a real input
-//! pipeline has. The leader (trainer) pulls one shard per worker per
-//! step, executes the grad artifact per shard, and all-reduces (averages)
-//! the gradients. PJRT execution stays on the leader thread: the CPU
-//! plugin is single-device, so true parallel execute would only fight
-//! over the one core; what is being exercised is the *coordination
-//! topology* (sharding, channel backpressure, deterministic per-worker
-//! streams, gradient all-reduce).
+//! * **In-process**: N producer threads on one trainer, each owning an
+//!   independent RNG stream and feeding batch shards through its own
+//!   bounded channel; the trainer pulls one shard per worker per step
+//!   **in worker order** (deterministic — shard order is a pure
+//!   function of the worker index, never of thread timing), executes
+//!   the grad artifact per shard, and all-reduces on the kernel pool.
+//! * **Multi-process**: each rank of a `lowrank-sge launch` tree owns a
+//!   contiguous slice of the global worker set
+//!   ([`BatchProducer::spawn_lm_slice`] keeps the per-worker RNG
+//!   streams identical to the single-process run), reduces its local
+//!   shards with the same pairing tree, and folds the partial sums
+//!   across ranks through [`crate::comm`]'s ring/tree collectives.
+//!
+//! The [`Collective`] enum is the backend switch: `InProcess` is the
+//! classic single-process path, `Comm` wraps a
+//! [`crate::comm::Communicator`] built from the `launch` env. Because
+//! the cross-process combine order matches the in-process pairing tree
+//! (see [`crate::comm::collective`]), a `launch --nproc W` run with one
+//! worker per rank is bitwise identical to the single-process W-worker
+//! run — the property `tests/launch_ddp.rs` pins down.
+//!
+//! # Leader discipline (enforced)
+//!
+//! Exactly one rank — [`LEADER_RANK`] — may write shared side effects
+//! (checkpoints, LATEST updates, metrics files). This is no longer just
+//! a comment: the pretrain save point runs `is_leader()` → `save_state`
+//! (which itself bails via [`Collective::assert_leader`] if a
+//! non-leader rank ever reaches it) → `barrier()`, and `main` gates
+//! metrics/export writes the same way. [`Collective::leader_writes`]
+//! packages that gate-write-barrier sequence for closure-friendly call
+//! sites (the world=2 regression test drives it). Non-leader ranks skip
+//! the write but still cross the same barrier, so every rank leaves the
+//! save point with the same step count. Durability timing
+//! depends on the write path: a synchronous closure is committed when
+//! the barrier releases; the pretrain trainer's asynchronous saves
+//! ([`crate::ckpt::AsyncCheckpointer`]) commit in the background and
+//! only guarantee the `LATEST` state is on disk once the writer drains
+//! (at the next save, or at end of run).
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
+use anyhow::{bail, Result};
+
+use crate::comm::Communicator;
 use crate::data::{LmBatcher, ZipfMarkovCorpus};
 use crate::rng::Rng;
 
 /// Rank that owns shared side effects (checkpoint writes, LATEST
-/// updates, metrics files). In this in-process simulation the trainer
-/// thread *is* rank 0 by construction, so the constant is documentation
-/// of the contract rather than a runtime check; a real multi-process
-/// DDP deployment must enforce the same discipline — every rank reaches
-/// the step barrier, exactly one writes the checkpoint.
+/// updates, metrics files). Enforced at runtime by
+/// [`Collective::leader_writes`] and the trainers' `save_state` guard:
+/// every rank reaches the save barrier, exactly one writes.
 pub const LEADER_RANK: usize = 0;
 
-/// A batch shard produced by one worker.
+/// A batch shard produced by one worker. `worker` is the *global*
+/// worker index (stable across in-process and multi-process runs).
 #[derive(Clone, Debug)]
 pub struct Shard {
     pub worker: usize,
     pub tokens: Vec<i32>,
 }
 
-/// Handle to the worker pool.
+/// Handle to the worker pool. One bounded channel per worker: the
+/// trainer drains them in worker order, so the shard sequence a step
+/// sees is deterministic (and a resumed run rejoins every stream
+/// exactly, at any worker count).
 pub struct BatchProducer {
-    rx: mpsc::Receiver<Shard>,
+    rxs: Vec<mpsc::Receiver<Shard>>,
     handles: Vec<JoinHandle<()>>,
-    workers: usize,
 }
 
 impl BatchProducer {
-    /// Spawn `workers` producer threads, each generating `(batch,
-    /// seq+1)` LM shards from its own forked RNG stream. `depth` bounds
-    /// the queue (backpressure). `skip` fast-forwards every worker past
-    /// its first `skip` batches — on `--resume` at step S each stream is
-    /// replayed to exactly where the interrupted run left off, so a
-    /// single-worker resumed run sees the identical token sequence.
-    /// (With several workers the rejoin is approximate: the interrupted
-    /// run consumed `workers·S` shards in timing-dependent per-worker
-    /// proportions and discarded up to `depth` queued shards, so exact
-    /// per-stream positions are unknowable — matching the inherent
-    /// nondeterminism of multi-worker shard ordering itself.)
+    /// Spawn all `workers` producer threads (the single-process
+    /// topology): worker w generates `(batch, seq+1)` LM shards from
+    /// the stream `seed_rng.fork(w+1)`. `depth` bounds the *total*
+    /// queued shards (split evenly across the per-worker channels —
+    /// the backpressure a real input pipeline has). `skip`
+    /// fast-forwards every worker past its first `skip` batches, so a
+    /// `--resume` at step S rejoins each stream exactly where the
+    /// interrupted run left off — per-worker channels make this exact
+    /// at any worker count.
     pub fn spawn_lm(
         corpus: ZipfMarkovCorpus,
         batch: usize,
@@ -60,13 +91,48 @@ impl BatchProducer {
         seed_rng: &mut Rng,
         skip: u64,
     ) -> Self {
-        assert!(workers >= 1);
-        let (tx, rx) = mpsc::sync_channel::<Shard>(depth.max(workers));
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let tx = tx.clone();
-            let corpus = corpus.clone();
+        let per_worker = (depth.max(workers) / workers.max(1)).max(1);
+        Self::spawn_lm_slice(
+            corpus, batch, seq_len, workers, 0, workers, per_worker, seed_rng, skip,
+        )
+    }
+
+    /// Spawn the worker slice `[first, first + count)` out of a global
+    /// set of `total_workers` (the multi-process topology: rank r of
+    /// world W owns `count = total/W` workers starting at `r·count`).
+    ///
+    /// Every worker stream in the *global* set is forked from
+    /// `seed_rng` in index order — including the workers this rank does
+    /// not own — so worker w's stream is identical no matter which rank
+    /// runs it (and `seed_rng` itself advances identically on every
+    /// rank). `depth` here is the per-worker queue bound.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn_lm_slice(
+        corpus: ZipfMarkovCorpus,
+        batch: usize,
+        seq_len: usize,
+        total_workers: usize,
+        first: usize,
+        count: usize,
+        depth: usize,
+        seed_rng: &mut Rng,
+        skip: u64,
+    ) -> Self {
+        assert!(count >= 1, "a producer needs at least one worker");
+        assert!(
+            first + count <= total_workers,
+            "worker slice [{first}, {}) exceeds the global worker set of {total_workers}",
+            first + count
+        );
+        let mut rxs = Vec::with_capacity(count);
+        let mut handles = Vec::with_capacity(count);
+        for w in 0..total_workers {
             let rng = seed_rng.fork(w as u64 + 1);
+            if w < first || w >= first + count {
+                continue; // another rank's worker; stream consumed for parity
+            }
+            let (tx, rx) = mpsc::sync_channel::<Shard>(depth.max(1));
+            let corpus = corpus.clone();
             handles.push(std::thread::spawn(move || {
                 let mut batcher = LmBatcher::new(corpus, batch, seq_len, rng);
                 for _ in 0..skip {
@@ -79,24 +145,28 @@ impl BatchProducer {
                     }
                 }
             }));
+            rxs.push(rx);
         }
-        BatchProducer { rx, handles, workers }
+        BatchProducer { rxs, handles }
     }
 
+    /// Number of local workers (the slice this producer owns).
     pub fn workers(&self) -> usize {
-        self.workers
+        self.rxs.len()
     }
 
-    /// Pull one shard per worker (a full global step's worth).
+    /// Pull one shard per local worker, in worker order — a full local
+    /// step's worth, in a deterministic sequence.
     pub fn next_step_shards(&self) -> Vec<Shard> {
-        (0..self.workers)
-            .map(|_| self.rx.recv().expect("producer thread died"))
+        self.rxs
+            .iter()
+            .map(|rx| rx.recv().expect("producer thread died"))
             .collect()
     }
 
-    /// Shut the pool down (drop the receiver, join the threads).
+    /// Shut the pool down (drop the receivers, join the threads).
     pub fn shutdown(self) {
-        drop(self.rx);
+        drop(self.rxs);
         for h in self.handles {
             let _ = h.join();
         }
@@ -113,13 +183,14 @@ pub fn allreduce_mean(grads: &mut [Vec<f32>]) -> usize {
 
 /// All-reduce (mean) with an explicit pool.
 ///
-/// Shards combine in a **fixed pairing order** — a stride-doubling
-/// binary tree over the worker index (`g[i] += g[i+gap]` for gap = 1,
-/// 2, 4, …) — and each pairwise add is chunked elementwise across the
-/// pool. Both the tree shape (a function of the worker count alone) and
-/// the chunking (disjoint elements) are independent of the thread
-/// count, so the reduced gradient is bitwise identical from 1 thread to
-/// N — the property the DDP determinism tests pin down.
+/// Shards combine in a **fixed pairing order** — the stride-doubling
+/// binary tree of [`crate::kernel::tree_sum_vecs`] (`g[i] += g[i+gap]`
+/// for gap = 1, 2, 4, …) — and each pairwise add is chunked elementwise
+/// across the pool. Both the tree shape (a function of the worker count
+/// alone) and the chunking (disjoint elements) are independent of the
+/// thread count, so the reduced gradient is bitwise identical from 1
+/// thread to N — and the `comm` collectives reuse the same order across
+/// processes.
 ///
 /// Only `grads[0]` holds the result; the tree uses the remaining
 /// shards as scratch (inner nodes hold partial sums afterwards), so
@@ -131,19 +202,141 @@ pub fn allreduce_mean_with(pool: &crate::kernel::KernelPool, grads: &mut [Vec<f3
     for g in grads.iter() {
         assert_eq!(g.len(), len, "gradient length mismatch across workers");
     }
-    let mut gap = 1;
-    while gap < n {
-        let mut i = 0;
-        while i + gap < n {
-            let (left, right) = grads.split_at_mut(i + gap);
-            crate::kernel::add_assign(pool, &mut left[i], &right[0]);
-            i += 2 * gap;
-        }
-        gap *= 2;
-    }
+    crate::kernel::tree_sum_vecs(pool, grads);
     let inv = 1.0 / n as f32;
     crate::kernel::scale(pool, &mut grads[0], inv);
     n
+}
+
+/// The gradient-averaging backend a trainer runs on.
+///
+/// `InProcess` is the classic topology: every worker shard lives on
+/// this trainer, one pairing-tree reduce finishes the job. `Comm` is a
+/// rank in a `launch` world: the local shards tree-reduce first, the
+/// per-rank partials fold across processes with the same pairing tree
+/// (ring or tree transport — bitwise identical either way), and the
+/// mean is taken over the *global* shard count.
+///
+/// When the per-rank shard count is a power of two (it is 1 in the
+/// canonical one-worker-per-rank deployment), the local-then-cross
+/// association is exactly the global pairing tree, so distributed
+/// results are bitwise identical to the single-process run.
+pub enum Collective {
+    InProcess,
+    Comm(Communicator),
+}
+
+impl Collective {
+    pub fn in_process() -> Self {
+        Collective::InProcess
+    }
+
+    /// Build from the `launch` env: `Comm` inside a launch tree,
+    /// `InProcess` otherwise.
+    pub fn from_env() -> Result<Self> {
+        Ok(match Communicator::from_env()? {
+            Some(comm) => Collective::Comm(comm),
+            None => Collective::InProcess,
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        match self {
+            Collective::InProcess => LEADER_RANK,
+            Collective::Comm(c) => c.rank(),
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        match self {
+            Collective::InProcess => 1,
+            Collective::Comm(c) => c.world(),
+        }
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.rank() == LEADER_RANK
+    }
+
+    pub fn is_distributed(&self) -> bool {
+        matches!(self, Collective::Comm(_))
+    }
+
+    /// All-reduce (mean) the per-worker gradients of one step: local
+    /// pairing-tree sum, cross-rank fold for `Comm`, one scale by the
+    /// global shard count. `grads[0]` holds the result (the rest are
+    /// tree scratch); returns the global shard count.
+    pub fn allreduce_mean_shards(&mut self, grads: &mut [Vec<f32>]) -> Result<usize> {
+        let n_local = grads.len();
+        assert!(n_local >= 1);
+        let pool = crate::kernel::global();
+        crate::kernel::tree_sum_vecs(&pool, grads);
+        let total = match self {
+            Collective::InProcess => n_local,
+            Collective::Comm(c) => {
+                c.allreduce_sum(&mut grads[0])?;
+                n_local * c.world()
+            }
+        };
+        crate::kernel::scale(&pool, &mut grads[0], 1.0 / total as f32);
+        Ok(total)
+    }
+
+    /// Mean of a per-shard scalar sum (the step loss): `local_sum` is
+    /// this rank's plain sequential sum over its `local_n` shards, the
+    /// cross-rank fold uses the pairing tree, the division is by the
+    /// global shard count. With one shard per rank this matches the
+    /// in-process arithmetic bitwise; with several local shards the
+    /// association is local-sums-then-rank-tree, which agrees with the
+    /// in-process sequential sum only in value, not necessarily in
+    /// bits (same power-of-two caveat as the enum docs — the *gradient*
+    /// path is what the bitwise checkpoint contract covers).
+    pub fn allreduce_mean_scalar(&mut self, local_sum: f32, local_n: usize) -> Result<f32> {
+        assert!(local_n >= 1);
+        match self {
+            Collective::InProcess => Ok(local_sum / local_n as f32),
+            Collective::Comm(c) => {
+                let mut v = [local_sum];
+                c.allreduce_sum(&mut v)?;
+                Ok(v[0] / (local_n * c.world()) as f32)
+            }
+        }
+    }
+
+    /// Block until every rank reached this point (no-op in-process).
+    pub fn barrier(&mut self) -> Result<()> {
+        match self {
+            Collective::InProcess => Ok(()),
+            Collective::Comm(c) => c.barrier(),
+        }
+    }
+
+    /// The enforced [`LEADER_RANK`] discipline for shared side effects:
+    /// run `write` only on the leader, then barrier so every rank
+    /// leaves the save point together. When `write` performs the side
+    /// effect synchronously, non-leaders observe the committed state
+    /// once the barrier releases them; a `write` that merely *queues*
+    /// an async save (the pretrain trainer's path) defers that
+    /// guarantee to the writer's drain point.
+    pub fn leader_writes<F: FnOnce() -> Result<()>>(&mut self, write: F) -> Result<()> {
+        if self.is_leader() {
+            write()?;
+        }
+        self.barrier()
+    }
+
+    /// Guard for write paths that must never run off-leader.
+    pub fn assert_leader(&self, what: &str) -> Result<()> {
+        if !self.is_leader() {
+            bail!(
+                "{what} is restricted to the DDP leader (rank {LEADER_RANK}); \
+                 this is rank {} of {}",
+                self.rank(),
+                self.world()
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -183,11 +376,56 @@ mod tests {
     }
 
     #[test]
+    fn multi_worker_shard_order_is_deterministic() {
+        let corpus = ZipfMarkovCorpus::new(64, 5);
+        let drain = |seed: u64| -> Vec<Vec<i32>> {
+            let mut rng = Rng::new(seed);
+            let pool = BatchProducer::spawn_lm(corpus.clone(), 2, 4, 3, 6, &mut rng, 0);
+            let mut out = Vec::new();
+            for _ in 0..8 {
+                for s in pool.next_step_shards() {
+                    out.push(s.tokens);
+                }
+            }
+            pool.shutdown();
+            out
+        };
+        // identical runs see the identical shard sequence — per-worker
+        // channels make multi-worker order timing-independent
+        assert_eq!(drain(3), drain(3));
+    }
+
+    #[test]
+    fn worker_slices_reproduce_the_full_set() {
+        let corpus = ZipfMarkovCorpus::new(64, 11);
+        // the single-process 2-worker reference
+        let mut rng_full = Rng::new(5);
+        let full = BatchProducer::spawn_lm(corpus.clone(), 2, 4, 2, 4, &mut rng_full, 0);
+        let ref_shards = full.next_step_shards();
+        full.shutdown();
+        // two "ranks", one worker each, same seed
+        let mut rng_r0 = Rng::new(5);
+        let r0 = BatchProducer::spawn_lm_slice(corpus.clone(), 2, 4, 2, 0, 1, 2, &mut rng_r0, 0);
+        let mut rng_r1 = Rng::new(5);
+        let r1 = BatchProducer::spawn_lm_slice(corpus, 2, 4, 2, 1, 1, 2, &mut rng_r1, 0);
+        let s0 = r0.next_step_shards().remove(0);
+        let s1 = r1.next_step_shards().remove(0);
+        assert_eq!(s0.worker, 0);
+        assert_eq!(s1.worker, 1);
+        assert_eq!(s0.tokens, ref_shards[0].tokens);
+        assert_eq!(s1.tokens, ref_shards[1].tokens);
+        // the parent stream advanced identically on both ranks
+        assert_eq!(rng_r0.next_u64(), rng_r1.next_u64());
+        r0.shutdown();
+        r1.shutdown();
+    }
+
+    #[test]
     fn backpressure_queue_does_not_grow_unbounded() {
         let corpus = ZipfMarkovCorpus::new(64, 5);
         let mut rng = Rng::new(2);
         let pool = BatchProducer::spawn_lm(corpus, 2, 4, 2, 4, &mut rng, 0);
-        // producers are rate-limited by the bounded channel: draining
+        // producers are rate-limited by the bounded channels: draining
         // several steps still works and terminates.
         for _ in 0..20 {
             let shards = pool.next_step_shards();
@@ -209,5 +447,27 @@ mod tests {
     fn allreduce_rejects_ragged() {
         let mut grads = vec![vec![1.0f32], vec![1.0, 2.0]];
         allreduce_mean(&mut grads);
+    }
+
+    #[test]
+    fn in_process_collective_is_rank_zero_of_one() {
+        let mut c = Collective::in_process();
+        assert_eq!(c.rank(), LEADER_RANK);
+        assert_eq!(c.world(), 1);
+        assert!(c.is_leader());
+        assert!(!c.is_distributed());
+        let mut grads = vec![vec![2.0f32, 4.0], vec![4.0, 8.0]];
+        assert_eq!(c.allreduce_mean_shards(&mut grads).unwrap(), 2);
+        assert_eq!(grads[0], vec![3.0, 6.0]);
+        assert_eq!(c.allreduce_mean_scalar(6.0, 2).unwrap(), 3.0);
+        c.barrier().unwrap();
+        let mut wrote = false;
+        c.leader_writes(|| {
+            wrote = true;
+            Ok(())
+        })
+        .unwrap();
+        assert!(wrote);
+        assert!(c.assert_leader("test write").is_ok());
     }
 }

@@ -28,7 +28,9 @@ use anyhow::{bail, Context, Result};
 
 use super::metrics::{MetricsLog, StepRecord};
 use super::subspace::{FullSlot, SubspaceSet};
-use crate::ckpt::{self, Checkpointable, CkptOptions, LoadedCheckpoint, StateDict};
+use crate::ckpt::{
+    self, AsyncCheckpointer, Checkpointable, CkptOptions, LoadedCheckpoint, StateDict,
+};
 use crate::data::ClassifyTask;
 use crate::estimator::engine::{GradEstimator, GradSignal, MethodShape, ZoTarget};
 use crate::model::ParamStore;
@@ -162,6 +164,8 @@ pub struct FinetuneTrainer {
     /// The Algorithm-1 pipeline: subspace state, full-rank channels,
     /// head, and every per-step workspace.
     engine: GradEstimator,
+    /// Background checkpoint writer — saves never block the step loop.
+    ckpt_writer: AsyncCheckpointer,
     input_map: Vec<Src>,
     rng: Rng,
     batch: usize,
@@ -337,6 +341,7 @@ impl FinetuneTrainer {
             eval_art,
             store,
             engine,
+            ckpt_writer: AsyncCheckpointer::new(),
             input_map,
             batch,
             seq,
@@ -547,6 +552,8 @@ impl FinetuneTrainer {
             }
         }
 
+        // surface any pending async save error before declaring success
+        self.ckpt_writer.drain()?;
         // final lift for the IPA low-rank path
         if matches!(cfg.method, FinetuneMethod::LowRankIpa(_)) {
             if let Some(sub) = self.engine.subspace.as_mut() {
@@ -560,7 +567,11 @@ impl FinetuneTrainer {
 
     /// Commit the full fine-tuning state (Θ, optional subspace, head and
     /// IPA Adam moments, loop RNG) as checkpoint `step` under `dir`.
-    pub fn save_state(&self, dir: &Path, step: u64, keep_last: usize, rng: &Rng) -> Result<()> {
+    ///
+    /// Asynchronous: the dicts are `Arc`-bump snapshots handed to the
+    /// background [`AsyncCheckpointer`]; failures surface at the next
+    /// save or when `run()` drains the writer.
+    pub fn save_state(&mut self, dir: &Path, step: u64, keep_last: usize, rng: &Rng) -> Result<()> {
         let mut opt = StateDict::new();
         let head = self.engine.head.as_ref().expect("finetune engine always has a head");
         opt.merge_prefixed("adam[head].", head.adam.state_dict());
@@ -568,21 +579,25 @@ impl FinetuneTrainer {
             opt.merge_prefixed(&format!("adam[{}].", fslot.name), fslot.adam.state_dict());
         }
         let mut groups = vec![
-            ("params", self.store.state_dict()),
-            ("opt", opt),
-            ("rng", rng.state_dict()),
+            ("params".to_string(), self.store.state_dict()),
+            ("opt".to_string(), opt),
+            ("rng".to_string(), rng.state_dict()),
         ];
         if let Some(sub) = &self.engine.subspace {
-            groups.push(("subspace", sub.state_dict()));
+            groups.push(("subspace".to_string(), sub.state_dict()));
         }
-        let meta = [
-            ("trainer", "finetune".to_string()),
-            ("method", self.cfg.method.name()),
-            ("task", self.cfg.task.clone()),
-            ("seed", self.cfg.seed.to_string()),
+        let meta = vec![
+            ("trainer".to_string(), "finetune".to_string()),
+            ("method".to_string(), self.cfg.method.name()),
+            ("task".to_string(), self.cfg.task.clone()),
+            ("seed".to_string(), self.cfg.seed.to_string()),
         ];
-        ckpt::save_checkpoint(dir, step, &meta, &groups, keep_last)?;
-        Ok(())
+        self.ckpt_writer.submit(dir.to_path_buf(), step, meta, groups, keep_last)
+    }
+
+    /// Join any in-flight background save, surfacing its error.
+    pub fn drain_saves(&mut self) -> Result<()> {
+        self.ckpt_writer.drain()
     }
 
     /// Restore from a loaded checkpoint; `rng` is the training-loop RNG

@@ -16,19 +16,24 @@
 //! * [`finetune`] — the six-method fine-tuning matrix of Table 1 /
 //!   Figure 6 (Vanilla LR / Gaussian / Stiefel / Coordinate LowRank-LR /
 //!   Vanilla IPA / LowRank-IPA) on the classifier artifacts.
-//! * [`ddp`] — the data-parallel worker simulation: N producer threads
-//!   feed sharded batches through a bounded channel (backpressure), the
-//!   leader executes and all-reduces gradients (DESIGN.md §2). The
-//!   all-reduce combines shards in a fixed pairing order on the
-//!   [`crate::kernel`] pool — bitwise identical at any thread count.
+//! * [`ddp`] — data-parallel coordination for both topologies: the
+//!   in-process worker pool (per-worker bounded channels drained in
+//!   worker order — deterministic shard sequences) and the
+//!   [`Collective`] backend switch that folds per-rank gradient
+//!   partials across a `lowrank-sge launch` world through
+//!   [`crate::comm`]. One pairing-tree combine order everywhere, so
+//!   in-process, 1-rank, and W-rank runs are bitwise identical.
 //! * [`metrics`] — step records and CSV emission for the figure
 //!   harnesses.
 //!
 //! Both trainers checkpoint through [`crate::ckpt`]: `CkptOptions` on
 //! their configs controls `save_every`/`dir`/`resume`/retention, saves
-//! happen at step barriers on the leader rank only, and a restore
-//! round-trips Θ, (B, V), every Adam moment, and the RNG stream
-//! position bit-exactly.
+//! happen at step barriers on the leader rank only (enforced by the
+//! `Collective` leader gate — see [`crate::coordinator::ddp`]'s module
+//! docs) and run asynchronously on the
+//! [`crate::ckpt::AsyncCheckpointer`]'s background thread, and a
+//! restore round-trips Θ, (B, V), every Adam moment, and the RNG
+//! stream position bit-exactly.
 
 mod ddp;
 mod finetune;
@@ -36,7 +41,7 @@ mod metrics;
 mod pretrain;
 mod subspace;
 
-pub use ddp::{allreduce_mean, allreduce_mean_with, BatchProducer, LEADER_RANK};
+pub use ddp::{allreduce_mean, allreduce_mean_with, BatchProducer, Collective, Shard, LEADER_RANK};
 pub use finetune::{FinetuneConfig, FinetuneMethod, FinetuneResult, FinetuneTrainer};
 pub use metrics::{MetricsLog, StepRecord};
 pub use pretrain::{PretrainConfig, PretrainResult, PretrainTrainer};

@@ -4,12 +4,21 @@
 //! every K steps it lifts Θ ← Θ + B·Vᵀ and resamples V from the
 //! configured projector law (Stiefel vs Gaussian is the Figures 7–9
 //! contrast); each inner step executes the artifact once per DDP worker
-//! shard, all-reduces the gradients, clips, and hands the reduced
-//! gradients to the shared pipeline —
+//! shard, all-reduces the gradients through the configured
+//! [`Collective`] backend (in-process pairing tree, or the
+//! [`crate::comm`] ring/tree collectives when this trainer is one rank
+//! of a `lowrank-sge launch` world — same combine order, bitwise),
+//! clips, and hands the reduced gradients to the shared pipeline —
 //! [`crate::estimator::engine::GradEstimator`] — which fans the
 //! subspace-B and full-rank (embeddings/norms) Adam steps out across
 //! the kernel pool. Input staging is zero-copy: parameters, (B, V) and
 //! the shard tokens are spliced by `Arc` bump.
+//!
+//! Checkpoints are leader-only (enforced — see
+//! [`super::ddp::LEADER_RANK`]) and fully asynchronous: `save_state`
+//! snapshots the `Arc`-backed state dicts and hands the write to the
+//! [`crate::ckpt::AsyncCheckpointer`], so the step loop never blocks on
+//! IO; write errors surface at the next save or at shutdown.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -17,10 +26,12 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::ddp::{allreduce_mean, BatchProducer};
+use super::ddp::{BatchProducer, Collective};
 use super::metrics::{MetricsLog, StepRecord};
 use super::subspace::{FullSlot, SubspaceSet};
-use crate::ckpt::{self, Checkpointable, CkptOptions, LoadedCheckpoint, StateDict};
+use crate::ckpt::{
+    self, AsyncCheckpointer, Checkpointable, CkptOptions, LoadedCheckpoint, StateDict,
+};
 use crate::data::ZipfMarkovCorpus;
 use crate::estimator::engine::{GradEstimator, GradSignal, MethodShape};
 use crate::model::ParamStore;
@@ -46,7 +57,9 @@ pub struct PretrainConfig {
     pub clip: f32,
     pub weight_decay: f32,
     pub seed: u64,
-    /// DDP worker count (shards per step; global batch = workers × 8).
+    /// Global DDP worker count (shards per step; global batch =
+    /// workers × 8). In a multi-process `launch` run this is the total
+    /// across all ranks and must divide evenly by the world size.
     pub workers: usize,
     /// Evaluate every this many steps (0 = never). Eval runs on a
     /// lifted copy, so it is exact at any step.
@@ -108,6 +121,11 @@ pub struct PretrainTrainer {
     /// The Algorithm-1 pipeline: subspace (B, V, Adam) state plus the
     /// full-rank embedding/norm channels.
     engine: GradEstimator,
+    /// Gradient-averaging backend: in-process pairing tree, or one rank
+    /// of a multi-process `launch` world over [`crate::comm`].
+    collective: Collective,
+    /// Background checkpoint writer (leader rank only ever submits).
+    ckpt_writer: AsyncCheckpointer,
     input_map: Vec<Src>,
     rng: Rng,
     batch: usize,
@@ -120,7 +138,30 @@ pub struct PretrainTrainer {
 }
 
 impl PretrainTrainer {
+    /// Single-process construction (the in-process DDP topology).
     pub fn new(rt: &mut Runtime, artifacts_dir: &Path, cfg: PretrainConfig) -> Result<Self> {
+        Self::with_collective(rt, artifacts_dir, cfg, Collective::in_process())
+    }
+
+    /// Construct on an explicit collective backend. With
+    /// `Collective::Comm`, `cfg.workers` is the *global* shard count:
+    /// it must divide evenly across the world, and this rank runs the
+    /// contiguous worker slice `[rank·(workers/world), …)` with the
+    /// same per-worker RNG streams as the single-process run.
+    pub fn with_collective(
+        rt: &mut Runtime,
+        artifacts_dir: &Path,
+        cfg: PretrainConfig,
+        collective: Collective,
+    ) -> Result<Self> {
+        let world = collective.world();
+        if cfg.workers == 0 || cfg.workers % world != 0 {
+            bail!(
+                "--workers {} must be a positive multiple of the comm world size {world} \
+                 (each rank runs workers/world producer streams)",
+                cfg.workers
+            );
+        }
         let grad_art = rt.load(&format!("lm_grad_{}", cfg.scale))?;
         let eval_art = rt.load(&format!("lm_eval_{}", cfg.scale))?;
         let store = ParamStore::load_init(artifacts_dir, &cfg.scale, &grad_art.manifest)?;
@@ -197,6 +238,8 @@ impl PretrainTrainer {
             eval_art,
             store,
             engine,
+            collective,
+            ckpt_writer: AsyncCheckpointer::new(),
             input_map,
             rng,
             batch,
@@ -291,19 +334,24 @@ impl PretrainTrainer {
         // Data streams draw from a dedicated RNG (not `self.rng`) so the
         // trainer RNG round-trips through checkpoints exactly; producers
         // fast-forward `start_step` batches to rejoin their streams.
-        // With workers == 1 this makes a resumed run bitwise identical
-        // to the uninterrupted one. With workers > 1 the rejoin is
-        // approximate (±queue depth per stream): the shared channel
-        // already makes multi-worker shard order — and therefore the
-        // uninterrupted trajectory itself — timing-dependent.
+        // Per-worker channels drain in worker order, so the rejoin —
+        // and the shard sequence itself — is exact at any worker count.
+        // In a multi-process run this rank spawns only its contiguous
+        // worker slice, with the identical global stream forks, so the
+        // union of all ranks' shards is the single-process sequence.
+        let world = self.collective.world();
+        let rank = self.collective.rank();
+        let local_workers = cfg.workers / world;
         let corpus = ZipfMarkovCorpus::new(self.vocab, cfg.seed ^ 0xC0FFEE);
         let mut data_rng = Rng::new(cfg.seed ^ 0xDA7A);
-        let producer = BatchProducer::spawn_lm(
+        let producer = BatchProducer::spawn_lm_slice(
             corpus.clone(),
             self.batch,
             self.seq_len,
             cfg.workers,
-            2 * cfg.workers,
+            rank * local_workers,
+            local_workers,
+            2,
             &mut data_rng,
             start_step,
         );
@@ -327,7 +375,10 @@ impl PretrainTrainer {
             }
             let lr = schedule.lr(step);
 
-            // one shard per worker; all-reduce gradients
+            // one shard per local worker; all-reduce gradients across
+            // shards and (when distributed) across ranks — one combine
+            // order either way, so the reduced gradients are bitwise
+            // identical to the single-process run
             let shards = producer.next_step_shards();
             let n_shards = shards.len();
             let n_b = self.db_outs.len();
@@ -347,21 +398,17 @@ impl PretrainTrainer {
                     df_acc[fi].push(out[oi].as_f32()?.to_vec());
                 }
             }
-            let loss = loss_acc / n_shards as f32;
-            let mut db: Vec<Vec<f32>> = db_acc
-                .into_iter()
-                .map(|mut g| {
-                    allreduce_mean(&mut g);
-                    g.swap_remove(0)
-                })
-                .collect();
-            let mut df: Vec<Vec<f32>> = df_acc
-                .into_iter()
-                .map(|mut g| {
-                    allreduce_mean(&mut g);
-                    g.swap_remove(0)
-                })
-                .collect();
+            let loss = self.collective.allreduce_mean_scalar(loss_acc, n_shards)?;
+            let mut db: Vec<Vec<f32>> = Vec::with_capacity(n_b);
+            for mut g in db_acc {
+                self.collective.allreduce_mean_shards(&mut g)?;
+                db.push(g.swap_remove(0));
+            }
+            let mut df: Vec<Vec<f32>> = Vec::with_capacity(n_f);
+            for mut g in df_acc {
+                self.collective.allreduce_mean_shards(&mut g)?;
+                df.push(g.swap_remove(0));
+            }
 
             // global-norm clip across all gradients (paper: 1.0)
             let mut views: Vec<&mut [f32]> = Vec::with_capacity(n_b + n_f);
@@ -401,15 +448,24 @@ impl PretrainTrainer {
                 log.push_eval(step + 1, ev);
             }
 
-            // Step barrier: every worker's shard is folded in. This
-            // trainer thread is the DDP leader (`ddp::LEADER_RANK`) by
-            // construction — in a real multi-process deployment exactly
-            // one rank may write here.
+            // Save barrier: every rank has folded every shard in. Only
+            // the leader writes (enforced inside `save_state`); the
+            // write itself is asynchronous, so the leader also does not
+            // block — all ranks cross the barrier and keep stepping
+            // while the IO thread commits the snapshot. The barrier
+            // aligns step counts only: the checkpoint is durable at the
+            // writer's next drain (next save or end of run), not at
+            // barrier release.
             if cfg.ckpt.should_save(step) {
                 let dir = cfg.ckpt.dir.as_ref().expect("should_save implies dir");
-                self.save_state(dir, step + 1, cfg.ckpt.keep_last)?;
+                if self.collective.is_leader() {
+                    self.save_state(dir, step + 1, cfg.ckpt.keep_last)?;
+                }
+                self.collective.barrier()?;
             }
         }
+        // surface any pending async save error before declaring success
+        self.ckpt_writer.drain()?;
         // final lift so the stored Θ is the trained model
         self.engine.subspace.as_mut().expect("subspace").lift(&mut self.store)?;
         self.store.assert_finite()?;
@@ -437,26 +493,39 @@ impl PretrainTrainer {
     /// Commit the full training state — Θ, per-matrix (B, V, Adam),
     /// full-rank Adam moments, and the trainer RNG — as checkpoint
     /// `step` under `dir`.
-    pub fn save_state(&self, dir: &Path, step: u64, keep_last: usize) -> Result<()> {
+    ///
+    /// Leader-only (enforced) and asynchronous: the state dicts are
+    /// snapshots by `Arc` bump (copy-on-write tensors), the write runs
+    /// on the [`AsyncCheckpointer`]'s background thread, and any
+    /// failure surfaces at the next save or when `run()` drains the
+    /// writer at shutdown.
+    pub fn save_state(&mut self, dir: &Path, step: u64, keep_last: usize) -> Result<()> {
+        self.collective.assert_leader("checkpoint write")?;
         let mut full = StateDict::new();
         for fslot in &self.engine.ipa_full {
             full.merge_prefixed(&format!("adam[{}].", fslot.name), fslot.adam.state_dict());
         }
-        let groups = [
-            ("params", self.store.state_dict()),
-            ("subspace", self.subspace().state_dict()),
-            ("full", full),
-            ("rng", self.rng.state_dict()),
+        let groups = vec![
+            ("params".to_string(), self.store.state_dict()),
+            ("subspace".to_string(), self.subspace().state_dict()),
+            ("full".to_string(), full),
+            ("rng".to_string(), self.rng.state_dict()),
         ];
-        let meta = [
-            ("trainer", "pretrain".to_string()),
-            ("scale", self.cfg.scale.clone()),
-            ("sampler", self.cfg.sampler.name().to_string()),
-            ("workers", self.cfg.workers.to_string()),
-            ("seed", self.cfg.seed.to_string()),
+        let meta = vec![
+            ("trainer".to_string(), "pretrain".to_string()),
+            ("scale".to_string(), self.cfg.scale.clone()),
+            ("sampler".to_string(), self.cfg.sampler.name().to_string()),
+            ("workers".to_string(), self.cfg.workers.to_string()),
+            ("seed".to_string(), self.cfg.seed.to_string()),
         ];
-        ckpt::save_checkpoint(dir, step, &meta, &groups, keep_last)?;
-        Ok(())
+        self.ckpt_writer.submit(dir.to_path_buf(), step, meta, groups, keep_last)
+    }
+
+    /// Join any in-flight background save, surfacing its error —
+    /// exposed for callers that need durability before `run()` returns
+    /// (e.g. manual save points).
+    pub fn drain_saves(&mut self) -> Result<()> {
+        self.ckpt_writer.drain()
     }
 
     /// Restore the full training state from a loaded checkpoint. The

@@ -31,7 +31,8 @@ pub mod scalar;
 
 pub use ops::{
     add_assign, auto, axpy, dot, gemm_nn, gemm_nt, gemm_tn, gemv_t_strided, ger_sub_strided,
-    rot_cols_strided, rot_rows, scale, serial, sum_sq, tree_reduce, REDUCE_CHUNK, ROW_BLOCK,
+    rot_cols_strided, rot_rows, scale, serial, sum_sq, tree_reduce, tree_sum_vecs, REDUCE_CHUNK,
+    ROW_BLOCK,
 };
 pub use pool::{global, global_threads, set_global_threads, KernelPool};
 pub use scalar::Scalar;

@@ -351,6 +351,36 @@ pub fn scale<T: Scalar>(pool: &KernelPool, x: &mut [T], alpha: T) {
 // Deterministic reductions.
 // ---------------------------------------------------------------------------
 
+/// Sum a set of equal-length vectors into `xs[0]` with the
+/// stride-doubling pairing tree (`xs[i] += xs[i+gap]` for gap = 1, 2,
+/// 4, …), each pairwise add chunked across the pool. The tree shape is
+/// a pure function of `xs.len()` alone, so the sum is bitwise identical
+/// at any thread count — this is the combine order shared by the
+/// in-process DDP all-reduce and the cross-process `comm` collectives.
+///
+/// `xs[1..]` are used as scratch (inner tree nodes hold partial sums
+/// afterwards); callers must not read them after the reduce.
+pub fn tree_sum_vecs<T: Scalar>(pool: &KernelPool, xs: &mut [Vec<T>]) {
+    let n = xs.len();
+    if n <= 1 {
+        return;
+    }
+    let len = xs[0].len();
+    for x in xs.iter() {
+        assert_eq!(x.len(), len, "tree_sum_vecs length mismatch");
+    }
+    let mut gap = 1;
+    while gap < n {
+        let mut i = 0;
+        while i + gap < n {
+            let (left, right) = xs.split_at_mut(i + gap);
+            add_assign(pool, &mut left[i], &right[0]);
+            i += 2 * gap;
+        }
+        gap *= 2;
+    }
+}
+
 /// Fixed-shape pairwise tree sum: the combine order is a pure function
 /// of `xs.len()`, never of who computed the entries.
 pub fn tree_reduce<T: Scalar>(xs: &[T]) -> T {

@@ -15,12 +15,23 @@
 //!   executes AOT-compiled JAX/Pallas artifacts ([`runtime`];
 //!   `HostTensor` payloads are `Arc`-backed copy-on-write, so input
 //!   staging is zero-copy), data pipeline ([`data`]), trainers and the
-//!   DDP simulation ([`coordinator`] — artifact wiring around the
-//!   engine), the sharded checkpoint/resume subsystem ([`ckpt`]:
-//!   CRC-verified binary shards written through the kernel pool, atomic
-//!   commit, `LATEST` pointer, retention, bit-exact state round-trip),
-//!   the MSE theory + toy experiments ([`estimator`]), and the
+//!   DDP coordination ([`coordinator`] — artifact wiring around the
+//!   engine, with a [`coordinator::Collective`] backend switch between
+//!   in-process and multi-process gradient averaging), the sharded
+//!   checkpoint/resume subsystem ([`ckpt`]: CRC-verified binary shards
+//!   written through the kernel pool, atomic commit, `LATEST` pointer,
+//!   retention, bit-exact state round-trip, fully-async background
+//!   saves), the MSE theory + toy experiments ([`estimator`]), and the
 //!   experiment harnesses ([`exp`]).
+//! * **L3 comm layer** — [`comm`]: the multi-process collective
+//!   communication subsystem behind `lowrank-sge launch --nproc N`:
+//!   file/env rendezvous with atomic rank claims, TCP/Unix-socket
+//!   transport with timeouts, a CRC-verified wire format in the
+//!   checkpoint codec's framing, and chunked-ring + pairing-tree
+//!   collectives whose combine order is a pure function of (world,
+//!   length) — matching the in-process all-reduce, so distributed
+//!   gradients (and checkpoints) are bitwise identical to the
+//!   single-process run.
 //! * **L3 compute substrate** — [`kernel`]: the one Scalar-generic
 //!   (f32/f64) dense compute layer — blocked GEMM, AXPY/scale,
 //!   deterministic reductions, strided panel primitives — running on a
@@ -47,6 +58,7 @@
 
 pub mod bench_util;
 pub mod ckpt;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

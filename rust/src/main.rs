@@ -13,8 +13,26 @@
 //! lowrank-sge finetune      --task sst2 --method stiefel-lowrank-lr [--steps N]
 //!                           [--threads T] [--save-every N] [--ckpt-dir D]
 //!                           [--keep-last K] [--resume [latest|<step>]] …
+//! lowrank-sge launch        --nproc N [--transport unix|tcp] [--rdzv-dir D]
+//!                           [--comm-timeout-ms T] [--algo ring|tree|auto]
+//!                           <subcommand …>                   # multi-process DDP
+//! lowrank-sge comm-check    [--len N]                        # collective self-test
 //! lowrank-sge inspect                                        # list artifacts
 //! ```
+//!
+//! Multi-process DDP: `launch --nproc N pretrain …` spawns N ranks of
+//! this binary wired into one collective group (env-var rendezvous,
+//! Unix or TCP sockets; see [`lowrank_sge::comm`]), prefixes each
+//! child's output with `[rank r]`, and propagates the first non-zero
+//! exit. `--workers` is the *global* shard count (default: the world
+//! size) and must divide evenly across ranks. The cross-process
+//! all-reduce uses the same pairing-tree combine order as the
+//! in-process path, so `launch --nproc W` with one worker per rank
+//! writes the bitwise-identical rank-0 checkpoint as a single-process
+//! `--workers W` run. Only the leader rank (rank 0) writes checkpoints
+//! and metrics — enforced at runtime. `comm-check` runs ring and tree
+//! all-reduces plus broadcast/barrier/all-gather inside a launch world
+//! and verifies every rank got identical bits.
 //!
 //! Parallelism: `--threads T` (every subcommand; config keys
 //! `pretrain.threads` / `finetune.threads`) sizes the kernel compute
@@ -40,8 +58,11 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use lowrank_sge::ckpt::{CkptOptions, ResumeSpec};
+use lowrank_sge::comm::{self, Algorithm, TransportKind};
 use lowrank_sge::config::{ArgMap, ConfigFile};
-use lowrank_sge::coordinator::{FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig, PretrainTrainer};
+use lowrank_sge::coordinator::{
+    Collective, FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig, PretrainTrainer,
+};
 use lowrank_sge::estimator::Family;
 use lowrank_sge::exp;
 use lowrank_sge::projection::ProjectorKind;
@@ -55,7 +76,8 @@ fn artifacts_dir() -> PathBuf {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lowrank-sge <exp|pretrain|finetune|inspect> …  (see `rust/src/main.rs` docs)"
+        "usage: lowrank-sge <exp|pretrain|finetune|launch|comm-check|inspect> …  \
+         (see `rust/src/main.rs` docs)"
     );
     std::process::exit(2)
 }
@@ -63,6 +85,17 @@ fn usage() -> ! {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else { usage() };
+    // `launch` children carry the comm env; only rank-aware subcommands
+    // may run under it — N copies of an experiment would race on the
+    // same results/ files
+    if std::env::var("LOWRANK_COMM_RDZV").is_ok()
+        && !matches!(cmd.as_str(), "pretrain" | "comm-check" | "finetune")
+    {
+        bail!(
+            "`{cmd}` is not rank-aware; run it without `launch` \
+             (multi-process mode supports pretrain and comm-check)"
+        );
+    }
     match cmd.as_str() {
         "exp" => {
             let Some(sub) = argv.get(1) else { usage() };
@@ -77,9 +110,140 @@ fn main() -> Result<()> {
             let args = ArgMap::parse(&argv[1..])?;
             cmd_finetune(&args)
         }
+        "launch" => cmd_launch(&argv[1..]),
+        "comm-check" => {
+            let args = ArgMap::parse(&argv[1..])?;
+            cmd_comm_check(&args)
+        }
         "inspect" => cmd_inspect(),
         _ => usage(),
     }
+}
+
+/// `launch --nproc N [--transport …] [--rdzv-dir …] [--comm-timeout-ms …]
+/// [--algo …] <subcommand …>` — the runner's own flags end at the first
+/// non-flag token; everything from there is the child command, passed
+/// through verbatim.
+fn cmd_launch(argv: &[String]) -> Result<()> {
+    let mut opts = comm::LaunchOptions::default();
+    let mut i = 0usize;
+    let value = |argv: &[String], i: usize, flag: &str| -> Result<String> {
+        argv.get(i + 1)
+            .cloned()
+            .with_context(|| format!("launch: {flag} needs a value"))
+    };
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--nproc" => {
+                opts.nproc = value(argv, i, "--nproc")?
+                    .parse()
+                    .context("launch: --nproc must be a positive integer")?;
+                i += 2;
+            }
+            "--transport" => {
+                opts.transport = TransportKind::parse(&value(argv, i, "--transport")?)?;
+                i += 2;
+            }
+            "--rdzv-dir" => {
+                opts.rdzv_dir = Some(PathBuf::from(value(argv, i, "--rdzv-dir")?));
+                i += 2;
+            }
+            "--comm-timeout-ms" => {
+                opts.timeout_ms = value(argv, i, "--comm-timeout-ms")?
+                    .parse()
+                    .context("launch: --comm-timeout-ms must be an integer")?;
+                i += 2;
+            }
+            "--algo" => {
+                let algo = value(argv, i, "--algo")?;
+                Algorithm::parse(&algo)?; // validate before handing to children
+                opts.algo = Some(algo);
+                i += 2;
+            }
+            other if other.starts_with("--") => {
+                bail!("launch: unknown runner flag {other:?} (child flags go after the subcommand)")
+            }
+            _ => break,
+        }
+    }
+    let child_args = &argv[i..];
+    let code = comm::run_launch(&opts, child_args)?;
+    if code != 0 {
+        std::process::exit(code);
+    }
+    Ok(())
+}
+
+/// Collective self-test: inside a `launch` world, all-reduce a
+/// deterministic per-rank payload with both algorithms, cross-check the
+/// results bitwise across ranks, and exercise broadcast + barrier.
+fn cmd_comm_check(args: &ArgMap) -> Result<()> {
+    let len = args.usize_or("len", 100_003);
+    let Some(mut comm) = comm::Communicator::from_env()? else {
+        bail!(
+            "comm-check needs the launch environment (LOWRANK_COMM_RDZV …); \
+             run it as `lowrank-sge launch --nproc N comm-check`"
+        );
+    };
+    let (rank, world) = (comm.rank(), comm.world());
+    let base: Vec<f32> = (0..len)
+        .map(|i| {
+            let x = (i as u64).wrapping_mul(rank as u64 + 1).wrapping_add(7 * i as u64);
+            (x % 1000) as f32 * 1e-3 - 0.25
+        })
+        .collect();
+
+    let mut ring = base.clone();
+    comm.allreduce_sum_with(Algorithm::Ring, &mut ring)?;
+    let mut tree = base.clone();
+    comm.allreduce_sum_with(Algorithm::Tree, &mut tree)?;
+    for (i, (r, t)) in ring.iter().zip(&tree).enumerate() {
+        if r.to_bits() != t.to_bits() {
+            bail!("comm-check FAILED: ring and tree disagree at element {i} ({r} vs {t})");
+        }
+    }
+
+    // cross-rank bitwise agreement: all-gather every rank's result CRC
+    // (carried one byte per f32 — small-integer f32s are exact on every
+    // target, unlike a raw from_bits smuggle that could hit NaN quieting)
+    let bytes: Vec<u8> = ring.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let crc = lowrank_sge::ckpt::crc32::crc32(&bytes);
+    let mine: Vec<f32> = crc.to_le_bytes().iter().map(|&b| b as f32).collect();
+    let mut gathered = vec![0.0f32; 4 * world];
+    comm.all_gather(&mine, &mut gathered)?;
+    for (r, peer_bytes) in gathered.chunks_exact(4).enumerate() {
+        let peer_crc = u32::from_le_bytes([
+            peer_bytes[0] as u8,
+            peer_bytes[1] as u8,
+            peer_bytes[2] as u8,
+            peer_bytes[3] as u8,
+        ]);
+        if peer_crc != crc {
+            bail!(
+                "comm-check FAILED: rank {r} reduced to crc {peer_crc:08x}, \
+                 rank {rank} to {crc:08x}"
+            );
+        }
+    }
+
+    // broadcast: everyone must end with rank 0's payload (which every
+    // rank can recompute locally — the pattern is a function of rank)
+    let expected0: Vec<f32> = (0..len)
+        .map(|i| {
+            let x = (i as u64).wrapping_add(7 * i as u64);
+            (x % 1000) as f32 * 1e-3 - 0.25
+        })
+        .collect();
+    let mut bcast = base.clone();
+    comm.broadcast(&mut bcast, 0)?;
+    for (i, (b, e)) in bcast.iter().zip(&expected0).enumerate() {
+        if b.to_bits() != e.to_bits() {
+            bail!("comm-check FAILED: broadcast element {i} is {b}, expected rank 0's {e}");
+        }
+    }
+    comm.barrier()?;
+    println!("comm-check ok rank={rank} world={world} len={len} crc={crc:08x} (ring==tree)");
+    Ok(())
 }
 
 fn run_exp(sub: &str, args: &ArgMap) -> Result<()> {
@@ -268,6 +432,10 @@ fn ckpt_options(args: &ArgMap, file: &ConfigFile, section: &str) -> Result<CkptO
 fn cmd_pretrain(args: &ArgMap) -> Result<()> {
     let dir = artifacts_dir();
     let mut rt = Runtime::new(&dir)?;
+    // one rank of a `launch` world, or the classic in-process topology
+    let collective = Collective::from_env().context("joining the comm collective group")?;
+    let world = collective.world();
+    let leader = collective.is_leader();
     // defaults ← config file (--config path, [pretrain] section) ← CLI
     let file = match args.get("config") {
         Some(p) => ConfigFile::load(std::path::Path::new(p))?,
@@ -292,53 +460,72 @@ fn cmd_pretrain(args: &ArgMap) -> Result<()> {
         clip: args.f32_or("clip", file.f64_or("pretrain.clip", 1.0) as f32),
         weight_decay: args.f32_or("wd", file.f64_or("pretrain.wd", 0.05) as f32),
         seed: args.u64_or("seed", file.i64_or("pretrain.seed", 2026) as u64),
-        workers: args.usize_or("workers", file.i64_or("pretrain.workers", 1) as usize),
+        // global shard count; in a launch world it defaults to one
+        // worker per rank and must divide across the ranks
+        workers: args.usize_or("workers", file.i64_or("pretrain.workers", world as i64) as usize),
         eval_every: args.u64_or("eval-every", file.i64_or("pretrain.eval_every", 25) as u64),
         eval_batches: args.usize_or("eval-batches", 2),
         threads: args.threads_or(file.usize_or("pretrain.threads", 0)),
         ckpt: ckpt_options(args, &file, "pretrain")?,
     };
-    println!(
-        "pretrain scale={} sampler={} steps={} K={} workers={} threads={}",
-        cfg.scale,
-        sampler.name(),
-        cfg.steps,
-        cfg.k_interval,
-        cfg.workers,
-        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() }
-    );
-    if let Some(resume) = cfg.ckpt.resume {
-        println!("resuming from {resume} in {:?}", cfg.ckpt.dir.as_ref().unwrap());
-    }
-    if cfg.ckpt.save_every > 0 {
+    if leader {
         println!(
-            "checkpointing every {} steps to {:?} (keep last {})",
-            cfg.ckpt.save_every,
-            cfg.ckpt.dir.as_ref().unwrap(),
-            cfg.ckpt.keep_last
+            "pretrain scale={} sampler={} steps={} K={} workers={} threads={} world={}",
+            cfg.scale,
+            sampler.name(),
+            cfg.steps,
+            cfg.k_interval,
+            cfg.workers,
+            if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
+            world
+        );
+        if let Some(resume) = cfg.ckpt.resume {
+            println!("resuming from {resume} in {:?}", cfg.ckpt.dir.as_ref().unwrap());
+        }
+        if cfg.ckpt.save_every > 0 {
+            println!(
+                "checkpointing every {} steps to {:?} (keep last {})",
+                cfg.ckpt.save_every,
+                cfg.ckpt.dir.as_ref().unwrap(),
+                cfg.ckpt.keep_last
+            );
+        }
+    }
+    let mut trainer = PretrainTrainer::with_collective(&mut rt, &dir, cfg, collective)?;
+    let res = trainer.run()?;
+    if leader {
+        println!(
+            "final train loss {:.4} (tail {:.4}); eval {:?}; mean step {:.3}s",
+            res.log.final_train_loss().unwrap_or(f32::NAN),
+            res.log.tail_mean_loss(10).unwrap_or(f32::NAN),
+            res.final_eval_loss,
+            res.log.mean_step_time(3).unwrap_or(f64::NAN)
         );
     }
-    let mut trainer = PretrainTrainer::new(&mut rt, &dir, cfg)?;
-    let res = trainer.run()?;
-    println!(
-        "final train loss {:.4} (tail {:.4}); eval {:?}; mean step {:.3}s",
-        res.log.final_train_loss().unwrap_or(f32::NAN),
-        res.log.tail_mean_loss(10).unwrap_or(f32::NAN),
-        res.final_eval_loss,
-        res.log.mean_step_time(3).unwrap_or(f64::NAN)
-    );
+    // metrics/artifact exports are leader-only shared side effects
+    // (every rank holds identical results, exactly one writes)
     if let Some(out) = args.get("out-csv") {
-        res.log.write_csv(std::path::Path::new(out))?;
-        println!("wrote {out}");
+        if leader {
+            res.log.write_csv(std::path::Path::new(out))?;
+            println!("wrote {out}");
+        }
     }
     if let Some(ckpt) = args.get("checkpoint") {
-        trainer.save_checkpoint(std::path::Path::new(ckpt))?;
-        println!("checkpoint saved to {ckpt}");
+        if leader {
+            trainer.save_checkpoint(std::path::Path::new(ckpt))?;
+            println!("checkpoint saved to {ckpt}");
+        }
     }
     Ok(())
 }
 
 fn cmd_finetune(args: &ArgMap) -> Result<()> {
+    if std::env::var("LOWRANK_COMM_RDZV").is_ok() {
+        bail!(
+            "finetune is single-process (its batches are not sharded); \
+             run it without `launch`, or use `launch … pretrain` for multi-process DDP"
+        );
+    }
     let dir = artifacts_dir();
     let mut rt = Runtime::new(&dir)?;
     // defaults ← config file (--config path, [finetune] section) ← CLI

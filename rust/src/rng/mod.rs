@@ -42,7 +42,10 @@ impl Rng {
     }
 
     /// Derive an independent child stream (for per-worker RNGs in the
-    /// DDP simulation): hash the parent's next output with a stream id.
+    /// DDP data pipeline): hash the parent's next output with a stream
+    /// id. Forking advances the parent, so every rank of a distributed
+    /// run must fork the full global stream set in the same order to
+    /// stay in lockstep (see `BatchProducer::spawn_lm_slice`).
     pub fn fork(&mut self, stream: u64) -> Rng {
         let mut sm = self.next_u64() ^ stream.wrapping_mul(0xD1B54A32D192ED03);
         let s = [

@@ -1,0 +1,384 @@
+//! The comm determinism contract, pinned down:
+//!
+//! * ring ≡ tree ≡ in-process `allreduce_mean_with`, **bitwise**, at
+//!   world ∈ {1, 2, 3, 4}, for prime payload lengths (uneven ring
+//!   chunks), multi-frame payloads, and degenerate lengths (empty ring
+//!   chunks, scalars);
+//! * results are independent of message-arrival timing (rank-staggered
+//!   delays change nothing);
+//! * faults are loud and bounded: a truncated frame is a CRC/EOF error,
+//!   a dead peer is a timeout error — never a hang, never a silently
+//!   wrong gradient;
+//! * the leader-rank write discipline holds at world = 2: the
+//!   non-leader skips the write, crosses the barrier, and observes the
+//!   leader's committed LATEST/retention state.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use lowrank_sge::ckpt::{load_checkpoint, save_checkpoint, Layout, ResumeSpec, StateDict};
+use lowrank_sge::comm::{
+    wire, Algorithm, CommConfig, Communicator, Conn, Listener, TransportKind,
+};
+use lowrank_sge::coordinator::{allreduce_mean_with, Collective, LEADER_RANK};
+use lowrank_sge::kernel::KernelPool;
+
+static DIR_COUNTER: AtomicUsize = AtomicUsize::new(0);
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lowrank_comm_test_{tag}_{}_{}",
+        std::process::id(),
+        DIR_COUNTER.fetch_add(1, Ordering::SeqCst)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run `f(communicator)` on `world` ranks (threads), full mesh, and
+/// return the per-rank results in rank order.
+fn spawn_world<T, F>(world: usize, transport: TransportKind, tag: &str, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Communicator) -> T + Send + Sync,
+{
+    let dir = fresh_dir(tag);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let dir = dir.clone();
+                let f = &f;
+                scope.spawn(move || {
+                    let cfg = CommConfig {
+                        world,
+                        rank: Some(rank),
+                        transport,
+                        rdzv_dir: dir,
+                        timeout: Duration::from_secs(30),
+                        algo: Algorithm::Auto,
+                    };
+                    f(Communicator::connect(&cfg).expect("communicator setup"))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+    })
+}
+
+/// Deterministic per-rank payload (varied sign/magnitude so float
+/// addition is genuinely order-sensitive).
+fn gen(rank: usize, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| {
+            let x = (i as u64)
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(rank as u64 * 1442695040888963407);
+            let u = ((x >> 33) as f32) / (1u64 << 31) as f32 - 0.5;
+            u * (1.0 + (i % 7) as f32)
+        })
+        .collect()
+}
+
+/// The in-process reference: the pairing-tree mean over one shard per
+/// rank, on a serial pool.
+fn in_process_reference(world: usize, len: usize) -> Vec<f32> {
+    let mut grads: Vec<Vec<f32>> = (0..world).map(|r| gen(r, len)).collect();
+    allreduce_mean_with(&KernelPool::new(1), &mut grads);
+    grads.swap_remove(0)
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} differs ({x} vs {y})");
+    }
+}
+
+#[test]
+fn ring_and_tree_match_in_process_bitwise() {
+    // prime lengths (uneven ring chunks), a multi-frame length
+    // (> 65536-element chunks at world 2), and non-power-of-two worlds
+    for world in [1usize, 2, 3, 4] {
+        for &len in &[13usize, 10_007, 150_001] {
+            if len == 150_001 && world > 2 {
+                continue; // multi-frame coverage needs only one world size
+            }
+            let expected = in_process_reference(world, len);
+            for algo in [Algorithm::Ring, Algorithm::Tree] {
+                let results = spawn_world(
+                    world,
+                    TransportKind::default_for_host(),
+                    &format!("allred_{world}_{len}_{}", algo.name()),
+                    |mut comm| {
+                        let mut data = gen(comm.rank(), len);
+                        comm.allreduce_sum_with(algo, &mut data).unwrap();
+                        let pool = KernelPool::new(1);
+                        lowrank_sge::kernel::scale(&pool, &mut data, 1.0 / comm.world() as f32);
+                        data
+                    },
+                );
+                for (rank, got) in results.iter().enumerate() {
+                    assert_bitwise(
+                        got,
+                        &expected,
+                        &format!("{} world={world} len={len} rank={rank}", algo.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_lengths_reduce_correctly() {
+    // world > len: some ring chunks are empty; len == 1 is the scalar
+    // (loss) path
+    for &len in &[1usize, 3] {
+        let world = 4;
+        let expected = in_process_reference(world, len);
+        for algo in [Algorithm::Ring, Algorithm::Tree] {
+            let results = spawn_world(
+                world,
+                TransportKind::default_for_host(),
+                &format!("degen_{len}_{}", algo.name()),
+                |mut comm| {
+                    let mut data = gen(comm.rank(), len);
+                    comm.allreduce_sum_with(algo, &mut data).unwrap();
+                    let pool = KernelPool::new(1);
+                    lowrank_sge::kernel::scale(&pool, &mut data, 1.0 / world as f32);
+                    data
+                },
+            );
+            for got in &results {
+                assert_bitwise(got, &expected, &format!("degenerate len={len} {}", algo.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn results_are_independent_of_arrival_timing() {
+    let world = 3;
+    let len = 4099; // prime, tree territory under Auto
+    let expected = in_process_reference(world, len);
+    for round in 0..3 {
+        let results = spawn_world(
+            world,
+            TransportKind::default_for_host(),
+            &format!("timing_{round}"),
+            |mut comm| {
+                // stagger the ranks differently every round: arrival
+                // order changes, bits must not
+                let delay = ((comm.rank() + round) % world) as u64 * 17;
+                std::thread::sleep(Duration::from_millis(delay));
+                let mut tree = gen(comm.rank(), len);
+                comm.allreduce_mean(&mut tree).unwrap(); // Auto → tree at this length
+                std::thread::sleep(Duration::from_millis(delay / 2));
+                let mut ring = gen(comm.rank(), len);
+                comm.allreduce_sum_with(Algorithm::Ring, &mut ring).unwrap();
+                let pool = KernelPool::new(1);
+                lowrank_sge::kernel::scale(&pool, &mut ring, 1.0 / comm.world() as f32);
+                (tree, ring)
+            },
+        );
+        for (tree, ring) in &results {
+            assert_bitwise(tree, &expected, &format!("timing round {round} (tree)"));
+            assert_bitwise(ring, &expected, &format!("timing round {round} (ring)"));
+        }
+    }
+}
+
+#[test]
+fn broadcast_all_gather_and_barrier_work() {
+    let world = 3;
+    let len = 257;
+    let results = spawn_world(world, TransportKind::default_for_host(), "bcast", |mut comm| {
+        // broadcast from a non-zero root
+        let mut data = gen(comm.rank(), len);
+        comm.broadcast(&mut data, 1).unwrap();
+        // all-gather every rank's original payload
+        let mine = gen(comm.rank(), 5);
+        let mut gathered = vec![0.0f32; 5 * comm.world()];
+        comm.all_gather(&mine, &mut gathered).unwrap();
+        // barrier with a stagger: everyone must wait for the slowest
+        let t0 = Instant::now();
+        if comm.rank() == 2 {
+            std::thread::sleep(Duration::from_millis(120));
+        }
+        comm.barrier().unwrap();
+        let waited = t0.elapsed();
+        (data, gathered, waited)
+    });
+    let root_payload = gen(1, len);
+    let mut expected_gather = Vec::new();
+    for r in 0..world {
+        expected_gather.extend(gen(r, 5));
+    }
+    for (rank, (data, gathered, waited)) in results.iter().enumerate() {
+        assert_bitwise(data, &root_payload, &format!("broadcast rank={rank}"));
+        assert_bitwise(gathered, &expected_gather, &format!("all_gather rank={rank}"));
+        assert!(
+            *waited >= Duration::from_millis(100),
+            "rank {rank} left the barrier after {waited:?}, before the slowest rank arrived"
+        );
+    }
+}
+
+#[test]
+fn auto_rank_claims_are_distinct() {
+    let world = 3;
+    let dir = fresh_dir("autorank");
+    let mut ranks = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..world)
+            .map(|_| {
+                let dir = dir.clone();
+                scope.spawn(move || {
+                    let cfg = CommConfig {
+                        world,
+                        rank: None, // claim the lowest free slot
+                        transport: TransportKind::default_for_host(),
+                        rdzv_dir: dir,
+                        timeout: Duration::from_secs(30),
+                        algo: Algorithm::Auto,
+                    };
+                    let mut comm = Communicator::connect(&cfg).expect("auto-rank setup");
+                    // the group must be fully functional
+                    let mut v = [comm.rank() as f32 + 1.0];
+                    comm.allreduce_sum_with(Algorithm::Tree, &mut v).unwrap();
+                    assert_eq!(v[0], 6.0); // 1 + 2 + 3
+                    comm.rank()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+    });
+    ranks.sort_unstable();
+    assert_eq!(ranks, vec![0, 1, 2]);
+}
+
+#[test]
+fn truncated_frame_is_a_crc_or_eof_error_not_a_hang() {
+    let dir = fresh_dir("truncated");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (listener, addr) = Listener::bind(TransportKind::Tcp, &dir, 0).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let io = Duration::from_secs(2);
+    let sender = std::thread::spawn(move || {
+        let conn = Conn::connect(&addr, deadline, io).unwrap();
+        // a valid frame body, corrupted in the middle, length prefix intact
+        let mut body = wire::encode_body(wire::Kind::Data, 1, 0, &[1.0, 2.0, 3.0, 4.0]);
+        let mid = body.len() / 2;
+        body[mid] ^= 0xFF;
+        conn.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+        conn.write_all(&body).unwrap();
+        // then a frame whose declared length never arrives
+        conn.write_all(&64u32.to_le_bytes()).unwrap();
+        conn.write_all(&[0u8; 10]).unwrap();
+        // keep the socket open past both receive attempts
+        std::thread::sleep(Duration::from_millis(500));
+    });
+    let conn = listener.accept(deadline, io).unwrap();
+    let err = format!("{:#}", wire::recv_frame(&conn).unwrap_err());
+    assert!(err.contains("CRC32"), "corruption not surfaced as CRC error: {err}");
+    let t0 = Instant::now();
+    let err = format!("{:#}", wire::recv_frame(&conn).unwrap_err());
+    assert!(
+        err.contains("timed out") || err.contains("truncated"),
+        "truncation not surfaced: {err}"
+    );
+    assert!(t0.elapsed() < Duration::from_secs(10), "truncated frame hung");
+    sender.join().unwrap();
+}
+
+#[test]
+fn dead_peer_surfaces_as_an_error_within_the_timeout() {
+    let dir = fresh_dir("deadpeer");
+    let make_cfg = |rank: usize, dir: &PathBuf| CommConfig {
+        world: 2,
+        rank: Some(rank),
+        transport: TransportKind::Tcp,
+        rdzv_dir: dir.clone(),
+        timeout: Duration::from_secs(2),
+        algo: Algorithm::Tree,
+    };
+    let dir1 = dir.clone();
+    let quitter = std::thread::spawn(move || {
+        let comm = Communicator::connect(&make_cfg(1, &dir1)).unwrap();
+        drop(comm); // rank 1 exits without ever entering the collective
+    });
+    let mut comm = Communicator::connect(&make_cfg(0, &dir)).unwrap();
+    quitter.join().unwrap();
+    let t0 = Instant::now();
+    let mut data = vec![1.0f32; 1000];
+    let err = comm.allreduce_sum_with(Algorithm::Tree, &mut data);
+    assert!(err.is_err(), "all-reduce against a dead peer must fail");
+    assert!(
+        t0.elapsed() < Duration::from_secs(15),
+        "dead peer took {:?} to surface (timeout not honored)",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn leader_rank_discipline_world_two() {
+    let world = 2;
+    let ckpt_root = fresh_dir("leader_ckpt");
+    let toy = || {
+        let mut sd = StateDict::new();
+        sd.put_f32("w", vec![2], vec![4.0, 2.0]);
+        vec![("params", sd)]
+    };
+    let observed = spawn_world(world, TransportKind::default_for_host(), "leader", |comm| {
+        let mut collective = Collective::Comm(comm);
+        assert_eq!(collective.world(), 2);
+        let mut wrote = false;
+        // the save gate: write on the leader only, then barrier
+        collective
+            .leader_writes(|| {
+                wrote = true;
+                save_checkpoint(&ckpt_root, 5, &[], &toy(), 3).map(|_| ())
+            })
+            .unwrap();
+        // past the barrier every rank observes the committed state
+        let steps = Layout::new(&ckpt_root).list_steps().unwrap();
+        let loaded = load_checkpoint(&ckpt_root, ResumeSpec::Latest).unwrap().step;
+        // non-leaders must refuse direct write paths
+        let guard = collective.assert_leader("checkpoint write");
+        (collective.rank(), wrote, steps, loaded, guard.is_ok())
+    });
+    for (rank, wrote, steps, loaded, guard_ok) in observed {
+        assert_eq!(wrote, rank == LEADER_RANK, "rank {rank} write gate");
+        assert_eq!(guard_ok, rank == LEADER_RANK, "rank {rank} assert_leader");
+        assert_eq!(steps, vec![5], "rank {rank} sees the leader's retention state");
+        assert_eq!(loaded, 5, "rank {rank} follows the leader's LATEST");
+    }
+}
+
+#[test]
+fn gradient_averaging_matches_in_process_through_the_collective() {
+    // the trainer-level contract: 2 ranks × 1 shard ≡ 1 process × 2
+    // shards, through Collective::allreduce_mean_shards and the scalar
+    // loss path
+    let len = 10_007;
+    let mut reference: Vec<Vec<f32>> = (0..2).map(|r| gen(r, len)).collect();
+    let mut in_proc = Collective::in_process();
+    let total = in_proc.allreduce_mean_shards(&mut reference).unwrap();
+    assert_eq!(total, 2);
+    let expected = reference.swap_remove(0);
+    let expected_loss = in_proc.allreduce_mean_scalar(1.25 + 3.5, 2).unwrap();
+
+    let results = spawn_world(2, TransportKind::default_for_host(), "trainer_gate", |comm| {
+        let mut collective = Collective::Comm(comm);
+        let mut grads = vec![gen(collective.rank(), len)];
+        let total = collective.allreduce_mean_shards(&mut grads).unwrap();
+        let local_loss = if collective.rank() == 0 { 1.25f32 } else { 3.5f32 };
+        let loss = collective.allreduce_mean_scalar(local_loss, 1).unwrap();
+        (total, grads.swap_remove(0), loss)
+    });
+    for (total, grad, loss) in results {
+        assert_eq!(total, 2);
+        assert_bitwise(&grad, &expected, "collective gradient mean");
+        assert_eq!(loss.to_bits(), expected_loss.to_bits(), "collective loss mean");
+    }
+}

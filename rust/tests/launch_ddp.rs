@@ -1,0 +1,140 @@
+//! End-to-end `launch` runner coverage, driving the real binary:
+//!
+//! * a 2-rank `comm-check` smoke (no artifacts needed): both ranks
+//!   rendezvous, run ring + tree all-reduces, and report the identical
+//!   result CRC;
+//! * failure propagation: a failing child makes `launch` exit non-zero;
+//! * (artifact-gated) the acceptance criterion: `launch --nproc 2
+//!   pretrain --workers 2` writes a rank-0 checkpoint bitwise identical
+//!   to the single-process 2-shard in-process DDP run at the same
+//!   seeds.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+const BIN: &str = env!("CARGO_BIN_EXE_lowrank-sge");
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("INDEX.txt").exists()
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("lowrank_launch_test_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn launch_two_rank_comm_check_agrees_bitwise() {
+    let out = Command::new(BIN)
+        .args(["launch", "--nproc", "2", "comm-check", "--len", "4099"])
+        .output()
+        .expect("running the launch binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "launch failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    let crcs: Vec<&str> = stdout
+        .lines()
+        .filter(|l| l.contains("comm-check ok"))
+        .filter_map(|l| l.split("crc=").nth(1))
+        .map(|t| t.split_whitespace().next().unwrap())
+        .collect();
+    assert_eq!(crcs.len(), 2, "expected both ranks to report ok\nstdout:\n{stdout}");
+    assert_eq!(crcs[0], crcs[1], "ranks reduced to different bits\nstdout:\n{stdout}");
+    assert!(stdout.contains("[rank 0]") && stdout.contains("[rank 1]"), "{stdout}");
+}
+
+#[test]
+fn launch_single_rank_comm_check_works() {
+    let out = Command::new(BIN)
+        .args(["launch", "--nproc", "1", "comm-check", "--len", "101"])
+        .output()
+        .expect("running the launch binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stdout:\n{stdout}");
+    assert!(stdout.contains("comm-check ok rank=0 world=1"), "{stdout}");
+}
+
+#[test]
+fn launch_propagates_a_failing_child() {
+    let out = Command::new(BIN)
+        .args(["launch", "--nproc", "2", "definitely-not-a-subcommand"])
+        .output()
+        .expect("running the launch binary");
+    assert!(!out.status.success(), "a failing child must fail the launch");
+}
+
+#[test]
+fn launch_rejects_unknown_runner_flags() {
+    let out = Command::new(BIN)
+        .args(["launch", "--nporc", "2", "comm-check"])
+        .output()
+        .expect("running the launch binary");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown runner flag"), "{stderr}");
+}
+
+/// The acceptance criterion: a 2-rank launch writes the bitwise-same
+/// rank-0 checkpoint as the single-process 2-worker in-process run.
+#[test]
+fn launch_pretrain_checkpoint_matches_single_process_bitwise() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let single_dir = fresh_dir("pretrain_single");
+    let launch_dir = fresh_dir("pretrain_launch");
+    let common = [
+        "--scale",
+        "s",
+        "--steps",
+        "4",
+        "--k",
+        "2",
+        "--workers",
+        "2",
+        "--seed",
+        "33",
+        "--eval-every",
+        "0",
+        "--save-every",
+        "4",
+        "--keep-last",
+        "0",
+    ];
+    let run = |prefix: &[&str], ckpt_dir: &Path| {
+        let mut args: Vec<String> = prefix.iter().map(|s| s.to_string()).collect();
+        args.push("pretrain".to_string());
+        args.extend(common.iter().map(|s| s.to_string()));
+        args.push("--ckpt-dir".to_string());
+        args.push(ckpt_dir.display().to_string());
+        let out = Command::new(BIN)
+            .args(&args)
+            .env("LOWRANK_SGE_ARTIFACTS", artifacts_dir())
+            .output()
+            .expect("running pretrain");
+        assert!(
+            out.status.success(),
+            "pretrain run failed ({args:?})\nstdout:\n{}\nstderr:\n{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+    };
+    run(&[], &single_dir);
+    run(&["launch", "--nproc", "2"], &launch_dir);
+
+    let single_step = lowrank_sge::ckpt::Layout::new(&single_dir).step_dir(4);
+    let launch_step = lowrank_sge::ckpt::Layout::new(&launch_dir).step_dir(4);
+    for file in ["MANIFEST", "params.tsr", "subspace.tsr", "full.tsr", "rng.tsr"] {
+        let a = std::fs::read(single_step.join(file))
+            .unwrap_or_else(|e| panic!("single-process {file}: {e}"));
+        let b = std::fs::read(launch_step.join(file))
+            .unwrap_or_else(|e| panic!("launch {file}: {e}"));
+        assert_eq!(a, b, "checkpoint file {file} differs between topologies");
+    }
+}
