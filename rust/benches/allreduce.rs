@@ -1,20 +1,26 @@
 //! All-reduce cost at lifted-gradient sizes: the in-process pairing
 //! tree vs the real multi-process comm collectives (2- and 4-rank ring
-//! and tree over Unix-domain sockets on this host).
+//! and tree over Unix-domain sockets on this host), in both wire
+//! dtypes, plus the trainer's slot pipeline vs the serial per-slot
+//! loop.
 //!
 //! Payload sizes follow the low-rank story — dB is m·r, so the wire
 //! carries the LLaMA-proxy lifted gradients (m·r for the `s`/`m`/`l`
 //! scale shapes) plus a 1M-element full-gradient reference point.
-//! Reports median per-op latency, effective MB/s (2·(w−1)/w of the
-//! payload each way per rank), and the per-step overhead next to the
-//! `train_step` numbers.
+//! Reports median per-op latency and effective MB/s (2·(w−1)/w of the
+//! *logical* f32 payload each way per rank — so the bf16 lane, moving
+//! half the bytes for the same payload, should report ≈ 2× the MB/s of
+//! f32 on the ring; the acceptance bar is ≥ 1.5×). The slot-pipeline
+//! section times one step's worth of dB slots reduced serially vs
+//! through `Collective::allreduce_mean_slots`, where slot k's chunk
+//! reduce overlaps slot k+1's ring exchange.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
 use lowrank_sge::bench_util::{bench, fmt_time, log_csv, report};
-use lowrank_sge::comm::{Algorithm, CommConfig, Communicator, TransportKind};
-use lowrank_sge::coordinator::allreduce_mean_with;
+use lowrank_sge::comm::{Algorithm, CommConfig, Communicator, TransportKind, WireDtype};
+use lowrank_sge::coordinator::{allreduce_mean_with, Collective};
 use lowrank_sge::kernel::KernelPool;
 
 static DIR_COUNTER: AtomicUsize = AtomicUsize::new(0);
@@ -33,6 +39,25 @@ fn payload(rank: usize, len: usize) -> Vec<f32> {
     (0..len).map(|i| ((rank * 31 + i) as f32).sin() * 1e-3).collect()
 }
 
+fn bench_config(
+    world: usize,
+    rank: usize,
+    dir: std::path::PathBuf,
+    algo: Algorithm,
+    dtype: WireDtype,
+) -> CommConfig {
+    CommConfig {
+        world,
+        rank: Some(rank),
+        transport: TransportKind::default_for_host(),
+        rdzv_dir: dir,
+        timeout: Duration::from_secs(60),
+        algo,
+        wire_dtype: dtype,
+        run_token: None,
+    }
+}
+
 /// In-process baseline: one pairing-tree mean over `world` shards.
 fn bench_in_process(world: usize, len: usize, label: &str) {
     let pool = KernelPool::new(world.min(4));
@@ -47,22 +72,16 @@ fn bench_in_process(world: usize, len: usize, label: &str) {
 }
 
 /// Multi-process: `world` communicator threads over Unix sockets, each
-/// timing the same all-reduce; rank 0's stats are reported.
-fn bench_comm(world: usize, len: usize, label: &str, algo: Algorithm) {
+/// timing the same all-reduce; rank 0's stats are reported. Returns the
+/// effective MB/s (logical f32 payload volume over median time).
+fn bench_comm(world: usize, len: usize, label: &str, algo: Algorithm, dtype: WireDtype) -> f64 {
     let dir = fresh_dir();
     let stats = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..world)
             .map(|rank| {
                 let dir = dir.clone();
                 scope.spawn(move || {
-                    let cfg = CommConfig {
-                        world,
-                        rank: Some(rank),
-                        transport: TransportKind::default_for_host(),
-                        rdzv_dir: dir,
-                        timeout: Duration::from_secs(60),
-                        algo,
-                    };
+                    let cfg = bench_config(world, rank, dir, algo, dtype);
                     let mut comm = Communicator::connect(&cfg).expect("bench communicator");
                     let mut data = payload(rank, len);
                     bench(3, 15, || {
@@ -77,11 +96,13 @@ fn bench_comm(world: usize, len: usize, label: &str, algo: Algorithm) {
         for _ in all {} // join the rest
         rank0
     });
-    // ring moves 2·(w−1)/w of the payload per rank each way; report
-    // that as the effective bandwidth of the reduce
+    // ring moves 2·(w−1)/w of the logical payload per rank each way;
+    // report that as the effective bandwidth of the reduce (the bf16
+    // lane moves half the *bytes* for the same payload, so its MB/s
+    // here directly shows the compression win)
     let bytes = 4.0 * len as f64 * 2.0 * (world as f64 - 1.0) / world as f64;
     let mbps = bytes / stats.median_s / 1e6;
-    let name = format!("comm_{}_{label}_w{world}", algo.name());
+    let name = format!("comm_{}_{}_{label}_w{world}", algo.name(), dtype.name());
     report(&name, &stats);
     println!(
         "    {name}: {:.1} MB/s effective, {} per-step overhead vs in-process",
@@ -89,10 +110,68 @@ fn bench_comm(world: usize, len: usize, label: &str, algo: Algorithm) {
         fmt_time(stats.median_s)
     );
     log_csv("allreduce.csv", &name, &stats);
+    mbps
+}
+
+/// One training step's collectives: `n_slots` dB-sized slots, reduced
+/// serially (`allreduce_mean_shards` per slot) vs through the slot
+/// pipeline (`allreduce_mean_slots` — chunk reduce overlapped with the
+/// next slot's ring exchange). Ring is forced so the phase overlap is
+/// what's measured; rank 0's medians are compared.
+fn bench_slot_pipeline(world: usize, n_slots: usize, len: usize, dtype: WireDtype) {
+    let run = |pipelined: bool| -> lowrank_sge::bench_util::BenchStats {
+        let dir = fresh_dir();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..world)
+                .map(|rank| {
+                    let dir = dir.clone();
+                    scope.spawn(move || {
+                        let cfg = bench_config(world, rank, dir, Algorithm::Ring, dtype);
+                        let comm = Communicator::connect(&cfg).expect("bench communicator");
+                        let mut collective = Collective::Comm(comm);
+                        let mut slots: Vec<Vec<Vec<f32>>> = (0..n_slots)
+                            .map(|k| vec![payload(rank * n_slots + k, len)])
+                            .collect();
+                        bench(2, 9, || {
+                            if pipelined {
+                                collective.allreduce_mean_slots(&mut slots).unwrap();
+                            } else {
+                                for g in slots.iter_mut() {
+                                    collective.allreduce_mean_shards(g).unwrap();
+                                }
+                            }
+                            std::hint::black_box(&slots);
+                        })
+                    })
+                })
+                .collect();
+            let mut all = handles.into_iter().map(|h| h.join().expect("bench rank"));
+            let rank0 = all.next().expect("world >= 1");
+            for _ in all {}
+            rank0
+        })
+    };
+    let serial = run(false);
+    let pipelined = run(true);
+    let name_s = format!("slots_serial_{}_w{world}_{n_slots}x{len}", dtype.name());
+    let name_p = format!("slots_pipelined_{}_w{world}_{n_slots}x{len}", dtype.name());
+    report(&name_s, &serial);
+    report(&name_p, &pipelined);
+    println!(
+        "    overlap win ({} slots × {len} f32, {}, w{world}): serial {} → pipelined {} \
+         ({:.2}× speedup)",
+        n_slots,
+        dtype.name(),
+        fmt_time(serial.median_s),
+        fmt_time(pipelined.median_s),
+        serial.median_s / pipelined.median_s
+    );
+    log_csv("allreduce.csv", &name_s, &serial);
+    log_csv("allreduce.csv", &name_p, &pipelined);
 }
 
 fn main() {
-    println!("== all-reduce: in-process tree vs multi-process ring/tree ==");
+    println!("== all-reduce: in-process tree vs multi-process ring/tree, f32 vs bf16 wire ==");
     // (label, elements): lifted-gradient m·r at the LLaMA-proxy scale
     // shapes (d_model 128/192/256 × rank 16), and a 1M full-grad point
     let sizes: &[(&str, usize)] = &[
@@ -106,8 +185,25 @@ fn main() {
         println!("-- {label}: {len} f32 ({} KiB) --", 4 * len / 1024);
         for world in [2usize, 4] {
             bench_in_process(world, len, label);
-            bench_comm(world, len, label, Algorithm::Ring);
-            bench_comm(world, len, label, Algorithm::Tree);
+            let ring_f32 = bench_comm(world, len, label, Algorithm::Ring, WireDtype::F32);
+            let ring_bf16 = bench_comm(world, len, label, Algorithm::Ring, WireDtype::Bf16);
+            println!(
+                "    ring bf16/f32 bandwidth: {:.2}x (acceptance bar: >= 1.5x)",
+                ring_bf16 / ring_f32
+            );
+            bench_comm(world, len, label, Algorithm::Tree, WireDtype::F32);
+            bench_comm(world, len, label, Algorithm::Tree, WireDtype::Bf16);
+        }
+    }
+    println!("== slot pipeline: serial per-slot loop vs overlapped exchange/reduce ==");
+    // one step of the `l`-scale proxy: 16 reparameterized matrices,
+    // m·r = 4096 each — small enough that wire latency (not bandwidth)
+    // dominates, which is exactly what the overlap hides — plus the
+    // 64k stacked point where both lanes matter
+    for world in [2usize, 4] {
+        for dtype in [WireDtype::F32, WireDtype::Bf16] {
+            bench_slot_pipeline(world, 16, 256 * 16, dtype);
+            bench_slot_pipeline(world, 8, 16 * 256 * 16, dtype);
         }
     }
     println!("(context: compare per-step overhead against `cargo bench --bench train_step`)");

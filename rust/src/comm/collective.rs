@@ -22,17 +22,46 @@
 //!   copies of the owned chunk **with the same pairing tree in rank
 //!   order on the kernel pool**, and ring all-gathers the reduced
 //!   chunks. Per element the association is identical to the tree, so
-//!   ring ≡ tree ≡ in-process, bitwise.
+//!   ring ≡ tree ≡ in-process, bitwise. The three phases are exposed
+//!   separately ([`Communicator::ring_exchange`] /
+//!   [`RingPending::reduce`] / [`Communicator::ring_gather`]) so the
+//!   trainer's slot pipeline can overlap slot k's chunk reduce with
+//!   slot k+1's exchange — same arithmetic, different schedule.
 //!
-//! At `world == 1` every collective is the identity, so a 1-process
-//! comm run is bitwise the in-process serial run. Every receive
-//! validates frame kind, sequence number, and chunk order — a peer that
-//! desyncs, corrupts, or dies produces a loud error within the
+//! # The compressed lane (`WireDtype::Bf16`)
+//!
+//! With `--comm-dtype bf16` the all-reduce payloads travel as bfloat16
+//! while **all arithmetic stays f32 on the kernel pool**. The semantics
+//! are algorithm-independent by construction: every rank's contribution
+//! is rounded to the bf16 grid once at the source (round-to-nearest-
+//! even), the contributions are summed in exact f32 with the pairing
+//! tree *in rank order*, and the reduced vector is rounded once more so
+//! every rank — including the one that did the arithmetic — holds the
+//! identical widened-bf16 bits. The ring implements this with its
+//! single-hop chunk exchange unchanged; the tree switches to a
+//! flat-gather schedule (every rank sends its rounded contribution
+//! straight to rank 0, which reduces in rank order and releases the
+//! result down the binomial broadcast tree) because re-compressing the
+//! hierarchical *partial sums* would change the value per hop and break
+//! compressed-ring ≡ compressed-tree. Hence ring ≡ tree bitwise in
+//! both lanes, and the f32 lane is byte-identical to the uncompressed
+//! protocol. `broadcast`, `all_gather`, `barrier`, and scalar
+//! reductions routed through [`Communicator::allreduce_sum_f32_lane`]
+//! (the trainers' step-loss mean) are control-path traffic and always
+//! travel f32.
+//!
+//! At `world == 1` every collective is the identity (no wire, no
+//! rounding), so a 1-process comm run is bitwise the in-process serial
+//! run in either lane. Every receive validates frame kind, sequence
+//! number, chunk order, and wire dtype — a peer that desyncs, corrupts,
+//! compresses differently, or dies produces a loud error within the
 //! configured timeout, never a silent wrong answer and never a hang.
 //!
 //! SPMD discipline: all ranks must issue the same collectives in the
 //! same order (the sequence number pins this down at the protocol
-//! level).
+//! level), with the same algorithm and wire dtype (the dtype is
+//! verified in the connect handshake, so a mixed-dtype world fails at
+//! startup, not mid-training).
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -41,7 +70,7 @@ use anyhow::{bail, Context, Result};
 
 use super::rendezvous::Rendezvous;
 use super::transport::{Conn, Listener, TransportKind};
-use super::wire::{self, Kind};
+use super::wire::{self, Kind, WireDtype};
 
 /// Which reduction algorithm a communicator uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,6 +103,19 @@ impl Algorithm {
             Algorithm::Auto => "auto",
         }
     }
+
+    /// The single routing predicate: does a payload of `len` elements
+    /// ride the ring (vs the tree)? A pure function of the length, and
+    /// the one definition both the serial all-reduce and the trainer's
+    /// slot pipeline consult — their bitwise serial ≡ pipelined
+    /// contract depends on routing each slot identically.
+    pub fn routes_to_ring(&self, len: usize) -> bool {
+        match self {
+            Algorithm::Ring => true,
+            Algorithm::Tree => false,
+            Algorithm::Auto => len >= RING_MIN_ELEMS,
+        }
+    }
 }
 
 /// `Auto` switches from tree to ring at this payload length.
@@ -92,6 +134,15 @@ pub struct CommConfig {
     /// per-message send/receive.
     pub timeout: Duration,
     pub algo: Algorithm,
+    /// Wire dtype of the all-reduce payloads (`F32` = bit-exact,
+    /// `Bf16` = 2 bytes/element). Must match on every rank — verified
+    /// in the connect handshake.
+    pub wire_dtype: WireDtype,
+    /// Run token stamped into the rendezvous dir (rank 0 writes, the
+    /// rest verify) so a dir left over from a crashed run is a loud
+    /// "stale rendezvous dir" error instead of a hung poll loop.
+    /// `None` skips the stamp (single-run test/bench dirs).
+    pub run_token: Option<String>,
 }
 
 /// A connected member of a multi-process collective group.
@@ -102,31 +153,93 @@ pub struct Communicator {
     /// Full mesh, indexed by peer rank (`None` at our own slot).
     peers: Vec<Option<Conn>>,
     algo: Algorithm,
+    dtype: WireDtype,
     /// Collective sequence number — every rank's n-th collective call
     /// tags its frames with n, so cross-collective desync is detected.
     seq: u64,
+    /// Rank 0's receive buffers for the bf16 flat-gather tree, reused
+    /// across calls so the per-step tree slots stay allocation-free in
+    /// steady state (mirrors the f32 tree's lazy `scratch`).
+    gather_scratch: Vec<Vec<f32>>,
+}
+
+/// An in-flight ring all-reduce between its exchange and gather phases.
+///
+/// [`Communicator::ring_exchange`] fills `contrib` with the `world`
+/// copies of this rank's owned chunk (rank order, own copy included);
+/// [`RingPending::reduce`] folds them with the pairing tree on a kernel
+/// pool — deliberately *without* touching the communicator, so the
+/// reduce can run on a helper thread while the communicator drives the
+/// next slot's exchange; [`Communicator::ring_gather`] then circulates
+/// the reduced chunk. Dropping a pending ring without gathering desyncs
+/// the collective sequence — always complete the triple.
+#[derive(Debug)]
+pub struct RingPending {
+    seq_gather: u64,
+    /// The wire lane captured at exchange time — the gather must ride
+    /// the same lane the exchange advertised, whatever the
+    /// communicator's configured lane is by the time it runs (the
+    /// split phases may interleave other collectives, e.g. an
+    /// f32-lane scalar reduce).
+    dtype: WireDtype,
+    /// Chunk bounds, a pure function of (world, len).
+    bounds: Vec<usize>,
+    /// The `world` copies of the owned chunk, indexed by source rank;
+    /// after [`Self::reduce`], slot 0 holds the reduced chunk and the
+    /// rest are pairing-tree scratch.
+    contrib: Vec<Vec<f32>>,
+    reduced: bool,
+}
+
+impl RingPending {
+    /// Fold the chunk copies with the fixed pairing tree in rank order
+    /// (bitwise-identical at any pool size). Must run exactly once,
+    /// before [`Communicator::ring_gather`].
+    pub fn reduce(&mut self, pool: &crate::kernel::KernelPool) {
+        assert!(!self.reduced, "RingPending::reduce called twice");
+        crate::kernel::tree_sum_vecs(pool, &mut self.contrib);
+        self.reduced = true;
+    }
 }
 
 impl Communicator {
     /// Rendezvous and build the full connection mesh: every pair of
-    /// ranks shares one socket (rank i dials every j < i and identifies
-    /// itself with a hello frame; j accepts and indexes the connection
-    /// by the hello's rank).
+    /// ranks shares one socket. Rank i dials every j < i and identifies
+    /// itself with a hello frame carrying its rank and wire dtype; j
+    /// accepts, verifies the dtype matches its own, and answers with
+    /// its own hello — so a world whose ranks disagree on
+    /// `--comm-dtype` fails loudly on both sides of the first
+    /// connection, before any gradient moves.
     pub fn connect(cfg: &CommConfig) -> Result<Communicator> {
         if cfg.world == 0 {
             bail!("comm world size must be >= 1");
         }
-        let rdzv = Rendezvous::new(&cfg.rdzv_dir, cfg.world, cfg.timeout)?;
+        let rdzv = Rendezvous::with_token(
+            &cfg.rdzv_dir,
+            cfg.world,
+            cfg.timeout,
+            cfg.run_token.clone(),
+        )?;
         let rank = rdzv.claim_rank(cfg.rank)?;
         let deadline = Instant::now() + cfg.timeout;
         let (listener, addr) = Listener::bind(cfg.transport, rdzv.dir(), rank)?;
         let table = rdzv.exchange(rank, &addr)?;
+        let dtype = cfg.wire_dtype;
 
         let mut peers: Vec<Option<Conn>> = (0..cfg.world).map(|_| None).collect();
         for (r, peer_addr) in table.iter().enumerate().take(rank) {
             let conn = Conn::connect(peer_addr, deadline, cfg.timeout)
                 .with_context(|| format!("rank {rank} dialing rank {r}"))?;
-            wire::send_frame(&conn, Kind::Hello, 0, rank as u32, &[])?;
+            send_hello(&conn, rank, dtype)?;
+            let ack = wire::recv_frame(&conn)
+                .with_context(|| format!("rank {rank} reading rank {r}'s comm hello ack"))?;
+            if ack.kind != Kind::Hello {
+                bail!("comm handshake desync: expected hello ack, got {:?}", ack.kind);
+            }
+            if ack.part as usize != r {
+                bail!("comm hello ack from rank {} on the connection to rank {r}", ack.part);
+            }
+            check_hello_dtype(ack.seq, dtype, r)?;
             peers[r] = Some(conn);
         }
         for _ in rank + 1..cfg.world {
@@ -142,9 +255,19 @@ impl Communicator {
             if peers[peer].is_some() {
                 bail!("duplicate comm connection from rank {peer}");
             }
+            check_hello_dtype(hello.seq, dtype, peer)?;
+            send_hello(&conn, rank, dtype)?;
             peers[peer] = Some(conn);
         }
-        Ok(Communicator { rank, world: cfg.world, peers, algo: cfg.algo, seq: 0 })
+        Ok(Communicator {
+            rank,
+            world: cfg.world,
+            peers,
+            algo: cfg.algo,
+            dtype,
+            seq: 0,
+            gather_scratch: Vec::new(),
+        })
     }
 
     /// Build from the `launch` runner's environment. Returns `None`
@@ -154,8 +277,18 @@ impl Communicator {
     /// `LOWRANK_COMM_RDZV` (rendezvous dir), `LOWRANK_COMM_WORLD`,
     /// `LOWRANK_COMM_RANK` (optional — lowest free slot when absent),
     /// `LOWRANK_COMM_TRANSPORT` (`tcp`|`unix`), `LOWRANK_COMM_TIMEOUT_MS`,
-    /// `LOWRANK_COMM_ALGO` (`ring`|`tree`|`auto`).
+    /// `LOWRANK_COMM_ALGO` (`ring`|`tree`|`auto`), `LOWRANK_COMM_DTYPE`
+    /// (`f32`|`bf16`), `LOWRANK_COMM_TOKEN` (run token, optional).
     pub fn from_env() -> Result<Option<Communicator>> {
+        Self::from_env_with(None)
+    }
+
+    /// [`Self::from_env`] with an explicit wire-dtype override (a
+    /// subcommand's own `--comm-dtype`) that replaces the env-derived
+    /// lane **before** connect — so the handshake verifies the lane the
+    /// collectives will actually use, and a mixed-dtype world still
+    /// fails at startup rather than at the first gradient frame.
+    pub fn from_env_with(dtype_override: Option<WireDtype>) -> Result<Option<Communicator>> {
         let Ok(rdzv_dir) = std::env::var("LOWRANK_COMM_RDZV") else {
             return Ok(None);
         };
@@ -186,6 +319,11 @@ impl Communicator {
             rdzv_dir: PathBuf::from(rdzv_dir),
             timeout: Duration::from_millis(timeout_ms.max(1)),
             algo,
+            wire_dtype: match dtype_override {
+                Some(dtype) => dtype,
+                None => WireDtype::from_env()?,
+            },
+            run_token: std::env::var("LOWRANK_COMM_TOKEN").ok(),
         };
         Communicator::connect(&cfg).map(Some)
     }
@@ -204,6 +342,16 @@ impl Communicator {
 
     pub fn set_algorithm(&mut self, algo: Algorithm) {
         self.algo = algo;
+    }
+
+    /// The lane the connect handshake verified. Immutable after
+    /// connect by design: a post-connect switch would un-verify the
+    /// mixed-dtype protection, so there deliberately is no setter —
+    /// per-reduction lane control goes through
+    /// [`Self::allreduce_sum_f32_lane`], and subcommand overrides
+    /// thread into [`Self::from_env_with`] *before* connect.
+    pub fn wire_dtype(&self) -> WireDtype {
+        self.dtype
     }
 
     fn next_seq(&mut self) -> u64 {
@@ -225,22 +373,31 @@ impl Communicator {
     }
 
     /// In-place sum with an explicit algorithm (the determinism tests
-    /// pin ring ≡ tree ≡ in-process with this).
+    /// pin ring ≡ tree — and, on the f32 lane, ≡ in-process — with
+    /// this).
     pub fn allreduce_sum_with(&mut self, algo: Algorithm, data: &mut [f32]) -> Result<()> {
         if self.world == 1 {
             return Ok(());
         }
-        let seq = self.next_seq();
-        let use_ring = match algo {
-            Algorithm::Ring => true,
-            Algorithm::Tree => false,
-            Algorithm::Auto => data.len() >= RING_MIN_ELEMS,
-        };
-        if use_ring {
-            self.ring_allreduce(seq, data)
+        if algo.routes_to_ring(data.len()) {
+            self.ring_allreduce(data)
         } else {
-            self.tree_allreduce(seq, data)
+            self.tree_allreduce(data)
         }
+    }
+
+    /// In-place sum pinned to the f32 lane regardless of the configured
+    /// wire dtype — for control-path reductions (the step-loss scalar,
+    /// health counters) where compressing a handful of bytes buys
+    /// nothing and rounding a logged metric costs real precision. SPMD:
+    /// every rank must route the same reduction through the same lane
+    /// (trivially true when all call sites use this method).
+    pub fn allreduce_sum_f32_lane(&mut self, data: &mut [f32]) -> Result<()> {
+        let lane = self.dtype;
+        self.dtype = WireDtype::F32;
+        let res = self.allreduce_sum(data);
+        self.dtype = lane;
+        res
     }
 
     /// All-reduce mean: the cross-process generalization of
@@ -256,7 +413,7 @@ impl Communicator {
     }
 
     /// Broadcast `data` from `root` to every rank (binomial tree over
-    /// root-relative ranks).
+    /// root-relative ranks; always the f32 lane).
     pub fn broadcast(&mut self, data: &mut [f32], root: usize) -> Result<()> {
         if root >= self.world {
             bail!("broadcast root {root} out of range for world {}", self.world);
@@ -269,17 +426,18 @@ impl Communicator {
         let rel = (rank + world - root) % world;
         if rel != 0 {
             let parent = (tree_parent(rel) + root) % world;
-            wire::recv_f32s_into(self.peer(parent)?, seq, data)?;
+            wire::recv_f32s_into(self.peer(parent)?, seq, data, WireDtype::F32)?;
         }
         for &child_rel in tree_children(rel, world).iter().rev() {
             let child = (child_rel + root) % world;
-            wire::send_f32s(self.peer(child)?, seq, data)?;
+            wire::send_f32s(self.peer(child)?, seq, data, WireDtype::F32)?;
         }
         Ok(())
     }
 
     /// Gather every rank's equal-length contribution into
-    /// `out[rank·len .. (rank+1)·len]` on all ranks (ring schedule).
+    /// `out[rank·len .. (rank+1)·len]` on all ranks (ring schedule;
+    /// always the f32 lane).
     pub fn all_gather(&mut self, mine: &[f32], out: &mut [f32]) -> Result<()> {
         let k = mine.len();
         if out.len() != k * self.world {
@@ -303,8 +461,8 @@ impl Communicator {
             let src_conn = self.peer(src)?;
             let recv_slice = &mut out[src * k..(src + 1) * k];
             both_ways(
-                || wire::send_f32s(dst_conn, seq, mine),
-                || wire::recv_f32s_into(src_conn, seq, recv_slice),
+                || wire::send_f32s(dst_conn, seq, mine, WireDtype::F32),
+                || wire::recv_f32s_into(src_conn, seq, recv_slice, WireDtype::F32),
             )?;
         }
         Ok(())
@@ -326,7 +484,8 @@ impl Communicator {
                     self.expect_barrier(src, seq)?;
                 }
             } else {
-                wire::send_frame(self.peer(rank - gap)?, Kind::Barrier, seq, 0, &[])?;
+                let parent = self.peer(rank - gap)?;
+                wire::send_frame(parent, Kind::Barrier, seq, 0, &[], WireDtype::F32)?;
                 break;
             }
             gap *= 2;
@@ -335,7 +494,7 @@ impl Communicator {
             self.expect_barrier(tree_parent(rank), seq)?;
         }
         for &child in tree_children(rank, world).iter().rev() {
-            wire::send_frame(self.peer(child)?, Kind::Barrier, seq, 0, &[])?;
+            wire::send_frame(self.peer(child)?, Kind::Barrier, seq, 0, &[], WireDtype::F32)?;
         }
         Ok(())
     }
@@ -353,10 +512,114 @@ impl Communicator {
         Ok(())
     }
 
+    /// Phase 1 of the chunked ring: round the payload to the wire grid
+    /// (bf16 lane only — the f32 lane is untouched), then ring-offset
+    /// exchange chunk copies so this rank holds all `world`
+    /// contributions to its owned chunk. Two sequence numbers are
+    /// consumed (exchange + the eventual gather), so interleaving the
+    /// phases of several collectives keeps a deterministic frame
+    /// schedule. Requires `world > 1`.
+    pub fn ring_exchange(&mut self, data: &mut [f32]) -> Result<RingPending> {
+        debug_assert!(self.world > 1, "ring_exchange is meaningless at world == 1");
+        let seq_x = self.next_seq();
+        let seq_g = self.next_seq();
+        let dtype = self.dtype;
+        if dtype == WireDtype::Bf16 {
+            // quantize at the source: chunk sends below are then
+            // lossless, and the local contribution enters the reduce
+            // with the same bits every peer receives
+            wire::quantize_bf16(data);
+        }
+        let (rank, world) = (self.rank, self.world);
+        let len = data.len();
+        // chunk bounds are a pure function of (world, len)
+        let bounds: Vec<usize> = (0..=world).map(|i| i * len / world).collect();
+        let own = bounds[rank]..bounds[rank + 1];
+        let own_len = own.len();
+
+        // step s sends our copy of rank (rank+s)'s chunk and receives
+        // rank (rank−s)'s copy of ours, full duplex.
+        let mut copies: Vec<Option<Vec<f32>>> = (0..world).map(|_| None).collect();
+        for s in 1..world {
+            let dst = (rank + s) % world;
+            let src = (rank + world - s) % world;
+            let send_chunk = &data[bounds[dst]..bounds[dst + 1]];
+            let mut buf = vec![0.0f32; own_len];
+            let dst_conn = self.peer(dst)?;
+            let src_conn = self.peer(src)?;
+            both_ways(
+                || wire::send_f32s(dst_conn, seq_x, send_chunk, dtype),
+                || wire::recv_f32s_into(src_conn, seq_x, &mut buf, dtype),
+            )?;
+            copies[src] = Some(buf);
+        }
+        let contrib: Vec<Vec<f32>> = (0..world)
+            .map(|r| {
+                if r == rank {
+                    data[own.clone()].to_vec()
+                } else {
+                    copies[r].take().expect("exchange filled every peer slot")
+                }
+            })
+            .collect();
+        Ok(RingPending { seq_gather: seq_g, dtype, bounds, contrib, reduced: false })
+    }
+
+    /// Phase 3 of the chunked ring: circulate the reduced chunk
+    /// ([`RingPending::reduce`] must have run) and fill `data` with
+    /// every rank's reduced chunk. On the bf16 lane the reduced chunk
+    /// is rounded once before it circulates, so the owner and every
+    /// receiver end with identical bits.
+    pub fn ring_gather(&mut self, pending: RingPending, data: &mut [f32]) -> Result<()> {
+        let RingPending { seq_gather: seq, dtype, bounds, mut contrib, reduced } = pending;
+        assert!(reduced, "ring_gather called before RingPending::reduce");
+        let (rank, world) = (self.rank, self.world);
+        if bounds.len() != world + 1 || bounds[world] != data.len() {
+            bail!(
+                "ring_gather buffer has {} elements but the exchange covered {}",
+                data.len(),
+                bounds[world]
+            );
+        }
+        let mut own_copy = std::mem::take(&mut contrib[0]);
+        if dtype == WireDtype::Bf16 {
+            wire::quantize_bf16(&mut own_copy);
+        }
+        data[bounds[rank]..bounds[rank + 1]].copy_from_slice(&own_copy);
+        for s in 1..world {
+            let dst = (rank + s) % world;
+            let src = (rank + world - s) % world;
+            let dst_conn = self.peer(dst)?;
+            let src_conn = self.peer(src)?;
+            let recv_slice = &mut data[bounds[src]..bounds[src + 1]];
+            both_ways(
+                || wire::send_f32s(dst_conn, seq, &own_copy, dtype),
+                || wire::recv_f32s_into(src_conn, seq, recv_slice, dtype),
+            )?;
+        }
+        Ok(())
+    }
+
+    /// The serial ring all-reduce: exchange, reduce on the global pool,
+    /// gather — the same three phases the slot pipeline interleaves.
+    fn ring_allreduce(&mut self, data: &mut [f32]) -> Result<()> {
+        let mut pending = self.ring_exchange(data)?;
+        pending.reduce(&crate::kernel::global());
+        self.ring_gather(pending, data)
+    }
+
+    fn tree_allreduce(&mut self, data: &mut [f32]) -> Result<()> {
+        match self.dtype {
+            WireDtype::F32 => self.tree_allreduce_f32(data),
+            WireDtype::Bf16 => self.tree_allreduce_bf16(data),
+        }
+    }
+
     /// Stride-doubling pairing tree (identical association to the
     /// in-process `allreduce_mean_with`), then release broadcast of the
-    /// rank-0 total.
-    fn tree_allreduce(&self, seq: u64, data: &mut [f32]) -> Result<()> {
+    /// rank-0 total. f32 lane: partial sums travel bit-exact.
+    fn tree_allreduce_f32(&mut self, data: &mut [f32]) -> Result<()> {
+        let seq = self.next_seq();
         let (rank, world) = (self.rank, self.world);
         let pool = crate::kernel::global();
         // allocated lazily at the first receive: leaf ranks (half the
@@ -370,86 +633,108 @@ impl Communicator {
                     if scratch.len() != data.len() {
                         scratch.resize(data.len(), 0.0);
                     }
-                    wire::recv_f32s_into(self.peer(src)?, seq, &mut scratch)?;
+                    wire::recv_f32s_into(self.peer(src)?, seq, &mut scratch, WireDtype::F32)?;
                     crate::kernel::add_assign(&pool, data, &scratch);
                 }
             } else {
                 // this rank's partial is folded into rank − gap; it
                 // waits for the release broadcast below
-                wire::send_f32s(self.peer(rank - gap)?, seq, data)?;
+                wire::send_f32s(self.peer(rank - gap)?, seq, data, WireDtype::F32)?;
                 break;
             }
             gap *= 2;
         }
         if rank != 0 {
-            wire::recv_f32s_into(self.peer(tree_parent(rank))?, seq, data)?;
+            wire::recv_f32s_into(self.peer(tree_parent(rank))?, seq, data, WireDtype::F32)?;
         }
         for &child in tree_children(rank, world).iter().rev() {
-            wire::send_f32s(self.peer(child)?, seq, data)?;
+            wire::send_f32s(self.peer(child)?, seq, data, WireDtype::F32)?;
         }
         Ok(())
     }
 
-    /// Chunked ring: ring-offset exchange of chunk copies, local
-    /// pairing-tree reduce of the owned chunk on the kernel pool, ring
-    /// all-gather of the reduced chunks. Bitwise identical to
-    /// [`Self::tree_allreduce`] (see module docs).
-    fn ring_allreduce(&self, seq: u64, data: &mut [f32]) -> Result<()> {
+    /// bf16 lane of the tree: flat-gather the rounded contributions to
+    /// rank 0 (single hop each — hierarchical partial sums would need
+    /// lossy re-compression per hop and break ring ≡ tree), reduce them
+    /// in rank order with the same pairing tree the ring uses, round
+    /// the total once, and release it down the binomial broadcast tree
+    /// (lossless: the payload is already on the bf16 grid).
+    fn tree_allreduce_bf16(&mut self, data: &mut [f32]) -> Result<()> {
+        let seq_gather = self.next_seq();
+        let seq_bcast = self.next_seq();
         let (rank, world) = (self.rank, self.world);
-        let len = data.len();
-        // chunk bounds are a pure function of (world, len)
-        let bounds: Vec<usize> = (0..=world).map(|i| i * len / world).collect();
-        let own = bounds[rank]..bounds[rank + 1];
-        let own_len = own.len();
-        let pool = crate::kernel::global();
-
-        // phase 1 — exchange: step s sends our copy of rank (rank+s)'s
-        // chunk and receives rank (rank−s)'s copy of ours, full duplex.
-        let mut copies: Vec<Option<Vec<f32>>> = (0..world).map(|_| None).collect();
-        for s in 1..world {
-            let dst = (rank + s) % world;
-            let src = (rank + world - s) % world;
-            let send_chunk = &data[bounds[dst]..bounds[dst + 1]];
-            let mut buf = vec![0.0f32; own_len];
-            let dst_conn = self.peer(dst)?;
-            let src_conn = self.peer(src)?;
-            both_ways(
-                || wire::send_f32s(dst_conn, seq, send_chunk),
-                || wire::recv_f32s_into(src_conn, seq, &mut buf),
-            )?;
-            copies[src] = Some(buf);
-        }
-
-        // phase 2 — reduce the world copies of our chunk in rank order
-        // with the pairing tree on the kernel pool: elementwise the
-        // same association as the full-vector tree.
-        let mut contrib: Vec<Vec<f32>> = (0..world)
-            .map(|r| {
-                if r == rank {
-                    data[own.clone()].to_vec()
-                } else {
-                    copies[r].take().expect("phase 1 filled every peer slot")
+        wire::quantize_bf16(data);
+        if rank == 0 {
+            let pool = crate::kernel::global();
+            // persistent contribution slots (taken, refilled, returned)
+            // so steady-state tree slots allocate nothing per step
+            let mut contrib = std::mem::take(&mut self.gather_scratch);
+            contrib.resize_with(world, Vec::new);
+            contrib[0].clear();
+            contrib[0].extend_from_slice(data);
+            // drain every peer concurrently (one scoped receiver per
+            // connection): all senders transmit at once, so no rank's
+            // write ever stalls behind another rank's transfer long
+            // enough to trip the per-message timeout. Arrival timing
+            // cannot leak into the result — each receiver fills its own
+            // rank-indexed slot and the reduce below runs in rank order.
+            let data_len = data.len();
+            let this = &*self;
+            std::thread::scope(|scope| -> Result<()> {
+                let mut handles = Vec::with_capacity(world - 1);
+                for (r, buf) in contrib.iter_mut().enumerate().skip(1) {
+                    handles.push(scope.spawn(move || -> Result<()> {
+                        buf.resize(data_len, 0.0);
+                        wire::recv_f32s_into(this.peer(r)?, seq_gather, buf, WireDtype::Bf16)
+                    }));
                 }
-            })
-            .collect();
-        crate::kernel::tree_sum_vecs(&pool, &mut contrib);
-        data[own.clone()].copy_from_slice(&contrib[0]);
-
-        // phase 3 — all-gather the reduced chunks around the ring.
-        let own_copy = std::mem::take(&mut contrib[0]);
-        for s in 1..world {
-            let dst = (rank + s) % world;
-            let src = (rank + world - s) % world;
-            let dst_conn = self.peer(dst)?;
-            let src_conn = self.peer(src)?;
-            let recv_slice = &mut data[bounds[src]..bounds[src + 1]];
-            both_ways(
-                || wire::send_f32s(dst_conn, seq, &own_copy),
-                || wire::recv_f32s_into(src_conn, seq, recv_slice),
+                for h in handles {
+                    h.join()
+                        .map_err(|_| anyhow::anyhow!("comm receiver thread panicked"))??;
+                }
+                Ok(())
+            })?;
+            crate::kernel::tree_sum_vecs(&pool, &mut contrib);
+            data.copy_from_slice(&contrib[0]);
+            wire::quantize_bf16(data);
+            self.gather_scratch = contrib;
+        } else {
+            wire::send_f32s(self.peer(0)?, seq_gather, data, WireDtype::Bf16)?;
+            wire::recv_f32s_into(
+                self.peer(tree_parent(rank))?,
+                seq_bcast,
+                data,
+                WireDtype::Bf16,
             )?;
+        }
+        for &child in tree_children(rank, world).iter().rev() {
+            wire::send_f32s(self.peer(child)?, seq_bcast, data, WireDtype::Bf16)?;
         }
         Ok(())
     }
+}
+
+/// Send the connect handshake frame: `part` carries the sender's rank,
+/// `seq` the sender's wire-dtype tag.
+fn send_hello(conn: &Conn, rank: usize, dtype: WireDtype) -> Result<()> {
+    wire::send_frame(conn, Kind::Hello, dtype.tag() as u64, rank as u32, &[], WireDtype::F32)
+}
+
+/// Verify a hello's advertised wire dtype against our own.
+fn check_hello_dtype(advertised: u64, ours: WireDtype, peer: usize) -> Result<()> {
+    if advertised == ours.tag() as u64 {
+        return Ok(());
+    }
+    let theirs = u8::try_from(advertised)
+        .ok()
+        .and_then(|t| WireDtype::from_tag(t).ok())
+        .map(|d| d.name())
+        .unwrap_or("an unknown dtype");
+    bail!(
+        "comm wire dtype mismatch: rank {peer} speaks {theirs}, this rank speaks {} — \
+         set --comm-dtype/LOWRANK_COMM_DTYPE identically on every rank",
+        ours.name()
+    )
 }
 
 /// Run a send and a receive concurrently (the send on a scoped helper
@@ -460,8 +745,7 @@ impl Communicator {
 /// The per-call thread spawn (~10 µs) is a deliberate simplicity
 /// tradeoff: it keeps the exchange logic free of persistent sender
 /// state. If `benches/allreduce.rs` ever shows it dominating at small
-/// payloads, a long-lived sender thread per peer is the follow-on
-/// (ROADMAP: overlapped per-slot reduction).
+/// payloads, a long-lived sender thread per peer is the follow-on.
 fn both_ways<S, R>(send: S, recv: R) -> Result<()>
 where
     S: FnOnce() -> Result<()> + Send,
@@ -530,5 +814,25 @@ mod tests {
             assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
         }
         assert!(Algorithm::parse("carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn routing_predicate_is_length_pure() {
+        assert!(Algorithm::Ring.routes_to_ring(1));
+        assert!(!Algorithm::Tree.routes_to_ring(1 << 20));
+        assert!(!Algorithm::Auto.routes_to_ring(RING_MIN_ELEMS - 1));
+        assert!(Algorithm::Auto.routes_to_ring(RING_MIN_ELEMS));
+    }
+
+    #[test]
+    fn hello_dtype_check_is_symmetric_and_loud() {
+        assert!(check_hello_dtype(WireDtype::F32.tag() as u64, WireDtype::F32, 1).is_ok());
+        assert!(check_hello_dtype(WireDtype::Bf16.tag() as u64, WireDtype::Bf16, 1).is_ok());
+        let err = check_hello_dtype(WireDtype::Bf16.tag() as u64, WireDtype::F32, 3)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dtype mismatch") && err.contains("rank 3"), "{err}");
+        let err = check_hello_dtype(200, WireDtype::F32, 1).unwrap_err().to_string();
+        assert!(err.contains("unknown dtype"), "{err}");
     }
 }

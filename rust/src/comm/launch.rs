@@ -4,10 +4,20 @@
 //! binary N times with the child argv, wiring each child into one
 //! collective group through the env-var rendezvous
 //! ([`crate::comm::Communicator::from_env`]): a fresh rendezvous
-//! directory, explicit ranks 0..N, shared world size / transport /
-//! timeout. Child stdout/stderr are line-multiplexed onto the parent's
-//! with a `[rank r]` prefix, and the first non-zero child exit status
-//! is propagated as the runner's own.
+//! directory stamped with a per-launch run token, explicit ranks 0..N,
+//! shared world size / transport / timeout / wire dtype. Child
+//! stdout/stderr are line-multiplexed onto the parent's with a
+//! `[rank r]` prefix, and the first non-zero child exit status is
+//! propagated as the runner's own.
+//!
+//! Failure is fast, not quiet: the runner polls **all** ranks, and the
+//! moment any rank exits non-zero it terminates the survivors and
+//! returns — a rank that dies before rendezvous no longer leaves its
+//! peers polling a dead address table until the full comm timeout (the
+//! old runner waited on children strictly in rank order, so rank 0
+//! could sit in that poll for minutes before the real failure was even
+//! observed). The first non-zero status, earliest-exit first and
+//! lowest-rank first within a poll sweep, still wins.
 //!
 //! Everything else (threads, checkpoint flags, config files) passes
 //! through untouched — the children parse the exact argv the operator
@@ -15,8 +25,10 @@
 
 use std::io::{BufRead, BufReader};
 use std::path::PathBuf;
-use std::process::{Command, Stdio};
+use std::process::{Child, Command, Stdio};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -34,6 +46,10 @@ pub struct LaunchOptions {
     pub timeout_ms: u64,
     /// Collective algorithm override (`ring`|`tree`|`auto`).
     pub algo: Option<String>,
+    /// Wire dtype override (`f32`|`bf16`), handed to the children as
+    /// `LOWRANK_COMM_DTYPE`; `None` leaves the children's environment
+    /// (and therefore the f32 default) in charge.
+    pub comm_dtype: Option<String>,
 }
 
 impl Default for LaunchOptions {
@@ -44,6 +60,7 @@ impl Default for LaunchOptions {
             rdzv_dir: None,
             timeout_ms: 120_000,
             algo: None,
+            comm_dtype: None,
         }
     }
 }
@@ -51,9 +68,14 @@ impl Default for LaunchOptions {
 /// Distinguishes concurrent launches inside one parent process.
 static LAUNCH_COUNTER: AtomicUsize = AtomicUsize::new(0);
 
+/// One spawned rank: its process handle plus the output pump threads
+/// that must be joined after it exits.
+type RankSlot = (usize, Child, JoinHandle<()>, JoinHandle<()>);
+
 /// Spawn `nproc` ranks of the current binary running `child_args`,
-/// multiplex their output, and return the first non-zero exit code in
-/// rank order (0 when every rank succeeded).
+/// multiplex their output, and return the first non-zero exit code
+/// (0 when every rank succeeded). On the first failure the surviving
+/// ranks are killed immediately.
 pub fn run_launch(opts: &LaunchOptions, child_args: &[String]) -> Result<i32> {
     if opts.nproc == 0 {
         bail!("launch: --nproc must be >= 1");
@@ -62,6 +84,7 @@ pub fn run_launch(opts: &LaunchOptions, child_args: &[String]) -> Result<i32> {
         bail!("launch: missing child command (e.g. `launch --nproc 2 pretrain --steps 100`)");
     }
     let exe = std::env::current_exe().context("resolving the lowrank-sge binary path")?;
+    let launch_id = LAUNCH_COUNTER.fetch_add(1, Ordering::SeqCst);
     // The rendezvous must start empty: stale claim/addr files from a
     // previous run would assign ranks from a dead world. Our own temp
     // dir is safe to clear; an operator-supplied dir is NOT ours to
@@ -83,9 +106,8 @@ pub fn run_launch(opts: &LaunchOptions, child_args: &[String]) -> Result<i32> {
         }
         None => {
             let d = std::env::temp_dir().join(format!(
-                "lowrank-launch-{}-{}",
-                std::process::id(),
-                LAUNCH_COUNTER.fetch_add(1, Ordering::SeqCst)
+                "lowrank-launch-{}-{launch_id}",
+                std::process::id()
             ));
             if d.exists() {
                 std::fs::remove_dir_all(&d).with_context(|| format!("clearing stale {d:?}"))?;
@@ -94,48 +116,130 @@ pub fn run_launch(opts: &LaunchOptions, child_args: &[String]) -> Result<i32> {
             d
         }
     };
+    // The per-launch run token: rank 0 stamps the rendezvous dir with
+    // it and the other ranks verify, so this world can never mistake a
+    // dead run's rendezvous files for its own.
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let run_token = format!("launch-{}-{launch_id}-{nanos:x}", std::process::id());
 
-    let mut children = Vec::with_capacity(opts.nproc);
+    let mut slots: Vec<Option<RankSlot>> = Vec::with_capacity(opts.nproc);
+    let result = spawn_and_reap(opts, child_args, &exe, &rdzv, &run_token, &mut slots);
+    if result.is_err() {
+        // a runner-side failure (spawn error, wait error) must not
+        // orphan live ranks into the comm-timeout address poll — the
+        // same fast-termination contract a failing child gets
+        kill_and_reap(&mut slots);
+    }
+    // only our own temp dir is removed (on success *and* error); an
+    // operator-supplied dir keeps its (now-stale) rendezvous files for
+    // post-mortem inspection
+    if opts.rdzv_dir.is_none() {
+        let _ = std::fs::remove_dir_all(&rdzv);
+    }
+    result
+}
+
+/// Spawn every rank, then reap in poll sweeps over all of them, so a
+/// failure anywhere is observed within one sweep no matter which ranks
+/// are still alive. On `Err` the caller kills whatever is left in
+/// `slots`.
+fn spawn_and_reap(
+    opts: &LaunchOptions,
+    child_args: &[String],
+    exe: &std::path::Path,
+    rdzv: &std::path::Path,
+    run_token: &str,
+    slots: &mut Vec<Option<RankSlot>>,
+) -> Result<i32> {
     for rank in 0..opts.nproc {
-        let mut cmd = Command::new(&exe);
+        let mut cmd = Command::new(exe);
         cmd.args(child_args)
-            .env("LOWRANK_COMM_RDZV", &rdzv)
+            .env("LOWRANK_COMM_RDZV", rdzv)
             .env("LOWRANK_COMM_WORLD", opts.nproc.to_string())
             .env("LOWRANK_COMM_RANK", rank.to_string())
             .env("LOWRANK_COMM_TRANSPORT", opts.transport.name())
             .env("LOWRANK_COMM_TIMEOUT_MS", opts.timeout_ms.to_string())
+            .env("LOWRANK_COMM_TOKEN", run_token)
             .stdout(Stdio::piped())
             .stderr(Stdio::piped());
         if let Some(algo) = &opts.algo {
             cmd.env("LOWRANK_COMM_ALGO", algo);
+        }
+        if let Some(dtype) = &opts.comm_dtype {
+            cmd.env("LOWRANK_COMM_DTYPE", dtype);
         }
         let mut child = cmd
             .spawn()
             .with_context(|| format!("spawning rank {rank} ({})", exe.display()))?;
         let out_pump = pump(child.stdout.take().expect("piped stdout"), rank, false);
         let err_pump = pump(child.stderr.take().expect("piped stderr"), rank, true);
-        children.push((rank, child, out_pump, err_pump));
+        slots.push(Some((rank, child, out_pump, err_pump)));
     }
 
     let mut first_failure = 0i32;
-    for (rank, mut child, out_pump, err_pump) in children {
-        let status = child
-            .wait()
-            .with_context(|| format!("waiting for rank {rank}"))?;
-        let _ = out_pump.join();
-        let _ = err_pump.join();
-        if !status.success() && first_failure == 0 {
-            // signal-killed children have no code; report a generic 101
-            first_failure = status.code().unwrap_or(101);
-            eprintln!("launch: rank {rank} exited with {status}");
+    let mut live = slots.len();
+    while live > 0 {
+        let mut reaped = false;
+        let mut failed: Option<usize> = None;
+        for slot in slots.iter_mut() {
+            let finished = match slot.as_mut() {
+                Some((rank, child, _, _)) => child
+                    .try_wait()
+                    .with_context(|| format!("waiting for rank {rank}"))?,
+                None => None,
+            };
+            let Some(status) = finished else { continue };
+            let (rank, _child, out_pump, err_pump) = slot.take().expect("slot was live");
+            let _ = out_pump.join();
+            let _ = err_pump.join();
+            live -= 1;
+            reaped = true;
+            if !status.success() && first_failure == 0 {
+                // signal-killed children have no code; report a generic 101
+                first_failure = status.code().unwrap_or(101);
+                failed = Some(rank);
+                eprintln!("launch: rank {rank} exited with {status}");
+            }
+        }
+        if let Some(rank) = failed {
+            if live > 0 {
+                eprintln!(
+                    "launch: terminating {live} surviving rank(s) after rank {rank}'s failure"
+                );
+                for slot in slots.iter_mut() {
+                    if let Some((_, child, _, _)) = slot.as_mut() {
+                        let _ = child.kill();
+                    }
+                }
+                // killed children are reaped by the next sweeps; their
+                // signal exits never overwrite the original failure code
+            }
+        }
+        if !reaped && live > 0 {
+            std::thread::sleep(Duration::from_millis(15));
         }
     }
-    // only our own temp dir is removed; an operator-supplied dir keeps
-    // its (now-stale) rendezvous files for post-mortem inspection
-    if opts.rdzv_dir.is_none() {
-        let _ = std::fs::remove_dir_all(&rdzv);
-    }
     Ok(first_failure)
+}
+
+/// Terminate and reap every rank still in `slots` (best effort — the
+/// runner is already on an error path).
+fn kill_and_reap(slots: &mut [Option<RankSlot>]) {
+    for slot in slots.iter_mut() {
+        if let Some((_, child, _, _)) = slot.as_mut() {
+            let _ = child.kill();
+        }
+    }
+    for slot in slots.iter_mut() {
+        if let Some((_, mut child, out_pump, err_pump)) = slot.take() {
+            let _ = child.wait();
+            let _ = out_pump.join();
+            let _ = err_pump.join();
+        }
+    }
 }
 
 /// Forward one child stream line-by-line with a `[rank r]` prefix.

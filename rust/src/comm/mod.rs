@@ -7,28 +7,52 @@
 //! format borrowed from the checkpoint codec (magic + dtype + CRC-32,
 //! [`wire`]). Low-rank training is exactly the workload where this
 //! pays: the lifted gradients `dB ∈ ℝ^{m×r}` are r/n of the full
-//! gradient, so collective bandwidth (not memory) is the scaling lever.
+//! gradient, so collective bandwidth (not memory) is the scaling lever
+//! — and the wire pushes the same lever twice more:
+//!
+//! * **The dtype lane** ([`WireDtype`], `--comm-dtype`/
+//!   `LOWRANK_COMM_DTYPE`): all-reduce payloads travel as `f32`
+//!   (bit-exact) or `bf16` (round-to-nearest-even on send, exact
+//!   widening on receive — half the bytes per element). All reduction
+//!   arithmetic stays f32 on the kernel pool; contributions are
+//!   rounded once at the source and the reduced vector once at the
+//!   end, so compressed ring ≡ compressed tree bitwise and a
+//!   mixed-dtype world is rejected in the connect handshake.
+//! * **The slot pipeline** ([`crate::coordinator::Collective::allreduce_mean_slots`]):
+//!   the ring all-reduce is split into exchange / chunk-reduce / gather
+//!   phases ([`Communicator::ring_exchange`], [`RingPending::reduce`],
+//!   [`Communicator::ring_gather`]), so the trainer overlaps slot k's
+//!   local reduce on the kernel pool with slot k+1's exchange on the
+//!   sockets — same arithmetic, a bounded-window schedule that hides
+//!   most of the wire latency at LLaMA-proxy m·r sizes.
 //!
 //! * [`transport`] — [`Conn`]/[`Listener`] over TCP and Unix sockets,
 //!   with read/write timeouts so a dead peer is an error, not a hang.
-//! * [`rendezvous`] — file rendezvous: atomic rank claims (O_EXCL) and
-//!   address exchange under one shared directory.
+//! * [`rendezvous`] — file rendezvous: atomic rank claims (O_EXCL),
+//!   address exchange, and a per-launch run token so a directory left
+//!   behind by a crashed run is a loud "stale rendezvous dir" error.
 //! * [`wire`] — length-prefixed, CRC-verified frames in the
-//!   `ckpt::codec` framing style; chunked payload streaming.
-//! * [`collective`] — the [`Communicator`]: chunked-ring and
-//!   pairing-tree all-reduce, broadcast, all-gather, barrier.
+//!   `ckpt::codec` framing style; chunked payload streaming; the
+//!   f32/bf16 dtype lane with checked length encodes.
+//! * [`collective`] — the [`Communicator`]: chunked-ring (whole or
+//!   phase-split) and pairing-tree all-reduce, broadcast, all-gather,
+//!   barrier.
 //! * [`launch`] — the torchrun-style local runner behind
-//!   `lowrank-sge launch --nproc N …`.
+//!   `lowrank-sge launch --nproc N …`; the first failing rank
+//!   terminates the survivors immediately.
 //!
 //! # Determinism contract
 //!
 //! The combine order of every reduction is a pure function of (world
-//! size, payload length) and matches the in-process
-//! [`crate::coordinator::allreduce_mean_with`] pairing tree exactly —
-//! so ring ≡ tree ≡ in-process, bitwise; results are independent of
-//! message-arrival timing and thread count; and `world == 1` is
-//! bitwise the single-process serial run. See [`collective`] for the
-//! construction.
+//! size, payload length) and — on the f32 lane — matches the
+//! in-process [`crate::coordinator::allreduce_mean_with`] pairing tree
+//! exactly: ring ≡ tree ≡ in-process, bitwise. On the bf16 lane the
+//! combine order is the same pairing tree over the source-rounded
+//! contributions, so ring ≡ tree bitwise there too (in-process parity
+//! is an f32-lane contract; compression is opt-in). Results are
+//! independent of message-arrival timing and thread count, and
+//! `world == 1` is bitwise the single-process serial run in either
+//! lane. See [`collective`] for the construction.
 
 pub mod collective;
 pub mod launch;
@@ -36,7 +60,8 @@ pub mod rendezvous;
 pub mod transport;
 pub mod wire;
 
-pub use collective::{Algorithm, CommConfig, Communicator, RING_MIN_ELEMS};
+pub use collective::{Algorithm, CommConfig, Communicator, RingPending, RING_MIN_ELEMS};
 pub use launch::{run_launch, LaunchOptions};
 pub use rendezvous::Rendezvous;
 pub use transport::{Conn, Listener, TransportKind};
+pub use wire::WireDtype;

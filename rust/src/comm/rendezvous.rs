@@ -4,7 +4,7 @@
 //!
 //! The rendezvous root is a shared directory (the `launch` runner
 //! creates a fresh one per run and exports it as `LOWRANK_COMM_RDZV`).
-//! Two file families live in it:
+//! Three file families live in it:
 //!
 //! * `claim-<rank>` — rank assignment. A process with an explicit rank
 //!   (from `LOWRANK_COMM_RANK`) claims its slot; a process without one
@@ -14,6 +14,14 @@
 //!   `unix://…`), written to a temp name and renamed so readers never
 //!   observe a half-written address. Every process polls until all
 //!   `world` addresses exist, then returns the full table.
+//! * `run-token` — the liveness stamp. When the joiners share a run
+//!   token (`LOWRANK_COMM_TOKEN`, set by the `launch` runner), the
+//!   rank-0 claimant publishes it (atomically, create-if-absent) and
+//!   every other rank verifies it before trusting any claim or address
+//!   file. A directory still populated by a **crashed or concurrent
+//!   run** therefore fails with a loud "stale rendezvous dir" error at
+//!   join time — instead of the old failure mode, where fresh ranks
+//!   would poll dead address files until the full comm timeout.
 //!
 //! Everything is bounded by the configured timeout: a missing peer is a
 //! loud "rendezvous timed out" error naming the ranks still absent.
@@ -23,23 +31,42 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+const TOKEN_FILE: &str = "run-token";
+
 /// Rendezvous handle over a shared directory.
 #[derive(Clone, Debug)]
 pub struct Rendezvous {
     dir: PathBuf,
     world: usize,
     timeout: Duration,
+    /// Shared run token; `None` disables the stale-dir stamp (callers
+    /// that own a fresh private dir, e.g. unit tests and benches).
+    run_token: Option<String>,
 }
 
 impl Rendezvous {
     pub fn new(dir: impl Into<PathBuf>, world: usize, timeout: Duration) -> Result<Rendezvous> {
+        Self::with_token(dir, world, timeout, None)
+    }
+
+    pub fn with_token(
+        dir: impl Into<PathBuf>,
+        world: usize,
+        timeout: Duration,
+        run_token: Option<String>,
+    ) -> Result<Rendezvous> {
         if world == 0 {
             bail!("comm world size must be >= 1");
+        }
+        if let Some(token) = &run_token {
+            if token.is_empty() || token.contains(|c: char| c == '\n' || c == '\r') {
+                bail!("comm run token must be a non-empty single line");
+            }
         }
         let dir = dir.into();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating rendezvous dir {dir:?}"))?;
-        Ok(Rendezvous { dir, world, timeout })
+        Ok(Rendezvous { dir, world, timeout, run_token })
     }
 
     pub fn dir(&self) -> &Path {
@@ -58,24 +85,132 @@ impl Rendezvous {
         self.dir.join(format!("addr-{rank}"))
     }
 
+    fn token_path(&self) -> PathBuf {
+        self.dir.join(TOKEN_FILE)
+    }
+
     /// Claim a rank. `want = Some(r)` claims exactly `r` (failing if a
     /// different process got there first); `None` claims the lowest
-    /// free slot atomically.
+    /// free slot atomically. With a run token configured, rank 0 stamps
+    /// the directory and every other rank verifies the stamp, so claims
+    /// against a stale directory fail loudly here rather than hanging
+    /// in the address poll.
     pub fn claim_rank(&self, want: Option<usize>) -> Result<usize> {
         if let Some(rank) = want {
             if rank >= self.world {
                 bail!("rank {rank} is out of range for world size {}", self.world);
             }
-            claim_file(&self.claim_path(rank))
-                .with_context(|| format!("claiming comm rank {rank} (already taken?)"))?;
+            // claim first, stamp after: stamping first would let rank 0
+            // freshly stamp a dir whose claim-0 belongs to a dead run,
+            // turning the failure into an unexplained "already taken"
+            // (and leaving the other ranks trusting the new stamp)
+            if let Err(e) = claim_file(&self.claim_path(rank)) {
+                return Err(self.enrich_claim_conflict(rank, e));
+            }
+            self.stamp_or_verify(rank)?;
             return Ok(rank);
         }
         for rank in 0..self.world {
             if claim_file(&self.claim_path(rank)).is_ok() {
+                self.stamp_or_verify(rank)?;
                 return Ok(rank);
             }
         }
+        if let Some(found) = self.token_mismatch() {
+            bail!(
+                "stale rendezvous dir {:?}: every rank slot is claimed and the run token \
+                 there ({found:?}) is not this run's — a crashed run left its files behind; \
+                 clear the directory or point at a fresh one",
+                self.dir
+            );
+        }
         bail!("no free rank slot: all {} ranks are already claimed", self.world)
+    }
+
+    /// Name the true cause of a claim conflict: a stale directory when
+    /// the run token says so (wrong token, or claims with no stamp at
+    /// all), else the plain duplicate-claim error.
+    fn enrich_claim_conflict(&self, rank: usize, err: anyhow::Error) -> anyhow::Error {
+        if let Some(found) = self.token_mismatch() {
+            return anyhow::anyhow!(
+                "stale rendezvous dir {:?}: rank {rank}'s slot is already claimed and the \
+                 run token there ({found:?}) is not this run's — a crashed run left its \
+                 files behind; clear the directory or point at a fresh one",
+                self.dir
+            );
+        }
+        if self.run_token.is_some() && !self.token_path().exists() {
+            return anyhow::anyhow!(
+                "stale rendezvous dir {:?}? rank {rank}'s slot is already claimed but no \
+                 run token is stamped — either a crashed (or pre-token) run left its files \
+                 behind, or a duplicate rank {rank} raced the leader's stamp; clear the \
+                 directory or point at a fresh one",
+                self.dir
+            );
+        }
+        err.context(format!("claiming comm rank {rank} (already taken?)"))
+    }
+
+    /// Rank 0 publishes the run token (atomic create-if-absent); other
+    /// ranks poll for it and verify it matches their own. No-op when no
+    /// token is configured.
+    fn stamp_or_verify(&self, rank: usize) -> Result<()> {
+        let Some(token) = &self.run_token else { return Ok(()) };
+        let path = self.token_path();
+        if rank == 0 {
+            // write the content to a private temp file, then hard-link
+            // it into place: link fails with EEXIST if a token already
+            // exists, so a stale stamp is never silently overwritten
+            // and readers never observe a half-written token.
+            let tmp = self.dir.join(format!(".run-token.{}", std::process::id()));
+            std::fs::write(&tmp, token).with_context(|| format!("writing {tmp:?}"))?;
+            let linked = std::fs::hard_link(&tmp, &path);
+            let _ = std::fs::remove_file(&tmp);
+            match linked {
+                Ok(()) => Ok(()),
+                Err(_) => self.check_token(token, &path),
+            }
+        } else {
+            // wait for rank 0's stamp (bounded), then verify
+            let deadline = Instant::now() + self.timeout;
+            loop {
+                if path.exists() {
+                    return self.check_token(token, &path);
+                }
+                if Instant::now() >= deadline {
+                    bail!(
+                        "timed out after {:?} waiting for the run token in {:?} — rank 0 \
+                         never stamped it (stale rendezvous dir blocking its claim, or the \
+                         leader died before rendezvous)",
+                        self.timeout,
+                        self.dir
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+
+    fn check_token(&self, expected: &str, path: &Path) -> Result<()> {
+        let found = std::fs::read_to_string(path)
+            .with_context(|| format!("reading run token {path:?}"))?;
+        if found.trim() == expected {
+            return Ok(());
+        }
+        bail!(
+            "stale rendezvous dir {:?}: its run token is {:?}, this run's is {expected:?} — \
+             a crashed (or concurrent) run owns the directory; clear it or point at a fresh one",
+            self.dir,
+            found.trim()
+        )
+    }
+
+    /// The stale-dir probe: `Some(found)` when a token file exists and
+    /// differs from this run's token.
+    fn token_mismatch(&self) -> Option<String> {
+        let expected = self.run_token.as_deref()?;
+        let found = std::fs::read_to_string(self.token_path()).ok()?;
+        (found.trim() != expected).then(|| found.trim().to_string())
     }
 
     /// Publish this rank's listener address and wait for every peer's.
@@ -190,5 +325,90 @@ mod tests {
         let rdzv = Rendezvous::new(&dir, 2, Duration::from_millis(80)).unwrap();
         let err = rdzv.exchange(0, "tcp://127.0.0.1:1").unwrap_err().to_string();
         assert!(err.contains("timed out") && err.contains("[1]"), "{err}");
+    }
+
+    #[test]
+    fn tokened_claims_work_end_to_end() {
+        let dir = fresh_dir("token_ok");
+        let token = Some("run-A".to_string());
+        let rdzv =
+            Rendezvous::with_token(&dir, 3, Duration::from_secs(5), token.clone()).unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..3 {
+            let rdzv = rdzv.clone();
+            handles.push(std::thread::spawn(move || rdzv.claim_rank(None).unwrap()));
+        }
+        let mut ranks: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, vec![0, 1, 2]);
+        assert_eq!(
+            std::fs::read_to_string(dir.join(TOKEN_FILE)).unwrap(),
+            "run-A",
+            "rank 0 stamps the dir with the run token"
+        );
+    }
+
+    #[test]
+    fn stale_dir_is_a_loud_error_not_a_hang() {
+        let dir = fresh_dir("token_stale");
+        // a "crashed run" left its full rendezvous state behind
+        let old = Rendezvous::with_token(
+            &dir,
+            2,
+            Duration::from_secs(1),
+            Some("dead-run".to_string()),
+        )
+        .unwrap();
+        assert_eq!(old.claim_rank(Some(0)).unwrap(), 0);
+        std::fs::write(dir.join("addr-0"), "tcp://127.0.0.1:1").unwrap();
+
+        let fresh = Rendezvous::with_token(
+            &dir,
+            2,
+            Duration::from_millis(120),
+            Some("new-run".to_string()),
+        )
+        .unwrap();
+        // explicit rank 0 rejoin: the stale stamp is detected before
+        // the claim-conflict can mislead
+        let err = fresh.claim_rank(Some(0)).unwrap_err().to_string();
+        assert!(err.contains("stale rendezvous dir"), "{err}");
+        // auto-claim lands on a free slot but must refuse the stale stamp
+        let err = fresh.claim_rank(None).unwrap_err().to_string();
+        assert!(err.contains("stale rendezvous dir"), "{err}");
+    }
+
+    #[test]
+    fn orphaned_leader_slot_times_out_with_a_stale_hint() {
+        let dir = fresh_dir("token_orphan");
+        // stale claim-0 but no token: the old run predates tokens or
+        // crashed before stamping — rank 0 of the new run can't claim,
+        // so the non-leaders' token wait must fail in bounded time
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("claim-0"), "").unwrap();
+        let rdzv = Rendezvous::with_token(
+            &dir,
+            2,
+            Duration::from_millis(100),
+            Some("new-run".to_string()),
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let err = rdzv.claim_rank(Some(1)).unwrap_err().to_string();
+        assert!(t0.elapsed() < Duration::from_secs(5), "token wait was unbounded");
+        assert!(err.contains("stale rendezvous dir") || err.contains("run token"), "{err}");
+        // rank 0 itself must not freshly stamp the dead run's dir: its
+        // claim conflict names the stale dir (claims present, no stamp)
+        let err = rdzv.claim_rank(Some(0)).unwrap_err().to_string();
+        assert!(err.contains("stale rendezvous dir"), "{err}");
+        assert!(!dir.join(TOKEN_FILE).exists(), "the conflicting claim must not be stamped");
+    }
+
+    #[test]
+    fn untokened_runs_keep_the_old_behaviour() {
+        let dir = fresh_dir("token_none");
+        let rdzv = Rendezvous::new(&dir, 2, Duration::from_secs(1)).unwrap();
+        assert_eq!(rdzv.claim_rank(Some(0)).unwrap(), 0);
+        assert!(!dir.join(TOKEN_FILE).exists());
     }
 }

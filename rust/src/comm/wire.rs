@@ -10,38 +10,58 @@
 //! 0       4     body length u32 LE (everything below; caps at MAX_BODY)
 //! --- body (CRC-covered) ---
 //! 0       4     magic  b"LRCM"
-//! 4       4     version u32 LE (currently 1)
+//! 4       4     version u32 LE (currently 2)
 //! 8       1     kind  (0 = hello, 1 = data, 2 = barrier)
-//! 9       1     dtype (0 = f32, 255 = none)
+//! 9       1     dtype (0 = f32, 1 = bf16, 255 = none)
 //! 10      8     seq  u64 LE — collective sequence number
+//!                             (hello: the sender's wire-dtype tag)
 //! 18      4     part u32 LE — chunk index within the collective
 //!                             (hello: the sender's rank)
 //! 22      4     element count u32 LE
-//! 26      4·n   payload, little-endian f32 (bit-exact, NaN-preserving)
+//! 26      w·n   payload, little-endian; w = 4 (f32) or 2 (bf16)
 //! --- trailer ---
 //!         4     CRC-32 (IEEE) of the whole body
 //! ```
 //!
+//! # The dtype lane
+//!
+//! Data frames carry their payload in one of two wire dtypes
+//! ([`WireDtype`]): `F32` is the bit-exact lane (NaN-preserving,
+//! lossless); `Bf16` is the compressed lane — each f32 is rounded to
+//! bfloat16 (truncate with round-to-nearest-even, [`f32_to_bf16`]) on
+//! send and widened back (exact: low mantissa bits zero-filled,
+//! [`bf16_to_f32`]) on receive, halving the bytes on the wire. All
+//! *arithmetic* stays f32 on the kernel pool; only the transport is
+//! narrowed. The `dtype` header byte versions the lane: a peer that
+//! does not speak a tag rejects the frame loudly ("dtype tag 1,
+//! expected 0"), never misparses the payload.
+//!
 //! A truncated stream fails `read_exact` with a loud "truncated frame"
 //! error; a corrupted body fails the CRC check; a frame from a
 //! desynchronized peer fails the kind/seq/part validation in
-//! [`crate::comm::collective`]. Nothing is ever silently resized or
-//! skipped — a bad byte on the wire is an error, not a hang and not a
-//! wrong gradient.
+//! [`crate::comm::collective`]; an oversized payload fails the checked
+//! length encode *before* anything is written. Nothing is ever silently
+//! resized, truncated, or skipped — a bad byte on the wire is an error,
+//! not a hang and not a wrong gradient.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::transport::Conn;
 use crate::ckpt::crc32::crc32;
 
 pub const MAGIC: [u8; 4] = *b"LRCM";
-pub const VERSION: u32 = 1;
+/// Protocol version. 2 = the bf16 dtype lane plus the two-way connect
+/// handshake (hello + ack). Version-1 builds never answered the ack,
+/// so without this bump a mixed-build world would stall for the full
+/// comm timeout instead of failing loudly — a version-1 peer now
+/// rejects the very first frame with "unsupported comm frame version".
+pub const VERSION: u32 = 2;
 
 /// Sanity cap on one frame body: a length prefix past this is protocol
 /// corruption, not data (collectives chunk payloads far below it).
 pub const MAX_BODY: usize = 64 << 20;
 
-/// Data frames carry at most this many f32 elements; larger payloads
+/// Data frames carry at most this many elements; larger payloads
 /// stream as a `part`-numbered frame sequence so the receiver can fold
 /// chunks into the reduction while later chunks are still in flight.
 pub const MAX_DATA_ELEMS: usize = 1 << 16;
@@ -49,7 +69,8 @@ pub const MAX_DATA_ELEMS: usize = 1 << 16;
 /// Frame kinds (`kind` byte).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Kind {
-    /// Connection handshake; `part` carries the sender's rank.
+    /// Connection handshake; `part` carries the sender's rank and `seq`
+    /// the sender's wire-dtype tag (mixed-dtype worlds fail at connect).
     Hello,
     /// A payload chunk of a collective.
     Data,
@@ -76,10 +97,113 @@ impl Kind {
     }
 }
 
+/// Payload encoding of a data frame — the wire compression lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireDtype {
+    /// 4 bytes/element, bit-exact.
+    F32,
+    /// 2 bytes/element: f32 → bfloat16 round-to-nearest-even on send,
+    /// exact widening on receive. Halves collective bandwidth.
+    Bf16,
+}
+
+impl WireDtype {
+    pub fn parse(s: &str) -> Result<WireDtype> {
+        Ok(match s {
+            "f32" => WireDtype::F32,
+            "bf16" => WireDtype::Bf16,
+            other => bail!("unknown comm wire dtype {other:?} (expected f32 or bf16)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireDtype::F32 => "f32",
+            WireDtype::Bf16 => "bf16",
+        }
+    }
+
+    /// The frame-header `dtype` byte for data frames of this lane.
+    pub fn tag(self) -> u8 {
+        match self {
+            WireDtype::F32 => DTYPE_F32,
+            WireDtype::Bf16 => DTYPE_BF16,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Result<WireDtype> {
+        Ok(match tag {
+            DTYPE_F32 => WireDtype::F32,
+            DTYPE_BF16 => WireDtype::Bf16,
+            other => bail!(
+                "unknown comm data dtype tag {other} \
+                 (this build speaks f32 = {DTYPE_F32} and bf16 = {DTYPE_BF16})"
+            ),
+        })
+    }
+
+    /// Bytes per payload element on the wire.
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            WireDtype::F32 => 4,
+            WireDtype::Bf16 => 2,
+        }
+    }
+
+    /// The `LOWRANK_COMM_DTYPE` env contract (`f32` | `bf16`, default
+    /// `f32` when unset) — set for every rank by `lowrank-sge launch
+    /// --comm-dtype`.
+    pub fn from_env() -> Result<WireDtype> {
+        match std::env::var("LOWRANK_COMM_DTYPE") {
+            Ok(s) => WireDtype::parse(&s).context("bad LOWRANK_COMM_DTYPE"),
+            Err(_) => Ok(WireDtype::F32),
+        }
+    }
+}
+
 const DTYPE_F32: u8 = 0;
+const DTYPE_BF16: u8 = 1;
 const DTYPE_NONE: u8 = 255;
 
-/// A decoded frame header + payload.
+/// f32 → bfloat16 bits, truncating with round-to-nearest-even (the
+/// hardware convention). Sign and exponent survive exactly: ±0, ±∞,
+/// and every subnormal round to their nearest bf16 neighbour, and NaNs
+/// stay NaN (a mantissa bit is forced so a NaN whose high mantissa
+/// bits are zero cannot quiet to ∞).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round-to-nearest-even: add 0x7FFF plus the current LSB of the
+    // kept mantissa, then truncate. Finite values that round past the
+    // largest bf16 saturate to ±∞ — the IEEE behaviour.
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// bfloat16 bits → f32, exactly (low mantissa bits zero-filled).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round one f32 through bf16 and back — the value a `Bf16` receive
+/// reconstructs. Idempotent: re-rounding an already-rounded value is
+/// the identity, so re-sending a quantized payload is lossless.
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+/// Quantize a buffer in place to the bf16-representable grid
+/// (elementwise, order-free — deterministic at any thread count).
+pub fn quantize_bf16(data: &mut [f32]) {
+    for v in data {
+        *v = bf16_round(*v);
+    }
+}
+
+/// A decoded frame header + payload (payload widened to f32 whatever
+/// the wire dtype was).
 #[derive(Debug)]
 pub struct Frame {
     pub kind: Kind,
@@ -92,36 +216,76 @@ fn put_u32(out: &mut Vec<u8>, x: u32) {
     out.extend_from_slice(&x.to_le_bytes());
 }
 
+/// Checked narrowing for the u32 wire length fields: a count that does
+/// not fit is a loud error *before* any byte hits the stream — an
+/// unchecked `as u32` here would silently truncate the field and
+/// desync every frame after it.
+fn checked_wire_u32(n: usize, what: &str) -> Result<u32> {
+    u32::try_from(n).map_err(|_| {
+        anyhow!("comm frame {what} {n} exceeds the u32 wire field — payload too large")
+    })
+}
+
 /// Append one frame body (magic … CRC trailer, no length prefix) to
-/// `out`; the CRC covers exactly the appended bytes.
-fn encode_body_into(out: &mut Vec<u8>, kind: Kind, seq: u64, part: u32, payload: &[f32]) {
+/// `out`; the CRC covers exactly the appended bytes. Non-data kinds
+/// must carry an empty payload and are tagged dtype-none.
+fn encode_body_into(
+    out: &mut Vec<u8>,
+    kind: Kind,
+    seq: u64,
+    part: u32,
+    payload: &[f32],
+    dtype: WireDtype,
+) -> Result<()> {
+    if kind != Kind::Data && !payload.is_empty() {
+        bail!("comm frame kind {kind:?} cannot carry a payload");
+    }
+    let count = checked_wire_u32(payload.len(), "element count")?;
     let start = out.len();
-    out.reserve(30 + 4 * payload.len());
+    out.reserve(30 + dtype.elem_bytes() * payload.len());
     out.extend_from_slice(&MAGIC);
     put_u32(out, VERSION);
     out.push(kind.tag());
-    out.push(if kind == Kind::Data { DTYPE_F32 } else { DTYPE_NONE });
+    out.push(if kind == Kind::Data { dtype.tag() } else { DTYPE_NONE });
     out.extend_from_slice(&seq.to_le_bytes());
     put_u32(out, part);
-    put_u32(out, payload.len() as u32);
-    for v in payload {
-        out.extend_from_slice(&v.to_le_bytes());
+    put_u32(out, count);
+    match dtype {
+        WireDtype::F32 => {
+            for v in payload {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        WireDtype::Bf16 => {
+            for v in payload {
+                out.extend_from_slice(&f32_to_bf16(*v).to_le_bytes());
+            }
+        }
     }
     let crc = crc32(&out[start..]);
     put_u32(out, crc);
+    Ok(())
 }
 
 /// Encode one frame body (magic … CRC trailer, no length prefix).
-pub fn encode_body(kind: Kind, seq: u64, part: u32, payload: &[f32]) -> Vec<u8> {
+pub fn encode_body(
+    kind: Kind,
+    seq: u64,
+    part: u32,
+    payload: &[f32],
+    dtype: WireDtype,
+) -> Result<Vec<u8>> {
     let mut out = Vec::new();
-    encode_body_into(&mut out, kind, seq, part, payload);
-    out
+    encode_body_into(&mut out, kind, seq, part, payload, dtype)?;
+    Ok(out)
 }
 
 /// A validated frame header (payload bytes returned alongside).
 #[derive(Clone, Copy, Debug)]
 struct Header {
     kind: Kind,
+    /// Raw dtype byte (`DTYPE_NONE` on non-data frames).
+    dtype: u8,
     seq: u64,
     part: u32,
 }
@@ -156,37 +320,72 @@ fn split_verified(body: &[u8]) -> Result<(Header, &[u8])> {
     let seq = u64::from_le_bytes(inner[10..18].try_into().unwrap());
     let part = u32::from_le_bytes(inner[18..22].try_into().unwrap());
     let count = u32::from_le_bytes(inner[22..26].try_into().unwrap()) as usize;
-    let expected_dtype = if kind == Kind::Data { DTYPE_F32 } else { DTYPE_NONE };
-    if dtype != expected_dtype {
-        bail!("comm frame kind {kind:?} has dtype tag {dtype}, expected {expected_dtype}");
-    }
+    let elem_bytes = if kind == Kind::Data {
+        // unknown tags (a future lane, or a peer newer than this build)
+        // are a loud rejection, not a misparse
+        WireDtype::from_tag(dtype)?.elem_bytes()
+    } else {
+        if dtype != DTYPE_NONE {
+            bail!("comm frame kind {kind:?} has dtype tag {dtype}, expected {DTYPE_NONE}");
+        }
+        4
+    };
     let payload_bytes = inner.len() - 26;
-    if payload_bytes != 4 * count {
+    if payload_bytes != elem_bytes * count {
         bail!(
-            "comm frame length mismatch: {count} elements declared, {payload_bytes} payload bytes"
+            "comm frame length mismatch: {count} elements declared ({elem_bytes} bytes each), \
+             {payload_bytes} payload bytes"
         );
     }
-    Ok((Header { kind, seq, part }, &inner[26..]))
+    Ok((Header { kind, dtype, seq, part }, &inner[26..]))
+}
+
+/// Widen the raw payload bytes of a verified data frame into `out`
+/// (`out.len()` must equal the frame's element count).
+fn widen_payload(dtype: WireDtype, payload_bytes: &[u8], out: &mut [f32]) {
+    match dtype {
+        WireDtype::F32 => {
+            for (dst, src) in out.iter_mut().zip(payload_bytes.chunks_exact(4)) {
+                *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
+            }
+        }
+        WireDtype::Bf16 => {
+            for (dst, src) in out.iter_mut().zip(payload_bytes.chunks_exact(2)) {
+                *dst = bf16_to_f32(u16::from_le_bytes([src[0], src[1]]));
+            }
+        }
+    }
 }
 
 /// Decode and fully validate one frame body.
 pub fn decode_body(body: &[u8]) -> Result<Frame> {
     let (h, payload_bytes) = split_verified(body)?;
-    let payload = payload_bytes
-        .chunks_exact(4)
-        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-        .collect();
+    let payload = if h.kind == Kind::Data {
+        let dtype = WireDtype::from_tag(h.dtype)?;
+        let mut out = vec![0.0f32; payload_bytes.len() / dtype.elem_bytes()];
+        widen_payload(dtype, payload_bytes, &mut out);
+        out
+    } else {
+        Vec::new()
+    };
     Ok(Frame { kind: h.kind, seq: h.seq, part: h.part, payload })
 }
 
 /// Write one length-prefixed frame to a connection. The prefix is
 /// reserved up front in the same buffer, so the payload is materialized
 /// exactly once before the single write.
-pub fn send_frame(conn: &Conn, kind: Kind, seq: u64, part: u32, payload: &[f32]) -> Result<()> {
-    let mut msg = Vec::with_capacity(34 + 4 * payload.len());
+pub fn send_frame(
+    conn: &Conn,
+    kind: Kind,
+    seq: u64,
+    part: u32,
+    payload: &[f32],
+    dtype: WireDtype,
+) -> Result<()> {
+    let mut msg = Vec::with_capacity(34 + dtype.elem_bytes() * payload.len());
     msg.extend_from_slice(&[0u8; 4]); // length prefix, patched below
-    encode_body_into(&mut msg, kind, seq, part, payload);
-    let body_len = (msg.len() - 4) as u32;
+    encode_body_into(&mut msg, kind, seq, part, payload, dtype)?;
+    let body_len = checked_wire_u32(msg.len() - 4, "body length")?;
     msg[..4].copy_from_slice(&body_len.to_le_bytes());
     conn.write_all(&msg)
         .with_context(|| format!("sending comm frame (kind {kind:?}, seq {seq}, part {part})"))
@@ -209,22 +408,26 @@ pub fn recv_frame(conn: &Conn) -> Result<Frame> {
     decode_body(&body)
 }
 
-/// Stream a payload as a `part`-numbered sequence of data frames.
-/// Zero-length payloads send nothing (both sides know the length).
-pub fn send_f32s(conn: &Conn, seq: u64, data: &[f32]) -> Result<()> {
+/// Stream a payload as a `part`-numbered sequence of data frames in the
+/// given wire dtype. Zero-length payloads send nothing (both sides know
+/// the length). With `Bf16` each element is rounded to nearest-even on
+/// the way out; sending an already-quantized buffer is lossless.
+pub fn send_f32s(conn: &Conn, seq: u64, data: &[f32], dtype: WireDtype) -> Result<()> {
     for (part, chunk) in data.chunks(MAX_DATA_ELEMS).enumerate() {
-        send_frame(conn, Kind::Data, seq, part as u32, chunk)?;
+        send_frame(conn, Kind::Data, seq, part as u32, chunk, dtype)?;
     }
     Ok(())
 }
 
 /// Receive a payload streamed by [`send_f32s`] into `out`, validating
-/// the collective sequence number and chunk order frame by frame.
+/// the collective sequence number, chunk order, and wire dtype frame by
+/// frame — a peer configured with a different `LOWRANK_COMM_DTYPE` is a
+/// loud dtype-mismatch error, never a misparsed gradient.
 ///
 /// One byte buffer is reused across all chunks and the payload is
 /// decoded straight into `out` — no per-chunk `Vec<f32>` on the
 /// bandwidth-critical all-reduce path.
-pub fn recv_f32s_into(conn: &Conn, seq: u64, out: &mut [f32]) -> Result<()> {
+pub fn recv_f32s_into(conn: &Conn, seq: u64, out: &mut [f32], dtype: WireDtype) -> Result<()> {
     let mut filled = 0usize;
     let mut part = 0u32;
     let mut body = Vec::new();
@@ -243,6 +446,15 @@ pub fn recv_f32s_into(conn: &Conn, seq: u64, out: &mut [f32]) -> Result<()> {
         if h.kind != Kind::Data {
             bail!("collective protocol desync: expected data frame, got {:?}", h.kind);
         }
+        if h.dtype != dtype.tag() {
+            bail!(
+                "comm wire dtype mismatch: peer sent dtype tag {} but this rank speaks {} \
+                 (tag {}) — set --comm-dtype/LOWRANK_COMM_DTYPE identically on every rank",
+                h.dtype,
+                dtype.name(),
+                dtype.tag()
+            );
+        }
         if h.seq != seq || h.part != part {
             bail!(
                 "collective protocol desync: expected seq {seq} part {part}, \
@@ -252,18 +464,13 @@ pub fn recv_f32s_into(conn: &Conn, seq: u64, out: &mut [f32]) -> Result<()> {
             );
         }
         let want = (out.len() - filled).min(MAX_DATA_ELEMS);
-        if payload_bytes.len() != 4 * want {
+        if payload_bytes.len() != dtype.elem_bytes() * want {
             bail!(
                 "collective protocol desync: expected {want}-element chunk, got {} elements",
-                payload_bytes.len() / 4
+                payload_bytes.len() / dtype.elem_bytes()
             );
         }
-        for (dst, src) in out[filled..filled + want]
-            .iter_mut()
-            .zip(payload_bytes.chunks_exact(4))
-        {
-            *dst = f32::from_le_bytes([src[0], src[1], src[2], src[3]]);
-        }
+        widen_payload(dtype, payload_bytes, &mut out[filled..filled + want]);
         filled += want;
         part += 1;
     }
@@ -277,7 +484,7 @@ mod tests {
     #[test]
     fn body_roundtrip_preserves_every_bit() {
         let payload = vec![1.0f32, -0.0, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE, 3e38];
-        let body = encode_body(Kind::Data, 77, 3, &payload);
+        let body = encode_body(Kind::Data, 77, 3, &payload, WireDtype::F32).unwrap();
         let frame = decode_body(&body).unwrap();
         assert_eq!(frame.kind, Kind::Data);
         assert_eq!((frame.seq, frame.part), (77, 3));
@@ -287,18 +494,75 @@ mod tests {
     }
 
     #[test]
+    fn bf16_body_roundtrip_is_the_rounded_value() {
+        let payload = vec![1.0f32, -2.5, 0.1, 1e-3, -3.0e38, 65536.0 + 1.0];
+        let body = encode_body(Kind::Data, 9, 0, &payload, WireDtype::Bf16).unwrap();
+        // the wire really is 2 bytes/element
+        assert_eq!(body.len(), 30 + 2 * payload.len());
+        let frame = decode_body(&body).unwrap();
+        for (a, b) in payload.iter().zip(&frame.payload) {
+            assert_eq!(bf16_round(*a).to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_rounding_semantics() {
+        // exact values survive the round trip bit-for-bit
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 256.0, f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(bf16_round(v).to_bits(), v.to_bits(), "{v} not preserved");
+        }
+        // ±0 keep their sign bit
+        assert_eq!(f32_to_bf16(-0.0), 0x8000);
+        assert_eq!(f32_to_bf16(0.0), 0x0000);
+        // NaN stays NaN — including one whose high mantissa bits are 0,
+        // which naive truncation would quiet to ∞
+        let sneaky_nan = f32::from_bits(0x7F80_0001);
+        assert!(sneaky_nan.is_nan());
+        assert!(bf16_to_f32(f32_to_bf16(sneaky_nan)).is_nan());
+        assert!(bf16_round(f32::NAN).is_nan());
+        // subnormals: representable ones survive, others round to a
+        // neighbouring subnormal (never to a garbage normal)
+        let sub = f32::from_bits(0x0001_0000); // a bf16-representable subnormal
+        assert_eq!(bf16_round(sub).to_bits(), sub.to_bits());
+        let tiny = f32::MIN_POSITIVE / 2.0; // subnormal in f32
+        let r = bf16_round(tiny);
+        assert!(r == 0.0 || (r > 0.0 && r < f32::MIN_POSITIVE), "subnormal rounded to {r}");
+        // round-to-nearest-even at a tie: 1 + 2^-8 is exactly between
+        // 1.0 and the next bf16 (1 + 2^-7); the even mantissa (1.0) wins
+        assert_eq!(bf16_round(1.0 + 2f32.powi(-8)), 1.0);
+        // ... and 1 + 3·2^-8 ties upward to the even 1 + 2^-6
+        assert_eq!(bf16_round(1.0 + 3.0 * 2f32.powi(-8)), 1.0 + 2f32.powi(-6));
+        // rounding is deterministic
+        for i in 0..1000u32 {
+            let v = f32::from_bits(0x3F80_0000 + i * 7919);
+            assert_eq!(f32_to_bf16(v), f32_to_bf16(v));
+        }
+        // idempotent: the grid is closed under re-rounding
+        for v in [0.1f32, 3.7e-5, -123.456, 8.5e30] {
+            let once = bf16_round(v);
+            assert_eq!(bf16_round(once).to_bits(), once.to_bits());
+        }
+    }
+
+    #[test]
     fn every_single_byte_flip_is_detected() {
-        let body = encode_body(Kind::Data, 5, 0, &[1.5, -2.5, 0.25]);
-        for i in 0..body.len() {
-            let mut bad = body.clone();
-            bad[i] ^= 0x20;
-            assert!(decode_body(&bad).is_err(), "flip at byte {i} not detected");
+        for dtype in [WireDtype::F32, WireDtype::Bf16] {
+            let body = encode_body(Kind::Data, 5, 0, &[1.5, -2.5, 0.25], dtype).unwrap();
+            for i in 0..body.len() {
+                let mut bad = body.clone();
+                bad[i] ^= 0x20;
+                assert!(
+                    decode_body(&bad).is_err(),
+                    "flip at byte {i} not detected ({})",
+                    dtype.name()
+                );
+            }
         }
     }
 
     #[test]
     fn truncation_is_detected_at_every_length() {
-        let body = encode_body(Kind::Barrier, 9, 0, &[]);
+        let body = encode_body(Kind::Barrier, 9, 0, &[], WireDtype::F32).unwrap();
         for cut in 0..body.len() {
             assert!(decode_body(&body[..cut]).is_err(), "truncation to {cut} not detected");
         }
@@ -306,13 +570,38 @@ mod tests {
 
     #[test]
     fn non_data_frames_reject_payloads() {
-        // hand-build a barrier frame claiming an f32 payload
-        let mut body = encode_body(Kind::Barrier, 1, 0, &[]);
-        body[9] = 0; // dtype = f32 on a barrier frame
+        assert!(encode_body(Kind::Barrier, 1, 0, &[1.0], WireDtype::F32).is_err());
+        // hand-build a barrier frame claiming an f32 dtype tag
+        let mut body = encode_body(Kind::Barrier, 1, 0, &[], WireDtype::F32).unwrap();
+        body[9] = DTYPE_F32; // dtype = f32 on a barrier frame
         let n = body.len();
         let crc = crc32(&body[..n - 4]);
         body[n - 4..].copy_from_slice(&crc.to_le_bytes());
         let err = decode_body(&body).unwrap_err().to_string();
         assert!(err.contains("dtype"), "{err}");
+    }
+
+    #[test]
+    fn unknown_dtype_tag_is_rejected_loudly() {
+        let mut body = encode_body(Kind::Data, 3, 0, &[1.0, 2.0], WireDtype::F32).unwrap();
+        body[9] = 7; // a lane this build does not speak
+        let n = body.len();
+        let crc = crc32(&body[..n - 4]);
+        body[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = decode_body(&body).unwrap_err().to_string();
+        assert!(err.contains("dtype tag 7"), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_fields_are_checked_errors_at_the_boundary() {
+        // the u32 field boundary itself (no 16 GiB allocation needed —
+        // the check is pure arithmetic)
+        assert_eq!(checked_wire_u32(u32::MAX as usize, "element count").unwrap(), u32::MAX);
+        let err = checked_wire_u32(u32::MAX as usize + 1, "element count")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("element count") && err.contains("u32"), "{err}");
+        let err = checked_wire_u32(usize::MAX, "body length").unwrap_err().to_string();
+        assert!(err.contains("body length"), "{err}");
     }
 }

@@ -97,6 +97,17 @@ impl ArgMap {
     pub fn threads_or(&self, default: usize) -> usize {
         self.usize_or("threads", default)
     }
+
+    /// `--comm-dtype f32|bf16` — wire dtype of the comm collectives,
+    /// shared by every rank-aware subcommand; this is the single place
+    /// the flag is parsed. `None` when absent (the
+    /// `LOWRANK_COMM_DTYPE` env contract, default f32, then decides);
+    /// a bad value is a loud error, never a silent f32 fallback.
+    pub fn comm_dtype(&self) -> Result<Option<crate::comm::WireDtype>> {
+        self.get("comm-dtype")
+            .map(crate::comm::WireDtype::parse)
+            .transpose()
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +151,16 @@ mod tests {
         let b = ArgMap::parse(&toks("--steps 5")).unwrap();
         assert_eq!(b.threads_or(0), 0);
         assert_eq!(b.threads_or(2), 2); // config-file fallback wins
+    }
+
+    #[test]
+    fn comm_dtype_parses_and_rejects() {
+        let a = ArgMap::parse(&toks("--comm-dtype bf16")).unwrap();
+        assert_eq!(a.comm_dtype().unwrap(), Some(crate::comm::WireDtype::Bf16));
+        let b = ArgMap::parse(&toks("--steps 5")).unwrap();
+        assert_eq!(b.comm_dtype().unwrap(), None);
+        let c = ArgMap::parse(&toks("--comm-dtype fp8")).unwrap();
+        assert!(c.comm_dtype().is_err());
     }
 
     #[test]

@@ -40,13 +40,16 @@
 //! only guarantee the `LATEST` state is on disk once the writer drains
 //! (at the next save, or at end of run).
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
 
-use crate::comm::Communicator;
+use crate::comm::{Algorithm, Communicator, RingPending};
 use crate::data::{LmBatcher, ZipfMarkovCorpus};
+use crate::kernel::KernelPool;
 use crate::rng::Rng;
 
 /// Rank that owns shared side effects (checkpoint writes, LATEST
@@ -234,7 +237,16 @@ impl Collective {
     /// Build from the `launch` env: `Comm` inside a launch tree,
     /// `InProcess` otherwise.
     pub fn from_env() -> Result<Self> {
-        Ok(match Communicator::from_env()? {
+        Self::from_env_with_dtype(None)
+    }
+
+    /// [`Self::from_env`] with the subcommand's own `--comm-dtype`
+    /// override applied **before** connect, so the dtype handshake
+    /// guards the lane the trainer will actually use. Every rank of a
+    /// launch world parses the identical argv, so the override is
+    /// SPMD-consistent by construction.
+    pub fn from_env_with_dtype(dtype_override: Option<crate::comm::WireDtype>) -> Result<Self> {
+        Ok(match Communicator::from_env_with(dtype_override)? {
             Some(comm) => Collective::Comm(comm),
             None => Collective::InProcess,
         })
@@ -282,6 +294,47 @@ impl Collective {
         Ok(total)
     }
 
+    /// All-reduce (mean) a whole step's worth of gradient slots in one
+    /// pipelined pass — `slots[k]` holds slot k's per-local-worker
+    /// shard vectors, exactly as [`Self::allreduce_mean_shards`] takes
+    /// them, and afterwards `slots[k][0]` holds slot k's global mean
+    /// (the rest are tree scratch). Returns the global shard count.
+    ///
+    /// Arithmetic is identical to calling `allreduce_mean_shards` on
+    /// each slot in order — bitwise, in both wire dtypes — but on the
+    /// `Comm` backend the *schedule* overlaps: while slot k's chunk
+    /// reduce runs on the kernel pool (on a helper thread), the
+    /// communicator is already driving slot k+1's ring exchange on the
+    /// sockets, with at most [`PIPELINE_WINDOW`] collectives in flight.
+    /// The socket schedule is a pure function of (world, slot lengths,
+    /// algorithm) — never of pool or arrival timing — so every rank
+    /// interleaves identically and determinism is untouched.
+    pub fn allreduce_mean_slots(&mut self, slots: &mut [Vec<Vec<f32>>]) -> Result<usize> {
+        let Some(first) = slots.first() else { return Ok(0) };
+        let n_local = first.len();
+        assert!(n_local >= 1, "each slot needs at least one local shard");
+        for g in slots.iter() {
+            assert_eq!(g.len(), n_local, "local shard count mismatch across slots");
+        }
+        let pool = crate::kernel::global();
+        match self {
+            Collective::InProcess => {
+                reduce_slots_local(&pool, slots, n_local);
+                Ok(n_local)
+            }
+            Collective::Comm(c) if c.world() == 1 => {
+                // a 1-rank world is the in-process run, bitwise
+                reduce_slots_local(&pool, slots, n_local);
+                Ok(n_local)
+            }
+            Collective::Comm(c) => {
+                let total = n_local * c.world();
+                pipeline_ring_slots(c, &pool, slots, 1.0 / total as f32)?;
+                Ok(total)
+            }
+        }
+    }
+
     /// Mean of a per-shard scalar sum (the step loss): `local_sum` is
     /// this rank's plain sequential sum over its `local_n` shards, the
     /// cross-rank fold uses the pairing tree, the division is by the
@@ -290,14 +343,17 @@ impl Collective {
     /// association is local-sums-then-rank-tree, which agrees with the
     /// in-process sequential sum only in value, not necessarily in
     /// bits (same power-of-two caveat as the enum docs — the *gradient*
-    /// path is what the bitwise checkpoint contract covers).
+    /// path is what the bitwise checkpoint contract covers). The scalar
+    /// is control-path traffic and always rides the f32 lane: rounding
+    /// a logged loss to bf16 would cost metric precision for a saving
+    /// of two bytes.
     pub fn allreduce_mean_scalar(&mut self, local_sum: f32, local_n: usize) -> Result<f32> {
         assert!(local_n >= 1);
         match self {
             Collective::InProcess => Ok(local_sum / local_n as f32),
             Collective::Comm(c) => {
                 let mut v = [local_sum];
-                c.allreduce_sum(&mut v)?;
+                c.allreduce_sum_f32_lane(&mut v)?;
                 Ok(v[0] / (local_n * c.world()) as f32)
             }
         }
@@ -337,6 +393,101 @@ impl Collective {
         }
         Ok(())
     }
+}
+
+/// Upper bound on ring collectives in flight inside
+/// [`Collective::allreduce_mean_slots`]: slot k's chunk reduce may
+/// still be running on the kernel pool while slot k+1's ring exchange
+/// is on the wire. Two is enough to hide the reduce latency (the
+/// schedule strictly alternates exchange/gather after warm-up) without
+/// holding more than one extra slot's chunk copies in memory.
+pub const PIPELINE_WINDOW: usize = 2;
+
+/// Serial local reduction: one pairing-tree sum + mean scale per slot
+/// (the in-process backend of [`Collective::allreduce_mean_slots`]).
+fn reduce_slots_local(pool: &KernelPool, slots: &mut [Vec<Vec<f32>>], n_local: usize) {
+    let inv = 1.0 / n_local as f32;
+    for g in slots.iter_mut() {
+        crate::kernel::tree_sum_vecs(pool, g);
+        crate::kernel::scale(pool, &mut g[0], inv);
+    }
+}
+
+/// Complete the oldest in-flight ring collective: take its reduced
+/// chunks from the helper thread (jobs complete in submission order),
+/// gather, and scale to the global mean.
+fn finish_oldest(
+    c: &mut Communicator,
+    pool: &KernelPool,
+    slots: &mut [Vec<Vec<f32>>],
+    inv: f32,
+    in_flight: &mut VecDeque<usize>,
+    done_rx: &mpsc::Receiver<(usize, RingPending)>,
+) -> Result<()> {
+    let j = in_flight.pop_front().expect("finish_oldest on an empty window");
+    let (k, pending) = done_rx.recv().expect("slot reducer thread died");
+    debug_assert_eq!(k, j, "reducer completed slots out of order");
+    c.ring_gather(pending, &mut slots[j][0])?;
+    crate::kernel::scale(pool, &mut slots[j][0], inv);
+    Ok(())
+}
+
+/// The slot-pipelined cross-rank schedule behind
+/// [`Collective::allreduce_mean_slots`]. Per slot: local shard reduce
+/// (pairing tree on the pool) → ring exchange (sockets) → chunk reduce
+/// (pool, on the helper thread, overlapped with the next slot's
+/// exchange) → ring gather (sockets) → scale. Slots the algorithm
+/// routes to the tree transport drain the window first and run whole,
+/// so the frame schedule every peer sees is the same pure function of
+/// (world, slot lengths, algorithm) on every rank.
+fn pipeline_ring_slots(
+    c: &mut Communicator,
+    pool: &Arc<KernelPool>,
+    slots: &mut [Vec<Vec<f32>>],
+    inv: f32,
+) -> Result<()> {
+    let algo = c.algorithm();
+    std::thread::scope(|scope| -> Result<()> {
+        let (job_tx, job_rx) = mpsc::channel::<(usize, RingPending)>();
+        let (done_tx, done_rx) = mpsc::channel::<(usize, RingPending)>();
+        let reduce_pool = Arc::clone(pool);
+        // chunk reduces run here so the caller can keep the sockets
+        // busy; `tree_sum_vecs` is bitwise-identical at any pool size,
+        // so moving it off-thread changes timing only
+        scope.spawn(move || {
+            for (k, mut pending) in job_rx {
+                pending.reduce(&reduce_pool);
+                if done_tx.send((k, pending)).is_err() {
+                    return; // caller bailed mid-pipeline
+                }
+            }
+        });
+        let mut in_flight: VecDeque<usize> = VecDeque::new();
+        for k in 0..slots.len() {
+            crate::kernel::tree_sum_vecs(pool, &mut slots[k]);
+            // one routing predicate, shared with the serial
+            // `allreduce_sum_with` — serial ≡ pipelined depends on it
+            if algo.routes_to_ring(slots[k][0].len()) {
+                let pending = c.ring_exchange(&mut slots[k][0])?;
+                job_tx.send((k, pending)).expect("slot reducer thread died");
+                in_flight.push_back(k);
+                if in_flight.len() >= PIPELINE_WINDOW {
+                    finish_oldest(c, pool, slots, inv, &mut in_flight, &done_rx)?;
+                }
+            } else {
+                while !in_flight.is_empty() {
+                    finish_oldest(c, pool, slots, inv, &mut in_flight, &done_rx)?;
+                }
+                c.allreduce_sum_with(Algorithm::Tree, &mut slots[k][0])?;
+                crate::kernel::scale(pool, &mut slots[k][0], inv);
+            }
+        }
+        drop(job_tx);
+        while !in_flight.is_empty() {
+            finish_oldest(c, pool, slots, inv, &mut in_flight, &done_rx)?;
+        }
+        Ok(())
+    })
 }
 
 #[cfg(test)]

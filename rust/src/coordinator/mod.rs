@@ -22,7 +22,12 @@
 //!   [`Collective`] backend switch that folds per-rank gradient
 //!   partials across a `lowrank-sge launch` world through
 //!   [`crate::comm`]. One pairing-tree combine order everywhere, so
-//!   in-process, 1-rank, and W-rank runs are bitwise identical.
+//!   in-process, 1-rank, and W-rank runs are bitwise identical; the
+//!   multi-slot path (`Collective::allreduce_mean_slots`) pipelines the
+//!   per-slot ring collectives — chunk reduce on the kernel pool
+//!   overlapped with the next slot's exchange, window-bounded — with
+//!   the identical arithmetic, and honours the comm layer's f32/bf16
+//!   wire-dtype lane.
 //! * [`metrics`] — step records and CSV emission for the figure
 //!   harnesses.
 //!
@@ -41,7 +46,10 @@ mod metrics;
 mod pretrain;
 mod subspace;
 
-pub use ddp::{allreduce_mean, allreduce_mean_with, BatchProducer, Collective, Shard, LEADER_RANK};
+pub use ddp::{
+    allreduce_mean, allreduce_mean_with, BatchProducer, Collective, Shard, LEADER_RANK,
+    PIPELINE_WINDOW,
+};
 pub use finetune::{FinetuneConfig, FinetuneMethod, FinetuneResult, FinetuneTrainer};
 pub use metrics::{MetricsLog, StepRecord};
 pub use pretrain::{PretrainConfig, PretrainResult, PretrainTrainer};

@@ -7,7 +7,11 @@
 //! shard, all-reduces the gradients through the configured
 //! [`Collective`] backend (in-process pairing tree, or the
 //! [`crate::comm`] ring/tree collectives when this trainer is one rank
-//! of a `lowrank-sge launch` world — same combine order, bitwise),
+//! of a `lowrank-sge launch` world — same combine order, bitwise; the
+//! per-slot collectives run through the slot pipeline of
+//! [`Collective::allreduce_mean_slots`], overlapping each slot's chunk
+//! reduce with the next slot's ring exchange, and optionally compress
+//! the wire to bf16 via `--comm-dtype`),
 //! clips, and hands the reduced gradients to the shared pipeline —
 //! [`crate::estimator::engine::GradEstimator`] — which fans the
 //! subspace-B and full-rank (embeddings/norms) Adam steps out across
@@ -383,8 +387,7 @@ impl PretrainTrainer {
             let n_shards = shards.len();
             let n_b = self.db_outs.len();
             let n_f = self.f_douts.len();
-            let mut db_acc: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_b];
-            let mut df_acc: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_f];
+            let mut groups: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_b + n_f];
             let mut loss_acc = 0.0f32;
             for shard in shards {
                 let inputs = self.build_inputs(shard.tokens);
@@ -392,23 +395,22 @@ impl PretrainTrainer {
                 drop(inputs);
                 loss_acc += out[0].scalar()?;
                 for (si, &oi) in self.db_outs.iter().enumerate() {
-                    db_acc[si].push(out[oi].as_f32()?.to_vec());
+                    groups[si].push(out[oi].as_f32()?.to_vec());
                 }
                 for (fi, &oi) in self.f_douts.iter().enumerate() {
-                    df_acc[fi].push(out[oi].as_f32()?.to_vec());
+                    groups[n_b + fi].push(out[oi].as_f32()?.to_vec());
                 }
             }
             let loss = self.collective.allreduce_mean_scalar(loss_acc, n_shards)?;
-            let mut db: Vec<Vec<f32>> = Vec::with_capacity(n_b);
-            for mut g in db_acc {
-                self.collective.allreduce_mean_shards(&mut g)?;
-                db.push(g.swap_remove(0));
-            }
-            let mut df: Vec<Vec<f32>> = Vec::with_capacity(n_f);
-            for mut g in df_acc {
-                self.collective.allreduce_mean_shards(&mut g)?;
-                df.push(g.swap_remove(0));
-            }
+            // one slot-pipelined pass over every dB and full-rank slot:
+            // while slot k's chunk reduce runs on the kernel pool, slot
+            // k+1's ring exchange is already on the wire — arithmetic
+            // (and therefore every checkpoint bit) identical to the old
+            // sequential per-slot loop
+            self.collective.allreduce_mean_slots(&mut groups)?;
+            let mut reduced = groups.into_iter().map(|mut g| g.swap_remove(0));
+            let mut db: Vec<Vec<f32>> = reduced.by_ref().take(n_b).collect();
+            let mut df: Vec<Vec<f32>> = reduced.collect();
 
             // global-norm clip across all gradients (paper: 1.0)
             let mut views: Vec<&mut [f32]> = Vec::with_capacity(n_b + n_f);

@@ -25,13 +25,20 @@
 //!   experiment harnesses ([`exp`]).
 //! * **L3 comm layer** — [`comm`]: the multi-process collective
 //!   communication subsystem behind `lowrank-sge launch --nproc N`:
-//!   file/env rendezvous with atomic rank claims, TCP/Unix-socket
-//!   transport with timeouts, a CRC-verified wire format in the
-//!   checkpoint codec's framing, and chunked-ring + pairing-tree
-//!   collectives whose combine order is a pure function of (world,
-//!   length) — matching the in-process all-reduce, so distributed
-//!   gradients (and checkpoints) are bitwise identical to the
-//!   single-process run.
+//!   file/env rendezvous with atomic rank claims and a per-launch run
+//!   token (stale dirs fail loudly), TCP/Unix-socket transport with
+//!   timeouts, a CRC-verified wire format in the checkpoint codec's
+//!   framing with an f32/bf16 **dtype lane** (`--comm-dtype` — bf16
+//!   halves collective bandwidth; contributions round once at the
+//!   source, arithmetic stays f32 on the kernel pool), and chunked-ring
+//!   + pairing-tree collectives whose combine order is a pure function
+//!   of (world, length) — on the f32 lane matching the in-process
+//!   all-reduce, so distributed gradients (and checkpoints) are bitwise
+//!   identical to the single-process run, and on either lane ring ≡
+//!   tree bitwise. The ring is phase-split (exchange / chunk reduce /
+//!   gather) so the trainer's slot pipeline
+//!   ([`coordinator::Collective::allreduce_mean_slots`]) overlaps slot
+//!   k's reduce on the pool with slot k+1's exchange on the sockets.
 //! * **L3 compute substrate** — [`kernel`]: the one Scalar-generic
 //!   (f32/f64) dense compute layer — blocked GEMM, AXPY/scale,
 //!   deterministic reductions, strided panel primitives — running on a

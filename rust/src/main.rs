@@ -15,8 +15,10 @@
 //!                           [--keep-last K] [--resume [latest|<step>]] …
 //! lowrank-sge launch        --nproc N [--transport unix|tcp] [--rdzv-dir D]
 //!                           [--comm-timeout-ms T] [--algo ring|tree|auto]
+//!                           [--comm-dtype f32|bf16]
 //!                           <subcommand …>                   # multi-process DDP
-//! lowrank-sge comm-check    [--len N]                        # collective self-test
+//! lowrank-sge comm-check    [--len N] [--comm-dtype f32|bf16]
+//!                           [--fail-rank R]                  # collective self-test
 //! lowrank-sge inspect                                        # list artifacts
 //! ```
 //!
@@ -30,9 +32,17 @@
 //! in-process path, so `launch --nproc W` with one worker per rank
 //! writes the bitwise-identical rank-0 checkpoint as a single-process
 //! `--workers W` run. Only the leader rank (rank 0) writes checkpoints
-//! and metrics — enforced at runtime. `comm-check` runs ring and tree
+//! and metrics — enforced at runtime. `--comm-dtype bf16` (or
+//! `LOWRANK_COMM_DTYPE=bf16`) compresses the all-reduce payloads to
+//! bfloat16 on the wire — half the collective bandwidth; reduction
+//! arithmetic stays f32, ring ≡ tree stays bitwise, and mixing dtypes
+//! across ranks fails loudly at connect. The per-slot collectives are
+//! pipelined: slot k's chunk reduce on the kernel pool overlaps slot
+//! k+1's ring exchange on the sockets. `comm-check` runs ring and tree
 //! all-reduces plus broadcast/barrier/all-gather inside a launch world
-//! and verifies every rank got identical bits.
+//! and verifies every rank got identical bits (in whichever wire dtype
+//! is configured); its `--fail-rank R` makes rank R exit 1 before
+//! rendezvous — fault injection for the runner's fast-failure path.
 //!
 //! Parallelism: `--threads T` (every subcommand; config keys
 //! `pretrain.threads` / `finetune.threads`) sizes the kernel compute
@@ -58,7 +68,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use lowrank_sge::ckpt::{CkptOptions, ResumeSpec};
-use lowrank_sge::comm::{self, Algorithm, TransportKind};
+use lowrank_sge::comm::{self, Algorithm, TransportKind, WireDtype};
 use lowrank_sge::config::{ArgMap, ConfigFile};
 use lowrank_sge::coordinator::{
     Collective, FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig, PretrainTrainer,
@@ -160,6 +170,12 @@ fn cmd_launch(argv: &[String]) -> Result<()> {
                 opts.algo = Some(algo);
                 i += 2;
             }
+            "--comm-dtype" => {
+                let dtype = value(argv, i, "--comm-dtype")?;
+                WireDtype::parse(&dtype)?; // validate before handing to children
+                opts.comm_dtype = Some(dtype);
+                i += 2;
+            }
             other if other.starts_with("--") => {
                 bail!("launch: unknown runner flag {other:?} (child flags go after the subcommand)")
             }
@@ -176,10 +192,34 @@ fn cmd_launch(argv: &[String]) -> Result<()> {
 
 /// Collective self-test: inside a `launch` world, all-reduce a
 /// deterministic per-rank payload with both algorithms, cross-check the
-/// results bitwise across ranks, and exercise broadcast + barrier.
+/// results bitwise across ranks, and exercise broadcast + barrier. The
+/// ring ≡ tree bitwise check holds in both wire dtypes — under bf16 it
+/// pins the compressed-lane determinism contract.
 fn cmd_comm_check(args: &ArgMap) -> Result<()> {
     let len = args.usize_or("len", 100_003);
-    let Some(mut comm) = comm::Communicator::from_env()? else {
+    // fault injection for the launch runner's fast-failure path: the
+    // nominated rank dies before it ever touches the rendezvous. The
+    // value is validated (numeric, in range) so a typo'd rank is a
+    // loud error on every rank, never silently-disabled injection.
+    if let Some(spec) = args.get("fail-rank") {
+        let fail: usize = spec
+            .parse()
+            .with_context(|| format!("comm-check: --fail-rank {spec:?} must be a rank index"))?;
+        if let Ok(w) = std::env::var("LOWRANK_COMM_WORLD") {
+            let world: usize = w.parse().context("LOWRANK_COMM_WORLD must be an integer")?;
+            if fail >= world {
+                bail!("comm-check: --fail-rank {fail} is out of range for world size {world}");
+            }
+        }
+        let me = std::env::var("LOWRANK_COMM_RANK").ok().and_then(|s| s.parse::<usize>().ok());
+        if me == Some(fail) {
+            eprintln!("comm-check: rank {fail} failing on request (--fail-rank)");
+            std::process::exit(1);
+        }
+    }
+    // the override is threaded into connect (same argv on every rank ⇒
+    // same lane), so the handshake verifies the lane actually used
+    let Some(mut comm) = comm::Communicator::from_env_with(args.comm_dtype()?)? else {
         bail!(
             "comm-check needs the launch environment (LOWRANK_COMM_RDZV …); \
              run it as `lowrank-sge launch --nproc N comm-check`"
@@ -242,7 +282,10 @@ fn cmd_comm_check(args: &ArgMap) -> Result<()> {
         }
     }
     comm.barrier()?;
-    println!("comm-check ok rank={rank} world={world} len={len} crc={crc:08x} (ring==tree)");
+    println!(
+        "comm-check ok rank={rank} world={world} len={len} dtype={} crc={crc:08x} (ring==tree)",
+        comm.wire_dtype().name()
+    );
     Ok(())
 }
 
@@ -432,8 +475,11 @@ fn ckpt_options(args: &ArgMap, file: &ConfigFile, section: &str) -> Result<CkptO
 fn cmd_pretrain(args: &ArgMap) -> Result<()> {
     let dir = artifacts_dir();
     let mut rt = Runtime::new(&dir)?;
-    // one rank of a `launch` world, or the classic in-process topology
-    let collective = Collective::from_env().context("joining the comm collective group")?;
+    // one rank of a `launch` world, or the classic in-process topology;
+    // `--comm-dtype` is threaded into connect so the dtype handshake
+    // guards the lane the trainer will actually use
+    let collective = Collective::from_env_with_dtype(args.comm_dtype()?)
+        .context("joining the comm collective group")?;
     let world = collective.world();
     let leader = collective.is_leader();
     // defaults ← config file (--config path, [pretrain] section) ← CLI

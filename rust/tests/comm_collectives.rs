@@ -1,9 +1,21 @@
 //! The comm determinism contract, pinned down:
 //!
-//! * ring ≡ tree ≡ in-process `allreduce_mean_with`, **bitwise**, at
-//!   world ∈ {1, 2, 3, 4}, for prime payload lengths (uneven ring
-//!   chunks), multi-frame payloads, and degenerate lengths (empty ring
-//!   chunks, scalars);
+//! * ring ≡ tree ≡ the reference reduction, **bitwise**, at world ∈
+//!   {1, 2, 3, 4}, for prime payload lengths (uneven ring chunks),
+//!   multi-frame payloads, and degenerate lengths (empty ring chunks,
+//!   scalars) — in whichever wire dtype `LOWRANK_COMM_DTYPE` selects
+//!   (the CI matrix runs this suite under both `f32` and `bf16`). On
+//!   the f32 lane the reference *is* the in-process
+//!   `allreduce_mean_with`; on the bf16 lane it is the documented
+//!   quantize-at-source model: round every contribution to the bf16
+//!   grid, sum exactly in f32 with the same pairing tree, round the
+//!   total once;
+//! * the compressed lane explicitly: bf16 ring ≡ bf16 tree bitwise at
+//!   world ∈ {2, 4}, and a world whose ranks disagree on the wire
+//!   dtype is rejected in the connect handshake;
+//! * the slot pipeline (`Collective::allreduce_mean_slots`) is
+//!   bitwise-identical to the serial per-slot loop, including
+//!   mixed ring/tree slot schedules;
 //! * results are independent of message-arrival timing (rank-staggered
 //!   delays change nothing);
 //! * faults are loud and bounded: a truncated frame is a CRC/EOF error,
@@ -19,7 +31,7 @@ use std::time::{Duration, Instant};
 
 use lowrank_sge::ckpt::{load_checkpoint, save_checkpoint, Layout, ResumeSpec, StateDict};
 use lowrank_sge::comm::{
-    wire, Algorithm, CommConfig, Communicator, Conn, Listener, TransportKind,
+    wire, Algorithm, CommConfig, Communicator, Conn, Listener, TransportKind, WireDtype,
 };
 use lowrank_sge::coordinator::{allreduce_mean_with, Collective, LEADER_RANK};
 use lowrank_sge::kernel::KernelPool;
@@ -36,9 +48,40 @@ fn fresh_dir(tag: &str) -> PathBuf {
     dir
 }
 
-/// Run `f(communicator)` on `world` ranks (threads), full mesh, and
-/// return the per-rank results in rank order.
-fn spawn_world<T, F>(world: usize, transport: TransportKind, tag: &str, f: F) -> Vec<T>
+/// The suite-wide wire dtype: the CI matrix sets `LOWRANK_COMM_DTYPE`
+/// to run every collective test compressed and uncompressed.
+fn env_dtype() -> WireDtype {
+    WireDtype::from_env().expect("LOWRANK_COMM_DTYPE must be f32 or bf16")
+}
+
+fn test_config(
+    world: usize,
+    rank: Option<usize>,
+    transport: TransportKind,
+    dir: PathBuf,
+    dtype: WireDtype,
+) -> CommConfig {
+    CommConfig {
+        world,
+        rank,
+        transport,
+        rdzv_dir: dir,
+        timeout: Duration::from_secs(30),
+        algo: Algorithm::Auto,
+        wire_dtype: dtype,
+        run_token: None,
+    }
+}
+
+/// Run `f(communicator)` on `world` ranks (threads), full mesh, in the
+/// given wire dtype, and return the per-rank results in rank order.
+fn spawn_world_dtype<T, F>(
+    world: usize,
+    transport: TransportKind,
+    tag: &str,
+    dtype: WireDtype,
+    f: F,
+) -> Vec<T>
 where
     T: Send,
     F: Fn(Communicator) -> T + Send + Sync,
@@ -50,20 +93,22 @@ where
                 let dir = dir.clone();
                 let f = &f;
                 scope.spawn(move || {
-                    let cfg = CommConfig {
-                        world,
-                        rank: Some(rank),
-                        transport,
-                        rdzv_dir: dir,
-                        timeout: Duration::from_secs(30),
-                        algo: Algorithm::Auto,
-                    };
+                    let cfg = test_config(world, Some(rank), transport, dir, dtype);
                     f(Communicator::connect(&cfg).expect("communicator setup"))
                 })
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
     })
+}
+
+/// [`spawn_world_dtype`] in the suite-wide (env-selected) dtype.
+fn spawn_world<T, F>(world: usize, transport: TransportKind, tag: &str, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Communicator) -> T + Send + Sync,
+{
+    spawn_world_dtype(world, transport, tag, env_dtype(), f)
 }
 
 /// Deterministic per-rank payload (varied sign/magnitude so float
@@ -80,11 +125,29 @@ fn gen(rank: usize, len: usize) -> Vec<f32> {
         .collect()
 }
 
-/// The in-process reference: the pairing-tree mean over one shard per
-/// rank, on a serial pool.
-fn in_process_reference(world: usize, len: usize) -> Vec<f32> {
-    let mut grads: Vec<Vec<f32>> = (0..world).map(|r| gen(r, len)).collect();
-    allreduce_mean_with(&KernelPool::new(1), &mut grads);
+/// The semantic model of `allreduce_mean` in either lane. f32: the
+/// in-process pairing-tree mean, verbatim. bf16 (and world > 1): round
+/// every contribution to the bf16 grid, sum in exact f32 with the same
+/// pairing tree in rank order, round the total once, scale. At
+/// world == 1 every collective is the identity, so no rounding in
+/// either lane.
+fn reference_mean(world: usize, len: usize, dtype: WireDtype) -> Vec<f32> {
+    let quantized = dtype == WireDtype::Bf16 && world > 1;
+    let mut grads: Vec<Vec<f32>> = (0..world)
+        .map(|r| {
+            let mut g = gen(r, len);
+            if quantized {
+                wire::quantize_bf16(&mut g);
+            }
+            g
+        })
+        .collect();
+    let pool = KernelPool::new(1);
+    lowrank_sge::kernel::tree_sum_vecs(&pool, &mut grads);
+    if quantized {
+        wire::quantize_bf16(&mut grads[0]);
+    }
+    lowrank_sge::kernel::scale(&pool, &mut grads[0], 1.0 / world as f32);
     grads.swap_remove(0)
 }
 
@@ -96,15 +159,16 @@ fn assert_bitwise(a: &[f32], b: &[f32], what: &str) {
 }
 
 #[test]
-fn ring_and_tree_match_in_process_bitwise() {
+fn ring_and_tree_match_the_reference_bitwise() {
     // prime lengths (uneven ring chunks), a multi-frame length
     // (> 65536-element chunks at world 2), and non-power-of-two worlds
+    let dtype = env_dtype();
     for world in [1usize, 2, 3, 4] {
         for &len in &[13usize, 10_007, 150_001] {
             if len == 150_001 && world > 2 {
                 continue; // multi-frame coverage needs only one world size
             }
-            let expected = in_process_reference(world, len);
+            let expected = reference_mean(world, len, dtype);
             for algo in [Algorithm::Ring, Algorithm::Tree] {
                 let results = spawn_world(
                     world,
@@ -122,7 +186,11 @@ fn ring_and_tree_match_in_process_bitwise() {
                     assert_bitwise(
                         got,
                         &expected,
-                        &format!("{} world={world} len={len} rank={rank}", algo.name()),
+                        &format!(
+                            "{} world={world} len={len} rank={rank} dtype={}",
+                            algo.name(),
+                            dtype.name()
+                        ),
                     );
                 }
             }
@@ -131,12 +199,198 @@ fn ring_and_tree_match_in_process_bitwise() {
 }
 
 #[test]
+fn f32_lane_matches_in_process_exactly() {
+    // the uncompressed lane's stronger contract: the cross-process
+    // reduction is the in-process `allreduce_mean_with`, bitwise —
+    // pinned in f32 explicitly so it holds under the bf16 CI matrix too
+    let world = 3;
+    let len = 10_007;
+    let mut grads: Vec<Vec<f32>> = (0..world).map(|r| gen(r, len)).collect();
+    allreduce_mean_with(&KernelPool::new(1), &mut grads);
+    let expected = grads.swap_remove(0);
+    for algo in [Algorithm::Ring, Algorithm::Tree] {
+        let results = spawn_world_dtype(
+            world,
+            TransportKind::default_for_host(),
+            &format!("f32lane_{}", algo.name()),
+            WireDtype::F32,
+            |mut comm| {
+                let mut data = gen(comm.rank(), len);
+                comm.allreduce_sum_with(algo, &mut data).unwrap();
+                let pool = KernelPool::new(1);
+                lowrank_sge::kernel::scale(&pool, &mut data, 1.0 / comm.world() as f32);
+                data
+            },
+        );
+        for got in &results {
+            assert_bitwise(got, &expected, &format!("f32 lane {}", algo.name()));
+        }
+    }
+}
+
+#[test]
+fn compressed_ring_equals_compressed_tree_bitwise() {
+    // the bf16 acceptance criterion, explicit at world ∈ {2, 4}: both
+    // algorithms, every rank, one bit pattern — and that pattern is the
+    // documented quantize-at-source model
+    for world in [2usize, 4] {
+        for &len in &[13usize, 4099, 70_001] {
+            let expected = reference_mean(world, len, WireDtype::Bf16);
+            let mut per_algo = Vec::new();
+            for algo in [Algorithm::Ring, Algorithm::Tree] {
+                let mut results = spawn_world_dtype(
+                    world,
+                    TransportKind::default_for_host(),
+                    &format!("bf16_{world}_{len}_{}", algo.name()),
+                    WireDtype::Bf16,
+                    |mut comm| {
+                        let mut data = gen(comm.rank(), len);
+                        comm.allreduce_sum_with(algo, &mut data).unwrap();
+                        let pool = KernelPool::new(1);
+                        lowrank_sge::kernel::scale(&pool, &mut data, 1.0 / comm.world() as f32);
+                        data
+                    },
+                );
+                for (rank, got) in results.iter().enumerate() {
+                    assert_bitwise(
+                        got,
+                        &expected,
+                        &format!("bf16 {} world={world} len={len} rank={rank}", algo.name()),
+                    );
+                    // every value really lives on the bf16 grid (scaled
+                    // by 1/world, a power of two at these worlds — an
+                    // exact exponent shift that preserves grid-ness)
+                    for (i, v) in got.iter().enumerate() {
+                        assert_eq!(
+                            v.to_bits() & 0xFFFF,
+                            0,
+                            "element {i} of the bf16 reduction carries low mantissa bits"
+                        );
+                    }
+                }
+                per_algo.push(results.swap_remove(0));
+            }
+            assert_bitwise(
+                &per_algo[0],
+                &per_algo[1],
+                &format!("bf16 ring vs tree world={world} len={len}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn loss_scalar_rides_the_f32_lane_even_under_bf16() {
+    // the step-loss mean is control-path traffic: values off the bf16
+    // grid must survive a compressed world bit-exactly
+    let a = 1.234_567_8f32;
+    let b = 2.718_281_8f32;
+    let results = spawn_world_dtype(
+        2,
+        TransportKind::default_for_host(),
+        "scalar_f32lane",
+        WireDtype::Bf16,
+        |comm| {
+            let mut collective = Collective::Comm(comm);
+            let local = if collective.rank() == 0 { a } else { b };
+            collective.allreduce_mean_scalar(local, 1).unwrap()
+        },
+    );
+    let expected = (a + b) / 2.0;
+    for r in results {
+        assert_eq!(r.to_bits(), expected.to_bits(), "loss scalar was compressed");
+    }
+}
+
+#[test]
+fn mixed_dtype_worlds_are_rejected_in_the_handshake() {
+    let dir = fresh_dir("mixed_dtype");
+    let dir1 = dir.clone();
+    let errs: Vec<String> = std::thread::scope(|scope| {
+        let r0 = scope.spawn(|| {
+            let cfg = test_config(
+                2,
+                Some(0),
+                TransportKind::default_for_host(),
+                dir,
+                WireDtype::F32,
+            );
+            format!("{:#}", Communicator::connect(&cfg).map(|_| ()).unwrap_err())
+        });
+        let r1 = scope.spawn(|| {
+            let mut cfg = test_config(
+                2,
+                Some(1),
+                TransportKind::default_for_host(),
+                dir1,
+                WireDtype::Bf16,
+            );
+            cfg.timeout = Duration::from_secs(5);
+            format!("{:#}", Communicator::connect(&cfg).map(|_| ()).unwrap_err())
+        });
+        vec![r0.join().unwrap(), r1.join().unwrap()]
+    });
+    // the accepting side (rank 0) names the mismatch; the dialing side
+    // fails loudly too (mismatch ack, or its peer hanging up on it)
+    assert!(
+        errs[0].contains("dtype mismatch") || errs[1].contains("dtype mismatch"),
+        "no rank reported the dtype mismatch: {errs:?}"
+    );
+}
+
+#[test]
+fn pipelined_slots_match_the_serial_loop_bitwise() {
+    // mixed slot lengths: under Auto the 13/4099 slots route to the
+    // tree (draining the pipeline window) and the rest to the ring,
+    // including a multi-frame slot — the schedule every rank runs is
+    // still a pure function of the lengths
+    let world = 2;
+    let shards_per_rank = 2;
+    let lens: &[usize] = &[10_007, 13, 70_001, 8192, 4099, 9001];
+    let make_slots = |rank: usize| -> Vec<Vec<Vec<f32>>> {
+        lens.iter()
+            .enumerate()
+            .map(|(k, &len)| {
+                (0..shards_per_rank)
+                    .map(|s| gen(rank * shards_per_rank + s + 31 * k, len))
+                    .collect()
+            })
+            .collect()
+    };
+    let serial = spawn_world(world, TransportKind::default_for_host(), "slots_serial", |comm| {
+        let mut collective = Collective::Comm(comm);
+        let mut slots = make_slots(collective.rank());
+        let mut out = Vec::new();
+        for g in slots.iter_mut() {
+            let total = collective.allreduce_mean_shards(g).unwrap();
+            assert_eq!(total, shards_per_rank * world);
+            out.push(g.swap_remove(0));
+        }
+        out
+    });
+    let pipelined =
+        spawn_world(world, TransportKind::default_for_host(), "slots_pipe", |comm| {
+            let mut collective = Collective::Comm(comm);
+            let mut slots = make_slots(collective.rank());
+            let total = collective.allreduce_mean_slots(&mut slots).unwrap();
+            assert_eq!(total, shards_per_rank * world);
+            slots.into_iter().map(|mut g| g.swap_remove(0)).collect::<Vec<_>>()
+        });
+    for rank in 0..world {
+        for (k, (s, p)) in serial[rank].iter().zip(&pipelined[rank]).enumerate() {
+            assert_bitwise(s, p, &format!("slot {k} rank {rank} (pipelined vs serial)"));
+        }
+    }
+}
+
+#[test]
 fn degenerate_lengths_reduce_correctly() {
     // world > len: some ring chunks are empty; len == 1 is the scalar
     // (loss) path
+    let dtype = env_dtype();
     for &len in &[1usize, 3] {
         let world = 4;
-        let expected = in_process_reference(world, len);
+        let expected = reference_mean(world, len, dtype);
         for algo in [Algorithm::Ring, Algorithm::Tree] {
             let results = spawn_world(
                 world,
@@ -161,7 +415,7 @@ fn degenerate_lengths_reduce_correctly() {
 fn results_are_independent_of_arrival_timing() {
     let world = 3;
     let len = 4099; // prime, tree territory under Auto
-    let expected = in_process_reference(world, len);
+    let expected = reference_mean(world, len, env_dtype());
     for round in 0..3 {
         let results = spawn_world(
             world,
@@ -194,7 +448,7 @@ fn broadcast_all_gather_and_barrier_work() {
     let world = 3;
     let len = 257;
     let results = spawn_world(world, TransportKind::default_for_host(), "bcast", |mut comm| {
-        // broadcast from a non-zero root
+        // broadcast from a non-zero root (always the f32 lane)
         let mut data = gen(comm.rank(), len);
         comm.broadcast(&mut data, 1).unwrap();
         // all-gather every rank's original payload
@@ -234,19 +488,20 @@ fn auto_rank_claims_are_distinct() {
             .map(|_| {
                 let dir = dir.clone();
                 scope.spawn(move || {
-                    let cfg = CommConfig {
+                    // claim the lowest free slot
+                    let cfg = test_config(
                         world,
-                        rank: None, // claim the lowest free slot
-                        transport: TransportKind::default_for_host(),
-                        rdzv_dir: dir,
-                        timeout: Duration::from_secs(30),
-                        algo: Algorithm::Auto,
-                    };
+                        None,
+                        TransportKind::default_for_host(),
+                        dir,
+                        env_dtype(),
+                    );
                     let mut comm = Communicator::connect(&cfg).expect("auto-rank setup");
-                    // the group must be fully functional
+                    // the group must be fully functional (1 + 2 + 3 is
+                    // exact on the bf16 grid, so this holds in both lanes)
                     let mut v = [comm.rank() as f32 + 1.0];
                     comm.allreduce_sum_with(Algorithm::Tree, &mut v).unwrap();
-                    assert_eq!(v[0], 6.0); // 1 + 2 + 3
+                    assert_eq!(v[0], 6.0);
                     comm.rank()
                 })
             })
@@ -267,7 +522,9 @@ fn truncated_frame_is_a_crc_or_eof_error_not_a_hang() {
     let sender = std::thread::spawn(move || {
         let conn = Conn::connect(&addr, deadline, io).unwrap();
         // a valid frame body, corrupted in the middle, length prefix intact
-        let mut body = wire::encode_body(wire::Kind::Data, 1, 0, &[1.0, 2.0, 3.0, 4.0]);
+        let mut body =
+            wire::encode_body(wire::Kind::Data, 1, 0, &[1.0, 2.0, 3.0, 4.0], WireDtype::F32)
+                .unwrap();
         let mid = body.len() / 2;
         body[mid] ^= 0xFF;
         conn.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
@@ -294,13 +551,11 @@ fn truncated_frame_is_a_crc_or_eof_error_not_a_hang() {
 #[test]
 fn dead_peer_surfaces_as_an_error_within_the_timeout() {
     let dir = fresh_dir("deadpeer");
-    let make_cfg = |rank: usize, dir: &PathBuf| CommConfig {
-        world: 2,
-        rank: Some(rank),
-        transport: TransportKind::Tcp,
-        rdzv_dir: dir.clone(),
-        timeout: Duration::from_secs(2),
-        algo: Algorithm::Tree,
+    let make_cfg = |rank: usize, dir: &PathBuf| {
+        let mut cfg = test_config(2, Some(rank), TransportKind::Tcp, dir.clone(), env_dtype());
+        cfg.timeout = Duration::from_secs(2);
+        cfg.algo = Algorithm::Tree;
+        cfg
     };
     let dir1 = dir.clone();
     let quitter = std::thread::spawn(move || {
@@ -357,9 +612,10 @@ fn leader_rank_discipline_world_two() {
 
 #[test]
 fn gradient_averaging_matches_in_process_through_the_collective() {
-    // the trainer-level contract: 2 ranks × 1 shard ≡ 1 process × 2
-    // shards, through Collective::allreduce_mean_shards and the scalar
-    // loss path
+    // the trainer-level f32 contract: 2 ranks × 1 shard ≡ 1 process ×
+    // 2 shards, through Collective::allreduce_mean_shards and the
+    // scalar loss path (pinned to the f32 lane — in-process parity is
+    // exactly what compression trades away)
     let len = 10_007;
     let mut reference: Vec<Vec<f32>> = (0..2).map(|r| gen(r, len)).collect();
     let mut in_proc = Collective::in_process();
@@ -368,14 +624,20 @@ fn gradient_averaging_matches_in_process_through_the_collective() {
     let expected = reference.swap_remove(0);
     let expected_loss = in_proc.allreduce_mean_scalar(1.25 + 3.5, 2).unwrap();
 
-    let results = spawn_world(2, TransportKind::default_for_host(), "trainer_gate", |comm| {
-        let mut collective = Collective::Comm(comm);
-        let mut grads = vec![gen(collective.rank(), len)];
-        let total = collective.allreduce_mean_shards(&mut grads).unwrap();
-        let local_loss = if collective.rank() == 0 { 1.25f32 } else { 3.5f32 };
-        let loss = collective.allreduce_mean_scalar(local_loss, 1).unwrap();
-        (total, grads.swap_remove(0), loss)
-    });
+    let results = spawn_world_dtype(
+        2,
+        TransportKind::default_for_host(),
+        "trainer_gate",
+        WireDtype::F32,
+        |comm| {
+            let mut collective = Collective::Comm(comm);
+            let mut grads = vec![gen(collective.rank(), len)];
+            let total = collective.allreduce_mean_shards(&mut grads).unwrap();
+            let local_loss = if collective.rank() == 0 { 1.25f32 } else { 3.5f32 };
+            let loss = collective.allreduce_mean_scalar(local_loss, 1).unwrap();
+            (total, grads.swap_remove(0), loss)
+        },
+    );
     for (total, grad, loss) in results {
         assert_eq!(total, 2);
         assert_bitwise(&grad, &expected, "collective gradient mean");

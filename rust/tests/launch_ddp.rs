@@ -2,15 +2,21 @@
 //!
 //! * a 2-rank `comm-check` smoke (no artifacts needed): both ranks
 //!   rendezvous, run ring + tree all-reduces, and report the identical
-//!   result CRC;
-//! * failure propagation: a failing child makes `launch` exit non-zero;
+//!   result CRC — once in the suite dtype and once forced to bf16 via
+//!   `--comm-dtype` (the compressed lane's ring ≡ tree check);
+//! * failure propagation: a failing child makes `launch` exit
+//!   non-zero, and — the fast-failure regression — a rank that dies
+//!   *before rendezvous* terminates the surviving ranks immediately
+//!   instead of letting them poll dead address files until the comm
+//!   timeout;
 //! * (artifact-gated) the acceptance criterion: `launch --nproc 2
 //!   pretrain --workers 2` writes a rank-0 checkpoint bitwise identical
 //!   to the single-process 2-shard in-process DDP run at the same
-//!   seeds.
+//!   seeds (an f32-lane contract, so the dtype is pinned there).
 
 use std::path::{Path, PathBuf};
 use std::process::Command;
+use std::time::{Duration, Instant};
 
 const BIN: &str = env!("CARGO_BIN_EXE_lowrank-sge");
 
@@ -60,12 +66,84 @@ fn launch_single_rank_comm_check_works() {
 }
 
 #[test]
+fn launch_two_rank_comm_check_agrees_bitwise_in_bf16() {
+    // `--comm-dtype bf16` rides the runner → env → from_env lane;
+    // comm-check's internal ring-vs-tree comparison then pins the
+    // compressed determinism contract inside a real launch world
+    let out = Command::new(BIN)
+        .args(["launch", "--nproc", "2", "--comm-dtype", "bf16", "comm-check", "--len", "9001"])
+        .output()
+        .expect("running the launch binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "launch failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    let crcs: Vec<&str> = stdout
+        .lines()
+        .filter(|l| l.contains("comm-check ok") && l.contains("dtype=bf16"))
+        .filter_map(|l| l.split("crc=").nth(1))
+        .map(|t| t.split_whitespace().next().unwrap())
+        .collect();
+    assert_eq!(crcs.len(), 2, "expected both ranks to report ok in bf16\nstdout:\n{stdout}");
+    assert_eq!(crcs[0], crcs[1], "bf16 ranks reduced to different bits\nstdout:\n{stdout}");
+}
+
+#[test]
+fn launch_rejects_a_bad_comm_dtype() {
+    let out = Command::new(BIN)
+        .args(["launch", "--nproc", "1", "--comm-dtype", "fp8", "comm-check"])
+        .output()
+        .expect("running the launch binary");
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("dtype"), "{stderr}");
+}
+
+#[test]
 fn launch_propagates_a_failing_child() {
     let out = Command::new(BIN)
         .args(["launch", "--nproc", "2", "definitely-not-a-subcommand"])
         .output()
         .expect("running the launch binary");
     assert!(!out.status.success(), "a failing child must fail the launch");
+}
+
+/// The fast-failure regression: rank 1 exits 1 *before rendezvous*
+/// (`comm-check --fail-rank 1`), while rank 0 sits in its address poll
+/// with a deliberately long comm timeout. The old runner waited on
+/// children strictly in rank order, so it blocked on rank 0 for the
+/// full timeout before even observing rank 1's exit; the fixed runner
+/// observes the failure in its poll sweep, kills rank 0, and returns
+/// rank 1's status immediately.
+#[test]
+fn launch_terminates_survivors_when_a_rank_dies_before_rendezvous() {
+    let t0 = Instant::now();
+    let out = Command::new(BIN)
+        .args([
+            "launch",
+            "--nproc",
+            "2",
+            "--comm-timeout-ms",
+            "120000",
+            "comm-check",
+            "--fail-rank",
+            "1",
+            "--len",
+            "64",
+        ])
+        .output()
+        .expect("running the launch binary");
+    let elapsed = t0.elapsed();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "the dead rank's exit code must propagate\n{stderr}");
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "runner took {elapsed:?} — it waited out the comm timeout instead of \
+         terminating the survivors\nstderr:\n{stderr}"
+    );
+    assert!(
+        stderr.contains("terminating") && stderr.contains("rank 1"),
+        "runner did not report the fast-failure path: {stderr}"
+    );
 }
 
 #[test]
@@ -116,6 +194,9 @@ fn launch_pretrain_checkpoint_matches_single_process_bitwise() {
         let out = Command::new(BIN)
             .args(&args)
             .env("LOWRANK_SGE_ARTIFACTS", artifacts_dir())
+            // single-process ≡ multi-process bitwise is the f32 lane's
+            // contract; pin it so the bf16 CI matrix can't skew this test
+            .env("LOWRANK_COMM_DTYPE", "f32")
             .output()
             .expect("running pretrain");
         assert!(
