@@ -18,7 +18,7 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
-use lowrank_sge::bench_util::{bench, fmt_time, log_csv, report};
+use lowrank_sge::bench_util::{bench, fmt_time, log_csv, report, JsonReport};
 use lowrank_sge::comm::{Algorithm, CommConfig, Communicator, TransportKind, WireDtype};
 use lowrank_sge::coordinator::{allreduce_mean_with, Collective};
 use lowrank_sge::kernel::KernelPool;
@@ -59,7 +59,7 @@ fn bench_config(
 }
 
 /// In-process baseline: one pairing-tree mean over `world` shards.
-fn bench_in_process(world: usize, len: usize, label: &str) {
+fn bench_in_process(world: usize, len: usize, label: &str, json: &mut JsonReport) {
     let pool = KernelPool::new(world.min(4));
     let mut grads: Vec<Vec<f32>> = (0..world).map(|r| payload(r, len)).collect();
     let stats = bench(3, 15, || {
@@ -69,12 +69,20 @@ fn bench_in_process(world: usize, len: usize, label: &str) {
     let name = format!("inproc_tree_{label}_w{world}");
     report(&name, &stats);
     log_csv("allreduce.csv", &name, &stats);
+    json.entry(&name, len, &stats, None);
 }
 
 /// Multi-process: `world` communicator threads over Unix sockets, each
 /// timing the same all-reduce; rank 0's stats are reported. Returns the
 /// effective MB/s (logical f32 payload volume over median time).
-fn bench_comm(world: usize, len: usize, label: &str, algo: Algorithm, dtype: WireDtype) -> f64 {
+fn bench_comm(
+    world: usize,
+    len: usize,
+    label: &str,
+    algo: Algorithm,
+    dtype: WireDtype,
+    json: &mut JsonReport,
+) -> f64 {
     let dir = fresh_dir();
     let stats = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..world)
@@ -110,6 +118,7 @@ fn bench_comm(world: usize, len: usize, label: &str, algo: Algorithm, dtype: Wir
         fmt_time(stats.median_s)
     );
     log_csv("allreduce.csv", &name, &stats);
+    json.entry(&name, len, &stats, Some(mbps));
     mbps
 }
 
@@ -118,7 +127,13 @@ fn bench_comm(world: usize, len: usize, label: &str, algo: Algorithm, dtype: Wir
 /// pipeline (`allreduce_mean_slots` — chunk reduce overlapped with the
 /// next slot's ring exchange). Ring is forced so the phase overlap is
 /// what's measured; rank 0's medians are compared.
-fn bench_slot_pipeline(world: usize, n_slots: usize, len: usize, dtype: WireDtype) {
+fn bench_slot_pipeline(
+    world: usize,
+    n_slots: usize,
+    len: usize,
+    dtype: WireDtype,
+    json: &mut JsonReport,
+) {
     let run = |pipelined: bool| -> lowrank_sge::bench_util::BenchStats {
         let dir = fresh_dir();
         std::thread::scope(|scope| {
@@ -168,9 +183,12 @@ fn bench_slot_pipeline(world: usize, n_slots: usize, len: usize, dtype: WireDtyp
     );
     log_csv("allreduce.csv", &name_s, &serial);
     log_csv("allreduce.csv", &name_p, &pipelined);
+    json.entry(&name_s, n_slots * len, &serial, None);
+    json.entry(&name_p, n_slots * len, &pipelined, None);
 }
 
 fn main() {
+    let mut json = JsonReport::new("allreduce");
     println!("== all-reduce: in-process tree vs multi-process ring/tree, f32 vs bf16 wire ==");
     // (label, elements): lifted-gradient m·r at the LLaMA-proxy scale
     // shapes (d_model 128/192/256 × rank 16), and a 1M full-grad point
@@ -184,15 +202,16 @@ fn main() {
     for &(label, len) in sizes {
         println!("-- {label}: {len} f32 ({} KiB) --", 4 * len / 1024);
         for world in [2usize, 4] {
-            bench_in_process(world, len, label);
-            let ring_f32 = bench_comm(world, len, label, Algorithm::Ring, WireDtype::F32);
-            let ring_bf16 = bench_comm(world, len, label, Algorithm::Ring, WireDtype::Bf16);
+            bench_in_process(world, len, label, &mut json);
+            let ring_f32 = bench_comm(world, len, label, Algorithm::Ring, WireDtype::F32, &mut json);
+            let ring_bf16 =
+                bench_comm(world, len, label, Algorithm::Ring, WireDtype::Bf16, &mut json);
             println!(
                 "    ring bf16/f32 bandwidth: {:.2}x (acceptance bar: >= 1.5x)",
                 ring_bf16 / ring_f32
             );
-            bench_comm(world, len, label, Algorithm::Tree, WireDtype::F32);
-            bench_comm(world, len, label, Algorithm::Tree, WireDtype::Bf16);
+            bench_comm(world, len, label, Algorithm::Tree, WireDtype::F32, &mut json);
+            bench_comm(world, len, label, Algorithm::Tree, WireDtype::Bf16, &mut json);
         }
     }
     println!("== slot pipeline: serial per-slot loop vs overlapped exchange/reduce ==");
@@ -202,9 +221,13 @@ fn main() {
     // 64k stacked point where both lanes matter
     for world in [2usize, 4] {
         for dtype in [WireDtype::F32, WireDtype::Bf16] {
-            bench_slot_pipeline(world, 16, 256 * 16, dtype);
-            bench_slot_pipeline(world, 8, 16 * 256 * 16, dtype);
+            bench_slot_pipeline(world, 16, 256 * 16, dtype, &mut json);
+            bench_slot_pipeline(world, 8, 16 * 256 * 16, dtype, &mut json);
         }
+    }
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write bench JSON: {e}"),
     }
     println!("(context: compare per-step overhead against `cargo bench --bench train_step`)");
 }

@@ -3,7 +3,7 @@
 //! plus the serial-vs-parallel comparison of the shared kernel
 //! substrate (same bits at every thread count; see `kernel` docs).
 
-use lowrank_sge::bench_util::{bench, log_csv, report};
+use lowrank_sge::bench_util::{bench, log_csv, report, JsonReport};
 use lowrank_sge::kernel::{self, KernelPool};
 use lowrank_sge::linalg::{matmul, matmul_tn, sym_eig, thin_qr, Mat};
 use lowrank_sge::model::lift_into;
@@ -15,6 +15,7 @@ fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
 }
 
 fn main() {
+    let mut json = JsonReport::new("linalg");
     println!("-- kernel GEMM: serial vs parallel (1024x1024x64, f64) --");
     // the acceptance shape: C (1024×64) = A (1024×1024) · B (1024×64)
     let (m, k, n) = (1024usize, 1024usize, 64usize);
@@ -34,6 +35,7 @@ fn main() {
         let flops = 2.0 * (m * k * n) as f64;
         println!("{:>60}", format!("≈ {:.2} GFLOP/s", flops / stats.median_s / 1e9));
         log_csv("linalg.csv", &name, &stats);
+        json.entry(&name, m * k * n, &stats, None);
         medians.push((threads, stats.median_s));
     }
     if let (Some(&(_, serial)), Some(&(_, par4))) = (medians.first(), medians.last()) {
@@ -55,6 +57,7 @@ fn main() {
         let flops = 2.0 * (n as f64).powi(3);
         println!("{:>60}", format!("≈ {:.2} GFLOP/s", flops / stats.median_s / 1e9));
         log_csv("linalg.csv", &name, &stats);
+        json.entry(&name, n * n * n, &stats, None);
     }
 
     println!("-- thin QR (one Haar–Stiefel draw at paper dims) --");
@@ -66,6 +69,7 @@ fn main() {
         let name = format!("thin_qr_{n}x{r}");
         report(&name, &stats);
         log_csv("linalg.csv", &name, &stats);
+        json.entry(&name, n * r, &stats, None);
     }
 
     println!("-- symmetric Jacobi eigensolver (Σ decomposition) --");
@@ -78,6 +82,7 @@ fn main() {
         let name = format!("sym_eig_{n}");
         report(&name, &stats);
         log_csv("linalg.csv", &name, &stats);
+        json.entry(&name, n * n, &stats, None);
     }
 
     println!("-- f32 lift Θ += B·Vᵀ (once per K steps) --");
@@ -92,5 +97,11 @@ fn main() {
         let name = format!("lift_{m}x{n}_r{r}");
         report(&name, &stats);
         log_csv("linalg.csv", &name, &stats);
+        // throughput of the written Θ bytes — the lift is store-bound
+        json.entry(&name, m * n, &stats, Some(4.0 * (m * n) as f64 / stats.median_s / 1e6));
+    }
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write bench JSON: {e}"),
     }
 }

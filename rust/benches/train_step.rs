@@ -7,7 +7,7 @@
 //! all-reduce) that needs no artifacts; the artifact sections skip
 //! gracefully when missing.
 
-use lowrank_sge::bench_util::{bench, engine_fixture, log_csv, report, CountingAlloc};
+use lowrank_sge::bench_util::{bench, engine_fixture, log_csv, report, CountingAlloc, JsonReport};
 use lowrank_sge::coordinator::{
     allreduce_mean_with, FinetuneConfig, FinetuneMethod, FinetuneTrainer, PretrainConfig,
     PretrainTrainer, SubspaceSet,
@@ -74,6 +74,7 @@ fn engine_alloc_steady_state() {
 }
 
 fn main() -> anyhow::Result<()> {
+    let mut json = JsonReport::new("train_step");
     engine_alloc_steady_state();
 
     // Kernel-substrate step costs (no artifacts needed): the per-step
@@ -102,6 +103,7 @@ fn main() -> anyhow::Result<()> {
         let name = format!("lift_fanout_{slots}x{m}x{n}_r{r}_t{threads}");
         report(&name, &stats);
         log_csv("train_step.csv", &name, &stats);
+        json.entry(&name, slots * m * n, &stats, None);
 
         // DDP all-reduce: 4 worker shards of 1M f32, fixed pairing tree
         let mut grads: Vec<Vec<f32>> =
@@ -113,11 +115,15 @@ fn main() -> anyhow::Result<()> {
         let name = format!("allreduce_4x1M_t{threads}");
         report(&name, &stats);
         log_csv("train_step.csv", &name, &stats);
+        json.entry(&name, 4_000_000, &stats, Some(16e6 / stats.median_s / 1e6));
     }
 
     let dir = artifacts_dir();
     if !dir.join("INDEX.txt").exists() {
         eprintln!("artifacts not built — run `make artifacts` first; skipping");
+        if let Ok(path) = json.write() {
+            println!("wrote {}", path.display());
+        }
         return Ok(());
     }
     let mut rt = Runtime::new(&dir)?;
@@ -136,17 +142,16 @@ fn main() -> anyhow::Result<()> {
         let res = trainer.run()?;
         let mean = res.log.mean_step_time(2).unwrap_or(f64::NAN);
         println!("{:<28} {:.4} s/step", method.name(), mean);
-        log_csv(
-            "train_step.csv",
-            &format!("finetune_{}", method.name()),
-            &lowrank_sge::bench_util::BenchStats {
-                iters: res.log.records.len() - 2,
-                mean_s: mean,
-                median_s: mean,
-                min_s: mean,
-                max_s: mean,
-            },
-        );
+        let stats = lowrank_sge::bench_util::BenchStats {
+            iters: res.log.records.len() - 2,
+            mean_s: mean,
+            median_s: mean,
+            min_s: mean,
+            max_s: mean,
+        };
+        let name = format!("finetune_{}", method.name());
+        log_csv("train_step.csv", &name, &stats);
+        json.entry(&name, res.log.records.len(), &stats, None);
     }
 
     println!("-- pretrain step cost per scale (Stiefel LowRank-IPA) --");
@@ -159,17 +164,16 @@ fn main() -> anyhow::Result<()> {
         let res = trainer.run()?;
         let mean = res.log.mean_step_time(2).unwrap_or(f64::NAN);
         println!("llama-{scale:<24} {:.4} s/step", mean);
-        log_csv(
-            "train_step.csv",
-            &format!("pretrain_{scale}"),
-            &lowrank_sge::bench_util::BenchStats {
-                iters: res.log.records.len() - 2,
-                mean_s: mean,
-                median_s: mean,
-                min_s: mean,
-                max_s: mean,
-            },
-        );
+        let stats = lowrank_sge::bench_util::BenchStats {
+            iters: res.log.records.len() - 2,
+            mean_s: mean,
+            median_s: mean,
+            min_s: mean,
+            max_s: mean,
+        };
+        let name = format!("pretrain_{scale}");
+        log_csv("train_step.csv", &name, &stats);
+        json.entry(&name, res.log.records.len(), &stats, None);
     }
 
     println!("-- raw artifact execute latency (lm_grad_s) --");
@@ -180,6 +184,7 @@ fn main() -> anyhow::Result<()> {
     });
     report("execute_lm_grad_s", &stats);
     log_csv("train_step.csv", "execute_lm_grad_s", &stats);
+    json.entry("execute_lm_grad_s", 1, &stats, None);
 
     let art_p = rt.load("lm_grad_s_pallas")?;
     let stats_p = bench(2, 10, || {
@@ -187,9 +192,14 @@ fn main() -> anyhow::Result<()> {
     });
     report("execute_lm_grad_s_pallas", &stats_p);
     log_csv("train_step.csv", "execute_lm_grad_s_pallas", &stats_p);
+    json.entry("execute_lm_grad_s_pallas", 1, &stats_p, None);
     println!(
         "pallas/jnp latency ratio: {:.2}×",
         stats_p.median_s / stats.median_s
     );
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("warning: could not write bench JSON: {e}"),
+    }
     Ok(())
 }

@@ -9,8 +9,6 @@
 //! test (`tests/engine_alloc.rs`) and the `train_step` bench, so the
 //! two measure exactly the same thing.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -19,43 +17,13 @@ use crate::model::ParamStore;
 use crate::optim::{Adam, AdamConfig};
 use crate::runtime::{DType, HostTensor, TensorSpec};
 
-/// Allocation-counting wrapper around the system allocator: every entry
-/// point that hands out memory bumps a global counter, so a
-/// steady-state "allocations per step" measurement is exact, not
-/// sampled. Install per binary with
-/// `#[global_allocator] static A: CountingAlloc = CountingAlloc;`
-/// and read the counter via [`CountingAlloc::count`].
-pub struct CountingAlloc;
-
-static ALLOCS: AtomicUsize = AtomicUsize::new(0);
-
-impl CountingAlloc {
-    /// Total allocator entries (alloc/alloc_zeroed/realloc) so far.
-    pub fn count() -> usize {
-        ALLOCS.load(Ordering::SeqCst)
-    }
-}
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
+/// The allocation-counting allocator, promoted into the observability
+/// layer as [`crate::obs::TrackedAlloc`] (it now also tracks live/peak
+/// bytes for the measured memory ledger). Re-exported under its
+/// original name so the allocation test and benches keep reading
+/// `CountingAlloc::count()` unchanged. Install per binary with
+/// `#[global_allocator] static A: CountingAlloc = CountingAlloc;`.
+pub use crate::obs::TrackedAlloc as CountingAlloc;
 
 /// Synthetic engine fixture: a parameter store with one m×n tensor per
 /// `dims` entry `(m, n, r)` plus a trailing head vector of `head_len`
@@ -175,6 +143,55 @@ pub fn report(name: &str, stats: &BenchStats) {
     );
 }
 
+/// Machine-readable bench summary: collects one entry per case and
+/// writes `results/bench/BENCH_<name>.json` — the perf-trajectory
+/// artifact CI and future optimisation PRs diff against. JSON is
+/// hand-emitted (op names are code literals; no escaping needed
+/// beyond refusing quotes loudly).
+pub struct JsonReport {
+    name: String,
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> JsonReport {
+        JsonReport { name: name.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one case: `op` label, problem `size` (elements), the
+    /// timing stats, and an optional wire/compute throughput in MB/s.
+    pub fn entry(&mut self, op: &str, size: usize, stats: &BenchStats, mbps: Option<f64>) {
+        assert!(!op.contains('"'), "bench op names must not contain quotes: {op}");
+        let ns_per_op = stats.median_s * 1e9;
+        let mbps = match mbps {
+            Some(v) if v.is_finite() => format!("{v:.3}"),
+            _ => "null".to_string(),
+        };
+        self.entries.push(format!(
+            "{{\"op\":\"{op}\",\"size\":{size},\"ns_per_op\":{ns_per_op:.1},\"mbps\":{mbps},\
+             \"median_s\":{:.9},\"mean_s\":{:.9},\"min_s\":{:.9},\"iters\":{}}}",
+            stats.median_s, stats.mean_s, stats.min_s, stats.iters
+        ));
+    }
+
+    /// Write `results/bench/BENCH_<name>.json` (an object with the
+    /// bench name and the entry array), returning the path.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        use std::io::Write;
+        let dir = std::path::Path::new("results/bench");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(
+            f,
+            "{{\"bench\":\"{}\",\"cases\":[\n{}\n]}}",
+            self.name,
+            self.entries.join(",\n")
+        )?;
+        Ok(path)
+    }
+}
+
 /// Append `name,median_s,mean_s,min_s,max_s,iters` to a CSV under
 /// results/bench/ (header written on create).
 pub fn log_csv(file: &str, name: &str, stats: &BenchStats) {
@@ -221,6 +238,19 @@ mod tests {
     fn per_second_inverse_of_median() {
         let s = BenchStats { iters: 1, mean_s: 0.5, median_s: 0.5, min_s: 0.5, max_s: 0.5 };
         assert!((s.per_second(10.0) - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_report_emits_one_object_per_case() {
+        let mut r = JsonReport::new("unit_test");
+        let s = BenchStats { iters: 3, mean_s: 2e-6, median_s: 1e-6, min_s: 5e-7, max_s: 4e-6 };
+        r.entry("gemm", 1024, &s, Some(123.456));
+        r.entry("axpy", 64, &s, None);
+        assert_eq!(r.entries.len(), 2);
+        assert!(r.entries[0].contains("\"op\":\"gemm\""));
+        assert!(r.entries[0].contains("\"ns_per_op\":1000.0"));
+        assert!(r.entries[0].contains("\"mbps\":123.456"));
+        assert!(r.entries[1].contains("\"mbps\":null"));
     }
 
     #[test]

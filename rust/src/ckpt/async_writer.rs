@@ -65,6 +65,8 @@ impl AsyncCheckpointer {
         let handle = std::thread::Builder::new()
             .name(format!("ckpt-writer-{step}"))
             .spawn(move || {
+                let _span = crate::obs::span("ckpt", "async_save");
+                crate::obs::metrics::CKPT_SAVES.add(1);
                 let meta_refs: Vec<(&str, String)> =
                     meta.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
                 let group_refs: Vec<(&str, StateDict)> =

@@ -71,6 +71,7 @@ use anyhow::{bail, Context, Result};
 use super::rendezvous::Rendezvous;
 use super::transport::{Conn, Listener, TransportKind};
 use super::wire::{self, Kind, WireDtype};
+use crate::obs;
 
 /// Which reduction algorithm a communicator uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -197,6 +198,7 @@ impl RingPending {
     /// before [`Communicator::ring_gather`].
     pub fn reduce(&mut self, pool: &crate::kernel::KernelPool) {
         assert!(!self.reduced, "RingPending::reduce called twice");
+        let _span = obs::span("comm", "ring_reduce");
         crate::kernel::tree_sum_vecs(pool, &mut self.contrib);
         self.reduced = true;
     }
@@ -211,6 +213,7 @@ impl Communicator {
     /// `--comm-dtype` fails loudly on both sides of the first
     /// connection, before any gradient moves.
     pub fn connect(cfg: &CommConfig) -> Result<Communicator> {
+        let _span = obs::span("comm", "connect");
         if cfg.world == 0 {
             bail!("comm world size must be >= 1");
         }
@@ -421,6 +424,7 @@ impl Communicator {
         if self.world == 1 {
             return Ok(());
         }
+        let _span = obs::span("comm", "broadcast");
         let seq = self.next_seq();
         let (rank, world) = (self.rank, self.world);
         let rel = (rank + world - root) % world;
@@ -453,6 +457,7 @@ impl Communicator {
         if world == 1 {
             return Ok(());
         }
+        let _span = obs::span("comm", "all_gather");
         let seq = self.next_seq();
         for s in 1..world {
             let dst = (rank + s) % world;
@@ -474,6 +479,7 @@ impl Communicator {
         if self.world == 1 {
             return Ok(());
         }
+        let _span = obs::span("comm", "barrier");
         let seq = self.next_seq();
         let (rank, world) = (self.rank, self.world);
         let mut gap = 1;
@@ -521,6 +527,7 @@ impl Communicator {
     /// schedule. Requires `world > 1`.
     pub fn ring_exchange(&mut self, data: &mut [f32]) -> Result<RingPending> {
         debug_assert!(self.world > 1, "ring_exchange is meaningless at world == 1");
+        let _span = obs::span("comm", "ring_exchange");
         let seq_x = self.next_seq();
         let seq_g = self.next_seq();
         let dtype = self.dtype;
@@ -571,6 +578,7 @@ impl Communicator {
     /// is rounded once before it circulates, so the owner and every
     /// receiver end with identical bits.
     pub fn ring_gather(&mut self, pending: RingPending, data: &mut [f32]) -> Result<()> {
+        let _span = obs::span("comm", "ring_gather");
         let RingPending { seq_gather: seq, dtype, bounds, mut contrib, reduced } = pending;
         assert!(reduced, "ring_gather called before RingPending::reduce");
         let (rank, world) = (self.rank, self.world);
@@ -619,6 +627,7 @@ impl Communicator {
     /// in-process `allreduce_mean_with`), then release broadcast of the
     /// rank-0 total. f32 lane: partial sums travel bit-exact.
     fn tree_allreduce_f32(&mut self, data: &mut [f32]) -> Result<()> {
+        let _span = obs::span("comm", "tree_allreduce");
         let seq = self.next_seq();
         let (rank, world) = (self.rank, self.world);
         let pool = crate::kernel::global();
@@ -660,6 +669,7 @@ impl Communicator {
     /// the total once, and release it down the binomial broadcast tree
     /// (lossless: the payload is already on the bf16 grid).
     fn tree_allreduce_bf16(&mut self, data: &mut [f32]) -> Result<()> {
+        let _span = obs::span("comm", "tree_allreduce_bf16");
         let seq_gather = self.next_seq();
         let seq_bcast = self.next_seq();
         let (rank, world) = (self.rank, self.world);

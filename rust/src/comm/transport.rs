@@ -17,6 +17,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::obs::metrics;
+
 /// Which socket family a run uses. Unix-domain is the default for
 /// single-host `launch` trees (lower latency, no port allocation); TCP
 /// works everywhere.
@@ -165,6 +167,9 @@ impl Conn {
                 w.write_all(buf)
             }
         };
+        if res.is_ok() {
+            metrics::STREAM_SENT.add(buf.len() as u64);
+        }
         res.map_err(map_io_err).context("comm send")
     }
 
@@ -181,6 +186,9 @@ impl Conn {
                 r.read_exact(buf)
             }
         };
+        if res.is_ok() {
+            metrics::STREAM_RECV.add(buf.len() as u64);
+        }
         res.map_err(map_io_err).context("comm recv")
     }
 }

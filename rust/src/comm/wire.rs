@@ -48,6 +48,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::transport::Conn;
 use crate::ckpt::crc32::crc32;
+use crate::obs::metrics;
 
 pub const MAGIC: [u8; 4] = *b"LRCM";
 /// Protocol version. 2 = the bf16 dtype lane plus the two-way connect
@@ -164,6 +165,24 @@ impl WireDtype {
 const DTYPE_F32: u8 = 0;
 const DTYPE_BF16: u8 = 1;
 const DTYPE_NONE: u8 = 255;
+
+/// Metrics lane for one frame's bytes, keyed by the raw header dtype
+/// byte: data frames land on their wire-dtype lane, everything else
+/// (hello/barrier, unknown tags) on the control lane. No-ops while the
+/// metrics registry is disabled.
+#[inline]
+fn count_wire_bytes(sent: bool, dtype_byte: u8, bytes: usize) {
+    let c = match (sent, dtype_byte) {
+        (true, DTYPE_F32) => &metrics::WIRE_SENT_F32,
+        (true, DTYPE_BF16) => &metrics::WIRE_SENT_BF16,
+        (true, _) => &metrics::WIRE_SENT_CTRL,
+        (false, DTYPE_F32) => &metrics::WIRE_RECV_F32,
+        (false, DTYPE_BF16) => &metrics::WIRE_RECV_BF16,
+        (false, _) => &metrics::WIRE_RECV_CTRL,
+    };
+    c.add(bytes as u64);
+    if sent { &metrics::FRAMES_SENT } else { &metrics::FRAMES_RECV }.add(1);
+}
 
 /// f32 → bfloat16 bits, truncating with round-to-nearest-even (the
 /// hardware convention). Sign and exponent survive exactly: ±0, ±∞,
@@ -387,6 +406,7 @@ pub fn send_frame(
     encode_body_into(&mut msg, kind, seq, part, payload, dtype)?;
     let body_len = checked_wire_u32(msg.len() - 4, "body length")?;
     msg[..4].copy_from_slice(&body_len.to_le_bytes());
+    count_wire_bytes(true, if kind == Kind::Data { dtype.tag() } else { DTYPE_NONE }, msg.len());
     conn.write_all(&msg)
         .with_context(|| format!("sending comm frame (kind {kind:?}, seq {seq}, part {part})"))
 }
@@ -405,6 +425,10 @@ pub fn recv_frame(conn: &Conn) -> Result<Frame> {
     let mut body = vec![0u8; len];
     conn.read_exact(&mut body)
         .context("receiving comm frame body (truncated frame?)")?;
+    // lane from the raw header dtype byte (magic 4 + version 4 + kind 1);
+    // validation happens in decode_body — for accounting the claim is fine
+    let lane = if body.len() > 9 && body[8] == Kind::Data.tag() { body[9] } else { DTYPE_NONE };
+    count_wire_bytes(false, lane, 4 + body.len());
     decode_body(&body)
 }
 
@@ -442,6 +466,7 @@ pub fn recv_f32s_into(conn: &Conn, seq: u64, out: &mut [f32], dtype: WireDtype) 
         body.resize(len, 0);
         conn.read_exact(&mut body)
             .context("receiving comm frame body (truncated frame?)")?;
+        count_wire_bytes(false, dtype.tag(), 4 + body.len());
         let (h, payload_bytes) = split_verified(&body)?;
         if h.kind != Kind::Data {
             bail!("collective protocol desync: expected data frame, got {:?}", h.kind);

@@ -108,6 +108,24 @@ impl ArgMap {
             .map(crate::comm::WireDtype::parse)
             .transpose()
     }
+
+    /// `--trace-out <path>` — Chrome `trace_event` JSON export of the
+    /// observability spans; `None` (tracing off) when absent. Shared by
+    /// every rank-aware subcommand; this is the single place the flag
+    /// is parsed. In a launch world each rank writes
+    /// `<stem>.rank<r>.json` and the leader merges after the final
+    /// barrier (see [`crate::obs`]).
+    pub fn trace_out(&self) -> Option<&str> {
+        self.get("trace-out")
+    }
+
+    /// `--metrics-out <path>` — JSONL export of the metrics registry
+    /// (one snapshot object per rank); `None` (metrics off) when
+    /// absent. The leader writes all ranks' snapshots, gathered over
+    /// the collective.
+    pub fn metrics_out(&self) -> Option<&str> {
+        self.get("metrics-out")
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +179,16 @@ mod tests {
         assert_eq!(b.comm_dtype().unwrap(), None);
         let c = ArgMap::parse(&toks("--comm-dtype fp8")).unwrap();
         assert!(c.comm_dtype().is_err());
+    }
+
+    #[test]
+    fn obs_outputs_parse() {
+        let a = ArgMap::parse(&toks("--trace-out t.json --metrics-out m.jsonl")).unwrap();
+        assert_eq!(a.trace_out(), Some("t.json"));
+        assert_eq!(a.metrics_out(), Some("m.jsonl"));
+        let b = ArgMap::parse(&toks("--steps 5")).unwrap();
+        assert_eq!(b.trace_out(), None);
+        assert_eq!(b.metrics_out(), None);
     }
 
     #[test]

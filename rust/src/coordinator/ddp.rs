@@ -367,6 +367,28 @@ impl Collective {
         }
     }
 
+    /// Gather every rank's equal-length contribution into
+    /// `out[rank·len .. (rank+1)·len]` on all ranks. In-process the
+    /// world is 1, so `out` must equal `mine` in length and receives a
+    /// plain copy — the degenerate gather. (The obs layer rides this to
+    /// pull every rank's metrics snapshot to the leader.)
+    pub fn all_gather(&mut self, mine: &[f32], out: &mut [f32]) -> Result<()> {
+        match self {
+            Collective::InProcess => {
+                if out.len() != mine.len() {
+                    bail!(
+                        "all_gather output has {} elements, expected {} at world 1",
+                        out.len(),
+                        mine.len()
+                    );
+                }
+                out.copy_from_slice(mine);
+                Ok(())
+            }
+            Collective::Comm(c) => c.all_gather(mine, out),
+        }
+    }
+
     /// The enforced [`LEADER_RANK`] discipline for shared side effects:
     /// run `write` only on the leader, then barrier so every rank
     /// leaves the save point together. When `write` performs the side
@@ -393,6 +415,60 @@ impl Collective {
         }
         Ok(())
     }
+}
+
+/// End-of-run observability export, called by both trainers (and
+/// `comm-check`) after their last collective:
+///
+/// 1. **Metrics** (`--metrics-out`): every rank serializes its registry
+///    snapshot to a fixed-size f32 frame
+///    ([`crate::obs::metrics::encode_snapshot`]) and the frames ride the
+///    existing `all_gather`; the leader decodes all `world` JSON lines,
+///    writes the merged JSONL, and prints the per-rank summary table.
+/// 2. **Trace** (`--trace-out`): every rank drains its span rings into
+///    its rank-scoped Chrome-trace file, a barrier ensures all files
+///    are on the (shared — `launch` is single-host) filesystem, then
+///    the leader string-merges them into the requested path.
+///
+/// A no-op when neither output was requested. SPMD: every rank must
+/// call this (the gather and barrier are collectives).
+pub fn export_run_obs(collective: &mut Collective) -> Result<()> {
+    use crate::obs;
+    let (rank, world) = (collective.rank(), collective.world());
+    if let Some(path) = obs::metrics_out() {
+        let frame = obs::metrics::encode_snapshot(&obs::metrics::snapshot_json(rank));
+        let mut gathered = vec![0.0f32; frame.len() * world];
+        collective.all_gather(&frame, &mut gathered)?;
+        if collective.is_leader() {
+            let lines = (0..world)
+                .map(|r| {
+                    obs::metrics::decode_snapshot(&gathered[r * frame.len()..(r + 1) * frame.len()])
+                })
+                .collect::<Result<Vec<String>>>()?;
+            if let Some(parent) = path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            use std::io::Write;
+            let mut f = std::fs::File::create(&path)?;
+            for line in &lines {
+                writeln!(f, "{line}")?;
+            }
+            println!("{}", crate::obs::metrics::summary_table(&lines));
+            println!("metrics JSONL ({} ranks) written to {}", world, path.display());
+        }
+    }
+    if obs::export_rank_trace(rank, world)?.is_some() {
+        // all rank files must be durable before the leader merges
+        collective.barrier()?;
+        if collective.is_leader() {
+            if let Some(merged) = obs::merge_rank_traces(world)? {
+                println!("chrome trace written to {}", merged.display());
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Upper bound on ring collectives in flight inside

@@ -428,6 +428,7 @@ impl FinetuneTrainer {
             // path keeps Θ always-lifted, so only (V, B, Adam) reset —
             // resample does all three; IPA lifts Θ first.
             if controller.action(step) == LazyAction::ResampleSubspace {
+                let _p = crate::obs::phase("trainer", "resample", "step.resample_s");
                 if let Some(sub) = self.engine.subspace.as_mut() {
                     if step > 0 && matches!(cfg.method, FinetuneMethod::LowRankIpa(_)) {
                         sub.lift(&mut self.store)?;
@@ -481,12 +482,15 @@ impl FinetuneTrainer {
                 })
                 .collect();
 
+            let _p_execute = crate::obs::phase("trainer", "execute", "step.execute_s");
             let out = art.execute(&inputs)?;
+            drop(_p_execute);
             // drop the staged clones so the engine's buffers are unique
             // again — the updates below then mutate in place
             drop(inputs);
 
             // apply the method's update through the engine
+            let _p_update = crate::obs::phase("trainer", "update", "step.update_s");
             let stats = match cfg.method {
                 FinetuneMethod::VanillaIpa => {
                     let slot_grads: Vec<&[f32]> = self
@@ -534,6 +538,7 @@ impl FinetuneTrainer {
                 )?,
                 FinetuneMethod::ZeroShot => unreachable!(),
             };
+            drop(_p_update);
 
             log.push(StepRecord {
                 step,
@@ -545,6 +550,17 @@ impl FinetuneTrainer {
                 grad_norm: stats.grad_norm,
                 step_time_s: t0.elapsed().as_secs_f64(),
             });
+
+            if crate::obs::metrics::enabled() && (step + 1) % cfg.k_interval.max(1) == 0 {
+                // measured memory ledger at every lazy-update boundary
+                println!(
+                    "[obs] step {:>6}  heap live {:>8.1} MB  peak {:>8.1} MB  vm_hwm {:>6} MB",
+                    step + 1,
+                    crate::obs::TrackedAlloc::live_bytes() as f64 / 1e6,
+                    crate::obs::TrackedAlloc::peak_bytes() as f64 / 1e6,
+                    crate::obs::alloc::vm_hwm_kb().unwrap_or(0) / 1024,
+                );
+            }
 
             if cfg.ckpt.should_save(step) {
                 let dir = cfg.ckpt.dir.as_ref().expect("should_save implies dir");
@@ -561,7 +577,13 @@ impl FinetuneTrainer {
             }
         }
         self.store.assert_finite()?;
-        let acc = self.evaluate(&task)?;
+        let acc = {
+            let _p = crate::obs::phase("trainer", "eval", "step.eval_s");
+            self.evaluate(&task)?
+        };
+        // observability epilogue (no-op unless --trace-out/--metrics-out);
+        // fine-tuning is single-process, so the gather is a world-1 copy
+        super::ddp::export_run_obs(&mut super::ddp::Collective::in_process())?;
         Ok(FinetuneResult { method: cfg.method, task: cfg.task, accuracy: acc, log })
     }
 

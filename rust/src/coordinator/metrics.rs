@@ -58,31 +58,67 @@ impl MetricsLog {
         Some(xs.iter().map(|r| r.step_time_s).sum::<f64>() / xs.len() as f64)
     }
 
-    /// Write `step,loss,lr,grad_norm,step_time_s` CSV.
+    /// Write `step,loss,lr,grad_norm,step_time_s` CSV (truncating).
     pub fn write_csv(&self, path: &Path) -> Result<()> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let mut f = std::fs::File::create(path)?;
-        writeln!(f, "step,loss,lr,grad_norm,step_time_s")?;
-        for r in &self.records {
-            writeln!(f, "{},{},{},{},{}", r.step, r.loss, r.lr, r.grad_norm, r.step_time_s)?;
-        }
-        Ok(())
+        self.write_csv_with(path, false)
     }
 
-    /// Write `step,value` CSV of the eval series.
-    pub fn write_eval_csv(&self, path: &Path) -> Result<()> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let mut f = std::fs::File::create(path)?;
-        writeln!(f, "step,value")?;
-        for (s, v) in &self.evals {
-            writeln!(f, "{s},{v}")?;
-        }
-        Ok(())
+    /// [`Self::write_csv`] with an append mode for resumed runs: the log
+    /// only holds post-resume records, so truncate-recreate (the old
+    /// behaviour) silently dropped every pre-resume row. With
+    /// `append = true` the new rows extend the existing file (header
+    /// written only when the file is fresh).
+    pub fn write_csv_with(&self, path: &Path, append: bool) -> Result<()> {
+        write_rows(
+            path,
+            append,
+            "step,loss,lr,grad_norm,step_time_s",
+            self.records.iter().map(|r| {
+                format!("{},{},{},{},{}", r.step, r.loss, r.lr, r.grad_norm, r.step_time_s)
+            }),
+        )
     }
+
+    /// Write `step,value` CSV of the eval series (truncating).
+    pub fn write_eval_csv(&self, path: &Path) -> Result<()> {
+        self.write_eval_csv_with(path, false)
+    }
+
+    /// Append-capable eval-series writer — same resume contract as
+    /// [`Self::write_csv_with`].
+    pub fn write_eval_csv_with(&self, path: &Path, append: bool) -> Result<()> {
+        write_rows(
+            path,
+            append,
+            "step,value",
+            self.evals.iter().map(|(s, v)| format!("{s},{v}")),
+        )
+    }
+}
+
+fn write_rows(
+    path: &Path,
+    append: bool,
+    header: &str,
+    rows: impl Iterator<Item = String>,
+) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let fresh = !append || !path.exists();
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(append)
+        .write(true)
+        .truncate(!append)
+        .open(path)?;
+    if fresh {
+        writeln!(f, "{header}")?;
+    }
+    for row in rows {
+        writeln!(f, "{row}")?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -121,6 +157,48 @@ mod tests {
         assert_eq!(train.lines().count(), 2);
         let eval = std::fs::read_to_string(&p2).unwrap();
         assert!(eval.contains("0,0.25"));
+    }
+
+    #[test]
+    fn resume_appends_instead_of_dropping_the_earlier_series() {
+        // regression: resumed runs hold only post-resume records, and the
+        // truncate-recreate writers used to drop the pre-resume rows
+        let dir = std::env::temp_dir().join("lowrank_sge_metrics_append_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("train.csv");
+        let p2 = dir.join("eval.csv");
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+
+        // first run: steps 0..3
+        let mut first = MetricsLog::default();
+        for i in 0..3 {
+            first.push(rec(i, 5.0, 0.1));
+        }
+        first.push_eval(2, 0.5);
+        first.write_csv_with(&p1, true).unwrap(); // fresh file → header
+        first.write_eval_csv_with(&p2, true).unwrap();
+
+        // resumed run: steps 3..5 only
+        let mut resumed = MetricsLog::default();
+        for i in 3..5 {
+            resumed.push(rec(i, 4.0, 0.1));
+        }
+        resumed.push_eval(4, 0.75);
+        resumed.write_csv_with(&p1, true).unwrap();
+        resumed.write_eval_csv_with(&p2, true).unwrap();
+
+        let train = std::fs::read_to_string(&p1).unwrap();
+        let lines: Vec<&str> = train.lines().collect();
+        assert_eq!(lines.len(), 6, "header + 5 rows, got: {train}");
+        assert_eq!(lines[0], "step,loss,lr,grad_norm,step_time_s");
+        assert!(lines[1].starts_with("0,") && lines[5].starts_with("4,"), "{train}");
+        let eval = std::fs::read_to_string(&p2).unwrap();
+        assert!(eval.contains("2,0.5") && eval.contains("4,0.75"), "{eval}");
+
+        // the truncating default still recreates from scratch
+        resumed.write_csv(&p1).unwrap();
+        assert_eq!(std::fs::read_to_string(&p1).unwrap().lines().count(), 3);
     }
 
     #[test]

@@ -47,8 +47,8 @@ mod pretrain;
 mod subspace;
 
 pub use ddp::{
-    allreduce_mean, allreduce_mean_with, BatchProducer, Collective, Shard, LEADER_RANK,
-    PIPELINE_WINDOW,
+    allreduce_mean, allreduce_mean_with, export_run_obs, BatchProducer, Collective, Shard,
+    LEADER_RANK, PIPELINE_WINDOW,
 };
 pub use finetune::{FinetuneConfig, FinetuneMethod, FinetuneResult, FinetuneTrainer};
 pub use metrics::{MetricsLog, StepRecord};

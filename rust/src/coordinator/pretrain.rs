@@ -371,6 +371,7 @@ impl PretrainTrainer {
         for step in start_step..cfg.steps {
             let t0 = Instant::now();
             if controller.action(step) == LazyAction::ResampleSubspace {
+                let _p = crate::obs::phase("trainer", "resample", "step.resample_s");
                 let sub = self.engine.subspace.as_mut().expect("subspace");
                 if step > 0 {
                     sub.lift(&mut self.store)?;
@@ -389,18 +390,22 @@ impl PretrainTrainer {
             let n_f = self.f_douts.len();
             let mut groups: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_b + n_f];
             let mut loss_acc = 0.0f32;
-            for shard in shards {
-                let inputs = self.build_inputs(shard.tokens);
-                let out = self.grad_art.execute(&inputs)?;
-                drop(inputs);
-                loss_acc += out[0].scalar()?;
-                for (si, &oi) in self.db_outs.iter().enumerate() {
-                    groups[si].push(out[oi].as_f32()?.to_vec());
-                }
-                for (fi, &oi) in self.f_douts.iter().enumerate() {
-                    groups[n_b + fi].push(out[oi].as_f32()?.to_vec());
+            {
+                let _p = crate::obs::phase("trainer", "execute", "step.execute_s");
+                for shard in shards {
+                    let inputs = self.build_inputs(shard.tokens);
+                    let out = self.grad_art.execute(&inputs)?;
+                    drop(inputs);
+                    loss_acc += out[0].scalar()?;
+                    for (si, &oi) in self.db_outs.iter().enumerate() {
+                        groups[si].push(out[oi].as_f32()?.to_vec());
+                    }
+                    for (fi, &oi) in self.f_douts.iter().enumerate() {
+                        groups[n_b + fi].push(out[oi].as_f32()?.to_vec());
+                    }
                 }
             }
+            let _p_reduce = crate::obs::phase("trainer", "reduce", "step.reduce_s");
             let loss = self.collective.allreduce_mean_scalar(loss_acc, n_shards)?;
             // one slot-pipelined pass over every dB and full-rank slot:
             // while slot k's chunk reduce runs on the kernel pool, slot
@@ -408,6 +413,7 @@ impl PretrainTrainer {
             // (and therefore every checkpoint bit) identical to the old
             // sequential per-slot loop
             self.collective.allreduce_mean_slots(&mut groups)?;
+            drop(_p_reduce);
             let mut reduced = groups.into_iter().map(|mut g| g.swap_remove(0));
             let mut db: Vec<Vec<f32>> = reduced.by_ref().take(n_b).collect();
             let mut df: Vec<Vec<f32>> = reduced.collect();
@@ -426,6 +432,7 @@ impl PretrainTrainer {
                 .map(|g| g.as_slice())
                 .chain(df.iter().map(|g| g.as_slice()))
                 .collect();
+            let _p_update = crate::obs::phase("trainer", "update", "step.update_s");
             let stats = self.engine.step(
                 &mut self.store,
                 GradSignal::Grads {
@@ -436,6 +443,7 @@ impl PretrainTrainer {
                 },
                 lr,
             )?;
+            drop(_p_update);
 
             log.push(StepRecord {
                 step,
@@ -446,8 +454,23 @@ impl PretrainTrainer {
             });
 
             if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-                let ev = self.eval_loss(&eval_sets)?;
+                let ev = {
+                    let _p = crate::obs::phase("trainer", "eval", "step.eval_s");
+                    self.eval_loss(&eval_sets)?
+                };
                 log.push_eval(step + 1, ev);
+                if crate::obs::metrics::enabled() && self.collective.is_leader() {
+                    // measured memory ledger beside the loss line: tracked
+                    // allocator (0 when not installed as #[global_allocator])
+                    // plus the kernel-reported high-water mark
+                    println!(
+                        "[obs] step {:>6}  heap live {:>8.1} MB  peak {:>8.1} MB  vm_hwm {:>6} MB",
+                        step + 1,
+                        crate::obs::TrackedAlloc::live_bytes() as f64 / 1e6,
+                        crate::obs::TrackedAlloc::peak_bytes() as f64 / 1e6,
+                        crate::obs::alloc::vm_hwm_kb().unwrap_or(0) / 1024,
+                    );
+                }
             }
 
             // Save barrier: every rank has folded every shard in. Only
@@ -471,6 +494,10 @@ impl PretrainTrainer {
         // final lift so the stored Θ is the trained model
         self.engine.subspace.as_mut().expect("subspace").lift(&mut self.store)?;
         self.store.assert_finite()?;
+        // observability epilogue (no-op unless --trace-out/--metrics-out):
+        // gather every rank's metrics over the collective, export and
+        // leader-merge the Chrome traces
+        super::ddp::export_run_obs(&mut self.collective)?;
         producer.shutdown();
 
         let final_eval_loss = log.evals.last().map(|&(_, v)| v);

@@ -181,6 +181,7 @@ impl SubspaceSet {
     /// slot (in slot order), so the result depends only on `rng` — not
     /// on the thread count.
     pub fn resample(&mut self, rng: &mut Rng) {
+        let _span = crate::obs::span("engine", "resample");
         let dims: Vec<(usize, usize)> = self.slots.iter().map(|s| (s.n, s.r)).collect();
         let vs = sample_batch(self.kind, &dims, self.c, None, rng);
         for (slot, v) in self.slots.iter_mut().zip(vs) {
@@ -200,6 +201,7 @@ impl SubspaceSet {
     /// running the serial GEMM body so the parallelism stays one level
     /// deep and the bytes match a serial pass exactly.
     pub fn lift(&mut self, store: &mut ParamStore) -> Result<()> {
+        let _span = crate::obs::span("engine", "lift");
         let positions: Vec<usize> = self.slots.iter().map(|s| s.param_pos).collect();
         let thetas = store.f32_mut_many(&positions)?;
         let pool = kernel::global();
@@ -210,6 +212,16 @@ impl SubspaceSet {
             tasks.push(Box::new(move || kernel::serial::gemm_nt(1.0f32, b, v, theta, m, n, r)));
         }
         pool.run(tasks);
+        if crate::obs::metrics::enabled() {
+            // per-layer lift residual ‖B‖_F — how much subspace motion
+            // each outer iteration folded into Θ (read back from the
+            // metrics series as `lift_b_norm[<layer>]`)
+            for slot in &self.slots {
+                let norm =
+                    slot.b.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt();
+                crate::obs::metrics::record_value(&format!("lift_b_norm[{}]", slot.name), norm);
+            }
+        }
         for slot in &mut self.slots {
             Arc::make_mut(&mut slot.b).iter_mut().for_each(|x| *x = 0.0);
         }

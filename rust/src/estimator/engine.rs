@@ -267,6 +267,7 @@ impl GradEstimator {
         if !self.shape.is_lr() {
             return;
         }
+        let _span = crate::obs::span("engine", "draw_perturbations");
         if let Some(h) = &mut self.head {
             for zi in Arc::make_mut(&mut h.z).iter_mut() {
                 *zi = rng.normal() as f32;
@@ -290,6 +291,10 @@ impl GradEstimator {
         signal: GradSignal<'_>,
         lr: f32,
     ) -> Result<StepStats> {
+        // one span per engine step, named by shape — the "update" phase
+        // of the trainers' step breakdown (disabled: one relaxed load,
+        // no clock, no heap — the engine_alloc contract is untouched)
+        let _span = crate::obs::span("engine", self.shape.name());
         match self.shape {
             MethodShape::FullIpa => {
                 let GradSignal::Grads { loss, slots, grad_norm, .. } = signal else {

@@ -11,7 +11,32 @@ use std::io::Write;
 
 use anyhow::Result;
 
-use crate::model::{MemoryModel, TrainMethod};
+use crate::model::{MemoryBreakdown, MemoryModel, TrainMethod};
+use crate::obs::TrackedAlloc;
+
+/// Measured heap peak (MB) of actually materializing the proxy
+/// inventory: bracket with the tracked allocator's peak gauge, allocate
+/// every component as a real zeroed buffer, read the high-water delta.
+/// Returns `None` when [`TrackedAlloc`] is not this process's global
+/// allocator (library tests) — the table prints `-` there.
+fn measured_proxy_peak_mb(bd: &MemoryBreakdown) -> Option<f64> {
+    if !TrackedAlloc::installed() {
+        return None;
+    }
+    TrackedAlloc::reset_peak();
+    let base = TrackedAlloc::peak_bytes();
+    let components =
+        [bd.weights, bd.gradients, bd.optimizer_state, bd.activations, bd.perturbations, bd.logits];
+    let mut bufs: Vec<Vec<u8>> = Vec::new();
+    for &c in &components {
+        if c > 0 {
+            bufs.push(vec![0u8; c]);
+        }
+    }
+    let peak = TrackedAlloc::peak_bytes();
+    drop(bufs);
+    Some(peak.saturating_sub(base) as f64 / (1 << 20) as f64)
+}
 
 /// Paper Table 2 (GB).
 pub const PAPER_GB: [(TrainMethod, f64); 4] = [
@@ -37,7 +62,8 @@ pub fn run(out_csv: &std::path::Path) -> Result<Vec<(TrainMethod, f64)>> {
     let mut f = std::fs::File::create(out_csv)?;
     writeln!(
         f,
-        "method,scope,total_gb,weights_gb,grads_gb,optim_gb,acts_gb,perturb_gb,logits_gb,paper_gb"
+        "method,scope,total_gb,weights_gb,grads_gb,optim_gb,acts_gb,perturb_gb,logits_gb,\
+         paper_gb,measured_mb"
     )?;
     let gb = |x: usize| x as f64 / (1 << 30) as f64;
     for (method, paper) in PAPER_GB {
@@ -56,7 +82,7 @@ pub fn run(out_csv: &std::path::Path) -> Result<Vec<(TrainMethod, f64)>> {
         );
         writeln!(
             f,
-            "{},roberta-large,{},{},{},{},{},{},{},{}",
+            "{},roberta-large,{},{},{},{},{},{},{},{},",
             method.name(),
             bd.total_gb(),
             gb(bd.weights),
@@ -70,16 +96,25 @@ pub fn run(out_csv: &std::path::Path) -> Result<Vec<(TrainMethod, f64)>> {
         rows.push((method, bd.total_gb()));
     }
 
-    // the proxy-scale inventory (what our artifact runs actually carry)
-    println!("-- proxy scale (clf artifacts) --");
+    // the proxy-scale inventory (what our artifact runs actually carry),
+    // with a measured column beside the analytical one: the tracked
+    // allocator's peak delta while the same inventory is materialized
+    println!("-- proxy scale (clf artifacts): analytical vs measured --");
+    println!("{:<14} {:>12} {:>12}", "method", "model(MB)", "measured(MB)");
     let proxy = MemoryModel::clf_proxy();
     for (method, _) in PAPER_GB {
         let bd = proxy.breakdown(method);
         let mb = bd.total() as f64 / (1 << 20) as f64;
-        println!("{:<14} {:>9.2} MB", method.name(), mb);
+        let measured = measured_proxy_peak_mb(&bd);
+        println!(
+            "{:<14} {:>12.2} {:>12}",
+            method.name(),
+            mb,
+            measured.map(|m| format!("{m:.2}")).unwrap_or_else(|| "-".to_string())
+        );
         writeln!(
             f,
-            "{},clf-proxy,{},{},{},{},{},{},{},",
+            "{},clf-proxy,{},{},{},{},{},{},{},,{}",
             method.name(),
             bd.total_gb(),
             gb(bd.weights),
@@ -87,8 +122,20 @@ pub fn run(out_csv: &std::path::Path) -> Result<Vec<(TrainMethod, f64)>> {
             gb(bd.optimizer_state),
             gb(bd.activations),
             gb(bd.perturbations),
-            gb(bd.logits)
+            gb(bd.logits),
+            measured.map(|m| format!("{m:.3}")).unwrap_or_default()
         )?;
+    }
+    // process-wide ledger footer: what this very run actually held
+    if TrackedAlloc::installed() {
+        println!(
+            "  process: heap live {:.1} MB, peak {:.1} MB (tracked allocator); VmHWM {} MB",
+            TrackedAlloc::live_bytes() as f64 / 1e6,
+            TrackedAlloc::peak_bytes() as f64 / 1e6,
+            crate::obs::alloc::vm_hwm_kb().unwrap_or(0) / 1024
+        );
+    } else {
+        println!("  process: tracked allocator not installed (measured column unavailable)");
     }
     println!("  wrote {}", out_csv.display());
     Ok(rows)

@@ -21,6 +21,9 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::obs;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -124,12 +127,19 @@ impl KernelPool {
         if tasks.is_empty() {
             return;
         }
+        obs::metrics::POOL_TASKS.add(tasks.len() as u64);
         if self.threads == 1 || tasks.len() == 1 {
             for t in tasks {
+                let _span = obs::span("kernel", "task");
                 t();
             }
             return;
         }
+
+        // Queue-wait measurement: one timestamp per batch (not per task —
+        // keeps the enqueue loop allocation-identical), observed at each
+        // task's execution start. `None` when observability is off.
+        let enqueued_at = if obs::metrics::enabled() { Some(Instant::now()) } else { None };
 
         type Payload = Box<dyn std::any::Any + Send>;
         let latch = Arc::new(Latch::new(tasks.len()));
@@ -143,6 +153,10 @@ impl KernelPool {
                 let latch = latch.clone();
                 let first_panic = first_panic.clone();
                 q.push_back(Box::new(move || {
+                    if let Some(t0) = enqueued_at {
+                        obs::metrics::POOL_QUEUE_WAIT.observe(t0.elapsed().as_nanos() as u64);
+                    }
+                    let _span = obs::span("kernel", "task");
                     if let Err(payload) =
                         std::panic::catch_unwind(std::panic::AssertUnwindSafe(t))
                     {

@@ -39,6 +39,20 @@
 //!   gather) so the trainer's slot pipeline
 //!   ([`coordinator::Collective::allreduce_mean_slots`]) overlaps slot
 //!   k's reduce on the pool with slot k+1's exchange on the sockets.
+//! * **L3 observability layer** — [`obs`]: passive tracing + metrics
+//!   threaded through every layer above. A span recorder (thread-local
+//!   lock-free rings, Chrome `trace_event` export via `--trace-out`)
+//!   around kernel-pool tasks, engine step phases, comm collective
+//!   phases, and async-ckpt saves; a metrics registry (wire bytes per
+//!   dtype lane, pool queue-wait histograms, per-layer lift-residual
+//!   norms, per-phase step times) snapshotted as JSONL via
+//!   `--metrics-out`, gathered cross-rank to the leader over the
+//!   existing `all_gather`; and a measured memory ledger
+//!   ([`obs::TrackedAlloc`] live/peak bytes + `/proc` VmHWM) beside
+//!   the analytical model in `exp memory`. Off by default and
+//!   **non-perturbing by contract**: disabled instrumentation is one
+//!   relaxed atomic load, and enabling it changes no trained bit
+//!   (pinned by `tests/obs_determinism.rs`).
 //! * **L3 compute substrate** — [`kernel`]: the one Scalar-generic
 //!   (f32/f64) dense compute layer — blocked GEMM, AXPY/scale,
 //!   deterministic reductions, strided panel primitives — running on a
@@ -74,6 +88,7 @@ pub mod exp;
 pub mod kernel;
 pub mod linalg;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod projection;
 pub mod rng;

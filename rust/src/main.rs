@@ -18,9 +18,22 @@
 //!                           [--comm-dtype f32|bf16]
 //!                           <subcommand …>                   # multi-process DDP
 //! lowrank-sge comm-check    [--len N] [--comm-dtype f32|bf16]
-//!                           [--fail-rank R]                  # collective self-test
+//!                           [--fail-rank R] [--trace-out T] [--metrics-out M]
 //! lowrank-sge inspect                                        # list artifacts
 //! ```
+//!
+//! Observability (`pretrain`, `finetune`, `comm-check`): `--trace-out
+//! <path>` records structured spans (kernel-pool tasks, engine phases,
+//! comm collectives, async checkpoint saves, trainer step phases) and
+//! exports Chrome `trace_event` JSON for chrome://tracing / Perfetto;
+//! `--metrics-out <path>` turns on the metrics registry (wire bytes per
+//! dtype lane, pool task counts + queue-wait, per-phase step times,
+//! per-layer lift residuals, the measured memory ledger) and writes one
+//! JSONL snapshot line per rank — in a `launch` world each rank traces
+//! to a rank-scoped sibling file, the leader gathers every rank's
+//! metrics over the collective and merges the traces. Both are off by
+//! default and non-perturbing: the trained bits are bitwise identical
+//! with and without them (pinned by `tests/obs_determinism.rs`).
 //!
 //! Multi-process DDP: `launch --nproc N pretrain …` spawns N ranks of
 //! this binary wired into one collective group (env-var rendezvous,
@@ -64,6 +77,7 @@
 //! for the experiment ↔ paper-artifact index.
 
 use std::path::PathBuf;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -77,6 +91,13 @@ use lowrank_sge::estimator::Family;
 use lowrank_sge::exp;
 use lowrank_sge::projection::ProjectorKind;
 use lowrank_sge::runtime::Runtime;
+
+// The measured memory ledger (obs::alloc): every allocation in this
+// binary goes through the tracking wrapper, so `exp memory` and the
+// trainers report real heap peaks. Disabled-metrics cost is four
+// relaxed atomics on a path that already takes a malloc.
+#[global_allocator]
+static GLOBAL: lowrank_sge::obs::TrackedAlloc = lowrank_sge::obs::TrackedAlloc;
 
 fn artifacts_dir() -> PathBuf {
     std::env::var("LOWRANK_SGE_ARTIFACTS")
@@ -217,14 +238,34 @@ fn cmd_comm_check(args: &ArgMap) -> Result<()> {
             std::process::exit(1);
         }
     }
+    // comm-check always reports per-phase timing and wire traffic, so
+    // the metrics registry is unconditionally on here; --trace-out /
+    // --metrics-out additionally export the run
+    lowrank_sge::obs::init(args.trace_out(), args.metrics_out());
+    lowrank_sge::obs::metrics::set_enabled(true);
+    use lowrank_sge::obs::metrics::{STREAM_RECV, STREAM_SENT};
+    type PhaseRow = (&'static str, f64, u64, u64);
+    let mut phases: Vec<PhaseRow> = Vec::new();
+    let mark = |phases: &mut Vec<PhaseRow>, name: &'static str, t0: Instant, s0: u64, r0: u64| {
+        phases.push((
+            name,
+            t0.elapsed().as_secs_f64(),
+            STREAM_SENT.get() - s0,
+            STREAM_RECV.get() - r0,
+        ));
+    };
+    let probe = || (Instant::now(), STREAM_SENT.get(), STREAM_RECV.get());
+
     // the override is threaded into connect (same argv on every rank ⇒
     // same lane), so the handshake verifies the lane actually used
+    let (t0, s0, r0) = probe();
     let Some(mut comm) = comm::Communicator::from_env_with(args.comm_dtype()?)? else {
         bail!(
             "comm-check needs the launch environment (LOWRANK_COMM_RDZV …); \
              run it as `lowrank-sge launch --nproc N comm-check`"
         );
     };
+    mark(&mut phases, "handshake", t0, s0, r0);
     let (rank, world) = (comm.rank(), comm.world());
     let base: Vec<f32> = (0..len)
         .map(|i| {
@@ -234,9 +275,13 @@ fn cmd_comm_check(args: &ArgMap) -> Result<()> {
         .collect();
 
     let mut ring = base.clone();
+    let (t0, s0, r0) = probe();
     comm.allreduce_sum_with(Algorithm::Ring, &mut ring)?;
+    mark(&mut phases, "ring-allreduce", t0, s0, r0);
     let mut tree = base.clone();
+    let (t0, s0, r0) = probe();
     comm.allreduce_sum_with(Algorithm::Tree, &mut tree)?;
+    mark(&mut phases, "tree-allreduce", t0, s0, r0);
     for (i, (r, t)) in ring.iter().zip(&tree).enumerate() {
         if r.to_bits() != t.to_bits() {
             bail!("comm-check FAILED: ring and tree disagree at element {i} ({r} vs {t})");
@@ -250,7 +295,9 @@ fn cmd_comm_check(args: &ArgMap) -> Result<()> {
     let crc = lowrank_sge::ckpt::crc32::crc32(&bytes);
     let mine: Vec<f32> = crc.to_le_bytes().iter().map(|&b| b as f32).collect();
     let mut gathered = vec![0.0f32; 4 * world];
+    let (t0, s0, r0) = probe();
     comm.all_gather(&mine, &mut gathered)?;
+    mark(&mut phases, "all-gather", t0, s0, r0);
     for (r, peer_bytes) in gathered.chunks_exact(4).enumerate() {
         let peer_crc = u32::from_le_bytes([
             peer_bytes[0] as u8,
@@ -275,17 +322,39 @@ fn cmd_comm_check(args: &ArgMap) -> Result<()> {
         })
         .collect();
     let mut bcast = base.clone();
+    let (t0, s0, r0) = probe();
     comm.broadcast(&mut bcast, 0)?;
+    mark(&mut phases, "broadcast", t0, s0, r0);
     for (i, (b, e)) in bcast.iter().zip(&expected0).enumerate() {
         if b.to_bits() != e.to_bits() {
             bail!("comm-check FAILED: broadcast element {i} is {b}, expected rank 0's {e}");
         }
     }
+    let (t0, s0, r0) = probe();
     comm.barrier()?;
+    mark(&mut phases, "barrier", t0, s0, r0);
     println!(
         "comm-check ok rank={rank} world={world} len={len} dtype={} crc={crc:08x} (ring==tree)",
         comm.wire_dtype().name()
     );
+    if rank == 0 {
+        println!(
+            "{:>16} {:>10} {:>10} {:>10} {:>10}",
+            "phase", "time(s)", "sent(MB)", "recv(MB)", "MB/s"
+        );
+        for (name, secs, sent, recv) in &phases {
+            let mb = (sent + recv) as f64 / 1e6;
+            println!(
+                "{name:>16} {secs:>10.4} {:>10.2} {:>10.2} {:>10.1}",
+                *sent as f64 / 1e6,
+                *recv as f64 / 1e6,
+                if *secs > 0.0 { mb / secs } else { 0.0 }
+            );
+        }
+    }
+    // observability epilogue: gather metrics snapshots to the leader,
+    // export + merge the Chrome traces (no-op without the flags)
+    lowrank_sge::coordinator::export_run_obs(&mut Collective::Comm(comm))?;
     Ok(())
 }
 
@@ -473,6 +542,8 @@ fn ckpt_options(args: &ArgMap, file: &ConfigFile, section: &str) -> Result<CkptO
 }
 
 fn cmd_pretrain(args: &ArgMap) -> Result<()> {
+    // before the collective: the connect handshake should be spanned too
+    lowrank_sge::obs::init(args.trace_out(), args.metrics_out());
     let dir = artifacts_dir();
     let mut rt = Runtime::new(&dir)?;
     // one rank of a `launch` world, or the classic in-process topology;
@@ -537,6 +608,7 @@ fn cmd_pretrain(args: &ArgMap) -> Result<()> {
             );
         }
     }
+    let resumed = cfg.ckpt.resume.is_some();
     let mut trainer = PretrainTrainer::with_collective(&mut rt, &dir, cfg, collective)?;
     let res = trainer.run()?;
     if leader {
@@ -552,7 +624,9 @@ fn cmd_pretrain(args: &ArgMap) -> Result<()> {
     // (every rank holds identical results, exactly one writes)
     if let Some(out) = args.get("out-csv") {
         if leader {
-            res.log.write_csv(std::path::Path::new(out))?;
+            // a resumed run's log holds only post-resume rows — append,
+            // so the earlier series survives (truncate on fresh runs)
+            res.log.write_csv_with(std::path::Path::new(out), resumed)?;
             println!("wrote {out}");
         }
     }
@@ -572,6 +646,7 @@ fn cmd_finetune(args: &ArgMap) -> Result<()> {
              run it without `launch`, or use `launch … pretrain` for multi-process DDP"
         );
     }
+    lowrank_sge::obs::init(args.trace_out(), args.metrics_out());
     let dir = artifacts_dir();
     let mut rt = Runtime::new(&dir)?;
     // defaults ← config file (--config path, [finetune] section) ← CLI
@@ -598,6 +673,7 @@ fn cmd_finetune(args: &ArgMap) -> Result<()> {
     if let Some(resume) = cfg.ckpt.resume {
         println!("resuming from {resume} in {:?}", cfg.ckpt.dir.as_ref().unwrap());
     }
+    let resumed = cfg.ckpt.resume.is_some();
     let mut trainer = FinetuneTrainer::new(&mut rt, &dir, cfg)?;
     let res = trainer.run()?;
     println!(
@@ -607,7 +683,8 @@ fn cmd_finetune(args: &ArgMap) -> Result<()> {
         res.log.mean_step_time(3).unwrap_or(f64::NAN)
     );
     if let Some(out) = args.get("out-csv") {
-        res.log.write_csv(std::path::Path::new(out))?;
+        // append on resume — the log holds only post-resume rows
+        res.log.write_csv_with(std::path::Path::new(out), resumed)?;
         println!("wrote {out}");
     }
     Ok(())

@@ -1,0 +1,178 @@
+//! The measured memory ledger: an opt-in tracked global allocator plus
+//! `/proc/self/status` high-water-mark sampling.
+//!
+//! [`TrackedAlloc`] is the promotion of the counting allocator that
+//! `tests/engine_alloc.rs` introduced (and `bench_util` still
+//! re-exports as `CountingAlloc`): besides the exact allocation-event
+//! count that pins the engine's zero-allocation contract, it tracks
+//! **live bytes** and **peak bytes** with relaxed atomics — a handful
+//! of RMW instructions per allocator entry, unconditionally (an
+//! allocator cannot consult the metrics enabled flag without biasing
+//! the very measurement a disabled run is compared against; the cost
+//! is four relaxed atomics on a path that already takes a malloc).
+//!
+//! Install per binary:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static GLOBAL: lowrank_sge::obs::TrackedAlloc = lowrank_sge::obs::TrackedAlloc;
+//! ```
+//!
+//! The `lowrank-sge` binary installs it, so `exp memory` and the
+//! trainers report measured heap peaks; library users that don't
+//! install it simply read zeros ([`TrackedAlloc::installed`] gates the
+//! reports).
+//!
+//! [`vm_hwm_kb`]/[`vm_rss_kb`] read the kernel's view — resident-set
+//! high-water mark including stacks, code, and allocator slack — the
+//! number to put beside the paper's Table 2 GPU peaks.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static ALLOC_EVENTS: AtomicUsize = AtomicUsize::new(0);
+static LIVE_BYTES: AtomicUsize = AtomicUsize::new(0);
+static PEAK_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Tracking wrapper around the system allocator: counts every entry
+/// that hands out memory (alloc / alloc_zeroed / realloc — the exact
+/// semantics `tests/engine_alloc.rs` pins) and maintains live/peak
+/// byte gauges.
+pub struct TrackedAlloc;
+
+impl TrackedAlloc {
+    /// Total allocator entries (alloc/alloc_zeroed/realloc) so far.
+    pub fn count() -> usize {
+        ALLOC_EVENTS.load(Ordering::SeqCst)
+    }
+
+    /// Bytes currently live (allocated minus freed).
+    pub fn live_bytes() -> usize {
+        LIVE_BYTES.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`Self::live_bytes`] since process start (or
+    /// the last [`Self::reset_peak`]).
+    pub fn peak_bytes() -> usize {
+        PEAK_BYTES.load(Ordering::Relaxed)
+    }
+
+    /// Reset the peak to the current live level — scoped measurements
+    /// (`exp memory`) bracket a region with `reset_peak` + `peak_bytes`.
+    pub fn reset_peak() {
+        PEAK_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Is the tracked allocator actually the process allocator? Detected
+    /// by use: any live allocation implies installation (every binary
+    /// allocates long before observing memory).
+    pub fn installed() -> bool {
+        LIVE_BYTES.load(Ordering::Relaxed) > 0 || ALLOC_EVENTS.load(Ordering::Relaxed) > 0
+    }
+}
+
+#[inline]
+fn on_grow(bytes: usize) {
+    let live = LIVE_BYTES.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    PEAK_BYTES.fetch_max(live, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for TrackedAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            on_grow(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            on_grow(layout.size());
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size >= layout.size() {
+                on_grow(new_size - layout.size());
+            } else {
+                LIVE_BYTES.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE_BYTES.fetch_sub(layout.size(), Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Parse one `<key>:  <n> kB` line out of `/proc/self/status`.
+fn proc_status_kb(key: &str) -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            let rest = rest.trim_start_matches(':').trim();
+            let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            return digits.parse().ok();
+        }
+    }
+    None
+}
+
+/// Peak resident set size in kB (`VmHWM`), `None` off Linux.
+pub fn vm_hwm_kb() -> Option<u64> {
+    proc_status_kb("VmHWM")
+}
+
+/// Current resident set size in kB (`VmRSS`), `None` off Linux.
+pub fn vm_rss_kb() -> Option<u64> {
+    proc_status_kb("VmRSS")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Not installed as the test binary's global allocator, so drive the
+    // GlobalAlloc impl directly.
+    #[test]
+    fn ledger_tracks_live_and_peak() {
+        let a = TrackedAlloc;
+        let layout = Layout::from_size_align(4096, 8).unwrap();
+        let live0 = TrackedAlloc::live_bytes();
+        let count0 = TrackedAlloc::count();
+        unsafe {
+            let p = a.alloc(layout);
+            assert!(!p.is_null());
+            assert!(TrackedAlloc::live_bytes() >= live0 + 4096);
+            assert!(TrackedAlloc::peak_bytes() >= live0 + 4096);
+            let p2 = a.realloc(p, layout, 8192);
+            assert!(!p2.is_null());
+            assert!(TrackedAlloc::live_bytes() >= live0 + 8192);
+            a.dealloc(p2, Layout::from_size_align(8192, 8).unwrap());
+        }
+        // grow events: alloc + realloc
+        assert_eq!(TrackedAlloc::count() - count0, 2);
+        // dealloc returned the live gauge to where it started
+        assert_eq!(TrackedAlloc::live_bytes(), live0);
+        // a scoped measurement brackets with reset_peak
+        TrackedAlloc::reset_peak();
+        assert_eq!(TrackedAlloc::peak_bytes(), TrackedAlloc::live_bytes());
+    }
+
+    #[test]
+    fn proc_status_reads_on_linux() {
+        if std::path::Path::new("/proc/self/status").exists() {
+            assert!(vm_rss_kb().unwrap_or(0) > 0 || vm_hwm_kb().is_some());
+        }
+    }
+}

@@ -1,0 +1,414 @@
+//! The metrics registry: counters, histograms, and value series with a
+//! branch-on-disabled hot path, snapshotted as JSONL.
+//!
+//! Hot-path metrics are `static` atomics ([`Counter`], [`Histogram`]):
+//! disabled, an update is one relaxed load; enabled, a handful of
+//! relaxed RMWs — never a lock, never an allocation. Cold-path series
+//! ([`record_value`] — per-step phase times, per-layer lift-residual
+//! norms) go through one mutex-guarded map keyed by name; they fire a
+//! few times per training step at most.
+//!
+//! A [`snapshot_json`] is one JSON object (hand-emitted — the crate
+//! has no serde) holding every counter, the histograms, the series
+//! stats (count/sum/min/max/last), the measured memory ledger
+//! ([`super::alloc`]), and the span-drop count. One snapshot per rank
+//! is one line of the `--metrics-out` JSONL file.
+//!
+//! # Cross-rank gather
+//!
+//! Snapshots ride the existing f32 `all_gather`: [`encode_snapshot`]
+//! smuggles the JSON bytes as small-integer f32s (exact on every
+//! target — the `comm-check` CRC idiom) in a fixed [`SNAPSHOT_F32S`]
+//! frame, [`decode_snapshot`] recovers the text on the leader. The
+//! leader writes one merged JSONL file — line r is rank r's snapshot —
+//! plus a per-rank summary table on stdout.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn the registry on or off (also driven by `obs::init`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is the registry on? One relaxed load — the whole disabled path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// A named monotonic counter. Updates are relaxed atomics gated on the
+/// global enabled flag.
+pub struct Counter {
+    name: &'static str,
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str) -> Counter {
+        Counter { name, v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Power-of-two bucket count for [`Histogram`] (bucket i counts
+/// observations with `floor(log2(v)) == i`, saturating at the top).
+pub const HIST_BUCKETS: usize = 40;
+
+/// A log2-bucketed histogram of u64 observations (nanoseconds on the
+/// pool queue-wait path).
+pub struct Histogram {
+    name: &'static str,
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_U64: AtomicU64 = AtomicU64::new(0);
+
+impl Histogram {
+    pub const fn new(name: &'static str) -> Histogram {
+        Histogram { name, count: ZERO_U64, sum: ZERO_U64, buckets: [ZERO_U64; HIST_BUCKETS] }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        if !enabled() {
+            return;
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        let bucket = (64 - u64::leading_zeros(v.max(1)) as usize - 1).min(HIST_BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+}
+
+// ---- the registry: every hot-path metric in the system ----
+
+/// Framed payload bytes sent on the f32 data lane (`comm::wire`).
+pub static WIRE_SENT_F32: Counter = Counter::new("comm.wire_sent_bytes_f32");
+/// Framed payload bytes sent on the bf16 data lane.
+pub static WIRE_SENT_BF16: Counter = Counter::new("comm.wire_sent_bytes_bf16");
+/// Framed bytes sent as control traffic (hello/barrier frames).
+pub static WIRE_SENT_CTRL: Counter = Counter::new("comm.wire_sent_bytes_ctrl");
+/// Framed payload bytes received on the f32 data lane.
+pub static WIRE_RECV_F32: Counter = Counter::new("comm.wire_recv_bytes_f32");
+/// Framed payload bytes received on the bf16 data lane.
+pub static WIRE_RECV_BF16: Counter = Counter::new("comm.wire_recv_bytes_bf16");
+/// Framed bytes received as control traffic.
+pub static WIRE_RECV_CTRL: Counter = Counter::new("comm.wire_recv_bytes_ctrl");
+/// Raw bytes written to sockets (`comm::transport::Conn::write_all`).
+pub static STREAM_SENT: Counter = Counter::new("comm.stream_sent_bytes");
+/// Raw bytes read from sockets (`Conn::read_exact`).
+pub static STREAM_RECV: Counter = Counter::new("comm.stream_recv_bytes");
+/// Comm frames sent / received.
+pub static FRAMES_SENT: Counter = Counter::new("comm.frames_sent");
+pub static FRAMES_RECV: Counter = Counter::new("comm.frames_recv");
+/// Tasks executed by the kernel pool (inline + queued).
+pub static POOL_TASKS: Counter = Counter::new("kernel.pool_tasks");
+/// Background checkpoint saves submitted.
+pub static CKPT_SAVES: Counter = Counter::new("ckpt.saves");
+
+/// Queue wait of pool tasks: enqueue → execution start, nanoseconds.
+pub static POOL_QUEUE_WAIT: Histogram = Histogram::new("kernel.queue_wait_ns");
+
+static COUNTERS: &[&Counter] = &[
+    &WIRE_SENT_F32,
+    &WIRE_SENT_BF16,
+    &WIRE_SENT_CTRL,
+    &WIRE_RECV_F32,
+    &WIRE_RECV_BF16,
+    &WIRE_RECV_CTRL,
+    &STREAM_SENT,
+    &STREAM_RECV,
+    &FRAMES_SENT,
+    &FRAMES_RECV,
+    &POOL_TASKS,
+    &CKPT_SAVES,
+];
+
+static HISTOGRAMS: &[&Histogram] = &[&POOL_QUEUE_WAIT];
+
+// ---- cold-path value series ----
+
+#[derive(Clone, Copy)]
+struct Series {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    last: f64,
+}
+
+fn series_map() -> &'static Mutex<BTreeMap<String, Series>> {
+    static SERIES: OnceLock<Mutex<BTreeMap<String, Series>>> = OnceLock::new();
+    SERIES.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Record one sample of a named series (phase durations, residual
+/// norms, losses). Cold path: a mutex and, on the first sample of a
+/// name, one allocation — call it per step/phase, not per element.
+pub fn record_value(name: &str, v: f64) {
+    if !enabled() {
+        return;
+    }
+    let mut map = series_map().lock().unwrap();
+    match map.get_mut(name) {
+        Some(s) => {
+            s.count += 1;
+            s.sum += v;
+            s.min = s.min.min(v);
+            s.max = s.max.max(v);
+            s.last = v;
+        }
+        None => {
+            map.insert(name.to_string(), Series { count: 1, sum: v, min: v, max: v, last: v });
+        }
+    }
+}
+
+/// Sum of a series, for end-of-run reports (0.0 if never recorded).
+pub fn series_sum(name: &str) -> f64 {
+    series_map().lock().unwrap().get(name).map(|s| s.sum).unwrap_or(0.0)
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.9}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// One rank's full registry as a single-line JSON object.
+pub fn snapshot_json(rank: usize) -> String {
+    let mut out = String::with_capacity(1024);
+    out.push_str(&format!("{{\"rank\":{rank},\"counters\":{{"));
+    for (i, c) in COUNTERS.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\"{}\":{}", c.name(), c.get()));
+    }
+    out.push_str("},\"histograms\":{");
+    for (i, h) in HISTOGRAMS.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\"{}\":{{\"count\":{},\"sum\":{},\"log2_buckets\":[",
+            h.name,
+            h.count(),
+            h.sum()
+        ));
+        for (j, b) in h.buckets.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&b.load(Ordering::Relaxed).to_string());
+        }
+        out.push_str("]}");
+    }
+    out.push_str("},\"series\":{");
+    {
+        let map = series_map().lock().unwrap();
+        for (i, (name, s)) in map.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\"{name}\":{{\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\"last\":{}}}",
+                s.count,
+                fmt_f64(s.sum),
+                fmt_f64(s.min),
+                fmt_f64(s.max),
+                fmt_f64(s.last)
+            ));
+        }
+    }
+    out.push_str("},\"mem\":{");
+    out.push_str(&format!(
+        "\"alloc_events\":{},\"live_bytes\":{},\"peak_bytes\":{},\"vm_hwm_kb\":{},\"vm_rss_kb\":{}",
+        super::alloc::TrackedAlloc::count(),
+        super::alloc::TrackedAlloc::live_bytes(),
+        super::alloc::TrackedAlloc::peak_bytes(),
+        super::alloc::vm_hwm_kb().unwrap_or(0),
+        super::alloc::vm_rss_kb().unwrap_or(0)
+    ));
+    out.push_str(&format!("}},\"spans_dropped\":{}}}", super::span::dropped_total()));
+    out
+}
+
+/// Pull `"key":<number>` out of a snapshot line — enough structure
+/// awareness for the leader's summary table (we wrote the JSON, keys
+/// are unique within a line).
+pub fn json_u64(json: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let at = json.find(&pat)? + pat.len();
+    let rest = &json[at..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+// ---- snapshot transport over the f32 all-gather ----
+
+/// Fixed per-rank frame: 4-byte length header + payload, one byte per
+/// f32. 32 KiB of JSON is far above a normal snapshot.
+pub const SNAPSHOT_F32S: usize = 32 * 1024;
+
+/// Encode a snapshot line for the all-gather. Oversized snapshots
+/// degrade loudly to a stub (never a torn JSON line).
+pub fn encode_snapshot(json: &str) -> Vec<f32> {
+    let mut bytes = json.as_bytes();
+    let cap = SNAPSHOT_F32S - 4;
+    if bytes.len() > cap {
+        eprintln!(
+            "obs: metrics snapshot is {} bytes (cap {cap}); replacing with a stub",
+            bytes.len()
+        );
+        bytes = b"{\"truncated\":true}";
+    }
+    let mut out = Vec::with_capacity(SNAPSHOT_F32S);
+    let len = bytes.len() as u32;
+    out.extend(len.to_le_bytes().iter().map(|&b| b as f32));
+    out.extend(bytes.iter().map(|&b| b as f32));
+    out.resize(SNAPSHOT_F32S, 0.0);
+    out
+}
+
+/// Decode one rank's frame back to its JSON line.
+pub fn decode_snapshot(frame: &[f32]) -> Result<String> {
+    if frame.len() != SNAPSHOT_F32S {
+        bail!("metrics snapshot frame has {} f32s, expected {SNAPSHOT_F32S}", frame.len());
+    }
+    let hdr: Vec<u8> = frame[..4].iter().map(|&v| v as u8).collect();
+    let len = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+    if len > SNAPSHOT_F32S - 4 {
+        bail!("metrics snapshot length {len} exceeds the frame");
+    }
+    let bytes: Vec<u8> = frame[4..4 + len].iter().map(|&v| v as u8).collect();
+    String::from_utf8(bytes).map_err(|e| anyhow::anyhow!("metrics snapshot is not UTF-8: {e}"))
+}
+
+/// The leader's per-rank summary table over gathered snapshot lines.
+pub fn summary_table(lines: &[String]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>4} {:>12} {:>12} {:>10} {:>12} {:>10}\n",
+        "rank", "sent(MB)", "recv(MB)", "tasks", "peak(MB)", "hwm(MB)"
+    ));
+    for (r, line) in lines.iter().enumerate() {
+        let mb = |k: &str| json_u64(line, k).unwrap_or(0) as f64 / 1e6;
+        out.push_str(&format!(
+            "{r:>4} {:>12.2} {:>12.2} {:>10} {:>12.2} {:>10.2}\n",
+            mb("comm.stream_sent_bytes"),
+            mb("comm.stream_recv_bytes"),
+            json_u64(line, "kernel.pool_tasks").unwrap_or(0),
+            mb("peak_bytes"),
+            json_u64(line, "vm_hwm_kb").unwrap_or(0) as f64 / 1e3,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The enabled flag is global; tests that toggle it must not
+    /// interleave.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_counters_do_not_move() {
+        let _g = test_guard();
+        static C: Counter = Counter::new("test.disabled");
+        set_enabled(false);
+        C.add(5);
+        assert_eq!(C.get(), 0);
+        set_enabled(true);
+        C.add(5);
+        assert_eq!(C.get(), 5);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        let _g = test_guard();
+        static H: Histogram = Histogram::new("test.hist");
+        set_enabled(true);
+        H.observe(1); // bucket 0
+        H.observe(1024); // bucket 10
+        H.observe(1025); // bucket 10
+        H.observe(u64::MAX); // saturates at the top bucket
+        assert_eq!(H.count(), 4);
+        assert_eq!(H.buckets[0].load(Ordering::Relaxed), 1);
+        assert_eq!(H.buckets[10].load(Ordering::Relaxed), 2);
+        assert_eq!(H.buckets[HIST_BUCKETS - 1].load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_the_f32_frame() {
+        let _g = test_guard();
+        set_enabled(true);
+        record_value("test.series", 1.5);
+        record_value("test.series", 2.5);
+        let json = snapshot_json(3);
+        assert!(json.contains("\"rank\":3"));
+        assert!(json.contains("\"test.series\""));
+        let frame = encode_snapshot(&json);
+        assert_eq!(frame.len(), SNAPSHOT_F32S);
+        let back = decode_snapshot(&frame).unwrap();
+        assert_eq!(back, json);
+        assert_eq!(json_u64(&back, "rank"), Some(3));
+        // oversize degrades to the stub, still valid
+        let big = "x".repeat(SNAPSHOT_F32S);
+        let frame = encode_snapshot(&big);
+        assert_eq!(decode_snapshot(&frame).unwrap(), "{\"truncated\":true}");
+    }
+
+    #[test]
+    fn summary_table_extracts_rank_rows() {
+        let lines = vec![
+            "{\"rank\":0,\"counters\":{\"comm.stream_sent_bytes\":2000000,\
+             \"comm.stream_recv_bytes\":1000000,\"kernel.pool_tasks\":7},\
+             \"mem\":{\"peak_bytes\":5000000,\"vm_hwm_kb\":9000}}"
+                .to_string(),
+        ];
+        let table = summary_table(&lines);
+        assert!(table.contains("2.00"), "{table}");
+        assert!(table.contains('7'), "{table}");
+        assert!(table.contains("9.00"), "{table}");
+    }
+}

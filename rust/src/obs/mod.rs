@@ -1,0 +1,182 @@
+//! Passive observability: structured spans, a metrics registry, and a
+//! measured memory ledger — threaded through the kernel pool, the
+//! estimator engine, the comm collectives, the async checkpointer, and
+//! both trainers.
+//!
+//! # Design contract: non-perturbing
+//!
+//! Observation must never change what is trained. Two properties pin
+//! that down:
+//!
+//! 1. **Zero overhead when off.** Every instrumentation point compiles
+//!    to a single relaxed atomic load of a global enabled flag; with
+//!    `--trace-out`/`--metrics-out` absent nothing else runs — no
+//!    allocation, no lock, no clock read. The engine's steady-state
+//!    zero-allocation contract (`tests/engine_alloc.rs`) holds with the
+//!    subsystem linked in because the disabled path touches no heap.
+//! 2. **Bit-identical when on.** Spans and counters only *read* clocks
+//!    and byte counts; they never touch the RNG streams, the reduction
+//!    orders, or any f32 arithmetic. `tests/obs_determinism.rs` pins
+//!    ParamStore bytes bitwise identical with observability on vs off
+//!    at thread counts 1 and 4.
+//!
+//! # Pieces
+//!
+//! * [`span`] — the span recorder: thread-local lock-free SPSC ring
+//!   buffers (one per thread, registered with a global collector on
+//!   first use), drained at export into Chrome `trace_event` JSON for
+//!   chrome://tracing / Perfetto (`--trace-out <path>`). Overflow is
+//!   loud-but-lossy: a full ring drops the span and counts the drop.
+//! * [`metrics`] — counters / gauges / histograms: wire bytes per
+//!   dtype lane, pool task counts + queue-wait histogram, per-layer
+//!   lift-residual norms, per-phase step-time series — snapshotted as
+//!   JSONL (`--metrics-out <path>`) and summarized at run end. In a
+//!   `launch` world every rank's snapshot is gathered to the leader
+//!   over the existing `all_gather` (bytes smuggled as small-integer
+//!   f32s, the `comm-check` CRC idiom) and written as one merged file.
+//! * [`alloc`] — the measured memory ledger: [`TrackedAlloc`], an
+//!   opt-in `#[global_allocator]` (promoted from the counting
+//!   allocator `tests/engine_alloc.rs` introduced) tracking allocation
+//!   events, live bytes, and peak bytes, plus `/proc/self/status`
+//!   VmHWM/VmRSS sampling. `exp memory` prints the measured peaks
+//!   beside the analytical model.
+//!
+//! # Multi-rank traces
+//!
+//! All ranks of a `launch` world share argv, so each rank writes its
+//! spans to a rank-scoped sibling of `--trace-out` ([`rank_scoped`]);
+//! after a barrier the leader string-merges the per-rank JSON arrays
+//! into the requested path ([`span::merge_chrome_traces`] — the ranks
+//! share a filesystem because `launch` is a local spawner). Events
+//! carry the rank as their Chrome `pid`, so the merged trace shows one
+//! process row per rank.
+
+pub mod alloc;
+pub mod metrics;
+pub mod span;
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+pub use alloc::TrackedAlloc;
+pub use span::{span, SpanGuard};
+
+/// Run-wide output paths, set once by `main` from `--trace-out` /
+/// `--metrics-out` (or by tests).
+#[derive(Default)]
+struct ObsConfig {
+    trace_out: Option<PathBuf>,
+    metrics_out: Option<PathBuf>,
+}
+
+static CONFIG: OnceLock<ObsConfig> = OnceLock::new();
+
+/// Enable the subsystem for this process: tracing iff `trace_out` is
+/// given, metrics iff `metrics_out` is given. Call once, before the
+/// run; later calls keep the first configuration.
+pub fn init(trace_out: Option<&str>, metrics_out: Option<&str>) {
+    let cfg = ObsConfig {
+        trace_out: trace_out.map(PathBuf::from),
+        metrics_out: metrics_out.map(PathBuf::from),
+    };
+    if CONFIG.set(cfg).is_ok() {
+        if trace_out.is_some() {
+            span::set_enabled(true);
+        }
+        if metrics_out.is_some() {
+            metrics::set_enabled(true);
+        }
+    }
+}
+
+/// The `--trace-out` path, if tracing was enabled with one.
+pub fn trace_out() -> Option<PathBuf> {
+    CONFIG.get().and_then(|c| c.trace_out.clone())
+}
+
+/// The `--metrics-out` path, if metrics were enabled with one.
+pub fn metrics_out() -> Option<PathBuf> {
+    CONFIG.get().and_then(|c| c.metrics_out.clone())
+}
+
+/// Rank-scoped sibling of an output path: `t.json` → `t.rank2.json`.
+/// Rank files keep every rank of a `launch` world (same argv on every
+/// rank) from clobbering one shared path; the leader merges them.
+pub fn rank_scoped(path: &Path, rank: usize) -> PathBuf {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    let ext = path.extension().and_then(|s| s.to_str()).unwrap_or("json");
+    path.with_file_name(format!("{stem}.rank{rank}.{ext}"))
+}
+
+/// A guard that records both a span (when tracing) and a per-phase
+/// duration series sample (when metrics) — the trainers' step-phase
+/// breakdown. Disabled, it is two relaxed loads and no clock read.
+#[must_use = "a phase measures the scope it is alive for"]
+pub struct Phase {
+    span: SpanGuard,
+    metric: &'static str,
+    start: Option<Instant>,
+}
+
+/// Open a phase: `cat`/`name` label the span, `metric` names the
+/// duration series (e.g. `pretrain.execute_s`).
+#[inline]
+pub fn phase(cat: &'static str, name: &'static str, metric: &'static str) -> Phase {
+    Phase {
+        span: span::span(cat, name),
+        metric,
+        start: if metrics::enabled() { Some(Instant::now()) } else { None },
+    }
+}
+
+impl Drop for Phase {
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            metrics::record_value(self.metric, t0.elapsed().as_secs_f64());
+        }
+        // span guard drops after, closing the trace event
+        let _ = &self.span;
+    }
+}
+
+/// Write this rank's spans for a `world`-rank run: single-process runs
+/// write `path` directly; multi-rank runs write the rank-scoped
+/// sibling (the leader merges after a barrier — [`merge_rank_traces`]).
+/// Returns the path written, or `None` when tracing is off.
+pub fn export_rank_trace(rank: usize, world: usize) -> anyhow::Result<Option<PathBuf>> {
+    let Some(path) = trace_out() else { return Ok(None) };
+    let out = if world > 1 { rank_scoped(&path, rank) } else { path };
+    span::write_chrome_trace(&out, rank)?;
+    Ok(Some(out))
+}
+
+/// Leader-side merge of every rank's trace file into `--trace-out`
+/// proper. Call after a barrier so all rank files are committed; the
+/// rank files are removed once merged.
+pub fn merge_rank_traces(world: usize) -> anyhow::Result<Option<PathBuf>> {
+    let Some(path) = trace_out() else { return Ok(None) };
+    if world <= 1 {
+        return Ok(Some(path));
+    }
+    let inputs: Vec<PathBuf> = (0..world).map(|r| rank_scoped(&path, r)).collect();
+    span::merge_chrome_traces(&path, &inputs)?;
+    for p in &inputs {
+        let _ = std::fs::remove_file(p);
+    }
+    Ok(Some(path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_scoped_inserts_rank_before_extension() {
+        assert_eq!(
+            rank_scoped(Path::new("/tmp/t.json"), 2),
+            PathBuf::from("/tmp/t.rank2.json")
+        );
+        assert_eq!(rank_scoped(Path::new("m.jsonl"), 0), PathBuf::from("m.rank0.jsonl"));
+    }
+}

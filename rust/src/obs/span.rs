@@ -1,0 +1,508 @@
+//! The span recorder: RAII spans into per-thread lock-free ring
+//! buffers, exported as Chrome `trace_event` JSON.
+//!
+//! # Hot path
+//!
+//! [`span`] with tracing disabled is one relaxed atomic load — no
+//! clock read, no thread-local touch, no allocation. Enabled, opening
+//! a span reads the monotonic clock once and dropping it pushes one
+//! fixed-size [`SpanEvent`] into the calling thread's SPSC ring: the
+//! owner thread is the only writer (`head`), the collector the only
+//! reader (`tail`, serialized by the registry lock), so a push is two
+//! atomic loads, one slot write, one release store — lock-free and
+//! wait-free. A full ring is **loud-but-lossy**: the span is dropped
+//! and counted, never blocked on (blocking would perturb the very
+//! timings being measured), and the drop count is reported at export.
+//!
+//! Rings register themselves with the global collector on a thread's
+//! first recorded span and outlive the thread (the registry holds an
+//! `Arc`), so spans recorded on short-lived helpers — pool workers,
+//! the ckpt writer, comm sender/receiver threads — survive to the
+//! drain.
+//!
+//! # Export
+//!
+//! [`write_chrome_trace`] drains every ring and writes a bare JSON
+//! array of complete (`"ph":"X"`) events — timestamps in microseconds
+//! since the process epoch, `pid` = rank, `tid` = a small per-thread
+//! id with `thread_name` metadata. The bare-array form is what makes
+//! the leader's cross-rank merge ([`merge_chrome_traces`]) a safe
+//! string-level concatenation; chrome://tracing and Perfetto accept
+//! both forms.
+
+use std::cell::{OnceCell, UnsafeCell};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+/// Per-thread ring capacity (events). At ~32 bytes/event this is
+/// ~256 KiB per observed thread, allocated on the thread's first span.
+pub const RING_CAP: usize = 8192;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn span recording on or off (also driven by `obs::init`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is span recording on? One relaxed load — the whole disabled path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds since the process-wide trace epoch (first use).
+#[inline]
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// One closed span. Label strings are `&'static str` by design: a
+/// recorded event is 4 words, never an allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+const EMPTY_EVENT: SpanEvent = SpanEvent { cat: "", name: "", start_ns: 0, dur_ns: 0 };
+
+/// SPSC ring: the owning thread pushes at `head`, the (lock-serialized)
+/// collector pops at `tail`. Indices increase monotonically; the live
+/// region is `[tail, head)` taken mod capacity.
+struct ThreadRing {
+    tid: u64,
+    label: String,
+    slots: Box<[UnsafeCell<SpanEvent>]>,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    dropped: AtomicUsize,
+}
+
+// Slots in [tail, head) are only read by the collector and only
+// written by the owner strictly before the head release-store that
+// publishes them — the SPSC discipline makes the cell sharing sound.
+unsafe impl Send for ThreadRing {}
+unsafe impl Sync for ThreadRing {}
+
+impl ThreadRing {
+    fn new(tid: u64, label: String) -> ThreadRing {
+        let slots: Vec<UnsafeCell<SpanEvent>> =
+            (0..RING_CAP).map(|_| UnsafeCell::new(EMPTY_EVENT)).collect();
+        ThreadRing {
+            tid,
+            label,
+            slots: slots.into_boxed_slice(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicUsize::new(0),
+        }
+    }
+
+    /// Owner-thread push. Full ring: count the drop and move on.
+    fn push(&self, ev: SpanEvent) {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        if head.wrapping_sub(tail) >= self.slots.len() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        unsafe { *self.slots[head % self.slots.len()].get() = ev };
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+    }
+
+    /// Collector-side drain (caller holds the registry lock).
+    fn drain_into(&self, out: &mut Vec<(u64, SpanEvent)>) {
+        let head = self.head.load(Ordering::Acquire);
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        while tail != head {
+            out.push((self.tid, unsafe { *self.slots[tail % self.slots.len()].get() }));
+            tail = tail.wrapping_add(1);
+        }
+        self.tail.store(tail, Ordering::Release);
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<ThreadRing>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<ThreadRing>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static LOCAL: OnceCell<Arc<ThreadRing>> = const { OnceCell::new() };
+}
+
+fn register_current_thread() -> Arc<ThreadRing> {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let label = std::thread::current()
+        .name()
+        .map(|n| n.to_string())
+        .unwrap_or_else(|| format!("thread-{tid}"));
+    let ring = Arc::new(ThreadRing::new(tid, label));
+    registry().lock().unwrap().push(ring.clone());
+    ring
+}
+
+/// Record one closed span on the calling thread's ring (creating and
+/// registering the ring on first use).
+pub fn record(cat: &'static str, name: &'static str, start_ns: u64, dur_ns: u64) {
+    LOCAL.with(|cell| {
+        cell.get_or_init(register_current_thread)
+            .push(SpanEvent { cat, name, start_ns, dur_ns })
+    });
+}
+
+/// RAII span: created by [`span`], records on drop. Disabled guards
+/// carry no timestamp and drop to nothing.
+#[must_use = "a span measures the scope it is alive for"]
+pub struct SpanGuard {
+    cat: &'static str,
+    name: &'static str,
+    start_ns: u64,
+    armed: bool,
+}
+
+/// Open a span labelled `cat`/`name` around the current scope.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { cat, name, start_ns: 0, armed: false };
+    }
+    SpanGuard { cat, name, start_ns: now_ns(), armed: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let end = now_ns();
+            record(self.cat, self.name, self.start_ns, end.saturating_sub(self.start_ns));
+        }
+    }
+}
+
+/// Drain every registered ring. Returns `(tid, event)` pairs in ring
+/// order (sort by `start_ns` for a timeline) plus the per-thread
+/// labels; the total drop count is in [`dropped_total`].
+pub fn drain_all() -> (Vec<(u64, SpanEvent)>, Vec<(u64, String)>) {
+    let rings = registry().lock().unwrap();
+    let mut events = Vec::new();
+    let mut labels = Vec::new();
+    for ring in rings.iter() {
+        ring.drain_into(&mut events);
+        labels.push((ring.tid, ring.label.clone()));
+    }
+    (events, labels)
+}
+
+/// Total spans lost to ring overflow so far, across all threads.
+pub fn dropped_total() -> usize {
+    registry().lock().unwrap().iter().map(|r| r.dropped.load(Ordering::Relaxed)).sum()
+}
+
+fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Drain all rings and write the events as a bare Chrome `trace_event`
+/// JSON array — `pid` is the caller's rank so merged multi-rank traces
+/// show one process row per rank. Returns the event count written;
+/// ring-overflow drops are reported loudly on stderr.
+pub fn write_chrome_trace(path: &Path, pid: usize) -> Result<usize> {
+    let (mut events, labels) = drain_all();
+    events.sort_by_key(|(_, e)| e.start_ns);
+    let mut out = String::with_capacity(64 + 128 * events.len());
+    out.push_str("[\n");
+    let mut first = true;
+    for (tid, label) in &labels {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"args\":{{\"name\":\""
+        ));
+        escape_json(label, &mut out);
+        out.push_str("\"}}");
+    }
+    for (tid, ev) in &events {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str("{\"name\":\"");
+        escape_json(ev.name, &mut out);
+        out.push_str("\",\"cat\":\"");
+        escape_json(ev.cat, &mut out);
+        out.push_str(&format!(
+            "\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\"pid\":{pid},\"tid\":{tid}}}",
+            ev.start_ns as f64 / 1e3,
+            ev.dur_ns as f64 / 1e3
+        ));
+    }
+    out.push_str("\n]\n");
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    f.write_all(out.as_bytes())?;
+    let dropped = dropped_total();
+    if dropped > 0 {
+        eprintln!(
+            "obs: {dropped} span(s) dropped to ring overflow — the trace in {} is incomplete",
+            path.display()
+        );
+    }
+    Ok(events.len())
+}
+
+/// String-merge per-rank bare-array trace files (written by
+/// [`write_chrome_trace`]) into one array at `out`. Safe precisely
+/// because we wrote the inputs: each is `[` events `]` with no nested
+/// top-level brackets outside string-free event objects.
+pub fn merge_chrome_traces(out: &Path, inputs: &[PathBuf]) -> Result<()> {
+    let mut bodies = Vec::with_capacity(inputs.len());
+    for p in inputs {
+        let s = std::fs::read_to_string(p)
+            .with_context(|| format!("reading rank trace {}", p.display()))?;
+        let t = s.trim();
+        let Some(inner) = t.strip_prefix('[').and_then(|t| t.strip_suffix(']')) else {
+            bail!("rank trace {} is not a bare JSON array", p.display());
+        };
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            bodies.push(inner.to_string());
+        }
+    }
+    let mut f = std::fs::File::create(out)
+        .with_context(|| format!("creating merged trace {}", out.display()))?;
+    writeln!(f, "[\n{}\n]", bodies.join(",\n"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The recorder is global (enabled flag, ring registry); these
+    /// tests drain and toggle it, so they must not interleave.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Minimal JSON syntax checker (objects/arrays/strings/numbers/
+    /// literals) — enough to certify the emitted trace parses.
+    fn check_json(s: &str) -> std::result::Result<(), String> {
+        let b = s.as_bytes();
+        let mut i = 0usize;
+        fn ws(b: &[u8], i: &mut usize) {
+            while *i < b.len() && (b[*i] as char).is_whitespace() {
+                *i += 1;
+            }
+        }
+        fn value(b: &[u8], i: &mut usize) -> std::result::Result<(), String> {
+            ws(b, i);
+            match b.get(*i) {
+                Some(b'{') => {
+                    *i += 1;
+                    ws(b, i);
+                    if b.get(*i) == Some(&b'}') {
+                        *i += 1;
+                        return Ok(());
+                    }
+                    loop {
+                        ws(b, i);
+                        string(b, i)?;
+                        ws(b, i);
+                        if b.get(*i) != Some(&b':') {
+                            return Err(format!("expected ':' at {i:?}"));
+                        }
+                        *i += 1;
+                        value(b, i)?;
+                        ws(b, i);
+                        match b.get(*i) {
+                            Some(b',') => *i += 1,
+                            Some(b'}') => {
+                                *i += 1;
+                                return Ok(());
+                            }
+                            other => return Err(format!("bad object at {i:?}: {other:?}")),
+                        }
+                    }
+                }
+                Some(b'[') => {
+                    *i += 1;
+                    ws(b, i);
+                    if b.get(*i) == Some(&b']') {
+                        *i += 1;
+                        return Ok(());
+                    }
+                    loop {
+                        value(b, i)?;
+                        ws(b, i);
+                        match b.get(*i) {
+                            Some(b',') => *i += 1,
+                            Some(b']') => {
+                                *i += 1;
+                                return Ok(());
+                            }
+                            other => return Err(format!("bad array at {i:?}: {other:?}")),
+                        }
+                    }
+                }
+                Some(b'"') => string(b, i),
+                Some(c)
+                    if c.is_ascii_digit() || *c == b'-' || *c == b't' || *c == b'f'
+                        || *c == b'n' =>
+                {
+                    while *i < b.len()
+                        && matches!(b[*i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E'
+                            | b'a'..=b'z')
+                    {
+                        *i += 1;
+                    }
+                    Ok(())
+                }
+                other => Err(format!("bad value at {i:?}: {other:?}")),
+            }
+        }
+        fn string(b: &[u8], i: &mut usize) -> std::result::Result<(), String> {
+            if b.get(*i) != Some(&b'"') {
+                return Err(format!("expected string at {i:?}"));
+            }
+            *i += 1;
+            while let Some(&c) = b.get(*i) {
+                match c {
+                    b'\\' => *i += 2,
+                    b'"' => {
+                        *i += 1;
+                        return Ok(());
+                    }
+                    _ => *i += 1,
+                }
+            }
+            Err("unterminated string".into())
+        }
+        value(b, &mut i)?;
+        ws(b, &mut i);
+        if i != b.len() {
+            return Err(format!("trailing bytes at {i}"));
+        }
+        Ok(())
+    }
+
+    /// Emit spans from a dedicated thread so concurrent lib tests
+    /// cannot interleave events onto the ring under test.
+    fn on_thread<T: Send + 'static>(name: &str, f: impl FnOnce() -> T + Send + 'static) -> T {
+        std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(f)
+            .unwrap()
+            .join()
+            .unwrap()
+    }
+
+    #[test]
+    fn nested_spans_record_containment_and_cross_thread_drain_sees_them() {
+        let _g = test_guard();
+        set_enabled(true);
+        on_thread("obs-nest", || {
+            let outer = span("obs-test", "outer");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _inner = span("obs-test", "inner");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            drop(outer);
+        });
+        // drain happens on the test thread — cross-thread by design
+        let (events, labels) = drain_all();
+        let ours: Vec<&SpanEvent> =
+            events.iter().map(|(_, e)| e).filter(|e| e.cat == "obs-test").collect();
+        let outer = ours.iter().find(|e| e.name == "outer").expect("outer span");
+        let inner = ours.iter().find(|e| e.name == "inner").expect("inner span");
+        assert!(inner.start_ns >= outer.start_ns);
+        assert!(inner.start_ns + inner.dur_ns <= outer.start_ns + outer.dur_ns + 1_000);
+        assert!(labels.iter().any(|(_, l)| l == "obs-nest"), "thread label registered");
+    }
+
+    #[test]
+    fn ring_overflow_is_loud_but_lossy() {
+        let _g = test_guard();
+        set_enabled(true);
+        let dropped = on_thread("obs-overflow", || {
+            let before_local = 0usize;
+            for _ in 0..RING_CAP + 100 {
+                record("obs-overflow", "tick", 0, 1);
+            }
+            // read this thread's own ring drop count
+            LOCAL.with(|cell| {
+                cell.get().map(|r| r.dropped.load(Ordering::Relaxed)).unwrap_or(before_local)
+            })
+        });
+        assert!(dropped >= 100, "expected >=100 drops, saw {dropped}");
+        assert!(dropped_total() >= dropped);
+        // the surviving RING_CAP events are still drainable
+        let (events, _) = drain_all();
+        let survived = events.iter().filter(|(_, e)| e.cat == "obs-overflow").count();
+        assert_eq!(survived, RING_CAP);
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = test_guard();
+        on_thread("obs-off", || {
+            set_enabled(false);
+            let _s = span("obs-disabled", "never");
+            drop(_s);
+            set_enabled(true);
+        });
+        let (events, _) = drain_all();
+        assert!(events.iter().all(|(_, e)| e.cat != "obs-disabled"));
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json_and_merges() {
+        let _g = test_guard();
+        set_enabled(true);
+        on_thread("obs-json", || {
+            let _s = span("obs-json", "work \"quoted\"\\slash");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        let dir = std::env::temp_dir().join(format!("lowrank_obs_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p0 = dir.join("r0.json");
+        let n = write_chrome_trace(&p0, 0).unwrap();
+        assert!(n >= 1);
+        let body = std::fs::read_to_string(&p0).unwrap();
+        check_json(&body).unwrap();
+        assert!(body.contains("\"ph\":\"X\""));
+        assert!(body.contains("thread_name"));
+        // merge two rank files (second may be event-free) into one array
+        let p1 = dir.join("r1.json");
+        write_chrome_trace(&p1, 1).unwrap();
+        let merged = dir.join("merged.json");
+        merge_chrome_traces(&merged, &[p0, p1]).unwrap();
+        let body = std::fs::read_to_string(&merged).unwrap();
+        check_json(&body).unwrap();
+        assert!(body.contains("\"pid\":0"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,136 @@
+//! The observability non-perturbation contract: turning tracing and
+//! metrics on must not change a single trained bit. The LowRank-LR
+//! engine loop (the same fixture as `tests/engine_alloc.rs`) runs once
+//! with the subsystem off and once with spans + metrics fully on, at
+//! thread counts 1 and 4; the resulting ParamStore must be bitwise
+//! identical. The two tests here share one lock because they both
+//! toggle the process-global enabled flags.
+
+use std::sync::Mutex;
+
+use lowrank_sge::bench_util::engine_fixture;
+use lowrank_sge::coordinator::SubspaceSet;
+use lowrank_sge::estimator::engine::{GradEstimator, GradSignal, MethodShape};
+use lowrank_sge::model::ParamStore;
+use lowrank_sge::obs;
+use lowrank_sge::optim::AdamConfig;
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::rng::Rng;
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+const DIMS: [(usize, usize, usize); 3] = [(48, 32, 4), (32, 32, 2), (40, 24, 8)];
+const HEAD_LEN: usize = 24;
+const STEPS: u64 = 23;
+
+/// One full fixture run: fresh store/engine/RNG, `STEPS` LowRank-LR
+/// steps (with resamples mid-run via a fresh subspace draw), returning
+/// every parameter byte.
+fn run_fixture(threads: usize) -> Vec<u8> {
+    lowrank_sge::kernel::set_global_threads(threads);
+    let (mut store, slots) = engine_fixture(&DIMS, HEAD_LEN);
+    let sub = SubspaceSet::from_slots(slots, ProjectorKind::Stiefel, 1.0);
+    let mut engine = GradEstimator::new(
+        MethodShape::LowRankLr,
+        1e-2,
+        Some(sub),
+        Vec::new(),
+        Vec::new(),
+        Some((DIMS.len(), HEAD_LEN, AdamConfig::default())),
+    );
+    let mut rng = Rng::new(7);
+    engine.subspace.as_mut().unwrap().resample(&mut rng);
+    for step in 0..STEPS {
+        if step == 11 {
+            // exercise the resample path (spanned in the trainers) too
+            engine.subspace.as_mut().unwrap().resample(&mut rng);
+        }
+        engine.draw_perturbations(&mut rng);
+        let fp = 0.8 + (step as f32) * 0.003;
+        let fm = 0.7 - (step as f32) * 0.002;
+        engine
+            .step(&mut store, GradSignal::Antithetic { f_plus: fp, f_minus: fm }, 1e-3)
+            .unwrap();
+    }
+    store_bytes(&store)
+}
+
+fn store_bytes(store: &ParamStore) -> Vec<u8> {
+    let mut out = Vec::new();
+    for i in 0..store.len() {
+        for v in store.f32(i).unwrap() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[test]
+fn trained_bits_are_identical_with_obs_on_and_off() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    for threads in [1usize, 4] {
+        obs::span::set_enabled(false);
+        obs::metrics::set_enabled(false);
+        let off = run_fixture(threads);
+
+        obs::span::set_enabled(true);
+        obs::metrics::set_enabled(true);
+        let on = run_fixture(threads);
+
+        // leave the process flags off for any later assertions
+        obs::span::set_enabled(false);
+        obs::metrics::set_enabled(false);
+
+        // assert! (not assert_eq!) so a failure doesn't dump every byte
+        assert!(
+            off == on,
+            "observability perturbed the trained bytes at {threads} thread(s)"
+        );
+        assert!(!off.is_empty() && off.iter().any(|&b| b != 0));
+    }
+}
+
+#[test]
+fn traced_run_exports_valid_chrome_json() {
+    let _guard = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::span::set_enabled(true);
+    obs::metrics::set_enabled(true);
+    let _ = run_fixture(2);
+    obs::metrics::record_value("test.series", 1.25);
+
+    let dir = std::env::temp_dir().join("lowrank_sge_obs_determinism");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    let n = obs::span::write_chrome_trace(&path, 0).unwrap();
+    obs::span::set_enabled(false);
+    obs::metrics::set_enabled(false);
+
+    assert!(n > 0, "a traced engine run must record spans");
+    let text = std::fs::read_to_string(&path).unwrap();
+    // bare JSON array of event objects with the Chrome trace_event keys
+    assert!(text.trim_start().starts_with('[') && text.trim_end().ends_with(']'), "{text}");
+    assert!(text.contains("\"ph\":\"X\"") && text.contains("\"cat\":\"engine\""), "{text}");
+    // balanced delimiters outside strings — the same light-weight JSON
+    // check the span unit tests use
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for c in text.chars() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            '[' | '{' if !in_str => depth += 1,
+            ']' | '}' if !in_str => depth -= 1,
+            _ => {}
+        }
+    }
+    assert_eq!(depth, 0, "unbalanced JSON in exported trace");
+    assert!(!in_str);
+
+    // the metrics snapshot of the same run is one parseable JSON line
+    let snap = obs::metrics::snapshot_json(0);
+    assert!(snap.starts_with('{') && snap.ends_with('}'), "{snap}");
+    assert!(obs::metrics::json_u64(&snap, "kernel.pool_tasks").is_some(), "{snap}");
+}
