@@ -21,6 +21,7 @@ use std::time::Duration;
 use lowrank_sge::bench_util::{bench, fmt_time, log_csv, report, JsonReport};
 use lowrank_sge::comm::{Algorithm, CommConfig, Communicator, TransportKind, WireDtype};
 use lowrank_sge::coordinator::{allreduce_mean_with, Collective};
+use lowrank_sge::kernel::simd::{self, SimdMode};
 use lowrank_sge::kernel::KernelPool;
 
 static DIR_COUNTER: AtomicUsize = AtomicUsize::new(0);
@@ -187,8 +188,54 @@ fn bench_slot_pipeline(
     json.entry(&name_p, n_slots * len, &pipelined, None);
 }
 
+/// The bf16 convert lane feeding the wire codec: round-trip MB/s of the
+/// batch kernels under the forced-scalar emulation vs the dispatched
+/// vector backend (`kernel::simd` — same bits either way, so the
+/// speedup is pure throughput).
+fn bench_bf16_convert(json: &mut JsonReport) {
+    println!("== bf16 convert lane: forced-scalar vs SIMD (1M elements) ==");
+    let len = 1_000_000usize;
+    let src: Vec<f32> = (0..len).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+    let mut lanes = vec![0u16; len];
+    let mut widened = vec![0.0f32; len];
+    let bytes = 4.0 * len as f64;
+    let prev = simd::mode();
+    let mut mbps = [[0.0f64; 2]; 2];
+    for (i, (mode, tag)) in
+        [(SimdMode::Scalar, "scalar"), (SimdMode::Auto, "simd")].into_iter().enumerate()
+    {
+        simd::set_mode(mode);
+        let backend = simd::active_backend();
+        let q = bench(3, 15, || {
+            simd::f32_to_bf16_batch(&src, &mut lanes);
+            std::hint::black_box(&lanes);
+        });
+        let w = bench(3, 15, || {
+            simd::bf16_to_f32_batch(&lanes, &mut widened);
+            std::hint::black_box(&widened);
+        });
+        mbps[i] = [bytes / q.median_s / 1e6, bytes / w.median_s / 1e6];
+        for (dir, stats, rate) in
+            [("quantize", &q, mbps[i][0]), ("widen", &w, mbps[i][1])]
+        {
+            let name = format!("bf16_{dir}_1m_{tag}");
+            report(&name, stats);
+            println!("    {name}: {rate:.1} MB/s [{backend}]");
+            log_csv("allreduce.csv", &name, stats);
+            json.entry(&name, len, stats, Some(rate));
+        }
+    }
+    simd::set_mode(prev);
+    println!(
+        "    SIMD speedup: quantize {:.2}x, widen {:.2}x (acceptance bar: >= 2x)",
+        mbps[1][0] / mbps[0][0],
+        mbps[1][1] / mbps[0][1]
+    );
+}
+
 fn main() {
     let mut json = JsonReport::new("allreduce");
+    bench_bf16_convert(&mut json);
     println!("== all-reduce: in-process tree vs multi-process ring/tree, f32 vs bf16 wire ==");
     // (label, elements): lifted-gradient m·r at the LLaMA-proxy scale
     // shapes (d_model 128/192/256 × rank 16), and a 1M full-grad point

@@ -4,6 +4,7 @@
 //! substrate (same bits at every thread count; see `kernel` docs).
 
 use lowrank_sge::bench_util::{bench, log_csv, report, JsonReport};
+use lowrank_sge::kernel::simd::{self, SimdMode};
 use lowrank_sge::kernel::{self, KernelPool};
 use lowrank_sge::linalg::{matmul, matmul_tn, sym_eig, thin_qr, Mat};
 use lowrank_sge::model::lift_into;
@@ -42,6 +43,44 @@ fn main() {
         println!(
             "{:>60}",
             format!("4-thread speedup over serial: {:.2}x", serial / par4)
+        );
+    }
+
+    println!("-- f32 GEMM: forced-scalar vs SIMD (same bits, fixed-lane contract) --");
+    {
+        let (m, k, n) = (1024usize, 1024usize, 64usize);
+        let mut rng = Rng::new(42);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let pool = KernelPool::new(1); // serial: isolates the vector-core speedup
+        let flops = 2.0 * (m * k * n) as f64;
+        let prev = simd::mode();
+        let mut med = [0.0f64; 2];
+        for (i, (mode, tag)) in
+            [(SimdMode::Scalar, "scalar"), (SimdMode::Auto, "simd")].into_iter().enumerate()
+        {
+            simd::set_mode(mode);
+            let backend = simd::active_backend();
+            let mut c = vec![0.0f32; m * n];
+            let stats = bench(2, 10, || {
+                c.iter_mut().for_each(|v| *v = 0.0);
+                kernel::gemm_nn(&pool, &a, &b, &mut c, m, k, n);
+                std::hint::black_box(&c);
+            });
+            let name = format!("gemm_f32_{m}x{k}x{n}_{tag}");
+            report(&name, &stats);
+            println!(
+                "{:>60}",
+                format!("≈ {:.2} GFLOP/s [{backend}]", flops / stats.median_s / 1e9)
+            );
+            log_csv("linalg.csv", &name, &stats);
+            json.entry(&name, m * k * n, &stats, None);
+            med[i] = stats.median_s;
+        }
+        simd::set_mode(prev);
+        println!(
+            "{:>60}",
+            format!("SIMD speedup over forced-scalar: {:.2}x", med[0] / med[1])
         );
     }
 

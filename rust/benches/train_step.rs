@@ -118,6 +118,50 @@ fn main() -> anyhow::Result<()> {
         json.entry(&name, 4_000_000, &stats, Some(16e6 / stats.median_s / 1e6));
     }
 
+    // the same lift fan-out under the forced-scalar lane emulation vs
+    // the dispatched vector core (serial pool isolates the SIMD win;
+    // the bits are identical either way — fixed-lane contract)
+    println!("-- lift fan-out: forced-scalar vs SIMD (serial pool) --");
+    {
+        use lowrank_sge::kernel::simd::{self, SimdMode};
+        let pool = KernelPool::new(1);
+        let slots = 8usize;
+        let (m, n, r) = (384usize, 384usize, 16usize);
+        let b: Vec<f32> = (0..m * r).map(|i| (i as f32) * 1e-4).collect();
+        let v: Vec<f32> = (0..n * r).map(|i| (i as f32) * 1e-4 - 0.1).collect();
+        let mut thetas: Vec<Vec<f32>> = vec![vec![0.0f32; m * n]; slots];
+        let prev = simd::mode();
+        let mut med = [0.0f64; 2];
+        for (i, (mode, tag)) in
+            [(SimdMode::Scalar, "scalar"), (SimdMode::Auto, "simd")].into_iter().enumerate()
+        {
+            simd::set_mode(mode);
+            let backend = simd::active_backend();
+            let stats = bench(2, 10, || {
+                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                for theta in thetas.iter_mut() {
+                    let (b, v) = (&b, &v);
+                    tasks.push(Box::new(move || {
+                        lowrank_sge::kernel::serial::gemm_nt(1.0f32, b, v, theta, m, n, r)
+                    }));
+                }
+                pool.run(tasks);
+                std::hint::black_box(&thetas);
+            });
+            let name = format!("lift_fanout_{slots}x{m}x{n}_r{r}_{tag}");
+            report(&name, &stats);
+            println!("{:>60}", format!("[{backend}]"));
+            log_csv("train_step.csv", &name, &stats);
+            json.entry(&name, slots * m * n, &stats, None);
+            med[i] = stats.median_s;
+        }
+        simd::set_mode(prev);
+        println!(
+            "{:>60}",
+            format!("SIMD speedup over forced-scalar: {:.2}x", med[0] / med[1])
+        );
+    }
+
     let dir = artifacts_dir();
     if !dir.join("INDEX.txt").exists() {
         eprintln!("artifacts not built — run `make artifacts` first; skipping");

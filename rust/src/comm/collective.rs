@@ -18,7 +18,7 @@
 //! * The **ring** algorithm partitions the payload into `world`
 //!   contiguous chunks (bounds `i·len/world`), ring-offset-exchanges
 //!   chunk copies (step s: send to rank+s, receive from rank−s, full
-//!   duplex via a helper send thread), locally reduces the `world`
+//!   duplex via a long-lived per-peer sender thread), locally reduces the `world`
 //!   copies of the owned chunk **with the same pairing tree in rank
 //!   order on the kernel pool**, and ring all-gathers the reduced
 //!   chunks. Per element the association is identical to the tree, so
@@ -64,6 +64,8 @@
 //! startup, not mid-training).
 
 use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -162,6 +164,124 @@ pub struct Communicator {
     /// across calls so the per-step tree slots stay allocation-free in
     /// steady state (mirrors the f32 tree's lazy `scratch`).
     gather_scratch: Vec<Vec<f32>>,
+    /// Long-lived sender threads, indexed by peer rank and spawned
+    /// lazily on the first full-duplex exchange with that peer. The
+    /// slot-pipelined ring issues many small exchange steps; queueing
+    /// the send on a persistent thread instead of spawning a scoped one
+    /// per step saves the ~10 µs spawn cost each time.
+    senders: Vec<Option<PeerSender>>,
+}
+
+/// A type- and lifetime-erased send queued on a [`PeerSender`] (see
+/// [`PeerSender::submit`] for the soundness argument).
+type SendJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion state shared between a queued send and its
+/// [`SendTicket`]: the result slot plus the condvar that announces it.
+type SendState = Arc<(Mutex<Option<Result<()>>>, Condvar)>;
+
+/// A long-lived sender thread for one peer connection. Full-duplex
+/// exchange steps queue their outbound transfer here and drain the
+/// inbound link on the calling thread — the same deadlock-free schedule
+/// the old per-step scoped spawn gave, without the spawn.
+#[derive(Debug)]
+struct PeerSender {
+    /// `None` only during drop (taking it closes the worker's queue).
+    tx: Option<mpsc::Sender<SendJob>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Handle to one in-flight queued send. [`Self::wait`] blocks until the
+/// transfer finished and yields its result; dropping the ticket without
+/// waiting **also blocks** until the transfer finished — an early `?`
+/// return on the receive side must not release buffers the sender
+/// thread is still reading.
+struct SendTicket {
+    state: SendState,
+    waited: bool,
+}
+
+impl SendTicket {
+    fn wait(mut self) -> Result<()> {
+        self.waited = true;
+        let (lock, cvar) = &*self.state;
+        let mut slot = lock.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(res) = slot.take() {
+                return res;
+            }
+            slot = cvar.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+impl Drop for SendTicket {
+    fn drop(&mut self) {
+        if self.waited {
+            return;
+        }
+        let (lock, cvar) = &*self.state;
+        let mut slot = lock.lock().unwrap_or_else(|e| e.into_inner());
+        while slot.is_none() {
+            slot = cvar.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+impl PeerSender {
+    fn spawn(peer: usize) -> PeerSender {
+        let (tx, rx) = mpsc::channel::<SendJob>();
+        let handle = std::thread::Builder::new()
+            .name(format!("comm-send-{peer}"))
+            .spawn(move || {
+                // runs until the communicator drops the sending half
+                while let Ok(job) = rx.recv() {
+                    job();
+                }
+            })
+            .expect("spawning comm sender thread");
+        PeerSender { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Queue one send on the worker thread. The closure may borrow the
+    /// caller's connection and payload; erasing those lifetimes to
+    /// `'static` is sound because the returned ticket — including its
+    /// `Drop` — blocks until the worker has finished running the
+    /// closure, so every borrow strictly outlives its use (the same
+    /// latch argument as `KernelPool::run`'s scoped tasks).
+    fn submit<'env, F>(&self, f: F) -> SendTicket
+    where
+        F: FnOnce() -> Result<()> + Send + 'env,
+    {
+        let state: SendState = Arc::new((Mutex::new(None), Condvar::new()));
+        let worker_state = Arc::clone(&state);
+        let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+            let res = f();
+            let (lock, cvar) = &*worker_state;
+            *lock.lock().unwrap_or_else(|e| e.into_inner()) = Some(res);
+            cvar.notify_all();
+        });
+        // SAFETY: lifetime erasure only — the ticket's wait/Drop blocks
+        // until the job has run, upholding every borrow in `f`.
+        let job: SendJob = unsafe { std::mem::transmute(job) };
+        self.tx
+            .as_ref()
+            .expect("PeerSender used during drop")
+            .send(job)
+            .expect("comm sender thread exited while the communicator is alive");
+        SendTicket { state, waited: false }
+    }
+}
+
+impl Drop for PeerSender {
+    fn drop(&mut self) {
+        // closing the queue ends the worker's recv loop; join so no
+        // send can outlive the connection it borrows
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 /// An in-flight ring all-reduce between its exchange and gather phases.
@@ -262,6 +382,7 @@ impl Communicator {
             send_hello(&conn, rank, dtype)?;
             peers[peer] = Some(conn);
         }
+        let senders = (0..cfg.world).map(|_| None).collect();
         Ok(Communicator {
             rank,
             world: cfg.world,
@@ -270,6 +391,7 @@ impl Communicator {
             dtype,
             seq: 0,
             gather_scratch: Vec::new(),
+            senders,
         })
     }
 
@@ -369,6 +491,20 @@ impl Communicator {
             .with_context(|| format!("no comm connection to rank {rank}"))
     }
 
+    /// Spawn the long-lived sender thread for `rank` if it does not
+    /// exist yet (a missing connection fails before anything spawns).
+    fn ensure_sender(&mut self, rank: usize) -> Result<()> {
+        if self.senders[rank].is_none() {
+            self.peer(rank)?;
+            self.senders[rank] = Some(PeerSender::spawn(rank));
+        }
+        Ok(())
+    }
+
+    fn sender(&self, rank: usize) -> &PeerSender {
+        self.senders[rank].as_ref().expect("ensure_sender must run before sender")
+    }
+
     /// In-place sum across all ranks with the configured algorithm;
     /// every rank ends with the identical (bitwise) total.
     pub fn allreduce_sum(&mut self, data: &mut [f32]) -> Result<()> {
@@ -462,13 +598,16 @@ impl Communicator {
         for s in 1..world {
             let dst = (rank + s) % world;
             let src = (rank + world - s) % world;
+            self.ensure_sender(dst)?;
             let dst_conn = self.peer(dst)?;
             let src_conn = self.peer(src)?;
             let recv_slice = &mut out[src * k..(src + 1) * k];
-            both_ways(
-                || wire::send_f32s(dst_conn, seq, mine, WireDtype::F32),
-                || wire::recv_f32s_into(src_conn, seq, recv_slice, WireDtype::F32),
-            )?;
+            let ticket = self
+                .sender(dst)
+                .submit(|| wire::send_f32s(dst_conn, seq, mine, WireDtype::F32));
+            let recv_res = wire::recv_f32s_into(src_conn, seq, recv_slice, WireDtype::F32);
+            ticket.wait()?;
+            recv_res?;
         }
         Ok(())
     }
@@ -552,12 +691,15 @@ impl Communicator {
             let src = (rank + world - s) % world;
             let send_chunk = &data[bounds[dst]..bounds[dst + 1]];
             let mut buf = vec![0.0f32; own_len];
+            self.ensure_sender(dst)?;
             let dst_conn = self.peer(dst)?;
             let src_conn = self.peer(src)?;
-            both_ways(
-                || wire::send_f32s(dst_conn, seq_x, send_chunk, dtype),
-                || wire::recv_f32s_into(src_conn, seq_x, &mut buf, dtype),
-            )?;
+            let ticket = self
+                .sender(dst)
+                .submit(|| wire::send_f32s(dst_conn, seq_x, send_chunk, dtype));
+            let recv_res = wire::recv_f32s_into(src_conn, seq_x, &mut buf, dtype);
+            ticket.wait()?;
+            recv_res?;
             copies[src] = Some(buf);
         }
         let contrib: Vec<Vec<f32>> = (0..world)
@@ -597,13 +739,16 @@ impl Communicator {
         for s in 1..world {
             let dst = (rank + s) % world;
             let src = (rank + world - s) % world;
+            self.ensure_sender(dst)?;
             let dst_conn = self.peer(dst)?;
             let src_conn = self.peer(src)?;
             let recv_slice = &mut data[bounds[src]..bounds[src + 1]];
-            both_ways(
-                || wire::send_f32s(dst_conn, seq, &own_copy, dtype),
-                || wire::recv_f32s_into(src_conn, seq, recv_slice, dtype),
-            )?;
+            let ticket = self
+                .sender(dst)
+                .submit(|| wire::send_f32s(dst_conn, seq, &own_copy, dtype));
+            let recv_res = wire::recv_f32s_into(src_conn, seq, recv_slice, dtype);
+            ticket.wait()?;
+            recv_res?;
         }
         Ok(())
     }
@@ -745,31 +890,6 @@ fn check_hello_dtype(advertised: u64, ours: WireDtype, peer: usize) -> Result<()
          set --comm-dtype/LOWRANK_COMM_DTYPE identically on every rank",
         ours.name()
     )
-}
-
-/// Run a send and a receive concurrently (the send on a scoped helper
-/// thread) so every rank is always draining its inbound link while its
-/// outbound one fills — the schedule stays deadlock-free at any payload
-/// size, independent of socket buffer depth.
-///
-/// The per-call thread spawn (~10 µs) is a deliberate simplicity
-/// tradeoff: it keeps the exchange logic free of persistent sender
-/// state. If `benches/allreduce.rs` ever shows it dominating at small
-/// payloads, a long-lived sender thread per peer is the follow-on.
-fn both_ways<S, R>(send: S, recv: R) -> Result<()>
-where
-    S: FnOnce() -> Result<()> + Send,
-    R: FnOnce() -> Result<()>,
-{
-    std::thread::scope(|scope| {
-        let sender = scope.spawn(send);
-        let recv_res = recv();
-        let send_res = sender
-            .join()
-            .map_err(|_| anyhow::anyhow!("comm sender thread panicked"))?;
-        send_res?;
-        recv_res
-    })
 }
 
 /// Parent of `rank` in the stride-doubling pairing tree: the rank it

@@ -48,6 +48,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::transport::Conn;
 use crate::ckpt::crc32::crc32;
+use crate::kernel::simd;
 use crate::obs::metrics;
 
 pub const MAGIC: [u8; 4] = *b"LRCM";
@@ -188,22 +189,16 @@ fn count_wire_bytes(sent: bool, dtype_byte: u8, bytes: usize) {
 /// hardware convention). Sign and exponent survive exactly: ±0, ±∞,
 /// and every subnormal round to their nearest bf16 neighbour, and NaNs
 /// stay NaN (a mantissa bit is forced so a NaN whose high mantissa
-/// bits are zero cannot quiet to ∞).
+/// bits are zero cannot quiet to ∞). The canonical definition (and the
+/// 8-wide batch kernels the frame codec uses) lives in
+/// [`crate::kernel::simd`]; this re-export keeps the wire API stable.
 pub fn f32_to_bf16(x: f32) -> u16 {
-    let bits = x.to_bits();
-    if x.is_nan() {
-        return ((bits >> 16) as u16) | 0x0040;
-    }
-    // round-to-nearest-even: add 0x7FFF plus the current LSB of the
-    // kept mantissa, then truncate. Finite values that round past the
-    // largest bf16 saturate to ±∞ — the IEEE behaviour.
-    let round = 0x7FFF + ((bits >> 16) & 1);
-    (bits.wrapping_add(round) >> 16) as u16
+    simd::f32_to_bf16(x)
 }
 
 /// bfloat16 bits → f32, exactly (low mantissa bits zero-filled).
 pub fn bf16_to_f32(b: u16) -> f32 {
-    f32::from_bits((b as u32) << 16)
+    simd::bf16_to_f32(b)
 }
 
 /// Round one f32 through bf16 and back — the value a `Bf16` receive
@@ -215,11 +210,16 @@ pub fn bf16_round(x: f32) -> f32 {
 
 /// Quantize a buffer in place to the bf16-representable grid
 /// (elementwise, order-free — deterministic at any thread count).
+/// Vectorized 8-wide where the dispatch allows; every backend computes
+/// identical bits.
 pub fn quantize_bf16(data: &mut [f32]) {
-    for v in data {
-        *v = bf16_round(*v);
-    }
+    simd::quantize_bf16_batch(data);
 }
+
+/// Elements per stack-buffered conversion block in the frame codec:
+/// big enough to amortize the batch-kernel call, small enough to stay
+/// comfortably on the stack (512 B as u16, 1 KB as f32).
+const BF16_BLOCK: usize = 256;
 
 /// A decoded frame header + payload (payload widened to f32 whatever
 /// the wire dtype was).
@@ -276,8 +276,17 @@ fn encode_body_into(
             }
         }
         WireDtype::Bf16 => {
-            for v in payload {
-                out.extend_from_slice(&f32_to_bf16(*v).to_le_bytes());
+            // convert through the 8-wide batch kernel in stack-buffered
+            // blocks instead of a scalar round per element
+            let mut lanes = [0u16; BF16_BLOCK];
+            let mut bytes = [0u8; 2 * BF16_BLOCK];
+            for chunk in payload.chunks(BF16_BLOCK) {
+                let lanes = &mut lanes[..chunk.len()];
+                simd::f32_to_bf16_batch(chunk, lanes);
+                for (dst, b) in bytes.chunks_exact_mut(2).zip(lanes.iter()) {
+                    dst.copy_from_slice(&b.to_le_bytes());
+                }
+                out.extend_from_slice(&bytes[..2 * chunk.len()]);
             }
         }
     }
@@ -369,8 +378,16 @@ fn widen_payload(dtype: WireDtype, payload_bytes: &[u8], out: &mut [f32]) {
             }
         }
         WireDtype::Bf16 => {
-            for (dst, src) in out.iter_mut().zip(payload_bytes.chunks_exact(2)) {
-                *dst = bf16_to_f32(u16::from_le_bytes([src[0], src[1]]));
+            // stack-buffered blocks through the 8-wide widen kernel
+            let mut lanes = [0u16; BF16_BLOCK];
+            for (dst_block, src_block) in
+                out.chunks_mut(BF16_BLOCK).zip(payload_bytes.chunks(2 * BF16_BLOCK))
+            {
+                let lanes = &mut lanes[..dst_block.len()];
+                for (l, src) in lanes.iter_mut().zip(src_block.chunks_exact(2)) {
+                    *l = u16::from_le_bytes([src[0], src[1]]);
+                }
+                simd::bf16_to_f32_batch(lanes, dst_block);
             }
         }
     }

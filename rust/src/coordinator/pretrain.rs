@@ -139,6 +139,11 @@ pub struct PretrainTrainer {
     db_outs: Vec<usize>,
     /// Artifact output slot of each full-rank gradient, in slot order.
     f_douts: Vec<usize>,
+    /// Persistent dB/dΘ staging: `grad_stage[k][s]` is slot k's shard-s
+    /// contribution, doubling as the all-reduce scratch (the reduced
+    /// gradient lands in `[k][0]`). Reused across steps, so the
+    /// execute→reduce path stops re-allocating full-gradient buffers.
+    grad_stage: Vec<Vec<Vec<f32>>>,
 }
 
 impl PretrainTrainer {
@@ -251,6 +256,7 @@ impl PretrainTrainer {
             vocab,
             db_outs,
             f_douts,
+            grad_stage: Vec::new(),
         })
     }
 
@@ -388,20 +394,24 @@ impl PretrainTrainer {
             let n_shards = shards.len();
             let n_b = self.db_outs.len();
             let n_f = self.f_douts.len();
-            let mut groups: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n_b + n_f];
+            // persistent staging: the first step allocates the
+            // full-gradient buffers, every later step just copies into
+            // them (taken out of `self` for the duration of the borrow)
+            let mut groups = std::mem::take(&mut self.grad_stage);
+            groups.resize(n_b + n_f, Vec::new());
             let mut loss_acc = 0.0f32;
             {
                 let _p = crate::obs::phase("trainer", "execute", "step.execute_s");
-                for shard in shards {
+                for (s_idx, shard) in shards.into_iter().enumerate() {
                     let inputs = self.build_inputs(shard.tokens);
                     let out = self.grad_art.execute(&inputs)?;
                     drop(inputs);
                     loss_acc += out[0].scalar()?;
                     for (si, &oi) in self.db_outs.iter().enumerate() {
-                        groups[si].push(out[oi].as_f32()?.to_vec());
+                        stage_grad(&mut groups[si], s_idx, out[oi].as_f32()?);
                     }
                     for (fi, &oi) in self.f_douts.iter().enumerate() {
-                        groups[n_b + fi].push(out[oi].as_f32()?.to_vec());
+                        stage_grad(&mut groups[n_b + fi], s_idx, out[oi].as_f32()?);
                     }
                 }
             }
@@ -414,24 +424,18 @@ impl PretrainTrainer {
             // sequential per-slot loop
             self.collective.allreduce_mean_slots(&mut groups)?;
             drop(_p_reduce);
-            let mut reduced = groups.into_iter().map(|mut g| g.swap_remove(0));
-            let mut db: Vec<Vec<f32>> = reduced.by_ref().take(n_b).collect();
-            let mut df: Vec<Vec<f32>> = reduced.collect();
 
-            // global-norm clip across all gradients (paper: 1.0)
-            let mut views: Vec<&mut [f32]> = Vec::with_capacity(n_b + n_f);
-            views.extend(db.iter_mut().map(|g| g.as_mut_slice()));
-            views.extend(df.iter_mut().map(|g| g.as_mut_slice()));
+            // global-norm clip across all gradients (paper: 1.0) — the
+            // reduced gradient for slot k sits in groups[k][0]
+            let mut views: Vec<&mut [f32]> =
+                groups.iter_mut().map(|g| g[0].as_mut_slice()).collect();
             let grad_norm = clip_global_norm(&mut views, cfg.clip);
+            drop(views);
 
             // one engine step: subspace-B and full-rank Adam updates,
             // both fanned out across the kernel pool (bitwise equal to
             // the serial loop)
-            let slot_grads: Vec<&[f32]> = db
-                .iter()
-                .map(|g| g.as_slice())
-                .chain(df.iter().map(|g| g.as_slice()))
-                .collect();
+            let slot_grads: Vec<&[f32]> = groups.iter().map(|g| g[0].as_slice()).collect();
             let _p_update = crate::obs::phase("trainer", "update", "step.update_s");
             let stats = self.engine.step(
                 &mut self.store,
@@ -444,6 +448,8 @@ impl PretrainTrainer {
                 lr,
             )?;
             drop(_p_update);
+            drop(slot_grads);
+            self.grad_stage = groups;
 
             log.push(StepRecord {
                 step,
@@ -584,5 +590,21 @@ impl PretrainTrainer {
         }
         self.rng.load_state(loaded.group("rng")?)?;
         Ok(())
+    }
+}
+
+/// Stage one shard's gradient into the persistent buffers: push on the
+/// first step, plain copy in steady state (no per-step allocation).
+fn stage_grad(group: &mut Vec<Vec<f32>>, shard: usize, src: &[f32]) {
+    if group.len() <= shard {
+        group.push(src.to_vec());
+        return;
+    }
+    let dst = &mut group[shard];
+    if dst.len() == src.len() {
+        dst.copy_from_slice(src);
+    } else {
+        dst.clear();
+        dst.extend_from_slice(src);
     }
 }

@@ -60,6 +60,9 @@ pub struct SubspaceSet {
     pub kind: ProjectorKind,
     pub c: f64,
     outer_iterations: u64,
+    /// Reusable view staging for the parallel lift fan-out
+    /// ([`ParamStore::f32_mut_many_with`]).
+    lift_scratch: crate::model::MutManyScratch,
 }
 
 fn bracket_name(s: &str, prefix: &str) -> Option<String> {
@@ -75,7 +78,13 @@ impl SubspaceSet {
     /// golden tests and allocation benches use.
     pub fn from_slots(slots: Vec<MatrixSlot>, kind: ProjectorKind, c: f64) -> Self {
         assert!(!slots.is_empty(), "a SubspaceSet needs at least one slot");
-        SubspaceSet { slots, kind, c, outer_iterations: 0 }
+        SubspaceSet {
+            slots,
+            kind,
+            c,
+            outer_iterations: 0,
+            lift_scratch: crate::model::MutManyScratch::new(),
+        }
     }
 
     /// Build from a manifest that has `bs[...]`/`vs[...]` inputs (the
@@ -125,7 +134,13 @@ impl SubspaceSet {
         if slots.is_empty() {
             bail!("manifest {} has no bs[...] inputs", manifest.name);
         }
-        Ok(SubspaceSet { slots, kind, c, outer_iterations: 0 })
+        Ok(SubspaceSet {
+            slots,
+            kind,
+            c,
+            outer_iterations: 0,
+            lift_scratch: crate::model::MutManyScratch::new(),
+        })
     }
 
     /// Build for ZO artifacts: `zs[...]`/`vs[...]` inputs, no B input
@@ -170,7 +185,13 @@ impl SubspaceSet {
         if slots.is_empty() {
             bail!("manifest {} has no zs[...] inputs", manifest.name);
         }
-        Ok(SubspaceSet { slots, kind, c, outer_iterations: 0 })
+        Ok(SubspaceSet {
+            slots,
+            kind,
+            c,
+            outer_iterations: 0,
+            lift_scratch: crate::model::MutManyScratch::new(),
+        })
     }
 
     /// Resample every V (Algorithm 1 line 3): B ← 0, fresh V, Adam
@@ -202,16 +223,41 @@ impl SubspaceSet {
     /// deep and the bytes match a serial pass exactly.
     pub fn lift(&mut self, store: &mut ParamStore) -> Result<()> {
         let _span = crate::obs::span("engine", "lift");
-        let positions: Vec<usize> = self.slots.iter().map(|s| s.param_pos).collect();
-        let thetas = store.f32_mut_many(&positions)?;
         let pool = kernel::global();
-        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
-        for (slot, theta) in self.slots.iter().zip(thetas) {
-            let (m, n, r) = (slot.m, slot.n, slot.r);
-            let (b, v) = (slot.b.as_slice(), slot.v.as_slice());
-            tasks.push(Box::new(move || kernel::serial::gemm_nt(1.0f32, b, v, theta, m, n, r)));
+        if pool.threads() == 1 {
+            // inline serial path: no boxed tasks, no view staging — the
+            // zero-allocation contract's route (tests/engine_alloc.rs)
+            for slot in &self.slots {
+                let theta = store.f32_mut(slot.param_pos)?;
+                kernel::serial::gemm_nt(
+                    1.0f32,
+                    slot.b.as_slice(),
+                    slot.v.as_slice(),
+                    theta,
+                    slot.m,
+                    slot.n,
+                    slot.r,
+                );
+            }
+        } else {
+            let positions: Vec<usize> = self.slots.iter().map(|s| s.param_pos).collect();
+            let slots = &self.slots;
+            store.f32_mut_many_with(
+                &positions,
+                &mut self.lift_scratch,
+                |thetas: &mut Vec<&mut [f32]>| {
+                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+                    for (slot, theta) in slots.iter().zip(thetas.drain(..)) {
+                        let (m, n, r) = (slot.m, slot.n, slot.r);
+                        let (b, v) = (slot.b.as_slice(), slot.v.as_slice());
+                        tasks.push(Box::new(move || {
+                            kernel::serial::gemm_nt(1.0f32, b, v, theta, m, n, r)
+                        }));
+                    }
+                    pool.run(tasks);
+                },
+            )?;
         }
-        pool.run(tasks);
         if crate::obs::metrics::enabled() {
             // per-layer lift residual ‖B‖_F — how much subspace motion
             // each outer iteration folded into Θ (read back from the
@@ -235,6 +281,15 @@ impl SubspaceSet {
     pub fn adam_step_all<G: AsRef<[f32]> + Sync>(&mut self, grads: &[G], lr: f32) {
         assert_eq!(grads.len(), self.slots.len(), "one gradient per slot");
         let pool = kernel::global();
+        if pool.threads() == 1 {
+            // inline serial path: boxing the tasks would allocate, and
+            // this runs once per IPA step inside the zero-allocation
+            // contract (tests/engine_alloc.rs)
+            for (slot, g) in self.slots.iter_mut().zip(grads) {
+                slot.adam.step(Arc::make_mut(&mut slot.b), g.as_ref(), lr);
+            }
+            return;
+        }
         let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
         for (slot, g) in self.slots.iter_mut().zip(grads) {
             tasks.push(Box::new(move || {

@@ -18,8 +18,10 @@
 //! * [`GradEstimator`] — the f32, artifact-driven engine the finetune
 //!   and pretrain trainers route through. One [`GradEstimator::step`]
 //!   covers all four method shapes ([`MethodShape`]); the LowRank-LR
-//!   path is heap-allocation-free after warm-up on a serial pool (the
-//!   `engine_alloc` test and `train_step` bench pin this down).
+//!   and LowRank-IPA paths are heap-allocation-free after warm-up on a
+//!   serial pool (the `engine_alloc` test and `train_step` bench pin
+//!   this down), and the parallel fan-out stages its disjoint store
+//!   views through a reusable [`crate::model::MutManyScratch`].
 //! * [`OracleEngine`] — the f64, oracle-driven engine behind the §6.1
 //!   MSE study ([`super::mse`]): the same four shapes forming one-shot
 //!   estimates against [`ToyProblem`]'s closed-form gradient.
@@ -194,6 +196,9 @@ pub struct GradEstimator {
     lr_positions: Vec<usize>,
     /// Cached store positions of the `ipa_full` fan-out.
     ipa_positions: Vec<usize>,
+    /// Reusable view-staging workspace for the parallel fan-out
+    /// ([`ParamStore::f32_mut_many_with`]) — no per-step Vec churn.
+    mut_many_scratch: crate::model::MutManyScratch,
 }
 
 impl GradEstimator {
@@ -244,6 +249,7 @@ impl GradEstimator {
             b_prev,
             lr_positions,
             ipa_positions,
+            mut_many_scratch: crate::model::MutManyScratch::new(),
         }
     }
 
@@ -351,15 +357,21 @@ impl GradEstimator {
                             fslot.adam.step(store.f32_mut(fslot.param_pos)?, g, lr);
                         }
                     } else {
-                        let params = store.f32_mut_many(&self.ipa_positions)?;
-                        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
-                            Vec::with_capacity(self.ipa_full.len());
-                        for ((fslot, p), g) in
-                            self.ipa_full.iter_mut().zip(params).zip(fgrads)
-                        {
-                            tasks.push(Box::new(move || fslot.adam.step(p, g, lr)));
-                        }
-                        pool.run(tasks);
+                        let ipa_full = &mut self.ipa_full;
+                        store.f32_mut_many_with(
+                            &self.ipa_positions,
+                            &mut self.mut_many_scratch,
+                            |params: &mut Vec<&mut [f32]>| {
+                                let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                                    Vec::with_capacity(ipa_full.len());
+                                for ((fslot, p), g) in
+                                    ipa_full.iter_mut().zip(params.drain(..)).zip(fgrads)
+                                {
+                                    tasks.push(Box::new(move || fslot.adam.step(p, g, lr)));
+                                }
+                                pool.run(tasks);
+                            },
+                        )?;
                     }
                 }
                 if let Some(h) = &mut self.head {
@@ -393,30 +405,36 @@ impl GradEstimator {
                         lowrank_lr_slot_update(slot, z.as_slice(), g, bp, theta, scale, lr);
                     }
                 } else {
-                    let thetas = store.f32_mut_many(&self.lr_positions)?;
-                    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
-                        Vec::with_capacity(sub.slots.len());
-                    for ((((slot, theta), z), g), bp) in sub
-                        .slots
-                        .iter_mut()
-                        .zip(thetas)
-                        .zip(self.z.iter())
-                        .zip(self.g.iter_mut())
-                        .zip(self.b_prev.iter_mut())
-                    {
-                        tasks.push(Box::new(move || {
-                            lowrank_lr_slot_update(
-                                slot,
-                                z.as_slice(),
-                                g,
-                                bp,
-                                theta,
-                                scale,
-                                lr,
-                            )
-                        }));
-                    }
-                    pool.run(tasks);
+                    let (zs, gs, bps) = (&self.z, &mut self.g, &mut self.b_prev);
+                    store.f32_mut_many_with(
+                        &self.lr_positions,
+                        &mut self.mut_many_scratch,
+                        |thetas: &mut Vec<&mut [f32]>| {
+                            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> =
+                                Vec::with_capacity(sub.slots.len());
+                            for ((((slot, theta), z), g), bp) in sub
+                                .slots
+                                .iter_mut()
+                                .zip(thetas.drain(..))
+                                .zip(zs.iter())
+                                .zip(gs.iter_mut())
+                                .zip(bps.iter_mut())
+                            {
+                                tasks.push(Box::new(move || {
+                                    lowrank_lr_slot_update(
+                                        slot,
+                                        z.as_slice(),
+                                        g,
+                                        bp,
+                                        theta,
+                                        scale,
+                                        lr,
+                                    )
+                                }));
+                            }
+                            pool.run(tasks);
+                        },
+                    )?;
                 }
                 if let Some(h) = &mut self.head {
                     for (gi, zi) in h.g.iter_mut().zip(h.z.iter()) {

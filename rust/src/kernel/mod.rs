@@ -4,7 +4,12 @@
 //! once per operation and generically over [`Scalar`] (`f32`/`f64`):
 //!
 //! * [`scalar`] — the [`Scalar`] trait binding the two precisions to
-//!   one set of kernels.
+//!   one set of kernels, including the row primitives the blocked
+//!   kernels bottom out in.
+//! * [`simd`] — the explicit vector core behind those primitives:
+//!   runtime-dispatched AVX/NEON tiles plus a portable scalar
+//!   emulation of the same fixed lane layout, selected by
+//!   `LOWRANK_SIMD` ∈ {`auto`, `scalar`} (or [`simd::set_mode`]).
 //! * [`ops`] — blocked GEMM (`nn`/`tn`/`nt`), AXPY/scale,
 //!   deterministic chunked reductions, and the strided panel/rotation
 //!   primitives used by QR and the Jacobi eigensolver.
@@ -15,24 +20,29 @@
 //!
 //! # Determinism guarantee
 //!
-//! For every operation here, **parallel output is bitwise identical to
-//! serial output at any thread count**: GEMM partitions C into fixed
-//! row blocks whose per-element accumulation order never changes, and
-//! reductions combine fixed-size chunk partials through a fixed-shape
-//! tree. Layers above inherit the guarantee — the projection samplers,
-//! the per-slot subspace fan-out, and the DDP all-reduce all produce
-//! the same bits with `--threads 1` and `--threads 64`. The
-//! `tests/kernel_determinism.rs` suite and the CI matrix
-//! (`LOWRANK_THREADS` ∈ {1, 4}) pin this down.
+//! For every operation here, **output is bitwise identical at any
+//! thread count and on every SIMD backend**: GEMM partitions C into
+//! fixed row blocks whose per-element accumulation order never
+//! changes, reductions accumulate in the canonical fixed-lane order
+//! ([`lane_dot`], W = [`Scalar::LANES`] partial sums per dtype) and
+//! combine fixed-size chunk partials through a fixed-shape tree.
+//! Layers above inherit the guarantee — the projection samplers, the
+//! per-slot subspace fan-out, and the DDP all-reduce all produce the
+//! same bits with `--threads 1` and `--threads 64`, with
+//! `LOWRANK_SIMD=scalar` and `=auto`, on x86_64 and aarch64. The
+//! `tests/kernel_determinism.rs` and `tests/simd_lanes.rs` suites and
+//! the CI matrix (`LOWRANK_THREADS` ∈ {1, 4} × `LOWRANK_SIMD` ∈
+//! {scalar, auto}) pin this down.
 
 pub mod ops;
 pub mod pool;
 pub mod scalar;
+pub mod simd;
 
 pub use ops::{
     add_assign, auto, axpy, dot, gemm_nn, gemm_nt, gemm_tn, gemv_t_strided, ger_sub_strided,
-    rot_cols_strided, rot_rows, scale, serial, sum_sq, tree_reduce, tree_sum_vecs, REDUCE_CHUNK,
-    ROW_BLOCK,
+    lane_dot, rot_cols_strided, rot_rows, scale, serial, sum_sq, tree_reduce, tree_sum_vecs,
+    REDUCE_CHUNK, ROW_BLOCK,
 };
 pub use pool::{global, global_threads, set_global_threads, KernelPool};
 pub use scalar::Scalar;

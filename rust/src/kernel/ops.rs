@@ -2,27 +2,44 @@
 //! AXPY/scale, deterministic reductions, and the strided panel/rotation
 //! primitives the factorizations need. Every dense loop in the crate
 //! routes through here — exactly once per operation, for both `f32` and
-//! `f64`.
+//! `f64` — and bottoms out in the [`Scalar`] row primitives backed by
+//! the runtime-dispatched vector core in [`super::simd`].
 //!
 //! # Determinism contract
 //!
-//! Parallel results are **bitwise identical** to serial, independent of
-//! thread count:
+//! Results are **bitwise identical** at any thread count and on every
+//! SIMD backend (AVX, NEON, scalar emulation):
 //!
-//! * GEMM parallelizes over disjoint row blocks of C; each output
-//!   element is accumulated by exactly one task in k-ascending order —
-//!   the same order the serial kernel uses — so the partitioning cannot
-//!   change a single bit.
-//! * Reductions ([`dot`]) split the input into fixed
-//!   [`REDUCE_CHUNK`]-sized chunks (a function of the length only,
-//!   never of the thread count), compute per-chunk partials, and
-//!   combine them with a fixed-shape pairwise tree ([`tree_reduce`]).
-//! * Elementwise ops (AXPY, scale) touch each element independently.
+//! * Element-parallel loops — the j-innermost GEMM `nn`/`tn` updates,
+//!   AXPY, scale, add — compute each output element from the same
+//!   operands in the same order regardless of vector width, so
+//!   vectorizing them is order-preserving for free. GEMM parallelizes
+//!   over disjoint row blocks of C; each output element is accumulated
+//!   by exactly one task in k-ascending order, so the partitioning
+//!   cannot change a single bit.
+//! * Dot-like reductions — [`gemm_nt`] rows, [`dot`], `fro_inner` —
+//!   accumulate in the **canonical fixed-lane order**: W interleaved
+//!   partial sums (element `i` goes to lane `i mod W`), W fixed per
+//!   dtype ([`Scalar::LANES`]: 8 for f32, 4 for f64, never derived
+//!   from hardware vector width or thread count), the ragged tail
+//!   folded scalar-wise, the lanes combined by a fixed pairwise tree.
+//!   [`super::simd::lane_dot_scalar`] *is* the definition; the AVX and
+//!   NEON paths reproduce it bit-for-bit. This replaced the strictly
+//!   sequential per-chunk order of the pre-SIMD kernels — a one-time,
+//!   documented change of canonical bits (the `tests/engine_golden.rs`
+//!   references are expressed through the same helper).
+//! * Long reductions additionally split the input into fixed
+//!   [`REDUCE_CHUNK`]-sized chunks (a function of the length only),
+//!   compute per-chunk fixed-lane partials, and combine them with a
+//!   fixed-shape pairwise tree ([`tree_reduce`]).
 //!
 //! The kernels are **branchless** over the data: no zero-skip
 //! shortcuts, so NaN/Inf propagate exactly as IEEE arithmetic dictates
 //! (the old `linalg` GEMM silently dropped NaNs in B behind an
 //! `a == 0.0` skip; the regression tests in `linalg::ops` pin the fix).
+//! No FMA contraction anywhere: every multiply-add is two roundings on
+//! every backend, or the scalar emulation could not match the vector
+//! paths bitwise.
 
 use super::pool::KernelPool;
 use super::scalar::Scalar;
@@ -81,10 +98,8 @@ fn gemm_nn_rows<T: Scalar>(a: &[T], b: &[T], c: &mut [T], rows: usize, k: usize,
                 for kk in k0..k1 {
                     let aik = arow[kk];
                     let brow = &b[kk * n..(kk + 1) * n];
-                    // innermost j: contiguous in B and C, auto-vectorizes
-                    for j in j0..j1 {
-                        crow[j] += aik * brow[j];
-                    }
+                    // innermost j: contiguous in B and C, element-parallel
+                    T::fma_row(&mut crow[j0..j1], aik, &brow[j0..j1]);
                 }
             }
         }
@@ -110,9 +125,7 @@ fn gemm_tn_rows<T: Scalar>(
         for i in 0..rows {
             let aki = arow[i0 + i];
             let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += aki * brow[j];
-            }
+            T::fma_row(crow, aki, brow);
         }
     }
 }
@@ -132,10 +145,8 @@ fn gemm_nt_rows<T: Scalar>(
         let crow = &mut c[i * n..(i + 1) * n];
         for j in 0..n {
             let brow = &b[j * k..(j + 1) * k];
-            let mut s = T::ZERO;
-            for kk in 0..k {
-                s += arow[kk] * brow[kk];
-            }
+            // canonical fixed-lane reduction — see the module header
+            let s = T::lane_dot(arow, brow);
             crow[j] += alpha * s;
         }
     }
@@ -290,18 +301,12 @@ pub fn gemm_nt<T: Scalar>(
 pub fn axpy<T: Scalar>(pool: &KernelPool, alpha: T, x: &[T], y: &mut [T]) {
     assert_eq!(x.len(), y.len(), "axpy length mismatch");
     if pool.threads() == 1 || y.len() <= ELEM_CHUNK {
-        for (yi, xi) in y.iter_mut().zip(x) {
-            *yi += alpha * *xi;
-        }
+        T::fma_row(y, alpha, x);
         return;
     }
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     for (yc, xc) in y.chunks_mut(ELEM_CHUNK).zip(x.chunks(ELEM_CHUNK)) {
-        tasks.push(Box::new(move || {
-            for (yi, xi) in yc.iter_mut().zip(xc) {
-                *yi += alpha * *xi;
-            }
-        }));
+        tasks.push(Box::new(move || T::fma_row(yc, alpha, xc)));
     }
     pool.run(tasks);
 }
@@ -312,18 +317,12 @@ pub fn axpy<T: Scalar>(pool: &KernelPool, alpha: T, x: &[T], y: &mut [T]) {
 pub fn add_assign<T: Scalar>(pool: &KernelPool, y: &mut [T], x: &[T]) {
     assert_eq!(x.len(), y.len(), "add_assign length mismatch");
     if pool.threads() == 1 || y.len() <= ELEM_CHUNK {
-        for (yi, xi) in y.iter_mut().zip(x) {
-            *yi += *xi;
-        }
+        T::add_row(y, x);
         return;
     }
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     for (yc, xc) in y.chunks_mut(ELEM_CHUNK).zip(x.chunks(ELEM_CHUNK)) {
-        tasks.push(Box::new(move || {
-            for (yi, xi) in yc.iter_mut().zip(xc) {
-                *yi += *xi;
-            }
-        }));
+        tasks.push(Box::new(move || T::add_row(yc, xc)));
     }
     pool.run(tasks);
 }
@@ -331,18 +330,12 @@ pub fn add_assign<T: Scalar>(pool: &KernelPool, y: &mut [T], x: &[T]) {
 /// x *= α, elementwise across the pool.
 pub fn scale<T: Scalar>(pool: &KernelPool, x: &mut [T], alpha: T) {
     if pool.threads() == 1 || x.len() <= ELEM_CHUNK {
-        for xi in x.iter_mut() {
-            *xi *= alpha;
-        }
+        T::scale_row(x, alpha);
         return;
     }
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
     for xc in x.chunks_mut(ELEM_CHUNK) {
-        tasks.push(Box::new(move || {
-            for xi in xc.iter_mut() {
-                *xi *= alpha;
-            }
-        }));
+        tasks.push(Box::new(move || T::scale_row(xc, alpha)));
     }
     pool.run(tasks);
 }
@@ -432,14 +425,20 @@ pub fn dot<T: Scalar>(pool: &KernelPool, x: &[T], y: &[T]) -> T {
     tree_reduce(&partials)
 }
 
-/// One reduction chunk's partial ⟨x, y⟩ (sequential within the chunk —
-/// the canonical order both the serial and parallel paths share).
+/// One reduction chunk's partial ⟨x, y⟩ in the canonical fixed-lane
+/// order — the order every backend (serial, pooled, AVX, NEON) shares.
 fn chunk_dot<T: Scalar>(x: &[T], y: &[T]) -> T {
-    let mut s = T::ZERO;
-    for (a, b) in x.iter().zip(y) {
-        s += *a * *b;
-    }
-    s
+    T::lane_dot(x, y)
+}
+
+/// Σᵢ x[i]·y[i] in the canonical fixed-lane accumulation order
+/// (W = [`Scalar::LANES`] interleaved partials, scalar tail, fixed
+/// pairwise lane combine — see the module header). This is the helper
+/// golden references use to state dot-like results in canonical bits
+/// without going through the blocked kernels.
+pub fn lane_dot<T: Scalar>(x: &[T], y: &[T]) -> T {
+    assert_eq!(x.len(), y.len(), "lane_dot length mismatch");
+    T::lane_dot(x, y)
 }
 
 /// Σ xᵢ² with the same deterministic reduction as [`dot`].
@@ -505,9 +504,7 @@ pub mod auto {
     pub fn axpy<T: Scalar>(alpha: T, x: &[T], y: &mut [T]) {
         if y.len() <= ELEM_CHUNK {
             assert_eq!(x.len(), y.len(), "axpy length mismatch");
-            for (yi, xi) in y.iter_mut().zip(x) {
-                *yi += alpha * *xi;
-            }
+            T::fma_row(y, alpha, x);
         } else {
             super::axpy(&global(), alpha, x, y);
         }
@@ -516,9 +513,7 @@ pub mod auto {
     /// x *= α.
     pub fn scale<T: Scalar>(x: &mut [T], alpha: T) {
         if x.len() <= ELEM_CHUNK {
-            for xi in x.iter_mut() {
-                *xi *= alpha;
-            }
+            T::scale_row(x, alpha);
         } else {
             super::scale(&global(), x, alpha);
         }
@@ -560,9 +555,7 @@ pub fn gemv_t_strided<T: Scalar>(
     }
     for (i, &xi) in x.iter().enumerate() {
         let arow = &a[(i0 + i) * ld + j0..(i0 + i) * ld + j0 + cols];
-        for (wj, &aij) in w.iter_mut().zip(arow) {
-            *wj += xi * aij;
-        }
+        T::fma_row(w, xi, arow);
     }
 }
 
@@ -582,20 +575,15 @@ pub fn ger_sub_strided<T: Scalar>(
     assert_eq!(w.len(), cols, "ger_sub_strided: w length");
     for (i, &xi) in x.iter().enumerate() {
         let arow = &mut a[(i0 + i) * ld + j0..(i0 + i) * ld + j0 + cols];
-        for (aij, &wj) in arow.iter_mut().zip(w) {
-            *aij -= xi * wj;
-        }
+        // fnma, not fma with −xi: negating xi would flip a NaN's sign bit
+        T::fnma_row(arow, xi, w);
     }
 }
 
 /// Plane rotation of two contiguous rows: (x, y) ← (c·x + s·y, c·y − s·x).
 pub fn rot_rows<T: Scalar>(x: &mut [T], y: &mut [T], c: T, s: T) {
     assert_eq!(x.len(), y.len(), "rot_rows length mismatch");
-    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
-        let (xv, yv) = (*xi, *yi);
-        *xi = c * xv + s * yv;
-        *yi = c * yv - s * xv;
-    }
+    T::rot_span(x, y, c, s);
 }
 
 /// Plane rotation of two strided columns of a row-major matrix:

@@ -3,13 +3,18 @@
 //!
 //! Every dense kernel in [`crate::kernel`] is written once, generically
 //! over `Scalar`, and instantiated for `f32` (the training hot path) and
-//! `f64` (the estimator/theory stack). The bounds are deliberately
-//! minimal — plain IEEE arithmetic plus the constants the kernels need —
-//! so the generic code monomorphizes to exactly the loops the old
-//! hand-rolled per-precision kernels contained.
+//! `f64` (the estimator/theory stack). Beyond plain IEEE arithmetic and
+//! the constants, the trait carries the **row primitives** — the
+//! contiguous inner loops every blocked kernel in [`super::ops`] bottoms
+//! out in. The generic kernels stay scalar-agnostic; the two instances
+//! forward each primitive to the runtime-dispatched vector core in
+//! [`super::simd`] (AVX / NEON / portable scalar emulation, all
+//! bitwise-identical by the fixed-lane contract documented there).
 
 use std::fmt::Debug;
 use std::ops::{Add, AddAssign, Mul, MulAssign, Sub, SubAssign};
+
+use super::simd;
 
 /// An IEEE float the kernel layer operates on (`f32` or `f64`).
 pub trait Scalar:
@@ -29,17 +34,49 @@ pub trait Scalar:
     const ZERO: Self;
     const ONE: Self;
 
+    /// The canonical partial-sum width for dot-like reductions: 8 for
+    /// f32, 4 for f64. Fixed per dtype — never derived from hardware
+    /// vector width or thread count — so the accumulation order (and
+    /// therefore every bit of every reduction) is a property of the
+    /// dtype alone. See [`super::simd`] for the full contract.
+    const LANES: usize;
+
     /// Lossy conversion from f64 (used by tests and mixed-precision
     /// call sites; f64 → f32 rounds to nearest).
     fn from_f64(x: f64) -> Self;
 
     /// Widening conversion to f64 (exact for both instances).
     fn to_f64(self) -> f64;
+
+    /// Σᵢ x[i]·y[i] in the canonical fixed-lane order
+    /// ([`simd::lane_dot_scalar`]). The one reduction primitive; every
+    /// backend (AVX, NEON, scalar emulation) produces identical bits.
+    fn lane_dot(x: &[Self], y: &[Self]) -> Self;
+
+    /// c[j] += a·b[j] — the GEMM/AXPY row update (element-parallel, so
+    /// vectorization is order-preserving for free).
+    fn fma_row(c: &mut [Self], a: Self, b: &[Self]);
+
+    /// c[j] -= a·b[j] — the rank-1-update row (kept as its own
+    /// primitive rather than `fma_row` with a negated `a`: negating a
+    /// NaN flips its sign bit and would change propagated payloads).
+    fn fnma_row(c: &mut [Self], a: Self, b: &[Self]);
+
+    /// y[j] += x[j].
+    fn add_row(y: &mut [Self], x: &[Self]);
+
+    /// x[j] *= alpha.
+    fn scale_row(x: &mut [Self], alpha: Self);
+
+    /// (x[j], y[j]) ← (c·x[j] + s·y[j], c·y[j] − s·x[j]) — the Givens
+    /// rotation over two contiguous rows.
+    fn rot_span(x: &mut [Self], y: &mut [Self], c: Self, s: Self);
 }
 
 impl Scalar for f32 {
     const ZERO: Self = 0.0;
     const ONE: Self = 1.0;
+    const LANES: usize = 8;
 
     #[inline(always)]
     fn from_f64(x: f64) -> Self {
@@ -50,11 +87,42 @@ impl Scalar for f32 {
     fn to_f64(self) -> f64 {
         self as f64
     }
+
+    #[inline]
+    fn lane_dot(x: &[Self], y: &[Self]) -> Self {
+        simd::dot_f32(x, y)
+    }
+
+    #[inline]
+    fn fma_row(c: &mut [Self], a: Self, b: &[Self]) {
+        simd::fma_row_f32(c, a, b)
+    }
+
+    #[inline]
+    fn fnma_row(c: &mut [Self], a: Self, b: &[Self]) {
+        simd::fnma_row_f32(c, a, b)
+    }
+
+    #[inline]
+    fn add_row(y: &mut [Self], x: &[Self]) {
+        simd::add_row_f32(y, x)
+    }
+
+    #[inline]
+    fn scale_row(x: &mut [Self], alpha: Self) {
+        simd::scale_row_f32(x, alpha)
+    }
+
+    #[inline]
+    fn rot_span(x: &mut [Self], y: &mut [Self], c: Self, s: Self) {
+        simd::rot_span_f32(x, y, c, s)
+    }
 }
 
 impl Scalar for f64 {
     const ZERO: Self = 0.0;
     const ONE: Self = 1.0;
+    const LANES: usize = 4;
 
     #[inline(always)]
     fn from_f64(x: f64) -> Self {
@@ -64,6 +132,36 @@ impl Scalar for f64 {
     #[inline(always)]
     fn to_f64(self) -> f64 {
         self
+    }
+
+    #[inline]
+    fn lane_dot(x: &[Self], y: &[Self]) -> Self {
+        simd::dot_f64(x, y)
+    }
+
+    #[inline]
+    fn fma_row(c: &mut [Self], a: Self, b: &[Self]) {
+        simd::fma_row_f64(c, a, b)
+    }
+
+    #[inline]
+    fn fnma_row(c: &mut [Self], a: Self, b: &[Self]) {
+        simd::fnma_row_f64(c, a, b)
+    }
+
+    #[inline]
+    fn add_row(y: &mut [Self], x: &[Self]) {
+        simd::add_row_f64(y, x)
+    }
+
+    #[inline]
+    fn scale_row(x: &mut [Self], alpha: Self) {
+        simd::scale_row_f64(x, alpha)
+    }
+
+    #[inline]
+    fn rot_span(x: &mut [Self], y: &mut [Self], c: Self, s: Self) {
+        simd::rot_span_f64(x, y, c, s)
     }
 }
 

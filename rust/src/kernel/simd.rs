@@ -1,0 +1,1236 @@
+//! The explicit vector core under [`super::ops`] — runtime-dispatched
+//! `core::arch` intrinsics (AVX/AVX2 on x86_64, NEON on aarch64) plus a
+//! portable scalar emulation of the **exact same lane layout**, behind
+//! the row-granular primitives on [`Scalar`]. Stable Rust only: no
+//! `portable_simd`, no external crates, no FMA contraction anywhere.
+//!
+//! # The fixed-lane determinism contract
+//!
+//! Element-parallel primitives (`fma_row`, `fnma_row`, `add_row`,
+//! `scale_row`, `rot_span`) compute each output element from its own
+//! inputs only, so vectorizing them cannot reorder any accumulation:
+//! SIMD ≡ scalar ≡ any thread count, bitwise, for free.
+//!
+//! Dot-like reductions are different: a W-wide vector accumulator sums
+//! element `i` into lane `i % W`, which is a *different* summation
+//! order than a plain ascending loop. Rather than forbid that (and
+//! lose the vectorization), the kernel defines the lane layout itself
+//! as the canonical accumulation order — with W **fixed per dtype**
+//! ([`Scalar::LANES`]: 8 for f32, 4 for f64), never derived from the
+//! hardware vector width or the thread count:
+//!
+//! * element `i` of the main body accumulates into lane `i % W`, in
+//!   ascending `i`;
+//! * the ragged tail (`len % W` elements) is folded scalar-wise into
+//!   lanes `0..len % W` **in every backend** — a zero-padded vector
+//!   step would flip a `-0.0` lane to `+0.0`;
+//! * the W lanes are combined by the fixed pairwise tree
+//!   `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))` (W = 8), resp.
+//!   `(a0+a1)+(a2+a3)` (W = 4).
+//!
+//! [`lane_dot_scalar`] *is* that definition; every SIMD path holds the
+//! W lanes in registers (one `__m256` on AVX, two `float32x4_t` on
+//! NEON) and must reproduce it bit for bit — pinned by
+//! `tests/simd_lanes.rs`. No fused multiply-add is ever used: FMA
+//! rounds once where mul+add rounds twice, which would break
+//! SIMD ≡ scalar. Multiplication operand order also matches the scalar
+//! expression everywhere (NaN payload propagation is operand-order
+//! dependent on x86).
+//!
+//! # Dispatch
+//!
+//! `LOWRANK_SIMD` ∈ {`auto` (default), `scalar`} selects the backend at
+//! process level; [`set_mode`] overrides it programmatically so benches
+//! can time both paths in one process. Because every backend produces
+//! identical bits, the mode is a speed knob, never a results knob —
+//! flipping it mid-run is benign by construction. x86_64 without AVX
+//! falls back to the scalar emulation (no SSE2 tier); aarch64 NEON is
+//! baseline and needs no detection.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::scalar::Scalar;
+
+/// Upper bound on [`Scalar::LANES`] (the f32 width).
+pub const MAX_LANES: usize = 8;
+
+const MODE_UNSET: u8 = 0;
+const MODE_AUTO: u8 = 1;
+const MODE_SCALAR: u8 = 2;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+/// Which backend family dispatch may use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use the best available vector backend (AVX / NEON), falling
+    /// back to the scalar emulation where none exists.
+    Auto,
+    /// Force the scalar emulation everywhere.
+    Scalar,
+}
+
+fn mode_from_env() -> u8 {
+    match std::env::var("LOWRANK_SIMD") {
+        Err(_) => MODE_AUTO,
+        Ok(s) => match s.trim() {
+            "" | "auto" => MODE_AUTO,
+            "scalar" => MODE_SCALAR,
+            other => panic!("LOWRANK_SIMD={other:?}: expected \"auto\" or \"scalar\""),
+        },
+    }
+}
+
+/// The active dispatch mode (`LOWRANK_SIMD`, read once, overridable via
+/// [`set_mode`]).
+pub fn mode() -> SimdMode {
+    let raw = MODE.load(Ordering::Relaxed);
+    let raw = if raw == MODE_UNSET {
+        // racing initializers read the same env and store the same
+        // value, so a plain store is fine
+        let fresh = mode_from_env();
+        MODE.store(fresh, Ordering::Relaxed);
+        fresh
+    } else {
+        raw
+    };
+    if raw == MODE_SCALAR {
+        SimdMode::Scalar
+    } else {
+        SimdMode::Auto
+    }
+}
+
+/// Programmatic override of `LOWRANK_SIMD` (mirrors
+/// `kernel::set_global_threads`). Benches use it to time the scalar
+/// emulation against the vector backend in one process; results are
+/// identical either way — that is the contract this module exists to
+/// keep.
+pub fn set_mode(m: SimdMode) {
+    let raw = match m {
+        SimdMode::Auto => MODE_AUTO,
+        SimdMode::Scalar => MODE_SCALAR,
+    };
+    MODE.store(raw, Ordering::Relaxed);
+}
+
+#[inline]
+fn enabled() -> bool {
+    mode() == SimdMode::Auto
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx() -> bool {
+    enabled() && std::arch::is_x86_feature_detected!("avx")
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2() -> bool {
+    enabled() && std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn neon_on() -> bool {
+    enabled()
+}
+
+/// The vector backend the float primitives currently dispatch to
+/// (`"avx"`, `"neon"`, or `"scalar"`) — for bench/test display.
+pub fn active_backend() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx() {
+            return "avx";
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_on() {
+            return "neon";
+        }
+    }
+    "scalar"
+}
+
+// ---------------------------------------------------------------------------
+// the portable emulation — the *definition* of the canonical order
+// ---------------------------------------------------------------------------
+
+/// Combine lane accumulators with the fixed pairwise tree (recursive
+/// midpoint split — `((a0+a1)+(a2+a3)) + ((a4+a5)+(a6+a7))` at W = 8).
+fn combine<T: Scalar>(lanes: &[T]) -> T {
+    if lanes.len() == 1 {
+        lanes[0]
+    } else {
+        let mid = lanes.len() / 2;
+        combine(&lanes[..mid]) + combine(&lanes[mid..])
+    }
+}
+
+/// The canonical fixed-lane dot product: element `i` into lane
+/// `i % W`, scalar tail into lanes `0..len % W`, lanes combined by the
+/// fixed pairwise tree. This scalar emulation is the definition every
+/// SIMD backend must match bitwise; [`super::ops`] routes all dot-like
+/// reductions (`gemm_nt`, `dot`, `fro_inner`) through it.
+pub fn lane_dot_scalar<T: Scalar>(x: &[T], y: &[T]) -> T {
+    assert_eq!(x.len(), y.len(), "lane_dot length mismatch");
+    let w = T::LANES;
+    debug_assert!(w >= 1 && w <= MAX_LANES && w.is_power_of_two());
+    let mut acc = [T::ZERO; MAX_LANES];
+    let main = x.len() - x.len() % w;
+    let mut i = 0;
+    while i < main {
+        for (l, a) in acc[..w].iter_mut().enumerate() {
+            *a += x[i + l] * y[i + l];
+        }
+        i += w;
+    }
+    for e in main..x.len() {
+        acc[e - main] += x[e] * y[e];
+    }
+    combine(&acc[..w])
+}
+
+pub(crate) fn fma_row_scalar<T: Scalar>(c: &mut [T], a: T, b: &[T]) {
+    debug_assert_eq!(c.len(), b.len());
+    for (ci, bi) in c.iter_mut().zip(b) {
+        *ci += a * *bi;
+    }
+}
+
+pub(crate) fn fnma_row_scalar<T: Scalar>(c: &mut [T], a: T, b: &[T]) {
+    debug_assert_eq!(c.len(), b.len());
+    for (ci, bi) in c.iter_mut().zip(b) {
+        *ci -= a * *bi;
+    }
+}
+
+pub(crate) fn add_row_scalar<T: Scalar>(y: &mut [T], x: &[T]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += *xi;
+    }
+}
+
+pub(crate) fn scale_row_scalar<T: Scalar>(x: &mut [T], alpha: T) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+pub(crate) fn rot_span_scalar<T: Scalar>(x: &mut [T], y: &mut [T], c: T, s: T) {
+    debug_assert_eq!(x.len(), y.len());
+    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+        let (xv, yv) = (*xi, *yi);
+        *xi = c * xv + s * yv;
+        *yi = c * yv - s * xv;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatchers (one per primitive per dtype)
+// ---------------------------------------------------------------------------
+
+macro_rules! dispatch {
+    (x86: $x:expr, neon: $n:expr, scalar: $s:expr) => {{
+        #[cfg(target_arch = "x86_64")]
+        {
+            if avx() {
+                return unsafe { $x };
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if neon_on() {
+                return unsafe { $n };
+            }
+        }
+        $s
+    }};
+}
+
+#[inline]
+pub(crate) fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    assert_eq!(x.len(), y.len(), "lane_dot length mismatch");
+    dispatch!(
+        x86: x86::lane_dot_f32(x, y),
+        neon: neon::lane_dot_f32(x, y),
+        scalar: lane_dot_scalar(x, y)
+    )
+}
+
+#[inline]
+pub(crate) fn dot_f64(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "lane_dot length mismatch");
+    dispatch!(
+        x86: x86::lane_dot_f64(x, y),
+        neon: neon::lane_dot_f64(x, y),
+        scalar: lane_dot_scalar(x, y)
+    )
+}
+
+#[inline]
+pub(crate) fn fma_row_f32(c: &mut [f32], a: f32, b: &[f32]) {
+    debug_assert_eq!(c.len(), b.len());
+    dispatch!(
+        x86: x86::fma_row_f32(c, a, b),
+        neon: neon::fma_row_f32(c, a, b),
+        scalar: fma_row_scalar(c, a, b)
+    )
+}
+
+#[inline]
+pub(crate) fn fma_row_f64(c: &mut [f64], a: f64, b: &[f64]) {
+    debug_assert_eq!(c.len(), b.len());
+    dispatch!(
+        x86: x86::fma_row_f64(c, a, b),
+        neon: neon::fma_row_f64(c, a, b),
+        scalar: fma_row_scalar(c, a, b)
+    )
+}
+
+#[inline]
+pub(crate) fn fnma_row_f32(c: &mut [f32], a: f32, b: &[f32]) {
+    debug_assert_eq!(c.len(), b.len());
+    dispatch!(
+        x86: x86::fnma_row_f32(c, a, b),
+        neon: neon::fnma_row_f32(c, a, b),
+        scalar: fnma_row_scalar(c, a, b)
+    )
+}
+
+#[inline]
+pub(crate) fn fnma_row_f64(c: &mut [f64], a: f64, b: &[f64]) {
+    debug_assert_eq!(c.len(), b.len());
+    dispatch!(
+        x86: x86::fnma_row_f64(c, a, b),
+        neon: neon::fnma_row_f64(c, a, b),
+        scalar: fnma_row_scalar(c, a, b)
+    )
+}
+
+#[inline]
+pub(crate) fn add_row_f32(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    dispatch!(
+        x86: x86::add_row_f32(y, x),
+        neon: neon::add_row_f32(y, x),
+        scalar: add_row_scalar(y, x)
+    )
+}
+
+#[inline]
+pub(crate) fn add_row_f64(y: &mut [f64], x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    dispatch!(
+        x86: x86::add_row_f64(y, x),
+        neon: neon::add_row_f64(y, x),
+        scalar: add_row_scalar(y, x)
+    )
+}
+
+#[inline]
+pub(crate) fn scale_row_f32(x: &mut [f32], alpha: f32) {
+    dispatch!(
+        x86: x86::scale_row_f32(x, alpha),
+        neon: neon::scale_row_f32(x, alpha),
+        scalar: scale_row_scalar(x, alpha)
+    )
+}
+
+#[inline]
+pub(crate) fn scale_row_f64(x: &mut [f64], alpha: f64) {
+    dispatch!(
+        x86: x86::scale_row_f64(x, alpha),
+        neon: neon::scale_row_f64(x, alpha),
+        scalar: scale_row_scalar(x, alpha)
+    )
+}
+
+#[inline]
+pub(crate) fn rot_span_f32(x: &mut [f32], y: &mut [f32], c: f32, s: f32) {
+    debug_assert_eq!(x.len(), y.len());
+    dispatch!(
+        x86: x86::rot_span_f32(x, y, c, s),
+        neon: neon::rot_span_f32(x, y, c, s),
+        scalar: rot_span_scalar(x, y, c, s)
+    )
+}
+
+#[inline]
+pub(crate) fn rot_span_f64(x: &mut [f64], y: &mut [f64], c: f64, s: f64) {
+    debug_assert_eq!(x.len(), y.len());
+    dispatch!(
+        x86: x86::rot_span_f64(x, y, c, s),
+        neon: neon::rot_span_f64(x, y, c, s),
+        scalar: rot_span_scalar(x, y, c, s)
+    )
+}
+
+// ---------------------------------------------------------------------------
+// bf16 ⇄ f32 convert lane (the comm::wire batch kernels)
+// ---------------------------------------------------------------------------
+
+/// f32 → bfloat16 bits, truncating with round-to-nearest-even (the
+/// hardware convention). Sign and exponent survive exactly; NaNs stay
+/// NaN (a mantissa bit is forced so a NaN whose high mantissa bits are
+/// zero cannot quiet to ∞). Finite values that round past the largest
+/// bf16 saturate to ±∞ — the IEEE behaviour. The canonical scalar;
+/// the batch kernels below reproduce it elementwise, bit for bit.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round-to-nearest-even: add 0x7FFF plus the current LSB of the
+    // kept mantissa, then truncate
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// bfloat16 bits → f32, exactly (low mantissa bits zero-filled).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Batch [`f32_to_bf16`]: 8 elements per step on AVX2/NEON, elementwise
+/// identical to the scalar on every backend.
+pub fn f32_to_bf16_batch(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "f32_to_bf16_batch length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            unsafe { x86::f32_to_bf16_batch(src, dst) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_on() {
+            unsafe { neon::f32_to_bf16_batch(src, dst) };
+            return;
+        }
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16(*s);
+    }
+}
+
+/// Batch [`bf16_to_f32`] (exact widening).
+pub fn bf16_to_f32_batch(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "bf16_to_f32_batch length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            unsafe { x86::bf16_to_f32_batch(src, dst) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_on() {
+            unsafe { neon::bf16_to_f32_batch(src, dst) };
+            return;
+        }
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = bf16_to_f32(*s);
+    }
+}
+
+/// Round every element through bf16 and back in place — the
+/// quantize-at-source step of the compressed wire lane. Elementwise
+/// and order-free, so it is deterministic at any thread count and on
+/// every backend.
+pub fn quantize_bf16_batch(data: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            unsafe { x86::quantize_bf16_batch(data) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_on() {
+            unsafe { neon::quantize_bf16_batch(data) };
+            return;
+        }
+    }
+    for v in data.iter_mut() {
+        *v = bf16_to_f32(f32_to_bf16(*v));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: AVX float tiles (one 256-bit register holds all W lanes) and
+// AVX2 integer convert tiles
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn lane_dot_f32(x: &[f32], y: &[f32]) -> f32 {
+        let main = x.len() - x.len() % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < main {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            // mul then add, never FMA: two roundings, same as the
+            // scalar emulation
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, yv));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        for e in main..x.len() {
+            lanes[e - main] += x[e] * y[e];
+        }
+        super::combine(&lanes)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn lane_dot_f64(x: &[f64], y: &[f64]) -> f64 {
+        let main = x.len() - x.len() % 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < main {
+            let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(xv, yv));
+            i += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        for e in main..x.len() {
+            lanes[e - main] += x[e] * y[e];
+        }
+        super::combine(&lanes)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn fma_row_f32(c: &mut [f32], a: f32, b: &[f32]) {
+        let av = _mm256_set1_ps(a);
+        let main = c.len() - c.len() % 8;
+        let mut i = 0;
+        while i < main {
+            let cv = _mm256_loadu_ps(c.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            _mm256_storeu_ps(c.as_mut_ptr().add(i), _mm256_add_ps(cv, _mm256_mul_ps(av, bv)));
+            i += 8;
+        }
+        for e in main..c.len() {
+            c[e] += a * b[e];
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn fma_row_f64(c: &mut [f64], a: f64, b: &[f64]) {
+        let av = _mm256_set1_pd(a);
+        let main = c.len() - c.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let cv = _mm256_loadu_pd(c.as_ptr().add(i));
+            let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+            _mm256_storeu_pd(c.as_mut_ptr().add(i), _mm256_add_pd(cv, _mm256_mul_pd(av, bv)));
+            i += 4;
+        }
+        for e in main..c.len() {
+            c[e] += a * b[e];
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn fnma_row_f32(c: &mut [f32], a: f32, b: &[f32]) {
+        let av = _mm256_set1_ps(a);
+        let main = c.len() - c.len() % 8;
+        let mut i = 0;
+        while i < main {
+            let cv = _mm256_loadu_ps(c.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            _mm256_storeu_ps(c.as_mut_ptr().add(i), _mm256_sub_ps(cv, _mm256_mul_ps(av, bv)));
+            i += 8;
+        }
+        for e in main..c.len() {
+            c[e] -= a * b[e];
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn fnma_row_f64(c: &mut [f64], a: f64, b: &[f64]) {
+        let av = _mm256_set1_pd(a);
+        let main = c.len() - c.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let cv = _mm256_loadu_pd(c.as_ptr().add(i));
+            let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+            _mm256_storeu_pd(c.as_mut_ptr().add(i), _mm256_sub_pd(cv, _mm256_mul_pd(av, bv)));
+            i += 4;
+        }
+        for e in main..c.len() {
+            c[e] -= a * b[e];
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn add_row_f32(y: &mut [f32], x: &[f32]) {
+        let main = y.len() - y.len() % 8;
+        let mut i = 0;
+        while i < main {
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(yv, xv));
+            i += 8;
+        }
+        for e in main..y.len() {
+            y[e] += x[e];
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn add_row_f64(y: &mut [f64], x: &[f64]) {
+        let main = y.len() - y.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+            let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_add_pd(yv, xv));
+            i += 4;
+        }
+        for e in main..y.len() {
+            y[e] += x[e];
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn scale_row_f32(x: &mut [f32], alpha: f32) {
+        let av = _mm256_set1_ps(alpha);
+        let main = x.len() - x.len() % 8;
+        let mut i = 0;
+        while i < main {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_mul_ps(xv, av));
+            i += 8;
+        }
+        for e in main..x.len() {
+            x[e] *= alpha;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn scale_row_f64(x: &mut [f64], alpha: f64) {
+        let av = _mm256_set1_pd(alpha);
+        let main = x.len() - x.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+            _mm256_storeu_pd(x.as_mut_ptr().add(i), _mm256_mul_pd(xv, av));
+            i += 4;
+        }
+        for e in main..x.len() {
+            x[e] *= alpha;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn rot_span_f32(x: &mut [f32], y: &mut [f32], c: f32, s: f32) {
+        let cv = _mm256_set1_ps(c);
+        let sv = _mm256_set1_ps(s);
+        let main = x.len() - x.len() % 8;
+        let mut i = 0;
+        while i < main {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            let nx = _mm256_add_ps(_mm256_mul_ps(cv, xv), _mm256_mul_ps(sv, yv));
+            let ny = _mm256_sub_ps(_mm256_mul_ps(cv, yv), _mm256_mul_ps(sv, xv));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), nx);
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), ny);
+            i += 8;
+        }
+        for e in main..x.len() {
+            let (xv, yv) = (x[e], y[e]);
+            x[e] = c * xv + s * yv;
+            y[e] = c * yv - s * xv;
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX support at runtime.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn rot_span_f64(x: &mut [f64], y: &mut [f64], c: f64, s: f64) {
+        let cv = _mm256_set1_pd(c);
+        let sv = _mm256_set1_pd(s);
+        let main = x.len() - x.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let xv = _mm256_loadu_pd(x.as_ptr().add(i));
+            let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+            let nx = _mm256_add_pd(_mm256_mul_pd(cv, xv), _mm256_mul_pd(sv, yv));
+            let ny = _mm256_sub_pd(_mm256_mul_pd(cv, yv), _mm256_mul_pd(sv, xv));
+            _mm256_storeu_pd(x.as_mut_ptr().add(i), nx);
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), ny);
+            i += 4;
+        }
+        for e in main..x.len() {
+            let (xv, yv) = (x[e], y[e]);
+            x[e] = c * xv + s * yv;
+            y[e] = c * yv - s * xv;
+        }
+    }
+
+    /// 8 f32 bit patterns → 8 bf16 values in the low 16 bits of each
+    /// u32 lane (RNE + NaN-quieting, the vector form of the scalar
+    /// `f32_to_bf16`).
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn bf16_round_8(bits: __m256i) -> __m256i {
+        let lsb = _mm256_and_si256(_mm256_srli_epi32(bits, 16), _mm256_set1_epi32(1));
+        let rounded = _mm256_srli_epi32(
+            _mm256_add_epi32(bits, _mm256_add_epi32(lsb, _mm256_set1_epi32(0x7FFF))),
+            16,
+        );
+        // NaN ⇔ (bits & 0x7FFFFFFF) > 0x7F800000; both sides are
+        // positive as i32, so the signed compare is exact
+        let abs = _mm256_and_si256(bits, _mm256_set1_epi32(0x7FFF_FFFF));
+        let is_nan = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7F80_0000));
+        let nan16 = _mm256_or_si256(_mm256_srli_epi32(bits, 16), _mm256_set1_epi32(0x0040));
+        _mm256_blendv_epi8(rounded, nan16, is_nan)
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn f32_to_bf16_batch(src: &[f32], dst: &mut [u16]) {
+        let main = src.len() - src.len() % 16;
+        let mut i = 0;
+        while i < main {
+            let lo = bf16_round_8(_mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i));
+            let hi = bf16_round_8(_mm256_loadu_si256(src.as_ptr().add(i + 8) as *const __m256i));
+            // every lane is in [0, 0xFFFF], so the signed-saturating
+            // pack is exact; permute undoes its 128-bit interleave
+            let packed = _mm256_permute4x64_epi64(_mm256_packus_epi32(lo, hi), 0b11011000);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, packed);
+            i += 16;
+        }
+        for e in main..src.len() {
+            dst[e] = super::f32_to_bf16(src[e]);
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bf16_to_f32_batch(src: &[u16], dst: &mut [f32]) {
+        let main = src.len() - src.len() % 8;
+        let mut i = 0;
+        while i < main {
+            let h = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            let w = _mm256_slli_epi32(_mm256_cvtepu16_epi32(h), 16);
+            _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, w);
+            i += 8;
+        }
+        for e in main..src.len() {
+            dst[e] = super::bf16_to_f32(src[e]);
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_bf16_batch(data: &mut [f32]) {
+        let main = data.len() - data.len() % 8;
+        let mut i = 0;
+        while i < main {
+            let bits = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
+            let w = _mm256_slli_epi32(bf16_round_8(bits), 16);
+            _mm256_storeu_si256(data.as_mut_ptr().add(i) as *mut __m256i, w);
+            i += 8;
+        }
+        for v in data[main..].iter_mut() {
+            *v = super::bf16_to_f32(super::f32_to_bf16(*v));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON tiles — two 128-bit registers hold the W lanes
+// (acc0 = lanes 0..W/2, acc1 = lanes W/2..W), so the layout matches
+// the AVX register and the scalar array exactly
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    /// # Safety
+    /// NEON is baseline on aarch64; callers gate only on the dispatch
+    /// mode.
+    pub unsafe fn lane_dot_f32(x: &[f32], y: &[f32]) -> f32 {
+        let main = x.len() - x.len() % 8;
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < main {
+            let x0 = vld1q_f32(x.as_ptr().add(i));
+            let y0 = vld1q_f32(y.as_ptr().add(i));
+            let x1 = vld1q_f32(x.as_ptr().add(i + 4));
+            let y1 = vld1q_f32(y.as_ptr().add(i + 4));
+            acc0 = vaddq_f32(acc0, vmulq_f32(x0, y0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(x1, y1));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for e in main..x.len() {
+            lanes[e - main] += x[e] * y[e];
+        }
+        super::combine(&lanes)
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn lane_dot_f64(x: &[f64], y: &[f64]) -> f64 {
+        let main = x.len() - x.len() % 4;
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        let mut i = 0;
+        while i < main {
+            let x0 = vld1q_f64(x.as_ptr().add(i));
+            let y0 = vld1q_f64(y.as_ptr().add(i));
+            let x1 = vld1q_f64(x.as_ptr().add(i + 2));
+            let y1 = vld1q_f64(y.as_ptr().add(i + 2));
+            acc0 = vaddq_f64(acc0, vmulq_f64(x0, y0));
+            acc1 = vaddq_f64(acc1, vmulq_f64(x1, y1));
+            i += 4;
+        }
+        let mut lanes = [0.0f64; 4];
+        vst1q_f64(lanes.as_mut_ptr(), acc0);
+        vst1q_f64(lanes.as_mut_ptr().add(2), acc1);
+        for e in main..x.len() {
+            lanes[e - main] += x[e] * y[e];
+        }
+        super::combine(&lanes)
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn fma_row_f32(c: &mut [f32], a: f32, b: &[f32]) {
+        let av = vdupq_n_f32(a);
+        let main = c.len() - c.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let cv = vld1q_f32(c.as_ptr().add(i));
+            let bv = vld1q_f32(b.as_ptr().add(i));
+            // mul then add, never vfmaq: matches the scalar rounding
+            vst1q_f32(c.as_mut_ptr().add(i), vaddq_f32(cv, vmulq_f32(av, bv)));
+            i += 4;
+        }
+        for e in main..c.len() {
+            c[e] += a * b[e];
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn fma_row_f64(c: &mut [f64], a: f64, b: &[f64]) {
+        let av = vdupq_n_f64(a);
+        let main = c.len() - c.len() % 2;
+        let mut i = 0;
+        while i < main {
+            let cv = vld1q_f64(c.as_ptr().add(i));
+            let bv = vld1q_f64(b.as_ptr().add(i));
+            vst1q_f64(c.as_mut_ptr().add(i), vaddq_f64(cv, vmulq_f64(av, bv)));
+            i += 2;
+        }
+        for e in main..c.len() {
+            c[e] += a * b[e];
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn fnma_row_f32(c: &mut [f32], a: f32, b: &[f32]) {
+        let av = vdupq_n_f32(a);
+        let main = c.len() - c.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let cv = vld1q_f32(c.as_ptr().add(i));
+            let bv = vld1q_f32(b.as_ptr().add(i));
+            vst1q_f32(c.as_mut_ptr().add(i), vsubq_f32(cv, vmulq_f32(av, bv)));
+            i += 4;
+        }
+        for e in main..c.len() {
+            c[e] -= a * b[e];
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn fnma_row_f64(c: &mut [f64], a: f64, b: &[f64]) {
+        let av = vdupq_n_f64(a);
+        let main = c.len() - c.len() % 2;
+        let mut i = 0;
+        while i < main {
+            let cv = vld1q_f64(c.as_ptr().add(i));
+            let bv = vld1q_f64(b.as_ptr().add(i));
+            vst1q_f64(c.as_mut_ptr().add(i), vsubq_f64(cv, vmulq_f64(av, bv)));
+            i += 2;
+        }
+        for e in main..c.len() {
+            c[e] -= a * b[e];
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn add_row_f32(y: &mut [f32], x: &[f32]) {
+        let main = y.len() - y.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let yv = vld1q_f32(y.as_ptr().add(i));
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, xv));
+            i += 4;
+        }
+        for e in main..y.len() {
+            y[e] += x[e];
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn add_row_f64(y: &mut [f64], x: &[f64]) {
+        let main = y.len() - y.len() % 2;
+        let mut i = 0;
+        while i < main {
+            let yv = vld1q_f64(y.as_ptr().add(i));
+            let xv = vld1q_f64(x.as_ptr().add(i));
+            vst1q_f64(y.as_mut_ptr().add(i), vaddq_f64(yv, xv));
+            i += 2;
+        }
+        for e in main..y.len() {
+            y[e] += x[e];
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn scale_row_f32(x: &mut [f32], alpha: f32) {
+        let av = vdupq_n_f32(alpha);
+        let main = x.len() - x.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(xv, av));
+            i += 4;
+        }
+        for e in main..x.len() {
+            x[e] *= alpha;
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn scale_row_f64(x: &mut [f64], alpha: f64) {
+        let av = vdupq_n_f64(alpha);
+        let main = x.len() - x.len() % 2;
+        let mut i = 0;
+        while i < main {
+            let xv = vld1q_f64(x.as_ptr().add(i));
+            vst1q_f64(x.as_mut_ptr().add(i), vmulq_f64(xv, av));
+            i += 2;
+        }
+        for e in main..x.len() {
+            x[e] *= alpha;
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn rot_span_f32(x: &mut [f32], y: &mut [f32], c: f32, s: f32) {
+        let cv = vdupq_n_f32(c);
+        let sv = vdupq_n_f32(s);
+        let main = x.len() - x.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            let yv = vld1q_f32(y.as_ptr().add(i));
+            let nx = vaddq_f32(vmulq_f32(cv, xv), vmulq_f32(sv, yv));
+            let ny = vsubq_f32(vmulq_f32(cv, yv), vmulq_f32(sv, xv));
+            vst1q_f32(x.as_mut_ptr().add(i), nx);
+            vst1q_f32(y.as_mut_ptr().add(i), ny);
+            i += 4;
+        }
+        for e in main..x.len() {
+            let (xv, yv) = (x[e], y[e]);
+            x[e] = c * xv + s * yv;
+            y[e] = c * yv - s * xv;
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn rot_span_f64(x: &mut [f64], y: &mut [f64], c: f64, s: f64) {
+        let cv = vdupq_n_f64(c);
+        let sv = vdupq_n_f64(s);
+        let main = x.len() - x.len() % 2;
+        let mut i = 0;
+        while i < main {
+            let xv = vld1q_f64(x.as_ptr().add(i));
+            let yv = vld1q_f64(y.as_ptr().add(i));
+            let nx = vaddq_f64(vmulq_f64(cv, xv), vmulq_f64(sv, yv));
+            let ny = vsubq_f64(vmulq_f64(cv, yv), vmulq_f64(sv, xv));
+            vst1q_f64(x.as_mut_ptr().add(i), nx);
+            vst1q_f64(y.as_mut_ptr().add(i), ny);
+            i += 2;
+        }
+        for e in main..x.len() {
+            let (xv, yv) = (x[e], y[e]);
+            x[e] = c * xv + s * yv;
+            y[e] = c * yv - s * xv;
+        }
+    }
+
+    /// 4 f32 bit patterns → 4 bf16 values in the low 16 bits of each
+    /// u32 lane (RNE + NaN-quieting).
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    #[inline]
+    unsafe fn bf16_round_4(bits: uint32x4_t) -> uint32x4_t {
+        let lsb = vandq_u32(vshrq_n_u32(bits, 16), vdupq_n_u32(1));
+        let rounded = vshrq_n_u32(vaddq_u32(bits, vaddq_u32(lsb, vdupq_n_u32(0x7FFF))), 16);
+        let abs = vandq_u32(bits, vdupq_n_u32(0x7FFF_FFFF));
+        let is_nan = vcgtq_u32(abs, vdupq_n_u32(0x7F80_0000));
+        let nan16 = vorrq_u32(vshrq_n_u32(bits, 16), vdupq_n_u32(0x0040));
+        vbslq_u32(is_nan, nan16, rounded)
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn f32_to_bf16_batch(src: &[f32], dst: &mut [u16]) {
+        let main = src.len() - src.len() % 8;
+        let mut i = 0;
+        while i < main {
+            let lo = bf16_round_4(vreinterpretq_u32_f32(vld1q_f32(src.as_ptr().add(i))));
+            let hi = bf16_round_4(vreinterpretq_u32_f32(vld1q_f32(src.as_ptr().add(i + 4))));
+            vst1q_u16(dst.as_mut_ptr().add(i), vcombine_u16(vmovn_u32(lo), vmovn_u32(hi)));
+            i += 8;
+        }
+        for e in main..src.len() {
+            dst[e] = super::f32_to_bf16(src[e]);
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn bf16_to_f32_batch(src: &[u16], dst: &mut [f32]) {
+        let main = src.len() - src.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let h = vld1_u16(src.as_ptr().add(i));
+            let w = vshlq_n_u32(vmovl_u16(h), 16);
+            vst1q_f32(dst.as_mut_ptr().add(i), vreinterpretq_f32_u32(w));
+            i += 4;
+        }
+        for e in main..src.len() {
+            dst[e] = super::bf16_to_f32(src[e]);
+        }
+    }
+
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    pub unsafe fn quantize_bf16_batch(data: &mut [f32]) {
+        let main = data.len() - data.len() % 4;
+        let mut i = 0;
+        while i < main {
+            let bits = vreinterpretq_u32_f32(vld1q_f32(data.as_ptr().add(i)));
+            let w = vshlq_n_u32(bf16_round_4(bits), 16);
+            vst1q_f32(data.as_mut_ptr().add(i), vreinterpretq_f32_u32(w));
+            i += 4;
+        }
+        for v in data[main..].iter_mut() {
+            *v = super::bf16_to_f32(super::f32_to_bf16(*v));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arb_f32(len: usize, seed: u32) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(2654435761).wrapping_add(12345);
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(1664525).wrapping_add(1013904223);
+                ((s >> 8) as f32 / (1 << 24) as f32) * 4.0 - 2.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dispatch_matches_emulation_on_every_ragged_tail() {
+        // whatever backend is active, lane_dot must equal the portable
+        // emulation bit for bit — including every tail length 0..8
+        for tail in 0..8usize {
+            let len = 64 + tail;
+            let x = arb_f32(len, 1 + tail as u32);
+            let y = arb_f32(len, 100 + tail as u32);
+            let want = lane_dot_scalar(&x, &y);
+            let got = dot_f32(&x, &y);
+            assert_eq!(got.to_bits(), want.to_bits(), "f32 lane_dot diverged at len {len}");
+            let xd: Vec<f64> = x.iter().map(|v| *v as f64).collect();
+            let yd: Vec<f64> = y.iter().map(|v| *v as f64).collect();
+            let want = lane_dot_scalar(&xd, &yd);
+            let got = dot_f64(&xd, &yd);
+            assert_eq!(got.to_bits(), want.to_bits(), "f64 lane_dot diverged at len {len}");
+        }
+    }
+
+    #[test]
+    fn element_parallel_rows_match_emulation_bitwise() {
+        for len in [1usize, 3, 7, 8, 9, 31, 64, 101] {
+            let b = arb_f32(len, 7);
+            let mut c1 = arb_f32(len, 8);
+            let mut c2 = c1.clone();
+            fma_row_f32(&mut c1, 0.37, &b);
+            fma_row_scalar(&mut c2, 0.37, &b);
+            assert_eq!(bits(&c1), bits(&c2), "fma_row len {len}");
+            fnma_row_f32(&mut c1, 1.25, &b);
+            fnma_row_scalar(&mut c2, 1.25, &b);
+            assert_eq!(bits(&c1), bits(&c2), "fnma_row len {len}");
+            add_row_f32(&mut c1, &b);
+            add_row_scalar(&mut c2, &b);
+            assert_eq!(bits(&c1), bits(&c2), "add_row len {len}");
+            scale_row_f32(&mut c1, -0.11);
+            scale_row_scalar(&mut c2, -0.11);
+            assert_eq!(bits(&c1), bits(&c2), "scale_row len {len}");
+            let mut y1 = arb_f32(len, 9);
+            let mut y2 = y1.clone();
+            rot_span_f32(&mut c1, &mut y1, 0.8, 0.6);
+            rot_span_scalar(&mut c2, &mut y2, 0.8, 0.6);
+            assert_eq!(bits(&c1), bits(&c2), "rot_span x len {len}");
+            assert_eq!(bits(&y1), bits(&y2), "rot_span y len {len}");
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn lane_dot_propagates_nan_and_inf_through_zeros() {
+        // the branchless no-zero-skip guarantee must survive
+        // vectorization: 0·NaN and 0·Inf poison the sum
+        for len in [5usize, 8, 13, 24] {
+            for poison in [f32::NAN, f32::INFINITY] {
+                let mut x = vec![0.0f32; len];
+                let y = vec![1.0f32; len];
+                x[len - 1] = poison;
+                let mut yz = y.clone();
+                yz[len - 1] = 0.0;
+                let d = dot_f32(&x, &yz);
+                assert!(d.is_nan(), "0·{poison} must poison the dot, got {d}");
+                assert!(lane_dot_scalar(&x, &yz).is_nan());
+            }
+        }
+    }
+
+    #[test]
+    fn negative_zero_survives_the_scalar_tail_rule() {
+        // a -0.0 accumulator lane must not be flipped by a zero-padded
+        // tail: (-0.0) + 0.0 would be +0.0. The tail is folded
+        // scalar-wise instead, so a dot of all -0.0·positive terms
+        // keeps the sign at every ragged length.
+        for len in 1..=9usize {
+            let x = vec![-0.0f32; len];
+            let y = vec![1.0f32; len];
+            let d = dot_f32(&x, &y);
+            assert_eq!(d.to_bits(), (-0.0f32).to_bits(), "len {len}: got {d}");
+        }
+    }
+
+    #[test]
+    fn bf16_batch_matches_scalar_on_every_length_and_special() {
+        let mut vals = arb_f32(67, 3);
+        vals.extend_from_slice(&[
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x7F80_0001), // sneaky NaN: naive truncation quiets it to ∞
+            f32::from_bits(0xFF80_0001),
+            f32::MIN_POSITIVE / 2.0, // subnormal
+            3.4e38,
+            1.0 + 2f32.powi(-8), // RNE tie, rounds down
+            1.0 + 3.0 * 2f32.powi(-8), // RNE tie, rounds up
+        ]);
+        for len in 0..vals.len() {
+            let src = &vals[..len];
+            let mut got = vec![0u16; len];
+            f32_to_bf16_batch(src, &mut got);
+            for (i, (g, s)) in got.iter().zip(src).enumerate() {
+                assert_eq!(*g, f32_to_bf16(*s), "narrow idx {i} of len {len}");
+            }
+            let mut wide = vec![0.0f32; len];
+            bf16_to_f32_batch(&got, &mut wide);
+            for (i, (w, g)) in wide.iter().zip(&got).enumerate() {
+                assert_eq!(w.to_bits(), bf16_to_f32(*g).to_bits(), "widen idx {i} of len {len}");
+            }
+            let mut q = src.to_vec();
+            quantize_bf16_batch(&mut q);
+            for (i, (qv, w)) in q.iter().zip(&wide).enumerate() {
+                assert_eq!(qv.to_bits(), w.to_bits(), "quantize idx {i} of len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn mode_override_roundtrips() {
+        let before = mode();
+        set_mode(SimdMode::Scalar);
+        assert_eq!(mode(), SimdMode::Scalar);
+        assert_eq!(active_backend(), "scalar");
+        set_mode(SimdMode::Auto);
+        assert_eq!(mode(), SimdMode::Auto);
+        set_mode(before);
+    }
+}

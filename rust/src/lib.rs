@@ -57,11 +57,17 @@
 //!   (f32/f64) dense compute layer — blocked GEMM, AXPY/scale,
 //!   deterministic reductions, strided panel primitives — running on a
 //!   persistent thread pool whose parallel results are **bitwise
-//!   identical to serial at any thread count**. [`linalg`] (f64 `Mat`
-//!   ops, QR, Jacobi eig), [`model`] (f32 lift/ZO tensors), the
-//!   [`projection`] batch sampler, and the [`coordinator`] slot fan-out
-//!   + DDP all-reduce are all thin layers over it; `--threads N` /
-//!   `LOWRANK_THREADS` size the pool.
+//!   identical to serial at any thread count**, over an explicit
+//!   8-wide f32 / 4-wide f64 SIMD vector core ([`kernel::simd`]:
+//!   runtime-dispatched AVX/NEON tiles with a portable scalar
+//!   emulation of the exact same fixed-lane accumulation order, so
+//!   serial ≡ parallel ≡ SIMD bitwise on every host; `LOWRANK_SIMD=
+//!   scalar` forces the emulation). The same module owns the 8-wide
+//!   bf16⇄f32 convert lane behind the comm wire codec. [`linalg`]
+//!   (f64 `Mat` ops, QR, Jacobi eig), [`model`] (f32 lift/ZO
+//!   tensors), the [`projection`] batch sampler, and the
+//!   [`coordinator`] slot fan-out + DDP all-reduce are all thin
+//!   layers over it; `--threads N` / `LOWRANK_THREADS` size the pool.
 //! * **L2/L1 (python/, build-time only)** — JAX model graphs and Pallas
 //!   kernels, lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
 //!

@@ -4,8 +4,11 @@
 //! Since the kernel refactor this module owns no GEMM loops of its own:
 //! `matmul`/`matmul_tn`/`matmul_nt`/`matvec` all delegate to the shared
 //! Scalar-generic blocked kernels, which run on the global
-//! [`crate::kernel::KernelPool`] and are bitwise-deterministic across
-//! thread counts. The kernels are branchless over the data — the old
+//! [`crate::kernel::KernelPool`] over the [`crate::kernel::simd`]
+//! vector core (4-wide f64 lanes here) and are bitwise-deterministic
+//! across thread counts and SIMD backends — `fro_inner` and the GEMM
+//! dot panels inherit the fixed-lane accumulation order. The kernels
+//! are branchless over the data — the old
 //! `if aik == 0.0 { continue; }` zero-skip silently swallowed NaN/Inf
 //! coming from B (0·NaN must be NaN); the regression tests below pin
 //! the fixed behavior.

@@ -62,9 +62,15 @@
 //! pool that all dense math — GEMM, samplers, per-matrix optimizer
 //! fan-out, DDP all-reduce — runs on. Default (0): the
 //! `LOWRANK_THREADS` env var, else the machine's available
-//! parallelism. **Determinism guarantee:** results are bitwise
-//! identical at every thread count — `--threads 1` and `--threads 64`
-//! produce the same losses, parameters, and checkpoint shards.
+//! parallelism. The kernels themselves run on an explicit SIMD vector
+//! core (AVX/NEON, runtime-dispatched); `LOWRANK_SIMD=scalar` forces
+//! the portable lane emulation (default `auto` dispatches the vector
+//! tiles). **Determinism guarantee:** results are bitwise identical at
+//! every thread count *and* under either SIMD setting — `--threads 1`
+//! and `--threads 64`, vector tiles or forced scalar, produce the same
+//! losses, parameters, and checkpoint shards, because every backend
+//! implements the same fixed-lane accumulation order (see
+//! [`lowrank_sge::kernel::simd`]).
 //!
 //! Checkpointing: `--save-every N --ckpt-dir D` commits the full
 //! training state (Θ, subspace B/V, Adam moments, RNG stream) every N

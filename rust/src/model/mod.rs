@@ -18,5 +18,5 @@ mod store;
 mod tensor;
 
 pub use memory::{MemoryBreakdown, MemoryModel, TrainMethod};
-pub use store::ParamStore;
+pub use store::{MutManyScratch, ParamStore};
 pub use tensor::{gemm_nt_f32, lift_into, zo_update_into};

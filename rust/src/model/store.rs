@@ -17,6 +17,25 @@ pub struct ParamStore {
     tensors: Vec<HostTensor>,
 }
 
+/// Reusable workspace for [`ParamStore::f32_mut_many_with`]: owns the
+/// validation mask and the view staging vector, so a caller that keeps
+/// one of these across steps (the estimator engine's per-step fan-out)
+/// performs no heap allocation once the capacities have warmed up.
+#[derive(Default)]
+pub struct MutManyScratch {
+    wanted: Vec<bool>,
+    /// Empty whenever no `f32_mut_many_with` call is on the stack; only
+    /// its capacity persists. The `'static` element lifetime is a
+    /// placeholder — see the SAFETY notes in `f32_mut_many_with`.
+    views: Vec<&'static mut [f32]>,
+}
+
+impl MutManyScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 impl ParamStore {
     /// Load Θ₀ from an `artifacts/init/<tag>/` dump, validated against
     /// the manifest's `params` slots.
@@ -106,6 +125,61 @@ impl ParamStore {
                     .with_context(|| format!("param {p} is not an f32 tensor"))
             })
             .collect()
+    }
+
+    /// Workspace-reusing variant of [`f32_mut_many`](Self::f32_mut_many):
+    /// the disjoint views are staged in `scratch` (in `positions` order)
+    /// and lent to `f` for the duration of the call. A caller that holds
+    /// its [`MutManyScratch`] across steps allocates nothing here once
+    /// the scratch capacities have warmed up — the reusable-workspace
+    /// route of the engine's zero-allocation contract.
+    ///
+    /// `f` may drain or reorder the staged vector freely; it is cleared
+    /// when the call returns (on the error paths too).
+    pub fn f32_mut_many_with<R>(
+        &mut self,
+        positions: &[usize],
+        scratch: &mut MutManyScratch,
+        f: impl FnOnce(&mut Vec<&mut [f32]>) -> R,
+    ) -> Result<R> {
+        let len = self.tensors.len();
+        scratch.wanted.clear();
+        scratch.wanted.resize(len, false);
+        for &p in positions {
+            if p >= len {
+                bail!("param position {p} out of range (store has {len})");
+            }
+            if scratch.wanted[p] {
+                bail!("duplicate param position {p} in f32_mut_many_with");
+            }
+            scratch.wanted[p] = true;
+        }
+        // SAFETY: `scratch.views` is empty at rest — only its capacity
+        // survives between calls. Retyping the placeholder `'static`
+        // element lifetime to this call's borrow is sound because the
+        // vector is filled and emptied entirely inside the call: the
+        // guard clears it before the `&mut self` borrow ends (on unwind
+        // too), and `f`'s higher-ranked signature keeps any element
+        // lifetime from escaping into its return value.
+        let views: &mut Vec<&mut [f32]> = unsafe { std::mem::transmute(&mut scratch.views) };
+        struct ClearOnExit<'a, 'v>(&'a mut Vec<&'v mut [f32]>);
+        impl Drop for ClearOnExit<'_, '_> {
+            fn drop(&mut self) {
+                self.0.clear();
+            }
+        }
+        let mut guard = ClearOnExit(views);
+        let base = self.tensors.as_mut_ptr();
+        for &p in positions {
+            // SAFETY: positions are unique (checked above), so each
+            // tensor is borrowed at most once; every view dies with the
+            // guard, inside this call's `&mut self` borrow.
+            let t = unsafe { &mut *base.add(p) };
+            guard
+                .0
+                .push(t.as_f32_mut().with_context(|| format!("param {p} is not an f32 tensor"))?);
+        }
+        Ok(f(&mut *guard.0))
     }
 
     pub fn shape(&self, i: usize) -> &[usize] {
@@ -305,6 +379,24 @@ mod tests {
         }
         assert!(s.f32_mut_many(&[0, 0]).is_err(), "duplicates rejected");
         assert!(s.f32_mut_many(&[9]).is_err(), "out of range rejected");
+    }
+
+    #[test]
+    fn f32_mut_many_with_stages_views_and_clears_scratch() {
+        let mut s = toy_store();
+        let mut scratch = MutManyScratch::new();
+        let lens = s
+            .f32_mut_many_with(&[1, 0], &mut scratch, |views| {
+                views.iter().map(|v| v.len()).collect::<Vec<_>>()
+            })
+            .unwrap();
+        assert_eq!(lens, vec![4, 8], "views come in `positions` order");
+        // same rejections as f32_mut_many, scratch reusable afterwards
+        assert!(s.f32_mut_many_with(&[0, 0], &mut scratch, |_| ()).is_err());
+        assert!(s.f32_mut_many_with(&[9], &mut scratch, |_| ()).is_err());
+        // writes through the staged views land in the store
+        s.f32_mut_many_with(&[0], &mut scratch, |views| views[0][0] = 7.5).unwrap();
+        assert_eq!(s.f32(0).unwrap()[0], 7.5);
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //! 8). Since the kernel refactor this module contains **no GEMM loops
 //! of its own**: both entry points delegate to the shared
 //! Scalar-generic `gemm_nt` kernel (the same code the f64 `linalg`
-//! stack uses), which runs on the global kernel pool and is bitwise
-//! identical at every thread count.
+//! stack uses), which runs on the global kernel pool, rides the
+//! [`crate::kernel::simd`] vector core, and is bitwise identical at
+//! every thread count and under either SIMD backend (fixed-lane
+//! accumulation order).
 
 use crate::kernel;
 

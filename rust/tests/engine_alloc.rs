@@ -1,17 +1,19 @@
 //! Steady-state allocation discipline of the estimator engine: after
 //! warm-up, the LowRank-LR step loop (perturbation draw + Adam-on-B +
-//! Θ delta push + head update) performs **zero heap allocations** on a
-//! serial kernel pool — every buffer is an engine workspace reused in
-//! place. This binary holds exactly one test so no concurrent test can
-//! pollute the allocation counter. The counting allocator and the
-//! synthetic fixture are shared with `benches/train_step.rs` via
-//! `bench_util`, so the bench measures exactly the same loop.
+//! Θ delta push + head update) **and** the LowRank-IPA step loop
+//! (Adam-on-B + full-rank Adam from staged gradient views) perform
+//! **zero heap allocations** on a serial kernel pool — every buffer is
+//! an engine workspace reused in place. This binary holds exactly one
+//! test so no concurrent test can pollute the allocation counter. The
+//! counting allocator and the synthetic fixture are shared with
+//! `benches/train_step.rs` via `bench_util`, so the bench measures
+//! exactly the same loop.
 
 use lowrank_sge::bench_util::{engine_fixture, CountingAlloc};
-use lowrank_sge::coordinator::SubspaceSet;
+use lowrank_sge::coordinator::{FullSlot, SubspaceSet};
 use lowrank_sge::estimator::engine::{GradEstimator, GradSignal, MethodShape};
 use lowrank_sge::model::ParamStore;
-use lowrank_sge::optim::AdamConfig;
+use lowrank_sge::optim::{Adam, AdamConfig};
 use lowrank_sge::projection::ProjectorKind;
 use lowrank_sge::rng::Rng;
 
@@ -34,6 +36,23 @@ fn run_steps(
         let fm = 0.7 - (step as f32) * 0.002;
         engine
             .step(store, GradSignal::Antithetic { f_plus: fp, f_minus: fm }, 1e-3)
+            .unwrap();
+    }
+}
+
+fn run_ipa_steps(
+    engine: &mut GradEstimator,
+    store: &mut ParamStore,
+    grad_views: &[&[f32]],
+    steps: u64,
+) {
+    for _ in 0..steps {
+        engine
+            .step(
+                store,
+                GradSignal::Grads { loss: 0.5, slots: grad_views, head: None, grad_norm: None },
+                1e-3,
+            )
             .unwrap();
     }
 }
@@ -72,6 +91,42 @@ fn lowrank_lr_step_loop_is_allocation_free_after_warmup() {
     );
 
     // sanity: the loop actually trained (B moved off zero)
+    let sub = engine.subspace.as_ref().unwrap();
+    assert!(sub.slots.iter().any(|s| s.b.iter().any(|&x| x != 0.0)));
+
+    // ---- LowRank-IPA phase: the same contract on the IPA shapes ----
+    // (one test binary, so both phases share the allocation counter;
+    // gradient views are staged once, outside the counted loop — the
+    // pretrain trainer reuses its persistent staging the same way)
+    let (mut store, slots) = engine_fixture(&DIMS, HEAD_LEN);
+    let sub = SubspaceSet::from_slots(slots, ProjectorKind::Stiefel, 1.0);
+    let full = vec![FullSlot {
+        name: "head".into(),
+        param_pos: DIMS.len(),
+        dout: 0,
+        adam: Adam::new(HEAD_LEN, AdamConfig::default()),
+    }];
+    let mut engine =
+        GradEstimator::new(MethodShape::LowRankIpa, 0.0, Some(sub), Vec::new(), full, None);
+    engine.subspace.as_mut().unwrap().resample(&mut rng);
+
+    let mut grads: Vec<Vec<f32>> = DIMS
+        .iter()
+        .map(|&(m, _, r)| (0..m * r).map(|i| (i as f32 * 0.05).sin() * 1e-2).collect())
+        .collect();
+    grads.push((0..HEAD_LEN).map(|i| (i as f32 * 0.05).cos() * 1e-2).collect());
+    let grad_views: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+
+    run_ipa_steps(&mut engine, &mut store, &grad_views, 3);
+    let before = CountingAlloc::count();
+    run_ipa_steps(&mut engine, &mut store, &grad_views, 20);
+    let after = CountingAlloc::count();
+    assert_eq!(
+        after - before,
+        0,
+        "LowRank-IPA steady-state step loop allocated {} times over 20 steps",
+        after - before
+    );
     let sub = engine.subspace.as_ref().unwrap();
     assert!(sub.slots.iter().any(|s| s.b.iter().any(|&x| x != 0.0)));
 }

@@ -16,7 +16,7 @@ use lowrank_sge::estimator::engine::{
 use lowrank_sge::estimator::mse::{mse_curve, EstimatorSpec, MseCurveConfig};
 use lowrank_sge::estimator::toy::ToyProblem;
 use lowrank_sge::estimator::Family;
-use lowrank_sge::linalg::{matmul, matmul_nt, transpose, Mat};
+use lowrank_sge::linalg::{matmul, matmul_nt, Mat};
 use lowrank_sge::model::ParamStore;
 use lowrank_sge::optim::{Adam, AdamConfig};
 use lowrank_sge::projection::{build_sampler, ProjectionSampler, ProjectorKind};
@@ -27,6 +27,27 @@ static POOL_LOCK: Mutex<()> = Mutex::new(());
 
 fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
     POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// (G·V)·Vᵀ with the Vᵀ contraction stated directly in the canonical
+/// fixed-lane accumulation order (`kernel::lane_dot`) — the reference
+/// form of the lift. The pre-SIMD references used an explicit
+/// `transpose(&v)` + GEMM here; the fixed-lane order is now the
+/// canonical bits for every dot-like reduction (see the `kernel::ops`
+/// module docs), so the golden reference states it through the same
+/// helper rather than the blocked kernels under test.
+fn lift_reference(gv: &Mat, v: &Mat) -> Mat {
+    assert_eq!(gv.cols, v.cols);
+    let mut out = Mat::zeros(gv.rows, v.rows);
+    for i in 0..gv.rows {
+        for j in 0..v.rows {
+            out.data[i * v.rows + j] += lowrank_sge::kernel::lane_dot(
+                &gv.data[i * gv.cols..(i + 1) * gv.cols],
+                &v.data[j * v.cols..(j + 1) * v.cols],
+            );
+        }
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -352,9 +373,10 @@ fn reference_mse_points(
                 (Some(s), Family::Ipa) => {
                     let v = s.sample(&mut rep_rng);
                     let ghat = problem.ipa_estimate(w, &a);
-                    // the old project_lift: explicit transpose + GEMM
+                    // project then lift, the Vᵀ contraction in the
+                    // canonical fixed-lane order
                     let gv = matmul(&ghat, &v);
-                    matmul(&gv, &transpose(&v))
+                    lift_reference(&gv, &v)
                 }
                 (Some(s), Family::Lr) => {
                     let v = s.sample(&mut rep_rng);
@@ -459,8 +481,9 @@ fn toy_mse_csv_is_thread_count_invariant() {
 
 #[test]
 fn new_project_lift_matches_transpose_form_bitwise() {
-    // the engine's gemm_nt lift vs the old transpose + gemm_nn form:
-    // per-element accumulation order is identical, so the bits are too.
+    // the engine's gemm_nt lift vs the reference form stated through
+    // the canonical fixed-lane helper: both accumulate each element in
+    // the fixed-lane order, so the bits are identical.
     let _guard = lock_pool();
     let mut rng = Rng::new(5);
     for (m, n, r) in [(7, 9, 3), (40, 33, 8), (64, 64, 4)] {
@@ -469,7 +492,7 @@ fn new_project_lift_matches_transpose_form_bitwise() {
         let v = s.sample(&mut rng);
         let fast = project_lift(&g, &v);
         let gv = matmul(&g, &v);
-        let slow = matmul(&gv, &transpose(&v));
+        let slow = lift_reference(&gv, &v);
         for (x, y) in fast.data.iter().zip(&slow.data) {
             assert_eq!(x.to_bits(), y.to_bits(), "project_lift bits diverged at {m}x{n}x{r}");
         }

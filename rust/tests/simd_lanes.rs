@@ -1,0 +1,227 @@
+//! Integration: the fixed-lane SIMD contract — every kernel result is
+//! bitwise identical under `LOWRANK_SIMD=scalar` (the portable lane
+//! emulation) and `LOWRANK_SIMD=auto` (AVX/NEON tiles), across ragged
+//! tails, prime shapes, NaN/Inf payloads, both precisions, and thread
+//! counts. The scalar emulation *is* the definition of the canonical
+//! accumulation order; the vector backends must reproduce it exactly.
+//!
+//! The mode is flipped in-process via [`simd::set_mode`] (the same
+//! switch the benches use), serialized by a binary-local mutex around
+//! the process-global mode word. CI additionally runs this whole suite
+//! under both `LOWRANK_SIMD` values × `LOWRANK_THREADS` ∈ {1, 4}.
+
+use std::sync::Mutex;
+
+use lowrank_sge::kernel::simd::{self, SimdMode};
+use lowrank_sge::kernel::{self, KernelPool};
+
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Run `f` under both modes and assert the collected bit patterns are
+/// identical. The previous mode is restored afterwards, so tests that
+/// share the binary (and CI's env-driven runs) see their own setting.
+fn assert_modes_agree(ctx: &str, f: impl Fn() -> Vec<u64>) {
+    let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = simd::mode();
+    simd::set_mode(SimdMode::Scalar);
+    let emulated = f();
+    simd::set_mode(SimdMode::Auto);
+    let backend = simd::active_backend();
+    let dispatched = f();
+    simd::set_mode(prev);
+    assert_eq!(emulated.len(), dispatched.len(), "{ctx}");
+    for (i, (e, d)) in emulated.iter().zip(&dispatched).enumerate() {
+        assert_eq!(e, d, "{ctx}: scalar-emulation vs {backend} backend differ at element {i}");
+    }
+}
+
+fn arb_f64(len: usize, seed: u64) -> Vec<f64> {
+    let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(17);
+    (0..len)
+        .map(|_| {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 33) as f64) / (u32::MAX as f64) - 0.5
+        })
+        .collect()
+}
+
+fn arb_f32(len: usize, seed: u64) -> Vec<f32> {
+    arb_f64(len, seed).into_iter().map(|x| x as f32).collect()
+}
+
+#[test]
+fn lane_dot_bitwise_across_backends_every_tail_length() {
+    // every tail residue 0..8 (f32) / 0..4 (f64), plus lengths long
+    // enough to cross the reduction-chunk boundary
+    let lens: Vec<usize> =
+        (0..=33).chain([61, 1009, 3 * kernel::REDUCE_CHUNK + 5]).collect();
+    for &len in &lens {
+        let x64 = arb_f64(len, 2 * len as u64 + 1);
+        let y64 = arb_f64(len, 2 * len as u64 + 2);
+        let x32 = arb_f32(len, 2 * len as u64 + 3);
+        let y32 = arb_f32(len, 2 * len as u64 + 4);
+        assert_modes_agree(&format!("lane_dot len={len}"), || {
+            vec![
+                kernel::lane_dot(&x64, &y64).to_bits(),
+                kernel::lane_dot(&x32, &y32).to_bits() as u64,
+            ]
+        });
+        // in every mode the result IS the portable lane emulation
+        let _g = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(
+            kernel::lane_dot(&x64, &y64).to_bits(),
+            simd::lane_dot_scalar(&x64, &y64).to_bits(),
+            "len={len}: lane_dot must equal its scalar definition"
+        );
+    }
+}
+
+#[test]
+fn gemm_bitwise_across_backends_and_threads() {
+    // prime dims: every row block and cache tile boundary is ragged
+    for &(m, k, n) in &[(97usize, 53usize, 31usize), (61, 37, 101)] {
+        let a64 = arb_f64(m * k, 11);
+        let b64 = arb_f64(n * k, 12);
+        let a32 = arb_f32(m * k, 13);
+        let b32 = arb_f32(n * k, 14);
+        let bnn32 = arb_f32(k * n, 15);
+        for threads in [1usize, 4] {
+            let pool = KernelPool::new(threads);
+            assert_modes_agree(&format!("gemm {m}x{k}x{n} threads={threads}"), || {
+                let mut c64 = vec![0.0f64; m * n];
+                kernel::gemm_nt(&pool, 0.37f64, &a64, &b64, &mut c64, m, n, k);
+                let mut c32 = vec![0.0f32; m * n];
+                kernel::gemm_nt(&pool, 0.37f32, &a32, &b32, &mut c32, m, n, k);
+                let mut cnn = vec![0.0f32; m * n];
+                kernel::gemm_nn(&pool, &a32, &bnn32, &mut cnn, m, k, n);
+                c64.iter()
+                    .map(|x| x.to_bits())
+                    .chain(c32.iter().map(|x| x.to_bits() as u64))
+                    .chain(cnn.iter().map(|x| x.to_bits() as u64))
+                    .collect()
+            });
+        }
+    }
+}
+
+#[test]
+fn element_ops_and_reductions_bitwise_across_backends() {
+    let len = 4099usize; // prime: ragged vector tail everywhere
+    let x64 = arb_f64(len, 21);
+    let x32 = arb_f32(len, 22);
+    let y32 = arb_f32(len, 23);
+    for threads in [1usize, 4] {
+        let pool = KernelPool::new(threads);
+        assert_modes_agree(&format!("elem/reduce threads={threads}"), || {
+            let mut acc = y32.clone();
+            kernel::axpy(&pool, 0.73f32, &x32, &mut acc);
+            kernel::scale(&pool, &mut acc, 1.0f32 / 3.0);
+            kernel::add_assign(&pool, &mut acc, &y32);
+            let mut bits: Vec<u64> = acc.iter().map(|v| v.to_bits() as u64).collect();
+            bits.push(kernel::dot(&pool, &x64, &x64).to_bits());
+            bits.push(kernel::sum_sq(&pool, &x32).to_bits());
+            bits
+        });
+    }
+}
+
+#[test]
+fn nan_inf_and_signed_zero_payloads_identical_across_backends() {
+    // specials in every lane position of the first vector block and in
+    // the ragged tail; products like 0·∞ and NaN payload propagation
+    // must come out of the vector tiles exactly as from the emulation
+    let len = 29usize;
+    let mut x = arb_f32(len, 31);
+    let y = arb_f32(len, 32);
+    x[0] = f32::NAN;
+    x[3] = f32::INFINITY;
+    x[5] = f32::NEG_INFINITY;
+    x[7] = -0.0;
+    x[11] = f32::from_bits(0x7FC0_1234); // NaN with payload
+    x[26] = f32::NAN; // in the tail
+    x[28] = f32::INFINITY;
+    let mut x64: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    x64[2] = f64::NAN;
+    let y64 = arb_f64(len, 33);
+    assert_modes_agree("special values", || {
+        // 1×len×1 gemm_nt: C[0][j] = x[0]·y[j], with x[0] = NaN
+        let mut acc = vec![0.0f32; len];
+        kernel::serial::gemm_nt(1.0f32, &x[..1], &y, &mut acc, 1, len, 1);
+        let mut bits: Vec<u64> =
+            vec![kernel::lane_dot(&x, &y).to_bits() as u64, kernel::lane_dot(&x64, &y64).to_bits()];
+        bits.extend(acc.iter().map(|v| v.to_bits() as u64));
+        let mut fma = y.clone();
+        lowrank_sge::kernel::Scalar::fma_row(&mut fma[..], x[11], &x);
+        bits.extend(fma.iter().map(|v| v.to_bits() as u64));
+        bits
+    });
+}
+
+#[test]
+fn bf16_batch_kernels_bitwise_across_backends() {
+    // every length 0..=64 (all AVX2 block tails) + RNE ties + specials
+    for len in 0..=64usize {
+        let mut src = arb_f32(len, 41 + len as u64);
+        if len > 4 {
+            src[1] = f32::from_bits(0x3F80_8000); // exact RNE tie
+            src[2] = f32::from_bits(0x7F80_0001); // sneaky signaling NaN
+            src[3] = -0.0;
+            src[4] = f32::INFINITY;
+        }
+        assert_modes_agree(&format!("bf16 batch len={len}"), || {
+            let mut lanes = vec![0u16; len];
+            simd::f32_to_bf16_batch(&src, &mut lanes);
+            let mut widened = vec![0.0f32; len];
+            simd::bf16_to_f32_batch(&lanes, &mut widened);
+            let mut quant = src.clone();
+            simd::quantize_bf16_batch(&mut quant);
+            lanes
+                .iter()
+                .map(|&b| b as u64)
+                .chain(widened.iter().map(|v| v.to_bits() as u64))
+                .chain(quant.iter().map(|v| v.to_bits() as u64))
+                .collect()
+        });
+    }
+}
+
+#[test]
+fn engine_step_bitwise_across_backends() {
+    // end to end: a LowRank-LR training step through the f32 engine —
+    // Adam on B, Θ += ΔB·Vᵀ through gemm_nt — same bytes either mode
+    use lowrank_sge::bench_util::engine_fixture;
+    use lowrank_sge::coordinator::SubspaceSet;
+    use lowrank_sge::estimator::engine::{GradEstimator, GradSignal, MethodShape};
+    use lowrank_sge::optim::AdamConfig;
+    use lowrank_sge::projection::ProjectorKind;
+    use lowrank_sge::rng::Rng;
+
+    const DIMS: [(usize, usize, usize); 2] = [(37, 29, 4), (23, 31, 3)];
+    assert_modes_agree("engine lowrank-lr steps", || {
+        let (mut store, slots) = engine_fixture(&DIMS, 16);
+        let sub = SubspaceSet::from_slots(slots, ProjectorKind::Stiefel, 1.0);
+        let mut engine = GradEstimator::new(
+            MethodShape::LowRankLr,
+            1e-2,
+            Some(sub),
+            Vec::new(),
+            Vec::new(),
+            Some((DIMS.len(), 16, AdamConfig::default())),
+        );
+        let mut rng = Rng::new(97);
+        engine.subspace.as_mut().unwrap().resample(&mut rng);
+        for step in 0..5 {
+            engine.draw_perturbations(&mut rng);
+            let fp = 0.9 + step as f32 * 0.01;
+            let fm = 0.8 - step as f32 * 0.02;
+            engine
+                .step(&mut store, GradSignal::Antithetic { f_plus: fp, f_minus: fm }, 1e-3)
+                .unwrap();
+        }
+        let mut bits = Vec::new();
+        for i in 0..store.len() {
+            bits.extend(store.f32(i).unwrap().iter().map(|v| v.to_bits() as u64));
+        }
+        bits
+    });
+}
