@@ -67,6 +67,7 @@ pub fn engine_fixture(
             m,
             n,
             r,
+            r_max: r,
             b_input: usize::MAX,
             v_input: usize::MAX,
             db_output: usize::MAX,
@@ -74,6 +75,9 @@ pub fn engine_fixture(
             b: Arc::new(vec![0.0; m * r]),
             v: Arc::new(vec![0.0; n * r]),
             adam: Adam::new(m * r, AdamConfig::default()),
+            frame: None,
+            stage_b: None,
+            stage_v: None,
         })
         .collect();
     (store, slots)

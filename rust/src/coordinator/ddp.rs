@@ -302,13 +302,15 @@ impl Collective {
     ///
     /// Arithmetic is identical to calling `allreduce_mean_shards` on
     /// each slot in order — bitwise, in both wire dtypes — but on the
-    /// `Comm` backend the *schedule* overlaps: while slot k's chunk
-    /// reduce runs on the kernel pool (on a helper thread), the
-    /// communicator is already driving slot k+1's ring exchange on the
-    /// sockets, with at most [`PIPELINE_WINDOW`] collectives in flight.
-    /// The socket schedule is a pure function of (world, slot lengths,
-    /// algorithm) — never of pool or arrival timing — so every rank
-    /// interleaves identically and determinism is untouched.
+    /// `Comm` backend the *schedule* overlaps: while slot k's ring
+    /// exchange is on the sockets, the helper thread is already running
+    /// slot k+1's local shard reduce on the kernel pool, and slot k's
+    /// post-exchange chunk reduce follows on the same thread while the
+    /// next exchange starts — with at most [`PIPELINE_WINDOW`] ring
+    /// collectives in flight. The socket schedule is a pure function of
+    /// (world, slot lengths, algorithm) — never of pool or arrival
+    /// timing — so every rank interleaves identically and determinism
+    /// is untouched.
     pub fn allreduce_mean_slots(&mut self, slots: &mut [Vec<Vec<f32>>]) -> Result<usize> {
         let Some(first) = slots.first() else { return Ok(0) };
         let n_local = first.len();
@@ -489,20 +491,38 @@ fn reduce_slots_local(pool: &KernelPool, slots: &mut [Vec<Vec<f32>>], n_local: u
     }
 }
 
+/// One unit of pool work shipped to the pipeline's helper thread:
+/// either a slot's local per-worker shard reduce (the pairing tree) or
+/// its post-exchange chunk reduce. One FIFO helper runs both, so
+/// completions come back strictly in submission order — the property
+/// the main loop's recv discipline is built on.
+enum SlotJob {
+    /// Local pairing-tree reduce of slot k's per-worker shards.
+    Shards(usize, Vec<Vec<f32>>),
+    /// Post-exchange chunk reduce of slot k's in-flight ring collective.
+    Chunks(usize, RingPending),
+}
+
 /// Complete the oldest in-flight ring collective: take its reduced
-/// chunks from the helper thread (jobs complete in submission order),
-/// gather, and scale to the global mean.
+/// chunks from the helper thread (jobs complete in submission order, so
+/// the next done item must be this slot's chunk reduce), gather, and
+/// scale to the global mean.
 fn finish_oldest(
     c: &mut Communicator,
     pool: &KernelPool,
     slots: &mut [Vec<Vec<f32>>],
     inv: f32,
     in_flight: &mut VecDeque<usize>,
-    done_rx: &mpsc::Receiver<(usize, RingPending)>,
+    done_rx: &mpsc::Receiver<SlotJob>,
 ) -> Result<()> {
     let j = in_flight.pop_front().expect("finish_oldest on an empty window");
-    let (k, pending) = done_rx.recv().expect("slot reducer thread died");
-    debug_assert_eq!(k, j, "reducer completed slots out of order");
+    let pending = match done_rx.recv().expect("slot reducer thread died") {
+        SlotJob::Chunks(k, pending) => {
+            debug_assert_eq!(k, j, "reducer completed slots out of order");
+            pending
+        }
+        SlotJob::Shards(k, _) => panic!("shard reduce of slot {k} completed out of schedule"),
+    };
     c.ring_gather(pending, &mut slots[j][0])?;
     crate::kernel::scale(pool, &mut slots[j][0], inv);
     Ok(())
@@ -510,42 +530,76 @@ fn finish_oldest(
 
 /// The slot-pipelined cross-rank schedule behind
 /// [`Collective::allreduce_mean_slots`]. Per slot: local shard reduce
-/// (pairing tree on the pool) → ring exchange (sockets) → chunk reduce
-/// (pool, on the helper thread, overlapped with the next slot's
-/// exchange) → ring gather (sockets) → scale. Slots the algorithm
-/// routes to the tree transport drain the window first and run whole,
-/// so the frame schedule every peer sees is the same pure function of
-/// (world, slot lengths, algorithm) on every rank.
+/// (pairing tree, on the helper thread, overlapped with the *previous*
+/// slot's ring exchange) → ring exchange (sockets) → chunk reduce
+/// (helper thread again, overlapped with the *next* slot's exchange) →
+/// ring gather (sockets) → scale. Slots the algorithm routes to the
+/// tree transport drain the window first and run whole, so the frame
+/// schedule every peer sees is the same pure function of (world, slot
+/// lengths, algorithm) on every rank.
+///
+/// Both job kinds ride one FIFO helper, so the done stream interleaves
+/// deterministically (S0 | S1, C0 | S2, C1 | …): iteration k's first
+/// recv is always its own shard reduce, and every `finish_oldest` recv
+/// is the oldest outstanding chunk reduce. `tree_sum_vecs` is
+/// bitwise-identical at any pool size and from any calling thread, so
+/// moving the shard reduce off-thread changes timing only.
 fn pipeline_ring_slots(
     c: &mut Communicator,
     pool: &Arc<KernelPool>,
     slots: &mut [Vec<Vec<f32>>],
     inv: f32,
 ) -> Result<()> {
+    if slots.is_empty() {
+        return Ok(());
+    }
     let algo = c.algorithm();
     std::thread::scope(|scope| -> Result<()> {
-        let (job_tx, job_rx) = mpsc::channel::<(usize, RingPending)>();
-        let (done_tx, done_rx) = mpsc::channel::<(usize, RingPending)>();
+        let (job_tx, job_rx) = mpsc::channel::<SlotJob>();
+        let (done_tx, done_rx) = mpsc::channel::<SlotJob>();
         let reduce_pool = Arc::clone(pool);
-        // chunk reduces run here so the caller can keep the sockets
-        // busy; `tree_sum_vecs` is bitwise-identical at any pool size,
-        // so moving it off-thread changes timing only
+        // pool work runs here so the caller can keep the sockets busy
         scope.spawn(move || {
-            for (k, mut pending) in job_rx {
-                pending.reduce(&reduce_pool);
-                if done_tx.send((k, pending)).is_err() {
+            for job in job_rx {
+                let done = match job {
+                    SlotJob::Shards(k, mut shards) => {
+                        crate::kernel::tree_sum_vecs(&reduce_pool, &mut shards);
+                        SlotJob::Shards(k, shards)
+                    }
+                    SlotJob::Chunks(k, mut pending) => {
+                        pending.reduce(&reduce_pool);
+                        SlotJob::Chunks(k, pending)
+                    }
+                };
+                if done_tx.send(done).is_err() {
                     return; // caller bailed mid-pipeline
                 }
             }
         });
+        job_tx
+            .send(SlotJob::Shards(0, std::mem::take(&mut slots[0])))
+            .expect("slot reducer thread died");
         let mut in_flight: VecDeque<usize> = VecDeque::new();
         for k in 0..slots.len() {
-            crate::kernel::tree_sum_vecs(pool, &mut slots[k]);
+            match done_rx.recv().expect("slot reducer thread died") {
+                SlotJob::Shards(j, shards) => {
+                    debug_assert_eq!(j, k, "shard reduces completed out of order");
+                    slots[k] = shards;
+                }
+                SlotJob::Chunks(j, _) => {
+                    panic!("chunk reduce of slot {j} completed before slot {k}'s shard reduce")
+                }
+            }
+            if k + 1 < slots.len() {
+                job_tx
+                    .send(SlotJob::Shards(k + 1, std::mem::take(&mut slots[k + 1])))
+                    .expect("slot reducer thread died");
+            }
             // one routing predicate, shared with the serial
             // `allreduce_sum_with` — serial ≡ pipelined depends on it
             if algo.routes_to_ring(slots[k][0].len()) {
                 let pending = c.ring_exchange(&mut slots[k][0])?;
-                job_tx.send((k, pending)).expect("slot reducer thread died");
+                job_tx.send(SlotJob::Chunks(k, pending)).expect("slot reducer thread died");
                 in_flight.push_back(k);
                 if in_flight.len() >= PIPELINE_WINDOW {
                     finish_oldest(c, pool, slots, inv, &mut in_flight, &done_rx)?;

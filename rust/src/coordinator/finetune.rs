@@ -113,6 +113,11 @@ pub struct FinetuneConfig {
     pub threads: usize,
     /// Checkpoint/resume policy (default: disabled).
     pub ckpt: CkptOptions,
+    /// Warm-started subspace tracking (Stiefel only; see
+    /// [`crate::projection::tracking`]): full Haar redraw every this
+    /// many resamples, tracked refresh otherwise. 0 = off (the
+    /// paper-exact Table-1 schedule, and the default here).
+    pub track_refresh: u64,
 }
 
 impl FinetuneConfig {
@@ -130,6 +135,7 @@ impl FinetuneConfig {
             eval_examples: 256,
             threads: 0,
             ckpt: CkptOptions::default(),
+            track_refresh: 0,
         }
     }
 }
@@ -201,7 +207,7 @@ impl FinetuneTrainer {
             FinetuneMethod::LowRankLr(k) | FinetuneMethod::LowRankIpa(k) => Some(k),
             _ => None,
         };
-        let subspace = match (cfg.method, &grad_art) {
+        let mut subspace = match (cfg.method, &grad_art) {
             (FinetuneMethod::LowRankIpa(_), Some(a)) => Some(SubspaceSet::from_manifest(
                 &a.manifest,
                 &store,
@@ -218,6 +224,9 @@ impl FinetuneTrainer {
             )?),
             _ => None,
         };
+        if let Some(sub) = &mut subspace {
+            sub.set_tracking(cfg.track_refresh);
+        }
 
         let head_pos = store.position("[head]").context("no head param")?;
         let head_len = store.tensors()[head_pos].num_elements();
@@ -458,10 +467,14 @@ impl FinetuneTrainer {
                         let slot = &sub.slots[*s];
                         match src {
                             Src::B(_) => {
-                                HostTensor::f32_shared(vec![slot.m, slot.r], slot.b.clone())
+                                // staged view == compact (B, V) here: the
+                                // finetune trainer never shrinks ranks
+                                let (shape, data) = slot.staged_b();
+                                HostTensor::f32_shared(shape, data)
                             }
                             Src::V(_) => {
-                                HostTensor::f32_shared(vec![slot.n, slot.r], slot.v.clone())
+                                let (shape, data) = slot.staged_v();
+                                HostTensor::f32_shared(shape, data)
                             }
                             Src::Z(_) => {
                                 HostTensor::f32_shared(vec![slot.m, slot.r], self.engine.z_arc(*s))

@@ -3,7 +3,15 @@
 //! The trainer realizes Algorithm 1 over the `lm_grad_<scale>` artifact:
 //! every K steps it lifts Θ ← Θ + B·Vᵀ and resamples V from the
 //! configured projector law (Stiefel vs Gaussian is the Figures 7–9
-//! contrast); each inner step executes the artifact once per DDP worker
+//! contrast). With `--track-refresh T` the Stiefel resample is
+//! warm-started ([`crate::projection::tracking`]): the previous frame is
+//! refreshed in place, with a full Haar redraw every T-th resample; with
+//! `--rank-adapt` an online [`RankController`] watches the all-reduced
+//! lift residuals at each boundary and shrinks a slot's rank in place
+//! (B, V, Adam moments, engine scratch, and the gradient wire all drop
+//! to the new m·r footprint — the artifact keeps its compiled [·, r_max]
+//! shapes via zero-padded staging). Each inner step executes the
+//! artifact once per DDP worker
 //! shard, all-reduces the gradients through the configured
 //! [`Collective`] backend (in-process pairing tree, or the
 //! [`crate::comm`] ring/tree collectives when this trainer is one rank
@@ -39,7 +47,10 @@ use crate::ckpt::{
 use crate::data::ZipfMarkovCorpus;
 use crate::estimator::engine::{GradEstimator, GradSignal, MethodShape};
 use crate::model::ParamStore;
-use crate::optim::{clip_global_norm, Adam, AdamConfig, CosineSchedule, LazyAction, LazyUpdateController, LrSchedule};
+use crate::optim::{
+    clip_global_norm, Adam, AdamConfig, CosineSchedule, LazyAction, LazyUpdateController,
+    LrSchedule, RankAdaptConfig, RankController, RankDecision,
+};
 use crate::projection::ProjectorKind;
 use crate::rng::Rng;
 use crate::runtime::{HostTensor, LoadedArtifact, Runtime};
@@ -77,6 +88,16 @@ pub struct PretrainConfig {
     pub threads: usize,
     /// Checkpoint/resume policy (default: disabled).
     pub ckpt: CkptOptions,
+    /// Warm-started subspace tracking (Stiefel only): every resample
+    /// refreshes the previous frame with a rank-1 tilt + Cholesky-QR
+    /// instead of a fresh n×r Gaussian QR, redrawing a full Haar frame
+    /// every this many resamples. 0 disables tracking (every resample
+    /// is a fresh draw — the paper-exact schedule).
+    pub track_refresh: u64,
+    /// Online per-layer rank controller: watch the all-reduced lift
+    /// residuals and shrink a slot's rank when the trend decays.
+    /// `None` keeps every rank fixed at the manifest value.
+    pub rank_adapt: Option<RankAdaptConfig>,
 }
 
 impl PretrainConfig {
@@ -97,6 +118,8 @@ impl PretrainConfig {
             eval_batches: 2,
             threads: 0,
             ckpt: CkptOptions::default(),
+            track_refresh: 8,
+            rank_adapt: None,
         }
     }
 }
@@ -135,6 +158,8 @@ pub struct PretrainTrainer {
     batch: usize,
     seq_len: usize,
     vocab: usize,
+    /// Online per-layer rank controller (`--rank-adapt`).
+    rank_ctl: Option<RankController>,
     /// Artifact output slot of each subspace dB, in slot order.
     db_outs: Vec<usize>,
     /// Artifact output slot of each full-rank gradient, in slot order.
@@ -175,8 +200,10 @@ impl PretrainTrainer {
         let eval_art = rt.load(&format!("lm_eval_{}", cfg.scale))?;
         let store = ParamStore::load_init(artifacts_dir, &cfg.scale, &grad_art.manifest)?;
         let adam_cfg = AdamConfig { weight_decay: cfg.weight_decay, ..AdamConfig::paper_pretrain() };
-        let subspace =
+        let mut subspace =
             SubspaceSet::from_manifest(&grad_art.manifest, &store, cfg.sampler, cfg.c, adam_cfg)?;
+        subspace.set_tracking(cfg.track_refresh);
+        let rank_ctl = cfg.rank_adapt.map(|rc| RankController::new(rc, subspace.slots.len()));
 
         // full-rank trainables: outputs out[2][<name>]
         let mut full_slots = Vec::new();
@@ -254,6 +281,7 @@ impl PretrainTrainer {
             batch,
             seq_len,
             vocab,
+            rank_ctl,
             db_outs,
             f_douts,
             grad_stage: Vec::new(),
@@ -273,12 +301,15 @@ impl PretrainTrainer {
             .map(|src| match src {
                 Src::Param(i) => self.store.tensors()[*i].clone(),
                 Src::B(s) => {
-                    let slot = &self.subspace().slots[*s];
-                    HostTensor::f32_shared(vec![slot.m, slot.r], slot.b.clone())
+                    // staged view: compact [m, r] before any shrink,
+                    // zero-padded [m, r_max] after (the artifact's fixed
+                    // input shape; zero B columns contribute nothing)
+                    let (shape, data) = self.subspace().slots[*s].staged_b();
+                    HostTensor::f32_shared(shape, data)
                 }
                 Src::V(s) => {
-                    let slot = &self.subspace().slots[*s];
-                    HostTensor::f32_shared(vec![slot.n, slot.r], slot.v.clone())
+                    let (shape, data) = self.subspace().slots[*s].staged_v();
+                    HostTensor::f32_shared(shape, data)
                 }
                 Src::Tokens => tokens_t.clone(),
             })
@@ -378,12 +409,19 @@ impl PretrainTrainer {
             let t0 = Instant::now();
             if controller.action(step) == LazyAction::ResampleSubspace {
                 let _p = crate::obs::phase("trainer", "resample", "step.resample_s");
-                let sub = self.engine.subspace.as_mut().expect("subspace");
                 if step > 0 {
-                    sub.lift(&mut self.store)?;
+                    self.engine.subspace.as_mut().expect("subspace").lift(&mut self.store)?;
+                    // rank decisions happen exactly here: B is spent
+                    // (lifted), Adam is about to reset, V is about to be
+                    // redrawn — a shrink is a pure re-layout
+                    self.apply_rank_adaptation(step, &controller)?;
                 }
-                sub.resample(&mut self.rng);
+                self.engine.subspace.as_mut().expect("subspace").resample(&mut self.rng);
             }
+            // keep the padded B staging (shrunk slots only; a no-op
+            // before the first shrink) in sync with the B the engine
+            // updated last step
+            self.engine.subspace.as_mut().expect("subspace").refresh_stage();
             let lr = schedule.lr(step);
 
             // one shard per local worker; all-reduce gradients across
@@ -408,7 +446,16 @@ impl PretrainTrainer {
                     drop(inputs);
                     loss_acc += out[0].scalar()?;
                     for (si, &oi) in self.db_outs.iter().enumerate() {
-                        stage_grad(&mut groups[si], s_idx, out[oi].as_f32()?);
+                        // post-shrink slots: the artifact still emits dB
+                        // at [m, r_max]; keep only the active columns so
+                        // the all-reduce wire volume drops with r (the
+                        // padded V columns are zero, so the dropped dB
+                        // columns are exactly zero)
+                        let (m, r, r_max) = {
+                            let s = &self.subspace().slots[si];
+                            (s.m, s.r, s.r_max)
+                        };
+                        stage_grad_cols(&mut groups[si], s_idx, out[oi].as_f32()?, m, r, r_max);
                     }
                     for (fi, &oi) in self.f_douts.iter().enumerate() {
                         stage_grad(&mut groups[n_b + fi], s_idx, out[oi].as_f32()?);
@@ -515,6 +562,68 @@ impl PretrainTrainer {
         })
     }
 
+    /// Feed the just-measured lift residuals to the rank controller and
+    /// apply any shrink decisions. Runs at the lazy-update boundary,
+    /// after `lift` and before `resample`.
+    ///
+    /// The residuals are all-reduced (mean) across ranks first. Every
+    /// rank folds the identical reduced gradients, so the local values
+    /// already agree — the reduce makes the cross-rank agreement a
+    /// structural guarantee rather than an accident (the mean of equal
+    /// f32 values is exact at any world size that is a power of two
+    /// times one value, and in particular x, (x+x)/2 = x). Every rank
+    /// therefore takes the identical decision with no decision
+    /// broadcast, and prints its own `[rank-adapt r{rank}]` line for
+    /// the launch smoke test to cross-check.
+    fn apply_rank_adaptation(&mut self, step: u64, controller: &LazyUpdateController) -> Result<()> {
+        if self.rank_ctl.is_none() {
+            return Ok(());
+        }
+        let (residuals, ranks): (Vec<f64>, Vec<usize>) = {
+            let sub = self.subspace();
+            (sub.lift_residuals().to_vec(), sub.ranks())
+        };
+        let mut reduced = Vec::with_capacity(residuals.len());
+        for &x in &residuals {
+            reduced.push(self.collective.allreduce_mean_scalar(x as f32, 1)? as f64);
+        }
+        let decisions =
+            self.rank_ctl.as_mut().expect("checked above").observe(&reduced, &ranks);
+        let rank = self.collective.rank();
+        let outer = controller.outer_index(step);
+        for (i, d) in decisions.iter().enumerate() {
+            match *d {
+                RankDecision::Pending => {}
+                RankDecision::Keep { ratio } => {
+                    println!(
+                        "[rank-adapt r{rank}] outer={outer} {}: resid ratio {ratio:.4} (keep r={})",
+                        self.subspace().slots[i].name,
+                        ranks[i],
+                    );
+                }
+                RankDecision::Shrink { to, ratio } => {
+                    println!(
+                        "[rank-adapt r{rank}] outer={outer} {}: resid ratio {ratio:.4} (shrink r{}→{to})",
+                        self.subspace().slots[i].name,
+                        ranks[i],
+                    );
+                    self.engine.shrink_slot_rank(i, to)?;
+                    // drop this slot's gradient staging: the next step
+                    // restages at the new [m, r] width
+                    if let Some(g) = self.grad_stage.get_mut(i) {
+                        g.clear();
+                        g.shrink_to_fit();
+                    }
+                }
+            }
+            if !matches!(d, RankDecision::Pending) && crate::obs::metrics::enabled() {
+                let key = self.subspace().rank_key(i).to_string();
+                crate::obs::metrics::record_value(&key, self.subspace().slots[i].r as f64);
+            }
+        }
+        Ok(())
+    }
+
     pub fn store(&self) -> &ParamStore {
         &self.store
     }
@@ -540,12 +649,18 @@ impl PretrainTrainer {
         for fslot in &self.engine.ipa_full {
             full.merge_prefixed(&format!("adam[{}].", fslot.name), fslot.adam.state_dict());
         }
-        let groups = vec![
+        let mut groups = vec![
             ("params".to_string(), self.store.state_dict()),
             ("subspace".to_string(), self.subspace().state_dict()),
             ("full".to_string(), full),
             ("rng".to_string(), self.rng.state_dict()),
         ];
+        if let Some(ctl) = &self.rank_ctl {
+            // mid-window residual observations: without them a resume
+            // could take a different rank schedule than the
+            // uninterrupted run
+            groups.push(("rankctl".to_string(), ctl.state_dict()));
+        }
         let meta = vec![
             ("trainer".to_string(), "pretrain".to_string()),
             ("scale".to_string(), self.cfg.scale.clone()),
@@ -589,7 +704,41 @@ impl PretrainTrainer {
                 .with_context(|| format!("full-rank slot {}", fslot.name))?;
         }
         self.rng.load_state(loaded.group("rng")?)?;
+        if let Some(ctl) = &mut self.rank_ctl {
+            ctl.load_state(loaded.group("rankctl").context(
+                "checkpoint has no rank-controller state but --rank-adapt is on \
+                 (was the checkpoint written without it?)",
+            )?)?;
+        }
         Ok(())
+    }
+}
+
+/// [`stage_grad`] for a row-major `[rows, src_cols]` source of which
+/// only the leading `cols` columns are live (a shrunk slot's dB, whose
+/// dropped columns are exactly zero). Falls through to the plain copy
+/// when the widths agree; otherwise compacts row by row into the
+/// persistent buffer — allocation-free once the buffer has warmed up at
+/// the new width.
+fn stage_grad_cols(
+    group: &mut Vec<Vec<f32>>,
+    shard: usize,
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    src_cols: usize,
+) {
+    if cols == src_cols {
+        stage_grad(group, shard, src);
+        return;
+    }
+    if group.len() <= shard {
+        group.push(Vec::with_capacity(rows * cols));
+    }
+    let dst = &mut group[shard];
+    dst.clear();
+    for row in 0..rows {
+        dst.extend_from_slice(&src[row * src_cols..row * src_cols + cols]);
     }
 }
 

@@ -17,19 +17,33 @@ use anyhow::{bail, Context, Result};
 
 use crate::ckpt::Checkpointable;
 use crate::kernel;
+use crate::linalg::Mat;
 use crate::model::ParamStore;
 use crate::optim::{Adam, AdamConfig};
-use crate::projection::{sample_batch, ProjectorKind};
+use crate::projection::{sample_batch, track_batch, ProjectorKind};
 use crate::rng::Rng;
 use crate::runtime::ArtifactManifest;
 
 /// One reparameterized matrix W (m×n) with its auxiliary B (m×r) and
 /// projector V (n×r).
+///
+/// `r` is the slot's *active* rank: the rank controller may shrink it
+/// below the manifest rank `r_max` at a lazy-update boundary
+/// ([`SubspaceSet::shrink_slot_rank`]). B, V, and the Adam moments are
+/// always laid out compactly at the active rank — that is where the
+/// memory and GEMM savings come from — while the artifact, whose input
+/// shapes are baked into the compiled HLO, keeps seeing `[·, r_max]`
+/// tensors through the zero-padded `stage_b`/`stage_v` pads (zero V
+/// columns contribute nothing to W and produce exactly-zero dB
+/// columns, so the padded execution equals the compact one).
 pub struct MatrixSlot {
     pub name: String,
     pub m: usize,
     pub n: usize,
+    /// Active rank (≤ `r_max`).
     pub r: usize,
+    /// Manifest rank — the artifact-facing staging shape.
+    pub r_max: usize,
     /// Artifact input slot of B (usize::MAX if the artifact has no B
     /// input, e.g. the ZO artifacts where B ≡ ±σZ).
     pub b_input: usize,
@@ -44,6 +58,68 @@ pub struct MatrixSlot {
     /// Projector V (n×r), shared with the staging path.
     pub v: Arc<Vec<f32>>,
     pub adam: Adam,
+    /// Previous unit Stiefel frame Q (n×r, f64) when subspace tracking
+    /// is on — the warm-start state of [`crate::projection::tracking`].
+    /// Checkpointed at full f64 precision so a resumed tracked run
+    /// reproduces the uninterrupted one bit for bit.
+    pub frame: Option<Mat>,
+    /// Zero-padded `[m, r_max]` staging pad, allocated on first shrink.
+    pub stage_b: Option<Arc<Vec<f32>>>,
+    /// Zero-padded `[n, r_max]` staging pad, allocated on first shrink.
+    pub stage_v: Option<Arc<Vec<f32>>>,
+}
+
+impl MatrixSlot {
+    /// Artifact-facing B tensor: the compact buffer at full rank, the
+    /// zero-padded pad after a shrink (refresh with
+    /// [`SubspaceSet::refresh_stage`] before staging).
+    pub fn staged_b(&self) -> (Vec<usize>, Arc<Vec<f32>>) {
+        match &self.stage_b {
+            Some(pad) => (vec![self.m, self.r_max], Arc::clone(pad)),
+            None => (vec![self.m, self.r], Arc::clone(&self.b)),
+        }
+    }
+
+    /// Artifact-facing V tensor (see [`Self::staged_b`]).
+    pub fn staged_v(&self) -> (Vec<usize>, Arc<Vec<f32>>) {
+        match &self.stage_v {
+            Some(pad) => (vec![self.n, self.r_max], Arc::clone(pad)),
+            None => (vec![self.n, self.r], Arc::clone(&self.v)),
+        }
+    }
+
+    fn refresh_stage_b(&mut self) {
+        if let Some(pad) = &mut self.stage_b {
+            let dst = Arc::make_mut(pad);
+            for row in 0..self.m {
+                dst[row * self.r_max..row * self.r_max + self.r]
+                    .copy_from_slice(&self.b[row * self.r..(row + 1) * self.r]);
+            }
+        }
+    }
+
+    fn refresh_stage_v(&mut self) {
+        if let Some(pad) = &mut self.stage_v {
+            let dst = Arc::make_mut(pad);
+            for row in 0..self.n {
+                dst[row * self.r_max..row * self.r_max + self.r]
+                    .copy_from_slice(&self.v[row * self.r..(row + 1) * self.r]);
+            }
+        }
+    }
+}
+
+/// Compact a row-major `[rows, old_r]` buffer to `[rows, new_r]` in
+/// place and release the tail capacity (the drop must show up in the
+/// measured memory ledger, not just the analytical model).
+fn compact_cols(buf: &mut Arc<Vec<f32>>, rows: usize, old_r: usize, new_r: usize) {
+    let v = Arc::make_mut(buf);
+    for row in 1..rows {
+        // forward copy is safe: dst row·new_r+j ≤ src row·old_r+j
+        v.copy_within(row * old_r..row * old_r + new_r, row * new_r);
+    }
+    v.truncate(rows * new_r);
+    v.shrink_to_fit();
 }
 
 /// A full-rank trainable (embedding / norm) with its gradient output.
@@ -60,6 +136,23 @@ pub struct SubspaceSet {
     pub kind: ProjectorKind,
     pub c: f64,
     outer_iterations: u64,
+    /// Warm-start schedule: 0 = every resample is a fresh Haar draw
+    /// (the classic Algorithm 1 path, and the default for
+    /// manifest-free construction); T ≥ 1 = tracked refreshes with a
+    /// full Haar redraw every T-th resample. Only the Stiefel law
+    /// tracks — other kinds always draw fresh.
+    track_refresh: u64,
+    /// Resamples since construction under the tracked schedule (drives
+    /// the every-T full-refresh tick; checkpointed).
+    track_age: u64,
+    /// Per-slot lift residuals ‖B‖_F/√(m·r) from the most recent
+    /// [`Self::lift`] — the rank controller's input signal.
+    lift_residuals: Vec<f64>,
+    /// Precomputed `lift_b_norm[<name>]` metric keys (built once here
+    /// instead of a `format!` per slot per lift).
+    lift_keys: Vec<String>,
+    /// Precomputed `rank[<name>]` metric keys for controller decisions.
+    rank_keys: Vec<String>,
     /// Reusable view staging for the parallel lift fan-out
     /// ([`ParamStore::f32_mut_many_with`]).
     lift_scratch: crate::model::MutManyScratch,
@@ -78,11 +171,23 @@ impl SubspaceSet {
     /// golden tests and allocation benches use.
     pub fn from_slots(slots: Vec<MatrixSlot>, kind: ProjectorKind, c: f64) -> Self {
         assert!(!slots.is_empty(), "a SubspaceSet needs at least one slot");
+        Self::assemble(slots, kind, c)
+    }
+
+    fn assemble(slots: Vec<MatrixSlot>, kind: ProjectorKind, c: f64) -> Self {
+        let lift_keys = slots.iter().map(|s| format!("lift_b_norm[{}]", s.name)).collect();
+        let rank_keys = slots.iter().map(|s| format!("rank[{}]", s.name)).collect();
+        let lift_residuals = vec![0.0; slots.len()];
         SubspaceSet {
             slots,
             kind,
             c,
             outer_iterations: 0,
+            track_refresh: 0,
+            track_age: 0,
+            lift_residuals,
+            lift_keys,
+            rank_keys,
             lift_scratch: crate::model::MutManyScratch::new(),
         }
     }
@@ -122,6 +227,7 @@ impl SubspaceSet {
                 m,
                 n,
                 r,
+                r_max: r,
                 b_input: spec.index,
                 v_input,
                 db_output,
@@ -129,18 +235,15 @@ impl SubspaceSet {
                 b: Arc::new(vec![0.0; m * r]),
                 v: Arc::new(vec![0.0; n * r]),
                 adam: Adam::new(m * r, adam_cfg),
+                frame: None,
+                stage_b: None,
+                stage_v: None,
             });
         }
         if slots.is_empty() {
             bail!("manifest {} has no bs[...] inputs", manifest.name);
         }
-        Ok(SubspaceSet {
-            slots,
-            kind,
-            c,
-            outer_iterations: 0,
-            lift_scratch: crate::model::MutManyScratch::new(),
-        })
+        Ok(Self::assemble(slots, kind, c))
     }
 
     /// Build for ZO artifacts: `zs[...]`/`vs[...]` inputs, no B input
@@ -173,6 +276,7 @@ impl SubspaceSet {
                 m,
                 n,
                 r,
+                r_max: r,
                 b_input: spec.index, // the Z slot doubles as the "B" input
                 v_input,
                 db_output: usize::MAX,
@@ -180,37 +284,65 @@ impl SubspaceSet {
                 b: Arc::new(vec![0.0; m * r]),
                 v: Arc::new(vec![0.0; n * r]),
                 adam: Adam::new(m * r, adam_cfg),
+                frame: None,
+                stage_b: None,
+                stage_v: None,
             });
         }
         if slots.is_empty() {
             bail!("manifest {} has no zs[...] inputs", manifest.name);
         }
-        Ok(SubspaceSet {
-            slots,
-            kind,
-            c,
-            outer_iterations: 0,
-            lift_scratch: crate::model::MutManyScratch::new(),
-        })
+        Ok(Self::assemble(slots, kind, c))
     }
 
-    /// Resample every V (Algorithm 1 line 3): B ← 0, fresh V, Adam
-    /// moments reset (they live in the old subspace's coordinates).
+    /// Enable warm-started subspace tracking: tracked refreshes with a
+    /// full Haar redraw every `refresh_every`-th resample (0 disables;
+    /// 1 degenerates to the classic fresh-draw trajectory bit for
+    /// bit). Only meaningful for [`ProjectorKind::Stiefel`]; other
+    /// laws keep drawing fresh regardless.
+    pub fn set_tracking(&mut self, refresh_every: u64) {
+        self.track_refresh = refresh_every;
+    }
+
+    fn tracking_active(&self) -> bool {
+        self.track_refresh > 0 && self.kind == ProjectorKind::Stiefel
+    }
+
+    /// Resample every V (Algorithm 1 line 3): B ← 0, fresh (or
+    /// warm-started) V, Adam moments reset (they live in the old
+    /// subspace's coordinates).
     ///
     /// Draws fan out across the kernel pool via
-    /// [`crate::projection::sample_batch`]: one forked child stream per
-    /// slot (in slot order), so the result depends only on `rng` — not
-    /// on the thread count.
+    /// [`crate::projection::sample_batch`] — or, with tracking on
+    /// ([`Self::set_tracking`]), via
+    /// [`crate::projection::track_batch`], which refreshes the stored
+    /// per-slot frames instead of re-drawing them. Either way one
+    /// child stream is forked per slot (in slot order), so the result
+    /// depends only on `rng` — not on the thread count.
     pub fn resample(&mut self, rng: &mut Rng) {
         let _span = crate::obs::span("engine", "resample");
         let dims: Vec<(usize, usize)> = self.slots.iter().map(|s| (s.n, s.r)).collect();
-        let vs = sample_batch(self.kind, &dims, self.c, None, rng);
+        let vs = if self.tracking_active() {
+            let full = self.track_age % self.track_refresh == 0;
+            self.track_age += 1;
+            let mut frames: Vec<Option<Mat>> =
+                self.slots.iter_mut().map(|s| s.frame.take()).collect();
+            let vs = track_batch(&dims, self.c, &mut frames, full, rng);
+            for (slot, frame) in self.slots.iter_mut().zip(frames) {
+                slot.frame = frame;
+            }
+            vs
+        } else {
+            sample_batch(self.kind, &dims, self.c, None, rng)
+        };
         for (slot, v) in self.slots.iter_mut().zip(vs) {
             for (dst, src) in Arc::make_mut(&mut slot.v).iter_mut().zip(&v.data) {
                 *dst = *src as f32;
             }
             Arc::make_mut(&mut slot.b).iter_mut().for_each(|x| *x = 0.0);
             slot.adam.reset();
+            slot.refresh_stage_v();
+            slot.refresh_stage_b();
         }
         self.outer_iterations += 1;
     }
@@ -258,20 +390,105 @@ impl SubspaceSet {
                 },
             )?;
         }
-        if crate::obs::metrics::enabled() {
-            // per-layer lift residual ‖B‖_F — how much subspace motion
-            // each outer iteration folded into Θ (read back from the
-            // metrics series as `lift_b_norm[<layer>]`)
-            for slot in &self.slots {
-                let norm =
-                    slot.b.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt();
-                crate::obs::metrics::record_value(&format!("lift_b_norm[{}]", slot.name), norm);
+        // per-layer lift residual ‖B‖_F — how much subspace motion each
+        // outer iteration folded into Θ. Always computed (one O(m·r)
+        // pass, trivial next to the O(m·n·r) lift): the rank controller
+        // reads the normalized form from `lift_residuals()`, and with
+        // obs on it is also recorded under the precomputed
+        // `lift_b_norm[<layer>]` key (no per-lift `format!`).
+        let metrics_on = crate::obs::metrics::enabled();
+        for (i, slot) in self.slots.iter().enumerate() {
+            let norm = slot.b.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt();
+            self.lift_residuals[i] = norm / ((slot.m * slot.r) as f64).sqrt();
+            if metrics_on {
+                crate::obs::metrics::record_value(&self.lift_keys[i], norm);
             }
         }
         for slot in &mut self.slots {
             Arc::make_mut(&mut slot.b).iter_mut().for_each(|x| *x = 0.0);
         }
         Ok(())
+    }
+
+    /// Per-slot RMS lift residuals ‖B‖_F/√(m·r) from the most recent
+    /// [`Self::lift`] — rank-comparable, so the controller can apply
+    /// one threshold across slots of different shapes.
+    pub fn lift_residuals(&self) -> &[f64] {
+        &self.lift_residuals
+    }
+
+    /// Current active ranks, slot order.
+    pub fn ranks(&self) -> Vec<usize> {
+        self.slots.iter().map(|s| s.r).collect()
+    }
+
+    /// Precomputed `rank[<name>]` metric key for slot `i`.
+    pub fn rank_key(&self, i: usize) -> &str {
+        &self.rank_keys[i]
+    }
+
+    /// Re-layout slot `i` to active rank `new_r` < r, in place: B and V
+    /// compact to `[m, new_r]`/`[n, new_r]` (tail capacity released, so
+    /// the drop is visible to the measured memory ledger), the Adam
+    /// moments compact with them, the tracked frame keeps its leading
+    /// `new_r` columns (still orthonormal), and the artifact staging
+    /// pads are (re)built at the manifest shape.
+    ///
+    /// Callers shrink only at a lazy-update boundary — after
+    /// [`Self::lift`] (B = 0) and before [`Self::resample`] (V redrawn
+    /// at the new rank, Adam reset) — so no live trajectory state needs
+    /// numerical rescaling; this is purely a re-layout.
+    pub fn shrink_slot_rank(&mut self, i: usize, new_r: usize) -> Result<()> {
+        let slot = self.slots.get_mut(i).with_context(|| format!("no slot {i}"))?;
+        if new_r == slot.r {
+            return Ok(());
+        }
+        if new_r == 0 || new_r > slot.r {
+            bail!(
+                "slot {} rank can only shrink: active {}, requested {new_r}",
+                slot.name,
+                slot.r
+            );
+        }
+        let old_r = slot.r;
+        compact_cols(&mut slot.b, slot.m, old_r, new_r);
+        compact_cols(&mut slot.v, slot.n, old_r, new_r);
+        slot.adam.shrink_cols(slot.m, old_r, new_r);
+        if let Some(frame) = &mut slot.frame {
+            // leading columns of an orthonormal frame stay orthonormal
+            let mut f = Mat::zeros(slot.n, new_r);
+            for row in 0..slot.n {
+                f.data[row * new_r..(row + 1) * new_r]
+                    .copy_from_slice(&frame.data[row * old_r..row * old_r + new_r]);
+            }
+            *frame = f;
+        }
+        slot.r = new_r;
+        if slot.stage_b.is_none() {
+            slot.stage_b = Some(Arc::new(vec![0.0; slot.m * slot.r_max]));
+            slot.stage_v = Some(Arc::new(vec![0.0; slot.n * slot.r_max]));
+        } else {
+            // pads carry stale columns from the wider layout — zero the
+            // now-inactive region before the compact copy-back
+            for (pad, rows) in [(&mut slot.stage_b, slot.m), (&mut slot.stage_v, slot.n)] {
+                let dst = Arc::make_mut(pad.as_mut().expect("pad exists"));
+                for row in 0..rows {
+                    dst[row * slot.r_max + new_r..(row + 1) * slot.r_max].fill(0.0);
+                }
+            }
+        }
+        slot.refresh_stage_b();
+        slot.refresh_stage_v();
+        Ok(())
+    }
+
+    /// Refresh the artifact staging pads from the compact buffers.
+    /// Trainers call this once per step before staging inputs; it is a
+    /// no-op until a slot has actually shrunk.
+    pub fn refresh_stage(&mut self) {
+        for slot in &mut self.slots {
+            slot.refresh_stage_b();
+        }
     }
 
     /// One Adam step per slot's B, fanned out across the kernel pool.
@@ -314,15 +531,24 @@ impl SubspaceSet {
     }
 }
 
-/// Checkpointing: per slot the live B and V matrices plus the nested
-/// Adam moments (`adam[<name>].{m,v,t}` — `t` is the per-slot inner-step
-/// counter), and the outer-iteration count. Restoring mid-outer-iteration
-/// continues in the *same* subspace V with the same optimizer momentum,
-/// which is what makes a resumed run track the uninterrupted trajectory.
+/// Checkpointing: per slot the live B and V matrices (at the *active*
+/// rank) plus the nested Adam moments (`adam[<name>].{m,v,t}` — `t` is
+/// the per-slot inner-step counter), the per-slot active ranks, the
+/// outer-iteration and tracked-refresh counters, and — when tracking
+/// has drawn them — the f64 unit frames. Restoring mid-outer-iteration
+/// continues in the *same* subspace V with the same optimizer momentum
+/// and the same warm-start frame at the same point of the refresh
+/// schedule, which is what makes a resumed tracked run reproduce the
+/// uninterrupted trajectory bit for bit (frames round-trip at full f64
+/// precision — reconstructing them from the stored f32 V would lose
+/// the low bits and fork the stream of tracked updates).
 impl crate::ckpt::Checkpointable for SubspaceSet {
     fn state_dict(&self) -> crate::ckpt::StateDict {
         let mut sd = crate::ckpt::StateDict::new();
         sd.put_u64s("outer_iterations", &[self.outer_iterations]);
+        sd.put_u64s("track_age", &[self.track_age]);
+        let ranks: Vec<u64> = self.slots.iter().map(|s| s.r as u64).collect();
+        sd.put_u64s("ranks", &ranks);
         for slot in &self.slots {
             sd.put_tensor(
                 format!("b[{}]", slot.name),
@@ -333,55 +559,112 @@ impl crate::ckpt::Checkpointable for SubspaceSet {
                 crate::runtime::HostTensor::f32_shared(vec![slot.n, slot.r], slot.v.clone()),
             );
             sd.merge_prefixed(&format!("adam[{}].", slot.name), slot.adam.state_dict());
+            if let Some(frame) = &slot.frame {
+                sd.put_f64_bits(format!("frame[{}]", slot.name), &frame.data);
+            }
         }
         sd
     }
 
     fn load_state(&mut self, sd: &crate::ckpt::StateDict) -> Result<()> {
-        // 1 scalar + per slot: b, v, adam.{m,v,t}
-        let want = 1 + 5 * self.slots.len();
-        if sd.len() != want {
-            bail!("subspace checkpoint has {} tensors, expected {want}", sd.len());
-        }
+        // 3 scalars/rank vectors + per slot: b, v, adam.{m,v,t}, and a
+        // frame per slot iff the run had drawn tracked frames
+        let base = 3 + 5 * self.slots.len();
+        let has_frames = if sd.len() == base {
+            false
+        } else if sd.len() == base + self.slots.len() {
+            true
+        } else {
+            bail!(
+                "subspace checkpoint has {} tensors, expected {base} (untracked) or {}",
+                sd.len(),
+                base + self.slots.len()
+            );
+        };
         let outer = sd.u64("outer_iterations")?;
-        // validate every slot's shapes/dtypes, staging the payloads by
-        // Arc share (no per-slot copy — the live buffers unshare lazily
-        // on first mutation) …
+        let age = sd.u64("track_age")?;
+        let ranks = sd.u64s("ranks")?;
+        if ranks.len() != self.slots.len() {
+            bail!("subspace checkpoint has {} ranks for {} slots", ranks.len(), self.slots.len());
+        }
+        // validate every slot's shapes/dtypes against the *saved* rank,
+        // staging the payloads by Arc share (no per-slot copy — the
+        // live buffers unshare lazily on first mutation) …
         let mut staged_b: Vec<Arc<Vec<f32>>> = Vec::with_capacity(self.slots.len());
         let mut staged_v: Vec<Arc<Vec<f32>>> = Vec::with_capacity(self.slots.len());
-        for slot in &self.slots {
-            let b_t = sd.tensor(&format!("b[{}]", slot.name))?;
-            if b_t.shape() != [slot.m, slot.r] {
+        let mut staged_frames: Vec<Option<Mat>> = Vec::with_capacity(self.slots.len());
+        for (slot, &rank) in self.slots.iter().zip(&ranks) {
+            let rk = rank as usize;
+            if rk == 0 || rk > slot.r_max {
                 bail!(
-                    "subspace checkpoint b[{}] has shape {:?}, expected [{}, {}]",
+                    "subspace checkpoint rank {rk} for slot {} is outside 1..={}",
+                    slot.name,
+                    slot.r_max
+                );
+            }
+            let b_t = sd.tensor(&format!("b[{}]", slot.name))?;
+            if b_t.shape() != [slot.m, rk] {
+                bail!(
+                    "subspace checkpoint b[{}] has shape {:?}, expected [{}, {rk}]",
                     slot.name,
                     b_t.shape(),
                     slot.m,
-                    slot.r
                 );
             }
             staged_b.push(b_t.f32_arc()?);
             let v_t = sd.tensor(&format!("v[{}]", slot.name))?;
-            if v_t.shape() != [slot.n, slot.r] {
+            if v_t.shape() != [slot.n, rk] {
                 bail!(
-                    "subspace checkpoint v[{}] has shape {:?}, expected [{}, {}]",
+                    "subspace checkpoint v[{}] has shape {:?}, expected [{}, {rk}]",
                     slot.name,
                     v_t.shape(),
                     slot.n,
-                    slot.r
                 );
             }
             staged_v.push(v_t.f32_arc()?);
+            if has_frames {
+                let data = sd.f64_bits(&format!("frame[{}]", slot.name))?;
+                if data.len() != slot.n * rk {
+                    bail!(
+                        "subspace checkpoint frame[{}] has {} elements, expected {}",
+                        slot.name,
+                        data.len(),
+                        slot.n * rk
+                    );
+                }
+                staged_frames.push(Some(Mat { rows: slot.n, cols: rk, data }));
+            } else {
+                staged_frames.push(None);
+            }
         }
-        // … then apply
-        for ((slot, b), v) in self.slots.iter_mut().zip(staged_b).zip(staged_v) {
+        // … then apply, re-laying each slot out at its saved rank
+        for (((slot, b), v), (frame, &rank)) in self
+            .slots
+            .iter_mut()
+            .zip(staged_b)
+            .zip(staged_v)
+            .zip(staged_frames.into_iter().zip(&ranks))
+        {
+            let rk = rank as usize;
+            slot.r = rk;
             slot.b = b;
             slot.v = v;
+            slot.frame = frame;
+            if rk < slot.r_max {
+                // fresh zeroed pads (not a hot path): any stale columns
+                // from a previous layout must not leak into staging
+                slot.stage_b = Some(Arc::new(vec![0.0; slot.m * slot.r_max]));
+                slot.stage_v = Some(Arc::new(vec![0.0; slot.n * slot.r_max]));
+            }
+            slot.refresh_stage_b();
+            slot.refresh_stage_v();
+            slot.adam.resize(slot.m * rk);
             slot.adam
                 .load_state(&sd.extract_prefixed(&format!("adam[{}].", slot.name)))
                 .with_context(|| format!("subspace slot {}", slot.name))?;
         }
         self.outer_iterations = outer;
+        self.track_age = age;
         Ok(())
     }
 }
@@ -590,6 +873,107 @@ output 3 out[1][w2] f32 48x4
             assert_eq!(bytes, &ckpt_par[name], "checkpoint shard {name} diverged");
         }
         assert!(ckpt_serial.keys().any(|k| k.contains("MANIFEST")));
+    }
+
+    #[test]
+    fn shrink_relayouts_b_v_adam_and_staging_pads() {
+        let manifest = ArtifactManifest::parse(TRIPLE_MANIFEST).unwrap();
+        let mut store = triple_store();
+        let mut set = SubspaceSet::from_manifest(
+            &manifest,
+            &store,
+            ProjectorKind::Stiefel,
+            1.0,
+            AdamConfig::default(),
+        )
+        .unwrap();
+        let mut rng = Rng::new(9);
+        set.resample(&mut rng);
+        let bytes_before = set.optimizer_state_bytes();
+        // boundary discipline: lift (B = 0), shrink, resample
+        set.lift(&mut store).unwrap();
+        set.shrink_slot_rank(0, 2).unwrap();
+        set.resample(&mut rng);
+        let s = &set.slots[0];
+        assert_eq!((s.r, s.r_max), (2, 3));
+        assert_eq!(s.b.len(), s.m * 2);
+        assert_eq!(s.v.len(), s.n * 2);
+        assert!(set.optimizer_state_bytes() < bytes_before);
+        // artifact staging stays at the manifest shape, zero-padded
+        let (shape_b, pad_b) = set.slots[0].staged_b();
+        let (shape_v, pad_v) = set.slots[0].staged_v();
+        assert_eq!(shape_b, vec![set.slots[0].m, 3]);
+        assert_eq!(shape_v, vec![set.slots[0].n, 3]);
+        for row in 0..set.slots[0].m {
+            assert_eq!(pad_b[row * 3 + 2], 0.0, "pad column must stay zero");
+        }
+        for row in 0..set.slots[0].n {
+            assert_eq!(pad_v[row * 3 + 2], 0.0, "pad column must stay zero");
+            assert_eq!(pad_v[row * 3], set.slots[0].v[row * 2]);
+            assert_eq!(pad_v[row * 3 + 1], set.slots[0].v[row * 2 + 1]);
+        }
+        // unshrunk slots stage the compact buffer directly
+        let (shape1, _) = set.slots[1].staged_b();
+        assert_eq!(shape1, vec![set.slots[1].m, set.slots[1].r]);
+        // growth and rank 0 are rejected
+        assert!(set.shrink_slot_rank(0, 3).is_err());
+        assert!(set.shrink_slot_rank(0, 0).is_err());
+        // the lift still works at the compact rank
+        let grads: Vec<Vec<f32>> =
+            set.slots.iter().map(|s| vec![0.01; s.m * s.r]).collect();
+        set.adam_step_all(&grads, 1e-2);
+        set.lift(&mut store).unwrap();
+        assert!(set.lift_residuals()[0] > 0.0);
+    }
+
+    #[test]
+    fn tracked_checkpoint_roundtrips_frames_and_ranks_bitwise() {
+        fn make(manifest: &ArtifactManifest, store: &ParamStore) -> SubspaceSet {
+            let mut set = SubspaceSet::from_manifest(
+                manifest,
+                store,
+                ProjectorKind::Stiefel,
+                1.0,
+                AdamConfig::default(),
+            )
+            .unwrap();
+            set.set_tracking(3);
+            set
+        }
+        let manifest = ArtifactManifest::parse(TRIPLE_MANIFEST).unwrap();
+        let mut store = triple_store();
+        let mut src = make(&manifest, &store);
+        let mut rng = Rng::new(77);
+        src.resample(&mut rng); // full draw (age 0)
+        src.resample(&mut rng); // tracked
+        src.lift(&mut store).unwrap();
+        src.shrink_slot_rank(2, 2).unwrap();
+        src.resample(&mut rng); // tracked, slot 2 now rank 2
+        let sd = src.state_dict();
+        // frames present → one extra tensor per slot
+        assert_eq!(sd.len(), 3 + 6 * src.slots.len());
+
+        let mut dst = make(&manifest, &store);
+        dst.load_state(&sd).unwrap();
+        assert_eq!(dst.ranks(), src.ranks());
+        for (a, b) in src.slots.iter().zip(&dst.slots) {
+            let (fa, fb) = (a.frame.as_ref().unwrap(), b.frame.as_ref().unwrap());
+            assert_eq!(fa.data.len(), fb.data.len());
+            for (x, y) in fa.data.iter().zip(&fb.data) {
+                assert_eq!(x.to_bits(), y.to_bits(), "frame bits diverged");
+            }
+        }
+        // the decisive property: both continue identically — the next
+        // tracked refresh depends on the restored frame bits and age
+        let mut rng_a = Rng::new(5150);
+        let mut rng_b = Rng::new(5150);
+        src.resample(&mut rng_a);
+        dst.resample(&mut rng_b);
+        for (a, b) in src.slots.iter().zip(&dst.slots) {
+            for (x, y) in a.v.iter().zip(b.v.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "post-restore V diverged");
+            }
+        }
     }
 
     #[test]

@@ -263,6 +263,30 @@ impl GradEstimator {
         self.head.as_ref().expect("engine has no head channel").z_arc()
     }
 
+    /// Apply a rank-controller shrink to subspace slot `i`: re-layout
+    /// the slot's (B, V, Adam, frame, staging pads) through
+    /// [`SubspaceSet::shrink_slot_rank`], then re-size this engine's own
+    /// per-slot LR scratch (Z, g, B_prev — present for the LowRankLr
+    /// shape, empty otherwise) to the new m·r footprint, releasing the
+    /// tail capacity so the shrink shows up in measured memory.
+    pub fn shrink_slot_rank(&mut self, i: usize, new_r: usize) -> Result<()> {
+        let sub = self.subspace.as_mut().context("engine has no subspace to shrink")?;
+        sub.shrink_slot_rank(i, new_r)?;
+        let len = sub.slots[i].m * sub.slots[i].r;
+        if let Some(z) = self.z.get_mut(i) {
+            let z = Arc::make_mut(z);
+            z.clear();
+            z.resize(len, 0.0);
+            z.shrink_to_fit();
+        }
+        for buf in [self.g.get_mut(i), self.b_prev.get_mut(i)].into_iter().flatten() {
+            buf.clear();
+            buf.resize(len, 0.0);
+            buf.shrink_to_fit();
+        }
+        Ok(())
+    }
+
     /// Draw the per-step perturbations in place (LR shapes; a no-op for
     /// the IPA shapes, whose head Z stays zero). Stream order is the
     /// canonical one the pre-engine trainers used: head Z first, then

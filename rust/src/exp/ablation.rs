@@ -6,6 +6,10 @@
 //!   subspace.
 //! * **c (weak-unbiasedness scale)** — Remark 1's bias/variance dial.
 //! * **projector law** — the headline comparison, at matched budget.
+//! * **subspace tracking** — fresh Haar draw every resample vs the
+//!   warm-started tracked refresh (`--track-refresh`): same Theorem-2
+//!   guarantee, cheaper boundary; the cells show the loss is on par
+//!   while the resample cost drops.
 //!
 //! Each cell is a short pretraining run from identical Θ₀/data; the
 //! reported metric is the tail-mean training loss.
@@ -44,6 +48,7 @@ fn one_run(
     sampler: ProjectorKind,
     k: u64,
     c: f64,
+    track_refresh: u64,
     opts: &AblationOptions,
 ) -> Result<(f32, f64)> {
     let cfg = PretrainConfig {
@@ -62,6 +67,8 @@ fn one_run(
         eval_batches: 1,
         threads: 0,
         ckpt: Default::default(),
+        track_refresh,
+        rank_adapt: None,
     };
     let mut t = PretrainTrainer::new(rt, dir, cfg)?;
     let res = t.run()?;
@@ -78,20 +85,20 @@ pub fn run(
     out_csv: &Path,
 ) -> Result<()> {
     let mut f = std::fs::File::create(out_csv)?;
-    writeln!(f, "axis,sampler,k,c,tail_loss,step_s")?;
+    writeln!(f, "axis,sampler,k,c,track,tail_loss,step_s")?;
 
     println!("== ablation: lazy-update interval K (Stiefel, c=1, {} steps) ==", opts.steps);
     for &k in &opts.k_grid {
-        let (loss, step_s) = one_run(rt, artifacts_dir, ProjectorKind::Stiefel, k, 1.0, opts)?;
+        let (loss, step_s) = one_run(rt, artifacts_dir, ProjectorKind::Stiefel, k, 1.0, 0, opts)?;
         println!("  K = {k:<4} tail loss {loss:.4}  step {step_s:.3}s");
-        writeln!(f, "k,stiefel,{k},1.0,{loss},{step_s}")?;
+        writeln!(f, "k,stiefel,{k},1.0,0,{loss},{step_s}")?;
     }
 
     println!("== ablation: weak-unbiasedness scale c (Stiefel, K=25) ==");
     for &c in &opts.c_grid {
-        let (loss, step_s) = one_run(rt, artifacts_dir, ProjectorKind::Stiefel, 25, c, opts)?;
+        let (loss, step_s) = one_run(rt, artifacts_dir, ProjectorKind::Stiefel, 25, c, 0, opts)?;
         println!("  c = {c:<4} tail loss {loss:.4}  step {step_s:.3}s");
-        writeln!(f, "c,stiefel,25,{c},{loss},{step_s}")?;
+        writeln!(f, "c,stiefel,25,{c},0,{loss},{step_s}")?;
     }
 
     println!("== ablation: projector law (K=25, c=1) ==");
@@ -100,9 +107,17 @@ pub fn run(
         ProjectorKind::Coordinate,
         ProjectorKind::Gaussian,
     ] {
-        let (loss, step_s) = one_run(rt, artifacts_dir, kind, 25, 1.0, opts)?;
+        let (loss, step_s) = one_run(rt, artifacts_dir, kind, 25, 1.0, 0, opts)?;
         println!("  {:<10} tail loss {loss:.4}  step {step_s:.3}s", kind.name());
-        writeln!(f, "law,{},25,1.0,{loss},{step_s}", kind.name())?;
+        writeln!(f, "law,{},25,1.0,0,{loss},{step_s}", kind.name())?;
+    }
+
+    println!("== ablation: subspace tracking (Stiefel, K=25, c=1) ==");
+    for track in [0u64, 8] {
+        let (loss, step_s) = one_run(rt, artifacts_dir, ProjectorKind::Stiefel, 25, 1.0, track, opts)?;
+        let label = if track == 0 { "fresh".to_string() } else { format!("tracked/{track}") };
+        println!("  {label:<10} tail loss {loss:.4}  step {step_s:.3}s");
+        writeln!(f, "track,stiefel,25,1.0,{track},{loss},{step_s}")?;
     }
 
     println!("  wrote {}", out_csv.display());

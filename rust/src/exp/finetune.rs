@@ -77,6 +77,7 @@ pub fn run(
                 eval_examples: 256,
                 threads: 0,
                 ckpt: Default::default(),
+                track_refresh: 0,
             };
             let mut trainer = FinetuneTrainer::new(rt, artifacts_dir, cfg)?;
             let res = trainer.run()?;
@@ -148,6 +149,7 @@ pub fn run_curves(
                 eval_examples: 128,
                 threads: 0,
                 ckpt: Default::default(),
+                track_refresh: 0,
             };
             let mut trainer = FinetuneTrainer::new(rt, artifacts_dir, cfg)?;
             let res = trainer.run()?;

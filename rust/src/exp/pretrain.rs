@@ -84,6 +84,10 @@ pub fn run(
             eval_batches: 2,
             threads: 0,
             ckpt: Default::default(),
+            // paper-figure fidelity: every resample is a fresh draw,
+            // ranks stay fixed at the manifest values
+            track_refresh: 0,
+            rank_adapt: None,
         };
         let mut trainer = PretrainTrainer::new(rt, artifacts_dir, cfg)?;
         let res = trainer.run()?;

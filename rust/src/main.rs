@@ -9,10 +9,14 @@
 //! lowrank-sge exp all       [--quick]
 //! lowrank-sge pretrain      --scale s [--sampler stiefel] [--steps N] [--workers W]
 //!                           [--threads T] [--save-every N] [--ckpt-dir D]
-//!                           [--keep-last K] [--resume [latest|<step>]] …
+//!                           [--keep-last K] [--resume [latest|<step>]]
+//!                           [--track-refresh T] [--rank-adapt]
+//!                           [--rank-min R] [--rank-window W] [--rank-decay D]
+//!                           [--rank-factor F] …
 //! lowrank-sge finetune      --task sst2 --method stiefel-lowrank-lr [--steps N]
 //!                           [--threads T] [--save-every N] [--ckpt-dir D]
-//!                           [--keep-last K] [--resume [latest|<step>]] …
+//!                           [--keep-last K] [--resume [latest|<step>]]
+//!                           [--track-refresh T] …
 //! lowrank-sge launch        --nproc N [--transport unix|tcp] [--rdzv-dir D]
 //!                           [--comm-timeout-ms T] [--algo ring|tree|auto]
 //!                           [--comm-dtype f32|bf16]
@@ -72,6 +76,24 @@
 //! implements the same fixed-lane accumulation order (see
 //! [`lowrank_sge::kernel::simd`]).
 //!
+//! Subspace tracking + rank adaptation: `--track-refresh T` (config
+//! keys `pretrain.track_refresh` / `finetune.track_refresh`)
+//! warm-starts the Stiefel resample — the previous frame gets a rank-1
+//! tilt + Cholesky-QR refresh instead of a fresh n×r Gaussian QR, with
+//! a full Haar redraw every T-th resample; `--track-refresh 0` disables
+//! tracking (the paper-exact schedule; finetune's default). The
+//! Theorem-2 condition VᵀV = (cn/r)·I holds exactly either way, and
+//! both paths keep the bitwise thread-count/world-size invariance.
+//! `pretrain --rank-adapt` turns on the online per-layer rank
+//! controller: at each lazy-update boundary the all-reduced lift
+//! residuals feed a trend test (`--rank-window`, `--rank-decay`), and a
+//! decaying slot shrinks to ⌊r·`--rank-factor`⌋ (floored at
+//! `--rank-min`) — B, V, Adam moments, engine scratch, and the
+//! all-reduce wire all drop to the new footprint in place. Every rank
+//! takes the identical decision and logs a `[rank-adapt rN]` line; the
+//! decision windows are checkpointed, so resumes replay the same rank
+//! schedule.
+//!
 //! Checkpointing: `--save-every N --ckpt-dir D` commits the full
 //! training state (Θ, subspace B/V, Adam moments, RNG stream) every N
 //! steps as CRC-verified shards under `D/step-*/`, keeps the newest
@@ -95,6 +117,7 @@ use lowrank_sge::coordinator::{
 };
 use lowrank_sge::estimator::Family;
 use lowrank_sge::exp;
+use lowrank_sge::optim::RankAdaptConfig;
 use lowrank_sge::projection::ProjectorKind;
 use lowrank_sge::runtime::Runtime;
 
@@ -590,17 +613,34 @@ fn cmd_pretrain(args: &ArgMap) -> Result<()> {
         eval_batches: args.usize_or("eval-batches", 2),
         threads: args.threads_or(file.usize_or("pretrain.threads", 0)),
         ckpt: ckpt_options(args, &file, "pretrain")?,
+        track_refresh: args
+            .u64_or("track-refresh", file.i64_or("pretrain.track_refresh", 8).max(0) as u64),
+        rank_adapt: if args.has_flag("rank-adapt") || file.bool_or("pretrain.rank_adapt", false) {
+            let d = RankAdaptConfig::default();
+            Some(RankAdaptConfig {
+                min_rank: args
+                    .usize_or("rank-min", file.i64_or("pretrain.rank_min", d.min_rank as i64) as usize),
+                window: args
+                    .usize_or("rank-window", file.i64_or("pretrain.rank_window", d.window as i64) as usize),
+                decay: args.f64_or("rank-decay", file.f64_or("pretrain.rank_decay", d.decay)),
+                factor: args.f64_or("rank-factor", file.f64_or("pretrain.rank_factor", d.factor)),
+            })
+        } else {
+            None
+        },
     };
     if leader {
         println!(
-            "pretrain scale={} sampler={} steps={} K={} workers={} threads={} world={}",
+            "pretrain scale={} sampler={} steps={} K={} workers={} threads={} world={} track={} rank-adapt={}",
             cfg.scale,
             sampler.name(),
             cfg.steps,
             cfg.k_interval,
             cfg.workers,
             if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
-            world
+            world,
+            if cfg.track_refresh == 0 { "off".to_string() } else { cfg.track_refresh.to_string() },
+            if cfg.rank_adapt.is_some() { "on" } else { "off" },
         );
         if let Some(resume) = cfg.ckpt.resume {
             println!("resuming from {resume} in {:?}", cfg.ckpt.dir.as_ref().unwrap());
@@ -674,6 +714,8 @@ fn cmd_finetune(args: &ArgMap) -> Result<()> {
         eval_examples: args.usize_or("eval-examples", 256),
         threads: args.threads_or(file.usize_or("finetune.threads", 0)),
         ckpt: ckpt_options(args, &file, "finetune")?,
+        track_refresh: args
+            .u64_or("track-refresh", file.i64_or("finetune.track_refresh", 0).max(0) as u64),
     };
     println!("finetune task={} method={} steps={}", cfg.task, method.name(), cfg.steps);
     if let Some(resume) = cfg.ckpt.resume {

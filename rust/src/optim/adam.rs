@@ -75,6 +75,36 @@ impl Adam {
     pub fn steps_taken(&self) -> u64 {
         self.t
     }
+
+    /// Re-layout for a rank shrink of a row-major `[rows, old_cols]`
+    /// tensor: keep the leading `new_cols` moment columns of each row,
+    /// drop the rest, and release the tail capacity so the shrink shows
+    /// up in measured memory, not just [`Self::state_bytes`]. `t` is
+    /// kept — callers shrinking at a lazy-update boundary reset moments
+    /// right after anyway, but mid-window shrinks stay well-defined.
+    pub fn shrink_cols(&mut self, rows: usize, old_cols: usize, new_cols: usize) {
+        assert_eq!(self.m.len(), rows * old_cols, "moment layout mismatch");
+        assert!(new_cols <= old_cols, "shrink_cols cannot grow");
+        for buf in [&mut self.m, &mut self.v] {
+            for row in 1..rows {
+                buf.copy_within(row * old_cols..row * old_cols + new_cols, row * new_cols);
+            }
+            buf.truncate(rows * new_cols);
+            buf.shrink_to_fit();
+        }
+    }
+
+    /// Resize the moment buffers to `len` elements (zero-filled),
+    /// keeping the hyperparameters. Used when a checkpoint restores a
+    /// slot at a different (shrunk) rank than the freshly-constructed
+    /// optimizer — the restored moments overwrite the zeros right after.
+    pub fn resize(&mut self, len: usize) {
+        for buf in [&mut self.m, &mut self.v] {
+            buf.clear();
+            buf.resize(len, 0.0);
+            buf.shrink_to_fit();
+        }
+    }
 }
 
 /// Checkpointing: both moment buffers plus the bias-correction step

@@ -1,8 +1,25 @@
-//! The lazy-update state machine (paper §4.2, Algorithm 1).
+//! The lazy-update state machine (paper §4.2, Algorithm 1) and the
+//! online per-layer rank controller.
 //!
 //! One outer iteration = sample V, run K inner steps on B in span(V),
-//! then lift Θ ← Θ + B_K·Vᵀ and reset. The controller tells the trainer
-//! what to do at each global step; the trainer stays a flat loop.
+//! then lift Θ ← Θ + B_K·Vᵀ and reset. [`LazyUpdateController`] tells
+//! the trainer what to do at each global step; the trainer stays a
+//! flat loop.
+//!
+//! [`RankController`] rides the same boundaries: AdaRankGrad (see
+//! PAPERS.md) shows the gradients' effective rank shrinks
+//! monotonically during training, so a slot's provisioned rank r_i is
+//! increasingly over-sized. At every lift the trainer feeds the
+//! controller the measured per-slot RMS lift residuals
+//! ([`crate::coordinator::SubspaceSet::lift_residuals`], all-reduced
+//! across ranks first so every rank sees identical inputs); once a
+//! slot has a full observation window, a decaying residual trend
+//! triggers a shrink to ⌊r·factor⌋ (floored at `min_rank`), which the
+//! trainer applies as an in-place re-layout of B, V, the Adam moments,
+//! and the engine scratch. Decisions are a pure function of (config,
+//! observation sequence), so identical inputs ⇒ identical rank
+//! schedules on every rank and across resumes — the controller
+//! checkpoints its observation history for exactly that reason.
 
 /// What the trainer must do *before* the gradient step at a given
 /// global step.
@@ -60,6 +77,133 @@ impl LazyUpdateController {
     }
 }
 
+/// Rank-adaptation hyperparameters (CLI: `--rank-adapt` + friends).
+#[derive(Clone, Copy, Debug)]
+pub struct RankAdaptConfig {
+    /// Never shrink below this rank.
+    pub min_rank: usize,
+    /// Lift observations per decision (≥ 2: the trend compares the
+    /// window's first half against its second half).
+    pub window: usize,
+    /// Shrink when mean(recent half) < decay · mean(first half). The
+    /// default 0.7 asks for a clear downward trend; tests force
+    /// always-shrink with large values.
+    pub decay: f64,
+    /// New rank = max(min_rank, ⌊r · factor⌋) (at least one column off).
+    pub factor: f64,
+}
+
+impl Default for RankAdaptConfig {
+    fn default() -> Self {
+        RankAdaptConfig { min_rank: 2, window: 4, decay: 0.7, factor: 0.75 }
+    }
+}
+
+/// Outcome of one controller evaluation for one slot.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RankDecision {
+    /// Not enough observations in the window yet.
+    Pending,
+    /// Window full, trend not decayed (or already at `min_rank`):
+    /// `ratio` = mean(recent)/mean(first) for the log line.
+    Keep { ratio: f64 },
+    /// Shrink this slot to `to`.
+    Shrink { to: usize, ratio: f64 },
+}
+
+/// Online per-layer rank controller (module docs). Deterministic:
+/// decisions depend only on the config and the observed residual
+/// sequence, never on wall clock, thread count, or rank.
+#[derive(Clone, Debug)]
+pub struct RankController {
+    cfg: RankAdaptConfig,
+    /// Residuals observed since each slot's last decision.
+    hist: Vec<Vec<f64>>,
+}
+
+impl RankController {
+    pub fn new(cfg: RankAdaptConfig, n_slots: usize) -> Self {
+        assert!(cfg.window >= 2, "rank-adapt window must be ≥ 2");
+        assert!(cfg.min_rank >= 1, "min_rank must be ≥ 1");
+        assert!(cfg.factor > 0.0 && cfg.factor < 1.0, "factor must be in (0, 1)");
+        RankController { cfg, hist: vec![Vec::new(); n_slots] }
+    }
+
+    pub fn cfg(&self) -> RankAdaptConfig {
+        self.cfg
+    }
+
+    /// Feed one lift's residuals (slot order, already identical on
+    /// every rank) and the current active ranks; returns one decision
+    /// per slot. A slot that decides (Keep or Shrink) starts a fresh
+    /// window.
+    pub fn observe(&mut self, residuals: &[f64], ranks: &[usize]) -> Vec<RankDecision> {
+        assert_eq!(residuals.len(), self.hist.len(), "one residual per slot");
+        assert_eq!(ranks.len(), self.hist.len(), "one rank per slot");
+        let w = self.cfg.window;
+        residuals
+            .iter()
+            .zip(ranks)
+            .zip(self.hist.iter_mut())
+            .map(|((&res, &r), hist)| {
+                hist.push(res);
+                if hist.len() < w {
+                    return RankDecision::Pending;
+                }
+                let half = w / 2;
+                let first: f64 = hist[..half].iter().sum::<f64>() / half as f64;
+                let recent: f64 =
+                    hist[w - half..].iter().sum::<f64>() / half as f64;
+                hist.clear();
+                let ratio = if first > 0.0 { recent / first } else { 1.0 };
+                let target = ((r as f64 * self.cfg.factor).floor() as usize)
+                    .min(r.saturating_sub(1))
+                    .max(self.cfg.min_rank);
+                if recent < self.cfg.decay * first && target < r {
+                    RankDecision::Shrink { to: target, ratio }
+                } else {
+                    RankDecision::Keep { ratio }
+                }
+            })
+            .collect()
+    }
+}
+
+/// Checkpointing: the per-slot observation windows. Without them a
+/// resumed run would restart its windows mid-flight and could take a
+/// different rank schedule than the uninterrupted run — breaking the
+/// bitwise resume contract.
+impl crate::ckpt::Checkpointable for RankController {
+    fn state_dict(&self) -> crate::ckpt::StateDict {
+        let mut sd = crate::ckpt::StateDict::new();
+        sd.put_u64s("slots", &[self.hist.len() as u64]);
+        for (i, h) in self.hist.iter().enumerate() {
+            sd.put_f64_bits(format!("hist[{i}]"), h);
+        }
+        sd
+    }
+
+    fn load_state(&mut self, sd: &crate::ckpt::StateDict) -> anyhow::Result<()> {
+        let want = 1 + self.hist.len();
+        if sd.len() != want {
+            anyhow::bail!("rank controller checkpoint has {} tensors, expected {want}", sd.len());
+        }
+        let slots = sd.u64("slots")? as usize;
+        if slots != self.hist.len() {
+            anyhow::bail!(
+                "rank controller checkpoint has {slots} slots, controller has {}",
+                self.hist.len()
+            );
+        }
+        let mut staged = Vec::with_capacity(slots);
+        for i in 0..slots {
+            staged.push(sd.f64_bits(&format!("hist[{i}]"))?);
+        }
+        self.hist = staged;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +243,66 @@ mod tests {
         let c = LazyUpdateController::new(50);
         let lifts = (0..500).filter(|&s| c.lifts_after(s)).count();
         assert_eq!(lifts, 10);
+    }
+
+    #[test]
+    fn controller_shrinks_on_a_decaying_trend_only() {
+        let cfg = RankAdaptConfig { min_rank: 2, window: 4, decay: 0.7, factor: 0.75 };
+        let mut ctl = RankController::new(cfg, 2);
+        // slot 0 decays hard, slot 1 is flat
+        let seq = [(1.0, 1.0), (1.0, 1.0), (0.1, 1.0), (0.1, 1.0)];
+        let mut last = Vec::new();
+        for (a, b) in seq {
+            last = ctl.observe(&[a, b], &[8, 8]);
+        }
+        assert_eq!(last[0], RankDecision::Shrink { to: 6, ratio: 0.1 });
+        assert!(matches!(last[1], RankDecision::Keep { .. }));
+        // windows restart after a decision
+        assert_eq!(ctl.observe(&[0.0, 0.0], &[6, 8]), vec![
+            RankDecision::Pending,
+            RankDecision::Pending
+        ]);
+    }
+
+    #[test]
+    fn controller_respects_the_min_rank_floor() {
+        let cfg = RankAdaptConfig { min_rank: 3, window: 2, decay: 10.0, factor: 0.5 };
+        let mut ctl = RankController::new(cfg, 1);
+        // decay = 10 forces "shrink if possible" every window
+        ctl.observe(&[1.0], &[8]);
+        assert_eq!(ctl.observe(&[1.0], &[8]), vec![RankDecision::Shrink { to: 4, ratio: 1.0 }]);
+        ctl.observe(&[1.0], &[4]);
+        assert_eq!(ctl.observe(&[1.0], &[4]), vec![RankDecision::Shrink { to: 3, ratio: 1.0 }]);
+        // at the floor: target == r → Keep, never Shrink-to-same
+        ctl.observe(&[1.0], &[3]);
+        assert!(matches!(ctl.observe(&[1.0], &[3])[0], RankDecision::Keep { .. }));
+    }
+
+    #[test]
+    fn controller_checkpoint_resumes_the_same_decision_sequence() {
+        use crate::ckpt::Checkpointable;
+        let cfg = RankAdaptConfig { min_rank: 2, window: 4, decay: 0.8, factor: 0.75 };
+        let residuals: Vec<[f64; 2]> =
+            (0..12).map(|k| [1.0 / (k + 1) as f64, 0.9 + 0.01 * k as f64]).collect();
+        let ranks = [8usize, 8];
+
+        // uninterrupted reference
+        let mut full = RankController::new(cfg, 2);
+        let want: Vec<_> = residuals.iter().map(|r| full.observe(r, &ranks)).collect();
+
+        // interrupt mid-window (step 6 is not a multiple of window)
+        let mut first = RankController::new(cfg, 2);
+        for r in &residuals[..6] {
+            first.observe(r, &ranks);
+        }
+        let sd = first.state_dict();
+        let mut resumed = RankController::new(cfg, 2);
+        resumed.load_state(&sd).unwrap();
+        let got: Vec<_> = residuals[6..].iter().map(|r| resumed.observe(r, &ranks)).collect();
+        assert_eq!(got, want[6..].to_vec());
+
+        // wrong slot count is rejected
+        let mut other = RankController::new(cfg, 3);
+        assert!(other.load_state(&sd).is_err());
     }
 }

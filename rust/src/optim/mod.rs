@@ -11,7 +11,10 @@
 //!   warmup 1000, cycle 100k; scaled down in the proxy configs).
 //! * [`clip`] — global-norm gradient clipping at 1.0 (paper §6.2.2).
 //! * [`lazy`] — the outer/inner lazy-update state machine: reuse one
-//!   sampled subspace V for K inner steps, then lift and resample.
+//!   sampled subspace V for K inner steps, then lift and resample. Also
+//!   home of the online per-layer [`RankController`], which watches the
+//!   measured lift residuals and shrinks a slot's rank when the trend
+//!   decays — B, V, Adam moments, and engine scratch re-layout in place.
 
 mod adam;
 mod clip;
@@ -21,6 +24,6 @@ mod sgd;
 
 pub use adam::{Adam, AdamConfig};
 pub use clip::{clip_global_norm, global_norm};
-pub use lazy::{LazyAction, LazyUpdateController};
+pub use lazy::{LazyAction, LazyUpdateController, RankAdaptConfig, RankController, RankDecision};
 pub use schedule::{CosineSchedule, LrSchedule};
 pub use sgd::Sgd;

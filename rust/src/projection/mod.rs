@@ -15,16 +15,23 @@
 //! Multi-matrix draws go through [`sample_batch`], which forks one child
 //! RNG stream per request and fans the draws out across the
 //! [`crate::kernel`] pool — bitwise-deterministic in the thread count.
+//! The [`tracking`] module amortizes the Stiefel resample: it keeps the
+//! previous frame and applies a rank-1 tilt + Cholesky-QR refresh
+//! (same VᵀV = (cn/r)·I guarantee, no fresh n×r Gaussian QR), falling
+//! back to a full Haar draw on a fixed schedule; [`track_batch`] is its
+//! `sample_batch`-shaped, equally thread-count-invariant entry point.
 
 mod gaussian;
 mod stiefel;
 mod coordinate;
 mod dependent;
+pub mod tracking;
 
 pub use coordinate::CoordinateSampler;
 pub use dependent::DependentSampler;
 pub use gaussian::GaussianSampler;
 pub use stiefel::StiefelSampler;
+pub use tracking::{fresh_frame, track_batch, tracked_update};
 
 use crate::linalg::{matmul_nt, Mat};
 use crate::rng::Rng;

@@ -1,0 +1,339 @@
+//! Warm-started subspace tracking + adaptive per-layer rank:
+//! integration pins for the amortized lazy-update boundary.
+//!
+//! * Every tracked refresh must preserve the Theorem-2 frame property
+//!   (QᵀQ = I at f64, VᵀV = (c·n/r)·I at f32).
+//! * The tracked trajectory is thread-count invariant (one forked child
+//!   stream per slot, pool size is timing only) — CI drives this test
+//!   binary across `LOWRANK_TRACK_REFRESH` ∈ {0, 4} ×
+//!   `LOWRANK_THREADS` ∈ {1, 4}.
+//! * `--track-refresh 1` degenerates to the classic fresh-draw
+//!   trajectory bit for bit.
+//! * (artifact-gated) With tracking *and* a shrink-happy rank
+//!   controller on, train(2k) ≡ train(k) → save → resume → train(k)
+//!   bitwise, at 1 and 4 threads.
+//! * (artifact-gated) A 2-rank `launch pretrain --rank-adapt` world
+//!   takes identical per-slot rank decisions on every rank.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use lowrank_sge::bench_util::engine_fixture;
+use lowrank_sge::ckpt::{CkptOptions, ResumeSpec};
+use lowrank_sge::coordinator::{PretrainConfig, PretrainTrainer, SubspaceSet};
+use lowrank_sge::optim::RankAdaptConfig;
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::rng::Rng;
+use lowrank_sge::runtime::Runtime;
+
+const BIN: &str = env!("CARGO_BIN_EXE_lowrank-sge");
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("INDEX.txt").exists()
+}
+
+/// Tests that resize the global kernel pool (directly or through
+/// `cfg.threads`) serialize here so they cannot race each other's
+/// resize/restore cycle — results are pool-size invariant either way,
+/// this only keeps the restore bookkeeping sane.
+fn pool_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The CI matrix knob: tracked-refresh period for the trajectory tests
+/// (0 = fresh draw every resample, the untracked baseline leg).
+fn track_refresh_env() -> u64 {
+    std::env::var("LOWRANK_TRACK_REFRESH")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+}
+
+const DIMS: [(usize, usize, usize); 3] = [(48, 40, 6), (40, 40, 4), (64, 24, 5)];
+
+fn tracked_set(refresh: u64) -> (lowrank_sge::model::ParamStore, SubspaceSet) {
+    let (store, slots) = engine_fixture(&DIMS, 16);
+    let mut set = SubspaceSet::from_slots(slots, ProjectorKind::Stiefel, 1.0);
+    set.set_tracking(refresh);
+    (store, set)
+}
+
+#[test]
+fn tracked_updates_preserve_the_stiefel_frame_gram() {
+    let (_store, mut set) = tracked_set(4);
+    let mut rng = Rng::new(314);
+    for resample in 0..6 {
+        set.resample(&mut rng);
+        for slot in &set.slots {
+            let (n, r) = (slot.n, slot.r);
+            // f64 frame: QᵀQ = I to 1e-6 after every tracked update
+            let q = &slot.frame.as_ref().expect("tracking stores a frame").data;
+            assert_eq!(q.len(), n * r);
+            for i in 0..r {
+                for j in 0..r {
+                    let dot: f64 = (0..n).map(|k| q[k * r + i] * q[k * r + j]).sum();
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (dot - want).abs() <= 1e-6,
+                        "resample {resample} slot {}: QᵀQ[{i},{j}] = {dot}",
+                        slot.name
+                    );
+                }
+            }
+            // f32 V = √(c·n/r)·Q: VᵀV = (c·n/r)·I up to the f32 cast
+            let scale = n as f64 / r as f64;
+            for i in 0..r {
+                let dot: f64 =
+                    (0..n).map(|k| slot.v[k * r + i] as f64 * slot.v[k * r + i] as f64).sum();
+                assert!(
+                    (dot / scale - 1.0).abs() <= 1e-4,
+                    "resample {resample} slot {}: VᵀV[{i},{i}]/α² = {}",
+                    slot.name,
+                    dot / scale
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn track_refresh_one_matches_fresh_draws_bitwise() {
+    // T = 1 means every resample is a full redraw through the tracked
+    // path — it must reproduce the classic sampler's bits exactly
+    let (_sa, mut fresh) = tracked_set(0);
+    let (_sb, mut tracked) = tracked_set(1);
+    let mut rng_a = Rng::new(99);
+    let mut rng_b = Rng::new(99);
+    for round in 0..3 {
+        fresh.resample(&mut rng_a);
+        tracked.resample(&mut rng_b);
+        for (a, b) in fresh.slots.iter().zip(&tracked.slots) {
+            for (x, y) in a.v.iter().zip(b.v.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "round {round} slot {} diverged", a.name);
+            }
+        }
+    }
+}
+
+/// Drive resample → per-slot Adam steps → lift (with a mid-run shrink)
+/// at a given pool size; return every live bit the trajectory owns.
+fn run_tracked_trajectory(threads: usize, refresh: u64) -> Vec<u32> {
+    lowrank_sge::kernel::set_global_threads(threads);
+    let (mut store, mut set) = tracked_set(refresh);
+    let mut rng = Rng::new(2718);
+    for outer in 0..4u64 {
+        set.resample(&mut rng);
+        for step in 0..2u64 {
+            let grads: Vec<Vec<f32>> = set
+                .slots
+                .iter()
+                .enumerate()
+                .map(|(si, s)| {
+                    (0..s.m * s.r)
+                        .map(|i| {
+                            (((outer * 100 + step * 17 + si as u64 * 5 + i as u64) as f32) * 0.01)
+                                .sin()
+                        })
+                        .collect()
+                })
+                .collect();
+            set.adam_step_all(&grads, 1e-2);
+        }
+        set.lift(&mut store).unwrap();
+        if outer == 1 {
+            // exercise the shrink re-layout inside the tracked schedule
+            set.shrink_slot_rank(0, 3).unwrap();
+        }
+    }
+    let mut bits = Vec::new();
+    for i in 0..store.len() {
+        bits.extend(store.f32(i).unwrap().iter().map(|v| v.to_bits()));
+    }
+    for slot in &set.slots {
+        bits.extend(slot.v.iter().map(|v| v.to_bits()));
+        if let Some(f) = &slot.frame {
+            bits.extend(f.data.iter().flat_map(|v| {
+                let b = v.to_bits();
+                [(b >> 32) as u32, b as u32]
+            }));
+        }
+    }
+    bits
+}
+
+#[test]
+fn tracked_trajectory_is_thread_count_invariant() {
+    let _lock = pool_lock();
+    let prev = lowrank_sge::kernel::global_threads();
+    let refresh = track_refresh_env();
+    let serial = run_tracked_trajectory(1, refresh);
+    let parallel = run_tracked_trajectory(4, refresh);
+    lowrank_sge::kernel::set_global_threads(prev);
+    assert!(!serial.is_empty());
+    assert_eq!(serial, parallel, "tracked trajectory diverged across thread counts");
+}
+
+fn forced_adapt() -> RankAdaptConfig {
+    // window 2 + decay 10 make every completed window shrink (while
+    // target < r), so the resume crosses real rank re-layouts
+    RankAdaptConfig { min_rank: 2, window: 2, decay: 10.0, factor: 0.75 }
+}
+
+#[test]
+fn tracked_rank_adapt_resume_reproduces_uninterrupted_run() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let _lock = pool_lock();
+    let prev = lowrank_sge::kernel::global_threads();
+    let dir = artifacts_dir();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut per_thread_bits: Vec<Vec<u32>> = Vec::new();
+
+    for threads in [1usize, 4] {
+        let base = {
+            let mut cfg = PretrainConfig::quick("s", ProjectorKind::Stiefel);
+            cfg.steps = 10;
+            cfg.k_interval = 3; // boundaries at 3, 6, 9; save at 5 is mid-window
+            cfg.eval_every = 0;
+            cfg.workers = 1;
+            cfg.threads = threads;
+            cfg.track_refresh = 2;
+            cfg.rank_adapt = Some(forced_adapt());
+            cfg
+        };
+        let ckpt_dir = std::env::temp_dir().join(format!(
+            "lowrank_sge_tracking_resume_p{}_t{threads}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+        // uninterrupted reference
+        let mut reference = PretrainTrainer::new(&mut rt, &dir, base.clone()).unwrap();
+        let ref_res = reference.run().unwrap();
+
+        // interrupted at step 5 (mid-outer, mid-controller-window) …
+        let mut cfg_a = base.clone();
+        cfg_a.steps = 5;
+        cfg_a.ckpt =
+            CkptOptions { save_every: 5, dir: Some(ckpt_dir.clone()), resume: None, keep_last: 0 };
+        let res1 = PretrainTrainer::new(&mut rt, &dir, cfg_a).unwrap().run().unwrap();
+
+        // … resumed from LATEST: tracked frames, ranks, controller
+        // history, and Adam moments all come back from the checkpoint
+        let mut cfg_b = base.clone();
+        cfg_b.ckpt = CkptOptions {
+            save_every: 0,
+            dir: Some(ckpt_dir.clone()),
+            resume: Some(ResumeSpec::Latest),
+            keep_last: 0,
+        };
+        let mut resumed = PretrainTrainer::new(&mut rt, &dir, cfg_b).unwrap();
+        let res2 = resumed.run().unwrap();
+        let _ = std::fs::remove_dir_all(&ckpt_dir);
+
+        assert_eq!(res1.log.records.len(), 5);
+        assert_eq!(res2.log.records.len(), 5);
+        for (r, s) in ref_res.log.records[..5].iter().zip(&res1.log.records) {
+            assert_eq!(r.loss.to_bits(), s.loss.to_bits(), "t{threads} pre-save step {}", r.step);
+        }
+        for (r, s) in ref_res.log.records[5..].iter().zip(&res2.log.records) {
+            assert_eq!(r.loss.to_bits(), s.loss.to_bits(), "t{threads} resumed step {}", r.step);
+        }
+        let mut bits = Vec::new();
+        for i in 0..reference.store().len() {
+            let a = reference.store().f32(i).unwrap();
+            let b = resumed.store().f32(i).unwrap();
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "t{threads} param {i} diverged on resume");
+            }
+            bits.extend(a.iter().map(|v| v.to_bits()));
+        }
+        per_thread_bits.push(bits);
+        // the forced controller must actually have shrunk ranks: the
+        // final subspace footprint sits below the manifest footprint
+        // the same run reports without adaptation
+        if threads == 1 {
+            let mut cfg_fixed = base.clone();
+            cfg_fixed.rank_adapt = None;
+            let fixed = PretrainTrainer::new(&mut rt, &dir, cfg_fixed).unwrap().run().unwrap();
+            assert!(
+                ref_res.b_elements < fixed.b_elements,
+                "rank controller never shrank: {} vs {}",
+                ref_res.b_elements,
+                fixed.b_elements
+            );
+        }
+    }
+    lowrank_sge::kernel::set_global_threads(prev);
+    // … and the whole trained trajectory is thread-count invariant
+    assert_eq!(per_thread_bits[0], per_thread_bits[1], "trained bytes diverged across threads");
+}
+
+#[test]
+fn launch_two_ranks_take_identical_rank_decisions() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let out = Command::new(BIN)
+        .args([
+            "launch",
+            "--nproc",
+            "2",
+            "pretrain",
+            "--scale",
+            "s",
+            "--steps",
+            "6",
+            "--k",
+            "2",
+            "--workers",
+            "2",
+            "--seed",
+            "33",
+            "--eval-every",
+            "0",
+            "--track-refresh",
+            "2",
+            "--rank-adapt",
+            "--rank-window",
+            "2",
+            "--rank-decay",
+            "10",
+        ])
+        .env("LOWRANK_SGE_ARTIFACTS", artifacts_dir())
+        // decision identity is asserted on the f32 lane, like the
+        // checkpoint-bitwise launch contract
+        .env("LOWRANK_COMM_DTYPE", "f32")
+        .output()
+        .expect("running the launch binary");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "launch failed\nstdout:\n{stdout}\nstderr:\n{stderr}");
+    // every rank prints its own decision lines; the multisets (here:
+    // sorted lists) must agree exactly, slot for slot
+    let decisions = |rank: usize| -> Vec<String> {
+        let tag = format!("[rank-adapt r{rank}] ");
+        let mut v: Vec<String> = stdout
+            .lines()
+            .filter_map(|l| l.find(&tag).map(|p| l[p + tag.len()..].to_string()))
+            .collect();
+        v.sort();
+        v
+    };
+    let (d0, d1) = (decisions(0), decisions(1));
+    assert!(!d0.is_empty(), "rank 0 took no rank decisions\nstdout:\n{stdout}");
+    assert_eq!(d0, d1, "ranks took different rank decisions\nstdout:\n{stdout}");
+    assert!(
+        d0.iter().any(|l| l.contains("shrink")),
+        "forced controller never shrank\nstdout:\n{stdout}"
+    );
+}
