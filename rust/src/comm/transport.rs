@@ -194,9 +194,12 @@ impl Conn {
 }
 
 /// Normalize the two timeout flavors the OS reports into one message
-/// the fault tests (and operators) can recognize.
+/// the fault tests (and operators) can recognize. Peer-flavored
+/// failures also notify the run-health monitor so a configured
+/// blackbox can capture the flight recorder before the error
+/// propagates up and aborts the rank.
 fn map_io_err(e: std::io::Error) -> anyhow::Error {
-    match e.kind() {
+    let err = match e.kind() {
         std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
             anyhow::anyhow!("timed out waiting for comm peer (peer dead or stalled?): {e}")
         }
@@ -204,7 +207,9 @@ fn map_io_err(e: std::io::Error) -> anyhow::Error {
             anyhow::anyhow!("comm peer closed the connection mid-message (truncated frame): {e}")
         }
         _ => anyhow::anyhow!(e),
-    }
+    };
+    crate::obs::monitor::note_comm_error(&err.to_string());
+    err
 }
 
 /// A bound, not-yet-connected local endpoint.

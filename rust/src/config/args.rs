@@ -126,6 +126,32 @@ impl ArgMap {
     pub fn metrics_out(&self) -> Option<&str> {
         self.get("metrics-out")
     }
+
+    /// `--monitor-addr <host:port>` — read-only TCP status endpoint
+    /// serving newline-delimited JSON snapshots of the metrics registry
+    /// ([`crate::obs::monitor::serve_status`]); `None` (no endpoint)
+    /// when absent. In a launch world every rank shares argv, so only
+    /// the leader binds (avoiding a port collision).
+    pub fn monitor_addr(&self) -> Option<&str> {
+        self.get("monitor-addr")
+    }
+
+    /// `--stall-timeout <ms>` — watchdog threshold: flag this rank as
+    /// stalled when no heartbeat watermark advances for this many
+    /// milliseconds ([`crate::obs::monitor::start_watchdog`]). 0 (the
+    /// default) leaves the watchdog off.
+    pub fn stall_timeout_ms(&self) -> u64 {
+        self.u64_or("stall-timeout", 0)
+    }
+
+    /// `--probe-every <K>` — estimator-quality probe cadence: every K
+    /// steps one rotating subspace slot gets a paired probe
+    /// ([`crate::obs::quality`]). 0 (the default) disables the rotating
+    /// probes; the lazy-update-boundary gauges still run whenever
+    /// metrics are enabled.
+    pub fn probe_every(&self) -> u64 {
+        self.u64_or("probe-every", 0)
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +215,21 @@ mod tests {
         let b = ArgMap::parse(&toks("--steps 5")).unwrap();
         assert_eq!(b.trace_out(), None);
         assert_eq!(b.metrics_out(), None);
+    }
+
+    #[test]
+    fn monitor_flags_parse() {
+        let a = ArgMap::parse(&toks(
+            "--monitor-addr 127.0.0.1:7777 --stall-timeout 2000 --probe-every 4",
+        ))
+        .unwrap();
+        assert_eq!(a.monitor_addr(), Some("127.0.0.1:7777"));
+        assert_eq!(a.stall_timeout_ms(), 2000);
+        assert_eq!(a.probe_every(), 4);
+        let b = ArgMap::parse(&toks("--steps 5")).unwrap();
+        assert_eq!(b.monitor_addr(), None);
+        assert_eq!(b.stall_timeout_ms(), 0);
+        assert_eq!(b.probe_every(), 0);
     }
 
     #[test]

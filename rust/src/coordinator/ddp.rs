@@ -362,7 +362,11 @@ impl Collective {
     }
 
     /// Block until every rank reached this point (no-op in-process).
+    /// Stamps the monitor's Barrier watermark before blocking, so a
+    /// stall watchdog can tell "waiting at a barrier" (watermark fresh,
+    /// phase = barrier) from "wedged mid-step" (no watermark advance).
     pub fn barrier(&mut self) -> Result<()> {
+        crate::obs::monitor::stamp(crate::obs::monitor::Phase::Barrier, 0);
         match self {
             Collective::InProcess => Ok(()),
             Collective::Comm(c) => c.barrier(),

@@ -34,6 +34,7 @@ use crate::ckpt::{
 use crate::data::ClassifyTask;
 use crate::estimator::engine::{GradEstimator, GradSignal, MethodShape, ZoTarget};
 use crate::model::ParamStore;
+use crate::obs::monitor;
 use crate::optim::{Adam, AdamConfig, LazyAction, LazyUpdateController};
 use crate::projection::ProjectorKind;
 use crate::rng::Rng;
@@ -438,6 +439,7 @@ impl FinetuneTrainer {
             // resample does all three; IPA lifts Θ first.
             if controller.action(step) == LazyAction::ResampleSubspace {
                 let _p = crate::obs::phase("trainer", "resample", "step.resample_s");
+                monitor::stamp(monitor::Phase::Resample, step);
                 if let Some(sub) = self.engine.subspace.as_mut() {
                     if step > 0 && matches!(cfg.method, FinetuneMethod::LowRankIpa(_)) {
                         sub.lift(&mut self.store)?;
@@ -496,6 +498,7 @@ impl FinetuneTrainer {
                 .collect();
 
             let _p_execute = crate::obs::phase("trainer", "execute", "step.execute_s");
+            monitor::stamp(monitor::Phase::Execute, step);
             let out = art.execute(&inputs)?;
             drop(_p_execute);
             // drop the staged clones so the engine's buffers are unique
@@ -504,6 +507,7 @@ impl FinetuneTrainer {
 
             // apply the method's update through the engine
             let _p_update = crate::obs::phase("trainer", "update", "step.update_s");
+            monitor::stamp(monitor::Phase::Update, step);
             let stats = match cfg.method {
                 FinetuneMethod::VanillaIpa => {
                     let slot_grads: Vec<&[f32]> = self
@@ -576,6 +580,7 @@ impl FinetuneTrainer {
             }
 
             if cfg.ckpt.should_save(step) {
+                monitor::stamp(monitor::Phase::Ckpt, step);
                 let dir = cfg.ckpt.dir.as_ref().expect("should_save implies dir");
                 self.save_state(dir, step + 1, cfg.ckpt.keep_last, &rng)?;
             }
@@ -592,6 +597,7 @@ impl FinetuneTrainer {
         self.store.assert_finite()?;
         let acc = {
             let _p = crate::obs::phase("trainer", "eval", "step.eval_s");
+            monitor::stamp(monitor::Phase::Eval, cfg.steps);
             self.evaluate(&task)?
         };
         // observability epilogue (no-op unless --trace-out/--metrics-out);

@@ -47,6 +47,8 @@ use crate::ckpt::{
 use crate::data::ZipfMarkovCorpus;
 use crate::estimator::engine::{GradEstimator, GradSignal, MethodShape};
 use crate::model::ParamStore;
+use crate::obs::monitor;
+use crate::obs::quality::QualityProbe;
 use crate::optim::{
     clip_global_norm, Adam, AdamConfig, CosineSchedule, LazyAction, LazyUpdateController,
     LrSchedule, RankAdaptConfig, RankController, RankDecision,
@@ -98,6 +100,13 @@ pub struct PretrainConfig {
     /// residuals and shrink a slot's rank when the trend decays.
     /// `None` keeps every rank fixed at the manifest value.
     pub rank_adapt: Option<RankAdaptConfig>,
+    /// Estimator-quality probe cadence (`--probe-every`): every this
+    /// many steps one rotating slot gets a paired probe
+    /// ([`crate::obs::quality`]); 0 disables the rotating probes (the
+    /// lazy-update-boundary gauges still run whenever metrics are on).
+    /// Probe directions come from a dedicated stream, so trained bytes
+    /// are bitwise identical with probing on or off.
+    pub probe_every: u64,
 }
 
 impl PretrainConfig {
@@ -120,6 +129,7 @@ impl PretrainConfig {
             ckpt: CkptOptions::default(),
             track_refresh: 8,
             rank_adapt: None,
+            probe_every: 0,
         }
     }
 }
@@ -169,6 +179,10 @@ pub struct PretrainTrainer {
     /// gradient lands in `[k][0]`). Reused across steps, so the
     /// execute→reduce path stops re-allocating full-gradient buffers.
     grad_stage: Vec<Vec<Vec<f32>>>,
+    /// Estimator-quality telemetry: per-slot bias sentinels, the
+    /// rotating `--probe-every` schedule, and the dedicated probe RNG
+    /// (never the trainer stream — see [`crate::obs::quality`]).
+    quality: QualityProbe,
 }
 
 impl PretrainTrainer {
@@ -255,6 +269,11 @@ impl PretrainTrainer {
 
         let db_outs: Vec<usize> = subspace.slots.iter().map(|s| s.db_output).collect();
         let f_douts: Vec<usize> = full_slots.iter().map(|f| f.dout).collect();
+        let quality = QualityProbe::new(
+            cfg.seed,
+            cfg.probe_every,
+            subspace.slots.iter().map(|s| s.name.clone()).collect(),
+        );
         let engine = GradEstimator::new(
             MethodShape::LowRankIpa,
             0.0,
@@ -285,7 +304,30 @@ impl PretrainTrainer {
             db_outs,
             f_douts,
             grad_stage: Vec::new(),
+            quality,
         })
+    }
+
+    /// Probe subspace slot `i` against the most recent reduced dB
+    /// (`grad_stage[i][0]` — survives across steps) with a direction
+    /// from the dedicated probe stream, folding the result into the
+    /// slot's sentinel and the `mse_ratio`/`bias_sentinel` series.
+    /// Read-only on training state; skips silently when no gradient is
+    /// staged yet or the staged width is stale across a rank shrink.
+    fn probe_slot_quality(&mut self, i: usize, step: u64) {
+        let Some(db) = self.grad_stage.get(i).and_then(|g| g.first()) else { return };
+        if db.is_empty() {
+            return;
+        }
+        // disjoint-field borrows: quality (mut, probe direction) and
+        // engine/grad_stage (shared) split without a self method call
+        let probe = {
+            let u = self.quality.draw_direction(db.len());
+            self.engine.probe_quality(i, db, u)
+        };
+        if let Some(p) = probe {
+            self.quality.observe(i, step, p);
+        }
     }
 
     fn subspace(&self) -> &SubspaceSet {
@@ -409,7 +451,18 @@ impl PretrainTrainer {
             let t0 = Instant::now();
             if controller.action(step) == LazyAction::ResampleSubspace {
                 let _p = crate::obs::phase("trainer", "resample", "step.resample_s");
+                monitor::stamp(monitor::Phase::Resample, step);
                 if step > 0 {
+                    // boundary quality gauges: probe every slot against
+                    // last step's reduced dB while V is still the frame
+                    // that produced it (before the redraw below). The
+                    // rank-adapt log then prints a fresh mse_ratio
+                    // context column.
+                    if self.quality.active() {
+                        for i in 0..self.quality.n_slots() {
+                            self.probe_slot_quality(i, step);
+                        }
+                    }
                     self.engine.subspace.as_mut().expect("subspace").lift(&mut self.store)?;
                     // rank decisions happen exactly here: B is spent
                     // (lifted), Adam is about to reset, V is about to be
@@ -440,6 +493,7 @@ impl PretrainTrainer {
             let mut loss_acc = 0.0f32;
             {
                 let _p = crate::obs::phase("trainer", "execute", "step.execute_s");
+                monitor::stamp(monitor::Phase::Execute, step);
                 for (s_idx, shard) in shards.into_iter().enumerate() {
                     let inputs = self.build_inputs(shard.tokens);
                     let out = self.grad_art.execute(&inputs)?;
@@ -463,6 +517,7 @@ impl PretrainTrainer {
                 }
             }
             let _p_reduce = crate::obs::phase("trainer", "reduce", "step.reduce_s");
+            monitor::stamp(monitor::Phase::Reduce, step);
             let loss = self.collective.allreduce_mean_scalar(loss_acc, n_shards)?;
             // one slot-pipelined pass over every dB and full-rank slot:
             // while slot k's chunk reduce runs on the kernel pool, slot
@@ -484,6 +539,7 @@ impl PretrainTrainer {
             // the serial loop)
             let slot_grads: Vec<&[f32]> = groups.iter().map(|g| g[0].as_slice()).collect();
             let _p_update = crate::obs::phase("trainer", "update", "step.update_s");
+            monitor::stamp(monitor::Phase::Update, step);
             let stats = self.engine.step(
                 &mut self.store,
                 GradSignal::Grads {
@@ -498,6 +554,13 @@ impl PretrainTrainer {
             drop(slot_grads);
             self.grad_stage = groups;
 
+            // rotating `--probe-every` probe: one slot per probe step,
+            // against the gradient this step just reduced (probe RNG
+            // only — the trainer stream is untouched)
+            if let Some(i) = self.quality.rotating_slot(step) {
+                self.probe_slot_quality(i, step);
+            }
+
             log.push(StepRecord {
                 step,
                 loss: stats.loss,
@@ -509,6 +572,7 @@ impl PretrainTrainer {
             if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
                 let ev = {
                     let _p = crate::obs::phase("trainer", "eval", "step.eval_s");
+                    monitor::stamp(monitor::Phase::Eval, step);
                     self.eval_loss(&eval_sets)?
                 };
                 log.push_eval(step + 1, ev);
@@ -535,6 +599,7 @@ impl PretrainTrainer {
             // writer's next drain (next save or end of run), not at
             // barrier release.
             if cfg.ckpt.should_save(step) {
+                monitor::stamp(monitor::Phase::Ckpt, step);
                 let dir = cfg.ckpt.dir.as_ref().expect("should_save implies dir");
                 if self.collective.is_leader() {
                     self.save_state(dir, step + 1, cfg.ckpt.keep_last)?;
@@ -592,18 +657,25 @@ impl PretrainTrainer {
         let rank = self.collective.rank();
         let outer = controller.outer_index(step);
         for (i, d) in decisions.iter().enumerate() {
+            // context column only: the quality probe's latest
+            // variance-vs-bound gauge rides along in the decision log
+            // (NaN before the first probe); decisions stay a function
+            // of the lift residuals alone
+            let mse = self.quality.last_mse(i);
             match *d {
                 RankDecision::Pending => {}
                 RankDecision::Keep { ratio } => {
                     println!(
-                        "[rank-adapt r{rank}] outer={outer} {}: resid ratio {ratio:.4} (keep r={})",
+                        "[rank-adapt r{rank}] outer={outer} {}: resid ratio {ratio:.4} \
+                         mse {mse:.3} (keep r={})",
                         self.subspace().slots[i].name,
                         ranks[i],
                     );
                 }
                 RankDecision::Shrink { to, ratio } => {
                     println!(
-                        "[rank-adapt r{rank}] outer={outer} {}: resid ratio {ratio:.4} (shrink r{}→{to})",
+                        "[rank-adapt r{rank}] outer={outer} {}: resid ratio {ratio:.4} \
+                         mse {mse:.3} (shrink r{}→{to})",
                         self.subspace().slots[i].name,
                         ranks[i],
                     );

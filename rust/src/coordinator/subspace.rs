@@ -153,6 +153,11 @@ pub struct SubspaceSet {
     lift_keys: Vec<String>,
     /// Precomputed `rank[<name>]` metric keys for controller decisions.
     rank_keys: Vec<String>,
+    /// Precomputed `mse_ratio[<name>]` metric keys — the
+    /// Theorem-2-normalized variance proxy [`crate::obs::quality`]
+    /// exports per slot (kept here so every producer of the series
+    /// spells the key the same way).
+    mse_keys: Vec<String>,
     /// Reusable view staging for the parallel lift fan-out
     /// ([`ParamStore::f32_mut_many_with`]).
     lift_scratch: crate::model::MutManyScratch,
@@ -177,6 +182,7 @@ impl SubspaceSet {
     fn assemble(slots: Vec<MatrixSlot>, kind: ProjectorKind, c: f64) -> Self {
         let lift_keys = slots.iter().map(|s| format!("lift_b_norm[{}]", s.name)).collect();
         let rank_keys = slots.iter().map(|s| format!("rank[{}]", s.name)).collect();
+        let mse_keys = slots.iter().map(|s| format!("mse_ratio[{}]", s.name)).collect();
         let lift_residuals = vec![0.0; slots.len()];
         SubspaceSet {
             slots,
@@ -188,6 +194,7 @@ impl SubspaceSet {
             lift_residuals,
             lift_keys,
             rank_keys,
+            mse_keys,
             lift_scratch: crate::model::MutManyScratch::new(),
         }
     }
@@ -425,6 +432,12 @@ impl SubspaceSet {
     /// Precomputed `rank[<name>]` metric key for slot `i`.
     pub fn rank_key(&self, i: usize) -> &str {
         &self.rank_keys[i]
+    }
+
+    /// Precomputed `mse_ratio[<name>]` metric key for slot `i` — the
+    /// quality probe's variance-vs-bound gauge series.
+    pub fn mse_key(&self, i: usize) -> &str {
+        &self.mse_keys[i]
     }
 
     /// Re-layout slot `i` to active rank `new_r` < r, in place: B and V

@@ -287,6 +287,40 @@ impl GradEstimator {
         Ok(())
     }
 
+    /// Run one estimator-quality probe against subspace slot `i`: feed
+    /// the projected gradient `db` (`[m, r]`, e.g. the trainer's staged
+    /// reduced dB) and a probe direction `u` (same layout, drawn from
+    /// the dedicated probe stream) through
+    /// [`crate::obs::quality::probe_slot`] with the slot's live frame V
+    /// and the subspace's weak-unbiasedness scale c. Read-only — no
+    /// training state, no trainer RNG, no kernel pool — so calling it
+    /// (or not) never changes what is trained. Returns `None` when the
+    /// engine has no subspace, `i` is out of range, or the buffers do
+    /// not match the slot's active `[m, r]` layout (e.g. a stale stage
+    /// across a rank shrink).
+    pub fn probe_quality(
+        &self,
+        i: usize,
+        db: &[f32],
+        u: &[f32],
+    ) -> Option<crate::obs::quality::SlotProbe> {
+        let sub = self.subspace.as_ref()?;
+        let slot = sub.slots.get(i)?;
+        let len = slot.m * slot.r;
+        if db.len() != len || u.len() != len || slot.v.len() != slot.n * slot.r {
+            return None;
+        }
+        Some(crate::obs::quality::probe_slot(
+            db,
+            slot.v.as_slice(),
+            slot.m,
+            slot.n,
+            slot.r,
+            sub.c,
+            u,
+        ))
+    }
+
     /// Draw the per-step perturbations in place (LR shapes; a no-op for
     /// the IPA shapes, whose head Z stays zero). Stream order is the
     /// canonical one the pre-engine trainers used: head Z first, then
@@ -721,6 +755,56 @@ mod tests {
             assert_eq!(s.is_low_rank(), low_rank);
             assert_eq!(s.is_lr(), family == Family::Lr);
         }
+    }
+
+    #[test]
+    fn probe_quality_reads_the_live_frame() {
+        // An engine wrapped around an exact Theorem-2 frame must probe
+        // at the optimum; malformed probes return None instead of
+        // panicking mid-run.
+        let (m, n, r, c) = (4usize, 12usize, 2usize, 1.0f64);
+        let s = (c * n as f64 / r as f64).sqrt() as f32;
+        let mut v = vec![0.0f32; n * r];
+        for j in 0..r {
+            v[j * r + j] = s;
+        }
+        let slot = MatrixSlot {
+            name: "w".into(),
+            m,
+            n,
+            r,
+            r_max: r,
+            b_input: usize::MAX,
+            v_input: usize::MAX,
+            db_output: usize::MAX,
+            param_pos: 0,
+            b: Arc::new(vec![0.0; m * r]),
+            v: Arc::new(v),
+            adam: crate::optim::Adam::new(m * r, AdamConfig::default()),
+            frame: None,
+            stage_b: None,
+            stage_v: None,
+        };
+        let sub = SubspaceSet::from_slots(
+            vec![slot],
+            crate::projection::ProjectorKind::Stiefel,
+            c,
+        );
+        let engine = GradEstimator::new(
+            MethodShape::LowRankIpa,
+            0.0,
+            Some(sub),
+            Vec::new(),
+            Vec::new(),
+            None,
+        );
+        let db: Vec<f32> = (0..m * r).map(|k| (k as f32 * 0.3).sin()).collect();
+        let u: Vec<f32> = (0..m * r).map(|k| (k as f32 * 0.7).cos()).collect();
+        let p = engine.probe_quality(0, &db, &u).expect("probe");
+        assert!(p.sentinel.abs() < 1e-6, "sentinel {}", p.sentinel);
+        assert!((p.mse_ratio - 1.0).abs() < 1e-6, "mse_ratio {}", p.mse_ratio);
+        assert!(engine.probe_quality(0, &db[..m * r - 1], &u).is_none());
+        assert!(engine.probe_quality(1, &db, &u).is_none());
     }
 
     #[test]

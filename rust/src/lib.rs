@@ -47,12 +47,23 @@
 //!   dtype lane, pool queue-wait histograms, per-layer lift-residual
 //!   norms, per-phase step times) snapshotted as JSONL via
 //!   `--metrics-out`, gathered cross-rank to the leader over the
-//!   existing `all_gather`; and a measured memory ledger
+//!   existing `all_gather`; a measured memory ledger
 //!   ([`obs::TrackedAlloc`] live/peak bytes + `/proc` VmHWM) beside
-//!   the analytical model in `exp memory`. Off by default and
+//!   the analytical model in `exp memory`; estimator-quality gauges
+//!   ([`obs::quality`]: an unbiasedness sentinel and a per-layer
+//!   variance/MSE proxy normalized by the Theorem-2 `c·n/r` bound,
+//!   probed at the lazy-update boundary and on a `--probe-every`
+//!   rotating schedule, exported as `mse_ratio[layer]` /
+//!   `bias_sentinel[layer]` series and echoed in the rank-adaptation
+//!   decision log); and a run-health monitor ([`obs::monitor`]:
+//!   per-phase heartbeat watermarks, a `--stall-timeout` watchdog, a
+//!   read-only `--monitor-addr` TCP status endpoint, and a
+//!   panic/peer-death postmortem blackbox). Off by default and
 //!   **non-perturbing by contract**: disabled instrumentation is one
-//!   relaxed atomic load, and enabling it changes no trained bit
-//!   (pinned by `tests/obs_determinism.rs`).
+//!   relaxed atomic load, and enabling it — quality probes included,
+//!   which draw from a dedicated forked RNG stream — changes no
+//!   trained bit (pinned by `tests/obs_determinism.rs` and
+//!   `tests/obs_monitor.rs`).
 //! * **L3 compute substrate** — [`kernel`]: the one Scalar-generic
 //!   (f32/f64) dense compute layer — blocked GEMM, AXPY/scale,
 //!   deterministic reductions, strided panel primitives — running on a

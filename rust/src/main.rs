@@ -12,17 +12,20 @@
 //!                           [--keep-last K] [--resume [latest|<step>]]
 //!                           [--track-refresh T] [--rank-adapt]
 //!                           [--rank-min R] [--rank-window W] [--rank-decay D]
-//!                           [--rank-factor F] …
+//!                           [--rank-factor F] [--probe-every K]
+//!                           [--monitor-addr H:P] [--stall-timeout MS] …
 //! lowrank-sge finetune      --task sst2 --method stiefel-lowrank-lr [--steps N]
 //!                           [--threads T] [--save-every N] [--ckpt-dir D]
 //!                           [--keep-last K] [--resume [latest|<step>]]
-//!                           [--track-refresh T] …
+//!                           [--track-refresh T]
+//!                           [--monitor-addr H:P] [--stall-timeout MS] …
 //! lowrank-sge launch        --nproc N [--transport unix|tcp] [--rdzv-dir D]
 //!                           [--comm-timeout-ms T] [--algo ring|tree|auto]
 //!                           [--comm-dtype f32|bf16]
 //!                           <subcommand …>                   # multi-process DDP
 //! lowrank-sge comm-check    [--len N] [--comm-dtype f32|bf16]
 //!                           [--fail-rank R] [--trace-out T] [--metrics-out M]
+//!                           [--monitor-addr H:P]
 //! lowrank-sge inspect                                        # list artifacts
 //! ```
 //!
@@ -38,6 +41,24 @@
 //! metrics over the collective and merges the traces. Both are off by
 //! default and non-perturbing: the trained bits are bitwise identical
 //! with and without them (pinned by `tests/obs_determinism.rs`).
+//!
+//! Run health + estimator quality: `--monitor-addr <host:port>` serves
+//! newline-delimited JSON status snapshots over read-only TCP (one
+//! line per connection: phase watermarks, stall count, metrics
+//! registry); in a `launch` world only the leader binds. A
+//! `--stall-timeout <ms>` watchdog thread flags ranks whose heartbeat
+//! watermark stops advancing, and on panic or peer death a
+//! flight-recorder blackbox dumps the last span ring, final metrics
+//! snapshot, and comm peer events to `<ckpt-dir>/postmortem.rank<r>.json`.
+//! `pretrain --probe-every K` adds estimator-quality probes: every K
+//! steps one rotating subspace slot (plus every slot at each
+//! lazy-update boundary) gets an unbiasedness sentinel and a
+//! variance/MSE gauge normalized by the Theorem-2 `c·n/r` bound,
+//! exported as `mse_ratio[layer]` / `bias_sentinel[layer]` series and
+//! echoed as a context column in the `[rank-adapt]` decision log
+//! (decisions themselves are unchanged). The probes draw from a
+//! dedicated forked RNG stream, so trained bytes stay bitwise
+//! identical with probing on or off (see [`lowrank_sge::obs`]).
 //!
 //! Multi-process DDP: `launch --nproc N pretrain …` spawns N ranks of
 //! this binary wired into one collective group (env-var rendezvous,
@@ -381,6 +402,32 @@ fn cmd_comm_check(args: &ArgMap) -> Result<()> {
             );
         }
     }
+    // --monitor-addr: exercise the live status endpoint in-world — the
+    // leader binds it, connects to itself over real TCP, reads one
+    // snapshot line, and validates it as JSON; a dead or malformed
+    // endpoint fails the check loudly
+    if let Some(addr) = args.monitor_addr() {
+        use lowrank_sge::obs::monitor;
+        monitor::configure(rank, None);
+        monitor::stamp(monitor::Phase::Barrier, phases.len() as u64);
+        if rank == 0 {
+            use std::io::BufRead;
+            let bound = monitor::serve_status(addr)
+                .with_context(|| format!("binding monitor endpoint on {addr}"))?;
+            let stream = std::net::TcpStream::connect(bound)
+                .context("connecting to the monitor endpoint")?;
+            stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+            let mut line = String::new();
+            std::io::BufReader::new(stream)
+                .read_line(&mut line)
+                .context("reading a monitor snapshot")?;
+            let line = line.trim();
+            if !monitor::check_json_line(line) {
+                bail!("comm-check FAILED: monitor endpoint returned invalid JSON: {line:?}");
+            }
+            println!("[obs:monitor] endpoint snapshot ok ({} bytes)", line.len());
+        }
+    }
     // observability epilogue: gather metrics snapshots to the leader,
     // export + merge the Chrome traces (no-op without the flags)
     lowrank_sge::coordinator::export_run_obs(&mut Collective::Comm(comm))?;
@@ -570,6 +617,37 @@ fn ckpt_options(args: &ArgMap, file: &ConfigFile, section: &str) -> Result<CkptO
     Ok(opts)
 }
 
+/// Run-health monitor startup shared by the trainer subcommands: no-op
+/// unless `--monitor-addr` or `--stall-timeout` was given. `blackbox_dir`
+/// is where a panic/peer-death postmortem would land (the checkpoint
+/// dir when one is configured, else the working directory). Only the
+/// leader binds the status endpoint — every rank of a launch world
+/// shares argv, and two binds of one address would collide.
+fn setup_monitor(
+    args: &ArgMap,
+    rank: usize,
+    leader: bool,
+    blackbox_dir: Option<&std::path::Path>,
+) -> Result<()> {
+    use lowrank_sge::obs::monitor;
+    let stall = args.stall_timeout_ms();
+    let addr = args.monitor_addr();
+    if stall == 0 && addr.is_none() {
+        return Ok(());
+    }
+    let cwd = std::path::PathBuf::from(".");
+    monitor::configure(rank, Some(blackbox_dir.unwrap_or(&cwd)));
+    if stall > 0 {
+        monitor::start_watchdog(stall);
+    }
+    if let Some(a) = addr.filter(|_| leader) {
+        let bound = monitor::serve_status(a)
+            .with_context(|| format!("binding monitor endpoint on {a}"))?;
+        println!("[obs:monitor] status endpoint on {bound}");
+    }
+    Ok(())
+}
+
 fn cmd_pretrain(args: &ArgMap) -> Result<()> {
     // before the collective: the connect handshake should be spanned too
     lowrank_sge::obs::init(args.trace_out(), args.metrics_out());
@@ -628,7 +706,11 @@ fn cmd_pretrain(args: &ArgMap) -> Result<()> {
         } else {
             None
         },
+        // quality-probe cadence is an obs flag like --trace-out: CLI
+        // only, no config-file key
+        probe_every: args.probe_every(),
     };
+    setup_monitor(args, collective.rank(), leader, cfg.ckpt.dir.as_deref())?;
     if leader {
         println!(
             "pretrain scale={} sampler={} steps={} K={} workers={} threads={} world={} track={} rank-adapt={}",
@@ -717,6 +799,8 @@ fn cmd_finetune(args: &ArgMap) -> Result<()> {
         track_refresh: args
             .u64_or("track-refresh", file.i64_or("finetune.track_refresh", 0).max(0) as u64),
     };
+    // single-process: rank 0 is the only (and therefore leader) rank
+    setup_monitor(args, 0, true, cfg.ckpt.dir.as_deref())?;
     println!("finetune task={} method={} steps={}", cfg.task, method.name(), cfg.steps);
     if let Some(resume) = cfg.ckpt.resume {
         println!("resuming from {resume} in {:?}", cfg.ckpt.dir.as_ref().unwrap());

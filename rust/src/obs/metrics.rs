@@ -284,17 +284,29 @@ pub fn json_u64(json: &str, key: &str) -> Option<u64> {
 /// f32. 32 KiB of JSON is far above a normal snapshot.
 pub const SNAPSHOT_F32S: usize = 32 * 1024;
 
-/// Encode a snapshot line for the all-gather. Oversized snapshots
-/// degrade loudly to a stub (never a torn JSON line).
+/// Encode a snapshot line for the all-gather. An oversized snapshot
+/// would be silently cut at the fixed frame — corrupt JSON on the
+/// leader — so it degrades loudly instead: the JSONL line becomes a
+/// valid truncation-marker object that keeps the rank (so the leader's
+/// per-rank table still lines up) and records how large the real
+/// snapshot was, and a `[obs]` warning names the cap to raise.
 pub fn encode_snapshot(json: &str) -> Vec<f32> {
+    let marker;
     let mut bytes = json.as_bytes();
     let cap = SNAPSHOT_F32S - 4;
     if bytes.len() > cap {
         eprintln!(
-            "obs: metrics snapshot is {} bytes (cap {cap}); replacing with a stub",
+            "[obs] metrics snapshot is {} bytes but the all-gather frame caps at {cap}; \
+             writing a truncation marker instead of torn JSON (raise SNAPSHOT_F32S or \
+             trim the series set)",
             bytes.len()
         );
-        bytes = b"{\"truncated\":true}";
+        let rank = json_u64(json, "rank").unwrap_or(0);
+        marker = format!(
+            "{{\"rank\":{rank},\"truncated\":true,\"snapshot_bytes\":{}}}",
+            bytes.len()
+        );
+        bytes = marker.as_bytes();
     }
     let mut out = Vec::with_capacity(SNAPSHOT_F32S);
     let len = bytes.len() as u32;
@@ -392,10 +404,17 @@ mod tests {
         let back = decode_snapshot(&frame).unwrap();
         assert_eq!(back, json);
         assert_eq!(json_u64(&back, "rank"), Some(3));
-        // oversize degrades to the stub, still valid
-        let big = "x".repeat(SNAPSHOT_F32S);
+        // oversize degrades to a truncation marker that stays valid
+        // JSON and keeps the rank + original size
+        let big = format!("{{\"rank\":5,\"pad\":\"{}\"}}", "x".repeat(SNAPSHOT_F32S));
         let frame = encode_snapshot(&big);
-        assert_eq!(decode_snapshot(&frame).unwrap(), "{\"truncated\":true}");
+        let marker = decode_snapshot(&frame).unwrap();
+        assert_eq!(
+            marker,
+            format!("{{\"rank\":5,\"truncated\":true,\"snapshot_bytes\":{}}}", big.len())
+        );
+        assert_eq!(json_u64(&marker, "rank"), Some(5));
+        assert_eq!(json_u64(&marker, "snapshot_bytes"), Some(big.len() as u64));
     }
 
     #[test]

@@ -40,6 +40,18 @@
 //!   events, live bytes, and peak bytes, plus `/proc/self/status`
 //!   VmHWM/VmRSS sampling. `exp memory` prints the measured peaks
 //!   beside the analytical model.
+//! * [`quality`] — estimator-quality telemetry: the per-slot
+//!   unbiasedness sentinel (EMA + z-score drift detection over a probe
+//!   direction from a dedicated stream) and the Theorem-2-normalized
+//!   `mse_ratio[layer]` variance proxy, computed read-only from the
+//!   staged projected gradient and the live frame at every lazy-update
+//!   boundary and (with `--probe-every`) on a rotating probe slot.
+//! * [`monitor`] — run health: per-phase heartbeat watermarks in an
+//!   atomic slab, a stall watchdog (`--stall-timeout`), a read-only
+//!   newline-delimited-JSON TCP status endpoint (`--monitor-addr`,
+//!   leader rank only), and a postmortem flight-recorder blackbox
+//!   (`<ckpt-dir>/postmortem.rank<r>.json` on panic or comm
+//!   peer-death).
 //!
 //! # Multi-rank traces
 //!
@@ -53,6 +65,8 @@
 
 pub mod alloc;
 pub mod metrics;
+pub mod monitor;
+pub mod quality;
 pub mod span;
 
 use std::path::{Path, PathBuf};

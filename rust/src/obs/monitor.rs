@@ -1,0 +1,541 @@
+//! Run-health monitor: per-phase heartbeat watermarks, a stall
+//! watchdog, a read-only TCP status endpoint, and a postmortem
+//! flight-recorder blackbox.
+//!
+//! The pieces compose but are independently usable:
+//!
+//! * **Watermarks** — each rank stamps `(phase, step, monotonic tick)`
+//!   into a fixed atomic slab ([`stamp`]) at the trainer's existing
+//!   phase points (resample / execute / reduce / update / eval / ckpt /
+//!   barrier). A stamp is two relaxed stores; with the monitor
+//!   unconfigured it is one relaxed load — the same non-perturbation
+//!   contract as the rest of [`crate::obs`] (no RNG, no arithmetic, no
+//!   ordering effects; pinned by `tests/obs_determinism.rs`).
+//! * **Watchdog** — [`start_watchdog`] spawns one background thread
+//!   that flags a stall (`[obs:monitor] stall …` + [`stall_count`])
+//!   when no watermark advances within `--stall-timeout` ms. Off by
+//!   default; a slow-but-alive rank whose stamps keep arriving under
+//!   the timeout is never flagged (pinned by `tests/obs_monitor.rs`).
+//! * **Status endpoint** — [`serve_status`] binds `--monitor-addr` and
+//!   serves newline-delimited JSON snapshots ([`status_line`]): the
+//!   full metrics-registry snapshot (step phase times, per-lane wire
+//!   bytes, heap live/peak/VmHWM, per-layer active ranks, residuals,
+//!   `mse_ratio`) wrapped in an envelope with the live watermarks and
+//!   stall/peer-event state. Read-only: the serving threads never
+//!   touch training state beyond the registry mutex.
+//! * **Blackbox** — on panic (hook installed by [`configure`]) or on a
+//!   comm peer-death ([`note_comm_error`], called from the transport's
+//!   error normalizer), [`dump_blackbox`] writes the last span-ring
+//!   entries, a final metrics snapshot, the watermark slab, and the
+//!   recorded comm peer events to `<dir>/postmortem.rank<r>.json`
+//!   before the process dies — enough to reconstruct *where* a run was
+//!   when it stopped without re-running it under a tracer.
+//!
+//! The endpoint binds an explicit caller-chosen address (unlike
+//! [`crate::comm::transport::Listener`], which deliberately binds
+//! ephemeral rendezvous ports); under `launch` only the leader rank
+//! serves it, so one `--monitor-addr` on the command line never
+//! collides across ranks.
+
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+/// Trainer phases that stamp heartbeat watermarks. The discriminants
+/// index the watermark slab.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Resample = 0,
+    Execute = 1,
+    Reduce = 2,
+    Update = 3,
+    Eval = 4,
+    Ckpt = 5,
+    Barrier = 6,
+}
+
+pub const N_PHASES: usize = 7;
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Resample => "resample",
+            Phase::Execute => "execute",
+            Phase::Reduce => "reduce",
+            Phase::Update => "update",
+            Phase::Eval => "eval",
+            Phase::Ckpt => "ckpt",
+            Phase::Barrier => "barrier",
+        }
+    }
+
+    fn all() -> [Phase; N_PHASES] {
+        [
+            Phase::Resample,
+            Phase::Execute,
+            Phase::Reduce,
+            Phase::Update,
+            Phase::Eval,
+            Phase::Ckpt,
+            Phase::Barrier,
+        ]
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Arm or disarm watermark stamping (also done by [`configure`]).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is the monitor armed? One relaxed load — the whole disabled path.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// The watermark slab: per-phase step and tick (ms since the monitor
+// epoch, +1 so 0 means "never stamped"). Relaxed everywhere — the
+// watchdog and status readers only need eventually-consistent
+// progress evidence, never synchronization.
+static WM_STEP: [AtomicU64; N_PHASES] = [const { AtomicU64::new(0) }; N_PHASES];
+static WM_TICK: [AtomicU64; N_PHASES] = [const { AtomicU64::new(0) }; N_PHASES];
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+fn tick_ms() -> u64 {
+    epoch().elapsed().as_millis() as u64 + 1
+}
+
+/// Stamp this rank's heartbeat watermark for `phase` at `step`.
+#[inline]
+pub fn stamp(phase: Phase, step: u64) {
+    if !enabled() {
+        return;
+    }
+    let t = tick_ms();
+    WM_STEP[phase as usize].store(step, Ordering::Relaxed);
+    WM_TICK[phase as usize].store(t, Ordering::Relaxed);
+}
+
+/// One phase's last-stamped watermark.
+#[derive(Clone, Debug)]
+pub struct Watermark {
+    pub phase: &'static str,
+    pub step: u64,
+    pub tick_ms: u64,
+}
+
+/// The stamped watermarks, in phase order (never-stamped phases are
+/// omitted).
+pub fn watermarks() -> Vec<Watermark> {
+    Phase::all()
+        .into_iter()
+        .filter_map(|p| {
+            let tick = WM_TICK[p as usize].load(Ordering::Relaxed);
+            (tick > 0).then(|| Watermark {
+                phase: p.name(),
+                step: WM_STEP[p as usize].load(Ordering::Relaxed),
+                tick_ms: tick,
+            })
+        })
+        .collect()
+}
+
+/// The newest watermark tick across all phases (0 = nothing stamped).
+fn newest_tick() -> u64 {
+    (0..N_PHASES).map(|i| WM_TICK[i].load(Ordering::Relaxed)).max().unwrap_or(0)
+}
+
+struct MonitorCfg {
+    rank: usize,
+    blackbox_dir: Option<PathBuf>,
+}
+
+fn cfg_cell() -> &'static OnceLock<MonitorCfg> {
+    static CFG: OnceLock<MonitorCfg> = OnceLock::new();
+    &CFG
+}
+
+/// Configure the monitor for this process: record the rank (stamped
+/// into every status line and the blackbox filename), arm watermark
+/// stamping, and — when `blackbox_dir` is given — install the panic
+/// hook that dumps the flight recorder before the process dies. First
+/// call wins (the `obs::init` convention); later calls are no-ops.
+pub fn configure(rank: usize, blackbox_dir: Option<&Path>) {
+    let _ = cfg_cell().set(MonitorCfg { rank, blackbox_dir: blackbox_dir.map(PathBuf::from) });
+    set_enabled(true);
+    if blackbox_dir.is_some() {
+        install_panic_hook();
+    }
+}
+
+fn rank() -> usize {
+    cfg_cell().get().map(|c| c.rank).unwrap_or(0)
+}
+
+// ---------------------------------------------------------------- watchdog
+
+static STALLS: AtomicUsize = AtomicUsize::new(0);
+
+/// Stalls flagged by the watchdog so far (this process).
+pub fn stall_count() -> usize {
+    STALLS.load(Ordering::Relaxed)
+}
+
+/// Spawn the stall watchdog: flags (loudly, and in [`stall_count`])
+/// whenever no watermark has advanced within `timeout_ms`. One flag
+/// per stall — the counter advances again only after the watermarks
+/// do. Idempotent; the thread is detached and dies with the process.
+pub fn start_watchdog(timeout_ms: u64) {
+    if timeout_ms == 0 {
+        return;
+    }
+    static STARTED: AtomicBool = AtomicBool::new(false);
+    if STARTED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let poll = Duration::from_millis((timeout_ms / 4).clamp(10, 1000));
+    std::thread::Builder::new()
+        .name("obs-monitor-watchdog".into())
+        .spawn(move || {
+            let mut flagged_at: u64 = 0; // newest tick already flagged
+            loop {
+                std::thread::sleep(poll);
+                let newest = newest_tick();
+                if newest == 0 {
+                    continue; // nothing stamped yet — the run hasn't started
+                }
+                let now = tick_ms();
+                if now.saturating_sub(newest) > timeout_ms {
+                    if newest != flagged_at {
+                        flagged_at = newest;
+                        STALLS.fetch_add(1, Ordering::Relaxed);
+                        let wm = watermarks();
+                        let last = wm
+                            .iter()
+                            .max_by_key(|w| w.tick_ms)
+                            .map(|w| format!("{} step {}", w.phase, w.step))
+                            .unwrap_or_else(|| "?".into());
+                        eprintln!(
+                            "[obs:monitor] stall: rank {} made no progress for {} ms \
+                             (timeout {timeout_ms} ms; last watermark: {last})",
+                            rank(),
+                            now.saturating_sub(newest),
+                        );
+                    }
+                } else {
+                    flagged_at = 0; // progress resumed — re-arm
+                }
+            }
+        })
+        .expect("spawning the obs-monitor watchdog thread");
+}
+
+// ----------------------------------------------------------- peer events
+
+fn peer_events() -> &'static Mutex<Vec<String>> {
+    static EVENTS: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    &EVENTS
+}
+
+/// Record a comm-layer failure (called from the transport's error
+/// normalizer). Peer-death-shaped errors additionally trigger one
+/// blackbox dump — the error is about to unwind the whole rank, and
+/// the flight recorder must be on disk before it does.
+pub fn note_comm_error(msg: &str) {
+    {
+        let mut ev = peer_events().lock().unwrap_or_else(|e| e.into_inner());
+        if ev.len() < 32 {
+            ev.push(format!("t={}ms {}", tick_ms(), msg));
+        }
+    }
+    let peer_death = msg.contains("peer");
+    if peer_death && cfg_cell().get().is_some_and(|c| c.blackbox_dir.is_some()) {
+        static DUMPED: AtomicBool = AtomicBool::new(false);
+        if !DUMPED.swap(true, Ordering::SeqCst) {
+            let _ = dump_blackbox(&format!("peer-death: {msg}"));
+        }
+    }
+}
+
+// --------------------------------------------------------------- blackbox
+
+/// How many of the newest span-ring entries the blackbox keeps.
+pub const BLACKBOX_SPANS: usize = 256;
+
+fn escape(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Install the panic hook that dumps the blackbox (idempotent; chains
+/// the previous hook so the normal panic message still prints).
+pub fn install_panic_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let reason = format!("panic: {info}");
+            if let Some(p) = dump_blackbox(&reason) {
+                eprintln!("[obs:monitor] blackbox written to {}", p.display());
+            }
+            prev(info);
+        }));
+    });
+}
+
+/// Dump the flight recorder: the newest [`BLACKBOX_SPANS`] span-ring
+/// entries, a final metrics snapshot, the watermark slab, and the comm
+/// peer events, as one JSON object at
+/// `<blackbox_dir>/postmortem.rank<r>.json`. Returns the path, or
+/// `None` when no blackbox dir is configured or the write fails (a
+/// dying process must not die harder because its postmortem failed).
+pub fn dump_blackbox(reason: &str) -> Option<PathBuf> {
+    let cfg = cfg_cell().get()?;
+    let dir = cfg.blackbox_dir.as_ref()?;
+    let path = dir.join(format!("postmortem.rank{}.json", cfg.rank));
+    let (mut events, _labels) = crate::obs::span::drain_all();
+    events.sort_by_key(|(_, e)| e.start_ns);
+    let keep = events.len().saturating_sub(BLACKBOX_SPANS);
+    let mut out = String::with_capacity(4096);
+    out.push_str(&format!("{{\"rank\":{},\"reason\":\"", cfg.rank));
+    escape(reason, &mut out);
+    out.push_str(&format!("\",\"tick_ms\":{},\"stalls\":{},\"spans\":[", tick_ms(), stall_count()));
+    for (k, (tid, ev)) in events[keep..].iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("{{\"tid\":{tid},\"cat\":\""));
+        escape(ev.cat, &mut out);
+        out.push_str("\",\"name\":\"");
+        escape(ev.name, &mut out);
+        out.push_str(&format!("\",\"start_ns\":{},\"dur_ns\":{}}}", ev.start_ns, ev.dur_ns));
+    }
+    out.push_str("],\"watermarks\":[");
+    for (k, w) in watermarks().iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"phase\":\"{}\",\"step\":{},\"tick_ms\":{}}}",
+            w.phase, w.step, w.tick_ms
+        ));
+    }
+    out.push_str("],\"peer_events\":[");
+    {
+        let ev = peer_events().lock().unwrap_or_else(|e| e.into_inner());
+        for (k, e) in ev.iter().enumerate() {
+            if k > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            escape(e, &mut out);
+            out.push('"');
+        }
+    }
+    out.push_str("],\"metrics\":");
+    out.push_str(&crate::obs::metrics::snapshot_json(cfg.rank));
+    out.push_str("}\n");
+    if std::fs::create_dir_all(dir).is_err() {
+        return None;
+    }
+    match std::fs::write(&path, out) {
+        Ok(()) => Some(path),
+        Err(e) => {
+            eprintln!("[obs:monitor] blackbox write to {} failed: {e}", path.display());
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------- status endpoint
+
+/// One status-endpoint snapshot line: the metrics-registry snapshot
+/// wrapped in an envelope with the rank, tick, stall count, watermarks,
+/// and recorded peer events. Always a single line of valid JSON.
+pub fn status_line() -> String {
+    let r = rank();
+    let mut out = String::with_capacity(1024);
+    out.push_str(&format!(
+        "{{\"rank\":{r},\"tick_ms\":{},\"stalls\":{},\"watermarks\":[",
+        tick_ms(),
+        stall_count()
+    ));
+    for (k, w) in watermarks().iter().enumerate() {
+        if k > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"phase\":\"{}\",\"step\":{},\"tick_ms\":{}}}",
+            w.phase, w.step, w.tick_ms
+        ));
+    }
+    out.push_str("],\"peer_events\":[");
+    {
+        let ev = peer_events().lock().unwrap_or_else(|e| e.into_inner());
+        for (k, e) in ev.iter().enumerate() {
+            if k > 0 {
+                out.push(',');
+            }
+            out.push('"');
+            escape(e, &mut out);
+            out.push('"');
+        }
+    }
+    out.push_str("],\"registry\":");
+    out.push_str(&crate::obs::metrics::snapshot_json(r));
+    out.push('}');
+    out
+}
+
+/// Bind `addr` and serve newline-delimited JSON status snapshots: one
+/// [`status_line`] immediately on connect, then one per second until
+/// the client hangs up. Returns the bound address (so `addr` may use
+/// port 0). Read-only by construction; the accept loop and per-client
+/// writers are detached threads that die with the process.
+pub fn serve_status(addr: &str) -> Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding the monitor status endpoint on {addr}"))?;
+    let bound = listener.local_addr().context("reading the monitor endpoint address")?;
+    std::thread::Builder::new()
+        .name("obs-monitor-status".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { continue };
+                let _ = std::thread::Builder::new().name("obs-monitor-conn".into()).spawn(
+                    move || {
+                        let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+                        loop {
+                            let line = status_line();
+                            if stream.write_all(line.as_bytes()).is_err()
+                                || stream.write_all(b"\n").is_err()
+                                || stream.flush().is_err()
+                            {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(1000));
+                        }
+                    },
+                );
+            }
+        })
+        .context("spawning the obs-monitor status thread")?;
+    Ok(bound)
+}
+
+/// Minimal structural JSON check (balanced delimiters outside strings)
+/// — enough for the in-world endpoint smoke in `comm-check` and the
+/// monitor tests to certify a snapshot line parses, without a JSON
+/// dependency.
+pub fn check_json_line(s: &str) -> bool {
+    let t = s.trim();
+    if !(t.starts_with('{') && t.ends_with('}')) {
+        return false;
+    }
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for c in t.chars() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            '[' | '{' if !in_str => depth += 1,
+            ']' | '}' if !in_str => {
+                depth -= 1;
+                if depth < 0 {
+                    return false;
+                }
+            }
+            _ => {}
+        }
+    }
+    depth == 0 && !in_str
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The slab and enabled flag are process-global; tests that stamp
+    /// or toggle must not interleave.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn stamp_and_watermarks_round_trip() {
+        let _g = test_guard();
+        set_enabled(true);
+        stamp(Phase::Execute, 41);
+        stamp(Phase::Update, 41);
+        let wm = watermarks();
+        let ex = wm.iter().find(|w| w.phase == "execute").expect("execute stamped");
+        assert_eq!(ex.step, 41);
+        assert!(ex.tick_ms > 0);
+        assert!(wm.iter().any(|w| w.phase == "update"));
+    }
+
+    #[test]
+    fn disabled_stamp_is_a_no_op() {
+        let _g = test_guard();
+        set_enabled(false);
+        let before = WM_TICK[Phase::Ckpt as usize].load(Ordering::Relaxed);
+        stamp(Phase::Ckpt, 999);
+        assert_eq!(WM_TICK[Phase::Ckpt as usize].load(Ordering::Relaxed), before);
+        set_enabled(true);
+    }
+
+    #[test]
+    fn status_line_is_valid_json() {
+        let _g = test_guard();
+        set_enabled(true);
+        stamp(Phase::Reduce, 3);
+        let line = status_line();
+        assert!(check_json_line(&line), "{line}");
+        assert!(line.contains("\"registry\":{"), "{line}");
+        assert!(line.contains("\"watermarks\":["), "{line}");
+        assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn json_checker_accepts_and_rejects() {
+        assert!(check_json_line("{\"a\":[1,2,{\"b\":\"x]}\"}]}"));
+        assert!(!check_json_line("{\"a\":[1,2}"));
+        assert!(!check_json_line("[1,2,3]")); // snapshots are objects
+        assert!(!check_json_line("{\"a\":\"unterminated}"));
+    }
+
+    #[test]
+    fn peer_events_are_bounded_and_reported() {
+        let _g = test_guard();
+        for i in 0..40 {
+            note_comm_error(&format!("test comm error {i}"));
+        }
+        let ev = peer_events().lock().unwrap_or_else(|e| e.into_inner());
+        assert!(ev.len() <= 32);
+        drop(ev);
+        let line = status_line();
+        assert!(line.contains("test comm error"), "{line}");
+        assert!(check_json_line(&line), "{line}");
+    }
+}

@@ -1,0 +1,396 @@
+//! Estimator-quality telemetry: is the low-rank gradient estimator
+//! actually delivering the paper's statistical guarantees on *this*
+//! run?
+//!
+//! The paper's two claims are unbiasedness (E[lift(proj(G))] = G) and
+//! a Theorem-2 MSE bound scaling as `c·n/r`. Both hinge on the frame
+//! condition VᵀV = (c·n/r)·I that the samplers construct exactly — but
+//! warm-started tracking refreshes (Cholesky-QR drift), rank shrinks,
+//! and plain fp accumulation can all erode it silently. This module
+//! turns the condition into two per-slot online gauges, computed from
+//! the staged projected gradient dB = G·V and the live frame V —
+//! read-only, no training state touched, no trainer RNG consumed:
+//!
+//! * **Unbiasedness sentinel** — the unbiased lift is `(1/c)·dB·Vᵀ`;
+//!   re-projecting it through the same frame must reproduce dB exactly
+//!   when VᵀV = (c·n/r)·I: `dB·(VᵀV)·r/(c·n) ≡ dB`. The sentinel is
+//!   the normalized inner product ⟨lifted-reprojected − dB, U⟩ against
+//!   a probe direction U drawn from a **dedicated** probe stream
+//!   (never the trainer's RNG — trained bytes are identical with
+//!   probing on or off, at any thread count). At an exact frame it is
+//!   0 up to rounding; a drifting mean is a bias source by
+//!   construction. [`BiasSentinel`] tracks the EMA and flags drift
+//!   beyond a z-score threshold with a loud `[obs:quality] bias-drift`
+//!   line.
+//! * **Variance/MSE proxy** — `mse_ratio = ‖(1/c)·dB·Vᵀ‖² /
+//!   ((n/(c·r))·‖dB‖²)`: the lifted gradient energy over what the
+//!   Theorem-2-optimal frame would produce (`‖dB·Vᵀ‖² = (c·n/r)·‖dB‖²`
+//!   exactly at VᵀV = (c·n/r)·I). Ratio ≈ 1 means the projection is
+//!   performing at its optimum; deviation measures frame degradation
+//!   inflating (or deflating) the estimator variance. Exported as the
+//!   `mse_ratio[layer]` series and joined to the `[rank-adapt]`
+//!   decision log as a context column (decisions themselves are driven
+//!   by the lift residuals alone — see [`crate::optim::RankController`]).
+//!
+//! Both gauges are O(m·r² + n·r²) per probe via the trace identity
+//! `‖dB·Vᵀ‖² = tr((dBᵀdB)·(VᵀV))` — no m×n buffer is ever formed. The
+//! trainers run them at every lazy-update boundary (all slots) and,
+//! with `--probe-every N`, every N steps on one rotating slot.
+
+use crate::rng::Rng;
+
+/// One probe's outputs for a single slot. See the module docs for the
+/// exact definitions.
+#[derive(Clone, Copy, Debug)]
+pub struct SlotProbe {
+    /// Normalized ⟨reproject(lift(dB)) − dB, U⟩ — 0 at an exact frame.
+    pub sentinel: f64,
+    /// Lifted-gradient energy over the Theorem-2 optimum — 1 at an
+    /// exact frame.
+    pub mse_ratio: f64,
+}
+
+/// Compute both gauges for one slot. `db` is the projected gradient
+/// (row-major `[m, r]`), `v` the live frame (row-major `[n, r]`), `u`
+/// the probe direction (`[m, r]`, same layout as `db`), `c` the
+/// weak-unbiasedness scale. All accumulation is f64; the inputs are
+/// only read.
+pub fn probe_slot(
+    db: &[f32],
+    v: &[f32],
+    m: usize,
+    n: usize,
+    r: usize,
+    c: f64,
+    u: &[f32],
+) -> SlotProbe {
+    assert_eq!(db.len(), m * r, "dB must be [m, r]");
+    assert_eq!(v.len(), n * r, "V must be [n, r]");
+    assert_eq!(u.len(), m * r, "probe direction must match dB");
+    let tiny = 1e-300f64;
+    // w = VᵀV (r×r) — the frame Gram whose deviation from (c·n/r)·I is
+    // exactly what both gauges measure
+    let mut w = vec![0.0f64; r * r];
+    for row in 0..n {
+        let vr = &v[row * r..row * r + r];
+        for i in 0..r {
+            let vi = vr[i] as f64;
+            for j in 0..r {
+                w[i * r + j] += vi * vr[j] as f64;
+            }
+        }
+    }
+    // g = dBᵀdB (r×r) for the trace identity, plus ‖dB‖² and the
+    // sentinel inner product in one pass over the m rows
+    let scale = r as f64 / (c * n as f64);
+    let mut g = vec![0.0f64; r * r];
+    let mut db_sq = 0.0f64;
+    let mut u_sq = 0.0f64;
+    let mut num = 0.0f64;
+    let mut drow = vec![0.0f64; r];
+    for row in 0..m {
+        let dr = &db[row * r..row * r + r];
+        let ur = &u[row * r..row * r + r];
+        for i in 0..r {
+            let di = dr[i] as f64;
+            db_sq += di * di;
+            for j in 0..r {
+                g[i * r + j] += di * dr[j] as f64;
+            }
+        }
+        // drow = dr · (w·scale): the row of dB re-projected through the
+        // lifted estimate; at an exact frame w·scale = I and drow ≡ dr
+        for (j, d) in drow.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (k, &dk) in dr.iter().enumerate() {
+                acc += dk as f64 * w[k * r + j];
+            }
+            *d = acc * scale;
+        }
+        for j in 0..r {
+            let uj = ur[j] as f64;
+            u_sq += uj * uj;
+            num += (drow[j] - dr[j] as f64) * uj;
+        }
+    }
+    let sentinel = num / ((db_sq * u_sq).sqrt() + tiny);
+    // ‖(1/c)·dB·Vᵀ‖² = tr((dBᵀdB)·(VᵀV))/c² over the Theorem-2 value
+    // (n/(c·r))·‖dB‖²
+    let lift_sq: f64 = g.iter().zip(w.iter()).map(|(a, b)| a * b).sum::<f64>() / (c * c);
+    let bound = db_sq * n as f64 / (c * r as f64);
+    let mse_ratio = lift_sq / (bound + tiny);
+    SlotProbe { sentinel, mse_ratio }
+}
+
+/// Online drift detector for the unbiasedness sentinel: exponential
+/// moving estimates of the sentinel's mean and variance, flagging when
+/// the mean sits further from 0 than `z_threshold` standard errors.
+/// The variance floor keeps a perfectly-constant (e.g. exactly zero)
+/// series from dividing by zero; `min_obs` suppresses flags before the
+/// EMAs have burned in.
+#[derive(Clone, Debug)]
+pub struct BiasSentinel {
+    mean: f64,
+    var: f64,
+    count: u64,
+    alpha: f64,
+    z_threshold: f64,
+    min_obs: u64,
+}
+
+impl Default for BiasSentinel {
+    fn default() -> Self {
+        BiasSentinel { mean: 0.0, var: 0.0, count: 0, alpha: 0.2, z_threshold: 4.0, min_obs: 8 }
+    }
+}
+
+impl BiasSentinel {
+    pub fn new(alpha: f64, z_threshold: f64, min_obs: u64) -> Self {
+        BiasSentinel { mean: 0.0, var: 0.0, count: 0, alpha, z_threshold, min_obs }
+    }
+
+    /// Current EMA of the sentinel.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Current z-score of the EMA against its own spread (0 until the
+    /// second observation).
+    pub fn z(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        // the EMA averages ~1/alpha recent points, so its standard
+        // error is sqrt(var·alpha); floor the variance at a fraction of
+        // mean² so exactly-repeating drift still scores finitely
+        let se = (self.var.max(self.mean * self.mean * 1e-12) * self.alpha).sqrt();
+        if se <= 0.0 {
+            if self.mean == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            self.mean / se
+        }
+    }
+
+    /// Fold one sentinel observation in; returns `Some(z)` when the
+    /// drift crosses the threshold (the caller logs the loud line).
+    pub fn observe(&mut self, x: f64) -> Option<f64> {
+        if !x.is_finite() {
+            return None;
+        }
+        self.count += 1;
+        if self.count == 1 {
+            self.mean = x;
+            return None;
+        }
+        let d = x - self.mean;
+        self.mean += self.alpha * d;
+        self.var = (1.0 - self.alpha) * (self.var + self.alpha * d * d);
+        let z = self.z();
+        (self.count >= self.min_obs && z.abs() > self.z_threshold).then_some(z)
+    }
+}
+
+/// Per-run quality-probe state: one [`BiasSentinel`] per slot, the
+/// dedicated probe RNG, the rotating `--probe-every` schedule, and the
+/// precomputed metric-key strings (`mse_ratio[name]` /
+/// `bias_sentinel[name]` — the series the acceptance JSONL carries).
+pub struct QualityProbe {
+    every: u64,
+    rng: Rng,
+    names: Vec<String>,
+    mse_keys: Vec<String>,
+    bias_keys: Vec<String>,
+    sentinels: Vec<BiasSentinel>,
+    last_mse: Vec<f64>,
+    /// Probe-direction scratch, reused across probes.
+    u: Vec<f32>,
+}
+
+/// Stream-id XOR for the dedicated probe RNG: the probe draws must
+/// never touch the trainer/data/task streams, so trained bytes are
+/// bitwise identical with probing on or off.
+pub const PROBE_STREAM: u64 = 0x9B0B_E5EE;
+
+impl QualityProbe {
+    /// `every` = `--probe-every` (0 disables the rotating probe steps;
+    /// the lazy-update boundary gauges still run whenever metrics are
+    /// enabled). The probe RNG derives from `seed ^ PROBE_STREAM`.
+    pub fn new(seed: u64, every: u64, names: Vec<String>) -> Self {
+        let mse_keys = names.iter().map(|n| format!("mse_ratio[{n}]")).collect();
+        let bias_keys = names.iter().map(|n| format!("bias_sentinel[{n}]")).collect();
+        let n = names.len();
+        QualityProbe {
+            every,
+            rng: Rng::new(seed ^ PROBE_STREAM),
+            names,
+            mse_keys,
+            bias_keys,
+            sentinels: vec![BiasSentinel::default(); n],
+            last_mse: vec![f64::NAN; n],
+            u: Vec::new(),
+        }
+    }
+
+    /// Should any probing run at all this step? Boundary gauges ride
+    /// the metrics gate; the rotating probe step additionally needs
+    /// `--probe-every`.
+    pub fn active(&self) -> bool {
+        self.every > 0 || crate::obs::metrics::enabled()
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.names.len()
+    }
+
+    /// The rotating-slot schedule: `Some(slot)` when `step` is a probe
+    /// step (`--probe-every` divides it), rotating over the slots so
+    /// every layer is probed in turn.
+    pub fn rotating_slot(&self, step: u64) -> Option<usize> {
+        if self.every == 0 || self.names.is_empty() || step % self.every != 0 {
+            return None;
+        }
+        Some(((step / self.every) % self.names.len() as u64) as usize)
+    }
+
+    /// Draw a fresh probe direction of `len` elements from the
+    /// dedicated stream into the reusable scratch.
+    pub fn draw_direction(&mut self, len: usize) -> &[f32] {
+        self.u.clear();
+        self.u.reserve(len);
+        for _ in 0..len {
+            self.u.push(self.rng.normal() as f32);
+        }
+        &self.u
+    }
+
+    /// Most recent `mse_ratio` for slot `i` (NaN before the first
+    /// probe) — the context column the rank-adaptation log prints.
+    pub fn last_mse(&self, i: usize) -> f64 {
+        self.last_mse.get(i).copied().unwrap_or(f64::NAN)
+    }
+
+    /// Fold one probe result in: update the slot's sentinel, export
+    /// both series (when metrics are on), and print the loud
+    /// `[obs:quality] bias-drift` line on a z-threshold crossing.
+    pub fn observe(&mut self, i: usize, step: u64, probe: SlotProbe) {
+        self.last_mse[i] = probe.mse_ratio;
+        if crate::obs::metrics::enabled() {
+            crate::obs::metrics::record_value(&self.mse_keys[i], probe.mse_ratio);
+            crate::obs::metrics::record_value(&self.bias_keys[i], probe.sentinel);
+        }
+        if let Some(z) = self.sentinels[i].observe(probe.sentinel) {
+            eprintln!(
+                "[obs:quality] bias-drift {}: sentinel ema {:.3e} is z={z:.1} from 0 at step \
+                 {step} (mse_ratio {:.3}) — the estimator may be biased (frame degradation?)",
+                self.names[i],
+                self.sentinels[i].mean(),
+                probe.mse_ratio,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build an exact Theorem-2 frame V = √(c·n/r)·Q with orthonormal
+    /// columns Q (here: r distinct standard basis columns — trivially
+    /// orthonormal, no QR needed).
+    fn exact_frame(n: usize, r: usize, c: f64) -> Vec<f32> {
+        let s = (c * n as f64 / r as f64).sqrt() as f32;
+        let mut v = vec![0.0f32; n * r];
+        for j in 0..r {
+            v[j * r + j] = s; // row j, col j
+        }
+        v
+    }
+
+    #[test]
+    fn exact_frame_probes_at_optimum() {
+        let (m, n, r, c) = (6usize, 24usize, 3usize, 1.0f64);
+        let v = exact_frame(n, r, c);
+        let db: Vec<f32> = (0..m * r).map(|k| ((k as f32) * 0.37).sin()).collect();
+        let u: Vec<f32> = (0..m * r).map(|k| ((k as f32) * 0.11).cos()).collect();
+        let p = probe_slot(&db, &v, m, n, r, c, &u);
+        assert!(p.sentinel.abs() < 1e-6, "sentinel {} at an exact frame", p.sentinel);
+        assert!((p.mse_ratio - 1.0).abs() < 1e-6, "mse_ratio {} at an exact frame", p.mse_ratio);
+    }
+
+    #[test]
+    fn degraded_frame_moves_both_gauges() {
+        let (m, n, r, c) = (6usize, 24usize, 3usize, 1.0f64);
+        let mut v = exact_frame(n, r, c);
+        // shrink one frame column by 2x: VᵀV loses (c·n/r) on that
+        // diagonal entry — a bias and a variance deficit
+        for row in 0..n {
+            v[row * r] *= 0.5;
+        }
+        let db: Vec<f32> = (0..m * r).map(|k| ((k as f32) * 0.37).sin()).collect();
+        let u: Vec<f32> = (0..m * r).map(|k| ((k as f32) * 0.11).cos()).collect();
+        let p = probe_slot(&db, &v, m, n, r, c, &u);
+        assert!(p.sentinel.abs() > 1e-4, "sentinel {} must move", p.sentinel);
+        assert!((p.mse_ratio - 1.0).abs() > 1e-3, "mse_ratio {} must move", p.mse_ratio);
+    }
+
+    #[test]
+    fn weak_unbiasedness_scale_is_honoured() {
+        // c != 1: the exact frame carries the c into VᵀV = (c·n/r)·I
+        // and both gauges must still sit at the optimum
+        let (m, n, r, c) = (5usize, 32usize, 4usize, 2.0f64);
+        let v = exact_frame(n, r, c);
+        let db: Vec<f32> = (0..m * r).map(|k| 0.1 + k as f32 * 0.01).collect();
+        let u: Vec<f32> = (0..m * r).map(|k| 1.0 - k as f32 * 0.02).collect();
+        let p = probe_slot(&db, &v, m, n, r, c, &u);
+        assert!(p.sentinel.abs() < 1e-6, "sentinel {}", p.sentinel);
+        assert!((p.mse_ratio - 1.0).abs() < 1e-6, "mse_ratio {}", p.mse_ratio);
+    }
+
+    #[test]
+    fn sentinel_flags_persistent_drift_but_not_noise() {
+        let mut s = BiasSentinel::default();
+        let mut rng = Rng::new(11);
+        // zero-mean noise: no flag over a long window
+        let mut flagged = false;
+        for _ in 0..200 {
+            flagged |= s.observe(rng.normal() * 1e-3).is_some();
+        }
+        assert!(!flagged, "zero-mean sentinel must not flag (z={})", s.z());
+        // persistent one-sided drift: must flag
+        let mut s = BiasSentinel::default();
+        let mut hit = None;
+        for k in 0..100 {
+            if let Some(z) = s.observe(1e-3 + rng.normal() * 1e-5) {
+                hit = Some((k, z));
+                break;
+            }
+        }
+        let (k, z) = hit.expect("persistent drift must cross the z threshold");
+        assert!(z.abs() > 4.0, "z={z} at obs {k}");
+    }
+
+    #[test]
+    fn rotating_schedule_covers_every_slot() {
+        let q = QualityProbe::new(7, 4, vec!["a".into(), "b".into(), "c".into()]);
+        assert_eq!(q.rotating_slot(0), Some(0));
+        assert_eq!(q.rotating_slot(1), None);
+        assert_eq!(q.rotating_slot(4), Some(1));
+        assert_eq!(q.rotating_slot(8), Some(2));
+        assert_eq!(q.rotating_slot(12), Some(0));
+        let off = QualityProbe::new(7, 0, vec!["a".into()]);
+        assert_eq!(off.rotating_slot(0), None);
+    }
+
+    #[test]
+    fn probe_direction_is_deterministic_per_seed() {
+        let mut a = QualityProbe::new(42, 2, vec!["x".into()]);
+        let mut b = QualityProbe::new(42, 2, vec!["x".into()]);
+        assert_eq!(a.draw_direction(16), b.draw_direction(16));
+        let mut c = QualityProbe::new(43, 2, vec!["x".into()]);
+        assert_ne!(a.draw_direction(16), c.draw_direction(16));
+    }
+}

@@ -20,6 +20,13 @@
 //! observation sequence), so identical inputs ⇒ identical rank
 //! schedules on every rank and across resumes — the controller
 //! checkpoints its observation history for exactly that reason.
+//!
+//! The decision *log* additionally carries a `mse {…}` context column:
+//! the quality probe's latest Theorem-2-normalized variance gauge for
+//! the slot ([`crate::obs::quality`], NaN before the first probe).
+//! This is observability only — decisions remain a function of the
+//! lift-residual sequence alone, so enabling or disabling the probes
+//! never changes a rank schedule.
 
 /// What the trainer must do *before* the gradient step at a given
 /// global step.

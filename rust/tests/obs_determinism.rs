@@ -1,10 +1,12 @@
 //! The observability non-perturbation contract: turning tracing and
 //! metrics on must not change a single trained bit. The LowRank-LR
 //! engine loop (the same fixture as `tests/engine_alloc.rs`) runs once
-//! with the subsystem off and once with spans + metrics fully on, at
-//! thread counts 1 and 4; the resulting ParamStore must be bitwise
-//! identical. The two tests here share one lock because they both
-//! toggle the process-global enabled flags.
+//! with the subsystem off and once with spans + metrics + monitor
+//! watermark stamps fully on, at thread counts 1 and 4; the resulting
+//! ParamStore must be bitwise identical. The same contract extended to
+//! the estimator-quality probe steps is pinned by
+//! `tests/obs_monitor.rs`. The two tests here share one lock because
+//! they both toggle the process-global enabled flags.
 
 use std::sync::Mutex;
 
@@ -44,13 +46,16 @@ fn run_fixture(threads: usize) -> Vec<u8> {
         if step == 11 {
             // exercise the resample path (spanned in the trainers) too
             engine.subspace.as_mut().unwrap().resample(&mut rng);
+            obs::monitor::stamp(obs::monitor::Phase::Resample, step);
         }
+        obs::monitor::stamp(obs::monitor::Phase::Execute, step);
         engine.draw_perturbations(&mut rng);
         let fp = 0.8 + (step as f32) * 0.003;
         let fm = 0.7 - (step as f32) * 0.002;
         engine
             .step(&mut store, GradSignal::Antithetic { f_plus: fp, f_minus: fm }, 1e-3)
             .unwrap();
+        obs::monitor::stamp(obs::monitor::Phase::Update, step);
     }
     store_bytes(&store)
 }
@@ -71,15 +76,18 @@ fn trained_bits_are_identical_with_obs_on_and_off() {
     for threads in [1usize, 4] {
         obs::span::set_enabled(false);
         obs::metrics::set_enabled(false);
+        obs::monitor::set_enabled(false);
         let off = run_fixture(threads);
 
         obs::span::set_enabled(true);
         obs::metrics::set_enabled(true);
+        obs::monitor::set_enabled(true);
         let on = run_fixture(threads);
 
         // leave the process flags off for any later assertions
         obs::span::set_enabled(false);
         obs::metrics::set_enabled(false);
+        obs::monitor::set_enabled(false);
 
         // assert! (not assert_eq!) so a failure doesn't dump every byte
         assert!(

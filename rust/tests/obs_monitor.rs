@@ -1,0 +1,203 @@
+//! Integration pins for the run-health monitor and the
+//! estimator-quality probes (`obs::monitor` + `obs::quality`):
+//!
+//! * the stall watchdog never flags a slow-but-alive rank, and does
+//!   flag a real stall;
+//! * an injected panic produces a parseable postmortem blackbox that
+//!   carries the span ring;
+//! * the TCP status endpoint serves a valid JSON snapshot line;
+//! * quality probing leaves the trained bytes bitwise identical at
+//!   thread counts 1 and 4 (the probes draw from a dedicated forked
+//!   RNG stream — the non-perturbation contract of `crate::obs`
+//!   extended to the paired probe steps).
+//!
+//! Every test takes one shared lock: the monitor state (enabled flag,
+//! watermark slab, stall counter, watchdog thread, panic hook) is
+//! process-global, and `monitor::configure` is first-call-wins — so
+//! all tests point it at the same blackbox dir.
+
+use std::io::BufRead;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use lowrank_sge::bench_util::engine_fixture;
+use lowrank_sge::coordinator::SubspaceSet;
+use lowrank_sge::estimator::engine::{GradEstimator, GradSignal, MethodShape};
+use lowrank_sge::obs;
+use lowrank_sge::obs::monitor::{self, Phase};
+use lowrank_sge::obs::quality::QualityProbe;
+use lowrank_sge::optim::AdamConfig;
+use lowrank_sge::projection::ProjectorKind;
+use lowrank_sge::rng::Rng;
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> std::sync::MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn blackbox_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("lowrank_sge_obs_monitor");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Shared monitor setup: whichever test runs first wins the
+/// `configure` call; they all pass the same rank and blackbox dir, so
+/// the order doesn't matter.
+fn setup() {
+    monitor::configure(0, Some(&blackbox_dir()));
+}
+
+#[test]
+fn watchdog_tolerates_slow_but_alive_then_flags_a_stall() {
+    let _g = guard();
+    setup();
+    monitor::stamp(Phase::Execute, 0);
+    monitor::start_watchdog(600);
+    // let the watchdog observe fresh progress before taking a baseline
+    // (its poll period is timeout/4 = 150 ms)
+    std::thread::sleep(Duration::from_millis(200));
+    let baseline = monitor::stall_count();
+    // slow but alive: stamps keep arriving at 4x under the timeout
+    for step in 1..=5u64 {
+        monitor::stamp(Phase::Update, step);
+        std::thread::sleep(Duration::from_millis(150));
+    }
+    assert_eq!(
+        monitor::stall_count(),
+        baseline,
+        "watchdog flagged a rank that stamped every 150 ms (timeout 600 ms)"
+    );
+    // now a real stall: no watermark advances for well past the timeout
+    std::thread::sleep(Duration::from_millis(1600));
+    assert!(
+        monitor::stall_count() > baseline,
+        "watchdog missed a 1600 ms stall (timeout 600 ms)"
+    );
+    // progress resumes — re-arms the watchdog for any later test
+    monitor::stamp(Phase::Update, 6);
+}
+
+#[test]
+fn injected_panic_writes_a_parseable_blackbox() {
+    let _g = guard();
+    setup();
+    // record a span so the flight recorder has something to carry
+    obs::span::set_enabled(true);
+    {
+        let _p = obs::phase("test", "blackbox-probe-span", "");
+    }
+    monitor::stamp(Phase::Ckpt, 7);
+    let path = blackbox_dir().join("postmortem.rank0.json");
+    let _ = std::fs::remove_file(&path);
+    let h = std::thread::spawn(|| panic!("injected: obs_monitor blackbox test"));
+    assert!(h.join().is_err(), "the injected panic must unwind its thread");
+    obs::span::set_enabled(false);
+    let text = std::fs::read_to_string(&path)
+        .expect("the panic hook must have written the postmortem blackbox");
+    let line = text.trim();
+    assert!(monitor::check_json_line(line), "blackbox is not valid JSON: {line}");
+    assert!(line.contains("blackbox-probe-span"), "span ring missing from blackbox: {line}");
+    assert!(line.contains("injected: obs_monitor blackbox test"), "{line}");
+    assert!(line.contains("\"watermarks\":["), "{line}");
+    assert!(line.contains("\"metrics\":{"), "{line}");
+}
+
+#[test]
+fn status_endpoint_serves_one_valid_snapshot_line() {
+    let _g = guard();
+    setup();
+    monitor::stamp(Phase::Eval, 12);
+    // port 0: the OS picks — serve_status returns the bound address
+    let bound = monitor::serve_status("127.0.0.1:0").expect("binding the status endpoint");
+    let stream = std::net::TcpStream::connect(bound).expect("connecting to the endpoint");
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut line = String::new();
+    std::io::BufReader::new(stream).read_line(&mut line).expect("reading one snapshot");
+    let line = line.trim();
+    assert!(monitor::check_json_line(line), "endpoint snapshot is not valid JSON: {line}");
+    assert!(line.contains("\"registry\":{"), "{line}");
+    assert!(line.contains("\"watermarks\":["), "{line}");
+    assert!(line.contains("\"eval\""), "the stamped phase must appear: {line}");
+}
+
+// ------------------------------------------------ probing non-perturbation
+
+const DIMS: [(usize, usize, usize); 3] = [(48, 32, 4), (32, 32, 2), (40, 24, 8)];
+const HEAD_LEN: usize = 24;
+const STEPS: u64 = 23;
+
+/// The `tests/obs_determinism.rs` engine fixture with the trainers'
+/// rotating quality probe spliced in at the same point in the step
+/// loop (a deterministic synthetic dB stands in for the reduced
+/// gradient — `probe_quality` is read-only either way, so only the
+/// probe RNG could possibly leak into training).
+fn run_fixture(threads: usize, probe_every: u64) -> Vec<u8> {
+    lowrank_sge::kernel::set_global_threads(threads);
+    let (mut store, slots) = engine_fixture(&DIMS, HEAD_LEN);
+    let sub = SubspaceSet::from_slots(slots, ProjectorKind::Stiefel, 1.0);
+    let mut engine = GradEstimator::new(
+        MethodShape::LowRankLr,
+        1e-2,
+        Some(sub),
+        Vec::new(),
+        Vec::new(),
+        Some((DIMS.len(), HEAD_LEN, AdamConfig::default())),
+    );
+    let names: Vec<String> = (0..DIMS.len()).map(|i| format!("m{i}")).collect();
+    let mut quality = QualityProbe::new(7, probe_every, names);
+    let mut rng = Rng::new(7);
+    engine.subspace.as_mut().unwrap().resample(&mut rng);
+    for step in 0..STEPS {
+        if step == 11 {
+            engine.subspace.as_mut().unwrap().resample(&mut rng);
+        }
+        engine.draw_perturbations(&mut rng);
+        let fp = 0.8 + (step as f32) * 0.003;
+        let fm = 0.7 - (step as f32) * 0.002;
+        engine
+            .step(&mut store, GradSignal::Antithetic { f_plus: fp, f_minus: fm }, 1e-3)
+            .unwrap();
+        if let Some(i) = quality.rotating_slot(step) {
+            let (m, _n, r) = DIMS[i];
+            let len = m * r;
+            let db: Vec<f32> =
+                (0..len).map(|j| ((j as f32) * 0.37 + (step as f32) * 0.11).sin()).collect();
+            let u = quality.draw_direction(len).to_vec();
+            if let Some(p) = engine.probe_quality(i, &db, &u) {
+                quality.observe(i, step, p);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for i in 0..store.len() {
+        for v in store.f32(i).unwrap() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[test]
+fn trained_bytes_identical_with_probing_enabled() {
+    let _g = guard();
+    for threads in [1usize, 4] {
+        obs::span::set_enabled(false);
+        obs::metrics::set_enabled(false);
+        let plain = run_fixture(threads, 0);
+
+        obs::span::set_enabled(true);
+        obs::metrics::set_enabled(true);
+        let probed = run_fixture(threads, 4);
+        obs::span::set_enabled(false);
+        obs::metrics::set_enabled(false);
+
+        // assert! (not assert_eq!) so a failure doesn't dump every byte
+        assert!(
+            plain == probed,
+            "quality probing perturbed the trained bytes at {threads} thread(s)"
+        );
+        assert!(!plain.is_empty() && plain.iter().any(|&b| b != 0));
+    }
+}
