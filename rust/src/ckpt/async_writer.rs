@@ -78,6 +78,19 @@ impl AsyncCheckpointer {
         Ok(())
     }
 
+    /// Non-blocking error probe: if the in-flight save has already
+    /// finished, join it now and surface its result; if it is still
+    /// running (or there is none), return `Ok(())` immediately. This
+    /// lets a scheduler interleaving many sessions detect a failed
+    /// background write on the *failing* session's next slice instead
+    /// of stalling every tenant behind a blocking `drain`.
+    pub fn poll(&mut self) -> Result<()> {
+        if self.pending.as_ref().is_some_and(|p| p.handle.is_finished()) {
+            return self.drain();
+        }
+        Ok(())
+    }
+
     /// Join the in-flight save (if any), surfacing its error — called
     /// by `submit` before queueing the next save and by the trainers at
     /// shutdown, so no write failure is ever silently dropped.

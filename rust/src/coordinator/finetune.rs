@@ -61,6 +61,31 @@ impl FinetuneMethod {
         }
     }
 
+    /// Parse the CLI/wire spelling (`zero-shot`, `vanilla-lr`,
+    /// `vanilla-ipa`, `<sampler>-lowrank-lr`, `<sampler>-lowrank-ipa`) —
+    /// the inverse of [`FinetuneMethod::name`]. Shared by the `finetune`
+    /// subcommand and the serve daemon's job-submission protocol.
+    pub fn parse(s: &str) -> Result<FinetuneMethod> {
+        Ok(match s {
+            "zero-shot" => FinetuneMethod::ZeroShot,
+            "vanilla-lr" => FinetuneMethod::VanillaLr,
+            "vanilla-ipa" => FinetuneMethod::VanillaIpa,
+            other => {
+                if let Some(kind) =
+                    other.strip_suffix("-lowrank-lr").and_then(ProjectorKind::parse)
+                {
+                    FinetuneMethod::LowRankLr(kind)
+                } else if let Some(kind) =
+                    other.strip_suffix("-lowrank-ipa").and_then(ProjectorKind::parse)
+                {
+                    FinetuneMethod::LowRankIpa(kind)
+                } else {
+                    bail!("unknown method {other:?} (try stiefel-lowrank-lr, vanilla-ipa, …)")
+                }
+            }
+        })
+    }
+
     /// The Table 1 row order.
     pub fn table1_rows() -> Vec<FinetuneMethod> {
         vec![
@@ -163,6 +188,32 @@ enum Src {
     Labels,
 }
 
+/// Extracted step-loop state: everything `run()` used to keep on its
+/// stack between iterations — the task, the loop RNG stream, the lazy
+/// controller, the step cursor, and the metrics log. Holding it in a
+/// struct lets a scheduler ([`crate::serve`]) interleave
+/// [`FinetuneTrainer::step_once`] calls across many jobs while each
+/// trainer retraces the exact operation sequence of an uninterrupted
+/// [`FinetuneTrainer::run`].
+pub struct FinetuneLoop {
+    task: ClassifyTask,
+    log: MetricsLog,
+    controller: LazyUpdateController,
+    rng: Rng,
+    step: u64,
+    /// ZeroShot short-circuits at `begin` (one evaluation, zero steps);
+    /// `finish_run` returns this accuracy without the trainer epilogue,
+    /// exactly like the pre-seam early return.
+    zero_shot_acc: Option<f64>,
+}
+
+impl FinetuneLoop {
+    /// Next step index to run (`== cfg.steps` once exhausted).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+}
+
 pub struct FinetuneTrainer {
     cfg: FinetuneConfig,
     grad_art: Option<Arc<LoadedArtifact>>,
@@ -191,6 +242,22 @@ pub struct FinetuneTrainer {
 
 impl FinetuneTrainer {
     pub fn new(rt: &mut Runtime, artifacts_dir: &Path, cfg: FinetuneConfig) -> Result<Self> {
+        Self::with_base(rt, artifacts_dir, cfg, None)
+    }
+
+    /// Construct over a caller-provided parameter store. The serve
+    /// layer's base-model cache hands out copy-on-write clones
+    /// ([`ParamStore::cow_clone`]) of one loaded base, so N concurrent
+    /// jobs share the `Arc` payloads until each job's first divergent
+    /// write. The store must hold the same tensors
+    /// `ParamStore::load_init(artifacts_dir, "clf", manifest)` would
+    /// produce — the cache keys on exactly that identity.
+    pub fn with_base(
+        rt: &mut Runtime,
+        artifacts_dir: &Path,
+        cfg: FinetuneConfig,
+        base: Option<ParamStore>,
+    ) -> Result<Self> {
         let eval_art = rt.load("clf_eval")?;
         let artifact_name = match cfg.method {
             FinetuneMethod::ZeroShot => None,
@@ -201,7 +268,10 @@ impl FinetuneTrainer {
         };
         let grad_art = artifact_name.map(|n| rt.load(n)).transpose()?;
         let manifest_for_store = grad_art.as_ref().map(|a| &a.manifest).unwrap_or(&eval_art.manifest);
-        let store = ParamStore::load_init(artifacts_dir, "clf", manifest_for_store)?;
+        let store = match base {
+            Some(s) => s,
+            None => ParamStore::load_init(artifacts_dir, "clf", manifest_for_store)?,
+        };
         let adam_cfg = AdamConfig::default();
 
         let kind = match cfg.method {
@@ -393,22 +463,44 @@ impl FinetuneTrainer {
     }
 
     /// Run fine-tuning; returns accuracy and the loss series.
+    ///
+    /// A thin driver over the session seam: [`Self::begin`], then
+    /// [`Self::step_once`] until exhausted, then [`Self::finish_run`].
+    /// The serve daemon ([`crate::serve`]) schedules the same three
+    /// calls interleaved across jobs, so a single-job serve run
+    /// retraces this exact sequence — bitwise, checkpoints included.
     pub fn run(&mut self) -> Result<FinetuneResult> {
+        let mut lp = self.begin()?;
+        while self.step_once(&mut lp)? {}
+        self.finish_run(lp)
+    }
+
+    /// Open the training loop: apply the thread config, build the
+    /// deterministic task, fork the loop RNG stream, and restore a
+    /// checkpoint when resuming. For ZeroShot the evaluation happens
+    /// here and the returned loop is already exhausted.
+    pub fn begin(&mut self) -> Result<FinetuneLoop> {
         let cfg = self.cfg.clone();
         if cfg.threads > 0 {
             crate::kernel::set_global_threads(cfg.threads);
         }
         let task = ClassifyTask::by_name(&cfg.task, self.vocab, self.seq, cfg.seed ^ 0x7A5C)
             .with_context(|| format!("unknown task {}", cfg.task))?;
-        let mut log = MetricsLog::default();
+        let log = MetricsLog::default();
+        let controller = LazyUpdateController::new(cfg.k_interval);
+        let mut rng = self.rng.fork(1);
 
         if cfg.method == FinetuneMethod::ZeroShot {
             let acc = self.evaluate(&task)?;
-            return Ok(FinetuneResult { method: cfg.method, task: cfg.task, accuracy: acc, log });
+            return Ok(FinetuneLoop {
+                task,
+                log,
+                controller,
+                rng,
+                step: cfg.steps,
+                zero_shot_acc: Some(acc),
+            });
         }
-
-        let controller = LazyUpdateController::new(cfg.k_interval);
-        let mut rng = self.rng.fork(1);
 
         // resume: restore Θ, subspace, optimizer moments, and the loop
         // RNG so the continuation is the exact sequence the interrupted
@@ -431,29 +523,42 @@ impl FinetuneTrainer {
                 );
             }
         }
+        Ok(FinetuneLoop { task, log, controller, rng, step: start_step, zero_shot_acc: None })
+    }
 
-        for step in start_step..cfg.steps {
+    /// Advance the loop by exactly one optimizer step (resample, batch
+    /// draw, artifact execute, engine update, logging, maybe-save).
+    /// Returns `false` once every step has run — the loop state is then
+    /// ready for [`Self::finish_run`]. The operation and RNG-stream
+    /// sequence is the pre-seam inline loop, verbatim.
+    pub fn step_once(&mut self, lp: &mut FinetuneLoop) -> Result<bool> {
+        if lp.step >= self.cfg.steps {
+            return Ok(false);
+        }
+        let cfg = self.cfg.clone();
+        let step = lp.step;
+        {
             let t0 = Instant::now();
             // lazy update: resample V for the low-rank methods. The ZO
             // path keeps Θ always-lifted, so only (V, B, Adam) reset —
             // resample does all three; IPA lifts Θ first.
-            if controller.action(step) == LazyAction::ResampleSubspace {
+            if lp.controller.action(step) == LazyAction::ResampleSubspace {
                 let _p = crate::obs::phase("trainer", "resample", "step.resample_s");
                 monitor::stamp(monitor::Phase::Resample, step);
                 if let Some(sub) = self.engine.subspace.as_mut() {
                     if step > 0 && matches!(cfg.method, FinetuneMethod::LowRankIpa(_)) {
                         sub.lift(&mut self.store)?;
                     }
-                    sub.resample(&mut rng);
+                    sub.resample(&mut lp.rng);
                 }
             }
 
-            let (tokens, labels) = task.train_batch(self.batch, &mut rng);
+            let (tokens, labels) = lp.task.train_batch(self.batch, &mut lp.rng);
 
             // per-step fresh randomness for the ZO paths, drawn into
             // the engine's reusable buffers (head Z first, then slots —
             // the canonical stream order)
-            self.engine.draw_perturbations(&mut rng);
+            self.engine.draw_perturbations(&mut lp.rng);
 
             // assemble inputs — every payload is staged by Arc bump
             let art = self.grad_art.as_ref().unwrap().clone();
@@ -557,7 +662,7 @@ impl FinetuneTrainer {
             };
             drop(_p_update);
 
-            log.push(StepRecord {
+            lp.log.push(StepRecord {
                 step,
                 loss: stats.loss,
                 lr: match cfg.method {
@@ -582,10 +687,26 @@ impl FinetuneTrainer {
             if cfg.ckpt.should_save(step) {
                 monitor::stamp(monitor::Phase::Ckpt, step);
                 let dir = cfg.ckpt.dir.as_ref().expect("should_save implies dir");
-                self.save_state(dir, step + 1, cfg.ckpt.keep_last, &rng)?;
+                self.save_state(dir, step + 1, cfg.ckpt.keep_last, &lp.rng)?;
             }
         }
+        lp.step += 1;
+        Ok(true)
+    }
 
+    /// Close the loop: drain pending async saves (surfacing any write
+    /// error), final lift for the IPA low-rank path, finite check,
+    /// evaluation, and the observability epilogue.
+    pub fn finish_run(&mut self, lp: FinetuneLoop) -> Result<FinetuneResult> {
+        let cfg = self.cfg.clone();
+        if let Some(acc) = lp.zero_shot_acc {
+            return Ok(FinetuneResult {
+                method: cfg.method,
+                task: cfg.task,
+                accuracy: acc,
+                log: lp.log,
+            });
+        }
         // surface any pending async save error before declaring success
         self.ckpt_writer.drain()?;
         // final lift for the IPA low-rank path
@@ -598,12 +719,21 @@ impl FinetuneTrainer {
         let acc = {
             let _p = crate::obs::phase("trainer", "eval", "step.eval_s");
             monitor::stamp(monitor::Phase::Eval, cfg.steps);
-            self.evaluate(&task)?
+            self.evaluate(&lp.task)?
         };
         // observability epilogue (no-op unless --trace-out/--metrics-out);
         // fine-tuning is single-process, so the gather is a world-1 copy
         super::ddp::export_run_obs(&mut super::ddp::Collective::in_process())?;
-        Ok(FinetuneResult { method: cfg.method, task: cfg.task, accuracy: acc, log })
+        Ok(FinetuneResult { method: cfg.method, task: cfg.task, accuracy: acc, log: lp.log })
+    }
+
+    /// Non-blocking check on the background checkpoint writer: if the
+    /// in-flight save has already finished, join it and surface its
+    /// result; never blocks on one still running. The serve scheduler
+    /// calls this every step, so a job whose checkpoint write failed
+    /// reports `failed` promptly instead of at its next save.
+    pub fn poll_saves(&mut self) -> Result<()> {
+        self.ckpt_writer.poll()
     }
 
     /// Commit the full fine-tuning state (Θ, optional subspace, head and

@@ -30,6 +30,11 @@
 //!   wire-dtype lane.
 //! * [`metrics`] — step records and CSV emission for the figure
 //!   harnesses.
+//! * [`session`] — [`TrainSession`]: both trainers' step loops lifted
+//!   into an externally-driven construct → `step()` → `finish()` seam.
+//!   The standalone subcommands and the [`crate::serve`] daemon drive
+//!   the *same* object, so a single-job serve run is bitwise identical
+//!   to the standalone subcommand at the same seed.
 //!
 //! Both trainers checkpoint through [`crate::ckpt`]: `CkptOptions` on
 //! their configs controls `save_every`/`dir`/`resume`/retention, saves
@@ -44,13 +49,17 @@ mod ddp;
 mod finetune;
 mod metrics;
 mod pretrain;
+mod session;
 mod subspace;
 
 pub use ddp::{
     allreduce_mean, allreduce_mean_with, export_run_obs, BatchProducer, Collective, Shard,
     LEADER_RANK, PIPELINE_WINDOW,
 };
-pub use finetune::{FinetuneConfig, FinetuneMethod, FinetuneResult, FinetuneTrainer};
+pub use finetune::{FinetuneConfig, FinetuneLoop, FinetuneMethod, FinetuneResult, FinetuneTrainer};
 pub use metrics::{MetricsLog, StepRecord};
-pub use pretrain::{PretrainConfig, PretrainResult, PretrainTrainer};
+pub use pretrain::{PretrainConfig, PretrainLoop, PretrainResult, PretrainTrainer};
+pub use session::{
+    FinetuneSession, PretrainSession, SessionStatus, SessionSummary, TrainSession,
+};
 pub use subspace::{FullSlot, MatrixSlot, SubspaceSet};

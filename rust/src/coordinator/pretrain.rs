@@ -142,6 +142,29 @@ enum Src {
     Tokens,
 }
 
+/// Extracted step-loop state: everything `run()` used to keep on its
+/// stack between iterations — the lazy controller, LR schedule, the
+/// background batch producers, the held-out eval sets, the step
+/// cursor, and the metrics log. A scheduler ([`crate::serve`]) can
+/// interleave [`PretrainTrainer::step_once`] calls across jobs; each
+/// trainer retraces the exact operation sequence of an uninterrupted
+/// [`PretrainTrainer::run`].
+pub struct PretrainLoop {
+    controller: LazyUpdateController,
+    schedule: CosineSchedule,
+    producer: BatchProducer,
+    eval_sets: Vec<Vec<i32>>,
+    log: MetricsLog,
+    step: u64,
+}
+
+impl PretrainLoop {
+    /// Next step index to run (`== cfg.steps` once exhausted).
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+}
+
 /// Result summary.
 pub struct PretrainResult {
     pub log: MetricsLog,
@@ -387,7 +410,21 @@ impl PretrainTrainer {
 
     /// Run the full training loop (optionally resuming from a
     /// checkpoint first — see [`CkptOptions`]).
+    ///
+    /// A thin driver over the session seam: [`Self::begin`], then
+    /// [`Self::step_once`] until exhausted, then [`Self::finish_run`] —
+    /// the same three calls the serve daemon schedules, so a scheduled
+    /// run retraces this exact sequence bitwise.
     pub fn run(&mut self) -> Result<PretrainResult> {
+        let mut lp = self.begin()?;
+        while self.step_once(&mut lp)? {}
+        self.finish_run(lp)
+    }
+
+    /// Open the training loop: apply the thread config, build the
+    /// controller and LR schedule, restore a checkpoint when resuming,
+    /// and spawn this rank's batch-producer slice.
+    pub fn begin(&mut self) -> Result<PretrainLoop> {
         let cfg = self.cfg.clone();
         if cfg.threads > 0 {
             crate::kernel::set_global_threads(cfg.threads);
@@ -446,10 +483,30 @@ impl PretrainTrainer {
         )
         .eval_batches(cfg.eval_batches, cfg.seed);
 
-        let mut log = MetricsLog::default();
-        for step in start_step..cfg.steps {
+        Ok(PretrainLoop {
+            controller,
+            schedule,
+            producer,
+            eval_sets,
+            log: MetricsLog::default(),
+            step: start_step,
+        })
+    }
+
+    /// Advance the loop by exactly one optimizer step (resample
+    /// boundary, shard executes, all-reduce, clip, engine update,
+    /// probes, logging, maybe-save + barrier). Returns `false` once
+    /// every step has run. The operation sequence — collective calls
+    /// included — is the pre-seam inline loop, verbatim.
+    pub fn step_once(&mut self, lp: &mut PretrainLoop) -> Result<bool> {
+        if lp.step >= self.cfg.steps {
+            return Ok(false);
+        }
+        let cfg = self.cfg.clone();
+        let step = lp.step;
+        {
             let t0 = Instant::now();
-            if controller.action(step) == LazyAction::ResampleSubspace {
+            if lp.controller.action(step) == LazyAction::ResampleSubspace {
                 let _p = crate::obs::phase("trainer", "resample", "step.resample_s");
                 monitor::stamp(monitor::Phase::Resample, step);
                 if step > 0 {
@@ -467,7 +524,7 @@ impl PretrainTrainer {
                     // rank decisions happen exactly here: B is spent
                     // (lifted), Adam is about to reset, V is about to be
                     // redrawn — a shrink is a pure re-layout
-                    self.apply_rank_adaptation(step, &controller)?;
+                    self.apply_rank_adaptation(step, &lp.controller)?;
                 }
                 self.engine.subspace.as_mut().expect("subspace").resample(&mut self.rng);
             }
@@ -475,13 +532,13 @@ impl PretrainTrainer {
             // before the first shrink) in sync with the B the engine
             // updated last step
             self.engine.subspace.as_mut().expect("subspace").refresh_stage();
-            let lr = schedule.lr(step);
+            let lr = lp.schedule.lr(step);
 
             // one shard per local worker; all-reduce gradients across
             // shards and (when distributed) across ranks — one combine
             // order either way, so the reduced gradients are bitwise
             // identical to the single-process run
-            let shards = producer.next_step_shards();
+            let shards = lp.producer.next_step_shards();
             let n_shards = shards.len();
             let n_b = self.db_outs.len();
             let n_f = self.f_douts.len();
@@ -561,7 +618,7 @@ impl PretrainTrainer {
                 self.probe_slot_quality(i, step);
             }
 
-            log.push(StepRecord {
+            lp.log.push(StepRecord {
                 step,
                 loss: stats.loss,
                 lr,
@@ -573,9 +630,9 @@ impl PretrainTrainer {
                 let ev = {
                     let _p = crate::obs::phase("trainer", "eval", "step.eval_s");
                     monitor::stamp(monitor::Phase::Eval, step);
-                    self.eval_loss(&eval_sets)?
+                    self.eval_loss(&lp.eval_sets)?
                 };
-                log.push_eval(step + 1, ev);
+                lp.log.push_eval(step + 1, ev);
                 if crate::obs::metrics::enabled() && self.collective.is_leader() {
                     // measured memory ledger beside the loss line: tracked
                     // allocator (0 when not installed as #[global_allocator])
@@ -607,6 +664,14 @@ impl PretrainTrainer {
                 self.collective.barrier()?;
             }
         }
+        lp.step += 1;
+        Ok(true)
+    }
+
+    /// Close the loop: drain pending async saves (surfacing any write
+    /// error), final lift so the stored Θ is the trained model, finite
+    /// check, observability epilogue, and producer shutdown.
+    pub fn finish_run(&mut self, lp: PretrainLoop) -> Result<PretrainResult> {
         // surface any pending async save error before declaring success
         self.ckpt_writer.drain()?;
         // final lift so the stored Θ is the trained model
@@ -616,15 +681,23 @@ impl PretrainTrainer {
         // gather every rank's metrics over the collective, export and
         // leader-merge the Chrome traces
         super::ddp::export_run_obs(&mut self.collective)?;
-        producer.shutdown();
+        lp.producer.shutdown();
 
-        let final_eval_loss = log.evals.last().map(|&(_, v)| v);
+        let final_eval_loss = lp.log.evals.last().map(|&(_, v)| v);
         Ok(PretrainResult {
             final_eval_loss,
             params_elements: self.store.num_elements(),
             b_elements: self.subspace().b_elements(),
-            log,
+            log: lp.log,
         })
+    }
+
+    /// Non-blocking check on the background checkpoint writer: joins a
+    /// save that has already finished (surfacing its error), never
+    /// blocks on one still in flight. See
+    /// [`crate::ckpt::AsyncCheckpointer::poll`].
+    pub fn poll_saves(&mut self) -> Result<()> {
+        self.ckpt_writer.poll()
     }
 
     /// Feed the just-measured lift residuals to the rank controller and

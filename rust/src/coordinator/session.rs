@@ -1,0 +1,204 @@
+//! Training sessions: the trainer-agnostic seam the serve daemon
+//! schedules.
+//!
+//! A [`TrainSession`] is one training job reshaped from a blocking
+//! `run()` call into an externally-driven state machine: construct →
+//! [`TrainSession::step`] until it reports
+//! [`SessionStatus::StepsExhausted`] → [`TrainSession::finish`]. Each
+//! session owns its full per-job state — `GradEstimator` (B/V/Adam
+//! moments), `AsyncCheckpointer` directory, RNG streams, task sampler —
+//! so a scheduler may interleave `step()` calls across sessions in any
+//! order without perturbing any one session's trajectory. The step and
+//! epilogue bodies are the *same code* the standalone `finetune` /
+//! `pretrain` subcommands execute (those subcommands are now thin
+//! drivers over this seam), which is what pins the bitwise contract:
+//! a single-job serve run produces byte-identical checkpoints to the
+//! standalone subcommand at the same seed.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::finetune::{FinetuneConfig, FinetuneLoop, FinetuneResult, FinetuneTrainer};
+use super::pretrain::{PretrainConfig, PretrainLoop, PretrainResult, PretrainTrainer};
+use crate::model::ParamStore;
+use crate::runtime::Runtime;
+
+/// Outcome of one scheduled step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    /// The session consumed one optimizer step; more remain.
+    Running,
+    /// Every step has run; call [`TrainSession::finish`] next.
+    StepsExhausted,
+}
+
+/// What a finished session reports back (over the daemon's `status` /
+/// `fetch` verbs, or to the standalone driver).
+#[derive(Clone, Debug)]
+pub struct SessionSummary {
+    /// `"finetune"` or `"pretrain"`.
+    pub kind: &'static str,
+    /// Final eval metric: accuracy (finetune) or eval loss (pretrain).
+    pub metric: Option<f64>,
+    /// Mean training loss over the last 10 recorded steps.
+    pub tail_loss: Option<f32>,
+    /// Step cursor at finish (== configured steps unless zero-shot).
+    pub steps_done: u64,
+}
+
+/// One schedulable training job. Implementations must keep `step()`
+/// re-entrant with respect to *other* sessions: no hidden global
+/// mutable state, so round-robin interleaving is safe and
+/// deterministic per session.
+pub trait TrainSession {
+    /// Run exactly one optimizer step (or report exhaustion).
+    fn step(&mut self) -> Result<SessionStatus>;
+
+    /// `(next step index, total configured steps)`.
+    fn progress(&self) -> (u64, u64);
+
+    /// Non-blocking background-IO probe: surfaces an async checkpoint
+    /// write error as soon as the writer thread has finished, without
+    /// stalling the scheduler behind a join. A failure here fails this
+    /// session only.
+    fn poll_saves(&mut self) -> Result<()>;
+
+    /// Epilogue — drain saves, final subspace lift, eval. Consumes the
+    /// loop state; calling `step()` afterwards errors.
+    fn finish(&mut self) -> Result<SessionSummary>;
+}
+
+/// [`TrainSession`] over [`FinetuneTrainer`] — the serve daemon's
+/// tenant workload.
+pub struct FinetuneSession {
+    trainer: FinetuneTrainer,
+    lp: Option<FinetuneLoop>,
+    total: u64,
+    result: Option<FinetuneResult>,
+}
+
+impl FinetuneSession {
+    pub fn new(rt: &mut Runtime, artifacts_dir: &Path, cfg: FinetuneConfig) -> Result<Self> {
+        Self::with_base(rt, artifacts_dir, cfg, None)
+    }
+
+    /// Build a session whose initial parameters come from `base` (a
+    /// copy-on-write checkout of a cached base model) instead of
+    /// re-reading `artifacts/`. `None` falls back to the standalone
+    /// load path.
+    pub fn with_base(
+        rt: &mut Runtime,
+        artifacts_dir: &Path,
+        cfg: FinetuneConfig,
+        base: Option<ParamStore>,
+    ) -> Result<Self> {
+        let total = cfg.steps;
+        let mut trainer = FinetuneTrainer::with_base(rt, artifacts_dir, cfg, base)?;
+        let lp = trainer.begin()?;
+        Ok(FinetuneSession { trainer, lp: Some(lp), total, result: None })
+    }
+
+    /// Full result of a finished session (None before `finish`).
+    pub fn result(&self) -> Option<&FinetuneResult> {
+        self.result.as_ref()
+    }
+
+    pub fn into_result(self) -> Option<FinetuneResult> {
+        self.result
+    }
+}
+
+impl TrainSession for FinetuneSession {
+    fn step(&mut self) -> Result<SessionStatus> {
+        let lp = self.lp.as_mut().context("finetune session already finished")?;
+        if self.trainer.step_once(lp)? {
+            Ok(SessionStatus::Running)
+        } else {
+            Ok(SessionStatus::StepsExhausted)
+        }
+    }
+
+    fn progress(&self) -> (u64, u64) {
+        (self.lp.as_ref().map_or(self.total, |l| l.step()), self.total)
+    }
+
+    fn poll_saves(&mut self) -> Result<()> {
+        self.trainer.poll_saves()
+    }
+
+    fn finish(&mut self) -> Result<SessionSummary> {
+        let lp = self.lp.take().context("finetune session already finished")?;
+        let steps_done = lp.step();
+        let res = self.trainer.finish_run(lp)?;
+        let summary = SessionSummary {
+            kind: "finetune",
+            metric: Some(res.accuracy),
+            tail_loss: res.log.tail_mean_loss(10),
+            steps_done,
+        };
+        self.result = Some(res);
+        Ok(summary)
+    }
+}
+
+/// [`TrainSession`] over [`PretrainTrainer`]. The daemon currently
+/// schedules fine-tune tenants only, but the standalone `pretrain`
+/// subcommand drives this same seam, keeping both trainers on one
+/// step-loop shape.
+pub struct PretrainSession {
+    trainer: PretrainTrainer,
+    lp: Option<PretrainLoop>,
+    total: u64,
+    result: Option<PretrainResult>,
+}
+
+impl PretrainSession {
+    pub fn new(rt: &mut Runtime, artifacts_dir: &Path, cfg: PretrainConfig) -> Result<Self> {
+        let total = cfg.steps;
+        let mut trainer = PretrainTrainer::new(rt, artifacts_dir, cfg)?;
+        let lp = trainer.begin()?;
+        Ok(PretrainSession { trainer, lp: Some(lp), total, result: None })
+    }
+
+    pub fn result(&self) -> Option<&PretrainResult> {
+        self.result.as_ref()
+    }
+
+    pub fn into_result(self) -> Option<PretrainResult> {
+        self.result
+    }
+}
+
+impl TrainSession for PretrainSession {
+    fn step(&mut self) -> Result<SessionStatus> {
+        let lp = self.lp.as_mut().context("pretrain session already finished")?;
+        if self.trainer.step_once(lp)? {
+            Ok(SessionStatus::Running)
+        } else {
+            Ok(SessionStatus::StepsExhausted)
+        }
+    }
+
+    fn progress(&self) -> (u64, u64) {
+        (self.lp.as_ref().map_or(self.total, |l| l.step()), self.total)
+    }
+
+    fn poll_saves(&mut self) -> Result<()> {
+        self.trainer.poll_saves()
+    }
+
+    fn finish(&mut self) -> Result<SessionSummary> {
+        let lp = self.lp.take().context("pretrain session already finished")?;
+        let steps_done = lp.step();
+        let res = self.trainer.finish_run(lp)?;
+        let summary = SessionSummary {
+            kind: "pretrain",
+            metric: res.final_eval_loss.map(f64::from),
+            tail_loss: res.log.tail_mean_loss(10),
+            steps_done,
+        };
+        self.result = Some(res);
+        Ok(summary)
+    }
+}

@@ -18,7 +18,7 @@
 //!   `LOWRANK_THREADS`, default: available parallelism).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -59,6 +59,24 @@ impl Latch {
             r = self.cv.wait(r).unwrap();
         }
     }
+}
+
+/// Job attribution for pool work: the serve scheduler tags the batches
+/// of the session slice it is about to run, so `pool_task_count` /
+/// queue-wait series split per tenant in the metrics registry (and
+/// Chrome traces group by job). −1 = untagged. Attribution only — the
+/// tag never influences scheduling or results.
+static CURRENT_JOB: AtomicI64 = AtomicI64::new(-1);
+
+/// Tag subsequent pool batches with a job id (`None` clears the tag).
+pub fn set_task_job(job: Option<u64>) {
+    CURRENT_JOB.store(job.map_or(-1, |j| j as i64), Ordering::Relaxed);
+}
+
+/// The job id subsequent pool batches are attributed to, if any.
+pub fn current_task_job() -> Option<u64> {
+    let j = CURRENT_JOB.load(Ordering::Relaxed);
+    (j >= 0).then_some(j as u64)
 }
 
 fn worker_loop(shared: Arc<Shared>) {
@@ -102,9 +120,12 @@ impl KernelPool {
             shutdown: AtomicBool::new(false),
         });
         let workers = (1..threads)
-            .map(|_| {
+            .map(|i| {
                 let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(shared))
+                std::thread::Builder::new()
+                    .name(format!("kernel-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawning kernel pool worker thread")
             })
             .collect();
         KernelPool { shared, workers, threads }
@@ -128,6 +149,12 @@ impl KernelPool {
             return;
         }
         obs::metrics::POOL_TASKS.add(tasks.len() as u64);
+        // Per-job attribution series (serve tenants); one name alloc per
+        // batch, and only when metrics are on and a job tag is set.
+        let job = if obs::metrics::enabled() { current_task_job() } else { None };
+        if let Some(j) = job {
+            obs::metrics::record_value(&format!("pool_task_count_job{j}"), tasks.len() as f64);
+        }
         if self.threads == 1 || tasks.len() == 1 {
             for t in tasks {
                 let _span = obs::span("kernel", "task");
@@ -140,6 +167,12 @@ impl KernelPool {
         // keeps the enqueue loop allocation-identical), observed at each
         // task's execution start. `None` when observability is off.
         let enqueued_at = if obs::metrics::enabled() { Some(Instant::now()) } else { None };
+        // Queue-wait split per job: the series name is shared by every
+        // task closure of the batch (one Arc clone each).
+        let job_wait_series: Option<Arc<String>> = match (&enqueued_at, job) {
+            (Some(_), Some(j)) => Some(Arc::new(format!("pool_queue_wait_us_job{j}"))),
+            _ => None,
+        };
 
         type Payload = Box<dyn std::any::Any + Send>;
         let latch = Arc::new(Latch::new(tasks.len()));
@@ -152,9 +185,14 @@ impl KernelPool {
                 let t: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(t) };
                 let latch = latch.clone();
                 let first_panic = first_panic.clone();
+                let job_wait_series = job_wait_series.clone();
                 q.push_back(Box::new(move || {
                     if let Some(t0) = enqueued_at {
-                        obs::metrics::POOL_QUEUE_WAIT.observe(t0.elapsed().as_nanos() as u64);
+                        let wait_ns = t0.elapsed().as_nanos() as u64;
+                        obs::metrics::POOL_QUEUE_WAIT.observe(wait_ns);
+                        if let Some(name) = &job_wait_series {
+                            obs::metrics::record_value(name, wait_ns as f64 / 1e3);
+                        }
                     }
                     let _span = obs::span("kernel", "task");
                     if let Err(payload) =

@@ -79,6 +79,18 @@
 //!   tensors), the [`projection`] batch sampler, and the
 //!   [`coordinator`] slot fan-out + DDP all-reduce are all thin
 //!   layers over it; `--threads N` / `LOWRANK_THREADS` size the pool.
+//! * **L3 serve layer** — [`serve`]: the multi-tenant fine-tune
+//!   service (`lowrank-sge serve`). Both trainers' step loops are
+//!   lifted into the [`coordinator::TrainSession`] seam (construct →
+//!   `step()` → `finish()`), and the daemon round-robins those
+//!   sessions over the shared kernel pool with per-job task
+//!   attribution: a single-job serve run checkpoints bitwise
+//!   identically to the standalone subcommand. Jobs arrive over a
+//!   framed submit/status/cancel/fetch protocol reusing the comm
+//!   layer's CRC codec, pass bounded-queue + tracked-allocator memory
+//!   admission, and start from a shared base-model cache whose
+//!   checkouts are copy-on-write `ParamStore`s — N tenants share one
+//!   copy of the base weights until their first divergent write.
 //! * **L2/L1 (python/, build-time only)** — JAX model graphs and Pallas
 //!   kernels, lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
 //!
@@ -111,3 +123,4 @@ pub mod projection;
 pub mod rng;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;

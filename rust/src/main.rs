@@ -26,8 +26,35 @@
 //! lowrank-sge comm-check    [--len N] [--comm-dtype f32|bf16]
 //!                           [--fail-rank R] [--trace-out T] [--metrics-out M]
 //!                           [--monitor-addr H:P]
+//! lowrank-sge serve         [--addr H:P] [--ckpt-root D] [--max-active N]
+//!                           [--max-open N] [--mem-budget-mb M] [--max-conns C]
+//!                           [--idle-timeout MS] [--threads T]
+//!                                                            # multi-tenant daemon
+//! lowrank-sge job submit    --addr H:P [--task sst2] [--method m] [--steps N]
+//!                           [--seed S] [--save-every N] [--keep-last K] …
+//! lowrank-sge job status    --addr H:P --job N   # one snapshot (add --wait to poll)
+//! lowrank-sge job cancel    --addr H:P --job N
+//! lowrank-sge job fetch     --addr H:P --job N   # final result of a finished job
+//! lowrank-sge job shutdown  --addr H:P           # drain running jobs, then exit
 //! lowrank-sge inspect                                        # list artifacts
 //! ```
+//!
+//! Multi-tenant serving: `serve` runs a long-lived daemon that accepts
+//! fine-tune jobs over a framed TCP protocol (the comm layer's
+//! CRC-verified codec) and round-robins their training sessions over
+//! the shared kernel pool — the same `TrainSession` objects the
+//! standalone `finetune` subcommand drives, so a single-job serve run
+//! writes bitwise-identical checkpoints at the same seed. Jobs start
+//! from a shared base-model cache handing out copy-on-write
+//! `ParamStore`s (N tenants, one copy of the base weights until first
+//! divergent write), pass admission control (`--max-open` bounded
+//! queue; `--mem-budget-mb` heap budget from the tracked-allocator
+//! ledger) with reject reasons on the wire, and checkpoint into
+//! isolated `<ckpt-root>/job-<id>/` directories. A failed job —
+//! including a failed background checkpoint write — reports `failed`
+//! over the status verb without disturbing its neighbors. `job …` is
+//! the matching client: submit prints the job id, status/fetch print
+//! `key=value` lines, shutdown drains gracefully.
 //!
 //! Observability (`pretrain`, `finetune`, `comm-check`): `--trace-out
 //! <path>` records structured spans (kernel-pool tasks, engine phases,
@@ -126,7 +153,7 @@
 //! for the experiment ↔ paper-artifact index.
 
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -157,7 +184,7 @@ fn artifacts_dir() -> PathBuf {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: lowrank-sge <exp|pretrain|finetune|launch|comm-check|inspect> …  \
+        "usage: lowrank-sge <exp|pretrain|finetune|serve|job|launch|comm-check|inspect> …  \
          (see `rust/src/main.rs` docs)"
     );
     std::process::exit(2)
@@ -190,6 +217,15 @@ fn main() -> Result<()> {
         "finetune" => {
             let args = ArgMap::parse(&argv[1..])?;
             cmd_finetune(&args)
+        }
+        "serve" => {
+            let args = ArgMap::parse(&argv[1..])?;
+            cmd_serve(&args)
+        }
+        "job" => {
+            let Some(sub) = argv.get(1) else { usage() };
+            let args = ArgMap::parse(&argv[2..])?;
+            cmd_job(sub, &args)
         }
         "launch" => cmd_launch(&argv[1..]),
         "comm-check" => {
@@ -567,26 +603,7 @@ fn run_exp(sub: &str, args: &ArgMap) -> Result<()> {
 }
 
 fn parse_method(s: &str) -> Result<FinetuneMethod> {
-    Ok(match s {
-        "zero-shot" => FinetuneMethod::ZeroShot,
-        "vanilla-lr" => FinetuneMethod::VanillaLr,
-        "vanilla-ipa" => FinetuneMethod::VanillaIpa,
-        other => {
-            if let Some(kind) = other
-                .strip_suffix("-lowrank-lr")
-                .and_then(ProjectorKind::parse)
-            {
-                FinetuneMethod::LowRankLr(kind)
-            } else if let Some(kind) = other
-                .strip_suffix("-lowrank-ipa")
-                .and_then(ProjectorKind::parse)
-            {
-                FinetuneMethod::LowRankIpa(kind)
-            } else {
-                bail!("unknown method {other:?} (try stiefel-lowrank-lr, vanilla-ipa, …)")
-            }
-        }
-    })
+    FinetuneMethod::parse(s)
 }
 
 /// Checkpoint policy from CLI + config file (`<section>.save_every`,
@@ -818,6 +835,109 @@ fn cmd_finetune(args: &ArgMap) -> Result<()> {
         // append on resume — the log holds only post-resume rows
         res.log.write_csv_with(std::path::Path::new(out), resumed)?;
         println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// The multi-tenant fine-tune daemon (see [`lowrank_sge::serve`]).
+/// Blocks until a `job shutdown` drains the queue.
+fn cmd_serve(args: &ArgMap) -> Result<()> {
+    lowrank_sge::obs::init(args.trace_out(), args.metrics_out());
+    let cfg = lowrank_sge::serve::ServeConfig {
+        addr: args.str_or("addr", "127.0.0.1:0").to_string(),
+        artifacts_dir: artifacts_dir(),
+        ckpt_root: PathBuf::from(args.str_or("ckpt-root", "serve-ckpt")),
+        max_active: args.usize_or("max-active", 2).max(1),
+        max_open: args.usize_or("max-open", 8).max(1),
+        mem_budget_bytes: args.usize_or("mem-budget-mb", 0) << 20,
+        max_conns: args.usize_or("max-conns", 16).max(1),
+        idle_ms: args.u64_or("idle-timeout", 30_000),
+        threads: args.threads_or(0),
+    };
+    setup_monitor(args, 0, true, Some(&cfg.ckpt_root))?;
+    println!(
+        "serve max-active={} max-open={} mem-budget-mb={} ckpt-root={:?}",
+        cfg.max_active,
+        cfg.max_open,
+        cfg.mem_budget_bytes >> 20,
+        cfg.ckpt_root
+    );
+    let report = lowrank_sge::serve::run_serve(cfg)?;
+    println!(
+        "serve done: {} completed, {} failed, {} cancelled",
+        report.done, report.failed, report.cancelled
+    );
+    Ok(())
+}
+
+/// Client verbs against a running daemon: `job
+/// <submit|status|cancel|fetch|shutdown> --addr H:P …`.
+fn cmd_job(sub: &str, args: &ArgMap) -> Result<()> {
+    use lowrank_sge::serve::{client, JobSpec};
+    let addr = args.get("addr").context("job: --addr <host:port> is required")?;
+    let timeout = Duration::from_millis(args.u64_or("timeout-ms", 10_000));
+    let job_id = || -> Result<u64> {
+        match args.u64_or("job", 0) {
+            0 => bail!("job {sub}: --job <id> is required"),
+            id => Ok(id),
+        }
+    };
+    match sub {
+        "submit" => {
+            // pass through exactly the flags the user gave; JobSpec
+            // fills the finetune-subcommand defaults for the rest
+            let mut fields: Vec<(String, String)> = Vec::new();
+            for key in [
+                "task",
+                "method",
+                "steps",
+                "k",
+                "ipa-lr",
+                "zo-lr",
+                "sigma",
+                "c",
+                "seed",
+                "eval-examples",
+                "track-refresh",
+                "save-every",
+                "keep-last",
+            ] {
+                if let Some(v) = args.get(key) {
+                    fields.push((key.to_string(), v.to_string()));
+                }
+            }
+            let spec = JobSpec::from_fields(&fields)?;
+            let id = client::submit(addr, &spec, timeout)?;
+            println!("job={id}");
+        }
+        "status" => {
+            let id = job_id()?;
+            let fields = if args.has_flag("wait") {
+                let deadline =
+                    Instant::now() + Duration::from_millis(args.u64_or("wait-timeout-ms", 600_000));
+                client::wait(addr, id, Duration::from_millis(250), deadline)?
+            } else {
+                client::status(addr, id, timeout)?
+            };
+            for (k, v) in fields {
+                println!("{k}={v}");
+            }
+        }
+        "fetch" => {
+            for (k, v) in client::fetch(addr, job_id()?, timeout)? {
+                println!("{k}={v}");
+            }
+        }
+        "cancel" => {
+            let id = job_id()?;
+            let state = client::cancel(addr, id, timeout)?;
+            println!("job={id} state={state}");
+        }
+        "shutdown" => {
+            client::shutdown(addr, timeout)?;
+            println!("daemon draining");
+        }
+        other => bail!("unknown job verb {other:?} (submit|status|cancel|fetch|shutdown)"),
     }
     Ok(())
 }

@@ -249,6 +249,17 @@ impl ParamStore {
         Ok(())
     }
 
+    /// Copy-on-write checkout: a new store whose tensors share the
+    /// originals' `Arc` payloads. Cost is O(tensor count), not
+    /// O(bytes); each tenant's first mutating access to a tensor
+    /// unshares just that tensor (`Arc::make_mut` inside
+    /// [`HostTensor::as_f32_mut`]). This is what lets N concurrent
+    /// serve jobs start from one cached base model without N copies of
+    /// the weights.
+    pub fn cow_clone(&self) -> ParamStore {
+        ParamStore { specs: self.specs.clone(), tensors: self.tensors.clone() }
+    }
+
     /// Assemble a store directly from specs + tensors (validated
     /// pairwise). Used by the engine golden tests and the allocation
     /// benches, which need stores without an `artifacts/` tree.

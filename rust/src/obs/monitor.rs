@@ -37,8 +37,8 @@
 //! serves it, so one `--monitor-addr` on the command line never
 //! collides across ranks.
 
-use std::io::Write as _;
-use std::net::{SocketAddr, TcpListener};
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, Once, OnceLock};
@@ -404,12 +404,44 @@ pub fn status_line() -> String {
     out
 }
 
+/// Default concurrent-connection cap for the status endpoint.
+pub const STATUS_MAX_CONNS: usize = 16;
+
+/// Default per-connection idle budget (ms): a client that sends nothing
+/// for this long is disconnected (it can reconnect, or send any byte as
+/// a keepalive to reset the clock).
+pub const STATUS_IDLE_MS: u64 = 300_000;
+
+/// Connections currently being served (cap accounting + test hook).
+static ACTIVE_STATUS_CONNS: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of status connections currently being served.
+pub fn active_status_conns() -> usize {
+    ACTIVE_STATUS_CONNS.load(Ordering::SeqCst)
+}
+
 /// Bind `addr` and serve newline-delimited JSON status snapshots: one
 /// [`status_line`] immediately on connect, then one per second until
 /// the client hangs up. Returns the bound address (so `addr` may use
 /// port 0). Read-only by construction; the accept loop and per-client
-/// writers are detached threads that die with the process.
+/// writers are detached threads that die with the process. Uses the
+/// default hardening limits ([`STATUS_MAX_CONNS`], [`STATUS_IDLE_MS`]).
 pub fn serve_status(addr: &str) -> Result<SocketAddr> {
+    serve_status_with(addr, STATUS_MAX_CONNS, STATUS_IDLE_MS)
+}
+
+/// [`serve_status`] with explicit hardening limits, so a stuck or
+/// malicious client can neither leak writer threads nor wedge the
+/// endpoint:
+///
+/// * **`max_conns`** — connections above the cap get one
+///   `{"error":…}` line and an immediate close, never a thread.
+/// * **`idle_ms`** — a connection whose client has sent nothing for
+///   this long is closed (0 = no idle limit). Any received byte resets
+///   the clock; EOF from the client closes promptly instead of waiting
+///   for the next write to fail. A reader that stops draining is
+///   already bounded by the 5 s write timeout.
+pub fn serve_status_with(addr: &str, max_conns: usize, idle_ms: u64) -> Result<SocketAddr> {
     let listener = TcpListener::bind(addr)
         .with_context(|| format!("binding the monitor status endpoint on {addr}"))?;
     let bound = listener.local_addr().context("reading the monitor endpoint address")?;
@@ -418,25 +450,54 @@ pub fn serve_status(addr: &str) -> Result<SocketAddr> {
         .spawn(move || {
             for stream in listener.incoming() {
                 let Ok(mut stream) = stream else { continue };
-                let _ = std::thread::Builder::new().name("obs-monitor-conn".into()).spawn(
-                    move || {
-                        let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
-                        loop {
-                            let line = status_line();
-                            if stream.write_all(line.as_bytes()).is_err()
-                                || stream.write_all(b"\n").is_err()
-                                || stream.flush().is_err()
-                            {
-                                break;
-                            }
-                            std::thread::sleep(Duration::from_millis(1000));
-                        }
-                    },
-                );
+                if ACTIVE_STATUS_CONNS.load(Ordering::SeqCst) >= max_conns {
+                    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+                    let _ = stream
+                        .write_all(b"{\"error\":\"monitor connection cap reached\"}\n");
+                    continue; // dropped: no thread spent on over-cap clients
+                }
+                ACTIVE_STATUS_CONNS.fetch_add(1, Ordering::SeqCst);
+                let spawned =
+                    std::thread::Builder::new().name("obs-monitor-conn".into()).spawn(move || {
+                        status_conn_loop(&mut stream, idle_ms);
+                        ACTIVE_STATUS_CONNS.fetch_sub(1, Ordering::SeqCst);
+                    });
+                if spawned.is_err() {
+                    ACTIVE_STATUS_CONNS.fetch_sub(1, Ordering::SeqCst);
+                }
             }
         })
         .context("spawning the obs-monitor status thread")?;
     Ok(bound)
+}
+
+/// One status connection: write a snapshot, sleep, probe the client.
+fn status_conn_loop(stream: &mut TcpStream, idle_ms: u64) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut last_activity = Instant::now();
+    let mut probe = [0u8; 64];
+    loop {
+        let line = status_line();
+        if stream.write_all(line.as_bytes()).is_err()
+            || stream.write_all(b"\n").is_err()
+            || stream.flush().is_err()
+        {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1000));
+        match stream.read(&mut probe) {
+            Ok(0) => break, // orderly client shutdown
+            Ok(_) => last_activity = Instant::now(),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(_) => break,
+        }
+        if idle_ms > 0 && last_activity.elapsed() >= Duration::from_millis(idle_ms) {
+            break; // silent past the idle budget — reclaim the thread
+        }
+    }
 }
 
 /// Minimal structural JSON check (balanced delimiters outside strings)
@@ -523,6 +584,53 @@ mod tests {
         assert!(!check_json_line("{\"a\":[1,2}"));
         assert!(!check_json_line("[1,2,3]")); // snapshots are objects
         assert!(!check_json_line("{\"a\":\"unterminated}"));
+    }
+
+    #[test]
+    fn status_endpoint_caps_concurrent_connections() {
+        let _g = test_guard();
+        let bound = serve_status_with("127.0.0.1:0", 1, 0).unwrap();
+        let c1 = std::net::TcpStream::connect(bound).unwrap();
+        for _ in 0..200 {
+            if active_status_conns() >= 1 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(active_status_conns(), 1);
+        // over-cap client: one error line, then close — never a thread
+        let c2 = std::net::TcpStream::connect(bound).unwrap();
+        c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut line = String::new();
+        std::io::BufRead::read_line(&mut std::io::BufReader::new(c2), &mut line).unwrap();
+        assert!(line.contains("connection cap reached"), "{line}");
+        assert!(check_json_line(&line), "{line}");
+        // closing the in-cap client frees its slot (EOF probe, ≤ ~1.1 s)
+        drop(c1);
+        for _ in 0..300 {
+            if active_status_conns() == 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        assert_eq!(active_status_conns(), 0);
+    }
+
+    #[test]
+    fn status_endpoint_disconnects_idle_clients() {
+        let _g = test_guard();
+        set_enabled(true);
+        let bound = serve_status_with("127.0.0.1:0", 4, 50).unwrap();
+        let c = std::net::TcpStream::connect(bound).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut r = std::io::BufReader::new(c);
+        let mut line = String::new();
+        std::io::BufRead::read_line(&mut r, &mut line).unwrap();
+        assert!(check_json_line(&line), "{line}");
+        // send nothing: the server must hang up on its own (idle budget
+        // 50 ms, checked after the 1 s snapshot cadence)
+        let mut rest = String::new();
+        std::io::Read::read_to_string(&mut r, &mut rest).unwrap();
     }
 
     #[test]

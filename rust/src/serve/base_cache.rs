@@ -1,0 +1,106 @@
+//! Shared base-model substrate: one loaded `ParamStore` per artifact
+//! key, handed out as copy-on-write checkouts.
+//!
+//! The paper's memory argument is exactly what makes multi-tenancy
+//! work: per-job training state is O((m+n)·r), so the base parameters
+//! are the only big object. The cache keeps one master store per key
+//! and every checkout is [`ParamStore::cow_clone`] — an `Arc` bump per
+//! tensor. A tenant's first divergent write to a tensor unshares just
+//! that tensor (`Arc::make_mut`), so N jobs on one base keep the
+//! payloads unduplicated until they actually diverge (asserted against
+//! the tracked-allocator ledger in `tests/serve_session.rs`).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::model::ParamStore;
+
+/// Master stores keyed by the gradient-artifact name
+/// ([`super::job::JobSpec::base_key`]). Owned by the scheduler thread;
+/// no interior locking needed.
+#[derive(Default)]
+pub struct BaseModelCache {
+    entries: HashMap<String, ParamStore>,
+}
+
+impl BaseModelCache {
+    pub fn new() -> Self {
+        BaseModelCache { entries: HashMap::new() }
+    }
+
+    /// A copy-on-write checkout of the base model under `key`, loading
+    /// (and retaining) the master on first use.
+    pub fn checkout(
+        &mut self,
+        key: &str,
+        load: impl FnOnce() -> Result<ParamStore>,
+    ) -> Result<ParamStore> {
+        if !self.entries.contains_key(key) {
+            let store = load()?;
+            self.entries.insert(key.to_string(), store);
+        }
+        Ok(self.entries[key].cow_clone())
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    /// Number of distinct masters resident.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{DType, HostTensor, TensorSpec};
+
+    fn toy_store(fill: f32) -> ParamStore {
+        let spec = TensorSpec {
+            index: 0,
+            name: "params[w]".to_string(),
+            dtype: DType::F32,
+            shape: vec![4],
+        };
+        let t = HostTensor::f32(vec![4], vec![fill; 4]);
+        ParamStore::from_parts(vec![spec], vec![t]).unwrap()
+    }
+
+    #[test]
+    fn checkout_loads_once_and_shares_payloads() {
+        let mut cache = BaseModelCache::new();
+        let mut loads = 0;
+        let a = cache
+            .checkout("k", || {
+                loads += 1;
+                Ok(toy_store(1.0))
+            })
+            .unwrap();
+        let b = cache
+            .checkout("k", || {
+                loads += 1;
+                Ok(toy_store(2.0))
+            })
+            .unwrap();
+        assert_eq!(loads, 1, "second checkout must reuse the master");
+        assert_eq!(cache.len(), 1);
+        // both checkouts alias the master's payload until a write
+        assert_eq!(a.f32(0).unwrap(), b.f32(0).unwrap());
+        assert!(std::ptr::eq(
+            a.f32(0).unwrap().as_ptr(),
+            b.f32(0).unwrap().as_ptr()
+        ));
+        // divergent write unshares the writer only
+        let mut b = b;
+        b.f32_mut(0).unwrap()[0] = 9.0;
+        assert_eq!(a.f32(0).unwrap()[0], 1.0);
+        assert_eq!(b.f32(0).unwrap()[0], 9.0);
+    }
+}

@@ -1,0 +1,82 @@
+//! Thin client for the serve daemon's job plane: one connection per
+//! call, request/reply over the framed text protocol. Used by the
+//! `lowrank-sge job` subcommand, the integration tests, and the CI
+//! smoke script.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::job::JobSpec;
+use super::proto::{self, Request, Response};
+use crate::comm::transport::Conn;
+
+/// Dial `addr` (bare `host:port` or an explicit `tcp://` / `unix://`
+/// address) and exchange one request for one reply.
+pub fn request(addr: &str, req: &Request, timeout: Duration) -> Result<Response> {
+    let target =
+        if addr.contains("://") { addr.to_string() } else { format!("tcp://{addr}") };
+    let conn = Conn::connect(&target, Instant::now() + timeout, timeout)
+        .with_context(|| format!("connecting to the serve daemon at {addr}"))?;
+    proto::send_msg(&conn, 0, &req.format())?;
+    let (_, line) = proto::recv_msg(&conn)?;
+    Response::parse(&line)
+}
+
+/// Submit a job; returns its id.
+pub fn submit(addr: &str, spec: &JobSpec, timeout: Duration) -> Result<u64> {
+    let fields = request(addr, &Request::Submit(spec.to_fields()), timeout)?.into_ok()?;
+    fields
+        .iter()
+        .find(|(k, _)| k == "job")
+        .and_then(|(_, v)| v.parse().ok())
+        .context("submit reply is missing the job id")
+}
+
+/// One status snapshot (`state`, `step`, `total`, …) for a job.
+pub fn status(addr: &str, job: u64, timeout: Duration) -> Result<Vec<(String, String)>> {
+    request(addr, &Request::Status { job }, timeout)?.into_ok()
+}
+
+/// Final result fields of a terminal job (errors while still running).
+pub fn fetch(addr: &str, job: u64, timeout: Duration) -> Result<Vec<(String, String)>> {
+    request(addr, &Request::Fetch { job }, timeout)?.into_ok()
+}
+
+/// Request cancellation; returns the state observed at the daemon.
+pub fn cancel(addr: &str, job: u64, timeout: Duration) -> Result<String> {
+    let fields = request(addr, &Request::Cancel { job }, timeout)?.into_ok()?;
+    Ok(field(&fields, "state").unwrap_or("unknown").to_string())
+}
+
+/// Ask the daemon to drain and exit.
+pub fn shutdown(addr: &str, timeout: Duration) -> Result<()> {
+    request(addr, &Request::Shutdown, timeout)?.into_ok().map(|_| ())
+}
+
+/// Poll `status` until the job leaves the open states; returns the
+/// terminal snapshot. `deadline` bounds the whole wait.
+pub fn wait(
+    addr: &str,
+    job: u64,
+    poll: Duration,
+    deadline: Instant,
+) -> Result<Vec<(String, String)>> {
+    loop {
+        let fields = status(addr, job, poll.max(Duration::from_millis(100)))?;
+        match field(&fields, "state") {
+            Some("queued") | Some("running") => {}
+            Some(_) => return Ok(fields),
+            None => bail!("status reply for job {job} is missing the state field"),
+        }
+        if Instant::now() >= deadline {
+            bail!("timed out waiting for job {job} to finish");
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+/// Field lookup in a reply's `key=value` list.
+pub fn field<'a>(fields: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    fields.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}

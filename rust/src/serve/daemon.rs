@@ -1,0 +1,423 @@
+//! The `lowrank-sge serve` daemon: accept loop, per-connection
+//! handlers, and the session scheduler.
+//!
+//! Threading contract: connection handler threads touch *only* the
+//! [`JobTable`] mutex (submit / status / cancel / fetch / shutdown).
+//! The scheduler runs on the caller's thread and is the sole owner of
+//! the [`Runtime`], the [`BaseModelCache`], and every live session —
+//! trainer state never crosses threads, and the table mutex is held
+//! only for short bookkeeping sections, never across a training step.
+//!
+//! Scheduling is round-robin fair: one optimizer step per active
+//! session per pass over the shared kernel pool, with the pool's
+//! per-job task tag ([`crate::kernel::pool::set_task_job`]) set around
+//! each slice so pool metrics split per tenant. Because every session
+//! owns all of its mutable state, interleaving changes nothing about
+//! any job's trajectory — a single-job serve run is bitwise identical
+//! to the standalone `finetune` subcommand at the same seed (pinned by
+//! `tests/serve_session.rs`).
+//!
+//! Failure isolation: a session whose step, eval, or background
+//! checkpoint write ([`TrainSession::poll_saves`]) fails transitions
+//! *that job* to `failed` with the error text reported over the status
+//! verb; its neighbors keep stepping.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::base_cache::BaseModelCache;
+use super::job::{JobSpec, JobState, JobTable};
+use super::proto::{self, Request, Response};
+use crate::comm::transport::Conn;
+use crate::coordinator::{FinetuneSession, SessionStatus, TrainSession};
+use crate::model::ParamStore;
+use crate::runtime::Runtime;
+
+/// Daemon configuration (`lowrank-sge serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address (`host:port`; port 0 binds ephemerally — the bound
+    /// address is announced on stdout).
+    pub addr: String,
+    pub artifacts_dir: PathBuf,
+    /// Per-job checkpoint directories live at `<ckpt_root>/job-<id>`.
+    pub ckpt_root: PathBuf,
+    /// Sessions stepped concurrently (round-robin width).
+    pub max_active: usize,
+    /// Admission cap on open (queued + running) jobs.
+    pub max_open: usize,
+    /// Heap budget for admission (bytes, 0 = unlimited), read from the
+    /// tracked-allocator ledger at submit time.
+    pub mem_budget_bytes: usize,
+    /// Concurrent client-connection cap.
+    pub max_conns: usize,
+    /// Per-connection idle read timeout (ms).
+    pub idle_ms: u64,
+    /// Kernel pool size (0 = leave the global pool as it is).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            ckpt_root: PathBuf::from("serve-ckpt"),
+            max_active: 2,
+            max_open: 8,
+            mem_budget_bytes: 0,
+            max_conns: 16,
+            idle_ms: 30_000,
+            threads: 0,
+        }
+    }
+}
+
+/// What a completed daemon run did (returned after graceful shutdown).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeReport {
+    pub done: usize,
+    pub failed: usize,
+    pub cancelled: usize,
+}
+
+fn lock(table: &Mutex<JobTable>) -> MutexGuard<'_, JobTable> {
+    table.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run the daemon to completion: bind, announce the address on stdout
+/// (`[serve] listening on <addr>`), accept job-plane connections, and
+/// schedule sessions until a `shutdown` verb drains the queue. Blocks
+/// the calling thread (which owns all training state).
+pub fn run_serve(cfg: ServeConfig) -> Result<ServeReport> {
+    run_serve_with(cfg, None)
+}
+
+/// [`run_serve`] with an optional channel announcing the bound
+/// address — the integration tests bind port 0 on a background thread
+/// and need the ephemeral port back.
+pub fn run_serve_with(
+    cfg: ServeConfig,
+    bound_tx: Option<std::sync::mpsc::Sender<std::net::SocketAddr>>,
+) -> Result<ServeReport> {
+    if cfg.threads > 0 {
+        crate::kernel::set_global_threads(cfg.threads);
+    }
+    let mut rt = Runtime::new(&cfg.artifacts_dir)?;
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding the serve endpoint on {}", cfg.addr))?;
+    let bound = listener.local_addr().context("reading the serve endpoint address")?;
+    println!("[serve] listening on {bound}");
+    if let Some(tx) = bound_tx {
+        let _ = tx.send(bound);
+    }
+
+    let table = Arc::new(Mutex::new(JobTable::new(cfg.max_open, cfg.mem_budget_bytes)));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let conns = Arc::new(AtomicUsize::new(0));
+
+    {
+        let table = table.clone();
+        let shutdown = shutdown.clone();
+        let conns = conns.clone();
+        let (max_conns, idle_ms) = (cfg.max_conns.max(1), cfg.idle_ms.max(1));
+        std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(listener, table, shutdown, conns, max_conns, idle_ms))
+            .context("spawning the serve accept thread")?;
+    }
+
+    scheduler_loop(&mut rt, &cfg, &table, &shutdown)
+}
+
+/// Accept connections until shutdown; over-cap clients get one `err`
+/// line and an immediate close — never a handler thread.
+fn accept_loop(
+    listener: TcpListener,
+    table: Arc<Mutex<JobTable>>,
+    shutdown: Arc<AtomicBool>,
+    conns: Arc<AtomicUsize>,
+    max_conns: usize,
+    idle_ms: u64,
+) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // the listener is non-blocking for the shutdown poll;
+                // accepted streams must block (with the idle timeout)
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_nodelay(true);
+                let conn = Conn::Tcp(stream);
+                let _ = conn.set_timeouts(Duration::from_millis(idle_ms));
+                if conns.load(Ordering::SeqCst) >= max_conns {
+                    let reply = Response::Err("connection cap reached".to_string());
+                    let _ = proto::send_msg(&conn, 0, &reply.format());
+                    continue; // dropped
+                }
+                conns.fetch_add(1, Ordering::SeqCst);
+                let table = table.clone();
+                let shutdown = shutdown.clone();
+                let conns2 = conns.clone();
+                let spawned = std::thread::Builder::new().name("serve-conn".into()).spawn(
+                    move || {
+                        conn_loop(&conn, &table, &shutdown);
+                        conns2.fetch_sub(1, Ordering::SeqCst);
+                    },
+                );
+                if spawned.is_err() {
+                    conns.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Serve one client: request/reply lines until EOF or the idle read
+/// timeout (the connection's io timeout) trips.
+fn conn_loop(conn: &Conn, table: &Mutex<JobTable>, shutdown: &AtomicBool) {
+    loop {
+        let (seq, line) = match proto::recv_msg(conn) {
+            Ok(m) => m,
+            Err(_) => return, // EOF, idle timeout, or garbage: close
+        };
+        let reply = match Request::parse(&line) {
+            Ok(req) => handle_request(req, table, shutdown),
+            Err(e) => Response::Err(format!("{e:#}")),
+        };
+        if proto::send_msg(conn, seq, &reply.format()).is_err() {
+            return;
+        }
+    }
+}
+
+/// The verb switch. Touches only the job table — never training state.
+fn handle_request(req: Request, table: &Mutex<JobTable>, shutdown: &AtomicBool) -> Response {
+    match req {
+        Request::Ping => Response::Ok(vec![("pong".to_string(), "1".to_string())]),
+        Request::Submit(fields) => {
+            if shutdown.load(Ordering::SeqCst) {
+                return Response::Err("daemon is draining".to_string());
+            }
+            let spec = match JobSpec::from_fields(&fields) {
+                Ok(s) => s,
+                Err(e) => return Response::Err(format!("{e:#}")),
+            };
+            match lock(table).submit(spec) {
+                Ok(id) => Response::Ok(vec![
+                    ("job".to_string(), id.to_string()),
+                    ("state".to_string(), JobState::Queued.name().to_string()),
+                ]),
+                Err(e) => Response::Err(format!("{e:#}")),
+            }
+        }
+        Request::Status { job } => job_reply(table, job, false),
+        Request::Fetch { job } => job_reply(table, job, true),
+        Request::Cancel { job } => match lock(table).request_cancel(job) {
+            Ok(state) => Response::Ok(vec![
+                ("job".to_string(), job.to_string()),
+                ("state".to_string(), state.name().to_string()),
+            ]),
+            Err(e) => Response::Err(format!("{e:#}")),
+        },
+        Request::Shutdown => {
+            shutdown.store(true, Ordering::SeqCst);
+            let mut t = lock(table);
+            t.cancel_queued();
+            let draining = t.open_count();
+            Response::Ok(vec![("draining".to_string(), draining.to_string())])
+        }
+    }
+}
+
+/// `status` / `fetch` reply for one job. `fetch` additionally insists
+/// the job is terminal — polling clients use `status`.
+fn job_reply(table: &Mutex<JobTable>, id: u64, terminal_only: bool) -> Response {
+    let t = lock(table);
+    let Some(job) = t.get(id) else {
+        return Response::Err(format!("no job {id}"));
+    };
+    if terminal_only && job.state.is_open() {
+        return Response::Err(format!("job {id} is still {}", job.state.name()));
+    }
+    let mut fields = vec![
+        ("job".to_string(), job.id.to_string()),
+        ("state".to_string(), job.state.name().to_string()),
+        ("step".to_string(), job.steps_done.to_string()),
+        ("total".to_string(), job.spec.steps.to_string()),
+    ];
+    if let Some(dir) = &job.ckpt_dir {
+        fields.push(("ckpt_dir".to_string(), dir.display().to_string()));
+    }
+    if let Some(s) = &job.summary {
+        if let Some(m) = s.metric {
+            fields.push(("metric".to_string(), format!("{m}")));
+        }
+        if let Some(l) = s.tail_loss {
+            fields.push(("tail_loss".to_string(), format!("{l}")));
+        }
+    }
+    if let Some(e) = &job.error {
+        fields.push(("error".to_string(), e.clone()));
+    }
+    Response::Ok(fields)
+}
+
+/// Mark a job terminal.
+fn finish_job(table: &Mutex<JobTable>, id: u64, state: JobState, error: Option<String>) {
+    let mut t = lock(table);
+    if let Some(job) = t.get_mut(id) {
+        job.state = state;
+        job.error = error;
+    }
+}
+
+/// The scheduler: admit queued jobs up to `max_active`, then
+/// round-robin one step per session per pass until a shutdown drain
+/// completes. Owns the runtime, the base cache, and every session.
+fn scheduler_loop(
+    rt: &mut Runtime,
+    cfg: &ServeConfig,
+    table: &Arc<Mutex<JobTable>>,
+    shutdown: &AtomicBool,
+) -> Result<ServeReport> {
+    let mut cache = BaseModelCache::new();
+    let mut active: Vec<(u64, FinetuneSession)> = Vec::new();
+    let mut report = ServeReport::default();
+    loop {
+        // Admission: queued → constructed session (base checkout is a
+        // CoW clone of the cached master). A construction failure fails
+        // the job, never the daemon.
+        while active.len() < cfg.max_active.max(1) {
+            let Some(id) = lock(table).next_queued() else { break };
+            let (spec, dir) = {
+                let mut t = lock(table);
+                let job = match t.get_mut(id) {
+                    Some(j) if j.state == JobState::Queued => j,
+                    _ => continue, // cancelled between peek and claim
+                };
+                job.state = JobState::Running;
+                let dir = cfg.ckpt_root.join(format!("job-{id}"));
+                job.ckpt_dir = Some(dir.clone());
+                (job.spec.clone(), dir)
+            };
+            let built = checkout_base(rt, &mut cache, &cfg.artifacts_dir, &spec).and_then(
+                |base| {
+                    FinetuneSession::with_base(
+                        rt,
+                        &cfg.artifacts_dir,
+                        spec.to_config(Some(dir)),
+                        Some(base),
+                    )
+                },
+            );
+            match built {
+                Ok(session) => active.push((id, session)),
+                Err(e) => {
+                    finish_job(table, id, JobState::Failed, Some(format!("{e:#}")));
+                    report.failed += 1;
+                }
+            }
+        }
+
+        let draining = shutdown.load(Ordering::SeqCst);
+        if draining {
+            lock(table).cancel_queued();
+        }
+        if active.is_empty() {
+            if draining {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+            continue;
+        }
+
+        // One fair pass: a single step per session, pool work tagged
+        // with the job id for per-tenant metrics attribution.
+        let mut idx = 0;
+        while idx < active.len() {
+            let id = active[idx].0;
+            if lock(table).get(id).is_some_and(|j| j.cancel_requested) {
+                // Drop tears the session down; its AsyncCheckpointer
+                // drains on Drop so no torn checkpoint is left behind.
+                active.remove(idx);
+                finish_job(table, id, JobState::Cancelled, None);
+                report.cancelled += 1;
+                continue;
+            }
+            let session = &mut active[idx].1;
+            crate::kernel::pool::set_task_job(Some(id));
+            let stepped = session.poll_saves().and_then(|()| session.step());
+            crate::kernel::pool::set_task_job(None);
+            match stepped {
+                Ok(SessionStatus::Running) => {
+                    let (done, _) = session.progress();
+                    if let Some(job) = lock(table).get_mut(id) {
+                        job.steps_done = done;
+                    }
+                    idx += 1;
+                }
+                Ok(SessionStatus::StepsExhausted) => {
+                    crate::kernel::pool::set_task_job(Some(id));
+                    let finished = session.finish();
+                    crate::kernel::pool::set_task_job(None);
+                    match finished {
+                        Ok(summary) => {
+                            {
+                                let mut t = lock(table);
+                                if let Some(job) = t.get_mut(id) {
+                                    job.steps_done = summary.steps_done;
+                                    job.summary = Some(summary);
+                                    job.state = JobState::Done;
+                                }
+                            }
+                            report.done += 1;
+                        }
+                        Err(e) => {
+                            finish_job(table, id, JobState::Failed, Some(format!("{e:#}")));
+                            report.failed += 1;
+                        }
+                    }
+                    active.remove(idx);
+                }
+                Err(e) => {
+                    finish_job(table, id, JobState::Failed, Some(format!("{e:#}")));
+                    report.failed += 1;
+                    active.remove(idx);
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Load (or reuse) the base model for `spec` and hand out a CoW
+/// checkout. Mirrors the artifact-manifest choice inside
+/// `FinetuneTrainer::with_base`, so the checkout is exactly the store
+/// the standalone path would construct.
+fn checkout_base(
+    rt: &mut Runtime,
+    cache: &mut BaseModelCache,
+    artifacts_dir: &std::path::Path,
+    spec: &JobSpec,
+) -> Result<ParamStore> {
+    let key = spec.base_key();
+    cache.checkout(key, || {
+        let art = rt.load(key)?;
+        ParamStore::load_init(artifacts_dir, "clf", &art.manifest)
+    })
+}

@@ -1,0 +1,336 @@
+//! Job table: specs, states, and admission control for the serve
+//! daemon.
+//!
+//! Connection handler threads mutate only this table (behind the
+//! daemon's mutex); the scheduler thread owns the actual sessions and
+//! reconciles against it. Admission is checked at submit time: a
+//! bounded open-job queue plus a memory budget read from the tracked
+//! allocator's live-bytes ledger ([`crate::obs::TrackedAlloc`]) —
+//! rejected submissions get a reason over the wire, never a silent
+//! drop.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ckpt::CkptOptions;
+use crate::coordinator::{FinetuneConfig, FinetuneMethod, SessionSummary};
+use crate::obs::TrackedAlloc;
+
+/// One fine-tune job request — the wire-visible subset of
+/// [`FinetuneConfig`], with the same defaults as the standalone
+/// `finetune` subcommand so `submit task=… steps=…` and
+/// `lowrank-sge finetune --task … --steps …` describe the same run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub task: String,
+    pub method: FinetuneMethod,
+    pub steps: u64,
+    pub k_interval: u64,
+    pub ipa_lr: f32,
+    pub zo_lr: f32,
+    pub sigma: f32,
+    pub c: f64,
+    pub seed: u64,
+    pub eval_examples: usize,
+    pub track_refresh: u64,
+    /// Checkpoint cadence inside the job's own directory (0 = never).
+    pub save_every: u64,
+    pub keep_last: usize,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        JobSpec {
+            task: "sst2".to_string(),
+            method: FinetuneMethod::LowRankLr(crate::projection::ProjectorKind::Stiefel),
+            steps: 300,
+            k_interval: 50,
+            ipa_lr: 1e-3,
+            zo_lr: 2e-3,
+            sigma: 1e-2,
+            c: 1.0,
+            seed: 2026,
+            eval_examples: 256,
+            track_refresh: 0,
+            save_every: 0,
+            keep_last: 0,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Interpret raw `submit` fields over the defaults. Unknown keys
+    /// are a loud error — a typoed flag must not silently train the
+    /// default config.
+    pub fn from_fields(fields: &[(String, String)]) -> Result<JobSpec> {
+        let mut spec = JobSpec::default();
+        for (k, v) in fields {
+            let ctx = || format!("bad submit field {k}={v}");
+            match k.as_str() {
+                "task" => spec.task = v.clone(),
+                "method" => spec.method = FinetuneMethod::parse(v)?,
+                "steps" => spec.steps = v.parse().with_context(ctx)?,
+                "k" => spec.k_interval = v.parse().with_context(ctx)?,
+                "ipa-lr" => spec.ipa_lr = v.parse().with_context(ctx)?,
+                "zo-lr" => spec.zo_lr = v.parse().with_context(ctx)?,
+                "sigma" => spec.sigma = v.parse().with_context(ctx)?,
+                "c" => spec.c = v.parse().with_context(ctx)?,
+                "seed" => spec.seed = v.parse().with_context(ctx)?,
+                "eval-examples" => spec.eval_examples = v.parse().with_context(ctx)?,
+                "track-refresh" => spec.track_refresh = v.parse().with_context(ctx)?,
+                "save-every" => spec.save_every = v.parse().with_context(ctx)?,
+                "keep-last" => spec.keep_last = v.parse().with_context(ctx)?,
+                other => bail!("unknown submit field {other:?}"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The wire fields describing this spec (inverse of
+    /// [`JobSpec::from_fields`]).
+    pub fn to_fields(&self) -> Vec<(String, String)> {
+        vec![
+            ("task".to_string(), self.task.clone()),
+            ("method".to_string(), self.method.name()),
+            ("steps".to_string(), self.steps.to_string()),
+            ("k".to_string(), self.k_interval.to_string()),
+            ("ipa-lr".to_string(), self.ipa_lr.to_string()),
+            ("zo-lr".to_string(), self.zo_lr.to_string()),
+            ("sigma".to_string(), self.sigma.to_string()),
+            ("c".to_string(), self.c.to_string()),
+            ("seed".to_string(), self.seed.to_string()),
+            ("eval-examples".to_string(), self.eval_examples.to_string()),
+            ("track-refresh".to_string(), self.track_refresh.to_string()),
+            ("save-every".to_string(), self.save_every.to_string()),
+            ("keep-last".to_string(), self.keep_last.to_string()),
+        ]
+    }
+
+    /// The trainer config this job runs as. `threads: 0` — the daemon
+    /// sizes the shared kernel pool once; tenants never resize it.
+    pub fn to_config(&self, ckpt_dir: Option<PathBuf>) -> FinetuneConfig {
+        FinetuneConfig {
+            task: self.task.clone(),
+            method: self.method,
+            steps: self.steps,
+            k_interval: self.k_interval,
+            ipa_lr: self.ipa_lr,
+            zo_lr: self.zo_lr,
+            sigma: self.sigma,
+            c: self.c,
+            seed: self.seed,
+            eval_examples: self.eval_examples,
+            threads: 0,
+            ckpt: CkptOptions {
+                save_every: self.save_every,
+                dir: ckpt_dir,
+                resume: None,
+                keep_last: self.keep_last,
+            },
+            track_refresh: self.track_refresh,
+        }
+    }
+
+    /// Cache key of the base model this job starts from: the gradient
+    /// artifact whose manifest orders the parameter store — two jobs
+    /// with the same key share one cached `ParamStore` copy-on-write
+    /// (mirrors the artifact choice in `FinetuneTrainer::with_base`).
+    pub fn base_key(&self) -> &'static str {
+        match self.method {
+            FinetuneMethod::ZeroShot => "clf_eval",
+            FinetuneMethod::VanillaLr => "clf_zo_full",
+            FinetuneMethod::LowRankLr(_) => "clf_zo_lowrank",
+            FinetuneMethod::VanillaIpa => "clf_ipa_grad",
+            FinetuneMethod::LowRankIpa(_) => "clf_ipa_lowrank_grad",
+        }
+    }
+}
+
+/// Lifecycle of one job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Still consuming (or about to consume) scheduler slots?
+    pub fn is_open(self) -> bool {
+        matches!(self, JobState::Queued | JobState::Running)
+    }
+}
+
+/// One tracked job.
+#[derive(Debug)]
+pub struct Job {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub steps_done: u64,
+    /// Per-job failure, isolated from neighbors (a failed async
+    /// checkpoint write lands here via the session's `poll_saves`).
+    pub error: Option<String>,
+    pub summary: Option<SessionSummary>,
+    pub cancel_requested: bool,
+    /// This job's private checkpoint directory (`<root>/job-<id>`).
+    pub ckpt_dir: Option<PathBuf>,
+}
+
+/// All jobs the daemon has seen, plus the admission limits.
+pub struct JobTable {
+    jobs: Vec<Job>,
+    next_id: u64,
+    /// Open-job cap (queued + running) enforced at submit.
+    pub max_open: usize,
+    /// Heap budget in bytes (0 = unlimited): submissions are rejected
+    /// while the tracked allocator's live bytes sit at or above it.
+    pub mem_budget_bytes: usize,
+}
+
+impl JobTable {
+    pub fn new(max_open: usize, mem_budget_bytes: usize) -> Self {
+        JobTable { jobs: Vec::new(), next_id: 1, max_open: max_open.max(1), mem_budget_bytes }
+    }
+
+    /// Admission-checked submit against the live allocator ledger.
+    pub fn submit(&mut self, spec: JobSpec) -> Result<u64> {
+        self.submit_with_live(spec, TrackedAlloc::live_bytes())
+    }
+
+    /// [`JobTable::submit`] with an injectable live-bytes reading (the
+    /// admission tests pin the rejection path without having to inflate
+    /// the real heap).
+    pub fn submit_with_live(&mut self, spec: JobSpec, live_bytes: usize) -> Result<u64> {
+        let open = self.open_count();
+        if open >= self.max_open {
+            bail!("queue full ({open} open jobs, cap {})", self.max_open);
+        }
+        if self.mem_budget_bytes > 0 && live_bytes >= self.mem_budget_bytes {
+            bail!(
+                "memory budget exhausted (live {live_bytes} B >= budget {} B)",
+                self.mem_budget_bytes
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.jobs.push(Job {
+            id,
+            spec,
+            state: JobState::Queued,
+            steps_done: 0,
+            error: None,
+            summary: None,
+            cancel_requested: false,
+            ckpt_dir: None,
+        });
+        Ok(id)
+    }
+
+    pub fn open_count(&self) -> usize {
+        self.jobs.iter().filter(|j| j.state.is_open()).count()
+    }
+
+    pub fn get(&self, id: u64) -> Option<&Job> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut Job> {
+        self.jobs.iter_mut().find(|j| j.id == id)
+    }
+
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    /// Oldest queued job id, if any (FIFO admission to the scheduler).
+    pub fn next_queued(&self) -> Option<u64> {
+        self.jobs.iter().find(|j| j.state == JobState::Queued).map(|j| j.id)
+    }
+
+    /// Flag a job for cancellation. Queued jobs cancel immediately;
+    /// running jobs are torn down by the scheduler at the next slice.
+    pub fn request_cancel(&mut self, id: u64) -> Result<JobState> {
+        let job = self.get_mut(id).with_context(|| format!("no job {id}"))?;
+        match job.state {
+            JobState::Queued => {
+                job.state = JobState::Cancelled;
+                Ok(JobState::Cancelled)
+            }
+            JobState::Running => {
+                job.cancel_requested = true;
+                Ok(JobState::Running)
+            }
+            done => Ok(done), // already terminal: idempotent no-op
+        }
+    }
+
+    /// Cancel every still-queued job (shutdown drain).
+    pub fn cancel_queued(&mut self) {
+        for j in &mut self.jobs {
+            if j.state == JobState::Queued {
+                j.state = JobState::Cancelled;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_fields_round_trip() {
+        let mut spec = JobSpec::default();
+        spec.steps = 8;
+        spec.seed = 7;
+        spec.save_every = 4;
+        let back = JobSpec::from_fields(&spec.to_fields()).unwrap();
+        assert_eq!(back, spec);
+        assert!(JobSpec::from_fields(&[("stepz".to_string(), "8".to_string())]).is_err());
+        assert!(JobSpec::from_fields(&[("steps".to_string(), "eight".to_string())]).is_err());
+    }
+
+    #[test]
+    fn admission_rejects_on_queue_and_memory() {
+        let mut t = JobTable::new(2, 1000);
+        let a = t.submit_with_live(JobSpec::default(), 0).unwrap();
+        let b = t.submit_with_live(JobSpec::default(), 0).unwrap();
+        assert_eq!((a, b), (1, 2));
+        // queue cap
+        let err = t.submit_with_live(JobSpec::default(), 0).unwrap_err().to_string();
+        assert!(err.contains("queue full"), "{err}");
+        // terminal jobs free their slots
+        t.get_mut(a).unwrap().state = JobState::Done;
+        // memory budget
+        let err = t.submit_with_live(JobSpec::default(), 2000).unwrap_err().to_string();
+        assert!(err.contains("memory budget"), "{err}");
+        assert!(t.submit_with_live(JobSpec::default(), 500).is_ok());
+    }
+
+    #[test]
+    fn cancel_semantics_per_state() {
+        let mut t = JobTable::new(8, 0);
+        let q = t.submit_with_live(JobSpec::default(), 0).unwrap();
+        assert_eq!(t.request_cancel(q).unwrap(), JobState::Cancelled);
+        assert_eq!(t.get(q).unwrap().state, JobState::Cancelled);
+        let r = t.submit_with_live(JobSpec::default(), 0).unwrap();
+        t.get_mut(r).unwrap().state = JobState::Running;
+        assert_eq!(t.request_cancel(r).unwrap(), JobState::Running);
+        assert!(t.get(r).unwrap().cancel_requested);
+        assert!(t.request_cancel(99).is_err());
+    }
+}

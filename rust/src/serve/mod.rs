@@ -1,0 +1,44 @@
+//! Multi-tenant fine-tune service: the `lowrank-sge serve` daemon and
+//! its job plane.
+//!
+//! The paper's memory headline (low-rank estimation shrinks per-job
+//! training state to O((m+n)·r)) is what makes one box able to run
+//! many concurrent fine-tune jobs: the base model's `ParamStore` is
+//! the only big object, and it is shared copy-on-write. This module
+//! turns the batch reproduction into that service, built by
+//! refactoring rather than bolting on:
+//!
+//! * **Sessions** — the daemon schedules the same
+//!   [`crate::coordinator::TrainSession`] objects the standalone
+//!   subcommands drive (their step loops were lifted into
+//!   `begin`/`step_once`/`finish_run` seams), so a single-job serve
+//!   run checkpoints bitwise identically to `lowrank-sge finetune` at
+//!   the same seed.
+//! * **[`proto`]** — submit / status / cancel / fetch / shutdown verbs
+//!   as text lines carried in the comm layer's CRC-framed,
+//!   timeout-guarded codec ([`crate::comm::wire`]).
+//! * **[`job`]** — the job table and admission control: a bounded
+//!   open-job queue plus a live-heap budget read from the
+//!   tracked-allocator ledger; rejections carry a reason.
+//! * **[`base_cache`]** — one loaded base model per artifact key,
+//!   checked out per job as [`crate::model::ParamStore::cow_clone`]
+//!   (an `Arc` bump per tensor; first divergent write unshares).
+//! * **[`daemon`]** — accept loop + per-connection handlers (capped,
+//!   idle-timed like the hardened [`crate::obs::monitor`] endpoint)
+//!   feeding a single scheduler thread that round-robins one step per
+//!   session per pass over the shared kernel pool, with per-job pool
+//!   task attribution and per-session failure isolation (a failed
+//!   async checkpoint write fails that job only).
+//! * **[`client`]** — the one-shot request helper behind
+//!   `lowrank-sge job …`.
+
+pub mod base_cache;
+pub mod client;
+pub mod daemon;
+pub mod job;
+pub mod proto;
+
+pub use base_cache::BaseModelCache;
+pub use daemon::{run_serve, run_serve_with, ServeConfig, ServeReport};
+pub use job::{Job, JobSpec, JobState, JobTable};
+pub use proto::{Request, Response};

@@ -1,0 +1,306 @@
+//! Job-submission wire protocol: line-oriented verbs carried in the
+//! comm layer's CRC-framed codec.
+//!
+//! Every message is one UTF-8 text line (`verb key=value …`) smuggled
+//! through a single [`crate::comm::wire`] data frame — one byte per
+//! f32 element, the same trick `comm-check` uses for its CRC gather —
+//! so the serve plane inherits the transport's framing, CRC
+//! verification, metrics accounting, and timeout-guarded reads without
+//! a second codec. Messages are capped at one frame
+//! ([`MAX_MSG_BYTES`]); a job submission is a few hundred bytes.
+//!
+//! Values are percent-escaped ([`esc`]/[`unesc`]) so paths and error
+//! reasons survive the space-separated field syntax.
+//!
+//! Verbs (client → daemon): `submit key=value …`, `status job=N`,
+//! `cancel job=N`, `fetch job=N`, `shutdown`, `ping`. Replies
+//! (daemon → client): `ok key=value …` or `err reason=…`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::comm::transport::Conn;
+use crate::comm::wire::{self, Kind, WireDtype};
+
+/// One frame per message: text longer than this is a protocol error.
+pub const MAX_MSG_BYTES: usize = wire::MAX_DATA_ELEMS;
+
+/// Send one text message as a single data frame.
+pub fn send_msg(conn: &Conn, seq: u64, text: &str) -> Result<()> {
+    if text.is_empty() {
+        bail!("serve protocol messages cannot be empty");
+    }
+    if text.len() > MAX_MSG_BYTES {
+        bail!("serve message of {} bytes exceeds the {MAX_MSG_BYTES}-byte cap", text.len());
+    }
+    let payload: Vec<f32> = text.bytes().map(f32::from).collect();
+    wire::send_frame(conn, Kind::Data, seq, 0, &payload, WireDtype::F32)
+}
+
+/// Receive one text message (returns the sender's sequence number).
+pub fn recv_msg(conn: &Conn) -> Result<(u64, String)> {
+    let f = wire::recv_frame(conn)?;
+    if f.kind != Kind::Data {
+        bail!("unexpected {:?} frame on a serve connection", f.kind);
+    }
+    if f.part != 0 {
+        bail!("multi-part serve message (part {}) — messages are single-frame", f.part);
+    }
+    let mut bytes = Vec::with_capacity(f.payload.len());
+    for &v in &f.payload {
+        if !(0.0..=255.0).contains(&v) || v.fract() != 0.0 {
+            bail!("serve message payload is not byte-valued ({v})");
+        }
+        bytes.push(v as u8);
+    }
+    let text = String::from_utf8(bytes).context("serve message is not UTF-8")?;
+    Ok((f.seq, text))
+}
+
+/// Escape a field value: `%`, `=`, space, and newline become `%XX`.
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '%' => out.push_str("%25"),
+            '=' => out.push_str("%3d"),
+            ' ' => out.push_str("%20"),
+            '\n' => out.push_str("%0a"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Inverse of [`esc`]; unknown escapes are a loud error.
+pub fn unesc(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c != '%' {
+            out.push(c);
+            continue;
+        }
+        let hex: String = it.by_ref().take(2).collect();
+        match hex.as_str() {
+            "25" => out.push('%'),
+            "3d" => out.push('='),
+            "20" => out.push(' '),
+            "0a" => out.push('\n'),
+            other => bail!("bad escape %{other} in serve field value"),
+        }
+    }
+    Ok(out)
+}
+
+/// Parse `key=value …` tokens (values unescaped).
+fn parse_fields(toks: &[&str]) -> Result<Vec<(String, String)>> {
+    let mut fields = Vec::with_capacity(toks.len());
+    for tok in toks {
+        let (k, v) = tok
+            .split_once('=')
+            .with_context(|| format!("serve field {tok:?} is not key=value"))?;
+        fields.push((k.to_string(), unesc(v)?));
+    }
+    Ok(fields)
+}
+
+fn format_fields(out: &mut String, fields: &[(String, String)]) {
+    for (k, v) in fields {
+        out.push(' ');
+        out.push_str(k);
+        out.push('=');
+        out.push_str(&esc(v));
+    }
+}
+
+fn job_id(fields: &[(String, String)]) -> Result<u64> {
+    let v = fields
+        .iter()
+        .find(|(k, _)| k == "job")
+        .map(|(_, v)| v.as_str())
+        .context("missing job=N field")?;
+    v.parse().with_context(|| format!("bad job id {v:?}"))
+}
+
+/// A client request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// `submit key=value …` — raw spec fields, interpreted by
+    /// [`super::job::JobSpec::from_fields`].
+    Submit(Vec<(String, String)>),
+    Status { job: u64 },
+    Cancel { job: u64 },
+    Fetch { job: u64 },
+    /// Drain: finish running jobs, cancel queued ones, exit.
+    Shutdown,
+    Ping,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let Some((&verb, rest)) = toks.split_first() else {
+            bail!("empty serve request");
+        };
+        Ok(match verb {
+            "submit" => Request::Submit(parse_fields(rest)?),
+            "status" => Request::Status { job: job_id(&parse_fields(rest)?)? },
+            "cancel" => Request::Cancel { job: job_id(&parse_fields(rest)?)? },
+            "fetch" => Request::Fetch { job: job_id(&parse_fields(rest)?)? },
+            "shutdown" => Request::Shutdown,
+            "ping" => Request::Ping,
+            other => bail!("unknown serve verb {other:?}"),
+        })
+    }
+
+    pub fn format(&self) -> String {
+        match self {
+            Request::Submit(fields) => {
+                let mut out = String::from("submit");
+                format_fields(&mut out, fields);
+                out
+            }
+            Request::Status { job } => format!("status job={job}"),
+            Request::Cancel { job } => format!("cancel job={job}"),
+            Request::Fetch { job } => format!("fetch job={job}"),
+            Request::Shutdown => "shutdown".to_string(),
+            Request::Ping => "ping".to_string(),
+        }
+    }
+}
+
+/// A daemon reply line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Ok(Vec<(String, String)>),
+    Err(String),
+}
+
+impl Response {
+    pub fn parse(line: &str) -> Result<Response> {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let Some((&verb, rest)) = toks.split_first() else {
+            bail!("empty serve response");
+        };
+        match verb {
+            "ok" => Ok(Response::Ok(parse_fields(rest)?)),
+            "err" => {
+                let fields = parse_fields(rest)?;
+                let reason = fields
+                    .into_iter()
+                    .find(|(k, _)| k == "reason")
+                    .map(|(_, v)| v)
+                    .unwrap_or_else(|| "unspecified".to_string());
+                Ok(Response::Err(reason))
+            }
+            other => bail!("unknown serve response {other:?}"),
+        }
+    }
+
+    pub fn format(&self) -> String {
+        match self {
+            Response::Ok(fields) => {
+                let mut out = String::from("ok");
+                format_fields(&mut out, fields);
+                out
+            }
+            Response::Err(reason) => format!("err reason={}", esc(reason)),
+        }
+    }
+
+    /// Field lookup on an `ok` reply.
+    pub fn field(&self, key: &str) -> Option<&str> {
+        match self {
+            Response::Ok(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+            }
+            Response::Err(_) => None,
+        }
+    }
+
+    /// Unwrap into the ok fields, turning `err` into an error.
+    pub fn into_ok(self) -> Result<Vec<(String, String)>> {
+        match self {
+            Response::Ok(fields) => Ok(fields),
+            Response::Err(reason) => bail!("serve request rejected: {reason}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_round_trips() {
+        let s = "a b=c%d\ne";
+        assert_eq!(unesc(&esc(s)).unwrap(), s);
+        assert!(!esc(s).contains(' '));
+        assert!(unesc("%zz").is_err());
+    }
+
+    #[test]
+    fn request_lines_round_trip() {
+        let reqs = [
+            Request::Submit(vec![
+                ("task".to_string(), "sst2".to_string()),
+                ("method".to_string(), "stiefel-lowrank-lr".to_string()),
+                ("dir".to_string(), "/tmp/with space".to_string()),
+            ]),
+            Request::Status { job: 7 },
+            Request::Cancel { job: 1 },
+            Request::Fetch { job: 42 },
+            Request::Shutdown,
+            Request::Ping,
+        ];
+        for r in reqs {
+            assert_eq!(Request::parse(&r.format()).unwrap(), r);
+        }
+        assert!(Request::parse("frobnicate job=1").is_err());
+        assert!(Request::parse("status").is_err()); // missing job=
+    }
+
+    #[test]
+    fn response_lines_round_trip() {
+        let ok = Response::Ok(vec![
+            ("job".to_string(), "3".to_string()),
+            ("state".to_string(), "running".to_string()),
+        ]);
+        let back = Response::parse(&ok.format()).unwrap();
+        assert_eq!(back.field("state"), Some("running"));
+        let err = Response::Err("queue full (4 open jobs)".to_string());
+        match Response::parse(&err.format()).unwrap() {
+            Response::Err(reason) => assert_eq!(reason, "queue full (4 open jobs)"),
+            other => panic!("expected err, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn messages_round_trip_over_a_socket_pair() {
+        use crate::comm::transport::Conn;
+        use std::time::{Duration, Instant};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let conn = Conn::Tcp(s);
+            conn.set_timeouts(Duration::from_secs(5)).unwrap();
+            let (seq, text) = recv_msg(&conn).unwrap();
+            assert_eq!(seq, 9);
+            send_msg(&conn, seq, &format!("ok echo={}", esc(&text))).unwrap();
+        });
+        let conn = Conn::connect(
+            &format!("tcp://{addr}"),
+            Instant::now() + Duration::from_secs(5),
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        send_msg(&conn, 9, "status job=3").unwrap();
+        let (_, reply) = recv_msg(&conn).unwrap();
+        assert_eq!(
+            Response::parse(&reply).unwrap().field("echo"),
+            Some("status job=3")
+        );
+        t.join().unwrap();
+    }
+}

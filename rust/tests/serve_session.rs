@@ -1,0 +1,361 @@
+//! Serve-daemon integration: the multi-tenant seam must not bend the
+//! determinism contract. A single-job serve run checkpoints bitwise
+//! identically to the standalone `finetune` subcommand; concurrent
+//! tenants match the same jobs run sequentially; admission control
+//! rejects over the wire with a reason; and copy-on-write base
+//! checkouts keep the base payloads unduplicated until the first
+//! divergent write (asserted against the tracked-allocator ledger).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use lowrank_sge::coordinator::{FinetuneTrainer, TrainSession as _};
+use lowrank_sge::obs::TrackedAlloc;
+use lowrank_sge::runtime::Runtime;
+use lowrank_sge::serve::{client, run_serve_with, BaseModelCache, JobSpec, ServeConfig};
+
+// The CoW-ledger test reads live heap bytes, and the daemon tests
+// resize the global kernel pool: both want the binary to themselves.
+#[global_allocator]
+static GLOBAL: TrackedAlloc = TrackedAlloc;
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn serialize() -> MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_dir() -> PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("INDEX.txt").exists()
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Relative path → file bytes for every file under `root`.
+fn dir_snapshot(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(base: &Path, dir: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            if path.is_dir() {
+                walk(base, &path, out);
+            } else {
+                let rel = path.strip_prefix(base).unwrap().to_string_lossy().into_owned();
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+fn assert_dirs_bitwise_equal(a: &Path, b: &Path, what: &str) {
+    let (sa, sb) = (dir_snapshot(a), dir_snapshot(b));
+    assert_eq!(
+        sa.keys().collect::<Vec<_>>(),
+        sb.keys().collect::<Vec<_>>(),
+        "{what}: file sets differ between {a:?} and {b:?}"
+    );
+    for (rel, bytes) in &sa {
+        assert_eq!(bytes, &sb[rel], "{what}: {rel} differs between {a:?} and {b:?}");
+    }
+}
+
+/// Start a daemon on an ephemeral port; returns (addr, join handle).
+fn spawn_daemon(
+    cfg: ServeConfig,
+) -> (String, std::thread::JoinHandle<anyhow::Result<lowrank_sge::serve::ServeReport>>)
+{
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || run_serve_with(cfg, Some(tx)));
+    let bound = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("daemon never announced its address");
+    (bound.to_string(), handle)
+}
+
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+fn wait_done(addr: &str, job: u64) -> Vec<(String, String)> {
+    let fields = client::wait(
+        addr,
+        job,
+        Duration::from_millis(500),
+        Instant::now() + Duration::from_secs(300),
+    )
+    .unwrap();
+    assert_eq!(
+        client::field(&fields, "state"),
+        Some("done"),
+        "job {job} did not finish cleanly: {fields:?}"
+    );
+    fields
+}
+
+#[test]
+fn single_job_serve_matches_standalone_finetune_bitwise() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let _g = serialize();
+    let dir = artifacts_dir();
+    let spec = JobSpec { steps: 12, k_interval: 4, save_every: 6, ..JobSpec::default() };
+
+    for threads in [1usize, 4] {
+        // standalone reference (run() is begin + step_once* + finish_run
+        // — the very loop the daemon drives through the session seam)
+        lowrank_sge::kernel::set_global_threads(threads);
+        let standalone_ckpt = fresh_dir(&format!("lowrank_sge_serve_ref_t{threads}"));
+        let mut rt = Runtime::new(&dir).unwrap();
+        let reference = FinetuneTrainer::new(
+            &mut rt,
+            &dir,
+            spec.to_config(Some(standalone_ckpt.clone())),
+        )
+        .unwrap()
+        .run()
+        .unwrap();
+        drop(rt);
+
+        // the same spec as the only tenant of a serve daemon
+        let serve_root = fresh_dir(&format!("lowrank_sge_serve_one_t{threads}"));
+        let cfg = ServeConfig {
+            artifacts_dir: dir.clone(),
+            ckpt_root: serve_root.clone(),
+            max_active: 1,
+            threads,
+            ..ServeConfig::default()
+        };
+        let (addr, handle) = spawn_daemon(cfg);
+        let job = client::submit(&addr, &spec, TIMEOUT).unwrap();
+        let fields = wait_done(&addr, job);
+        let fetched = client::fetch(&addr, job, TIMEOUT).unwrap();
+        client::shutdown(&addr, TIMEOUT).unwrap();
+        let report = handle.join().unwrap().unwrap();
+        assert_eq!((report.done, report.failed), (1, 0));
+
+        // the final eval metric agrees bitwise (f64 Display round-trips)
+        let metric: f64 =
+            client::field(&fetched, "metric").expect("fetch reply has a metric").parse().unwrap();
+        assert_eq!(
+            metric.to_bits(),
+            reference.accuracy.to_bits(),
+            "serve accuracy {metric} != standalone {} at {threads} threads",
+            reference.accuracy
+        );
+        assert_eq!(client::field(&fields, "step"), Some(spec.steps.to_string().as_str()));
+
+        // and every checkpoint byte agrees
+        assert_dirs_bitwise_equal(
+            &standalone_ckpt,
+            &serve_root.join(format!("job-{job}")),
+            &format!("{threads}-thread checkpoints"),
+        );
+    }
+}
+
+#[test]
+fn concurrent_jobs_on_shared_base_match_sequential() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let _g = serialize();
+    let dir = artifacts_dir();
+    // same method ⇒ same base key ⇒ one shared CoW base in the daemon
+    let spec_a = JobSpec { steps: 8, k_interval: 4, save_every: 4, seed: 11, ..JobSpec::default() };
+    let spec_b = JobSpec { seed: 22, ..spec_a.clone() };
+
+    let mut metrics: Vec<Vec<u64>> = Vec::new();
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for (mode, max_active) in [("concurrent", 2usize), ("sequential", 1usize)] {
+        let root = fresh_dir(&format!("lowrank_sge_serve_{mode}"));
+        let cfg = ServeConfig {
+            artifacts_dir: dir.clone(),
+            ckpt_root: root.clone(),
+            max_active,
+            ..ServeConfig::default()
+        };
+        let (addr, handle) = spawn_daemon(cfg);
+        // both submitted up front: at max_active 2 they interleave
+        // round-robin; at 1 the second waits for the first
+        let ja = client::submit(&addr, &spec_a, TIMEOUT).unwrap();
+        let jb = client::submit(&addr, &spec_b, TIMEOUT).unwrap();
+        assert_eq!((ja, jb), (1, 2));
+        let mut bits = Vec::new();
+        for job in [ja, jb] {
+            wait_done(&addr, job);
+            let fetched = client::fetch(&addr, job, TIMEOUT).unwrap();
+            let metric: f64 = client::field(&fetched, "metric").unwrap().parse().unwrap();
+            bits.push(metric.to_bits());
+        }
+        client::shutdown(&addr, TIMEOUT).unwrap();
+        let report = handle.join().unwrap().unwrap();
+        assert_eq!((report.done, report.failed), (2, 0), "{mode} run");
+        metrics.push(bits);
+        roots.push(root);
+    }
+
+    assert_eq!(metrics[0], metrics[1], "interleaving changed a job's final metric");
+    for job in [1u64, 2] {
+        assert_dirs_bitwise_equal(
+            &roots[0].join(format!("job-{job}")),
+            &roots[1].join(format!("job-{job}")),
+            &format!("job {job} checkpoints"),
+        );
+    }
+}
+
+#[test]
+fn admission_control_rejects_over_the_wire() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let _g = serialize();
+    let dir = artifacts_dir();
+
+    // queue-cap rejection: one open job fills the daemon
+    let cfg = ServeConfig {
+        artifacts_dir: dir.clone(),
+        ckpt_root: fresh_dir("lowrank_sge_serve_admit"),
+        max_active: 1,
+        max_open: 1,
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = spawn_daemon(cfg);
+    let long = JobSpec { steps: 5000, ..JobSpec::default() };
+    let job = client::submit(&addr, &long, TIMEOUT).unwrap();
+    // wait until the scheduler owns the job, so the later cancel
+    // exercises the running-job teardown path (not the queued fast path)
+    let started = Instant::now() + Duration::from_secs(60);
+    loop {
+        let fields = client::status(&addr, job, TIMEOUT).unwrap();
+        match client::field(&fields, "state") {
+            Some("running") => break,
+            Some("queued") if Instant::now() < started => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            other => panic!("job {job} stuck in state {other:?}"),
+        }
+    }
+    let err = client::submit(&addr, &JobSpec::default(), TIMEOUT).unwrap_err().to_string();
+    assert!(err.contains("queue full"), "unexpected rejection reason: {err}");
+    // cancellation frees the slot mid-run, and the daemon drains cleanly
+    client::cancel(&addr, job, TIMEOUT).unwrap();
+    client::shutdown(&addr, TIMEOUT).unwrap();
+    let report = handle.join().unwrap().unwrap();
+    assert_eq!((report.done, report.cancelled), (0, 1));
+
+    // memory-budget rejection: a 1-byte budget is always exhausted
+    let cfg = ServeConfig {
+        artifacts_dir: dir,
+        ckpt_root: fresh_dir("lowrank_sge_serve_membudget"),
+        mem_budget_bytes: 1,
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = spawn_daemon(cfg);
+    let err = client::submit(&addr, &JobSpec::default(), TIMEOUT).unwrap_err().to_string();
+    assert!(err.contains("memory budget"), "unexpected rejection reason: {err}");
+    client::shutdown(&addr, TIMEOUT).unwrap();
+    let report = handle.join().unwrap().unwrap();
+    assert_eq!(report, lowrank_sge::serve::ServeReport::default());
+}
+
+#[test]
+fn cow_checkouts_share_base_payloads_until_divergence() {
+    use lowrank_sge::model::ParamStore;
+    use lowrank_sge::runtime::{DType, HostTensor, TensorSpec};
+
+    let _g = serialize();
+    const ELEMS: usize = 1 << 20; // 4 MB payload
+    const PAYLOAD: usize = ELEMS * 4;
+    let toy = || {
+        let spec = TensorSpec {
+            index: 0,
+            name: "params[w]".to_string(),
+            dtype: DType::F32,
+            shape: vec![ELEMS],
+        };
+        let t = HostTensor::f32(vec![ELEMS], vec![1.0; ELEMS]);
+        ParamStore::from_parts(vec![spec], vec![t])
+    };
+
+    let mut cache = BaseModelCache::new();
+    let before_master = TrackedAlloc::live_bytes();
+    let first = cache.checkout("clf_zo_lowrank", toy).unwrap();
+    let after_master = TrackedAlloc::live_bytes();
+    assert!(
+        after_master - before_master >= PAYLOAD,
+        "loading the master should cost the full payload"
+    );
+
+    // N more tenants: Arc bumps, not copies
+    let mut checkouts = vec![first];
+    for _ in 0..8 {
+        checkouts.push(cache.checkout("clf_zo_lowrank", toy).unwrap());
+    }
+    let after_checkouts = TrackedAlloc::live_bytes();
+    let growth = after_checkouts.saturating_sub(after_master);
+    assert!(
+        growth < PAYLOAD / 4,
+        "9 CoW checkouts grew the heap by {growth} B — payloads were duplicated"
+    );
+
+    // first divergent write unshares exactly one tenant's copy
+    checkouts[0].f32_mut(0).unwrap()[0] = 2.0;
+    let after_write = TrackedAlloc::live_bytes();
+    let write_growth = after_write.saturating_sub(after_checkouts);
+    assert!(
+        write_growth >= PAYLOAD * 3 / 4,
+        "divergent write grew the heap by only {write_growth} B — no private copy was made"
+    );
+    assert!(
+        write_growth < PAYLOAD * 2,
+        "divergent write grew the heap by {write_growth} B — more than one copy"
+    );
+    // neighbors still read the master's bytes
+    assert_eq!(checkouts[1].f32(0).unwrap()[0], 1.0);
+    assert_eq!(checkouts[0].f32(0).unwrap()[0], 2.0);
+}
+
+#[test]
+fn session_seam_reports_progress_and_summary() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let _g = serialize();
+    let dir = artifacts_dir();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let spec = JobSpec { steps: 6, k_interval: 3, ..JobSpec::default() };
+    let mut session =
+        lowrank_sge::coordinator::FinetuneSession::new(&mut rt, &dir, spec.to_config(None))
+            .unwrap();
+    assert_eq!(session.progress(), (0, 6));
+    let mut steps = 0u64;
+    while session.step().unwrap() == lowrank_sge::coordinator::SessionStatus::Running {
+        steps += 1;
+        session.poll_saves().unwrap();
+        assert_eq!(session.progress().0, steps);
+    }
+    assert_eq!(steps, 6);
+    let summary = session.finish().unwrap();
+    assert_eq!((summary.kind, summary.steps_done), ("finetune", 6));
+    assert!(summary.metric.unwrap().is_finite());
+    assert!(session.result().is_some());
+    // stepping a finished session is a loud error, not UB
+    assert!(session.step().is_err());
+}
